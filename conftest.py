@@ -1,0 +1,6 @@
+"""Repo-root pytest config: make the build-path `compile` package
+importable when running `pytest python/tests/` from the repository root."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,45 @@
+//! Quickstart: the whole pipeline in one minute —
+//! characterize a small model zoo on the simulated Swing node, fit the
+//! paper's workload-based energy/runtime models, and route a workload at a
+//! chosen energy/accuracy trade-off ζ.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use ecoserve::characterize::quick_fit;
+use ecoserve::config::{llama_family, Partition};
+use ecoserve::models::Normalizer;
+use ecoserve::report;
+use ecoserve::scheduler::{evaluate, solve_exact_mode, CapacityMode, CostMatrix};
+use ecoserve::util::Rng;
+use ecoserve::workload::{generate, AlpacaParams};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Characterize + fit the §6.3 case-study family (Llama-2 7/13/70B).
+    let family = llama_family();
+    println!("characterizing {} models on the simulated cluster…", family.len());
+    let fitted = quick_fit(&family, 42)?;
+    println!("{}", report::table3(&fitted.sets, &family).to_ascii());
+
+    // 2. A 500-query Alpaca-like workload.
+    let mut rng = Rng::new(7);
+    let queries = generate(500, &AlpacaParams::default(), &mut rng);
+
+    // 3. Route it at three operating points.
+    let partition = Partition::paper_case_study();
+    let norm = Normalizer::from_workload(&fitted.sets, &queries);
+    for zeta in [0.0, 0.5, 1.0] {
+        let costs = CostMatrix::build(&fitted.sets, &norm, &queries, zeta);
+        let assignment = solve_exact_mode(&costs, &partition.gammas, CapacityMode::Eq3Only)?;
+        let eval = evaluate(&assignment, &fitted.sets, &queries);
+        let counts = assignment.counts(fitted.sets.len());
+        println!(
+            "zeta={zeta:.1}  counts={counts:?}  mean energy {:>8.1} J  \
+             mean runtime {:>6.3} s  mean accuracy {:>5.2}%",
+            eval.mean_energy_j, eval.mean_runtime_s, eval.mean_accuracy
+        );
+    }
+    println!("\nlower ζ → accuracy-optimal (queries on 70B); higher ζ → energy-optimal (7B).");
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! The §6.3 case study (Fig. 3): sweep ζ over [0, 1] with the Llama-2
+//! 7B/13B/70B family, 500 Alpaca-like queries and γ = (0.05, 0.20, 0.75),
+//! against the single-model / round-robin / random baselines — then
+//! *validate* the scheduler's decisions against the ground-truth simulator
+//! (something the paper could not do without re-running its cluster).
+//!
+//! ```bash
+//! cargo run --release --example zeta_tradeoff
+//! ```
+
+use ecoserve::characterize::quick_fit;
+use ecoserve::config::{epyc_7742, llama_family, lookup, swing_node, Partition};
+use ecoserve::hardware::{Cpu, Node};
+use ecoserve::perfmodel::Cluster;
+use ecoserve::report;
+use ecoserve::scheduler::{sweep_mode, CapacityMode};
+use ecoserve::telemetry::measure;
+use ecoserve::util::Rng;
+use ecoserve::workload::{generate, AlpacaParams, Query};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let family = llama_family();
+    let fitted = quick_fit(&family, 42)?;
+    let partition = Partition::paper_case_study();
+
+    let mut rng = Rng::new(1234);
+    let queries = generate(500, &AlpacaParams::default(), &mut rng);
+
+    println!("sweeping zeta over 11 points (exact MCMF at each)…");
+    let sweep = sweep_mode(
+        &fitted.sets,
+        &queries,
+        &partition.gammas,
+        11,
+        CapacityMode::Eq3Only,
+        &mut rng,
+    )?;
+    print!("{}", report::zeta_ascii(&sweep));
+    report::write_result(
+        Path::new("results/fig3_zeta_sweep.csv").as_ref(),
+        &report::zeta_csv(&sweep),
+    )?;
+
+    // ------- ground-truth validation --------------------------------------
+    // Re-simulate actual assignments on the cluster simulator and compare
+    // measured vs model-predicted energy, in two regimes:
+    //
+    //  (a) grid-scale queries (the domain the OLS was fitted on) — the
+    //      bilinear model should track within a few percent;
+    //  (b) Alpaca-scale queries (τ ≈ 30/60, far below the grid's mass) —
+    //      the paper's no-intercept bilinear form over-predicts small
+    //      workloads, a real limitation worth quantifying.
+    println!("\nvalidating fitted e_K against the ground-truth simulator:");
+    let cluster = Cluster::new(Node::new(swing_node()));
+    let cpu = Cpu::new(epyc_7742(), 0);
+
+    let mut validate = |label: &str, sample: &[Query], bound: f64| -> anyhow::Result<f64> {
+        let norm = ecoserve::models::Normalizer::from_workload(&fitted.sets, sample);
+        let costs =
+            ecoserve::scheduler::CostMatrix::build(&fitted.sets, &norm, sample, 0.5);
+        let assignment = ecoserve::scheduler::solve_exact_mode(
+            &costs,
+            &partition.gammas,
+            CapacityMode::Eq3Only,
+        )?;
+        let mut measured = 0.0;
+        let mut predicted = 0.0;
+        for (i, q) in sample.iter().enumerate() {
+            let set = &fitted.sets[assignment.model_of[i]];
+            let spec = lookup(&set.model_id).unwrap();
+            let trace = cluster.infer(&spec, q.t_in, q.t_out, 32, &mut rng);
+            measured += measure(&trace, &cpu, &mut rng).total_energy_j();
+            predicted += set.energy.predict(q.t_in as f64, q.t_out as f64);
+        }
+        let err = (predicted - measured).abs() / measured * 100.0;
+        println!(
+            "  {label:<28} measured {measured:>9.0} J vs predicted {predicted:>9.0} J ({err:.1}% error)"
+        );
+        assert!(err < bound, "{label}: error {err:.1}% exceeds {bound}%");
+        Ok(err)
+    };
+
+    // (a) in-domain: stratified over the fit grid.
+    let grid_sample: Vec<Query> = {
+        let levels = [16u32, 64, 256, 1024, 2048];
+        let mut v = Vec::new();
+        let mut id = 0;
+        for &ti in &levels {
+            for &to in &levels {
+                v.push(Query { id, t_in: ti, t_out: to });
+                id += 1;
+            }
+        }
+        v
+    };
+    let err_grid = validate("grid-scale (fit domain)", &grid_sample, 10.0)?;
+
+    // (b) out-of-domain small queries: expect systematic over-prediction.
+    let small: Vec<Query> = (0..60).map(|i| queries[i * 8]).collect();
+    let err_small = validate("Alpaca-scale (small queries)", &small, 100.0)?;
+
+    println!(
+        "✓ e_K tracks the simulator in its fit domain ({err_grid:.1}%); \
+         small-query bias ({err_small:.1}%) is the no-intercept bilinear\n  \
+         model's known blind spot — documented in EXPERIMENTS.md §F3."
+    );
+    Ok(())
+}

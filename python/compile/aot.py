@@ -1,0 +1,187 @@
+"""AOT compilation pipeline: lower the proxy zoo + router kernel to HLO
+text and emit the artifact manifest the Rust runtime consumes.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the published `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Per model we emit:
+  artifacts/<id>.prefill.hlo.txt   (params..., tokens, lengths) ->
+                                   (logits, k_cache, v_cache)
+  artifacts/<id>.decode.hlo.txt    (params..., token, pos, kc, vc) ->
+                                   (logits, kc, vc)
+  artifacts/<id>.params.bin        all parameter arrays, f32 little-endian,
+                                   concatenated in `param_spec` order
+plus the router's scoring kernel:
+  artifacts/cost_matrix.hlo.txt    (coefs, accs, maxima, zeta, taus) ->
+                                   costs [K, N]
+and artifacts/manifest.json tying it all together.
+
+Run as `python -m compile.aot --out ../artifacts` (the Makefile target).
+Python runs only here, at build time — never on the request path.
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.cost_matrix import cost_matrix
+
+#: Router scoring artifact shape: K hosted models x N query tile.
+COST_K = 3
+COST_N = 512
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(cfg, params):
+    """Lower prefill and decode for one zoo entry; returns (text, text)."""
+    b, t, s = cfg.batch, cfg.prompt_len, cfg.max_seq
+    hd, l, hkv = cfg.head_dim, cfg.n_layers, cfg.n_kv_heads
+
+    params_spec = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+    tokens = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    lengths = jax.ShapeDtypeStruct((b,), jnp.int32)
+    prefill_fn = functools.partial(M.prefill, cfg)
+    prefill_hlo = to_hlo_text(
+        jax.jit(prefill_fn).lower(params_spec, tokens, lengths))
+
+    token = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+    kc = jax.ShapeDtypeStruct((l, b, hkv, s, hd), jnp.float32)
+    vc = jax.ShapeDtypeStruct((l, b, hkv, s, hd), jnp.float32)
+    decode_fn = functools.partial(M.decode_step, cfg)
+    decode_hlo = to_hlo_text(
+        jax.jit(decode_fn).lower(params_spec, token, pos, kc, vc))
+    chunk_fn = functools.partial(M.decode_chunk, cfg)
+    chunk_hlo = to_hlo_text(
+        jax.jit(chunk_fn).lower(params_spec, token, pos, kc, vc))
+    return prefill_hlo, decode_hlo, chunk_hlo
+
+
+def lower_cost_matrix():
+    coefs = jax.ShapeDtypeStruct((COST_K, 3), jnp.float32)
+    accs = jax.ShapeDtypeStruct((COST_K,), jnp.float32)
+    maxima = jax.ShapeDtypeStruct((2,), jnp.float32)
+    zeta = jax.ShapeDtypeStruct((1,), jnp.float32)
+    taus = jax.ShapeDtypeStruct((COST_N, 2), jnp.float32)
+    return to_hlo_text(
+        jax.jit(cost_matrix).lower(coefs, accs, maxima, zeta, taus))
+
+
+def params_blob(params):
+    """Flat little-endian f32 byte blob of all parameter arrays."""
+    return b"".join(np.asarray(p, dtype="<f4").tobytes() for p in params)
+
+
+def source_fingerprint():
+    """Hash of the compile-path sources, for staleness detection."""
+    here = os.path.dirname(__file__)
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def build(out_dir, models=None, seed=0):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "fingerprint": source_fingerprint(),
+        "seed": seed,
+        "models": {},
+        "cost_matrix": {},
+    }
+
+    zoo = [c for c in M.ZOO if models is None or c.name in models]
+    for cfg in zoo:
+        print(f"[aot] lowering {cfg.name} "
+              f"(L={cfg.n_layers} d={cfg.d_model} H={cfg.n_heads} "
+              f"HKV={cfg.n_kv_heads} ff={cfg.d_ff}"
+              + (f" E={cfg.n_experts}x{cfg.experts_active}" if cfg.is_moe else "")
+              + ")")
+        params = M.init_params(cfg, seed=seed)
+        prefill_hlo, decode_hlo, chunk_hlo = lower_model(cfg, params)
+
+        pf = f"{cfg.name}.prefill.hlo.txt"
+        df = f"{cfg.name}.decode.hlo.txt"
+        cf = f"{cfg.name}.decode_chunk.hlo.txt"
+        bf = f"{cfg.name}.params.bin"
+        with open(os.path.join(out_dir, pf), "w") as f:
+            f.write(prefill_hlo)
+        with open(os.path.join(out_dir, df), "w") as f:
+            f.write(decode_hlo)
+        with open(os.path.join(out_dir, cf), "w") as f:
+            f.write(chunk_hlo)
+        with open(os.path.join(out_dir, bf), "wb") as f:
+            f.write(params_blob(params))
+
+        manifest["models"][cfg.name] = {
+            "prefill_hlo": pf,
+            "decode_hlo": df,
+            "decode_chunk_hlo": cf,
+            "chunk": M.CHUNK,
+            "params_bin": bf,
+            "batch": cfg.batch,
+            "prompt_len": cfg.prompt_len,
+            "max_seq": cfg.max_seq,
+            "vocab": cfg.vocab,
+            "n_layers": cfg.n_layers,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "d_ff": cfg.d_ff,
+            "head_dim": cfg.head_dim,
+            "n_experts": cfg.n_experts,
+            "params": [
+                {"name": n, "shape": list(s)} for n, s in M.param_spec(cfg)
+            ],
+        }
+
+    print("[aot] lowering cost_matrix kernel")
+    with open(os.path.join(out_dir, "cost_matrix.hlo.txt"), "w") as f:
+        f.write(lower_cost_matrix())
+    manifest["cost_matrix"] = {
+        "hlo": "cost_matrix.hlo.txt",
+        "k": COST_K,
+        "n": COST_N,
+    }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote {out_dir}/manifest.json "
+          f"({len(manifest['models'])} models)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--models", default=None,
+                    help="comma-separated subset of model ids")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    models = args.models.split(",") if args.models else None
+    build(args.out, models=models, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

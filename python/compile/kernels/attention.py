@@ -1,0 +1,115 @@
+"""L1 Pallas kernel: single-step decode attention over a padded KV cache.
+
+The serving hot-spot of the paper's workload (§5.3: decode dominates both
+runtime and energy) implemented as a Pallas kernel with the online-softmax
+streaming pattern:
+
+* the query vector for one (batch, head) pair stays resident in VMEM;
+* the KV cache streams HBM->VMEM in ``block_s``-sized sequence tiles via
+  ``BlockSpec`` (the TPU analogue of the CUDA threadblock-per-KV-chunk
+  decoding kernels the paper's A100 measurements exercise);
+* running (max, sum, acc) state is carried across the sequential grid
+  steps in the output refs; the final normalization happens outside.
+
+Grouped-query attention is expressed in the index maps: query head ``h``
+reads KV head ``h // (n_heads // n_kv_heads)``.
+
+Kernels are always lowered with ``interpret=True``: the CPU PJRT backend
+cannot execute Mosaic custom-calls, and interpret mode lowers to plain HLO
+that the Rust runtime loads unchanged (see DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1.0e30
+
+
+def _attention_kernel(block_s, head_dim, len_ref, q_ref, k_ref, v_ref,
+                      o_ref, m_ref, l_ref):
+    """One grid step: fold one KV block into the online-softmax state."""
+    blk = pl.program_id(2)
+
+    @pl.when(blk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[...]                       # [D]
+    k = k_ref[...]                       # [BLK, D]
+    v = v_ref[...]                       # [BLK, D]
+    length = len_ref[0]
+
+    pos = blk * block_s + jax.lax.iota(jnp.int32, block_s)
+    s = jnp.dot(k, q) / jnp.sqrt(jnp.float32(head_dim))      # [BLK]
+    s = jnp.where(pos < length, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p)
+    o_ref[...] = alpha * o_ref[...] + jnp.dot(p, v)
+    m_ref[...] = m_new
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, block_s=64):
+    """Attention of one decode step against the (padded) KV cache.
+
+    Args:
+      q:        [B, H, D]   query vectors of the new token.
+      k_cache:  [B, HKV, S, D] padded key cache.
+      v_cache:  [B, HKV, S, D] padded value cache.
+      lengths:  [B] int32, number of valid cache entries per sequence.
+      block_s:  KV sequence tile size (must divide S).
+
+    Returns:
+      [B, H, D] attention output.
+    """
+    batch, n_heads, head_dim = q.shape
+    _, n_kv_heads, seq, _ = k_cache.shape
+    assert n_heads % n_kv_heads == 0, "GQA requires n_heads % n_kv_heads == 0"
+    assert seq % block_s == 0, f"block_s={block_s} must divide S={seq}"
+    group = n_heads // n_kv_heads
+
+    grid = (batch, n_heads, seq // block_s)
+    kernel = functools.partial(_attention_kernel, block_s, head_dim)
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, i: (b,)),
+            pl.BlockSpec((None, None, head_dim), lambda b, h, i: (b, h, 0)),
+            pl.BlockSpec((None, None, block_s, head_dim),
+                         lambda b, h, i: (b, h // group, i, 0)),
+            pl.BlockSpec((None, None, block_s, head_dim),
+                         lambda b, h, i: (b, h // group, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, head_dim), lambda b, h, i: (b, h, 0)),
+            pl.BlockSpec((None, None), lambda b, h, i: (b, h)),
+            pl.BlockSpec((None, None), lambda b, h, i: (b, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, n_heads, head_dim), jnp.float32),
+            jax.ShapeDtypeStruct((batch, n_heads), jnp.float32),
+            jax.ShapeDtypeStruct((batch, n_heads), jnp.float32),
+        ],
+        interpret=True,
+    )(lengths, q, k_cache, v_cache)
+    del m  # running max only needed inside the recurrence
+    return out / l[..., None]
+
+
+def vmem_footprint_bytes(n_heads, n_kv_heads, head_dim, block_s):
+    """Estimated VMEM working set per grid step (f32), for §Perf analysis:
+    q + one K tile + one V tile + (o, m, l) state."""
+    del n_heads, n_kv_heads  # one (b, h) pair resident at a time
+    q = head_dim
+    kv = 2 * block_s * head_dim
+    state = head_dim + 2
+    return 4 * (q + kv + state)

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: the router's query-scoring cost matrix (Eq. 2 summand).
+
+For a tile of queries and the K hosted models, computes
+
+    cost[k, i] = zeta * e_k(tau_in_i, tau_out_i) / max_e
+               - (1 - zeta) * A_k * (tau_in_i + tau_out_i) / max_a
+
+i.e. the zeta-blend of the normalized bilinear energy model (Eq. 6) and
+the normalized accuracy function (Eq. 1). This is the L3 coordinator's
+scoring hot path, compiled once and executed through PJRT for every
+workload batch. Pure element-wise VPU work: queries tile along the lane
+dimension; the K model rows ride the grid.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cost_kernel(block_n, coef_ref, acc_ref, maxima_ref, zeta_ref, tau_ref,
+                 out_ref):
+    """One grid step: one model row x one tile of queries."""
+    del block_n
+    t_in = tau_ref[:, 0]
+    t_out = tau_ref[:, 1]
+    a0 = coef_ref[0]
+    a1 = coef_ref[1]
+    a2 = coef_ref[2]
+    energy = a0 * t_in + a1 * t_out + a2 * t_in * t_out          # Eq. 6
+    accuracy = acc_ref[0] * (t_in + t_out)                        # Eq. 1
+    e_hat = energy / maxima_ref[0]
+    a_hat = accuracy / maxima_ref[1]
+    zeta = zeta_ref[0]
+    out_ref[...] = zeta * e_hat - (1.0 - zeta) * a_hat            # Eq. 2
+
+
+def cost_matrix(coefs, accs, maxima, zeta, taus, *, block_n=128):
+    """Score every (model, query) pair.
+
+    Args:
+      coefs:  [K, 3] energy-model coefficients (alpha_0, alpha_1, alpha_2).
+      accs:   [K]    accuracy constants A_K.
+      maxima: [2]    normalization scales (max energy, max accuracy).
+      zeta:   [1]    the operational trade-off parameter.
+      taus:   [N, 2] float32 (tau_in, tau_out) per query; N % block_n == 0.
+      block_n: query tile width.
+
+    Returns:
+      [K, N] cost matrix.
+    """
+    k, three = coefs.shape
+    assert three == 3
+    n, two = taus.shape
+    assert two == 2
+    assert n % block_n == 0, f"block_n={block_n} must divide N={n}"
+
+    grid = (k, n // block_n)
+    kernel = functools.partial(_cost_kernel, block_n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, 3), lambda kk, i: (kk, 0)),
+            pl.BlockSpec((1,), lambda kk, i: (kk,)),
+            pl.BlockSpec((2,), lambda kk, i: (0,)),
+            pl.BlockSpec((1,), lambda kk, i: (0,)),
+            pl.BlockSpec((block_n, 2), lambda kk, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_n), lambda kk, i: (kk, i)),
+        out_shape=jax.ShapeDtypeStruct((k, n), jnp.float32),
+        interpret=True,
+    )(coefs, accs, maxima, zeta, taus)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: straightforward dense
+implementations with no tiling, no online softmax, no grid. pytest (and
+hypothesis sweeps) assert the kernels match these to float32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """Dense reference for kernels.attention.decode_attention."""
+    batch, n_heads, head_dim = q.shape
+    _, n_kv_heads, seq, _ = k_cache.shape
+    group = n_heads // n_kv_heads
+    k = jnp.repeat(k_cache, group, axis=1)                 # [B, H, S, D]
+    v = jnp.repeat(v_cache, group, axis=1)
+    s = jnp.einsum("bhd,bhsd->bhs", q, k) / jnp.sqrt(jnp.float32(head_dim))
+    mask = jax.lax.iota(jnp.int32, seq)[None, None, :] < lengths[:, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", p, v)
+
+
+def cost_matrix_ref(coefs, accs, maxima, zeta, taus):
+    """Dense reference for kernels.cost_matrix.cost_matrix."""
+    t_in = taus[:, 0][None, :]                              # [1, N]
+    t_out = taus[:, 1][None, :]
+    a0 = coefs[:, 0][:, None]                               # [K, 1]
+    a1 = coefs[:, 1][:, None]
+    a2 = coefs[:, 2][:, None]
+    energy = a0 * t_in + a1 * t_out + a2 * t_in * t_out
+    accuracy = accs[:, None] * (t_in + t_out)
+    return zeta[0] * energy / maxima[0] - (1.0 - zeta[0]) * accuracy / maxima[1]

@@ -1,0 +1,367 @@
+"""L2: the proxy LLM zoo in JAX — decoder-only transformers (RMSNorm,
+rotary embeddings, grouped-query attention, SwiGLU FFN) plus a sparse
+mixture-of-experts variant mirroring Mixtral's top-2 routing.
+
+Each zoo entry is a ~1/1000-scale stand-in for one of the paper's Table-1
+models (same layer structure, same attention arrangement, same MoE
+topology) so the full three-layer serving stack runs with real tensors on
+the CPU PJRT backend. The architectural constants MUST stay in sync with
+``rust/src/config/zoo.rs`` (`ProxyArch`); the Rust side asserts the
+manifest against its own zoo at load time.
+
+Decode-step attention runs through the L1 Pallas kernel
+(`kernels.attention.decode_attention`), so the kernel lowers into the same
+HLO artifact the Rust runtime executes. Prefill uses a dense causal
+attention (one big MXU-friendly batch of matmuls).
+
+Python here is build-time only: `aot.py` lowers `prefill` / `decode_step`
+once per model to HLO text and the request path never imports this module.
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.attention import decode_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ProxyConfig:
+    """Architecture of one proxy model (mirror of rust `ProxyArch`)."""
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int = 512
+    n_experts: int = 1
+    experts_active: int = 1
+    max_seq: int = 256
+    prompt_len: int = 64
+    batch: int = 8
+
+    @property
+    def head_dim(self):
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def is_moe(self):
+        return self.n_experts > 1
+
+
+#: The proxy zoo — keep in sync with rust/src/config/zoo.rs.
+ZOO = [
+    ProxyConfig("falcon-7b", n_layers=4, d_model=128, n_heads=4, n_kv_heads=1, d_ff=512),
+    ProxyConfig("falcon-40b", n_layers=6, d_model=256, n_heads=8, n_kv_heads=2, d_ff=1024),
+    ProxyConfig("llama2-7b", n_layers=4, d_model=128, n_heads=4, n_kv_heads=4, d_ff=352),
+    ProxyConfig("llama2-13b", n_layers=5, d_model=160, n_heads=5, n_kv_heads=5, d_ff=432),
+    ProxyConfig("llama2-70b", n_layers=8, d_model=256, n_heads=8, n_kv_heads=2, d_ff=896),
+    ProxyConfig("mistral-7b", n_layers=4, d_model=128, n_heads=4, n_kv_heads=1, d_ff=448),
+    ProxyConfig("mixtral-8x7b", n_layers=4, d_model=128, n_heads=4, n_kv_heads=1,
+                d_ff=448, n_experts=8, experts_active=2),
+]
+
+
+def config(name):
+    for c in ZOO:
+        if c.name == name:
+            return c
+    raise KeyError(f"unknown proxy model {name!r}")
+
+
+# --------------------------------------------------------------------------
+# Parameters: an *ordered* list of (name, array) so the flattening order is
+# explicit and stable for the Rust runtime (manifest records the order).
+# --------------------------------------------------------------------------
+
+def param_spec(cfg):
+    """Ordered [(name, shape)] of every parameter array."""
+    d, hd = cfg.d_model, cfg.head_dim
+    spec = [("embed", (cfg.vocab, d))]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "attn_norm", (d,)),
+            (p + "wq", (d, cfg.n_heads * hd)),
+            (p + "wk", (d, cfg.n_kv_heads * hd)),
+            (p + "wv", (d, cfg.n_kv_heads * hd)),
+            (p + "wo", (cfg.n_heads * hd, d)),
+            (p + "ffn_norm", (d,)),
+        ]
+        if cfg.is_moe:
+            spec += [
+                (p + "gate", (d, cfg.n_experts)),
+                (p + "w1", (cfg.n_experts, d, cfg.d_ff)),
+                (p + "w3", (cfg.n_experts, d, cfg.d_ff)),
+                (p + "w2", (cfg.n_experts, cfg.d_ff, d)),
+            ]
+        else:
+            spec += [
+                (p + "w1", (d, cfg.d_ff)),
+                (p + "w3", (d, cfg.d_ff)),
+                (p + "w2", (cfg.d_ff, d)),
+            ]
+    spec += [("final_norm", (d,)), ("lm_head", (d, cfg.vocab))]
+    return spec
+
+
+def init_params(cfg, seed=0):
+    """Deterministic scaled-normal init, as a list in `param_spec` order."""
+    spec = param_spec(cfg)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(spec))
+    out = []
+    for (name, shape), key in zip(spec, keys):
+        if name.endswith("norm"):
+            arr = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            arr = jax.random.normal(key, shape, jnp.float32) / math.sqrt(fan_in)
+        out.append(arr)
+    return out
+
+
+def params_dict(cfg, params):
+    return dict(zip((n for n, _ in param_spec(cfg)), params))
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+def rms_norm(x, w, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rotary(x, positions):
+    """Rotary position embedding. x: [..., T, H, D], positions: [..., T]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    # angles: [..., T, 1, half] broadcasting over the head axis of x
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs[None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(x, w1, w3, w2):
+    return (jax.nn.silu(x @ w1) * (x @ w3)) @ w2
+
+
+def _manual_top_k(logits, top_k):
+    """Iterated-argmax top-k. `jax.lax.top_k` lowers to an HLO `topk` op
+    whose text syntax the xla_extension 0.5.1 parser rejects; argmax/mask
+    lowers to plain reduce/select ops that round-trip cleanly."""
+    vals, idxs = [], []
+    masked = logits
+    for _ in range(top_k):
+        i = jnp.argmax(masked, axis=-1)                      # [...]
+        v = jnp.take_along_axis(masked, i[..., None], axis=-1)[..., 0]
+        vals.append(v)
+        masked = masked - 2e30 * jax.nn.one_hot(i, logits.shape[-1],
+                                                dtype=logits.dtype)
+        idxs.append(i)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def moe_ffn(x, gate, w1, w3, w2, top_k):
+    """Top-k sparse MoE FFN (dense expert compute at proxy scale, sparse
+    blend — numerically identical to routed dispatch)."""
+    logits = x @ gate                                        # [..., E]
+    weights, idx = _manual_top_k(logits, top_k)              # [..., k]
+    weights = jax.nn.softmax(weights, axis=-1)
+    # Dense expert evaluation: [..., E, d_ff] -> [..., E, d]
+    h = jax.nn.silu(jnp.einsum("...d,edf->...ef", x, w1))
+    h = h * jnp.einsum("...d,edf->...ef", x, w3)
+    h = jnp.einsum("...ef,efd->...ed", h, w2)
+    picked = jnp.take_along_axis(h, idx[..., None], axis=-2)  # [..., k, d]
+    return jnp.sum(picked * weights[..., None], axis=-2)
+
+
+def _ffn(cfg, p, i, x):
+    pre = f"layer{i}."
+    if cfg.is_moe:
+        return moe_ffn(x, p[pre + "gate"], p[pre + "w1"], p[pre + "w3"],
+                       p[pre + "w2"], cfg.experts_active)
+    return swiglu(x, p[pre + "w1"], p[pre + "w3"], p[pre + "w2"])
+
+
+# --------------------------------------------------------------------------
+# Prefill: process the (padded) prompt, build the KV cache.
+# --------------------------------------------------------------------------
+
+def prefill(cfg, params, tokens, lengths):
+    """Run the prompt through the model.
+
+    Args:
+      params: list of arrays in `param_spec` order.
+      tokens:  [B, prompt_len] int32, right-padded with any token id.
+      lengths: [B] int32 true prompt lengths (1..prompt_len).
+
+    Returns:
+      logits:  [B, vocab] at each sequence's last real position.
+      k_cache: [L, B, HKV, max_seq, D]
+      v_cache: [L, B, HKV, max_seq, D]
+    """
+    p = params_dict(cfg, params)
+    b, t = tokens.shape
+    hd = cfg.head_dim
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+    x = p["embed"][tokens]                                  # [B, T, d]
+    # causal & padding mask: query i attends keys j <= i and j < length
+    j = jnp.arange(t, dtype=jnp.int32)
+    causal = j[None, :] <= jnp.arange(t, dtype=jnp.int32)[:, None]   # [T, T]
+    valid = j[None, None, :] < lengths[:, None, None]                # [B, 1, T]
+    mask = causal[None, :, :] & valid                                # [B, T, T]
+
+    k_layers, v_layers = [], []
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        h = rms_norm(x, p[pre + "attn_norm"])
+        q = (h @ p[pre + "wq"]).reshape(b, t, cfg.n_heads, hd)
+        k = (h @ p[pre + "wk"]).reshape(b, t, cfg.n_kv_heads, hd)
+        v = (h @ p[pre + "wv"]).reshape(b, t, cfg.n_kv_heads, hd)
+        q = rotary(q, positions)
+        k = rotary(k, positions)
+
+        group = cfg.n_heads // cfg.n_kv_heads
+        kr = jnp.repeat(k, group, axis=2)
+        vr = jnp.repeat(v, group, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kr) / math.sqrt(hd)
+        s = jnp.where(mask[:, None, :, :], s, -1e30)
+        att = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, vr).reshape(b, t, -1)
+        x = x + o @ p[pre + "wo"]
+        x = x + _ffn(cfg, p, i, rms_norm(x, p[pre + "ffn_norm"]))
+
+        # Cache layout [B, HKV, S, D], padded to max_seq.
+        pad = cfg.max_seq - t
+        k_c = jnp.pad(k.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_c = jnp.pad(v.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k_layers.append(k_c)
+        v_layers.append(v_c)
+
+    x = rms_norm(x, p["final_norm"])
+    logits_all = x @ p["lm_head"]                           # [B, T, vocab]
+    last = jnp.clip(lengths - 1, 0, t - 1)
+    logits = jnp.take_along_axis(
+        logits_all, last[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    return logits, jnp.stack(k_layers), jnp.stack(v_layers)
+
+
+# --------------------------------------------------------------------------
+# Decode: one token for every sequence, KV cache in/out.
+# --------------------------------------------------------------------------
+
+def decode_step(cfg, params, token, pos, k_cache, v_cache):
+    """Generate logits for the next token.
+
+    Args:
+      token: [B] int32 current token ids.
+      pos:   [B] int32 position of `token` (= current cache length).
+      k_cache/v_cache: [L, B, HKV, S, D].
+
+    Returns:
+      (logits [B, vocab], k_cache, v_cache) with the caches updated at
+      position `pos`.
+    """
+    p = params_dict(cfg, params)
+    b = token.shape[0]
+    hd = cfg.head_dim
+
+    x = p["embed"][token]                                   # [B, d]
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        h = rms_norm(x, p[pre + "attn_norm"])
+        q = (h @ p[pre + "wq"]).reshape(b, cfg.n_heads, hd)
+        k = (h @ p[pre + "wk"]).reshape(b, cfg.n_kv_heads, hd)
+        v = (h @ p[pre + "wv"]).reshape(b, cfg.n_kv_heads, hd)
+        # rotary at the scalar position of each sequence
+        q = rotary(q[:, None], pos[:, None])[:, 0]
+        k = rotary(k[:, None], pos[:, None])[:, 0]
+
+        # Scatter k, v into the cache at `pos` (per sequence).
+        def upd(cache, new):
+            def one(c, n, pp):
+                return jax.lax.dynamic_update_slice(c, n[:, None, :], (0, pp, 0))
+            return jax.vmap(one)(cache, new, pos)
+        kc = upd(k_cache[i], k)
+        vc = upd(v_cache[i], v)
+        new_k.append(kc)
+        new_v.append(vc)
+
+        # L1 Pallas kernel: attention over the cache.
+        o = decode_attention(q, kc, vc, pos + 1,
+                             block_s=min(256, cfg.max_seq))  # [B, H, hd]
+        x = x + o.reshape(b, -1) @ p[pre + "wo"]
+        x = x + _ffn(cfg, p, i, rms_norm(x, p[pre + "ffn_norm"]))
+
+    x = rms_norm(x, p["final_norm"])
+    logits = x @ p["lm_head"]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+# --------------------------------------------------------------------------
+# Decode chunk: several greedy steps fused into one executable.
+#
+# The single-step artifact pays per-call host<->device literal copies of the
+# whole KV cache plus dispatch overhead; fusing CHUNK steps amortizes both
+# (the §Perf L2 optimization: scan the decode loop inside XLA). Greedy
+# argmax moves in-graph — bitwise-identical to the Rust-side argmax (both
+# take the first maximum).
+# --------------------------------------------------------------------------
+
+#: tokens generated per fused decode call
+CHUNK = 8
+
+
+def decode_chunk(cfg, params, token, pos, k_cache, v_cache):
+    """Run CHUNK greedy decode steps in one XLA call.
+
+    Args:
+      token: [B] int32 current token ids (position `pos`, not yet cached).
+      pos:   [B] int32 positions of `token`.
+
+    Returns:
+      (tokens_out [B, CHUNK] — token at column 0 is the *next* token after
+      `token`, etc. —, k_cache, v_cache) with caches advanced CHUNK slots.
+    """
+    b = token.shape[0]
+
+    def body(i, carry):
+        token, pos, kc, vc, out = carry
+        logits, kc, vc = decode_step(cfg, params, token, pos, kc, vc)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out = jax.lax.dynamic_update_slice(out, nxt[:, None], (0, i))
+        return nxt, pos + 1, kc, vc, out
+
+    out0 = jnp.zeros((b, CHUNK), jnp.int32)
+    _, _, kc, vc, out = jax.lax.fori_loop(
+        0, CHUNK, body, (token, pos, k_cache, v_cache, out0))
+    return out, kc, vc
+
+
+# --------------------------------------------------------------------------
+# Reference generation loop (tests + oracle for the Rust engine)
+# --------------------------------------------------------------------------
+
+def generate_greedy(cfg, params, tokens, lengths, n_steps):
+    """Greedy generation, used as an oracle for the Rust serving engine."""
+    logits, kc, vc = prefill(cfg, params, tokens, lengths)
+    out = []
+    pos = lengths
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    for _ in range(n_steps):
+        out.append(tok)
+        logits, kc, vc = decode_step(cfg, params, tok, pos, kc, vc)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        pos = pos + 1
+    return np.stack([np.asarray(t) for t in out], axis=1)   # [B, n_steps]

@@ -1,0 +1,148 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracles in
+`ref.py`. Hypothesis sweeps shapes (GQA/MQA/MHA arrangements, ragged
+lengths, block sizes); fixed cases pin the paper-relevant configurations.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.attention import decode_attention, vmem_footprint_bytes
+from compile.kernels.cost_matrix import cost_matrix
+from compile.kernels.ref import cost_matrix_ref, decode_attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- attention
+
+def run_attention_case(batch, n_heads, n_kv_heads, seq, head_dim, block_s,
+                       lengths):
+    q = rand(0, (batch, n_heads, head_dim))
+    k = rand(1, (batch, n_kv_heads, seq, head_dim))
+    v = rand(2, (batch, n_kv_heads, seq, head_dim))
+    lengths = jnp.asarray(lengths, jnp.int32)
+    got = decode_attention(q, k, v, lengths, block_s=block_s)
+    want = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n_heads,n_kv_heads", [(4, 4), (4, 2), (4, 1)])
+def test_attention_head_arrangements(n_heads, n_kv_heads):
+    """MHA, GQA and MQA all match the oracle (the zoo uses all three)."""
+    run_attention_case(3, n_heads, n_kv_heads, 128, 32, 64, [1, 64, 128])
+
+
+def test_attention_proxy_shapes():
+    """The exact shapes the AOT artifacts bake in (S=256, D=32, B=8)."""
+    run_attention_case(8, 8, 2, 256, 32, 64, [5, 17, 33, 64, 100, 200, 255, 256])
+
+
+def test_attention_single_valid_token():
+    """length=1: softmax over one position -> output equals v[0]."""
+    q = rand(0, (1, 2, 16))
+    k = rand(1, (1, 1, 64, 16))
+    v = rand(2, (1, 1, 64, 16))
+    got = decode_attention(q, k, v, jnp.array([1], jnp.int32), block_s=16)
+    np.testing.assert_allclose(
+        got, jnp.broadcast_to(v[:, 0, 0][:, None, :], got.shape),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_attention_ignores_padding_garbage():
+    """Entries beyond `length` must not leak into the output."""
+    q = rand(0, (2, 2, 16))
+    k = rand(1, (2, 1, 64, 16))
+    v = rand(2, (2, 1, 64, 16))
+    lengths = jnp.array([10, 32], jnp.int32)
+    base = decode_attention(q, k, v, lengths, block_s=16)
+    # Poison everything past the valid region.
+    mask = jax.lax.iota(jnp.int32, 64)[None, None, :, None] >= lengths[:, None, None, None]
+    k_poison = jnp.where(mask, 1e6, k)
+    v_poison = jnp.where(mask, -1e6, v)
+    poisoned = decode_attention(q, k_poison, v_poison, lengths, block_s=16)
+    np.testing.assert_allclose(base, poisoned, rtol=1e-6, atol=1e-6)
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    batch=st.integers(1, 4),
+    heads=st.sampled_from([(2, 1), (2, 2), (4, 2), (8, 2), (5, 5)]),
+    head_dim=st.sampled_from([8, 16, 32]),
+    seq_blocks=st.integers(1, 4),
+    block_s=st.sampled_from([16, 32]),
+    data=st.data(),
+)
+def test_attention_hypothesis(batch, heads, head_dim, seq_blocks, block_s, data):
+    n_heads, n_kv_heads = heads
+    seq = seq_blocks * block_s
+    lengths = data.draw(
+        st.lists(st.integers(1, seq), min_size=batch, max_size=batch))
+    run_attention_case(batch, n_heads, n_kv_heads, seq, head_dim, block_s,
+                       lengths)
+
+
+def test_vmem_footprint_reported():
+    # S tile of 64 x D=32 keys+values + q + state, f32.
+    b = vmem_footprint_bytes(8, 2, 32, 64)
+    assert b == 4 * (32 + 2 * 64 * 32 + 32 + 2)
+    assert b < 64 * 1024  # tiny fraction of the ~16 MiB VMEM budget
+
+
+# -------------------------------------------------------------- cost matrix
+
+def run_cost_case(k, n, zeta, block_n=128):
+    coefs = jnp.abs(rand(3, (k, 3))) * jnp.array([1.0, 10.0, 0.01])
+    accs = jnp.linspace(40.0, 70.0, k)
+    taus = jnp.abs(rand(4, (n, 2))) * 500.0 + 1.0
+    maxima = jnp.array([
+        float(jnp.max(coefs[:, 0]) * 2048 + jnp.max(coefs[:, 1]) * 4096
+              + jnp.max(coefs[:, 2]) * 2048 * 4096),
+        float(jnp.max(accs) * (2048 + 4096)),
+    ], jnp.float32)
+    z = jnp.array([zeta], jnp.float32)
+    got = cost_matrix(coefs, accs, maxima, z, taus, block_n=block_n)
+    want = cost_matrix_ref(coefs, accs, maxima, z, taus)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("zeta", [0.0, 0.3, 0.5, 1.0])
+def test_cost_matrix_zeta_values(zeta):
+    run_cost_case(3, 512, zeta)
+
+
+def test_cost_matrix_artifact_shape():
+    """The K=3, N=512 shape baked into artifacts/cost_matrix.hlo.txt."""
+    run_cost_case(3, 512, 0.42, block_n=128)
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(
+    k=st.integers(1, 7),
+    tiles=st.integers(1, 4),
+    block_n=st.sampled_from([32, 128]),
+    zeta=st.floats(0.0, 1.0),
+)
+def test_cost_matrix_hypothesis(k, tiles, block_n, zeta):
+    run_cost_case(k, tiles * block_n, zeta, block_n=block_n)
+
+
+def test_cost_matrix_extremes_select_expected_model():
+    """zeta=1 ranks by energy only; zeta=0 by accuracy only."""
+    coefs = jnp.array([[0.1, 1.0, 1e-4],
+                       [0.2, 2.0, 2e-4],
+                       [0.6, 6.0, 6e-4]], jnp.float32)  # increasing energy
+    accs = jnp.array([50.0, 55.0, 65.0], jnp.float32)   # increasing accuracy
+    taus = jnp.full((128, 2), 100.0, jnp.float32)
+    maxima = jnp.array([1e4, 1e5], jnp.float32)
+    c1 = cost_matrix(coefs, accs, maxima, jnp.array([1.0]), taus)
+    assert int(jnp.argmin(c1[:, 0])) == 0   # cheapest model wins
+    c0 = cost_matrix(coefs, accs, maxima, jnp.array([0.0]), taus)
+    assert int(jnp.argmin(c0[:, 0])) == 2   # most accurate model wins

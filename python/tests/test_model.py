@@ -1,0 +1,174 @@
+"""L2 model correctness: shapes, prefill/decode consistency (the decode
+path with its Pallas attention must agree with teacher-forced prefill),
+MoE behavior, and determinism of parameter init.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = M.ProxyConfig("tiny-test", n_layers=2, d_model=32, n_heads=2,
+                     n_kv_heads=1, d_ff=64, vocab=64, max_seq=32,
+                     prompt_len=8, batch=2)
+TINY_MOE = M.ProxyConfig("tiny-moe", n_layers=2, d_model=32, n_heads=2,
+                         n_kv_heads=1, d_ff=64, vocab=64, n_experts=4,
+                         experts_active=2, max_seq=32, prompt_len=8, batch=2)
+
+
+def make_inputs(cfg, lengths, seed=9):
+    key = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(key, (cfg.batch, cfg.prompt_len), 0, cfg.vocab,
+                                dtype=jnp.int32)
+    return tokens, jnp.asarray(lengths, jnp.int32)
+
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_MOE], ids=["dense", "moe"])
+def test_prefill_shapes(cfg):
+    params = M.init_params(cfg)
+    tokens, lengths = make_inputs(cfg, [3, 8])
+    logits, kc, vc = M.prefill(cfg, params, tokens, lengths)
+    assert logits.shape == (cfg.batch, cfg.vocab)
+    assert kc.shape == (cfg.n_layers, cfg.batch, cfg.n_kv_heads, cfg.max_seq,
+                        cfg.head_dim)
+    assert vc.shape == kc.shape
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("cfg", [TINY, TINY_MOE], ids=["dense", "moe"])
+def test_decode_matches_teacher_forced_prefill(cfg):
+    """Core L2 invariant: prefill(t0..tn) and prefill(t0..t_{n-1}) +
+    decode(t_n) produce the same next-token logits. This exercises the
+    whole KV-cache path including the Pallas decode-attention kernel."""
+    params = M.init_params(cfg)
+    tokens, _ = make_inputs(cfg, [cfg.prompt_len] * cfg.batch)
+    n = cfg.prompt_len
+
+    # Full prompt through prefill.
+    full_lengths = jnp.full((cfg.batch,), n, jnp.int32)
+    want_logits, _, _ = M.prefill(cfg, params, tokens, full_lengths)
+
+    # Prompt minus last token through prefill, then decode the last token.
+    part_lengths = jnp.full((cfg.batch,), n - 1, jnp.int32)
+    _, kc, vc = M.prefill(cfg, params, tokens, part_lengths)
+    last_tok = tokens[:, n - 1]
+    got_logits, _, _ = M.decode_step(cfg, params, last_tok, part_lengths, kc, vc)
+
+    np.testing.assert_allclose(got_logits, want_logits, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_prefill_ragged_lengths():
+    """Same invariant with different true lengths per sequence."""
+    cfg = TINY
+    params = M.init_params(cfg)
+    tokens, _ = make_inputs(cfg, [0, 0])
+    lengths = jnp.array([3, 6], jnp.int32)
+
+    want_logits, _, _ = M.prefill(cfg, params, tokens, lengths)
+
+    part = lengths - 1
+    _, kc, vc = M.prefill(cfg, params, tokens, part)
+    last_tok = jnp.take_along_axis(tokens, part[:, None], axis=1)[:, 0]
+    got_logits, _, _ = M.decode_step(cfg, params, last_tok, part, kc, vc)
+
+    np.testing.assert_allclose(got_logits, want_logits, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_chunk_matches_single_steps():
+    """The fused CHUNK-step executable must produce exactly the tokens the
+    single-step loop produces (greedy argmax parity)."""
+    cfg = TINY
+    params = M.init_params(cfg)
+    tokens, lengths = make_inputs(cfg, [4, 7])
+    logits, kc, vc = M.prefill(cfg, params, tokens, lengths)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    pos = lengths
+
+    # Single-step reference.
+    want = []
+    kc1, vc1, tok1, pos1 = kc, vc, tok, pos
+    for _ in range(M.CHUNK):
+        logits, kc1, vc1 = M.decode_step(cfg, params, tok1, pos1, kc1, vc1)
+        tok1 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        pos1 = pos1 + 1
+        want.append(tok1)
+    want = np.stack([np.asarray(t) for t in want], axis=1)
+
+    got, kc2, vc2 = M.decode_chunk(cfg, params, tok, pos, kc, vc)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    np.testing.assert_allclose(kc2, kc1, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(vc2, vc1, rtol=1e-6, atol=1e-6)
+
+
+def test_multi_step_generation_runs():
+    cfg = TINY
+    params = M.init_params(cfg)
+    tokens, lengths = make_inputs(cfg, [4, 8])
+    out = M.generate_greedy(cfg, params, tokens, lengths, n_steps=5)
+    assert out.shape == (cfg.batch, 5)
+    assert out.dtype == np.int32
+    assert (out >= 0).all() and (out < cfg.vocab).all()
+
+
+def test_init_deterministic_and_spec_consistent():
+    params_a = M.init_params(TINY, seed=0)
+    params_b = M.init_params(TINY, seed=0)
+    for a, b in zip(params_a, params_b):
+        np.testing.assert_array_equal(a, b)
+    spec = M.param_spec(TINY)
+    assert len(spec) == len(params_a)
+    for (name, shape), arr in zip(spec, params_a):
+        assert tuple(shape) == arr.shape, name
+    # Different seed differs.
+    params_c = M.init_params(TINY, seed=1)
+    assert any(
+        not np.array_equal(a, c) for a, c in zip(params_a, params_c))
+
+
+def test_moe_param_spec_has_experts():
+    names = [n for n, _ in M.param_spec(TINY_MOE)]
+    assert "layer0.gate" in names
+    shapes = dict(M.param_spec(TINY_MOE))
+    assert shapes["layer0.w1"] == (4, 32, 64)
+
+
+def test_moe_top2_blend_matches_manual():
+    """MoE FFN equals the manual top-2 mixture of expert outputs."""
+    cfg = TINY_MOE
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (5, cfg.d_model))
+    gate = jax.random.normal(jax.random.PRNGKey(4), (cfg.d_model, cfg.n_experts))
+    w1 = jax.random.normal(jax.random.PRNGKey(5), (cfg.n_experts, cfg.d_model, cfg.d_ff))
+    w3 = jax.random.normal(jax.random.PRNGKey(6), (cfg.n_experts, cfg.d_model, cfg.d_ff))
+    w2 = jax.random.normal(jax.random.PRNGKey(7), (cfg.n_experts, cfg.d_ff, cfg.d_model))
+    got = M.moe_ffn(x, gate, w1, w3, w2, 2)
+
+    logits = x @ gate
+    want = np.zeros_like(np.asarray(x))
+    for i in range(x.shape[0]):
+        top = np.argsort(np.asarray(logits[i]))[::-1][:2]
+        w = jax.nn.softmax(logits[i][top])
+        for j, e in enumerate(top):
+            h = jax.nn.silu(x[i] @ w1[e]) * (x[i] @ w3[e])
+            want[i] += np.asarray(w[j] * (h @ w2[e]))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_zoo_configs_valid():
+    assert len(M.ZOO) == 7
+    for cfg in M.ZOO:
+        assert cfg.d_model % cfg.n_heads == 0, cfg.name
+        assert cfg.n_heads % cfg.n_kv_heads == 0, cfg.name
+        assert cfg.head_dim == 32, cfg.name  # uniform at proxy scale
+        assert cfg.max_seq % 64 == 0, cfg.name  # kernel block divisibility
+    moe = M.config("mixtral-8x7b")
+    assert moe.is_moe and moe.n_experts == 8 and moe.experts_active == 2
+
+
+def test_config_lookup_error():
+    with pytest.raises(KeyError):
+        M.config("gpt-5")

@@ -1,0 +1,115 @@
+//! Bench: the serving hot path on real artifacts — per-step decode
+//! latency, prefill latency, and router scoring throughput. Requires
+//! `make artifacts`. `cargo bench --bench e2e_serving`.
+
+use ecoserve::characterize::quick_fit;
+use ecoserve::config::llama_family;
+use ecoserve::coordinator::{Policy, Router};
+use ecoserve::models::Normalizer;
+use ecoserve::runtime::{CostEngine, Engine, Manifest};
+use ecoserve::util::{bench, black_box, Rng};
+use ecoserve::workload::Query;
+use std::path::Path;
+use std::time::Duration;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("e2e_serving: artifacts missing — run `make artifacts` first. Skipping.");
+        return;
+    }
+    println!("=== e2e_serving: PJRT engine + router hot paths ===");
+    let client = xla::PjRtClient::cpu().unwrap();
+    let manifest = Manifest::load(dir).unwrap();
+
+    // --- engine micro-benches -------------------------------------------
+    for id in ["llama2-7b", "llama2-70b", "mixtral-8x7b"] {
+        let engine = Engine::load(&client, manifest.model(id).unwrap()).unwrap();
+        let prompts: Vec<Vec<i32>> = (0..engine.spec.batch)
+            .map(|i| vec![(i as i32) + 1; 16])
+            .collect();
+
+        let stats = bench(&format!("prefill/{id}"), Duration::from_secs(3), || {
+            black_box(engine.prefill(&prompts).unwrap());
+        });
+        println!("{}", stats.line());
+
+        let (next, kc, vc, lengths) = engine.prefill(&prompts).unwrap();
+        // Benchmark a single decode step (state is threaded through).
+        let mut state = Some((next, kc, vc));
+        let pos: Vec<i32> = lengths.clone();
+        let stats = bench(&format!("decode_step/{id}"), Duration::from_secs(3), || {
+            let (next, kc, vc) = state.take().unwrap();
+            let (n2, k2, v2) = engine.decode(&next, &pos, kc, vc).unwrap();
+            state = Some((black_box(n2), k2, v2));
+        });
+        println!("{}", stats.line());
+        let batch = engine.spec.batch as f64;
+        println!(
+            "    → decode throughput ≈ {:.1} tok/s at batch {}",
+            batch / stats.median_s,
+            engine.spec.batch
+        );
+
+        // Fused CHUNK-step decode (§Perf #3): amortizes per-call copies.
+        if engine.has_chunk() {
+            let chunk = engine.spec.chunk as f64;
+            let (next, kc, vc, lengths) = engine.prefill(&prompts).unwrap();
+            let mut state = Some((next, kc, vc));
+            let pos: Vec<i32> = lengths;
+            let stats = bench(
+                &format!("decode_chunk{}/{id}", engine.spec.chunk),
+                Duration::from_secs(3),
+                || {
+                    let (next, kc, vc) = state.take().unwrap();
+                    let (rows, k2, v2) = engine.decode_chunk(&next, &pos, kc, vc).unwrap();
+                    let nxt: Vec<i32> =
+                        rows.iter().map(|r| r[engine.spec.chunk - 1]).collect();
+                    state = Some((black_box(nxt), k2, v2));
+                },
+            );
+            println!("{}", stats.line());
+            println!(
+                "    → fused decode ≈ {:.1} tok/s at batch {} ({:.2} ms/token)",
+                batch * chunk / stats.median_s,
+                engine.spec.batch,
+                stats.median_s * 1e3 / chunk
+            );
+        }
+    }
+
+    // --- router scoring hot path ------------------------------------------
+    let family = llama_family();
+    let fitted = quick_fit(&family, 42).unwrap();
+    let mut rng = Rng::new(5);
+    let queries: Vec<Query> = (0..512)
+        .map(|id| Query {
+            id,
+            t_in: rng.int_range(1, 2048) as u32,
+            t_out: rng.int_range(1, 4096) as u32,
+        })
+        .collect();
+    let norm = Normalizer::from_workload(&fitted.sets, &queries);
+
+    let mut router = Router::new(fitted.sets.clone(), norm, 0.5, Policy::ZetaCost);
+    let stats = bench("router/native_route_512", Duration::from_secs(2), || {
+        for q in &queries {
+            black_box(router.route(q));
+        }
+    });
+    println!("{}", stats.line());
+    println!(
+        "    → native routing ≈ {:.2}M queries/s",
+        512.0 / stats.median_s / 1e6
+    );
+
+    let cost_engine = CostEngine::load(&client, &manifest.cost_matrix).unwrap();
+    let stats = bench("router/pjrt_cost_matrix_512", Duration::from_secs(2), || {
+        black_box(cost_engine.score(&fitted.sets, &norm, &queries, 0.5).unwrap());
+    });
+    println!("{}", stats.line());
+    println!(
+        "    → PJRT kernel scoring ≈ {:.2}M query-scores/s",
+        (512.0 * 3.0) / stats.median_s / 1e6
+    );
+}

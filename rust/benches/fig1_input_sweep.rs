@@ -1,0 +1,56 @@
+//! Bench: regenerate Fig. 1 (vary input tokens 8..2048, output fixed 32)
+//! and time the campaign per model. `cargo bench --bench fig1_input_sweep`.
+
+use ecoserve::characterize::Campaign;
+use ecoserve::config::{swing_node, zoo, ExperimentConfig};
+use ecoserve::hardware::Node;
+use ecoserve::perfmodel::Cluster;
+use ecoserve::report;
+use ecoserve::util::{bench, black_box, Rng};
+use std::time::Duration;
+
+fn main() {
+    println!("=== fig1_input_sweep: Fig. 1 regeneration ===");
+    let cfg = ExperimentConfig::default();
+    let campaign = Campaign::new(Cluster::new(Node::new(swing_node())), cfg);
+
+    let mut series = Vec::new();
+    for spec in zoo() {
+        let mut rng = Rng::new(42);
+        let stats = bench(
+            &format!("sweep_input/{}", spec.id),
+            Duration::from_secs(2),
+            || {
+                black_box(campaign.sweep_input(&spec, &mut rng));
+            },
+        );
+        println!("{}", stats.line());
+        let mut rng = Rng::new(42);
+        series.push((spec.id.to_string(), campaign.sweep_input(&spec, &mut rng)));
+    }
+
+    println!("\n--- regenerated Fig. 1 series ---");
+    print!("{}", report::sweep_ascii(&series, "t_in"));
+
+    // Shape assertions from §5.2.
+    for (id, cells) in &series {
+        let tp: Vec<f64> = cells.iter().map(|c| c.throughput_tok_s()).collect();
+        assert!(
+            tp.last().unwrap() > tp.first().unwrap(),
+            "{id}: throughput should grow with input size"
+        );
+        let rt: Vec<f64> = cells.iter().map(|c| c.mean_runtime_s()).collect();
+        assert!(rt.windows(2).all(|w| w[1] >= w[0]), "{id}: runtime monotone");
+    }
+    // Mixtral beats the dense large models on energy/token at 2048 input.
+    let ept_at_max = |id: &str| {
+        series
+            .iter()
+            .find(|(m, _)| m == id)
+            .map(|(_, c)| c.last().unwrap().energy_per_token_j())
+            .unwrap()
+    };
+    assert!(ept_at_max("mixtral-8x7b") < ept_at_max("falcon-40b"));
+    assert!(ept_at_max("mixtral-8x7b") < ept_at_max("llama2-70b"));
+    println!("✓ Fig. 1 shape checks pass (plateauing throughput, SMoE advantage)");
+}

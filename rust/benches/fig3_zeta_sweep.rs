@@ -1,0 +1,79 @@
+//! Bench: regenerate Fig. 3 (the ζ trade-off sweep vs baselines) and time
+//! the exact assignment solve at paper scale (500 queries × 3 models).
+//! `cargo bench --bench fig3_zeta_sweep`.
+
+use ecoserve::characterize::quick_fit;
+use ecoserve::config::{llama_family, Partition};
+use ecoserve::models::Normalizer;
+use ecoserve::report;
+use ecoserve::scheduler::{
+    solve_exact_mode, sweep_mode, CapacityMode, CostMatrix,
+};
+use ecoserve::util::{bench, black_box, Rng};
+use std::time::Duration;
+
+fn main() {
+    println!("=== fig3_zeta_sweep: Fig. 3 regeneration ===");
+    let family = llama_family();
+    let fitted = quick_fit(&family, 42).unwrap();
+    let partition = Partition::paper_case_study();
+
+    let mut rng = Rng::new(1234);
+    let queries = ecoserve::workload::paper_sample(&mut rng);
+    let norm = Normalizer::from_workload(&fitted.sets, &queries);
+
+    // Time a single exact solve at the paper's scale.
+    let costs = CostMatrix::build(&fitted.sets, &norm, &queries, 0.5);
+    let stats = bench("mcmf/solve_500x3", Duration::from_secs(3), || {
+        black_box(
+            solve_exact_mode(&costs, &partition.gammas, CapacityMode::Eq3Only).unwrap(),
+        );
+    });
+    println!("{}", stats.line());
+    // The PuLP ILP the paper used takes seconds here; our bar is ≪ 1 s.
+    assert!(
+        stats.median_s < 1.0,
+        "exact solve should be well under a second, got {}",
+        stats.median_s
+    );
+
+    // Full sweep.
+    let sweep = sweep_mode(
+        &fitted.sets,
+        &queries,
+        &partition.gammas,
+        11,
+        CapacityMode::Eq3Only,
+        &mut rng,
+    )
+    .unwrap();
+    print!("\n{}", report::zeta_ascii(&sweep));
+
+    // Fig. 3 shape checks.
+    let first = sweep.points.first().unwrap().eval;
+    let last = sweep.points.last().unwrap().eval;
+    assert!(first.mean_energy_j > last.mean_energy_j, "energy falls with ζ");
+    assert!(first.mean_accuracy > last.mean_accuracy, "accuracy falls with ζ");
+    assert!(first.mean_runtime_s > last.mean_runtime_s, "runtime falls with ζ");
+    // Scheduler endpoints approach the single-model baselines.
+    let single70 = &sweep
+        .baselines
+        .iter()
+        .find(|(l, _)| l == "single:llama2-70b")
+        .unwrap()
+        .1;
+    let single7 = &sweep
+        .baselines
+        .iter()
+        .find(|(l, _)| l == "single:llama2-7b")
+        .unwrap()
+        .1;
+    assert!((first.mean_accuracy - single70.mean_accuracy).abs() < 1.0);
+    assert!((last.mean_energy_j - single7.mean_energy_j) / single7.mean_energy_j < 0.1);
+    // Round-robin ≈ random (paper: "indistinguishable").
+    let rr = &sweep.baselines.iter().find(|(l, _)| l == "round-robin").unwrap().1;
+    let rnd = &sweep.baselines.iter().find(|(l, _)| l == "random").unwrap().1;
+    let rel = (rr.mean_energy_j - rnd.mean_energy_j).abs() / rr.mean_energy_j;
+    assert!(rel < 0.2, "round-robin vs random rel diff {rel}");
+    println!("✓ Fig. 3 shape checks pass (frontier interpolates the single-model baselines)");
+}

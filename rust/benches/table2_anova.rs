@@ -1,0 +1,48 @@
+//! Bench: regenerate Table 2 (two-way ANOVA with interaction over the
+//! pooled token grid) and time the analysis. `cargo bench --bench table2_anova`.
+
+use ecoserve::characterize::{self, Campaign};
+use ecoserve::config::{swing_node, zoo, ExperimentConfig};
+use ecoserve::hardware::Node;
+use ecoserve::perfmodel::Cluster;
+use ecoserve::report;
+use ecoserve::stats;
+use ecoserve::util::{bench, black_box, Rng};
+use std::time::Duration;
+
+fn main() {
+    println!("=== table2_anova: Table 2 regeneration ===");
+    // Collect the pooled grid (all 7 models, 9×9 powers of two, 3 trials).
+    let cfg = ExperimentConfig::default();
+    let campaign = Campaign::new(Cluster::new(Node::new(swing_node())), cfg);
+    let mut rng = Rng::new(42);
+    let mut rows = Vec::new();
+    for spec in zoo() {
+        let cells = campaign.grid(&spec, 3, &mut rng);
+        rows.extend(characterize::rows_from_cells(&cells));
+    }
+    println!("grid: {} trial rows pooled across models", rows.len());
+
+    let e_obs = characterize::anova_blocks(&rows, |r| r.total_energy_j());
+    let r_obs = characterize::anova_blocks(&rows, |r| r.runtime_s);
+
+    let stats_line = bench("anova/two_way_blocked_energy", Duration::from_secs(2), || {
+        black_box(stats::two_way_blocked(&e_obs, "Input Tokens", "Output Tokens").unwrap());
+    });
+    println!("{}", stats_line.line());
+
+    let energy = stats::two_way_blocked(&e_obs, "Input Tokens", "Output Tokens").unwrap();
+    let runtime = stats::two_way_blocked(&r_obs, "Input Tokens", "Output Tokens").unwrap();
+    println!("\n{}", report::table2(&energy, &runtime).to_ascii());
+
+    // Table 2 shape: both main effects and the interaction significant,
+    // with F(output) ≫ F(input) > F(interaction)-ish ordering.
+    for t in [&energy, &runtime] {
+        assert!(t.factor_a.p_value < 0.01, "input main effect significant");
+        assert!(t.factor_b.p_value < 1e-10, "output main effect significant");
+        assert!(t.interaction.p_value < 0.01, "interaction significant");
+        assert!(t.factor_b.f_stat > t.factor_a.f_stat, "F(out) > F(in)");
+        assert!(t.factor_b.f_stat > t.interaction.f_stat);
+    }
+    println!("✓ Table 2 shape checks pass (output dominates; interaction present)");
+}

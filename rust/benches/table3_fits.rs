@@ -1,0 +1,50 @@
+//! Bench: regenerate Table 3 (per-model OLS fits of e_K and r_K) and time
+//! the fitting path. `cargo bench --bench table3_fits`.
+
+use ecoserve::characterize::{self, Campaign};
+use ecoserve::config::{swing_node, zoo, ExperimentConfig};
+use ecoserve::hardware::Node;
+use ecoserve::models::{ModelSet, Target, WorkloadModel};
+use ecoserve::perfmodel::Cluster;
+use ecoserve::report;
+use ecoserve::util::{bench, black_box, Rng};
+use std::time::Duration;
+
+fn main() {
+    println!("=== table3_fits: Table 3 regeneration ===");
+    let cfg = ExperimentConfig::default();
+    let campaign = Campaign::new(Cluster::new(Node::new(swing_node())), cfg);
+    let specs = zoo();
+    let mut rng = Rng::new(42);
+    let mut rows = Vec::new();
+    for spec in &specs {
+        rows.extend(characterize::rows_from_cells(&campaign.grid(spec, 3, &mut rng)));
+    }
+
+    // Time one model's OLS fit (n ≈ 243 rows, 3 regressors).
+    let stats = bench("ols/fit_energy_llama2-7b", Duration::from_secs(2), || {
+        black_box(
+            WorkloadModel::fit("llama2-7b", Target::EnergyJ, &rows, |r| r.total_energy_j())
+                .unwrap(),
+        );
+    });
+    println!("{}", stats.line());
+
+    let sets: Vec<ModelSet> = specs
+        .iter()
+        .map(|s| ModelSet::fit(s, &rows).unwrap())
+        .collect();
+    println!("\n{}", report::table3(&sets, &specs).to_ascii());
+    println!("{}", report::coefficients(&sets).to_ascii());
+
+    // Table 3 bar: R² > 0.96 everywhere, p-values vanishing.
+    for s in &sets {
+        assert!(s.energy.r2 > 0.96, "{}: energy R²={}", s.model_id, s.energy.r2);
+        assert!(s.runtime.r2 > 0.96, "{}: runtime R²={}", s.model_id, s.runtime.r2);
+        assert!(s.energy.p_value < 1e-30);
+        assert!(s.runtime.p_value < 1e-30);
+        // Per-output-token cost exceeds per-input-token cost.
+        assert!(s.energy.coefs[1] > s.energy.coefs[0]);
+    }
+    println!("✓ Table 3 checks pass (R² > 0.96 for every model, output term dominates)");
+}

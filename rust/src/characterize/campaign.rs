@@ -1,0 +1,220 @@
+//! The experimental campaign of §5.1: vary-input sweeps (Fig. 1),
+//! vary-output sweeps (Fig. 2), and the full τ_in × τ_out grid used for the
+//! ANOVA (Table 2) and the model fits (Table 3).
+//!
+//! Faithful to the paper's protocol: batch size fixed at 32, KV cache cold
+//! per trial, experiment cells visited in randomized order, and trials per
+//! cell governed by the 95%-CI / 25-trial stopping rule (§5.1.3).
+
+use crate::config::{epyc_7742, ExperimentConfig, LlmSpec};
+use crate::hardware::Cpu;
+use crate::perfmodel::Cluster;
+use crate::stats::{StopReason, StoppingRule};
+use crate::telemetry::{measure, Measurement};
+use crate::util::Rng;
+
+/// All trials of one experiment cell (model × τ_in × τ_out).
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub model_id: String,
+    pub t_in: u32,
+    pub t_out: u32,
+    pub batch: u32,
+    pub trials: Vec<Measurement>,
+    pub stop: StopReason,
+}
+
+impl Cell {
+    pub fn mean_runtime_s(&self) -> f64 {
+        self.trials.iter().map(|m| m.runtime_s).sum::<f64>() / self.trials.len() as f64
+    }
+
+    pub fn mean_energy_j(&self) -> f64 {
+        self.trials.iter().map(|m| m.total_energy_j()).sum::<f64>() / self.trials.len() as f64
+    }
+
+    pub fn mean_gpu_energy_j(&self) -> f64 {
+        self.trials.iter().map(|m| m.gpu_energy_j).sum::<f64>() / self.trials.len() as f64
+    }
+
+    pub fn mean_cpu_energy_j(&self) -> f64 {
+        self.trials.iter().map(|m| m.cpu_energy_j).sum::<f64>() / self.trials.len() as f64
+    }
+
+    /// Tokens processed per wall-second (prompt + generated, whole batch).
+    pub fn throughput_tok_s(&self) -> f64 {
+        let tokens = (self.t_in + self.t_out) as f64 * self.batch as f64;
+        tokens / self.mean_runtime_s()
+    }
+
+    /// Energy per processed token (J/token) — the Fig. 1/2 bottom panels.
+    pub fn energy_per_token_j(&self) -> f64 {
+        let tokens = (self.t_in + self.t_out) as f64 * self.batch as f64;
+        self.mean_energy_j() / tokens
+    }
+}
+
+/// Campaign driver bound to a simulated cluster.
+pub struct Campaign {
+    pub cluster: Cluster,
+    pub cpu: Cpu,
+    pub rule: StoppingRule,
+    pub cfg: ExperimentConfig,
+}
+
+impl Campaign {
+    pub fn new(cluster: Cluster, cfg: ExperimentConfig) -> Campaign {
+        Campaign {
+            cluster,
+            cpu: Cpu::new(epyc_7742(), 0),
+            rule: StoppingRule::default(),
+            cfg,
+        }
+    }
+
+    /// Measure one cell under the stopping rule.
+    pub fn run_cell(&self, spec: &LlmSpec, t_in: u32, t_out: u32, rng: &mut Rng) -> Cell {
+        let mut trials: Vec<Measurement> = Vec::new();
+        let stop = loop {
+            let runtimes: Vec<f64> = trials.iter().map(|m| m.runtime_s).collect();
+            match self.rule.check(&runtimes) {
+                StopReason::Continue => {
+                    let trace = self.cluster.infer(spec, t_in, t_out, self.cfg.batch_size, rng);
+                    trials.push(measure(&trace, &self.cpu, rng));
+                }
+                reason => break reason,
+            }
+        };
+        Cell {
+            model_id: spec.id.to_string(),
+            t_in,
+            t_out,
+            batch: self.cfg.batch_size,
+            trials,
+            stop,
+        }
+    }
+
+    /// §5.1.1 — vary input tokens with output fixed at 32.
+    pub fn sweep_input(&self, spec: &LlmSpec, rng: &mut Rng) -> Vec<Cell> {
+        let mut levels = self.cfg.input_sweep.clone();
+        rng.shuffle(&mut levels); // §5.1.3 randomized order
+        let mut cells: Vec<Cell> = levels
+            .iter()
+            .map(|&t_in| self.run_cell(spec, t_in, self.cfg.fixed_output, rng))
+            .collect();
+        cells.sort_by_key(|c| c.t_in);
+        cells
+    }
+
+    /// §5.1.2 — vary output tokens with input fixed at 32.
+    pub fn sweep_output(&self, spec: &LlmSpec, rng: &mut Rng) -> Vec<Cell> {
+        let mut levels = self.cfg.output_sweep.clone();
+        rng.shuffle(&mut levels);
+        let mut cells: Vec<Cell> = levels
+            .iter()
+            .map(|&t_out| self.run_cell(spec, self.cfg.fixed_input, t_out, rng))
+            .collect();
+        cells.sort_by_key(|c| c.t_out);
+        cells
+    }
+
+    /// §6.1 — full grid over τ_in × τ_out (powers of two), randomized
+    /// visit order. `trials_per_cell` overrides the stopping rule's cap to
+    /// bound grid cost (the rule still applies within the cap).
+    pub fn grid(&self, spec: &LlmSpec, trials_per_cell: usize, rng: &mut Rng) -> Vec<Cell> {
+        let mut points: Vec<(u32, u32)> = Vec::new();
+        for &a in &self.cfg.grid_levels {
+            for &b in &self.cfg.grid_levels {
+                points.push((a, b));
+            }
+        }
+        rng.shuffle(&mut points);
+        let capped = Campaign {
+            cluster: self.cluster.clone(),
+            cpu: self.cpu.clone(),
+            rule: StoppingRule {
+                max_trials: trials_per_cell,
+                ..self.rule
+            },
+            cfg: self.cfg.clone(),
+        };
+        let mut cells: Vec<Cell> = points
+            .iter()
+            .map(|&(t_in, t_out)| capped.run_cell(spec, t_in, t_out, rng))
+            .collect();
+        cells.sort_by_key(|c| (c.t_in, c.t_out));
+        cells
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{lookup, swing_node};
+    use crate::hardware::Node;
+
+    fn campaign() -> Campaign {
+        Campaign::new(
+            Cluster::new(Node::new(swing_node())),
+            ExperimentConfig::default(),
+        )
+    }
+
+    #[test]
+    fn cell_obeys_stopping_rule() {
+        let c = campaign();
+        let m = lookup("llama2-7b").unwrap();
+        let cell = c.run_cell(&m, 64, 32, &mut Rng::new(1));
+        assert!(cell.trials.len() >= c.rule.min_trials);
+        assert!(cell.trials.len() <= c.rule.max_trials);
+        assert_ne!(cell.stop, StopReason::Continue);
+    }
+
+    #[test]
+    fn sweep_input_covers_levels_sorted() {
+        let c = campaign();
+        let m = lookup("falcon-7b").unwrap();
+        let cells = c.sweep_input(&m, &mut Rng::new(2));
+        let t_ins: Vec<u32> = cells.iter().map(|c| c.t_in).collect();
+        assert_eq!(t_ins, c.cfg.input_sweep);
+        assert!(cells.iter().all(|c| c.t_out == 32));
+    }
+
+    #[test]
+    fn runtime_monotone_in_output_tokens() {
+        let c = campaign();
+        let m = lookup("mistral-7b").unwrap();
+        let cells = c.sweep_output(&m, &mut Rng::new(3));
+        let runtimes: Vec<f64> = cells.iter().map(|c| c.mean_runtime_s()).collect();
+        assert!(
+            runtimes.windows(2).all(|w| w[1] > w[0]),
+            "runtimes={runtimes:?}"
+        );
+    }
+
+    #[test]
+    fn throughput_plateaus_on_input_sweep() {
+        // Fig. 1 middle panel: throughput grows then flattens (roofline).
+        let c = campaign();
+        let m = lookup("llama2-7b").unwrap();
+        let cells = c.sweep_input(&m, &mut Rng::new(4));
+        let tp: Vec<f64> = cells.iter().map(|c| c.throughput_tok_s()).collect();
+        assert!(tp.last().unwrap() > tp.first().unwrap());
+        // Ratio of successive gains shrinks (concavity/plateau).
+        let gain_early = tp[2] / tp[0];
+        let gain_late = tp[tp.len() - 1] / tp[tp.len() - 3];
+        assert!(gain_early > gain_late, "early {gain_early} late {gain_late}");
+    }
+
+    #[test]
+    fn grid_covers_all_cells() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.grid_levels = vec![8, 64, 512];
+        let c = Campaign::new(Cluster::new(Node::new(swing_node())), cfg);
+        let m = lookup("llama2-7b").unwrap();
+        let cells = c.grid(&m, 3, &mut Rng::new(5));
+        assert_eq!(cells.len(), 9);
+        assert!(cells.iter().all(|c| c.trials.len() <= 3));
+    }
+}

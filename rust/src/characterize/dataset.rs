@@ -1,0 +1,247 @@
+//! Persistence of characterization data: flat trial-level records, CSV
+//! round-trip, and conversion to the shapes the stats layer consumes.
+//! This mirrors the role of the CSV datasets the paper's profiling
+//! framework publishes.
+
+use super::campaign::Cell;
+use crate::stats::anova::Obs;
+use std::path::Path;
+
+/// One trial-level row (the unit of fitting — each trial is an
+/// observation, as in the paper's OLS over all collected runs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Row {
+    pub model_id: String,
+    pub t_in: u32,
+    pub t_out: u32,
+    pub batch: u32,
+    pub trial: u32,
+    pub runtime_s: f64,
+    pub gpu_energy_j: f64,
+    pub cpu_energy_j: f64,
+}
+
+impl Row {
+    pub fn total_energy_j(&self) -> f64 {
+        self.gpu_energy_j + self.cpu_energy_j
+    }
+}
+
+/// Flatten measured cells to trial rows.
+pub fn rows_from_cells(cells: &[Cell]) -> Vec<Row> {
+    let mut rows = Vec::new();
+    for c in cells {
+        for (i, t) in c.trials.iter().enumerate() {
+            rows.push(Row {
+                model_id: c.model_id.clone(),
+                t_in: c.t_in,
+                t_out: c.t_out,
+                batch: c.batch,
+                trial: i as u32,
+                runtime_s: t.runtime_s,
+                gpu_energy_j: t.gpu_energy_j,
+                cpu_energy_j: t.cpu_energy_j,
+            });
+        }
+    }
+    rows
+}
+
+const HEADER: &str = "model,t_in,t_out,batch,trial,runtime_s,gpu_energy_j,cpu_energy_j";
+
+/// Serialize rows to CSV text.
+pub fn to_csv(rows: &[Row]) -> String {
+    let mut out = String::from(HEADER);
+    out.push('\n');
+    for r in rows {
+        out.push_str(&format!(
+            "{},{},{},{},{},{:.9},{:.6},{:.6}\n",
+            r.model_id,
+            r.t_in,
+            r.t_out,
+            r.batch,
+            r.trial,
+            r.runtime_s,
+            r.gpu_energy_j,
+            r.cpu_energy_j
+        ));
+    }
+    out
+}
+
+/// Parse rows from CSV text (inverse of [`to_csv`]).
+pub fn from_csv(text: &str) -> anyhow::Result<Vec<Row>> {
+    let mut lines = text.lines();
+    let header = lines.next().ok_or_else(|| anyhow::anyhow!("empty csv"))?;
+    if header.trim() != HEADER {
+        anyhow::bail!("unexpected csv header: {header}");
+    }
+    let mut rows = Vec::new();
+    for (ln, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() != 8 {
+            anyhow::bail!("line {}: expected 8 fields, got {}", ln + 2, f.len());
+        }
+        rows.push(Row {
+            model_id: f[0].to_string(),
+            t_in: f[1].parse()?,
+            t_out: f[2].parse()?,
+            batch: f[3].parse()?,
+            trial: f[4].parse()?,
+            runtime_s: f[5].parse()?,
+            gpu_energy_j: f[6].parse()?,
+            cpu_energy_j: f[7].parse()?,
+        });
+    }
+    Ok(rows)
+}
+
+/// Write rows to a file.
+pub fn save(rows: &[Row], path: &Path) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, to_csv(rows))?;
+    Ok(())
+}
+
+/// Read rows from a file.
+pub fn load(path: &Path) -> anyhow::Result<Vec<Row>> {
+    from_csv(&std::fs::read_to_string(path)?)
+}
+
+/// Project rows into ANOVA observations with τ_in as factor A and τ_out as
+/// factor B. `metric` selects the response.
+pub fn anova_obs<F: Fn(&Row) -> f64>(rows: &[Row], metric: F) -> Vec<Obs> {
+    rows.iter()
+        .map(|r| Obs {
+            a: r.t_in,
+            b: r.t_out,
+            y: metric(r),
+        })
+        .collect()
+}
+
+/// ANOVA observations grouped per model (blocks for
+/// `stats::two_way_blocked` — the Table-2 "aggregated across all models"
+/// analysis with model as the blocking factor).
+pub fn anova_blocks<F: Fn(&Row) -> f64>(rows: &[Row], metric: F) -> Vec<Vec<Obs>> {
+    let mut ids: Vec<&str> = rows.iter().map(|r| r.model_id.as_str()).collect();
+    ids.sort();
+    ids.dedup();
+    ids.iter()
+        .map(|id| {
+            rows.iter()
+                .filter(|r| r.model_id == *id)
+                .map(|r| Obs {
+                    a: r.t_in,
+                    b: r.t_out,
+                    y: metric(r),
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Regression design for the paper's bilinear model: rows of
+/// [τ_in, τ_out, τ_in·τ_out] plus the response vector.
+pub fn regression_design<F: Fn(&Row) -> f64>(
+    rows: &[Row],
+    metric: F,
+) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let x = rows
+        .iter()
+        .map(|r| {
+            let ti = r.t_in as f64;
+            let to = r.t_out as f64;
+            vec![ti, to, ti * to]
+        })
+        .collect();
+    let y = rows.iter().map(|r| metric(r)).collect();
+    (x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_rows() -> Vec<Row> {
+        vec![
+            Row {
+                model_id: "llama2-7b".into(),
+                t_in: 8,
+                t_out: 32,
+                batch: 32,
+                trial: 0,
+                runtime_s: 1.25,
+                gpu_energy_j: 300.5,
+                cpu_energy_j: 12.75,
+            },
+            Row {
+                model_id: "mixtral-8x7b".into(),
+                t_in: 2048,
+                t_out: 8,
+                batch: 32,
+                trial: 4,
+                runtime_s: 9.5,
+                gpu_energy_j: 8000.0,
+                cpu_energy_j: 150.0,
+            },
+        ]
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let rows = sample_rows();
+        let csv = to_csv(&rows);
+        let back = from_csv(&csv).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].model_id, "llama2-7b");
+        assert!((back[0].runtime_s - 1.25).abs() < 1e-12);
+        assert_eq!(back[1].t_in, 2048);
+    }
+
+    #[test]
+    fn csv_rejects_bad_header() {
+        assert!(from_csv("nope\n1,2,3").is_err());
+        assert!(from_csv("").is_err());
+    }
+
+    #[test]
+    fn csv_rejects_short_line() {
+        let text = format!("{HEADER}\na,1,2\n");
+        assert!(from_csv(&text).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("ecoserve_test_dataset");
+        let path = dir.join("rows.csv");
+        let rows = sample_rows();
+        save(&rows, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), rows.len());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn design_matrix_shape() {
+        let rows = sample_rows();
+        let (x, y) = regression_design(&rows, |r| r.total_energy_j());
+        assert_eq!(x.len(), 2);
+        assert_eq!(x[0], vec![8.0, 32.0, 256.0]);
+        assert!((y[0] - 313.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn anova_projection() {
+        let rows = sample_rows();
+        let obs = anova_obs(&rows, |r| r.runtime_s);
+        assert_eq!(obs.len(), 2);
+        assert_eq!(obs[0].a, 8);
+        assert_eq!(obs[0].b, 32);
+    }
+}

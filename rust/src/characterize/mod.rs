@@ -1,0 +1,10 @@
+//! Characterization study (§5): the experimental campaign over the
+//! simulated cluster and the persistence of its measurements.
+
+pub mod campaign;
+pub mod dataset;
+pub mod pipeline;
+
+pub use campaign::{Campaign, Cell};
+pub use pipeline::{characterize_and_fit, quick_fit, PipelineOutput};
+pub use dataset::{anova_blocks, anova_obs, from_csv, load, regression_design, rows_from_cells, save, to_csv, Row};

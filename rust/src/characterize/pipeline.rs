@@ -1,0 +1,62 @@
+//! Convenience pipeline: the standard "characterize → fit" sequence shared
+//! by the CLI, the examples and the benches, so every consumer runs the
+//! identical protocol.
+
+use super::campaign::Campaign;
+use super::dataset::{rows_from_cells, Row};
+use crate::config::{swing_node, ExperimentConfig, LlmSpec};
+use crate::hardware::Node;
+use crate::models::{fit_all, ModelSet};
+use crate::perfmodel::Cluster;
+use crate::util::Rng;
+
+/// Result of the standard pipeline.
+pub struct PipelineOutput {
+    pub rows: Vec<Row>,
+    pub sets: Vec<ModelSet>,
+}
+
+/// Run the grid campaign for `specs` and fit e_K/r_K per model.
+pub fn characterize_and_fit(
+    specs: &[LlmSpec],
+    cfg: &ExperimentConfig,
+    trials_per_cell: usize,
+    rng: &mut Rng,
+) -> anyhow::Result<PipelineOutput> {
+    let campaign = Campaign::new(Cluster::new(Node::new(swing_node())), cfg.clone());
+    let mut rows = Vec::new();
+    for spec in specs {
+        crate::info!("characterizing {} over the token grid", spec.id);
+        let cells = campaign.grid(spec, trials_per_cell, rng);
+        rows.extend(rows_from_cells(&cells));
+    }
+    let sets = fit_all(specs, &rows)?;
+    Ok(PipelineOutput { rows, sets })
+}
+
+/// A faster, coarser pipeline for examples/quick runs: 5-level grid.
+pub fn quick_fit(specs: &[LlmSpec], seed: u64) -> anyhow::Result<PipelineOutput> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.grid_levels = vec![8, 32, 128, 512, 2048];
+    let mut rng = Rng::new(seed);
+    characterize_and_fit(specs, &cfg, 3, &mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::llama_family;
+
+    #[test]
+    fn quick_fit_clears_r2_bar_for_family() {
+        let out = quick_fit(&llama_family(), 7).unwrap();
+        assert_eq!(out.sets.len(), 3);
+        for s in &out.sets {
+            assert!(s.energy.r2 > 0.96, "{}: {}", s.model_id, s.energy.r2);
+            assert!(s.runtime.r2 > 0.96, "{}: {}", s.model_id, s.runtime.r2);
+        }
+        // Larger Llama-2 = more energy per output token (β1 ordering).
+        let a1: Vec<f64> = out.sets.iter().map(|s| s.energy.coefs[1]).collect();
+        assert!(a1[0] < a1[1] && a1[1] < a1[2], "{a1:?}");
+    }
+}

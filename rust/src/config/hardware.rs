@@ -1,0 +1,121 @@
+//! Hardware specifications of the simulated testbed — one node of the
+//! Argonne *Swing* cluster as described in §3.2 of the paper: 8× NVIDIA
+//! A100-40GB (SXM), 2× AMD EPYC 7742 (64 cores each), 1 TB DDR4.
+
+/// GPU device specification (datasheet values).
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// peak dense bf16/fp16 tensor-core throughput, FLOP/s
+    pub peak_flops: f64,
+    /// peak HBM bandwidth, bytes/s
+    pub hbm_bw: f64,
+    /// HBM capacity, bytes
+    pub hbm_bytes: u64,
+    /// board power limit, W
+    pub tdp_w: f64,
+    /// idle draw with context resident, W
+    pub idle_w: f64,
+    /// achievable fraction of peak FLOP/s on dense GEMMs (MFU ceiling)
+    pub flops_eff: f64,
+    /// achievable fraction of peak bandwidth on streaming reads
+    pub bw_eff: f64,
+}
+
+/// A100-SXM4-40GB as deployed in Swing.
+pub fn a100_40gb() -> GpuSpec {
+    GpuSpec {
+        name: "A100-SXM4-40GB",
+        peak_flops: 312e12,
+        hbm_bw: 1555e9,
+        hbm_bytes: 40 * 1024 * 1024 * 1024,
+        tdp_w: 400.0,
+        idle_w: 55.0,
+        flops_eff: 0.52, // typical transformer MFU on HF Accelerate-era stacks
+        bw_eff: 0.78,
+    }
+}
+
+/// CPU socket specification.
+#[derive(Debug, Clone)]
+pub struct CpuSpec {
+    pub name: &'static str,
+    pub cores: u32,
+    /// socket TDP, W
+    pub tdp_w: f64,
+    /// socket idle draw, W
+    pub idle_w: f64,
+    /// per-core dynamic power at full load, W
+    pub core_active_w: f64,
+}
+
+/// AMD EPYC 7742 (Rome, 64 cores, 225 W).
+pub fn epyc_7742() -> CpuSpec {
+    CpuSpec {
+        name: "EPYC-7742",
+        cores: 64,
+        tdp_w: 225.0,
+        idle_w: 90.0,
+        core_active_w: (225.0 - 90.0) / 64.0,
+    }
+}
+
+/// Full node topology.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub gpu: GpuSpec,
+    pub n_gpus: u32,
+    pub cpu: CpuSpec,
+    pub n_sockets: u32,
+    pub ram_bytes: u64,
+    /// inter-GPU interconnect bandwidth per direction, bytes/s (NVLink3)
+    pub nvlink_bw: f64,
+    /// fixed per-kernel launch overhead, seconds
+    pub launch_overhead_s: f64,
+}
+
+/// The Swing node used throughout the paper.
+pub fn swing_node() -> NodeSpec {
+    NodeSpec {
+        gpu: a100_40gb(),
+        n_gpus: 8,
+        cpu: epyc_7742(),
+        n_sockets: 2,
+        ram_bytes: 1024 * 1024 * 1024 * 1024,
+        nvlink_bw: 300e9,
+        launch_overhead_s: 40e-6,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn datasheet_sanity() {
+        let g = a100_40gb();
+        assert_eq!(g.peak_flops, 312e12);
+        assert!(g.idle_w < g.tdp_w);
+        assert!(g.flops_eff > 0.0 && g.flops_eff <= 1.0);
+        let c = epyc_7742();
+        assert_eq!(c.cores, 64);
+        assert!(c.idle_w + c.core_active_w * c.cores as f64 <= c.tdp_w + 1e-9);
+    }
+
+    #[test]
+    fn swing_matches_paper() {
+        let n = swing_node();
+        assert_eq!(n.n_gpus, 8);
+        assert_eq!(n.n_sockets, 2);
+        assert_eq!(n.ram_bytes, 1 << 40);
+    }
+
+    #[test]
+    fn largest_model_fits_node() {
+        // Llama-2 70B needs 4× A100-40GB per Table 1; weights must fit.
+        let n = swing_node();
+        let l70 = crate::config::zoo::lookup("llama2-70b").unwrap();
+        let per_gpu = l70.weight_bytes() / l70.n_gpus as u64;
+        assert!(per_gpu < n.gpu.hbm_bytes, "weights must shard into HBM");
+    }
+}

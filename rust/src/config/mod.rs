@@ -1,0 +1,10 @@
+//! Configuration layer: the Table-1 model zoo (real + proxy architectures),
+//! the simulated Swing-node hardware spec, and experiment/serving knobs.
+
+pub mod hardware;
+pub mod serve;
+pub mod zoo;
+
+pub use hardware::{a100_40gb, epyc_7742, swing_node, CpuSpec, GpuSpec, NodeSpec};
+pub use serve::{ExperimentConfig, Partition};
+pub use zoo::{llama_family, lookup, zoo, Arch, Attention, LlmSpec, ProxyArch};

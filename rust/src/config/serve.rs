@@ -1,0 +1,129 @@
+//! Serving / experiment configuration shared by the CLI, the campaign
+//! driver, the scheduler and the online coordinator.
+
+/// Data-center partition: which models are hosted and what fraction of the
+/// workload capacity each owns (the paper's γ_K, §4/§6.3).
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub model_ids: Vec<String>,
+    pub gammas: Vec<f64>,
+}
+
+impl Partition {
+    /// The paper's case study: Llama-2 {7B, 13B, 70B} with
+    /// γ = (0.05, 0.20, 0.75).
+    pub fn paper_case_study() -> Partition {
+        Partition {
+            model_ids: vec![
+                "llama2-7b".to_string(),
+                "llama2-13b".to_string(),
+                "llama2-70b".to_string(),
+            ],
+            gammas: vec![0.05, 0.20, 0.75],
+        }
+    }
+
+    /// Validate: gammas in (0,1), summing to 1, one per model.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.model_ids.len() != self.gammas.len() {
+            anyhow::bail!(
+                "partition has {} models but {} gammas",
+                self.model_ids.len(),
+                self.gammas.len()
+            );
+        }
+        if self.model_ids.is_empty() {
+            anyhow::bail!("partition is empty");
+        }
+        for (&g, id) in self.gammas.iter().zip(&self.model_ids) {
+            if !(0.0..=1.0).contains(&g) || g == 0.0 {
+                anyhow::bail!("gamma for {id} must be in (0,1], got {g}");
+            }
+        }
+        let sum: f64 = self.gammas.iter().sum();
+        if (sum - 1.0).abs() > 1e-6 {
+            anyhow::bail!("gammas must sum to 1, got {sum}");
+        }
+        Ok(())
+    }
+}
+
+/// Experiment-wide configuration knobs with the paper's defaults.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// fixed batch size (§5.1: 32)
+    pub batch_size: u32,
+    /// input-token sweep for Fig. 1 (8..2048 powers of two)
+    pub input_sweep: Vec<u32>,
+    /// output-token sweep for Fig. 2 (8..4096 powers of two)
+    pub output_sweep: Vec<u32>,
+    /// fixed output size for Fig. 1
+    pub fixed_output: u32,
+    /// fixed input size for Fig. 2
+    pub fixed_input: u32,
+    /// grid levels for ANOVA/fits (8..2048 powers of two)
+    pub grid_levels: Vec<u32>,
+    /// RNG seed
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        let pow2 = |lo: u32, hi: u32| -> Vec<u32> {
+            let mut v = Vec::new();
+            let mut x = lo;
+            while x <= hi {
+                v.push(x);
+                x *= 2;
+            }
+            v
+        };
+        ExperimentConfig {
+            batch_size: 32,
+            input_sweep: pow2(8, 2048),
+            output_sweep: pow2(8, 4096),
+            fixed_output: 32,
+            fixed_input: 32,
+            grid_levels: pow2(8, 2048),
+            seed: 0xEC0_5E27E,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_partition_validates() {
+        let p = Partition::paper_case_study();
+        p.validate().unwrap();
+        assert_eq!(p.gammas, vec![0.05, 0.20, 0.75]);
+    }
+
+    #[test]
+    fn bad_partitions_rejected() {
+        let mut p = Partition::paper_case_study();
+        p.gammas = vec![0.5, 0.2, 0.2];
+        assert!(p.validate().is_err()); // doesn't sum to 1
+        p.gammas = vec![0.5, 0.5];
+        assert!(p.validate().is_err()); // length mismatch
+        let empty = Partition {
+            model_ids: vec![],
+            gammas: vec![],
+        };
+        assert!(empty.validate().is_err());
+    }
+
+    #[test]
+    fn default_sweeps_match_paper() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.batch_size, 32);
+        assert_eq!(c.input_sweep.first(), Some(&8));
+        assert_eq!(c.input_sweep.last(), Some(&2048));
+        assert_eq!(c.output_sweep.last(), Some(&4096));
+        assert_eq!(c.fixed_output, 32);
+        assert_eq!(c.fixed_input, 32);
+        assert_eq!(c.grid_levels.len(), 9); // 8,16,...,2048
+    }
+}

@@ -1,0 +1,453 @@
+//! The LLM zoo: the seven models of Table 1 with (a) the published
+//! architecture parameters used by the analytical FLOP/byte model and
+//! (b) the scaled-down *proxy* architecture that is actually compiled by
+//! the L2 JAX layer and served through PJRT.
+//!
+//! Accuracy values `A_K` are the Hugging Face Open-LLM-Leaderboard averages
+//! quoted in Table 1 of the paper.
+
+/// Attention arrangement of a decoder architecture.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Attention {
+    /// full multi-head attention (n_kv_heads == n_heads)
+    MultiHead,
+    /// grouped-query attention with the given number of KV heads
+    GroupedQuery,
+    /// multi-query attention (a single KV head)
+    MultiQuery,
+}
+
+/// Architecture of one LLM, sufficient for FLOP/byte accounting.
+#[derive(Debug, Clone)]
+pub struct Arch {
+    pub n_layers: u32,
+    pub d_model: u32,
+    pub n_heads: u32,
+    pub n_kv_heads: u32,
+    pub d_ff: u32,
+    pub vocab: u32,
+    /// total experts per FFN block (1 = dense)
+    pub n_experts: u32,
+    /// experts active per token (top-k routing; 1 for dense)
+    pub experts_active: u32,
+    /// bytes per weight element as deployed (fp16/bf16 = 2)
+    pub dtype_bytes: u32,
+}
+
+impl Arch {
+    pub fn attention(&self) -> Attention {
+        if self.n_kv_heads == self.n_heads {
+            Attention::MultiHead
+        } else if self.n_kv_heads == 1 {
+            Attention::MultiQuery
+        } else {
+            Attention::GroupedQuery
+        }
+    }
+
+    pub fn head_dim(&self) -> u32 {
+        self.d_model / self.n_heads
+    }
+
+    pub fn is_moe(&self) -> bool {
+        self.n_experts > 1
+    }
+}
+
+/// Scaled-down proxy architecture compiled by the L2 JAX layer (≈1/1000 of
+/// the real model) so that the full serving stack runs on the CPU PJRT
+/// backend with real tensors.
+#[derive(Debug, Clone)]
+pub struct ProxyArch {
+    pub n_layers: u32,
+    pub d_model: u32,
+    pub n_heads: u32,
+    pub n_kv_heads: u32,
+    pub d_ff: u32,
+    pub vocab: u32,
+    pub n_experts: u32,
+    pub experts_active: u32,
+    /// maximum sequence length baked into the static KV cache
+    pub max_seq: u32,
+}
+
+/// One entry of the model zoo (Table 1 row + architecture).
+#[derive(Debug, Clone)]
+pub struct LlmSpec {
+    /// stable identifier used in CLI flags, artifacts and results
+    pub id: &'static str,
+    /// display name as printed in the paper's tables
+    pub display: &'static str,
+    /// total parameter count
+    pub n_params: u64,
+    /// parameters touched per token (differs from `n_params` for MoE)
+    pub n_params_active: u64,
+    /// Table 1: weights footprint in GB
+    pub vram_gb: f64,
+    /// Table 1: minimum number of A100-40GB needed (tensor-parallel degree)
+    pub n_gpus: u32,
+    /// Table 1: HF leaderboard average accuracy A_K, percent
+    pub accuracy: f64,
+    pub arch: Arch,
+    pub proxy: ProxyArch,
+}
+
+impl LlmSpec {
+    /// Weight bytes resident across the tensor-parallel group.
+    pub fn weight_bytes(&self) -> u64 {
+        self.n_params * self.arch.dtype_bytes as u64
+    }
+
+    /// Weight bytes *read per token* during decode (active parameters only).
+    pub fn active_weight_bytes(&self) -> u64 {
+        self.n_params_active * self.arch.dtype_bytes as u64
+    }
+
+    /// KV-cache bytes appended per token across all layers.
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        let a = &self.arch;
+        2 * a.n_layers as u64 * a.n_kv_heads as u64 * a.head_dim() as u64
+            * a.dtype_bytes as u64
+    }
+}
+
+/// The full zoo in Table 1 order.
+pub fn zoo() -> Vec<LlmSpec> {
+    vec![
+        LlmSpec {
+            id: "falcon-7b",
+            display: "Falcon (7B)",
+            n_params: 7_217_189_760,
+            n_params_active: 7_217_189_760,
+            vram_gb: 14.48,
+            n_gpus: 1,
+            accuracy: 44.17,
+            arch: Arch {
+                n_layers: 32,
+                d_model: 4544,
+                n_heads: 71,
+                n_kv_heads: 1, // MQA
+                d_ff: 4 * 4544,
+                vocab: 65024,
+                n_experts: 1,
+                experts_active: 1,
+                dtype_bytes: 2,
+            },
+            proxy: ProxyArch {
+                n_layers: 4,
+                d_model: 128,
+                n_heads: 4,
+                n_kv_heads: 1,
+                d_ff: 512,
+                vocab: 512,
+                n_experts: 1,
+                experts_active: 1,
+                max_seq: 256,
+            },
+        },
+        LlmSpec {
+            id: "falcon-40b",
+            display: "Falcon (40B)",
+            n_params: 41_839_749_120,
+            n_params_active: 41_839_749_120,
+            vram_gb: 83.66,
+            n_gpus: 3,
+            accuracy: 58.07,
+            arch: Arch {
+                n_layers: 60,
+                d_model: 8192,
+                n_heads: 128,
+                n_kv_heads: 8,
+                d_ff: 4 * 8192,
+                vocab: 65024,
+                n_experts: 1,
+                experts_active: 1,
+                dtype_bytes: 2,
+            },
+            proxy: ProxyArch {
+                n_layers: 6,
+                d_model: 256,
+                n_heads: 8,
+                n_kv_heads: 2,
+                d_ff: 1024,
+                vocab: 512,
+                n_experts: 1,
+                experts_active: 1,
+                max_seq: 256,
+            },
+        },
+        LlmSpec {
+            id: "llama2-7b",
+            display: "Llama-2 (7B)",
+            n_params: 6_738_415_616,
+            n_params_active: 6_738_415_616,
+            vram_gb: 13.48,
+            n_gpus: 1,
+            accuracy: 50.97,
+            arch: Arch {
+                n_layers: 32,
+                d_model: 4096,
+                n_heads: 32,
+                n_kv_heads: 32,
+                d_ff: 11008,
+                vocab: 32000,
+                n_experts: 1,
+                experts_active: 1,
+                dtype_bytes: 2,
+            },
+            proxy: ProxyArch {
+                n_layers: 4,
+                d_model: 128,
+                n_heads: 4,
+                n_kv_heads: 4,
+                d_ff: 352,
+                vocab: 512,
+                n_experts: 1,
+                experts_active: 1,
+                max_seq: 256,
+            },
+        },
+        LlmSpec {
+            id: "llama2-13b",
+            display: "Llama-2 (13B)",
+            n_params: 13_015_864_320,
+            n_params_active: 13_015_864_320,
+            vram_gb: 26.03,
+            n_gpus: 1,
+            accuracy: 55.69,
+            arch: Arch {
+                n_layers: 40,
+                d_model: 5120,
+                n_heads: 40,
+                n_kv_heads: 40,
+                d_ff: 13824,
+                vocab: 32000,
+                n_experts: 1,
+                experts_active: 1,
+                dtype_bytes: 2,
+            },
+            proxy: ProxyArch {
+                n_layers: 5,
+                d_model: 160,
+                n_heads: 5,
+                n_kv_heads: 5,
+                d_ff: 432,
+                vocab: 512,
+                n_experts: 1,
+                experts_active: 1,
+                max_seq: 256,
+            },
+        },
+        LlmSpec {
+            id: "llama2-70b",
+            display: "Llama-2 (70B)",
+            n_params: 68_976_648_192,
+            n_params_active: 68_976_648_192,
+            vram_gb: 137.98,
+            n_gpus: 4,
+            accuracy: 64.52,
+            arch: Arch {
+                n_layers: 80,
+                d_model: 8192,
+                n_heads: 64,
+                n_kv_heads: 8, // GQA
+                d_ff: 28672,
+                vocab: 32000,
+                n_experts: 1,
+                experts_active: 1,
+                dtype_bytes: 2,
+            },
+            proxy: ProxyArch {
+                n_layers: 8,
+                d_model: 256,
+                n_heads: 8,
+                n_kv_heads: 2,
+                d_ff: 896,
+                vocab: 512,
+                n_experts: 1,
+                experts_active: 1,
+                max_seq: 256,
+            },
+        },
+        LlmSpec {
+            id: "mistral-7b",
+            display: "Mistral (7B)",
+            n_params: 7_241_732_096,
+            n_params_active: 7_241_732_096,
+            vram_gb: 15.00,
+            n_gpus: 1,
+            accuracy: 60.97,
+            arch: Arch {
+                n_layers: 32,
+                d_model: 4096,
+                n_heads: 32,
+                n_kv_heads: 8,
+                d_ff: 14336,
+                vocab: 32000,
+                n_experts: 1,
+                experts_active: 1,
+                dtype_bytes: 2,
+            },
+            proxy: ProxyArch {
+                n_layers: 4,
+                d_model: 128,
+                n_heads: 4,
+                n_kv_heads: 1,
+                d_ff: 448,
+                vocab: 512,
+                n_experts: 1,
+                experts_active: 1,
+                max_seq: 256,
+            },
+        },
+        LlmSpec {
+            id: "mixtral-8x7b",
+            display: "Mixtral (8x7B)",
+            n_params: 46_702_792_704,
+            // two experts of eight active per token plus shared attention
+            n_params_active: 12_879_464_448,
+            vram_gb: 93.37,
+            n_gpus: 3,
+            accuracy: 68.47,
+            arch: Arch {
+                n_layers: 32,
+                d_model: 4096,
+                n_heads: 32,
+                n_kv_heads: 8,
+                d_ff: 14336,
+                vocab: 32000,
+                n_experts: 8,
+                experts_active: 2,
+                dtype_bytes: 2,
+            },
+            proxy: ProxyArch {
+                n_layers: 4,
+                d_model: 128,
+                n_heads: 4,
+                n_kv_heads: 1,
+                d_ff: 448,
+                vocab: 512,
+                n_experts: 8,
+                experts_active: 2,
+                max_seq: 256,
+            },
+        },
+    ]
+}
+
+/// Look up a spec by id.
+pub fn lookup(id: &str) -> Option<LlmSpec> {
+    zoo().into_iter().find(|m| m.id == id)
+}
+
+/// The case-study subset of §6.3: the three Llama-2 models.
+pub fn llama_family() -> Vec<LlmSpec> {
+    ["llama2-7b", "llama2-13b", "llama2-70b"]
+        .iter()
+        .map(|id| lookup(id).unwrap())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_matches_table1() {
+        let z = zoo();
+        assert_eq!(z.len(), 7);
+        let ids: Vec<&str> = z.iter().map(|m| m.id).collect();
+        assert_eq!(
+            ids,
+            vec![
+                "falcon-7b",
+                "falcon-40b",
+                "llama2-7b",
+                "llama2-13b",
+                "llama2-70b",
+                "mistral-7b",
+                "mixtral-8x7b"
+            ]
+        );
+        // Table 1 constants spot-checks.
+        let l70 = lookup("llama2-70b").unwrap();
+        assert_eq!(l70.n_gpus, 4);
+        assert!((l70.accuracy - 64.52).abs() < 1e-9);
+        assert!((l70.vram_gb - 137.98).abs() < 1e-9);
+        let mix = lookup("mixtral-8x7b").unwrap();
+        assert_eq!(mix.n_gpus, 3);
+        assert!((mix.accuracy - 68.47).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_ordering_matches_paper() {
+        // Within each family larger = more accurate; Mixtral best overall.
+        let z = zoo();
+        let acc = |id: &str| z.iter().find(|m| m.id == id).unwrap().accuracy;
+        assert!(acc("llama2-7b") < acc("llama2-13b"));
+        assert!(acc("llama2-13b") < acc("llama2-70b"));
+        assert!(acc("falcon-7b") < acc("falcon-40b"));
+        assert!(z.iter().all(|m| m.accuracy <= acc("mixtral-8x7b")));
+    }
+
+    #[test]
+    fn vram_consistent_with_params() {
+        // fp16 weights: bytes ≈ vram within ~15% (runtime overhead aside).
+        for m in zoo() {
+            let gb = m.weight_bytes() as f64 / 1e9;
+            let rel = (gb - m.vram_gb).abs() / m.vram_gb;
+            assert!(rel < 0.15, "{}: {} GB vs table {}", m.id, gb, m.vram_gb);
+        }
+    }
+
+    #[test]
+    fn attention_kinds() {
+        assert_eq!(
+            lookup("falcon-7b").unwrap().arch.attention(),
+            Attention::MultiQuery
+        );
+        assert_eq!(
+            lookup("llama2-7b").unwrap().arch.attention(),
+            Attention::MultiHead
+        );
+        assert_eq!(
+            lookup("llama2-70b").unwrap().arch.attention(),
+            Attention::GroupedQuery
+        );
+    }
+
+    #[test]
+    fn moe_active_params_smaller() {
+        let mix = lookup("mixtral-8x7b").unwrap();
+        assert!(mix.arch.is_moe());
+        assert!(mix.n_params_active < mix.n_params / 3);
+        for m in zoo().iter().filter(|m| !m.arch.is_moe()) {
+            assert_eq!(m.n_params, m.n_params_active);
+        }
+    }
+
+    #[test]
+    fn kv_bytes_reflect_gqa() {
+        // Llama-2 7B (MHA) has far more KV per token than 70B (GQA, 8 kv
+        // heads) relative to model size — the well-known GQA saving.
+        let l7 = lookup("llama2-7b").unwrap();
+        let l70 = lookup("llama2-70b").unwrap();
+        assert!(l7.kv_bytes_per_token() > l70.kv_bytes_per_token() / 2);
+    }
+
+    #[test]
+    fn proxy_heads_divide_dims() {
+        for m in zoo() {
+            assert_eq!(m.proxy.d_model % m.proxy.n_heads, 0, "{}", m.id);
+            assert_eq!(m.proxy.n_heads % m.proxy.n_kv_heads, 0, "{}", m.id);
+            assert_eq!(m.arch.d_model % m.arch.n_heads, 0, "{}", m.id);
+        }
+    }
+
+    #[test]
+    fn llama_family_subset() {
+        let fam = llama_family();
+        assert_eq!(fam.len(), 3);
+        assert!(fam.windows(2).all(|w| w[0].n_params < w[1].n_params));
+    }
+}

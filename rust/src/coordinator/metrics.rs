@@ -1,0 +1,165 @@
+//! Serving metrics: per-model counters and latency digests reported by the
+//! coordinator (the serving-side analogue of the paper's measurement
+//! tables).
+
+use crate::stats::quantile;
+use std::collections::BTreeMap;
+
+/// Accumulated metrics for one model.
+#[derive(Debug, Clone, Default)]
+pub struct ModelMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub tokens_generated: u64,
+    pub prompt_tokens: u64,
+    latencies_s: Vec<f64>,
+    ttfts_s: Vec<f64>,
+    queue_s: Vec<f64>,
+    pub busy_s: f64,
+}
+
+impl ModelMetrics {
+    pub fn record_batch(
+        &mut self,
+        n_requests: usize,
+        prompt_tokens: u64,
+        gen_tokens: u64,
+        latency_s: f64,
+        ttft_s: f64,
+        queue_s: &[f64],
+    ) {
+        self.requests += n_requests as u64;
+        self.batches += 1;
+        self.tokens_generated += gen_tokens;
+        self.prompt_tokens += prompt_tokens;
+        self.busy_s += latency_s;
+        for _ in 0..n_requests {
+            self.latencies_s.push(latency_s);
+            self.ttfts_s.push(ttft_s);
+        }
+        self.queue_s.extend_from_slice(queue_s);
+    }
+
+    pub fn p50_latency_s(&self) -> f64 {
+        if self.latencies_s.is_empty() {
+            return f64::NAN;
+        }
+        quantile(&self.latencies_s, 0.5)
+    }
+
+    pub fn p95_latency_s(&self) -> f64 {
+        if self.latencies_s.is_empty() {
+            return f64::NAN;
+        }
+        quantile(&self.latencies_s, 0.95)
+    }
+
+    pub fn mean_ttft_s(&self) -> f64 {
+        if self.ttfts_s.is_empty() {
+            return f64::NAN;
+        }
+        self.ttfts_s.iter().sum::<f64>() / self.ttfts_s.len() as f64
+    }
+
+    pub fn mean_queue_s(&self) -> f64 {
+        if self.queue_s.is_empty() {
+            return 0.0;
+        }
+        self.queue_s.iter().sum::<f64>() / self.queue_s.len() as f64
+    }
+
+    /// Decode throughput while busy (generated tokens per busy second).
+    pub fn tokens_per_busy_s(&self) -> f64 {
+        if self.busy_s <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / self.busy_s
+    }
+}
+
+/// Snapshot across all models.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub per_model: BTreeMap<String, ModelMetrics>,
+    pub wall_s: f64,
+}
+
+impl Metrics {
+    pub fn model_mut(&mut self, id: &str) -> &mut ModelMetrics {
+        self.per_model.entry(id.to_string()).or_default()
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.per_model.values().map(|m| m.requests).sum()
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.per_model.values().map(|m| m.tokens_generated).sum()
+    }
+
+    /// End-to-end throughput over the serving wall-clock.
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.total_tokens() as f64 / self.wall_s
+    }
+
+    pub fn report(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "served {} requests / {} gen tokens in {:.2}s ({:.1} tok/s)",
+            self.total_requests(),
+            self.total_tokens(),
+            self.wall_s,
+            self.throughput_tok_s()
+        );
+        for (id, m) in &self.per_model {
+            let _ = writeln!(
+                out,
+                "  {id:<14} req={:<5} batches={:<4} p50={:.3}s p95={:.3}s ttft={:.3}s queue={:.3}s busy-tok/s={:.1}",
+                m.requests,
+                m.batches,
+                m.p50_latency_s(),
+                m.p95_latency_s(),
+                m.mean_ttft_s(),
+                m.mean_queue_s(),
+                m.tokens_per_busy_s(),
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut m = Metrics::default();
+        m.model_mut("llama2-7b")
+            .record_batch(2, 20, 16, 0.5, 0.1, &[0.01, 0.02]);
+        m.model_mut("llama2-7b")
+            .record_batch(1, 10, 8, 1.5, 0.2, &[0.03]);
+        m.wall_s = 2.0;
+        assert_eq!(m.total_requests(), 3);
+        assert_eq!(m.total_tokens(), 24);
+        assert!((m.throughput_tok_s() - 12.0).abs() < 1e-9);
+        let mm = &m.per_model["llama2-7b"];
+        assert_eq!(mm.batches, 2);
+        assert!((mm.p50_latency_s() - 0.5).abs() < 1e-9);
+        assert!((mm.mean_queue_s() - 0.02).abs() < 1e-9);
+        assert!(m.report().contains("llama2-7b"));
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::default();
+        assert_eq!(m.total_requests(), 0);
+        assert_eq!(m.throughput_tok_s(), 0.0);
+        assert!(!m.report().is_empty());
+    }
+}

@@ -1,0 +1,13 @@
+//! The online serving coordinator: ζ-aware router with γ-quota admission,
+//! per-model dynamic batching, an engine-host thread executing the AOT
+//! artifacts through PJRT, and serving metrics.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batch, Batcher, Request};
+pub use metrics::{Metrics, ModelMetrics};
+pub use router::{Policy, QuotaTracker, Router};
+pub use server::{serve, Response, ServeConfig};

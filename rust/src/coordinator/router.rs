@@ -1,0 +1,236 @@
+//! The ζ-aware online router: the paper's offline objective applied per
+//! arriving query, plus γ-quota admission — how a deployment would apply
+//! the fitted models in real time (§7's "real-time systems" outlook).
+
+use crate::models::{ModelSet, Normalizer};
+use crate::workload::Query;
+
+/// Routing policies supported by the coordinator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// ζ-blended cost minimization over the fitted models
+    ZetaCost,
+    /// cyclic, query-independent
+    RoundRobin,
+    /// everything to one model (index)
+    Single(usize),
+}
+
+/// Tracks the γ partition quota: a model may run ahead of its share by a
+/// bounded slack before the router diverts queries elsewhere.
+#[derive(Debug, Clone)]
+pub struct QuotaTracker {
+    gammas: Vec<f64>,
+    counts: Vec<u64>,
+    slack: f64,
+}
+
+impl QuotaTracker {
+    pub fn new(gammas: &[f64], slack: f64) -> QuotaTracker {
+        QuotaTracker {
+            gammas: gammas.to_vec(),
+            counts: vec![0; gammas.len()],
+            slack,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Would routing one more query to `k` keep it within quota? A grace
+    /// of one query keeps the tracker well-defined at cold start; the
+    /// long-run share converges to γ_k + slack.
+    pub fn admits(&self, k: usize) -> bool {
+        let total = self.total() as f64 + 1.0;
+        self.counts[k] as f64 + 1.0 <= (self.gammas[k] + self.slack) * total + 1.0
+    }
+
+    pub fn record(&mut self, k: usize) {
+        self.counts[k] += 1;
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+}
+
+/// The router proper. Pure data — lives on the coordinator thread.
+#[derive(Debug, Clone)]
+pub struct Router {
+    pub sets: Vec<ModelSet>,
+    pub norm: Normalizer,
+    pub zeta: f64,
+    pub policy: Policy,
+    pub quota: Option<QuotaTracker>,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(sets: Vec<ModelSet>, norm: Normalizer, zeta: f64, policy: Policy) -> Router {
+        Router {
+            sets,
+            norm,
+            zeta,
+            policy,
+            quota: None,
+            rr_next: 0,
+        }
+    }
+
+    /// Enable γ-quota admission with the given slack.
+    pub fn with_quota(mut self, gammas: &[f64], slack: f64) -> Router {
+        assert_eq!(gammas.len(), self.sets.len());
+        self.quota = Some(QuotaTracker::new(gammas, slack));
+        self
+    }
+
+    /// Eq. 2 summand for (query, model k).
+    pub fn cost(&self, q: &Query, k: usize) -> f64 {
+        let s = &self.sets[k];
+        self.zeta * self.norm.energy_hat(s, q)
+            - (1.0 - self.zeta) * self.norm.accuracy_hat(s, q)
+    }
+
+    /// Route one query → model index.
+    pub fn route(&mut self, q: &Query) -> usize {
+        let k = match self.policy {
+            Policy::Single(k) => k.min(self.sets.len() - 1),
+            Policy::RoundRobin => {
+                let k = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.sets.len();
+                k
+            }
+            Policy::ZetaCost => {
+                // Rank by cost; take the best admitted model.
+                let mut order: Vec<usize> = (0..self.sets.len()).collect();
+                order.sort_by(|&a, &b| {
+                    self.cost(q, a).partial_cmp(&self.cost(q, b)).unwrap()
+                });
+                let admitted = order
+                    .iter()
+                    .copied()
+                    .find(|&k| self.quota.as_ref().map(|t| t.admits(k)).unwrap_or(true));
+                admitted.unwrap_or(order[0])
+            }
+        };
+        if let Some(t) = self.quota.as_mut() {
+            t.record(k);
+        }
+        k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{AccuracyModel, Target, WorkloadModel};
+
+    fn sets() -> Vec<ModelSet> {
+        let mk = |id: &str, scale: f64, acc: f64| ModelSet {
+            model_id: id.into(),
+            energy: WorkloadModel {
+                model_id: id.into(),
+                target: Target::EnergyJ,
+                coefs: [0.6 * scale, 9.0 * scale, 0.004 * scale],
+                r2: 0.97,
+                f_stat: 1e3,
+                p_value: 0.0,
+                n_obs: 100,
+            },
+            runtime: WorkloadModel {
+                model_id: id.into(),
+                target: Target::RuntimeS,
+                coefs: [2e-3, 3e-2, 1e-5],
+                r2: 0.97,
+                f_stat: 1e3,
+                p_value: 0.0,
+                n_obs: 100,
+            },
+            accuracy: AccuracyModel::new(id, acc),
+        };
+        vec![
+            mk("small", 1.0, 50.97),
+            mk("mid", 1.8, 55.69),
+            mk("big", 6.5, 64.52),
+        ]
+    }
+
+    fn q(id: u32, t_in: u32, t_out: u32) -> Query {
+        Query { id, t_in, t_out }
+    }
+
+    fn norm_for(sets: &[ModelSet]) -> Normalizer {
+        let probe: Vec<Query> = (0..100)
+            .map(|i| q(i, 8 + 20 * i, 8 + 40 * i))
+            .collect();
+        Normalizer::from_workload(sets, &probe)
+    }
+
+    #[test]
+    fn zeta_extremes_route_to_expected_models() {
+        let s = sets();
+        let n = norm_for(&s);
+        let mut energy_router = Router::new(s.clone(), n, 1.0, Policy::ZetaCost);
+        assert_eq!(energy_router.route(&q(0, 100, 100)), 0); // cheapest
+
+        let mut acc_router = Router::new(s, n, 0.0, Policy::ZetaCost);
+        assert_eq!(acc_router.route(&q(0, 100, 100)), 2); // most accurate
+    }
+
+    #[test]
+    fn quota_diverts_overflow() {
+        let s = sets();
+        let n = norm_for(&s);
+        // Pure accuracy → everything wants "big", but γ caps it at 50%.
+        let mut r = Router::new(s, n, 0.0, Policy::ZetaCost)
+            .with_quota(&[0.25, 0.25, 0.5], 0.0);
+        let mut counts = [0u64; 3];
+        for i in 0..200 {
+            counts[r.route(&q(i, 100, 100))] += 1;
+        }
+        let total: u64 = counts.iter().sum();
+        assert_eq!(total, 200);
+        assert!(counts[2] <= (0.5 * 200.0) as u64 + 2, "{counts:?}");
+        assert!(counts[1] > 0, "{counts:?}"); // overflow lands on next-best
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let s = sets();
+        let n = norm_for(&s);
+        let mut r = Router::new(s, n, 0.5, Policy::RoundRobin);
+        let ks: Vec<usize> = (0..6).map(|i| r.route(&q(i, 10, 10))).collect();
+        assert_eq!(ks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn single_policy_fixed() {
+        let s = sets();
+        let n = norm_for(&s);
+        let mut r = Router::new(s, n, 0.5, Policy::Single(1));
+        assert!((0..10).all(|i| r.route(&q(i, 10, 10)) == 1));
+    }
+
+    #[test]
+    fn quota_tracker_math() {
+        let mut t = QuotaTracker::new(&[0.5, 0.5], 0.0);
+        assert!(t.admits(0)); // cold start: grace admits the first query
+        t.record(0);
+        t.record(0);
+        // counts (2,0): one more on 0 would be 3 > 0.5·3 + 1 = 2.5 → denied.
+        assert!(!t.admits(0));
+        assert!(t.admits(1));
+        t.record(1);
+        assert_eq!(t.counts(), &[2, 1]);
+        assert_eq!(t.total(), 3);
+        // Long-run: shares converge to γ.
+        let mut t2 = QuotaTracker::new(&[0.25, 0.75], 0.0);
+        for _ in 0..1000 {
+            let k = if t2.admits(0) { 0 } else { 1 };
+            t2.record(k);
+        }
+        let share0 = t2.counts()[0] as f64 / t2.total() as f64;
+        assert!((share0 - 0.25).abs() < 0.01, "share0={share0}");
+    }
+}

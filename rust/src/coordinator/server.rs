@@ -1,0 +1,351 @@
+//! The serving coordinator: an engine-host thread owning all PJRT
+//! executables (they are `!Send`), fed batches over a channel by the
+//! routing/batching front-end. Responses flow back with full timing.
+//!
+//! Topology:
+//!
+//! ```text
+//!   requests ──► Router (ζ-cost / γ-quota) ──► per-model Batcher ──┐
+//!                                                                   │ mpsc
+//!   responses ◄── metrics ◄───────────── EngineHost thread ◄────────┘
+//!                                        (PJRT prefill/decode)
+//! ```
+
+use super::batcher::{Batch, Batcher, Request};
+use super::metrics::Metrics;
+use super::router::Router;
+use crate::util::Stopwatch;
+use crate::workload::Query;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One served response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub model_id: String,
+    pub tokens: Vec<i32>,
+    pub queue_s: f64,
+    pub ttft_s: f64,
+    pub latency_s: f64,
+}
+
+enum HostMsg {
+    Run(Batch),
+    Shutdown,
+}
+
+struct HostReply {
+    batch: Batch,
+    outputs: Vec<Vec<i32>>,
+    ttft_s: f64,
+    latency_s: f64,
+    started: Instant,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub artifacts_dir: PathBuf,
+    pub model_ids: Vec<String>,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl ServeConfig {
+    pub fn new(artifacts_dir: impl Into<PathBuf>, model_ids: &[&str]) -> ServeConfig {
+        ServeConfig {
+            artifacts_dir: artifacts_dir.into(),
+            model_ids: model_ids.iter().map(|s| s.to_string()).collect(),
+            max_batch: 8,
+            max_wait: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Run a workload through the full serving stack. `arrivals` pairs each
+/// request with the query shape the router scores it by.
+///
+/// This is a *closed-loop offline replay*: requests are routed and batched
+/// in arrival order, the engine host executes batches FIFO, and the call
+/// returns when everything finished. (An open-loop arrival process is
+/// layered on top by `examples/online_router.rs`.)
+pub fn serve(
+    cfg: &ServeConfig,
+    mut router: Router,
+    requests: Vec<(Request, Query)>,
+) -> anyhow::Result<(Vec<Response>, Metrics)> {
+    let (tx_host, rx_host) = mpsc::channel::<HostMsg>();
+    let (tx_reply, rx_reply) = mpsc::channel::<anyhow::Result<HostReply>>();
+
+    // ---- engine-host thread ------------------------------------------------
+    let host_cfg = cfg.clone();
+    let host = std::thread::Builder::new()
+        .name("engine-host".into())
+        .spawn(move || {
+            let registry = match crate::runtime::Registry::load(
+                &host_cfg.artifacts_dir,
+                &host_cfg.model_ids,
+                false,
+            ) {
+                Ok(r) => r,
+                Err(e) => {
+                    let _ = tx_reply.send(Err(e));
+                    return;
+                }
+            };
+            // Signal readiness with an empty reply.
+            let _ = tx_reply.send(Ok(HostReply {
+                batch: Batch {
+                    model_id: String::new(),
+                    requests: vec![],
+                },
+                outputs: vec![],
+                ttft_s: 0.0,
+                latency_s: 0.0,
+                started: Instant::now(),
+            }));
+            while let Ok(msg) = rx_host.recv() {
+                match msg {
+                    HostMsg::Shutdown => break,
+                    HostMsg::Run(batch) => {
+                        let started = Instant::now();
+                        let result = (|| -> anyhow::Result<HostReply> {
+                            let engine = registry
+                                .engine(&batch.model_id)
+                                .ok_or_else(|| anyhow::anyhow!("no engine {}", batch.model_id))?;
+                            let prompts: Vec<Vec<i32>> =
+                                batch.requests.iter().map(|r| r.prompt.clone()).collect();
+                            let n_gen: Vec<usize> =
+                                batch.requests.iter().map(|r| r.n_gen).collect();
+                            let out = engine.generate(&prompts, &n_gen)?;
+                            Ok(HostReply {
+                                outputs: out.tokens,
+                                ttft_s: out.ttft_s,
+                                latency_s: out.latency_s,
+                                batch,
+                                started,
+                            })
+                        })();
+                        if tx_reply.send(result).is_err() {
+                            break;
+                        }
+                    }
+                }
+            }
+        })?;
+
+    // Wait for engine compilation (readiness signal or error).
+    match rx_reply.recv() {
+        Ok(Ok(_)) => {}
+        Ok(Err(e)) => {
+            let _ = host.join();
+            return Err(e);
+        }
+        Err(_) => anyhow::bail!("engine host died during startup"),
+    }
+
+    // ---- route + batch + dispatch ------------------------------------------
+    let sw = Stopwatch::start();
+    let mut batchers: BTreeMap<String, Batcher> = cfg
+        .model_ids
+        .iter()
+        .map(|id| {
+            (
+                id.clone(),
+                Batcher::new(id, cfg.max_batch, cfg.max_wait),
+            )
+        })
+        .collect();
+
+    let mut in_flight = 0usize;
+    let mut responses: Vec<Response> = Vec::with_capacity(requests.len());
+    let mut metrics = Metrics::default();
+
+    let dispatch = |batch: Batch, in_flight: &mut usize| {
+        *in_flight += 1;
+        tx_host.send(HostMsg::Run(batch)).expect("host alive");
+    };
+
+    let drain =
+        |reply: anyhow::Result<HostReply>,
+         responses: &mut Vec<Response>,
+         metrics: &mut Metrics|
+         -> anyhow::Result<()> {
+            let r = reply?;
+            let queue_s: Vec<f64> = r
+                .batch
+                .requests
+                .iter()
+                .map(|req| r.started.duration_since(req.submitted).as_secs_f64())
+                .collect();
+            let prompt_tokens: u64 =
+                r.batch.requests.iter().map(|x| x.prompt.len() as u64).sum();
+            let gen_tokens: u64 = r.outputs.iter().map(|t| t.len() as u64).sum();
+            metrics.model_mut(&r.batch.model_id).record_batch(
+                r.batch.requests.len(),
+                prompt_tokens,
+                gen_tokens,
+                r.latency_s,
+                r.ttft_s,
+                &queue_s,
+            );
+            for (req, tokens) in r.batch.requests.iter().zip(r.outputs) {
+                responses.push(Response {
+                    id: req.id,
+                    model_id: r.batch.model_id.clone(),
+                    tokens,
+                    queue_s: r.started.duration_since(req.submitted).as_secs_f64(),
+                    ttft_s: r.ttft_s,
+                    latency_s: r.latency_s,
+                });
+            }
+            Ok(())
+        };
+
+    for (req, query) in requests {
+        let k = router.route(&query);
+        let model_id = router.sets[k].model_id.clone();
+        if let Some(batch) = batchers.get_mut(&model_id).expect("routed model hosted").push(req) {
+            dispatch(batch, &mut in_flight);
+        }
+        // Opportunistically collect finished work and poll age flushes.
+        while let Ok(reply) = rx_reply.try_recv() {
+            in_flight -= 1;
+            drain(reply, &mut responses, &mut metrics)?;
+        }
+        let now = Instant::now();
+        for b in batchers.values_mut() {
+            if let Some(batch) = b.poll(now) {
+                dispatch(batch, &mut in_flight);
+            }
+        }
+    }
+    // Final flush.
+    for b in batchers.values_mut() {
+        while let Some(batch) = b.flush() {
+            dispatch(batch, &mut in_flight);
+        }
+    }
+    while in_flight > 0 {
+        let reply = rx_reply.recv().map_err(|_| anyhow::anyhow!("engine host died"))?;
+        in_flight -= 1;
+        drain(reply, &mut responses, &mut metrics)?;
+    }
+
+    let _ = tx_host.send(HostMsg::Shutdown);
+    let _ = host.join();
+
+    metrics.wall_s = sw.elapsed_s();
+    responses.sort_by_key(|r| r.id);
+    Ok((responses, metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::Policy;
+    use crate::models::{AccuracyModel, ModelSet, Normalizer, Target, WorkloadModel};
+    use crate::util::Rng;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn sets(ids: &[&str]) -> Vec<ModelSet> {
+        ids.iter()
+            .enumerate()
+            .map(|(i, id)| ModelSet {
+                model_id: id.to_string(),
+                energy: WorkloadModel {
+                    model_id: id.to_string(),
+                    target: Target::EnergyJ,
+                    coefs: [0.6 * (i + 1) as f64, 9.0 * (i + 1) as f64, 0.004],
+                    r2: 0.97,
+                    f_stat: 1e3,
+                    p_value: 0.0,
+                    n_obs: 10,
+                },
+                runtime: WorkloadModel {
+                    model_id: id.to_string(),
+                    target: Target::RuntimeS,
+                    coefs: [2e-3, 3e-2, 1e-5],
+                    r2: 0.97,
+                    f_stat: 1e3,
+                    p_value: 0.0,
+                    n_obs: 10,
+                },
+                accuracy: AccuracyModel::new(id, 50.0 + 5.0 * i as f64),
+            })
+            .collect()
+    }
+
+    /// Full-stack smoke test: route → batch → PJRT engines → responses.
+    #[test]
+    fn serves_mixed_workload_end_to_end() {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let ids = ["llama2-7b", "llama2-13b"];
+        let cfg = ServeConfig::new(artifacts_dir(), &ids);
+        let s = sets(&ids);
+        let probe: Vec<Query> = (0..10)
+            .map(|i| Query {
+                id: i,
+                t_in: 8 + i,
+                t_out: 4,
+            })
+            .collect();
+        let norm = Normalizer::from_workload(&s, &probe);
+        let router = Router::new(s, norm, 0.5, Policy::RoundRobin);
+
+        let mut rng = Rng::new(1);
+        let requests: Vec<(Request, Query)> = (0..10u64)
+            .map(|id| {
+                let t_in = rng.int_range(2, 20) as usize;
+                let prompt: Vec<i32> =
+                    (0..t_in).map(|_| rng.int_range(1, 500) as i32).collect();
+                let n_gen = rng.int_range(1, 6) as usize;
+                (
+                    Request {
+                        id,
+                        prompt,
+                        n_gen,
+                        submitted: Instant::now(),
+                    },
+                    Query {
+                        id: id as u32,
+                        t_in: t_in as u32,
+                        t_out: n_gen as u32,
+                    },
+                )
+            })
+            .collect();
+        let expected: Vec<usize> = requests.iter().map(|(r, _)| r.n_gen).collect();
+
+        let (responses, metrics) = serve(&cfg, router, requests).unwrap();
+        assert_eq!(responses.len(), 10);
+        for (r, want_n) in responses.iter().zip(expected) {
+            assert_eq!(r.tokens.len(), want_n, "request {}", r.id);
+            assert!(r.latency_s > 0.0);
+            assert!(ids.contains(&r.model_id.as_str()));
+        }
+        assert_eq!(metrics.total_requests(), 10);
+        assert!(metrics.throughput_tok_s() > 0.0);
+        // Round-robin splits across both models.
+        assert_eq!(metrics.per_model.len(), 2);
+    }
+
+    #[test]
+    fn startup_failure_propagates() {
+        let cfg = ServeConfig::new("/nonexistent-artifacts", &["llama2-7b"]);
+        let s = sets(&["llama2-7b"]);
+        let norm = Normalizer::from_workload(&s, &[Query { id: 0, t_in: 8, t_out: 8 }]);
+        let router = Router::new(s, norm, 0.5, Policy::Single(0));
+        let err = serve(&cfg, router, vec![]).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,70 @@
+//! CPU socket behavior model: per-core power draw with residency, matching
+//! what AMD μProf's timechart exposes (per-core power at a polling
+//! interval) and what the paper's §3.2.2 estimator integrates.
+
+use crate::config::CpuSpec;
+
+/// A simulated CPU socket.
+#[derive(Debug, Clone)]
+pub struct Cpu {
+    pub spec: CpuSpec,
+    /// socket id for attribution in telemetry
+    pub socket: u32,
+}
+
+impl Cpu {
+    pub fn new(spec: CpuSpec, socket: u32) -> Cpu {
+        Cpu { spec, socket }
+    }
+
+    /// Power of a single core at `load` ∈ [0,1] (idle share + dynamic).
+    pub fn core_power_w(&self, load: f64) -> f64 {
+        let idle_per_core = self.spec.idle_w / self.spec.cores as f64;
+        idle_per_core + self.spec.core_active_w * load.clamp(0.0, 1.0)
+    }
+
+    /// Socket power with `active` cores at `load` and the rest idle.
+    pub fn socket_power_w(&self, active: u32, load: f64) -> f64 {
+        let active = active.min(self.spec.cores);
+        let idle_cores = self.spec.cores - active;
+        let idle_per_core = self.spec.idle_w / self.spec.cores as f64;
+        active as f64 * self.core_power_w(load) + idle_cores as f64 * idle_per_core
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::epyc_7742;
+
+    #[test]
+    fn idle_socket_draws_idle() {
+        let c = Cpu::new(epyc_7742(), 0);
+        let p = c.socket_power_w(0, 0.0);
+        assert!((p - c.spec.idle_w).abs() < 1e-9);
+    }
+
+    #[test]
+    fn full_load_at_tdp() {
+        let c = Cpu::new(epyc_7742(), 0);
+        let p = c.socket_power_w(c.spec.cores, 1.0);
+        assert!((p - c.spec.tdp_w).abs() < 1.0, "p={p}");
+    }
+
+    #[test]
+    fn power_monotone_in_active_cores() {
+        let c = Cpu::new(epyc_7742(), 0);
+        let mut prev = 0.0;
+        for n in [0, 4, 16, 64] {
+            let p = c.socket_power_w(n, 0.8);
+            assert!(p >= prev);
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn active_count_clamped() {
+        let c = Cpu::new(epyc_7742(), 0);
+        assert_eq!(c.socket_power_w(1000, 1.0), c.socket_power_w(64, 1.0));
+    }
+}

@@ -1,0 +1,129 @@
+//! GPU device behavior model: power draw as a function of compute and
+//! memory utilization, plus roofline execution-time estimates.
+//!
+//! The power model is the standard affine utilization model used in GPU
+//! power literature (and validated against NVML traces in e.g. Patel et
+//! al., POLCA): board power = idle + dynamic, where the dynamic part scales
+//! with achieved compute and memory-bandwidth utilization. Compute
+//! dominates the dynamic range on A100s; memory streaming alone reaches
+//! roughly 60% of the dynamic budget — which is exactly why decode-heavy
+//! LLM inference draws less than TDP.
+
+use crate::config::GpuSpec;
+
+/// Weight of compute utilization in the dynamic-power blend.
+const W_COMPUTE: f64 = 0.62;
+/// Weight of memory utilization in the dynamic-power blend.
+const W_MEMORY: f64 = 0.38;
+/// Fraction of dynamic power drawn at near-zero utilization when kernels
+/// are resident (clock boost, SM wakeup).
+const ACTIVITY_FLOOR: f64 = 0.12;
+
+/// A single simulated GPU.
+#[derive(Debug, Clone)]
+pub struct Gpu {
+    pub spec: GpuSpec,
+}
+
+impl Gpu {
+    pub fn new(spec: GpuSpec) -> Gpu {
+        Gpu { spec }
+    }
+
+    /// Roofline time to execute a kernel of `flops` floating-point work
+    /// reading/writing `bytes` from HBM: max of the compute and memory
+    /// times at achievable efficiencies.
+    pub fn kernel_time_s(&self, flops: f64, bytes: f64) -> f64 {
+        let t_c = flops / (self.spec.peak_flops * self.spec.flops_eff);
+        let t_m = bytes / (self.spec.hbm_bw * self.spec.bw_eff);
+        t_c.max(t_m)
+    }
+
+    /// Achieved utilizations (compute, memory) for a kernel, given its
+    /// roofline time. One of the two is 1.0 (the binding resource) and the
+    /// other is its fractional demand.
+    pub fn utilization(&self, flops: f64, bytes: f64) -> (f64, f64) {
+        let t = self.kernel_time_s(flops, bytes);
+        if t <= 0.0 {
+            return (0.0, 0.0);
+        }
+        let u_c = (flops / (self.spec.peak_flops * self.spec.flops_eff)) / t;
+        let u_m = (bytes / (self.spec.hbm_bw * self.spec.bw_eff)) / t;
+        (u_c.min(1.0), u_m.min(1.0))
+    }
+
+    /// Board power in watts at the given compute/memory utilizations.
+    pub fn power_w(&self, u_compute: f64, u_memory: f64) -> f64 {
+        let u_c = u_compute.clamp(0.0, 1.0);
+        let u_m = u_memory.clamp(0.0, 1.0);
+        let dynamic_range = self.spec.tdp_w - self.spec.idle_w;
+        let activity = if u_c + u_m > 0.0 { ACTIVITY_FLOOR } else { 0.0 };
+        let blend = W_COMPUTE * u_c + W_MEMORY * u_m;
+        let frac = (activity + (1.0 - ACTIVITY_FLOOR) * blend).clamp(0.0, 1.0);
+        self.spec.idle_w + dynamic_range * frac
+    }
+
+    /// Idle power (context resident, no kernels).
+    pub fn idle_w(&self) -> f64 {
+        self.spec.idle_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::a100_40gb;
+
+    fn gpu() -> Gpu {
+        Gpu::new(a100_40gb())
+    }
+
+    #[test]
+    fn roofline_picks_binding_resource() {
+        let g = gpu();
+        // Huge compute, no bytes → compute-bound.
+        let t1 = g.kernel_time_s(1e15, 1e6);
+        assert!((t1 - 1e15 / (312e12 * 0.52)).abs() / t1 < 1e-12);
+        // Huge bytes, no flops → memory-bound.
+        let t2 = g.kernel_time_s(1e6, 1e12);
+        assert!((t2 - 1e12 / (1555e9 * 0.78)).abs() / t2 < 1e-12);
+    }
+
+    #[test]
+    fn utilization_binding_is_one() {
+        let g = gpu();
+        let (uc, um) = g.utilization(1e15, 1e6);
+        assert!((uc - 1.0).abs() < 1e-9);
+        assert!(um < 0.01);
+        let (uc, um) = g.utilization(1e6, 1e12);
+        assert!(uc < 0.01);
+        assert!((um - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_monotone_in_utilization() {
+        let g = gpu();
+        assert_eq!(g.power_w(0.0, 0.0), g.idle_w());
+        let p_mem = g.power_w(0.05, 1.0); // decode-like
+        let p_cmp = g.power_w(1.0, 0.3); // prefill-like
+        assert!(p_mem > g.idle_w());
+        assert!(p_cmp > p_mem, "compute-bound should draw more: {p_cmp} vs {p_mem}");
+        assert!(p_cmp <= g.spec.tdp_w);
+    }
+
+    #[test]
+    fn decode_power_below_tdp() {
+        // Memory-bound phases draw well under TDP — the effect the paper's
+        // energy-per-token curves hinge on.
+        let g = gpu();
+        let p = g.power_w(0.08, 1.0);
+        assert!(p < 0.8 * g.spec.tdp_w, "p={p}");
+        assert!(p > 0.4 * g.spec.tdp_w, "p={p}");
+    }
+
+    #[test]
+    fn power_clamped() {
+        let g = gpu();
+        assert!(g.power_w(5.0, 5.0) <= g.spec.tdp_w + 1e-9);
+    }
+}

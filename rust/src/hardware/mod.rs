@@ -1,0 +1,11 @@
+//! Behavioral hardware simulators standing in for the Swing node the paper
+//! measured (§3.2): GPU roofline + power, per-core CPU power, and node-level
+//! placement/interconnect. See DESIGN.md §1 for the substitution argument.
+
+pub mod cpu;
+pub mod gpu;
+pub mod node;
+
+pub use cpu::Cpu;
+pub use gpu::Gpu;
+pub use node::{Node, Placement, PlacementError};

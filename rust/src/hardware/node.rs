@@ -1,0 +1,142 @@
+//! Node-level composition: GPU allocation for tensor-parallel model
+//! placement, host-CPU involvement during inference, and NVLink collective
+//! costs for TP degrees > 1.
+
+use super::cpu::Cpu;
+use super::gpu::Gpu;
+use crate::config::{LlmSpec, NodeSpec};
+
+/// A simulated heterogeneous GPU–CPU node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub spec: NodeSpec,
+    pub gpus: Vec<Gpu>,
+    pub cpus: Vec<Cpu>,
+}
+
+/// Placement of a model on the node: which GPUs it shards across.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub gpu_ids: Vec<u32>,
+    /// tensor-parallel degree (= gpu_ids.len())
+    pub tp: u32,
+    /// host cores engaged by the inference process (tokenizer, launcher,
+    /// Accelerate dispatch loop) — what psutil residency tracking sees
+    pub host_cores: u32,
+}
+
+/// Allocation failures.
+#[derive(Debug, thiserror::Error)]
+pub enum PlacementError {
+    #[error("model {model} needs {need} GPUs, only {free} free")]
+    NotEnoughGpus { model: String, need: u32, free: u32 },
+    #[error("model {model} does not fit: {need_gb:.1} GB per GPU > {have_gb:.1} GB HBM")]
+    DoesNotFit {
+        model: String,
+        need_gb: f64,
+        have_gb: f64,
+    },
+}
+
+impl Node {
+    pub fn new(spec: NodeSpec) -> Node {
+        let gpus = (0..spec.n_gpus).map(|_| Gpu::new(spec.gpu.clone())).collect();
+        let cpus = (0..spec.n_sockets)
+            .map(|s| Cpu::new(spec.cpu.clone(), s))
+            .collect();
+        Node { spec, gpus, cpus }
+    }
+
+    /// Place a model on the first `n_gpus` free devices (Table 1 uses the
+    /// minimum number of A100s per model). `used` marks devices already
+    /// taken by other models.
+    pub fn place(&self, model: &LlmSpec, used: &[u32]) -> Result<Placement, PlacementError> {
+        let free: Vec<u32> = (0..self.spec.n_gpus)
+            .filter(|id| !used.contains(id))
+            .collect();
+        if (free.len() as u32) < model.n_gpus {
+            return Err(PlacementError::NotEnoughGpus {
+                model: model.id.to_string(),
+                need: model.n_gpus,
+                free: free.len() as u32,
+            });
+        }
+        let per_gpu_gb = model.weight_bytes() as f64 / model.n_gpus as f64 / 1e9;
+        let hbm_gb = self.spec.gpu.hbm_bytes as f64 / 1e9;
+        // Leave ~15% HBM headroom for activations/KV as Accelerate does.
+        if per_gpu_gb > hbm_gb * 0.85 {
+            return Err(PlacementError::DoesNotFit {
+                model: model.id.to_string(),
+                need_gb: per_gpu_gb,
+                have_gb: hbm_gb,
+            });
+        }
+        Ok(Placement {
+            gpu_ids: free[..model.n_gpus as usize].to_vec(),
+            tp: model.n_gpus,
+            host_cores: 4 + 2 * model.n_gpus, // dispatch + one worker pair per device
+        })
+    }
+
+    /// Per-token all-reduce time for a TP group (two all-reduces per layer
+    /// in Megatron-style TP; ring all-reduce over NVLink).
+    pub fn allreduce_time_s(&self, tp: u32, bytes: f64) -> f64 {
+        if tp <= 1 {
+            return 0.0;
+        }
+        // Ring all-reduce moves 2·(tp−1)/tp · bytes per GPU.
+        let moved = 2.0 * (tp as f64 - 1.0) / tp as f64 * bytes;
+        moved / self.spec.nvlink_bw + 5e-6 // plus launch latency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{lookup, swing_node};
+
+    #[test]
+    fn places_every_zoo_model() {
+        let node = Node::new(swing_node());
+        for m in crate::config::zoo() {
+            let p = node.place(&m, &[]).unwrap();
+            assert_eq!(p.tp, m.n_gpus, "{}", m.id);
+            assert_eq!(p.gpu_ids.len(), m.n_gpus as usize);
+        }
+    }
+
+    #[test]
+    fn respects_used_devices() {
+        let node = Node::new(swing_node());
+        let l70 = lookup("llama2-70b").unwrap();
+        // 5 of 8 GPUs used → only 3 free < 4 needed.
+        let used: Vec<u32> = (0..5).collect();
+        assert!(matches!(
+            node.place(&l70, &used),
+            Err(PlacementError::NotEnoughGpus { .. })
+        ));
+        // 4 used → exactly 4 free.
+        let used: Vec<u32> = (0..4).collect();
+        let p = node.place(&l70, &used).unwrap();
+        assert_eq!(p.gpu_ids, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn case_study_fits_one_node() {
+        // §6.3 hosts Llama-2 7B + 13B + 70B simultaneously: 1+1+4 = 6 GPUs.
+        let node = Node::new(swing_node());
+        let mut used = Vec::new();
+        for m in crate::config::llama_family() {
+            let p = node.place(&m, &used).unwrap();
+            used.extend(p.gpu_ids);
+        }
+        assert_eq!(used.len(), 6);
+    }
+
+    #[test]
+    fn allreduce_zero_for_tp1() {
+        let node = Node::new(swing_node());
+        assert_eq!(node.allreduce_time_s(1, 1e9), 0.0);
+        assert!(node.allreduce_time_s(4, 1e9) > 0.0);
+    }
+}

@@ -1,0 +1,36 @@
+//! # ecoserve — Offline Energy-Optimal LLM Serving
+//!
+//! A reproduction of *"Offline Energy-Optimal LLM Serving: Workload-Based
+//! Energy Models for LLM Inference on Heterogeneous Systems"* (Wilkins,
+//! Keshav, Mortier — HotCarbon'24) as a three-layer Rust + JAX + Pallas
+//! system:
+//!
+//! * **L3 (this crate)** — the coordination contribution: workload
+//!   characterization campaign, workload-based energy/runtime model fitting,
+//!   the ζ-weighted offline assignment optimizer, and an online serving
+//!   runtime (router → batcher → per-model workers) that executes AOT-
+//!   compiled model artifacts through PJRT. Python never runs on the
+//!   request path.
+//! * **L2 (python/compile/model.py)** — proxy LLM zoo in JAX (dense and
+//!   sparse-MoE decoders), lowered once to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (decode attention,
+//!   router cost matrix) called from L2 and verified against pure-jnp
+//!   oracles.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod characterize;
+pub mod config;
+pub mod coordinator;
+pub mod hardware;
+pub mod models;
+pub mod perfmodel;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod stats;
+pub mod telemetry;
+pub mod testkit;
+pub mod util;
+pub mod workload;

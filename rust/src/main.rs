@@ -1,0 +1,378 @@
+//! `ecoserve` — CLI for the offline energy-optimal LLM serving
+//! reproduction. Subcommands map one-to-one onto the paper's artifacts:
+//!
+//! ```text
+//! ecoserve zoo                         Table 1
+//! ecoserve characterize --sweep input  Fig. 1 series (output: Fig. 2)
+//! ecoserve anova                       Table 2
+//! ecoserve fit                         Table 3 (+ fitted coefficients)
+//! ecoserve sweep-zeta                  Fig. 3 (scheduler + baselines)
+//! ecoserve route --zeta 0.5            one offline assignment, counts
+//! ecoserve serve                       end-to-end PJRT serving demo
+//! ecoserve repro-all --out results     everything above, as CSV/MD files
+//! ```
+
+use ecoserve::characterize::{self, Campaign};
+use ecoserve::config::{
+    llama_family, lookup, swing_node, ExperimentConfig, LlmSpec, Partition,
+};
+use ecoserve::coordinator::{Policy, Request, Router, ServeConfig};
+use ecoserve::hardware::Node;
+use ecoserve::models::Normalizer;
+use ecoserve::perfmodel::Cluster;
+use ecoserve::report;
+use ecoserve::scheduler::{self, CapacityMode, CostMatrix};
+use ecoserve::stats;
+use ecoserve::util::{logging, Args, Rng};
+use ecoserve::workload::{self, Query};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+fn main() {
+    let args = Args::from_env();
+    if args.flag("quiet") {
+        logging::set_level(logging::Level::Quiet);
+    } else if args.flag("verbose") {
+        logging::set_level(logging::Level::Debug);
+    }
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn models_arg(args: &Args) -> anyhow::Result<Vec<LlmSpec>> {
+    let ids = args.opt_list("models");
+    if ids.is_empty() {
+        return Ok(ecoserve::config::zoo());
+    }
+    ids.iter()
+        .map(|id| lookup(id).ok_or_else(|| anyhow::anyhow!("unknown model '{id}'")))
+        .collect()
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    match args.command.as_deref() {
+        Some("zoo") => cmd_zoo(),
+        Some("characterize") => cmd_characterize(args),
+        Some("anova") => cmd_anova(args),
+        Some("fit") => cmd_fit(args),
+        Some("sweep-zeta") => cmd_sweep_zeta(args),
+        Some("route") => cmd_route(args),
+        Some("serve") => cmd_serve(args),
+        Some("repro-all") => cmd_repro_all(args),
+        Some(other) => anyhow::bail!("unknown command '{other}' (run with no args for help)"),
+        None => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+ecoserve — offline energy-optimal LLM serving (HotCarbon'24 reproduction)
+
+USAGE: ecoserve <command> [options]
+
+COMMANDS
+  zoo                       print Table 1 (the hosted model zoo)
+  characterize              run the §5 sweeps   [--sweep input|output]
+                            [--models a,b] [--seed N] [--out DIR]
+  anova                     Table 2: two-way ANOVA over the token grid
+  fit                       Table 3: OLS fits of e_K and r_K per model
+  sweep-zeta                Fig. 3: ζ sweep vs baselines
+                            [--points N] [--queries N] [--gamma-caps]
+  route                     solve one assignment [--zeta X] [--queries N]
+  serve                     end-to-end PJRT serving demo
+                            [--artifacts DIR] [--requests N] [--zeta X]
+  repro-all                 regenerate every table and figure [--out DIR]
+
+GLOBAL  --seed N   --quiet   --verbose
+";
+
+fn cmd_zoo() -> anyhow::Result<()> {
+    println!("{}", report::table1(&ecoserve::config::zoo()).to_ascii());
+    Ok(())
+}
+
+fn cmd_characterize(args: &Args) -> anyhow::Result<()> {
+    let sweep = args.opt_or("sweep", "input");
+    let specs = models_arg(args)?;
+    let seed = args.opt_u64("seed", 42);
+    let out_dir = args.opt_or("out", "results");
+    let cfg = ExperimentConfig::default();
+    let campaign = Campaign::new(Cluster::new(Node::new(swing_node())), cfg);
+    let mut rng = Rng::new(seed);
+
+    let mut by_model = Vec::new();
+    for spec in &specs {
+        ecoserve::info!("sweep {} for {}", sweep, spec.id);
+        let cells = match sweep.as_str() {
+            "input" => campaign.sweep_input(spec, &mut rng),
+            "output" => campaign.sweep_output(spec, &mut rng),
+            other => anyhow::bail!("--sweep must be input|output, got {other}"),
+        };
+        by_model.push((spec.id.to_string(), cells));
+    }
+    let axis = if sweep == "input" { "t_in" } else { "t_out" };
+    print!("{}", report::sweep_ascii(&by_model, axis));
+    let fig = if sweep == "input" { "fig1" } else { "fig2" };
+    report::write_result(
+        &Path::new(&out_dir).join(format!("{fig}_{sweep}_sweep.csv")),
+        &report::sweep_csv(&by_model, axis),
+    )?;
+    Ok(())
+}
+
+/// Shared: grid rows + fitted model sets for the requested models.
+fn grid_rows(
+    specs: &[LlmSpec],
+    trials: usize,
+    seed: u64,
+) -> anyhow::Result<characterize::PipelineOutput> {
+    let cfg = ExperimentConfig::default();
+    let mut rng = Rng::new(seed);
+    characterize::characterize_and_fit(specs, &cfg, trials, &mut rng)
+}
+
+fn cmd_anova(args: &Args) -> anyhow::Result<()> {
+    let specs = models_arg(args)?;
+    let seed = args.opt_u64("seed", 42);
+    let trials = args.opt_usize("trials", 3);
+    let out = grid_rows(&specs, trials, seed)?;
+
+    let energy_obs = characterize::anova_blocks(&out.rows, |r| r.total_energy_j());
+    let runtime_obs = characterize::anova_blocks(&out.rows, |r| r.runtime_s);
+    let energy = stats::two_way_blocked(&energy_obs, "Input Tokens", "Output Tokens")?;
+    let runtime = stats::two_way_blocked(&runtime_obs, "Input Tokens", "Output Tokens")?;
+    println!("{}", report::table2(&energy, &runtime).to_ascii());
+
+    let out_dir = args.opt_or("out", "results");
+    report::write_result(
+        &Path::new(&out_dir).join("table2_anova.csv"),
+        &report::table2(&energy, &runtime).to_csv(),
+    )?;
+    Ok(())
+}
+
+fn cmd_fit(args: &Args) -> anyhow::Result<()> {
+    let specs = models_arg(args)?;
+    let seed = args.opt_u64("seed", 42);
+    let trials = args.opt_usize("trials", 3);
+    let out = grid_rows(&specs, trials, seed)?;
+    println!("{}", report::table3(&out.sets, &specs).to_ascii());
+    println!("{}", report::coefficients(&out.sets).to_ascii());
+
+    let out_dir = args.opt_or("out", "results");
+    report::write_result(
+        &Path::new(&out_dir).join("table3_fits.csv"),
+        &report::table3(&out.sets, &specs).to_csv(),
+    )?;
+    Ok(())
+}
+
+fn case_study_queries(n: usize, rng: &mut Rng) -> Vec<Query> {
+    workload::generate(n, &workload::AlpacaParams::default(), rng)
+}
+
+fn cmd_sweep_zeta(args: &Args) -> anyhow::Result<()> {
+    let seed = args.opt_u64("seed", 42);
+    let n_points = args.opt_usize("points", 11);
+    let n_queries = args.opt_usize("queries", 500);
+    let mode = if args.flag("gamma-caps") {
+        CapacityMode::GammaHard
+    } else {
+        CapacityMode::Eq3Only
+    };
+    let partition = Partition::paper_case_study();
+    partition.validate()?;
+
+    let family = llama_family();
+    let fitted = characterize::quick_fit(&family, seed)?;
+    let mut rng = Rng::new(seed ^ 0xF16_3);
+    let queries = case_study_queries(n_queries, &mut rng);
+    let sweep = scheduler::sweep_mode(
+        &fitted.sets,
+        &queries,
+        &partition.gammas,
+        n_points,
+        mode,
+        &mut rng,
+    )?;
+    print!("{}", report::zeta_ascii(&sweep));
+
+    let out_dir = args.opt_or("out", "results");
+    report::write_result(
+        &Path::new(&out_dir).join("fig3_zeta_sweep.csv"),
+        &report::zeta_csv(&sweep),
+    )?;
+    Ok(())
+}
+
+fn cmd_route(args: &Args) -> anyhow::Result<()> {
+    let seed = args.opt_u64("seed", 42);
+    let zeta = args.opt_f64("zeta", 0.5);
+    let n_queries = args.opt_usize("queries", 500);
+    let partition = Partition::paper_case_study();
+    let family = llama_family();
+    let fitted = characterize::quick_fit(&family, seed)?;
+    let mut rng = Rng::new(seed ^ 0xA0_77E);
+    let queries = case_study_queries(n_queries, &mut rng);
+
+    let norm = Normalizer::from_workload(&fitted.sets, &queries);
+    let costs = CostMatrix::build(&fitted.sets, &norm, &queries, zeta);
+    let t0 = Instant::now();
+    let assignment =
+        scheduler::solve_exact_mode(&costs, &partition.gammas, CapacityMode::Eq3Only)?;
+    let solve_time = t0.elapsed();
+    let eval = scheduler::evaluate(&assignment, &fitted.sets, &queries);
+
+    println!("zeta = {zeta}, {n_queries} queries, solved in {solve_time:?}");
+    let counts = assignment.counts(fitted.sets.len());
+    for (k, s) in fitted.sets.iter().enumerate() {
+        println!("  {:<12} {:>4} queries", s.model_id, counts[k]);
+    }
+    println!(
+        "  mean energy {:.1} J | mean runtime {:.3} s | mean accuracy {:.2}%",
+        eval.mean_energy_j, eval.mean_runtime_s, eval.mean_accuracy
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let artifacts = PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    let n_requests = args.opt_usize("requests", 24);
+    let zeta = args.opt_f64("zeta", 0.5);
+    let seed = args.opt_u64("seed", 42);
+
+    let family = llama_family();
+    let fitted = characterize::quick_fit(&family, seed)?;
+    let mut rng = Rng::new(seed ^ 0x5E7);
+
+    // Proxy-scale request stream (prompts fit the artifact prompt window).
+    let requests: Vec<(Request, Query)> = (0..n_requests as u64)
+        .map(|id| {
+            let t_in = rng.int_range(2, 48) as usize;
+            let n_gen = rng.int_range(1, 16) as usize;
+            let prompt: Vec<i32> = (0..t_in).map(|_| rng.int_range(1, 500) as i32).collect();
+            (
+                Request {
+                    id,
+                    prompt,
+                    n_gen,
+                    submitted: Instant::now(),
+                },
+                Query {
+                    id: id as u32,
+                    t_in: t_in as u32,
+                    t_out: n_gen as u32,
+                },
+            )
+        })
+        .collect();
+
+    let probe: Vec<Query> = requests.iter().map(|(_, q)| *q).collect();
+    let norm = Normalizer::from_workload(&fitted.sets, &probe);
+    let partition = Partition::paper_case_study();
+    let router = Router::new(fitted.sets.clone(), norm, zeta, Policy::ZetaCost)
+        .with_quota(&partition.gammas, 0.10);
+
+    let ids: Vec<&str> = family.iter().map(|m| m.id).collect();
+    let cfg = ServeConfig::new(artifacts, &ids);
+    ecoserve::info!("compiling {} engines…", ids.len());
+    let (responses, metrics) = ecoserve::coordinator::serve(&cfg, router, requests)?;
+    println!("{}", metrics.report());
+    println!(
+        "first response tokens: {:?}",
+        responses.first().map(|r| &r.tokens)
+    );
+    Ok(())
+}
+
+fn cmd_repro_all(args: &Args) -> anyhow::Result<()> {
+    let out_dir = PathBuf::from(args.opt_or("out", "results"));
+    let seed = args.opt_u64("seed", 42);
+    let specs = ecoserve::config::zoo();
+
+    // T1
+    report::write_result(
+        &out_dir.join("table1_zoo.csv"),
+        &report::table1(&specs).to_csv(),
+    )?;
+    println!("{}", report::table1(&specs).to_ascii());
+
+    // F1 + F2
+    let cfg = ExperimentConfig::default();
+    let campaign = Campaign::new(Cluster::new(Node::new(swing_node())), cfg);
+    let mut rng = Rng::new(seed);
+    let mut fig1 = Vec::new();
+    let mut fig2 = Vec::new();
+    for spec in &specs {
+        ecoserve::info!("sweeps for {}", spec.id);
+        fig1.push((spec.id.to_string(), campaign.sweep_input(spec, &mut rng)));
+        fig2.push((spec.id.to_string(), campaign.sweep_output(spec, &mut rng)));
+    }
+    report::write_result(
+        &out_dir.join("fig1_input_sweep.csv"),
+        &report::sweep_csv(&fig1, "t_in"),
+    )?;
+    report::write_result(
+        &out_dir.join("fig2_output_sweep.csv"),
+        &report::sweep_csv(&fig2, "t_out"),
+    )?;
+    print!("{}", report::sweep_ascii(&fig1, "t_in"));
+
+    // Grid → T2 + T3
+    let pipeline = grid_rows(&specs, 3, seed)?;
+    characterize::save(&pipeline.rows, &out_dir.join("grid_trials.csv"))?;
+    let energy_obs = characterize::anova_blocks(&pipeline.rows, |r| r.total_energy_j());
+    let runtime_obs = characterize::anova_blocks(&pipeline.rows, |r| r.runtime_s);
+    let energy = stats::two_way_blocked(&energy_obs, "Input Tokens", "Output Tokens")?;
+    let runtime = stats::two_way_blocked(&runtime_obs, "Input Tokens", "Output Tokens")?;
+    println!("{}", report::table2(&energy, &runtime).to_ascii());
+    report::write_result(
+        &out_dir.join("table2_anova.csv"),
+        &report::table2(&energy, &runtime).to_csv(),
+    )?;
+    println!("{}", report::table3(&pipeline.sets, &specs).to_ascii());
+    report::write_result(
+        &out_dir.join("table3_fits.csv"),
+        &report::table3(&pipeline.sets, &specs).to_csv(),
+    )?;
+    report::write_result(
+        &out_dir.join("fitted_coefficients.csv"),
+        &report::coefficients(&pipeline.sets).to_csv(),
+    )?;
+
+    // F3 (case-study family, reusing the full-zoo fits)
+    let family = llama_family();
+    let family_sets: Vec<_> = pipeline
+        .sets
+        .iter()
+        .filter(|s| family.iter().any(|m| m.id == s.model_id))
+        .cloned()
+        .collect();
+    let partition = Partition::paper_case_study();
+    let mut rng = Rng::new(seed ^ 0xF16_3);
+    let queries = case_study_queries(500, &mut rng);
+    let sweep = scheduler::sweep_mode(
+        &family_sets,
+        &queries,
+        &partition.gammas,
+        11,
+        CapacityMode::Eq3Only,
+        &mut rng,
+    )?;
+    print!("{}", report::zeta_ascii(&sweep));
+    report::write_result(&out_dir.join("fig3_zeta_sweep.csv"), &report::zeta_csv(&sweep))?;
+
+    println!(
+        "\nall tables and figures regenerated under {}",
+        out_dir.display()
+    );
+    Ok(())
+}

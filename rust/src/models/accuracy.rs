@@ -1,0 +1,52 @@
+//! The accuracy utility function of Eq. 1:
+//! `a_K(τ_in, τ_out) = A_K·τ_in + A_K·τ_out`,
+//! a monotonically increasing function of workload size scaled by the
+//! model's leaderboard accuracy constant A_K (Table 1).
+
+/// Accuracy model for one LLM.
+#[derive(Debug, Clone)]
+pub struct AccuracyModel {
+    pub model_id: String,
+    /// A_K in percent, as in Table 1
+    pub a_k: f64,
+}
+
+impl AccuracyModel {
+    pub fn new(model_id: &str, a_k: f64) -> AccuracyModel {
+        assert!(a_k > 0.0, "accuracy constant must be positive");
+        AccuracyModel {
+            model_id: model_id.to_string(),
+            a_k,
+        }
+    }
+
+    /// Eq. 1.
+    #[inline]
+    pub fn score(&self, t_in: f64, t_out: f64) -> f64 {
+        self.a_k * t_in + self.a_k * t_out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_eq1() {
+        let a = AccuracyModel::new("llama2-7b", 50.97);
+        assert!((a.score(100.0, 50.0) - 50.97 * 150.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_in_both_arguments() {
+        let a = AccuracyModel::new("x", 60.0);
+        assert!(a.score(10.0, 10.0) < a.score(11.0, 10.0));
+        assert!(a.score(10.0, 10.0) < a.score(10.0, 11.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn rejects_nonpositive_constant() {
+        AccuracyModel::new("x", 0.0);
+    }
+}

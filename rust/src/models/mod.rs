@@ -1,0 +1,13 @@
+//! Workload-based prediction models (§6 of the paper): the bilinear
+//! energy/runtime models `e_K`/`r_K`, the accuracy function `a_K`, their
+//! normalized counterparts, and per-LLM assembly.
+
+pub mod accuracy;
+pub mod normalize;
+pub mod set;
+pub mod workload_model;
+
+pub use accuracy::AccuracyModel;
+pub use normalize::Normalizer;
+pub use set::{fit_all, ModelSet};
+pub use workload_model::{Target, WorkloadModel};

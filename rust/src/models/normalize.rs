@@ -1,0 +1,124 @@
+//! Normalized counterparts ê_K, â_K of §4: energy and accuracy are scaled
+//! into [0, 1] so they are comparable inside the ζ-blended objective.
+//! Following the paper's implementation note, normalization is *dynamic*:
+//! the scale is the largest value attained across all (query, model)
+//! combinations of the workload at hand.
+
+use super::set::ModelSet;
+use crate::workload::Query;
+
+/// Normalization scales for a (workload, model set) pair.
+#[derive(Debug, Clone, Copy)]
+pub struct Normalizer {
+    pub max_energy_j: f64,
+    pub max_accuracy: f64,
+    pub max_runtime_s: f64,
+}
+
+impl Normalizer {
+    /// Scan the workload × model grid for the maxima.
+    pub fn from_workload(sets: &[ModelSet], queries: &[Query]) -> Normalizer {
+        let mut max_e = 0.0f64;
+        let mut max_a = 0.0f64;
+        let mut max_r = 0.0f64;
+        for q in queries {
+            let (ti, to) = (q.t_in as f64, q.t_out as f64);
+            for s in sets {
+                max_e = max_e.max(s.energy.predict(ti, to));
+                max_a = max_a.max(s.accuracy.score(ti, to));
+                max_r = max_r.max(s.runtime.predict(ti, to));
+            }
+        }
+        Normalizer {
+            max_energy_j: max_e.max(f64::MIN_POSITIVE),
+            max_accuracy: max_a.max(f64::MIN_POSITIVE),
+            max_runtime_s: max_r.max(f64::MIN_POSITIVE),
+        }
+    }
+
+    /// ê_K(q) ∈ [0, 1].
+    #[inline]
+    pub fn energy_hat(&self, set: &ModelSet, q: &Query) -> f64 {
+        (set.energy.predict(q.t_in as f64, q.t_out as f64) / self.max_energy_j)
+            .clamp(0.0, 1.0)
+    }
+
+    /// â_K(q) ∈ [0, 1].
+    #[inline]
+    pub fn accuracy_hat(&self, set: &ModelSet, q: &Query) -> f64 {
+        (set.accuracy.score(q.t_in as f64, q.t_out as f64) / self.max_accuracy)
+            .clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::accuracy::AccuracyModel;
+    use crate::models::workload_model::{Target, WorkloadModel};
+
+    fn set(id: &str, e: [f64; 3], a: f64) -> ModelSet {
+        ModelSet {
+            model_id: id.into(),
+            energy: WorkloadModel {
+                model_id: id.into(),
+                target: Target::EnergyJ,
+                coefs: e,
+                r2: 1.0,
+                f_stat: 0.0,
+                p_value: 0.0,
+                n_obs: 0,
+            },
+            runtime: WorkloadModel {
+                model_id: id.into(),
+                target: Target::RuntimeS,
+                coefs: [1e-3, 1e-2, 1e-6],
+                r2: 1.0,
+                f_stat: 0.0,
+                p_value: 0.0,
+                n_obs: 0,
+            },
+            accuracy: AccuracyModel::new(id, a),
+        }
+    }
+
+    fn q(t_in: u32, t_out: u32) -> Query {
+        Query { id: 0, t_in, t_out }
+    }
+
+    #[test]
+    fn hats_bounded_and_max_attained() {
+        let sets = vec![set("small", [0.1, 1.0, 1e-4], 50.0), set("big", [1.0, 10.0, 1e-3], 65.0)];
+        let queries = vec![q(8, 8), q(512, 256), q(2048, 2048)];
+        let n = Normalizer::from_workload(&sets, &queries);
+        let mut saw_one_e = false;
+        let mut saw_one_a = false;
+        for qq in &queries {
+            for s in &sets {
+                let e = n.energy_hat(s, qq);
+                let a = n.accuracy_hat(s, qq);
+                assert!((0.0..=1.0).contains(&e));
+                assert!((0.0..=1.0).contains(&a));
+                saw_one_e |= (e - 1.0).abs() < 1e-12;
+                saw_one_a |= (a - 1.0).abs() < 1e-12;
+            }
+        }
+        assert!(saw_one_e && saw_one_a, "maxima should normalize to exactly 1");
+    }
+
+    #[test]
+    fn bigger_model_higher_both() {
+        let sets = vec![set("small", [0.1, 1.0, 1e-4], 50.0), set("big", [1.0, 10.0, 1e-3], 65.0)];
+        let n = Normalizer::from_workload(&sets, &[q(100, 100)]);
+        let qq = q(100, 100);
+        assert!(n.energy_hat(&sets[1], &qq) > n.energy_hat(&sets[0], &qq));
+        assert!(n.accuracy_hat(&sets[1], &qq) > n.accuracy_hat(&sets[0], &qq));
+    }
+
+    #[test]
+    fn empty_workload_safe() {
+        let sets = vec![set("a", [1.0, 1.0, 0.0], 50.0)];
+        let n = Normalizer::from_workload(&sets, &[]);
+        assert!(n.max_energy_j > 0.0); // no div-by-zero downstream
+    }
+}

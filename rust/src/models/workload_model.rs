@@ -1,0 +1,174 @@
+//! The paper's workload-based prediction models (Eqs. 6 and 7):
+//!
+//! `e_K(τ_in, τ_out) = α₀·τ_in + α₁·τ_out + α₂·τ_in·τ_out`
+//! `r_K(τ_in, τ_out) = β₀·τ_in + β₁·τ_out + β₂·τ_in·τ_out`
+//!
+//! fitted per model by OLS over the characterization grid.
+
+use crate::characterize::{regression_design, Row};
+use crate::stats::{ols_fit, OlsError, OlsFit};
+
+/// Which response a model predicts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    EnergyJ,
+    RuntimeS,
+}
+
+/// A fitted bilinear workload model for one LLM.
+#[derive(Debug, Clone)]
+pub struct WorkloadModel {
+    pub model_id: String,
+    pub target: Target,
+    /// (α₀, α₁, α₂) — τ_in, τ_out, interaction
+    pub coefs: [f64; 3],
+    pub r2: f64,
+    pub f_stat: f64,
+    pub p_value: f64,
+    pub n_obs: usize,
+}
+
+impl WorkloadModel {
+    /// Fit from trial rows of a single model's grid campaign.
+    pub fn fit<F: Fn(&Row) -> f64>(
+        model_id: &str,
+        target: Target,
+        rows: &[Row],
+        metric: F,
+    ) -> Result<WorkloadModel, OlsError> {
+        let own: Vec<Row> = rows
+            .iter()
+            .filter(|r| r.model_id == model_id)
+            .cloned()
+            .collect();
+        let (x, y) = regression_design(&own, metric);
+        let fit: OlsFit = ols_fit(&x, &y, &["t_in", "t_out", "t_in*t_out"], false)?;
+        Ok(WorkloadModel {
+            model_id: model_id.to_string(),
+            target,
+            coefs: [
+                fit.coefs[0].value,
+                fit.coefs[1].value,
+                fit.coefs[2].value,
+            ],
+            r2: fit.r2,
+            f_stat: fit.f_stat,
+            p_value: fit.f_p_value,
+            n_obs: fit.n,
+        })
+    }
+
+    /// Ablation variant: fit *without* the interaction term (used by the
+    /// `ablations` bench to quantify what Table 2's interaction finding
+    /// buys).
+    pub fn fit_no_interaction<F: Fn(&Row) -> f64>(
+        model_id: &str,
+        target: Target,
+        rows: &[Row],
+        metric: F,
+    ) -> Result<WorkloadModel, OlsError> {
+        let own: Vec<Row> = rows
+            .iter()
+            .filter(|r| r.model_id == model_id)
+            .cloned()
+            .collect();
+        let x: Vec<Vec<f64>> = own
+            .iter()
+            .map(|r| vec![r.t_in as f64, r.t_out as f64])
+            .collect();
+        let y: Vec<f64> = own.iter().map(|r| metric(r)).collect();
+        let fit = ols_fit(&x, &y, &["t_in", "t_out"], false)?;
+        Ok(WorkloadModel {
+            model_id: model_id.to_string(),
+            target,
+            coefs: [fit.coefs[0].value, fit.coefs[1].value, 0.0],
+            r2: fit.r2,
+            f_stat: fit.f_stat,
+            p_value: fit.f_p_value,
+            n_obs: fit.n,
+        })
+    }
+
+    /// Evaluate the model at a workload point.
+    #[inline]
+    pub fn predict(&self, t_in: f64, t_out: f64) -> f64 {
+        self.coefs[0] * t_in + self.coefs[1] * t_out + self.coefs[2] * t_in * t_out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth_rows(model_id: &str, a: f64, b: f64, c: f64) -> Vec<Row> {
+        let mut rows = Vec::new();
+        for ti in [8u32, 32, 128, 512, 2048] {
+            for to in [8u32, 32, 128, 512, 2048] {
+                for trial in 0..3 {
+                    let y = a * ti as f64 + b * to as f64 + c * (ti as f64) * (to as f64);
+                    rows.push(Row {
+                        model_id: model_id.into(),
+                        t_in: ti,
+                        t_out: to,
+                        batch: 32,
+                        trial,
+                        runtime_s: y,
+                        gpu_energy_j: 10.0 * y,
+                        cpu_energy_j: 0.5 * y,
+                    });
+                }
+            }
+        }
+        rows
+    }
+
+    #[test]
+    fn recovers_coefficients() {
+        let rows = synth_rows("m", 0.01, 0.2, 1e-4);
+        let m = WorkloadModel::fit("m", Target::RuntimeS, &rows, |r| r.runtime_s).unwrap();
+        assert!((m.coefs[0] - 0.01).abs() < 1e-9);
+        assert!((m.coefs[1] - 0.2).abs() < 1e-9);
+        assert!((m.coefs[2] - 1e-4).abs() < 1e-12);
+        assert!(m.r2 > 0.999999);
+        assert_eq!(m.n_obs, 75);
+    }
+
+    #[test]
+    fn predict_matches_formula() {
+        let m = WorkloadModel {
+            model_id: "x".into(),
+            target: Target::EnergyJ,
+            coefs: [1.0, 2.0, 0.5],
+            r2: 1.0,
+            f_stat: 0.0,
+            p_value: 0.0,
+            n_obs: 0,
+        };
+        assert_eq!(m.predict(10.0, 20.0), 10.0 + 40.0 + 100.0);
+    }
+
+    #[test]
+    fn filters_by_model_id() {
+        let mut rows = synth_rows("a", 0.01, 0.2, 1e-4);
+        rows.extend(synth_rows("b", 1.0, 1.0, 1.0));
+        let m = WorkloadModel::fit("a", Target::RuntimeS, &rows, |r| r.runtime_s).unwrap();
+        assert!((m.coefs[1] - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_interaction_underfits_interacting_data() {
+        let rows = synth_rows("m", 0.005, 0.1, 5e-4); // strong interaction
+        let with = WorkloadModel::fit("m", Target::RuntimeS, &rows, |r| r.runtime_s).unwrap();
+        let without =
+            WorkloadModel::fit_no_interaction("m", Target::RuntimeS, &rows, |r| r.runtime_s)
+                .unwrap();
+        assert!(with.r2 > without.r2);
+        assert!(without.r2 < 0.9, "r2={}", without.r2);
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        let rows = synth_rows("a", 0.01, 0.2, 1e-4);
+        assert!(WorkloadModel::fit("zz", Target::RuntimeS, &rows, |r| r.runtime_s).is_err());
+    }
+}

@@ -1,0 +1,210 @@
+//! Analytical FLOP and byte accounting for decoder-only transformer
+//! inference, parameterized by the published architectures in the zoo.
+//!
+//! Conventions (standard in the inference-performance literature, e.g.
+//! Pope et al., "Efficiently Scaling Transformer Inference"):
+//! * linear-layer work is 2 FLOPs per parameter per token (MAC = 2);
+//! * attention score+value work at context length `c` is `4·d_model·c`
+//!   FLOPs per token per layer (2 for QKᵀ, 2 for A·V);
+//! * decode reads every *active* weight byte once per step (weights are
+//!   streamed from HBM; KV-cache reads grow with context).
+
+use crate::config::LlmSpec;
+
+/// Work and traffic of one inference phase on the full TP group.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Work {
+    /// floating-point operations (per batch, all devices combined)
+    pub flops: f64,
+    /// HBM bytes moved (per batch, all devices combined)
+    pub hbm_bytes: f64,
+    /// bytes exchanged per tensor-parallel all-reduce (one collective)
+    pub collective_bytes: f64,
+    /// number of all-reduces in the phase
+    pub n_collectives: f64,
+}
+
+/// Attention FLOPs per token per layer at context `c`.
+fn attn_flops_per_token(spec: &LlmSpec, c: f64) -> f64 {
+    4.0 * spec.arch.d_model as f64 * c
+}
+
+/// MoE router FLOPs per token per layer (gate projection + top-k select).
+fn router_flops_per_token(spec: &LlmSpec) -> f64 {
+    if spec.arch.is_moe() {
+        2.0 * spec.arch.d_model as f64 * spec.arch.n_experts as f64
+    } else {
+        0.0
+    }
+}
+
+/// Prefill: process `t_in` prompt tokens for a batch of `batch` sequences.
+pub fn prefill(spec: &LlmSpec, t_in: u32, batch: u32) -> Work {
+    let b = batch as f64;
+    let n = t_in as f64;
+    let l = spec.arch.n_layers as f64;
+    let d = spec.arch.d_model as f64;
+
+    // Linear layers: 2 FLOPs/param for each of the n tokens.
+    let linear = 2.0 * spec.n_params_active as f64 * n;
+    // Attention: Σ_{i=1..n} 4·d·i per layer ≈ 2·d·n² per layer.
+    let attn = 2.0 * d * n * n * l;
+    let router = router_flops_per_token(spec) * n * l;
+
+    // Bytes: weights once (all experts are hit by a full prompt batch),
+    // KV written for every token, activations ~2 passes of d per token.
+    let weights = spec.weight_bytes() as f64;
+    let kv_write = spec.kv_bytes_per_token() as f64 * n * b;
+    let act = 4.0 * d * n * b * spec.arch.dtype_bytes as f64;
+
+    Work {
+        flops: b * (linear + attn + router),
+        hbm_bytes: weights + kv_write + act,
+        collective_bytes: b * n * d * spec.arch.dtype_bytes as f64,
+        n_collectives: 2.0 * l,
+    }
+}
+
+/// One decode step at context length `c` (tokens already in the KV cache)
+/// for a batch of `batch` sequences.
+pub fn decode_step(spec: &LlmSpec, c: u32, batch: u32) -> Work {
+    let b = batch as f64;
+    let l = spec.arch.n_layers as f64;
+    let d = spec.arch.d_model as f64;
+    let cf = c as f64;
+
+    let linear = 2.0 * spec.n_params_active as f64;
+    let attn = attn_flops_per_token(spec, cf) * l;
+    let router = router_flops_per_token(spec) * l;
+
+    // Weight traffic: dense models stream all weights once per step.
+    // For MoE, the batch decides how many experts are touched: each of the
+    // `b` tokens picks `experts_active` of `n_experts`, so the expected
+    // number of unique experts loaded per layer is
+    // E = n·(1 − (1 − k/n)^b) — at batch 32 effectively all of them.
+    let weight_bytes = if spec.arch.is_moe() {
+        let n_e = spec.arch.n_experts as f64;
+        let k = spec.arch.experts_active as f64;
+        let uniq = n_e * (1.0 - (1.0 - k / n_e).powf(b));
+        let attn_and_shared = spec.active_weight_bytes() as f64
+            - ffn_expert_bytes(spec) * spec.arch.experts_active as f64;
+        attn_and_shared + ffn_expert_bytes(spec) * uniq
+    } else {
+        spec.weight_bytes() as f64
+    };
+
+    // KV reads: every cached token for every sequence in the batch.
+    let kv_read = spec.kv_bytes_per_token() as f64 * cf * b;
+    let kv_write = spec.kv_bytes_per_token() as f64 * b;
+    let act = 4.0 * d * b * spec.arch.dtype_bytes as f64;
+
+    Work {
+        flops: b * (linear + attn + router),
+        hbm_bytes: weight_bytes + kv_read + kv_write + act,
+        collective_bytes: b * d * spec.arch.dtype_bytes as f64,
+        n_collectives: 2.0 * l,
+    }
+}
+
+/// Bytes of one FFN expert's weights (per layer × all layers).
+fn ffn_expert_bytes(spec: &LlmSpec) -> f64 {
+    let a = &spec.arch;
+    // SwiGLU FFN: three projections d×d_ff.
+    let per_layer = 3.0 * a.d_model as f64 * a.d_ff as f64;
+    per_layer * a.n_layers as f64 * a.dtype_bytes as f64
+}
+
+/// Arithmetic intensity (FLOPs per HBM byte) — used by perf analysis and
+/// the §Perf roofline discussion.
+pub fn intensity(w: &Work) -> f64 {
+    if w.hbm_bytes > 0.0 {
+        w.flops / w.hbm_bytes
+    } else {
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::lookup;
+
+    #[test]
+    fn prefill_scales_superlinearly() {
+        let m = lookup("llama2-7b").unwrap();
+        let w1 = prefill(&m, 128, 32);
+        let w2 = prefill(&m, 256, 32);
+        // Doubling input more than doubles FLOPs (quadratic attention term).
+        assert!(w2.flops > 2.0 * w1.flops);
+        assert!(w2.flops < 4.0 * w1.flops);
+    }
+
+    #[test]
+    fn prefill_flops_near_2pn_for_short_prompts() {
+        // For short prompts the 2·P·n linear term dominates.
+        let m = lookup("llama2-7b").unwrap();
+        let w = prefill(&m, 32, 1);
+        let linear = 2.0 * m.n_params as f64 * 32.0;
+        assert!((w.flops - linear).abs() / linear < 0.05, "{}", w.flops / linear);
+    }
+
+    #[test]
+    fn decode_step_memory_bound() {
+        // Decode at batch 32 still has intensity far below the A100
+        // compute/bandwidth balance point (~200 FLOP/B at datasheet values).
+        let m = lookup("llama2-13b").unwrap();
+        let w = decode_step(&m, 512, 32);
+        assert!(intensity(&w) < 150.0, "intensity={}", intensity(&w));
+        // Prefill of a long prompt is compute-bound.
+        let wp = prefill(&m, 1024, 32);
+        assert!(intensity(&wp) > 300.0, "intensity={}", intensity(&wp));
+    }
+
+    #[test]
+    fn decode_bytes_grow_with_context() {
+        let m = lookup("mistral-7b").unwrap();
+        let w1 = decode_step(&m, 64, 32);
+        let w2 = decode_step(&m, 2048, 32);
+        assert!(w2.hbm_bytes > w1.hbm_bytes);
+        // Weight streaming dominates at short context.
+        assert!(w1.hbm_bytes > m.weight_bytes() as f64);
+    }
+
+    #[test]
+    fn moe_decode_flops_much_lower_than_dense_peer() {
+        // Mixtral's active params ≈ 12.9B vs Falcon-40B's 41.8B → about 3×
+        // fewer decode FLOPs, while weight traffic stays comparable.
+        let mix = lookup("mixtral-8x7b").unwrap();
+        let f40 = lookup("falcon-40b").unwrap();
+        let wm = decode_step(&mix, 256, 32);
+        let wf = decode_step(&f40, 256, 32);
+        assert!(wm.flops < 0.45 * wf.flops, "{} vs {}", wm.flops, wf.flops);
+        assert!(wm.hbm_bytes > 0.5 * wf.hbm_bytes);
+    }
+
+    #[test]
+    fn moe_prefill_flops_lower_than_dense_peer() {
+        let mix = lookup("mixtral-8x7b").unwrap();
+        let f40 = lookup("falcon-40b").unwrap();
+        let wm = prefill(&mix, 1024, 32);
+        let wf = prefill(&f40, 1024, 32);
+        assert!(wm.flops < 0.5 * wf.flops);
+    }
+
+    #[test]
+    fn moe_unique_experts_saturate_at_batch() {
+        let mix = lookup("mixtral-8x7b").unwrap();
+        // Batch 1: only k experts loaded → much less weight traffic than
+        // batch 32 (≈ all experts).
+        let w1 = decode_step(&mix, 128, 1);
+        let w32 = decode_step(&mix, 128, 32);
+        assert!(w1.hbm_bytes < 0.55 * w32.hbm_bytes, "{} vs {}", w1.hbm_bytes, w32.hbm_bytes);
+    }
+
+    #[test]
+    fn collectives_scale_with_layers() {
+        let m = lookup("llama2-70b").unwrap();
+        let w = decode_step(&m, 100, 32);
+        assert_eq!(w.n_collectives, 160.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Analytical performance model of LLM inference on the simulated node:
+//! FLOP/byte accounting per phase, roofline latency + power per phase, and
+//! the ground-truth trace generator the telemetry layer measures.
+
+pub mod flops;
+pub mod ground_truth;
+pub mod phase;
+
+pub use flops::{decode_step, intensity, prefill, Work};
+pub use ground_truth::{Cluster, NoiseModel, PowerTrace, Segment};
+pub use phase::{dispatch_overhead_s, run_phase, PhaseProfile};

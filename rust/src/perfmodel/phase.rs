@@ -1,0 +1,121 @@
+//! Phase latency and power: maps the FLOP/byte `Work` of a phase onto a
+//! tensor-parallel GPU group through the roofline model, yielding duration
+//! and average board power per GPU.
+
+use super::flops::Work;
+use crate::config::LlmSpec;
+use crate::hardware::Node;
+
+/// Execution profile of one phase (prefill or a decode step).
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseProfile {
+    pub duration_s: f64,
+    /// per-GPU average board power over the phase, W
+    pub gpu_power_w: f64,
+    /// number of GPUs engaged
+    pub n_gpus: u32,
+    /// compute / memory utilization (diagnostics, §Perf)
+    pub u_compute: f64,
+    pub u_memory: f64,
+}
+
+/// Fixed software overhead per phase: the HF-Accelerate-style Python
+/// dispatch loop issues each layer's kernels step by step. Per decode step
+/// this is a constant; it is what produces the flat per-token floor small
+/// models exhibit in Fig. 2.
+pub fn dispatch_overhead_s(spec: &LlmSpec, node: &Node) -> f64 {
+    // ~6 kernel launches per layer + sampling/copy at the step boundary.
+    let launches = 6.0 * spec.arch.n_layers as f64 + 12.0;
+    let moe_extra = if spec.arch.is_moe() {
+        // gather/scatter routing adds two launches per layer
+        2.0 * spec.arch.n_layers as f64
+    } else {
+        0.0
+    };
+    (launches + moe_extra) * node.spec.launch_overhead_s
+}
+
+/// Execute a phase's `Work` on `tp` GPUs of the node.
+pub fn run_phase(spec: &LlmSpec, node: &Node, work: &Work, tp: u32) -> PhaseProfile {
+    let gpu = &node.gpus[0];
+    // Work shards evenly across the TP group.
+    let flops = work.flops / tp as f64;
+    let bytes = work.hbm_bytes / tp as f64;
+    let t_kernel = gpu.kernel_time_s(flops, bytes);
+    let t_comm = node.allreduce_time_s(tp, work.collective_bytes) * work.n_collectives;
+    let t_overhead = dispatch_overhead_s(spec, node);
+    let duration = t_kernel + t_comm + t_overhead;
+
+    // Utilization over the *whole* phase (overheads dilute it).
+    let (u_c_kernel, u_m_kernel) = gpu.utilization(flops, bytes);
+    let dilution = if duration > 0.0 { t_kernel / duration } else { 0.0 };
+    let u_c = u_c_kernel * dilution;
+    let u_m = u_m_kernel * dilution;
+
+    PhaseProfile {
+        duration_s: duration,
+        gpu_power_w: gpu.power_w(u_c, u_m),
+        n_gpus: tp,
+        u_compute: u_c,
+        u_memory: u_m,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{lookup, swing_node};
+    use crate::perfmodel::flops::{decode_step, prefill};
+
+    fn node() -> Node {
+        Node::new(swing_node())
+    }
+
+    #[test]
+    fn prefill_high_power_decode_lower() {
+        let m = lookup("llama2-7b").unwrap();
+        let n = node();
+        let p_pre = run_phase(&m, &n, &prefill(&m, 1024, 32), m.n_gpus);
+        let p_dec = run_phase(&m, &n, &decode_step(&m, 1024, 32), m.n_gpus);
+        assert!(
+            p_pre.gpu_power_w > p_dec.gpu_power_w,
+            "prefill {} W vs decode {} W",
+            p_pre.gpu_power_w,
+            p_dec.gpu_power_w
+        );
+        assert!(p_pre.u_compute > 0.8);
+        assert!(p_dec.u_memory > 0.5);
+    }
+
+    #[test]
+    fn overhead_floors_small_models() {
+        // At trivial context the decode step cost approaches the dispatch
+        // overhead floor.
+        let m = lookup("llama2-7b").unwrap();
+        let n = node();
+        let p = run_phase(&m, &n, &decode_step(&m, 8, 1), m.n_gpus);
+        let floor = dispatch_overhead_s(&m, &n);
+        assert!(p.duration_s < 3.0 * floor, "{} vs floor {}", p.duration_s, floor);
+    }
+
+    #[test]
+    fn tp_speeds_up_kernels() {
+        let m = lookup("llama2-70b").unwrap();
+        let n = node();
+        let w = prefill(&m, 2048, 32);
+        let t4 = run_phase(&m, &n, &w, 4).duration_s;
+        let t1 = run_phase(&m, &n, &w, 1).duration_s;
+        assert!(t4 < t1);
+        assert!(t4 > t1 / 4.0); // comm + overhead prevent perfect scaling
+    }
+
+    #[test]
+    fn durations_realistic_magnitude() {
+        // Llama-2 7B, 32-token prompt, one decode step at batch 32: each
+        // decode step streams 13.5 GB of weights over ~1.2 TB/s → ≳11 ms.
+        let m = lookup("llama2-7b").unwrap();
+        let n = node();
+        let p = run_phase(&m, &n, &decode_step(&m, 32, 32), 1);
+        assert!(p.duration_s > 0.008 && p.duration_s < 0.08, "{}", p.duration_s);
+    }
+}

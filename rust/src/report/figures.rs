@@ -1,0 +1,138 @@
+//! Figure regenerators: the data series behind Figures 1–3, as CSV (one
+//! file per figure) plus compact terminal rendering.
+
+use crate::characterize::Cell;
+use crate::scheduler::ZetaSweep;
+use crate::util::table::ascii_series;
+use std::fmt::Write as _;
+
+/// Fig. 1 / Fig. 2 series: per model, per swept token count —
+/// runtime (s), throughput (tok/s), energy per token (J).
+pub fn sweep_csv(cells_by_model: &[(String, Vec<Cell>)], swept_axis: &str) -> String {
+    let mut out = format!("model,{swept_axis},runtime_s,throughput_tok_s,energy_per_token_j,gpu_energy_j,cpu_energy_j,trials\n");
+    for (model, cells) in cells_by_model {
+        for c in cells {
+            let swept = if swept_axis == "t_in" { c.t_in } else { c.t_out };
+            let _ = writeln!(
+                out,
+                "{},{},{:.6},{:.3},{:.6},{:.3},{:.3},{}",
+                model,
+                swept,
+                c.mean_runtime_s(),
+                c.throughput_tok_s(),
+                c.energy_per_token_j(),
+                c.mean_gpu_energy_j(),
+                c.mean_cpu_energy_j(),
+                c.trials.len()
+            );
+        }
+    }
+    out
+}
+
+/// Terminal sketch of a sweep (three panels as in the paper's figures).
+pub fn sweep_ascii(cells_by_model: &[(String, Vec<Cell>)], swept_axis: &str) -> String {
+    let mut out = String::new();
+    for (title, f) in [
+        ("runtime (s)", 0usize),
+        ("throughput (tok/s)", 1),
+        ("energy/token (J)", 2),
+    ] {
+        let _ = writeln!(out, "--- {title} vs {swept_axis} ---");
+        for (model, cells) in cells_by_model {
+            let xs: Vec<f64> = cells
+                .iter()
+                .map(|c| if swept_axis == "t_in" { c.t_in } else { c.t_out } as f64)
+                .collect();
+            let ys: Vec<f64> = cells
+                .iter()
+                .map(|c| match f {
+                    0 => c.mean_runtime_s(),
+                    1 => c.throughput_tok_s(),
+                    _ => c.energy_per_token_j(),
+                })
+                .collect();
+            out.push_str(&ascii_series(model, &xs, &ys, 24));
+        }
+    }
+    out
+}
+
+/// Fig. 3 series: scheduler curve + flat baselines.
+pub fn zeta_csv(sweep: &ZetaSweep) -> String {
+    let mut out = String::from(
+        "series,zeta,mean_energy_j,mean_runtime_s,mean_accuracy\n",
+    );
+    for p in &sweep.points {
+        let _ = writeln!(
+            out,
+            "scheduler,{:.3},{:.3},{:.6},{:.3}",
+            p.zeta, p.eval.mean_energy_j, p.eval.mean_runtime_s, p.eval.mean_accuracy
+        );
+    }
+    for (label, e) in &sweep.baselines {
+        // Baselines are ζ-independent: emit at both ends for plotting.
+        for zeta in [0.0, 1.0] {
+            let _ = writeln!(
+                out,
+                "{label},{zeta:.3},{:.3},{:.6},{:.3}",
+                e.mean_energy_j, e.mean_runtime_s, e.mean_accuracy
+            );
+        }
+    }
+    out
+}
+
+/// Terminal sketch of the ζ sweep.
+pub fn zeta_ascii(sweep: &ZetaSweep) -> String {
+    let xs: Vec<f64> = sweep.points.iter().map(|p| p.zeta).collect();
+    let mut out = String::new();
+    for (title, f) in [
+        ("mean energy (J)", 0usize),
+        ("mean runtime (s)", 1),
+        ("mean accuracy (%)", 2),
+    ] {
+        let ys: Vec<f64> = sweep
+            .points
+            .iter()
+            .map(|p| match f {
+                0 => p.eval.mean_energy_j,
+                1 => p.eval.mean_runtime_s,
+                _ => p.eval.mean_accuracy,
+            })
+            .collect();
+        out.push_str(&ascii_series(&format!("{title} vs zeta"), &xs, &ys, 24));
+    }
+    for (label, e) in &sweep.baselines {
+        let _ = writeln!(
+            out,
+            "  baseline {label:<22} E={:.1} J  t={:.3} s  A={:.2}%",
+            e.mean_energy_j, e.mean_runtime_s, e.mean_accuracy
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::characterize::Campaign;
+    use crate::config::{lookup, swing_node, ExperimentConfig};
+    use crate::hardware::Node;
+    use crate::perfmodel::Cluster;
+    use crate::util::Rng;
+
+    #[test]
+    fn sweep_csv_well_formed() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.input_sweep = vec![8, 32];
+        let campaign = Campaign::new(Cluster::new(Node::new(swing_node())), cfg);
+        let m = lookup("llama2-7b").unwrap();
+        let cells = campaign.sweep_input(&m, &mut Rng::new(1));
+        let csv = sweep_csv(&[("llama2-7b".into(), cells)], "t_in");
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("model,t_in"));
+        assert_eq!(lines[1].split(',').count(), 8);
+    }
+}

@@ -1,0 +1,20 @@
+//! Report layer: regenerates every table and figure of the paper from the
+//! simulation + fitting pipeline, as ASCII (terminal) and CSV (`results/`).
+
+pub mod figures;
+pub mod tables;
+
+pub use figures::{sweep_ascii, sweep_csv, zeta_ascii, zeta_csv};
+pub use tables::{coefficients, table1, table2, table3};
+
+use std::path::Path;
+
+/// Write a result file, creating directories as needed.
+pub fn write_result(path: &Path, content: &str) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, content)?;
+    crate::info!("wrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,142 @@
+//! Table regenerators: Tables 1–3 of the paper in the same row/column
+//! layout, rendered via `util::Table` (ASCII for the terminal, CSV for
+//! `results/`).
+
+use crate::config::LlmSpec;
+use crate::models::ModelSet;
+use crate::stats::AnovaTable;
+use crate::util::{fnum, Table};
+
+/// Table 1: the model zoo.
+pub fn table1(zoo: &[LlmSpec]) -> Table {
+    let mut t = Table::new(
+        "Table 1: LLM Energy Consumption and Runtime",
+        &["LLM (# Params)", "vRAM Size (GB)", "# A100s", "A_K (%)"],
+    );
+    for m in zoo {
+        t.row(vec![
+            m.display.to_string(),
+            format!("{:.2}", m.vram_gb),
+            m.n_gpus.to_string(),
+            format!("{:.2}", m.accuracy),
+        ]);
+    }
+    t
+}
+
+/// Table 2: two-way ANOVA for energy and runtime (pooled over models).
+pub fn table2(energy: &AnovaTable, runtime: &AnovaTable) -> Table {
+    let mut t = Table::new(
+        "Table 2: ANOVA Results for LLM Energy Consumption and Runtime",
+        &["Metric", "Variable", "Sum of Squares", "F-statistic", "p-value"],
+    );
+    let mut push = |metric: &str, table: &AnovaTable| {
+        for (label, e) in [
+            ("Input Tokens", &table.factor_a),
+            ("Output Tokens", &table.factor_b),
+            ("Interaction", &table.interaction),
+        ] {
+            t.row(vec![
+                metric.to_string(),
+                label.to_string(),
+                fnum(e.sum_sq, 2),
+                format!("{:.2}", e.f_stat),
+                fnum(e.p_value, 2),
+            ]);
+        }
+    };
+    push("Energy (J)", energy);
+    push("Runtime (s)", runtime);
+    t
+}
+
+/// Table 3: OLS fit summary per model (R², F, p for e_K and r_K).
+pub fn table3(sets: &[ModelSet], zoo: &[LlmSpec]) -> Table {
+    let mut t = Table::new(
+        "Table 3: Summary of OLS Regression Results Across Models",
+        &[
+            "LLM (# Params)",
+            "e_K R^2",
+            "e_K F-stat",
+            "e_K p-value",
+            "r_K R^2",
+            "r_K F-stat",
+            "r_K p-value",
+        ],
+    );
+    for s in sets {
+        let display = zoo
+            .iter()
+            .find(|m| m.id == s.model_id)
+            .map(|m| m.display.to_string())
+            .unwrap_or_else(|| s.model_id.clone());
+        t.row(vec![
+            display,
+            format!("{:.3}", s.energy.r2),
+            format!("{:.1}", s.energy.f_stat),
+            fnum(s.energy.p_value, 2),
+            format!("{:.3}", s.runtime.r2),
+            format!("{:.1}", s.runtime.f_stat),
+            fnum(s.runtime.p_value, 2),
+        ]);
+    }
+    t
+}
+
+/// Fitted-coefficient dump (appendix-style; used by EXPERIMENTS.md).
+pub fn coefficients(sets: &[ModelSet]) -> Table {
+    let mut t = Table::new(
+        "Fitted workload-model coefficients",
+        &[
+            "model", "alpha0 (J/tok_in)", "alpha1 (J/tok_out)", "alpha2 (J/tok^2)",
+            "beta0 (s/tok_in)", "beta1 (s/tok_out)", "beta2 (s/tok^2)",
+        ],
+    );
+    for s in sets {
+        t.row(vec![
+            s.model_id.clone(),
+            fnum(s.energy.coefs[0], 4),
+            fnum(s.energy.coefs[1], 4),
+            fnum(s.energy.coefs[2], 6),
+            fnum(s.runtime.coefs[0], 6),
+            fnum(s.runtime.coefs[1], 6),
+            fnum(s.runtime.coefs[2], 8),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::zoo;
+    use crate::stats::anova::{two_way, Obs};
+
+    #[test]
+    fn table1_has_all_models() {
+        let t = table1(&zoo());
+        assert_eq!(t.n_rows(), 7);
+        let ascii = t.to_ascii();
+        assert!(ascii.contains("Mixtral (8x7B)"));
+        assert!(ascii.contains("64.52"));
+    }
+
+    #[test]
+    fn table2_layout() {
+        let obs: Vec<Obs> = (0..3)
+            .flat_map(|a| {
+                (0..3).flat_map(move |b| {
+                    (0..3).map(move |r| Obs {
+                        a,
+                        b,
+                        y: (a * 3 + b) as f64 + r as f64 * 0.1,
+                    })
+                })
+            })
+            .collect();
+        let an = two_way(&obs, "Input Tokens", "Output Tokens").unwrap();
+        let t = table2(&an, &an);
+        assert_eq!(t.n_rows(), 6);
+        assert!(t.to_csv().contains("Interaction"));
+    }
+}

@@ -1,0 +1,272 @@
+//! Artifact manifest parsing and parameter-blob loading.
+//!
+//! `make artifacts` (the Python AOT pipeline) writes `artifacts/manifest.json`
+//! describing, per proxy model: the prefill/decode HLO text files, the
+//! flat little-endian f32 parameter blob, and every static shape the Rust
+//! runtime needs. This module reads and validates all of it — the Rust
+//! side trusts nothing it can re-check against its own zoo.
+
+use crate::util::Json;
+use std::path::{Path, PathBuf};
+
+/// Parameter array descriptor (order matters — it is the HLO input order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One model's artifact set.
+#[derive(Debug, Clone)]
+pub struct ModelArtifact {
+    pub id: String,
+    pub prefill_hlo: PathBuf,
+    pub decode_hlo: PathBuf,
+    /// fused multi-step decode executable (§Perf optimization #2)
+    pub decode_chunk_hlo: Option<PathBuf>,
+    /// steps per fused decode call (0 when absent)
+    pub chunk: usize,
+    pub params_bin: PathBuf,
+    pub params: Vec<ParamSpec>,
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub n_experts: usize,
+}
+
+/// The router cost-matrix kernel artifact.
+#[derive(Debug, Clone)]
+pub struct CostMatrixArtifact {
+    pub hlo: PathBuf,
+    pub k: usize,
+    pub n: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelArtifact>,
+    pub cost_matrix: CostMatrixArtifact,
+    pub fingerprint: String,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("manifest not found in {dir:?} (run `make artifacts`): {e}"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        if v.get("version").as_u64() != Some(1) {
+            anyhow::bail!("unsupported manifest version {:?}", v.get("version"));
+        }
+
+        let models_obj = v
+            .get("models")
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("manifest: missing models object"))?;
+        let mut models = Vec::new();
+        for (id, m) in models_obj {
+            let geti = |k: &str| -> anyhow::Result<usize> {
+                m.get(k)
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("manifest model {id}: bad field {k}"))
+            };
+            let gets = |k: &str| -> anyhow::Result<String> {
+                Ok(m.get(k)
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("manifest model {id}: bad field {k}"))?
+                    .to_string())
+            };
+            let params = m
+                .get("params")
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("manifest model {id}: missing params"))?
+                .iter()
+                .map(|p| -> anyhow::Result<ParamSpec> {
+                    Ok(ParamSpec {
+                        name: p
+                            .get("name")
+                            .as_str()
+                            .ok_or_else(|| anyhow::anyhow!("param name"))?
+                            .to_string(),
+                        shape: p
+                            .get("shape")
+                            .as_arr()
+                            .ok_or_else(|| anyhow::anyhow!("param shape"))?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("param dim")))
+                            .collect::<anyhow::Result<_>>()?,
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            models.push(ModelArtifact {
+                id: id.clone(),
+                prefill_hlo: dir.join(gets("prefill_hlo")?),
+                decode_hlo: dir.join(gets("decode_hlo")?),
+                decode_chunk_hlo: m
+                    .get("decode_chunk_hlo")
+                    .as_str()
+                    .map(|f| dir.join(f)),
+                chunk: m.get("chunk").as_usize().unwrap_or(0),
+                params_bin: dir.join(gets("params_bin")?),
+                params,
+                batch: geti("batch")?,
+                prompt_len: geti("prompt_len")?,
+                max_seq: geti("max_seq")?,
+                vocab: geti("vocab")?,
+                n_layers: geti("n_layers")?,
+                n_kv_heads: geti("n_kv_heads")?,
+                head_dim: geti("head_dim")?,
+                n_experts: geti("n_experts")?,
+            });
+        }
+        models.sort_by(|a, b| a.id.cmp(&b.id));
+
+        let cm = v.get("cost_matrix");
+        let cost_matrix = CostMatrixArtifact {
+            hlo: dir.join(
+                cm.get("hlo")
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("manifest: cost_matrix.hlo"))?,
+            ),
+            k: cm
+                .get("k")
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("manifest: cost_matrix.k"))?,
+            n: cm
+                .get("n")
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("manifest: cost_matrix.n"))?,
+        };
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            models,
+            cost_matrix,
+            fingerprint: v.get("fingerprint").as_str().unwrap_or("").to_string(),
+        })
+    }
+
+    pub fn model(&self, id: &str) -> Option<&ModelArtifact> {
+        self.models.iter().find(|m| m.id == id)
+    }
+}
+
+impl ModelArtifact {
+    /// Read the parameter blob and split it per the spec. Returns one
+    /// `Vec<f32>` per parameter, in HLO input order.
+    pub fn load_params(&self) -> anyhow::Result<Vec<Vec<f32>>> {
+        let blob = std::fs::read(&self.params_bin)?;
+        let expect: usize = self.params.iter().map(|p| 4 * p.elements()).sum();
+        if blob.len() != expect {
+            anyhow::bail!(
+                "params blob {} is {} bytes, spec wants {expect}",
+                self.params_bin.display(),
+                blob.len()
+            );
+        }
+        let mut out = Vec::with_capacity(self.params.len());
+        let mut off = 0usize;
+        for p in &self.params {
+            let n = p.elements();
+            let floats: Vec<f32> = blob[off..off + 4 * n]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            off += 4 * n;
+            out.push(floats);
+        }
+        Ok(out)
+    }
+
+    /// Cross-check against the Rust zoo's proxy architecture.
+    pub fn validate_against_zoo(&self) -> anyhow::Result<()> {
+        let spec = crate::config::lookup(&self.id)
+            .ok_or_else(|| anyhow::anyhow!("artifact model {} not in zoo", self.id))?;
+        let p = &spec.proxy;
+        let checks = [
+            ("n_layers", p.n_layers as usize, self.n_layers),
+            ("max_seq", p.max_seq as usize, self.max_seq),
+            ("n_kv_heads", p.n_kv_heads as usize, self.n_kv_heads),
+            ("vocab", p.vocab as usize, self.vocab),
+            ("n_experts", p.n_experts as usize, self.n_experts),
+            (
+                "head_dim",
+                (p.d_model / p.n_heads) as usize,
+                self.head_dim,
+            ),
+        ];
+        for (name, want, got) in checks {
+            if want != got {
+                anyhow::bail!(
+                    "artifact {} {name} mismatch: zoo {want} vs manifest {got} \
+                     (re-run `make artifacts`?)",
+                    self.id
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_loads_and_validates() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert_eq!(m.models.len(), 7);
+        assert_eq!(m.cost_matrix.k, 3);
+        for a in &m.models {
+            a.validate_against_zoo().unwrap();
+            assert!(a.prefill_hlo.exists());
+            assert!(a.decode_hlo.exists());
+        }
+    }
+
+    #[test]
+    fn params_blob_splits() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let a = m.model("llama2-7b").unwrap();
+        let params = a.load_params().unwrap();
+        assert_eq!(params.len(), a.params.len());
+        assert_eq!(params[0].len(), a.params[0].elements());
+        // embed is [vocab, d_model]
+        assert_eq!(a.params[0].name, "embed");
+        assert_eq!(a.params[0].shape[0], a.vocab);
+    }
+
+    #[test]
+    fn missing_manifest_errors_helpfully() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

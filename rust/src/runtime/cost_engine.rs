@@ -1,0 +1,165 @@
+//! The router's scoring engine: executes the AOT-compiled L1 cost-matrix
+//! kernel (Eq. 2 blend) through PJRT. Query batches are padded to the
+//! artifact's static tile width.
+
+use super::artifact::CostMatrixArtifact;
+use super::engine::compile_hlo;
+use crate::models::{ModelSet, Normalizer};
+use crate::workload::Query;
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Compiled cost-matrix kernel bound to K model slots.
+pub struct CostEngine {
+    exe: PjRtLoadedExecutable,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl CostEngine {
+    pub fn load(client: &PjRtClient, spec: &CostMatrixArtifact) -> anyhow::Result<CostEngine> {
+        Ok(CostEngine {
+            exe: compile_hlo(client, &spec.hlo)?,
+            k: spec.k,
+            n: spec.n,
+        })
+    }
+
+    /// Score `queries` for the K hosted models. `sets.len()` must equal
+    /// the artifact's K. Returns `costs[k][i]` for the real (unpadded)
+    /// queries.
+    pub fn score(
+        &self,
+        sets: &[ModelSet],
+        norm: &Normalizer,
+        queries: &[Query],
+        zeta: f64,
+    ) -> anyhow::Result<Vec<Vec<f64>>> {
+        if sets.len() != self.k {
+            anyhow::bail!("cost artifact has K={}, got {} model sets", self.k, sets.len());
+        }
+        if queries.len() > self.n {
+            // Chunk over tiles.
+            let mut out: Vec<Vec<f64>> = vec![Vec::with_capacity(queries.len()); self.k];
+            for chunk in queries.chunks(self.n) {
+                let part = self.score(sets, norm, chunk, zeta)?;
+                for (o, p) in out.iter_mut().zip(part) {
+                    o.extend(p);
+                }
+            }
+            return Ok(out);
+        }
+
+        let coefs: Vec<f32> = sets
+            .iter()
+            .flat_map(|s| s.energy.coefs.iter().map(|&c| c as f32))
+            .collect();
+        let accs: Vec<f32> = sets.iter().map(|s| s.accuracy.a_k as f32).collect();
+        let maxima = [norm.max_energy_j as f32, norm.max_accuracy as f32];
+        let mut taus = vec![0f32; self.n * 2];
+        for (i, q) in queries.iter().enumerate() {
+            taus[2 * i] = q.t_in as f32;
+            taus[2 * i + 1] = q.t_out as f32;
+        }
+
+        let coefs_l = Literal::vec1(&coefs).reshape(&[self.k as i64, 3])?;
+        let accs_l = Literal::vec1(&accs);
+        let maxima_l = Literal::vec1(&maxima);
+        let zeta_l = Literal::vec1(&[zeta as f32]);
+        let taus_l = Literal::vec1(&taus).reshape(&[self.n as i64, 2])?;
+
+        let out = self
+            .exe
+            .execute::<Literal>(&[coefs_l, accs_l, maxima_l, zeta_l, taus_l])?;
+        let costs_lit = out[0][0].to_literal_sync()?.to_tuple1()?;
+        let flat: Vec<f32> = costs_lit.to_vec()?;
+        debug_assert_eq!(flat.len(), self.k * self.n);
+        Ok((0..self.k)
+            .map(|k| {
+                (0..queries.len())
+                    .map(|i| flat[k * self.n + i] as f64)
+                    .collect()
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{AccuracyModel, Target, WorkloadModel};
+    use crate::runtime::artifact::Manifest;
+    use crate::scheduler::CostMatrix;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn sets() -> Vec<ModelSet> {
+        let mk = |id: &str, scale: f64, acc: f64| ModelSet {
+            model_id: id.into(),
+            energy: WorkloadModel {
+                model_id: id.into(),
+                target: Target::EnergyJ,
+                coefs: [0.6 * scale, 9.0 * scale, 0.004 * scale],
+                r2: 0.97,
+                f_stat: 1e3,
+                p_value: 0.0,
+                n_obs: 100,
+            },
+            runtime: WorkloadModel {
+                model_id: id.into(),
+                target: Target::RuntimeS,
+                coefs: [2e-3 * scale, 3e-2 * scale, 1e-5 * scale],
+                r2: 0.97,
+                f_stat: 1e3,
+                p_value: 0.0,
+                n_obs: 100,
+            },
+            accuracy: AccuracyModel::new(id, acc),
+        };
+        vec![
+            mk("llama2-7b", 1.0, 50.97),
+            mk("llama2-13b", 1.8, 55.69),
+            mk("llama2-70b", 6.5, 64.52),
+        ]
+    }
+
+    /// The PJRT-executed kernel must agree with the native Rust scoring
+    /// (`scheduler::CostMatrix::build`) — L1/L3 parity.
+    #[test]
+    fn kernel_matches_native_scoring() {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let client = PjRtClient::cpu().unwrap();
+        let manifest = Manifest::load(&artifacts_dir()).unwrap();
+        let engine = CostEngine::load(&client, &manifest.cost_matrix).unwrap();
+
+        let sets = sets();
+        let mut rng = crate::util::Rng::new(5);
+        let queries: Vec<Query> = (0..700) // > one tile, forces chunking
+            .map(|id| Query {
+                id,
+                t_in: rng.int_range(1, 2048) as u32,
+                t_out: rng.int_range(1, 4096) as u32,
+            })
+            .collect();
+        let norm = Normalizer::from_workload(&sets, &queries);
+
+        for &zeta in &[0.0, 0.35, 1.0] {
+            let got = engine.score(&sets, &norm, &queries, zeta).unwrap();
+            let want = CostMatrix::build(&sets, &norm, &queries, zeta);
+            for k in 0..3 {
+                for i in 0..queries.len() {
+                    let (g, w) = (got[k][i], want.cost(k, i));
+                    assert!(
+                        (g - w).abs() < 1e-4 * (1.0 + w.abs()),
+                        "zeta={zeta} k={k} i={i}: {g} vs {w}"
+                    );
+                }
+            }
+        }
+    }
+}

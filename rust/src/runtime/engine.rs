@@ -1,0 +1,389 @@
+//! The inference engine: loads one model's AOT artifacts (HLO text +
+//! parameter blob), compiles them on the PJRT CPU client, and drives the
+//! prefill → decode loop with greedy sampling.
+//!
+//! All types here are deliberately `!Send` (the `xla` crate's client is
+//! `Rc`-based); the coordinator keeps every engine on a single engine-host
+//! thread and talks to it over channels.
+
+use super::artifact::ModelArtifact;
+use crate::util::Stopwatch;
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Load an HLO-text artifact and compile it.
+pub fn compile_hlo(client: &PjRtClient, path: &std::path::Path) -> anyhow::Result<PjRtLoadedExecutable> {
+    let proto = HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow::anyhow!("loading {}: {e}", path.display()))?;
+    let comp = XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+/// One generated batch result.
+#[derive(Debug, Clone)]
+pub struct BatchOutput {
+    /// generated token ids per sequence (each truncated to its request)
+    pub tokens: Vec<Vec<i32>>,
+    /// wall time until the first decode step finished (time-to-first-token)
+    pub ttft_s: f64,
+    /// total wall time of the batch
+    pub latency_s: f64,
+    /// decode steps executed
+    pub steps: usize,
+}
+
+/// A compiled, parameter-loaded model ready to serve.
+pub struct Engine {
+    pub spec: ModelArtifact,
+    prefill_exe: PjRtLoadedExecutable,
+    decode_exe: PjRtLoadedExecutable,
+    /// fused CHUNK-step decode (amortizes per-call copies; §Perf #2)
+    chunk_exe: Option<PjRtLoadedExecutable>,
+    /// parameter literals in HLO input order
+    params: Vec<Literal>,
+}
+
+impl Engine {
+    /// Compile the executables and upload the parameters.
+    pub fn load(client: &PjRtClient, spec: &ModelArtifact) -> anyhow::Result<Engine> {
+        spec.validate_against_zoo()?;
+        let prefill_exe = compile_hlo(client, &spec.prefill_hlo)?;
+        let decode_exe = compile_hlo(client, &spec.decode_hlo)?;
+        let chunk_exe = match (&spec.decode_chunk_hlo, spec.chunk) {
+            (Some(path), c) if c > 0 => Some(compile_hlo(client, path)?),
+            _ => None,
+        };
+        let raw = spec.load_params()?;
+        let mut params = Vec::with_capacity(raw.len());
+        for (values, ps) in raw.iter().zip(&spec.params) {
+            let dims: Vec<i64> = ps.shape.iter().map(|&d| d as i64).collect();
+            params.push(Literal::vec1(values).reshape(&dims)?);
+        }
+        Ok(Engine {
+            spec: spec.clone(),
+            prefill_exe,
+            decode_exe,
+            chunk_exe,
+            params,
+        })
+    }
+
+    /// Pad/truncate prompts into the engine's static [B, prompt_len] shape.
+    /// Returns (tokens, lengths). Empty slots (fewer prompts than B) are
+    /// filled with a 1-token dummy prompt.
+    fn pack_prompts(&self, prompts: &[Vec<i32>]) -> anyhow::Result<(Vec<i32>, Vec<i32>)> {
+        let b = self.spec.batch;
+        let t = self.spec.prompt_len;
+        if prompts.is_empty() || prompts.len() > b {
+            anyhow::bail!("need 1..={b} prompts, got {}", prompts.len());
+        }
+        let mut tokens = vec![0i32; b * t];
+        let mut lengths = vec![1i32; b];
+        for (i, p) in prompts.iter().enumerate() {
+            if p.is_empty() || p.len() > t {
+                anyhow::bail!("prompt {i} length {} outside 1..={t}", p.len());
+            }
+            for (j, &tok) in p.iter().enumerate() {
+                if tok < 0 || tok as usize >= self.spec.vocab {
+                    anyhow::bail!("prompt {i} token {tok} outside vocab {}", self.spec.vocab);
+                }
+                tokens[i * t + j] = tok;
+            }
+            lengths[i] = p.len() as i32;
+        }
+        Ok((tokens, lengths))
+    }
+
+    /// Greedy argmax over a [B, vocab] logits literal.
+    fn argmax_tokens(&self, logits: &Literal) -> anyhow::Result<Vec<i32>> {
+        let v: Vec<f32> = logits.to_vec()?;
+        let vocab = self.spec.vocab;
+        debug_assert_eq!(v.len(), self.spec.batch * vocab);
+        Ok(v
+            .chunks_exact(vocab)
+            .map(|row| {
+                let mut best = 0usize;
+                let mut best_v = f32::NEG_INFINITY;
+                for (i, &x) in row.iter().enumerate() {
+                    if x > best_v {
+                        best_v = x;
+                        best = i;
+                    }
+                }
+                best as i32
+            })
+            .collect())
+    }
+
+    /// Run prefill for a batch of prompts. Returns (next tokens, kc, vc,
+    /// positions) — the state needed to start decoding.
+    pub fn prefill(
+        &self,
+        prompts: &[Vec<i32>],
+    ) -> anyhow::Result<(Vec<i32>, Literal, Literal, Vec<i32>)> {
+        let (tokens, lengths) = self.pack_prompts(prompts)?;
+        let b = self.spec.batch as i64;
+        let t = self.spec.prompt_len as i64;
+        let mut args: Vec<&Literal> = self.params.iter().collect();
+        let tok_lit = Literal::vec1(&tokens).reshape(&[b, t])?;
+        let len_lit = Literal::vec1(&lengths).reshape(&[b])?;
+        args.push(&tok_lit);
+        args.push(&len_lit);
+
+        let out = self.prefill_exe.execute::<&Literal>(&args)?;
+        let mut parts = out[0][0].to_literal_sync()?.to_tuple()?;
+        if parts.len() != 3 {
+            anyhow::bail!("prefill returned {} outputs, want 3", parts.len());
+        }
+        let vc = parts.pop().unwrap();
+        let kc = parts.pop().unwrap();
+        let logits = parts.pop().unwrap();
+        Ok((self.argmax_tokens(&logits)?, kc, vc, lengths))
+    }
+
+    /// One decode step: feed `token` at `pos`, get next-token ids and the
+    /// updated caches.
+    pub fn decode(
+        &self,
+        token: &[i32],
+        pos: &[i32],
+        kc: Literal,
+        vc: Literal,
+    ) -> anyhow::Result<(Vec<i32>, Literal, Literal)> {
+        let b = self.spec.batch as i64;
+        let tok_lit = Literal::vec1(token).reshape(&[b])?;
+        let pos_lit = Literal::vec1(pos).reshape(&[b])?;
+        let mut args: Vec<&Literal> = self.params.iter().collect();
+        args.push(&tok_lit);
+        args.push(&pos_lit);
+        args.push(&kc);
+        args.push(&vc);
+
+        let out = self.decode_exe.execute::<&Literal>(&args)?;
+        let mut parts = out[0][0].to_literal_sync()?.to_tuple()?;
+        if parts.len() != 3 {
+            anyhow::bail!("decode returned {} outputs, want 3", parts.len());
+        }
+        let new_vc = parts.pop().unwrap();
+        let new_kc = parts.pop().unwrap();
+        let logits = parts.pop().unwrap();
+        Ok((self.argmax_tokens(&logits)?, new_kc, new_vc))
+    }
+
+    /// Disable the fused decode path (parity testing / ablation).
+    pub fn set_chunk_enabled(&mut self, enabled: bool) {
+        if !enabled {
+            self.chunk_exe = None;
+        }
+    }
+
+    /// Whether the fused decode path is available.
+    pub fn has_chunk(&self) -> bool {
+        self.chunk_exe.is_some()
+    }
+
+    /// Run the fused CHUNK-step decode: feed `token` at `pos`, get the next
+    /// `spec.chunk` greedy tokens per sequence and the advanced caches.
+    pub fn decode_chunk(
+        &self,
+        token: &[i32],
+        pos: &[i32],
+        kc: Literal,
+        vc: Literal,
+    ) -> anyhow::Result<(Vec<Vec<i32>>, Literal, Literal)> {
+        let exe = self
+            .chunk_exe
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no decode_chunk artifact for {}", self.spec.id))?;
+        let b = self.spec.batch as i64;
+        let tok_lit = Literal::vec1(token).reshape(&[b])?;
+        let pos_lit = Literal::vec1(pos).reshape(&[b])?;
+        let mut args: Vec<&Literal> = self.params.iter().collect();
+        args.push(&tok_lit);
+        args.push(&pos_lit);
+        args.push(&kc);
+        args.push(&vc);
+
+        let out = exe.execute::<&Literal>(&args)?;
+        let mut parts = out[0][0].to_literal_sync()?.to_tuple()?;
+        if parts.len() != 3 {
+            anyhow::bail!("decode_chunk returned {} outputs, want 3", parts.len());
+        }
+        let new_vc = parts.pop().unwrap();
+        let new_kc = parts.pop().unwrap();
+        let toks: Vec<i32> = parts.pop().unwrap().to_vec()?;
+        let chunk = self.spec.chunk;
+        debug_assert_eq!(toks.len(), self.spec.batch * chunk);
+        let rows = toks.chunks_exact(chunk).map(|r| r.to_vec()).collect();
+        Ok((rows, new_kc, new_vc))
+    }
+
+    /// Serve one batch end to end with greedy decoding. `n_gen[i]` tokens
+    /// are generated for prompt i (bounded by the cache capacity). Uses
+    /// the fused chunk executable whenever ≥ one full chunk of steps
+    /// remains, falling back to single steps for the tail.
+    pub fn generate(
+        &self,
+        prompts: &[Vec<i32>],
+        n_gen: &[usize],
+    ) -> anyhow::Result<BatchOutput> {
+        if prompts.len() != n_gen.len() {
+            anyhow::bail!("prompts/n_gen length mismatch");
+        }
+        let max_steps = n_gen.iter().copied().max().unwrap_or(0);
+        let capacity = self.spec.max_seq - self.spec.prompt_len;
+        if max_steps > capacity {
+            anyhow::bail!("n_gen {max_steps} exceeds cache capacity {capacity}");
+        }
+
+        let sw = Stopwatch::start();
+        let (mut next, mut kc, mut vc, lengths) = self.prefill(prompts)?;
+        let mut pos: Vec<i32> = lengths.clone();
+        let mut outputs: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+
+        // Token 1 comes straight from the prefill logits.
+        let store = |outputs: &mut Vec<Vec<i32>>, toks: &[i32]| {
+            for (i, out) in outputs.iter_mut().enumerate() {
+                if out.len() < n_gen[i] {
+                    out.push(toks[i]);
+                }
+            }
+        };
+        let done = |outputs: &Vec<Vec<i32>>| {
+            outputs.iter().zip(n_gen).all(|(o, &n)| o.len() >= n)
+        };
+        if max_steps > 0 {
+            store(&mut outputs, &next);
+        }
+        let ttft = sw.elapsed_s();
+        let mut steps_done = 1usize.min(max_steps);
+
+        while steps_done < max_steps && !done(&outputs) {
+            let remaining = max_steps - steps_done;
+            let chunk = self.spec.chunk;
+            // Fused path also pays off on near-full tails (overshoot and
+            // discard) as long as the cache has room for the extra slots.
+            let cache_room = pos
+                .iter()
+                .all(|&p| p as usize + chunk <= self.spec.max_seq);
+            let tail_worthwhile = remaining * 4 >= chunk * 3 && cache_room;
+            if self.chunk_exe.is_some() && chunk > 0 && (remaining >= chunk || tail_worthwhile) {
+                // Fused path: `chunk` greedy steps per PJRT call.
+                let (rows, nkc, nvc) = self.decode_chunk(&next, &pos, kc, vc)?;
+                kc = nkc;
+                vc = nvc;
+                for j in 0..chunk {
+                    let col: Vec<i32> = rows.iter().map(|r| r[j]).collect();
+                    store(&mut outputs, &col);
+                }
+                next = rows.iter().map(|r| r[chunk - 1]).collect();
+                for p in pos.iter_mut() {
+                    *p += chunk as i32;
+                }
+                steps_done += chunk;
+            } else {
+                let (n, nkc, nvc) = self.decode(&next, &pos, kc, vc)?;
+                next = n;
+                kc = nkc;
+                vc = nvc;
+                for p in pos.iter_mut() {
+                    *p += 1;
+                }
+                store(&mut outputs, &next);
+                steps_done += 1;
+            }
+        }
+        // Pad any sequence that finished early relative to the batch.
+        for (i, out) in outputs.iter_mut().enumerate() {
+            while out.len() < n_gen[i] {
+                out.push(next[i]);
+            }
+        }
+
+        Ok(BatchOutput {
+            tokens: outputs,
+            ttft_s: ttft,
+            latency_s: sw.elapsed_s(),
+            steps: steps_done,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Manifest;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn engine(id: &str) -> Option<Engine> {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        let client = PjRtClient::cpu().unwrap();
+        let manifest = Manifest::load(&artifacts_dir()).unwrap();
+        Some(Engine::load(&client, manifest.model(id).unwrap()).unwrap())
+    }
+
+    #[test]
+    fn generate_shapes_and_determinism() {
+        let Some(e) = engine("llama2-7b") else { return };
+        let prompts = vec![vec![1, 2, 3], vec![10, 20, 30, 40, 50]];
+        let out1 = e.generate(&prompts, &[4, 6]).unwrap();
+        assert_eq!(out1.tokens[0].len(), 4);
+        assert_eq!(out1.tokens[1].len(), 6);
+        assert!(out1.ttft_s > 0.0 && out1.ttft_s <= out1.latency_s);
+        for t in out1.tokens.iter().flatten() {
+            assert!(*t >= 0 && (*t as usize) < e.spec.vocab);
+        }
+        // Greedy decoding is deterministic.
+        let out2 = e.generate(&prompts, &[4, 6]).unwrap();
+        assert_eq!(out1.tokens, out2.tokens);
+    }
+
+    #[test]
+    fn prompt_isolation_under_batching() {
+        // A prompt's output must not depend on what else is in the batch —
+        // the masking/KV isolation invariant of the whole stack.
+        let Some(e) = engine("llama2-7b") else { return };
+        let a = e.generate(&[vec![5, 6, 7]], &[5]).unwrap();
+        let b = e
+            .generate(&[vec![5, 6, 7], vec![100, 200], vec![42; 30]], &[5, 5, 5])
+            .unwrap();
+        assert_eq!(a.tokens[0], b.tokens[0]);
+    }
+
+    #[test]
+    fn rejects_invalid_inputs() {
+        let Some(e) = engine("llama2-7b") else { return };
+        assert!(e.generate(&[], &[]).is_err());
+        assert!(e.generate(&[vec![1]], &[10_000]).is_err());
+        assert!(e.generate(&[vec![99_999]], &[1]).is_err());
+        let too_long = vec![1i32; e.spec.prompt_len + 1];
+        assert!(e.generate(&[too_long], &[1]).is_err());
+    }
+
+    #[test]
+    fn chunked_decode_matches_single_step() {
+        // The fused CHUNK executable must produce exactly the single-step
+        // tokens (greedy parity across the L2 fusion boundary).
+        let Some(mut e) = engine("llama2-7b") else { return };
+        assert!(e.has_chunk());
+        let prompts = vec![vec![3, 1, 4, 1, 5], vec![9, 2, 6]];
+        let n_gen = [20usize, 14];
+        let fused = e.generate(&prompts, &n_gen).unwrap();
+        e.set_chunk_enabled(false);
+        let single = e.generate(&prompts, &n_gen).unwrap();
+        assert_eq!(fused.tokens, single.tokens);
+    }
+
+    #[test]
+    fn moe_engine_runs() {
+        let Some(e) = engine("mixtral-8x7b") else { return };
+        let out = e.generate(&[vec![7, 8, 9]], &[3]).unwrap();
+        assert_eq!(out.tokens[0].len(), 3);
+    }
+}

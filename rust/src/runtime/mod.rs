@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT artifacts (`make artifacts`) and executes
+//! them from Rust. Python never runs here — the HLO text + parameter blobs
+//! are the entire interface between the build path and the request path.
+
+pub mod artifact;
+pub mod cost_engine;
+pub mod engine;
+pub mod registry;
+
+pub use artifact::{CostMatrixArtifact, Manifest, ModelArtifact, ParamSpec};
+pub use cost_engine::CostEngine;
+pub use engine::{compile_hlo, BatchOutput, Engine};
+pub use registry::Registry;

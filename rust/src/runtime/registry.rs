@@ -1,0 +1,94 @@
+//! Registry: one PJRT client + every compiled engine, owned by the
+//! engine-host thread.
+
+use super::artifact::Manifest;
+use super::cost_engine::CostEngine;
+use super::engine::Engine;
+use std::collections::BTreeMap;
+use std::path::Path;
+use xla::PjRtClient;
+
+/// All compiled executables for a serving deployment.
+pub struct Registry {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    engines: BTreeMap<String, Engine>,
+    pub cost: Option<CostEngine>,
+}
+
+impl Registry {
+    /// Load `model_ids` (or all manifest models if empty) plus the cost
+    /// kernel. Compilation happens eagerly so serving never stalls.
+    pub fn load(dir: &Path, model_ids: &[String], with_cost: bool) -> anyhow::Result<Registry> {
+        let client = PjRtClient::cpu()?;
+        let manifest = Manifest::load(dir)?;
+        let ids: Vec<String> = if model_ids.is_empty() {
+            manifest.models.iter().map(|m| m.id.clone()).collect()
+        } else {
+            model_ids.to_vec()
+        };
+        let mut engines = BTreeMap::new();
+        for id in &ids {
+            let spec = manifest
+                .model(id)
+                .ok_or_else(|| anyhow::anyhow!("model {id} not in manifest"))?;
+            crate::info!("compiling {id} (prefill + decode)");
+            engines.insert(id.clone(), Engine::load(&client, spec)?);
+        }
+        let cost = if with_cost {
+            Some(CostEngine::load(&client, &manifest.cost_matrix)?)
+        } else {
+            None
+        };
+        Ok(Registry {
+            client,
+            manifest,
+            engines,
+            cost,
+        })
+    }
+
+    pub fn engine(&self, id: &str) -> Option<&Engine> {
+        self.engines.get(id)
+    }
+
+    pub fn model_ids(&self) -> Vec<String> {
+        self.engines.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_subset() {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let reg = Registry::load(
+            &artifacts_dir(),
+            &["llama2-7b".to_string()],
+            false,
+        )
+        .unwrap();
+        assert!(reg.engine("llama2-7b").is_some());
+        assert!(reg.engine("llama2-70b").is_none());
+        assert_eq!(reg.model_ids(), vec!["llama2-7b"]);
+    }
+
+    #[test]
+    fn unknown_model_fails() {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        assert!(Registry::load(&artifacts_dir(), &["nope".to_string()], false).is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! The comparison policies of Fig. 3: the ζ-independent "existing best
+//! practices" — pick one LLM for everything, or route query-independently
+//! (round-robin / random). These appear as the flat lines in the figure.
+
+use super::problem::Assignment;
+use crate::util::Rng;
+use crate::workload::Query;
+
+/// Everything to one model.
+pub fn single_model(queries: &[Query], model_idx: usize) -> Assignment {
+    Assignment {
+        model_of: vec![model_idx; queries.len()],
+        objective: f64::NAN, // baselines don't optimize Eq. 2
+    }
+}
+
+/// Cyclic assignment in arrival order.
+pub fn round_robin(queries: &[Query], n_models: usize) -> Assignment {
+    Assignment {
+        model_of: (0..queries.len()).map(|i| i % n_models).collect(),
+        objective: f64::NAN,
+    }
+}
+
+/// Uniform random assignment.
+pub fn random(queries: &[Query], n_models: usize, rng: &mut Rng) -> Assignment {
+    Assignment {
+        model_of: (0..queries.len()).map(|_| rng.index(n_models)).collect(),
+        objective: f64::NAN,
+    }
+}
+
+/// Weighted random assignment by the partition fractions γ (a fairer
+/// query-independent baseline when capacities are skewed).
+pub fn weighted_random(queries: &[Query], gammas: &[f64], rng: &mut Rng) -> Assignment {
+    let model_of = (0..queries.len())
+        .map(|_| {
+            let u = rng.f64();
+            let mut acc = 0.0;
+            for (k, g) in gammas.iter().enumerate() {
+                acc += g;
+                if u < acc {
+                    return k;
+                }
+            }
+            gammas.len() - 1
+        })
+        .collect();
+    Assignment {
+        model_of,
+        objective: f64::NAN,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn queries(n: usize) -> Vec<Query> {
+        (0..n)
+            .map(|i| Query {
+                id: i as u32,
+                t_in: 10,
+                t_out: 10,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_model_uniform() {
+        let a = single_model(&queries(10), 2);
+        assert!(a.model_of.iter().all(|&m| m == 2));
+    }
+
+    #[test]
+    fn round_robin_balanced() {
+        let a = round_robin(&queries(9), 3);
+        assert_eq!(a.counts(3), vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn random_covers_models() {
+        let mut rng = Rng::new(1);
+        let a = random(&queries(3000), 3, &mut rng);
+        let c = a.counts(3);
+        for &ci in &c {
+            assert!((ci as f64 - 1000.0).abs() < 150.0, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn weighted_random_respects_gammas() {
+        let mut rng = Rng::new(2);
+        let a = weighted_random(&queries(10_000), &[0.05, 0.2, 0.75], &mut rng);
+        let c = a.counts(3);
+        assert!((c[0] as f64 - 500.0).abs() < 120.0, "{c:?}");
+        assert!((c[2] as f64 - 7500.0).abs() < 300.0, "{c:?}");
+    }
+}

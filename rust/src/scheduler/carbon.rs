@@ -1,0 +1,139 @@
+//! Carbon/price-aware ζ control — the paper's §7 outlook made concrete:
+//!
+//! > "providing higher accuracy when energy prices are lower, or
+//! >  delivering lower latency and lower energy responses during times of
+//! >  peak load" … "including externalities like energy pricing and
+//! >  availability of sustainable energy into our model would bring
+//! >  systems closer to meeting sustainability goals."
+//!
+//! A [`GridSignal`] models the diurnal carbon intensity / price curve of a
+//! grid; a [`ZetaController`] maps the instantaneous signal onto the
+//! operational ζ, so the offline-fitted models drive a carbon-aware
+//! schedule with no re-fitting.
+
+/// Time-varying grid signal (carbon intensity in gCO₂/kWh, or price).
+#[derive(Debug, Clone)]
+pub struct GridSignal {
+    /// hourly values over a day (len 24), wrapping
+    pub hourly: Vec<f64>,
+}
+
+impl GridSignal {
+    /// A stylized diurnal carbon-intensity curve: overnight wind trough,
+    /// morning ramp, midday solar dip, evening peak — the canonical shape
+    /// of e.g. CAISO/UK grids used throughout the carbon-aware-computing
+    /// literature.
+    pub fn typical_day() -> GridSignal {
+        GridSignal {
+            hourly: vec![
+                210.0, 200.0, 195.0, 190.0, 195.0, 215.0, // 00–05 overnight trough
+                260.0, 320.0, 360.0, 330.0, 290.0, 255.0, // 06–11 morning ramp
+                230.0, 215.0, 210.0, 225.0, 265.0, 330.0, // 12–17 solar dip → ramp
+                420.0, 460.0, 440.0, 380.0, 300.0, 240.0, // 18–23 evening peak
+            ],
+        }
+    }
+
+    /// Signal at a given time (hours, fractional, wraps over days);
+    /// linear interpolation between hourly points.
+    pub fn at(&self, t_hours: f64) -> f64 {
+        let n = self.hourly.len() as f64;
+        let x = t_hours.rem_euclid(n);
+        let i = x.floor() as usize % self.hourly.len();
+        let j = (i + 1) % self.hourly.len();
+        let f = x - x.floor();
+        self.hourly[i] * (1.0 - f) + self.hourly[j] * f
+    }
+
+    pub fn min(&self) -> f64 {
+        self.hourly.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.hourly.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+/// Maps the grid signal onto ζ: dirty/expensive grid → high ζ (save
+/// energy, accept lower accuracy); clean/cheap grid → low ζ (spend energy
+/// on accuracy).
+#[derive(Debug, Clone)]
+pub struct ZetaController {
+    pub signal: GridSignal,
+    /// ζ used at the cleanest observed signal
+    pub zeta_min: f64,
+    /// ζ used at the dirtiest observed signal
+    pub zeta_max: f64,
+}
+
+impl ZetaController {
+    pub fn new(signal: GridSignal, zeta_min: f64, zeta_max: f64) -> ZetaController {
+        assert!((0.0..=1.0).contains(&zeta_min));
+        assert!((0.0..=1.0).contains(&zeta_max));
+        assert!(zeta_min <= zeta_max);
+        ZetaController {
+            signal,
+            zeta_min,
+            zeta_max,
+        }
+    }
+
+    /// ζ at time `t_hours`: linear in the signal between its daily
+    /// extremes.
+    pub fn zeta_at(&self, t_hours: f64) -> f64 {
+        let (lo, hi) = (self.signal.min(), self.signal.max());
+        if hi <= lo {
+            return 0.5 * (self.zeta_min + self.zeta_max);
+        }
+        let f = (self.signal.at(t_hours) - lo) / (hi - lo);
+        self.zeta_min + f * (self.zeta_max - self.zeta_min)
+    }
+
+    /// Grams of CO₂ for `energy_j` joules drawn at time `t_hours`
+    /// (signal interpreted as gCO₂/kWh).
+    pub fn carbon_g(&self, t_hours: f64, energy_j: f64) -> f64 {
+        let kwh = energy_j / 3.6e6;
+        kwh * self.signal.at(t_hours)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signal_interpolates_and_wraps() {
+        let s = GridSignal::typical_day();
+        assert_eq!(s.at(0.0), 210.0);
+        assert!((s.at(0.5) - 205.0).abs() < 1e-9); // halfway 210→200
+        assert_eq!(s.at(24.0), s.at(0.0)); // wraps
+        assert_eq!(s.at(-1.0), s.at(23.0));
+    }
+
+    #[test]
+    fn controller_maps_extremes() {
+        let c = ZetaController::new(GridSignal::typical_day(), 0.1, 0.9);
+        // Dirtiest hour (19:00) → ζ_max; cleanest (03:00) → ζ_min.
+        assert!((c.zeta_at(19.0) - 0.9).abs() < 1e-9);
+        assert!((c.zeta_at(3.0) - 0.1).abs() < 1e-9);
+        // Everything in range.
+        for h in 0..48 {
+            let z = c.zeta_at(h as f64 * 0.5);
+            assert!((0.1..=0.9).contains(&z));
+        }
+    }
+
+    #[test]
+    fn carbon_accounting() {
+        let c = ZetaController::new(GridSignal::typical_day(), 0.0, 1.0);
+        // 3.6 MJ = 1 kWh at 210 g/kWh (midnight) = 210 g.
+        assert!((c.carbon_g(0.0, 3.6e6) - 210.0).abs() < 1e-9);
+        assert_eq!(c.carbon_g(0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn flat_signal_mid_zeta() {
+        let c = ZetaController::new(GridSignal { hourly: vec![100.0; 24] }, 0.2, 0.8);
+        assert!((c.zeta_at(12.0) - 0.5).abs() < 1e-9);
+    }
+}

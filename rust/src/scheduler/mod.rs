@@ -1,0 +1,17 @@
+//! The offline energy-optimal scheduler (§4 + §6.3): the Eq. 2–5
+//! assignment problem, an exact min-cost-flow solver (replacing the
+//! paper's PuLP ILP), greedy and query-independent baselines, and the
+//! Fig. 3 ζ sweep.
+
+pub mod baselines;
+pub mod carbon;
+pub mod mcmf;
+pub mod problem;
+pub mod solve;
+pub mod zeta;
+
+pub use carbon::{GridSignal, ZetaController};
+pub use mcmf::{FlowResult, MinCostFlow};
+pub use problem::{capacities, capacity_bounds, evaluate, Assignment, CapacityMode, CostMatrix, Evaluation};
+pub use solve::{solve_exact, solve_exact_caps, solve_exact_mode, solve_greedy, solve_greedy_caps};
+pub use zeta::{sweep, sweep_mode, ZetaPoint, ZetaSweep};

@@ -1,0 +1,250 @@
+//! The workload-assignment problem of §4 (Eqs. 2–5): partition a workload
+//! `Q` across hosted models `K` minimizing the ζ-blend of normalized
+//! energy and (negated) accuracy, subject to the data-center partition
+//! fractions γ_K.
+
+use crate::models::{ModelSet, Normalizer};
+use crate::workload::Query;
+
+/// Per-(query, model) cost table: `cost[k][i]` is the Eq. 2 summand of
+/// assigning query `i` to model `k`.
+#[derive(Debug, Clone)]
+pub struct CostMatrix {
+    /// indexed [model][query]
+    pub costs: Vec<Vec<f64>>,
+    pub n_models: usize,
+    pub n_queries: usize,
+}
+
+impl CostMatrix {
+    /// Build from fitted model sets with the ζ blend:
+    /// `ζ·ê_K(q) − (1−ζ)·â_K(q)`.
+    pub fn build(sets: &[ModelSet], norm: &Normalizer, queries: &[Query], zeta: f64) -> CostMatrix {
+        assert!((0.0..=1.0).contains(&zeta), "zeta in [0,1]");
+        let costs = sets
+            .iter()
+            .map(|s| {
+                queries
+                    .iter()
+                    .map(|q| zeta * norm.energy_hat(s, q) - (1.0 - zeta) * norm.accuracy_hat(s, q))
+                    .collect()
+            })
+            .collect();
+        CostMatrix {
+            costs,
+            n_models: sets.len(),
+            n_queries: queries.len(),
+        }
+    }
+
+    #[inline]
+    pub fn cost(&self, model: usize, query: usize) -> f64 {
+        self.costs[model][query]
+    }
+}
+
+/// How the partition fractions γ are interpreted as constraints.
+///
+/// The paper's Eq. 3 constrains only `0 < |Q_K|/|Q| < 1`; γ is introduced
+/// as "a tunable parameter that affects our optimization problem" without
+/// appearing in Eqs. 2–5. Two readings are supported:
+///
+/// * [`CapacityMode::Eq3Only`] — the literal formulation: every model gets
+///   at least one query and none gets all of them. This reproduces the
+///   Fig. 3 curve (assignments migrate freely from the accurate model at
+///   ζ=0 to the frugal model at ζ=1).
+/// * [`CapacityMode::GammaHard`] — γ as hard seat counts (largest-
+///   remainder apportionment of |Q|). Since Σγ=1 this pins per-model
+///   counts for every ζ, flattening the accuracy curve — quantified in the
+///   `ablations` bench.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CapacityMode {
+    Eq3Only,
+    GammaHard,
+}
+
+/// Upper-bound capacities per model for a given mode.
+pub fn capacity_bounds(mode: CapacityMode, gammas: &[f64], n_queries: usize) -> Vec<usize> {
+    match mode {
+        // ≤ n−(m−1) per model: leaves room for every other model's
+        // mandatory single query, enforcing |Q_K| < |Q|.
+        CapacityMode::Eq3Only => {
+            let m = gammas.len();
+            vec![n_queries.saturating_sub(m - 1).max(1); m]
+        }
+        CapacityMode::GammaHard => capacities(gammas, n_queries),
+    }
+}
+
+/// Capacity per model implied by the partition fractions: the largest-
+/// remainder apportionment of |Q| seats to γ, with every model guaranteed
+/// at least one query (Eq. 3's strict inequalities).
+pub fn capacities(gammas: &[f64], n_queries: usize) -> Vec<usize> {
+    assert!(!gammas.is_empty());
+    assert!(n_queries >= gammas.len(), "need at least one query per model");
+    let n = n_queries as f64;
+    let mut caps: Vec<usize> = gammas.iter().map(|g| (g * n).floor() as usize).collect();
+    // Everyone gets at least 1 (Eq. 3: 0 < |Q_K|/|Q|).
+    for c in caps.iter_mut() {
+        if *c == 0 {
+            *c = 1;
+        }
+    }
+    // Distribute remaining seats by largest fractional remainder.
+    let assigned: usize = caps.iter().sum();
+    if assigned < n_queries {
+        let mut rem: Vec<(usize, f64)> = gammas
+            .iter()
+            .enumerate()
+            .map(|(i, g)| (i, g * n - (g * n).floor()))
+            .collect();
+        rem.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mut left = n_queries - assigned;
+        let mut i = 0;
+        while left > 0 {
+            caps[rem[i % rem.len()].0] += 1;
+            left -= 1;
+            i += 1;
+        }
+    } else if assigned > n_queries {
+        // Over-allocation can only come from the ≥1 floor; shave the
+        // largest caps.
+        let mut excess = assigned - n_queries;
+        while excess > 0 {
+            let (imax, _) = caps
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, c)| **c)
+                .unwrap();
+            if caps[imax] > 1 {
+                caps[imax] -= 1;
+                excess -= 1;
+            } else {
+                break;
+            }
+        }
+    }
+    caps
+}
+
+/// A complete assignment: `model_of[i]` is the model index serving query i.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    pub model_of: Vec<usize>,
+    /// Eq. 2 objective value under the cost matrix used to solve
+    pub objective: f64,
+}
+
+impl Assignment {
+    /// Queries per model.
+    pub fn counts(&self, n_models: usize) -> Vec<usize> {
+        let mut c = vec![0usize; n_models];
+        for &m in &self.model_of {
+            c[m] += 1;
+        }
+        c
+    }
+
+    /// Recompute the objective under a (possibly different) cost matrix.
+    pub fn objective_under(&self, costs: &CostMatrix) -> f64 {
+        self.model_of
+            .iter()
+            .enumerate()
+            .map(|(q, &m)| costs.cost(m, q))
+            .sum()
+    }
+
+    /// Check Eqs. 3–5: full partition, disjoint by construction, every
+    /// model non-empty and none owns the whole workload.
+    pub fn check_constraints(&self, n_models: usize) -> anyhow::Result<()> {
+        if self.model_of.is_empty() {
+            anyhow::bail!("empty assignment");
+        }
+        let counts = self.counts(n_models);
+        for (k, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                anyhow::bail!("model {k} received no queries (violates Eq. 3)");
+            }
+            if n_models > 1 && c == self.model_of.len() {
+                anyhow::bail!("model {k} received the whole workload (violates Eq. 3)");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Evaluation of an assignment in physical units (Fig. 3's y-axes),
+/// computed with the fitted models exactly as the paper's offline
+/// simulation does.
+#[derive(Debug, Clone, Copy)]
+pub struct Evaluation {
+    pub mean_energy_j: f64,
+    pub mean_runtime_s: f64,
+    /// mean leaderboard accuracy A_K over assigned queries, percent
+    pub mean_accuracy: f64,
+    pub total_energy_j: f64,
+    pub total_runtime_s: f64,
+}
+
+/// Evaluate an assignment under the fitted models.
+pub fn evaluate(assignment: &Assignment, sets: &[ModelSet], queries: &[Query]) -> Evaluation {
+    let n = queries.len() as f64;
+    let mut e = 0.0;
+    let mut r = 0.0;
+    let mut a = 0.0;
+    for (i, q) in queries.iter().enumerate() {
+        let s = &sets[assignment.model_of[i]];
+        e += s.energy.predict(q.t_in as f64, q.t_out as f64);
+        r += s.runtime.predict(q.t_in as f64, q.t_out as f64);
+        a += s.accuracy.a_k;
+    }
+    Evaluation {
+        mean_energy_j: e / n,
+        mean_runtime_s: r / n,
+        mean_accuracy: a / n,
+        total_energy_j: e,
+        total_runtime_s: r,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacities_paper_case() {
+        // 500 queries, γ = (0.05, 0.2, 0.75) → (25, 100, 375).
+        let caps = capacities(&[0.05, 0.2, 0.75], 500);
+        assert_eq!(caps, vec![25, 100, 375]);
+        assert_eq!(caps.iter().sum::<usize>(), 500);
+    }
+
+    #[test]
+    fn capacities_rounding_sums_to_n() {
+        let caps = capacities(&[1.0 / 3.0, 1.0 / 3.0, 1.0 / 3.0], 100);
+        assert_eq!(caps.iter().sum::<usize>(), 100);
+        assert!(caps.iter().all(|&c| c == 33 || c == 34));
+    }
+
+    #[test]
+    fn capacities_enforce_minimum_one() {
+        let caps = capacities(&[0.001, 0.999], 10);
+        assert!(caps[0] >= 1);
+        assert_eq!(caps.iter().sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn assignment_counts_and_constraints() {
+        let a = Assignment {
+            model_of: vec![0, 1, 1, 2, 2, 2],
+            objective: 0.0,
+        };
+        assert_eq!(a.counts(3), vec![1, 2, 3]);
+        a.check_constraints(3).unwrap();
+        let bad = Assignment {
+            model_of: vec![0, 0, 0],
+            objective: 0.0,
+        };
+        assert!(bad.check_constraints(2).is_err());
+    }
+}

@@ -1,0 +1,363 @@
+//! Solvers for the assignment problem: the exact min-cost-flow reduction
+//! (what PuLP's ILP finds, but polynomial) and a greedy heuristic used as
+//! an ablation baseline.
+
+use super::mcmf::MinCostFlow;
+use super::problem::{capacity_bounds, Assignment, CapacityMode, CostMatrix};
+
+/// Fixed-point scale for converting f64 costs to integer flow costs.
+/// Costs are in [−1, 1] (normalized blend), so 1e9 keeps nine significant
+/// digits without overflow on 500k-edge instances.
+const COST_SCALE: f64 = 1e9;
+
+/// Solve exactly via min-cost max-flow, under explicit per-model capacity
+/// upper bounds and the Eq. 3 lower bound of one query per model.
+///
+/// Graph: source → each query (cap 1) → each model (cap 1, cost c_ki)
+/// → sink. The model→sink arc is split in two: a cap-1 arc with a large
+/// negative cost (a constant −R reward collected by every feasible
+/// solution, forcing |Q_K| ≥ 1 without distorting the optimum) and a
+/// cap-(u_k−1) arc at cost 0. Unit query sizes make the LP integral, so
+/// this is the true optimum of Eq. 2 s.t. Eqs. 3–5.
+pub fn solve_exact_caps(costs: &CostMatrix, caps: &[usize]) -> anyhow::Result<Assignment> {
+    let (nq, nm) = (costs.n_queries, costs.n_models);
+    if nm == 0 || nq == 0 {
+        anyhow::bail!("empty problem");
+    }
+    if caps.len() != nm {
+        anyhow::bail!("cap count {} != model count {}", caps.len(), nm);
+    }
+    if caps.iter().sum::<usize>() < nq {
+        anyhow::bail!(
+            "infeasible: capacities sum to {} < {} queries",
+            caps.iter().sum::<usize>(),
+            nq
+        );
+    }
+    if nq < nm {
+        anyhow::bail!("Eq. 3 needs at least one query per model ({nq} < {nm})");
+    }
+
+    // Reward magnitude: larger than any achievable |objective| so that
+    // covering every model is always preferred. Costs are ≤ 1 per query.
+    let reward = ((nq as f64 + 2.0) * COST_SCALE) as i64;
+
+    // Node layout: 0 = source, 1..=nq queries, nq+1..=nq+nm models, last = sink.
+    let s = 0usize;
+    let t = nq + nm + 1;
+    let qnode = |i: usize| 1 + i;
+    let mnode = |k: usize| 1 + nq + k;
+
+    let mut g = MinCostFlow::new(t + 1);
+    let mut handles = Vec::with_capacity(nq * nm);
+    for i in 0..nq {
+        g.add_edge(s, qnode(i), 1, 0);
+        for k in 0..nm {
+            let c = (costs.cost(k, i) * COST_SCALE).round() as i64;
+            handles.push(((i, k), g.add_edge(qnode(i), mnode(k), 1, c)));
+        }
+    }
+    for (k, &cap) in caps.iter().enumerate() {
+        g.add_edge(mnode(k), t, 1, -reward);
+        if cap > 1 {
+            g.add_edge(mnode(k), t, cap as i64 - 1, 0);
+        }
+    }
+
+    let r = g.solve(s, t, nq as i64);
+    if r.flow != nq as i64 {
+        anyhow::bail!("infeasible: routed {}/{} queries", r.flow, nq);
+    }
+
+    let mut model_of = vec![usize::MAX; nq];
+    for ((i, k), h) in handles {
+        if g.flow_on(h) == 1 {
+            model_of[i] = k;
+        }
+    }
+    debug_assert!(model_of.iter().all(|&m| m != usize::MAX));
+    let objective = model_of
+        .iter()
+        .enumerate()
+        .map(|(i, &k)| costs.cost(k, i))
+        .sum();
+    Ok(Assignment {
+        model_of,
+        objective,
+    })
+}
+
+/// Convenience: solve under a capacity mode derived from γ.
+pub fn solve_exact_mode(
+    costs: &CostMatrix,
+    gammas: &[f64],
+    mode: CapacityMode,
+) -> anyhow::Result<Assignment> {
+    let caps = capacity_bounds(mode, gammas, costs.n_queries);
+    solve_exact_caps(costs, &caps)
+}
+
+/// Backwards-compatible entry point: γ as hard seat counts.
+pub fn solve_exact(costs: &CostMatrix, gammas: &[f64]) -> anyhow::Result<Assignment> {
+    solve_exact_mode(costs, gammas, CapacityMode::GammaHard)
+}
+
+/// Greedy heuristic: visit queries in descending regret (best-vs-worst
+/// cost spread) and give each its cheapest model with remaining capacity;
+/// then repair any model left empty by stealing the cheapest-to-move
+/// query. Used by the ablation bench to quantify the exactness gap.
+pub fn solve_greedy_caps(costs: &CostMatrix, caps: &[usize]) -> anyhow::Result<Assignment> {
+    let (nq, nm) = (costs.n_queries, costs.n_models);
+    if nm == 0 || nq == 0 {
+        anyhow::bail!("empty problem");
+    }
+    if nq < nm {
+        anyhow::bail!("need at least one query per model");
+    }
+    let mut caps = caps.to_vec();
+
+    // Regret order: queries with the most to lose go first.
+    let mut order: Vec<usize> = (0..nq).collect();
+    let spread = |i: usize| -> f64 {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for k in 0..nm {
+            lo = lo.min(costs.cost(k, i));
+            hi = hi.max(costs.cost(k, i));
+        }
+        hi - lo
+    };
+    order.sort_by(|&a, &b| spread(b).partial_cmp(&spread(a)).unwrap());
+
+    let mut model_of = vec![usize::MAX; nq];
+    for &i in &order {
+        let mut best = None;
+        for k in 0..nm {
+            if caps[k] == 0 {
+                continue;
+            }
+            let c = costs.cost(k, i);
+            if best.map(|(_, bc)| c < bc).unwrap_or(true) {
+                best = Some((k, c));
+            }
+        }
+        let (k, _) = best.ok_or_else(|| anyhow::anyhow!("capacities exhausted"))?;
+        model_of[i] = k;
+        caps[k] -= 1;
+    }
+
+    // Eq. 3 repair: every model must serve ≥ 1 query.
+    let mut counts = vec![0usize; nm];
+    for &m in &model_of {
+        counts[m] += 1;
+    }
+    for k in 0..nm {
+        if counts[k] > 0 {
+            continue;
+        }
+        // Move the query whose cost delta to k is smallest, from a model
+        // with > 1 queries.
+        let mut best: Option<(usize, f64)> = None;
+        for (i, &m) in model_of.iter().enumerate() {
+            if counts[m] <= 1 {
+                continue;
+            }
+            let delta = costs.cost(k, i) - costs.cost(m, i);
+            if best.map(|(_, bd)| delta < bd).unwrap_or(true) {
+                best = Some((i, delta));
+            }
+        }
+        let (i, _) = best.ok_or_else(|| anyhow::anyhow!("cannot satisfy Eq. 3"))?;
+        counts[model_of[i]] -= 1;
+        model_of[i] = k;
+        counts[k] += 1;
+    }
+
+    let objective = model_of
+        .iter()
+        .enumerate()
+        .map(|(i, &k)| costs.cost(k, i))
+        .sum();
+    Ok(Assignment {
+        model_of,
+        objective,
+    })
+}
+
+/// Greedy under a γ capacity mode.
+pub fn solve_greedy(costs: &CostMatrix, gammas: &[f64]) -> anyhow::Result<Assignment> {
+    let caps = capacity_bounds(CapacityMode::GammaHard, gammas, costs.n_queries);
+    solve_greedy_caps(costs, &caps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::problem::capacities;
+
+    fn matrix(costs: Vec<Vec<f64>>) -> CostMatrix {
+        let n_models = costs.len();
+        let n_queries = costs[0].len();
+        CostMatrix {
+            costs,
+            n_models,
+            n_queries,
+        }
+    }
+
+    /// Brute-force optimum (with per-model ≥1 and ≤cap) for tiny instances.
+    fn brute(costs: &CostMatrix, caps: &[usize]) -> f64 {
+        let mut best = f64::INFINITY;
+        let nq = costs.n_queries;
+        let mut assign = vec![0usize; nq];
+        fn rec(
+            i: usize,
+            assign: &mut Vec<usize>,
+            caps: &[usize],
+            costs: &CostMatrix,
+            best: &mut f64,
+        ) {
+            if i == assign.len() {
+                let mut c = vec![0usize; costs.n_models];
+                for &m in assign.iter() {
+                    c[m] += 1;
+                }
+                if c.iter().zip(caps).all(|(c, cap)| *c >= 1 && c <= cap) {
+                    let obj: f64 = assign
+                        .iter()
+                        .enumerate()
+                        .map(|(q, &m)| costs.cost(m, q))
+                        .sum();
+                    if obj < *best {
+                        *best = obj;
+                    }
+                }
+                return;
+            }
+            for m in 0..costs.n_models {
+                assign[i] = m;
+                rec(i + 1, assign, caps, costs, best);
+            }
+        }
+        rec(0, &mut assign, caps, costs, &mut best);
+        best
+    }
+
+    #[test]
+    fn exact_matches_bruteforce_gamma_caps() {
+        let costs = matrix(vec![
+            vec![0.1, 0.9, 0.3, 0.7, 0.2, 0.8],
+            vec![0.5, 0.1, 0.6, 0.2, 0.9, 0.1],
+            vec![0.9, 0.5, 0.1, 0.9, 0.1, 0.5],
+        ]);
+        let gammas = [1.0 / 3.0; 3];
+        let caps = capacities(&gammas, 6);
+        let exact = solve_exact(&costs, &gammas).unwrap();
+        let bf = brute(&costs, &caps);
+        assert!((exact.objective - bf).abs() < 1e-7, "{} vs {bf}", exact.objective);
+        exact.check_constraints(3).unwrap();
+        assert_eq!(exact.counts(3), vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn exact_matches_bruteforce_eq3_mode() {
+        let costs = matrix(vec![
+            vec![0.1, 0.9, 0.3, 0.7, 0.2],
+            vec![0.5, 0.1, 0.6, 0.2, 0.9],
+            vec![0.9, 0.5, 0.1, 0.9, 0.1],
+        ]);
+        let gammas = [0.05, 0.2, 0.75];
+        let caps = capacity_bounds(CapacityMode::Eq3Only, &gammas, 5);
+        let exact = solve_exact_mode(&costs, &gammas, CapacityMode::Eq3Only).unwrap();
+        let bf = brute(&costs, &caps);
+        assert!((exact.objective - bf).abs() < 1e-7, "{} vs {bf}", exact.objective);
+        exact.check_constraints(3).unwrap();
+    }
+
+    #[test]
+    fn eq3_mode_respects_lower_bound_under_pressure() {
+        // Model 0 dominates every query; Eq. 3 still forces one query onto
+        // each of the others.
+        let costs = matrix(vec![
+            vec![0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+            vec![0.5, 0.5, 0.5, 0.5, 0.5, 0.5],
+            vec![0.9, 0.9, 0.9, 0.9, 0.9, 0.9],
+        ]);
+        let a = solve_exact_mode(&costs, &[0.34, 0.33, 0.33], CapacityMode::Eq3Only).unwrap();
+        let counts = a.counts(3);
+        assert_eq!(counts[1], 1);
+        assert_eq!(counts[2], 1);
+        assert_eq!(counts[0], 4);
+    }
+
+    #[test]
+    fn exact_with_negative_costs() {
+        // ζ < 1 makes costs negative (accuracy rewards).
+        let costs = matrix(vec![
+            vec![-0.9, -0.1, -0.5, -0.3],
+            vec![-0.2, -0.8, -0.4, -0.6],
+        ]);
+        let gammas = [0.5, 0.5];
+        let caps = capacities(&gammas, 4);
+        let exact = solve_exact(&costs, &gammas).unwrap();
+        let bf = brute(&costs, &caps);
+        assert!((exact.objective - bf).abs() < 1e-7);
+    }
+
+    #[test]
+    fn greedy_feasible_but_not_better() {
+        let costs = matrix(vec![
+            vec![0.1, 0.9, 0.3, 0.7, 0.2, 0.8, 0.4, 0.6],
+            vec![0.5, 0.1, 0.6, 0.2, 0.9, 0.1, 0.3, 0.2],
+            vec![0.9, 0.5, 0.1, 0.9, 0.1, 0.5, 0.2, 0.4],
+        ]);
+        let gammas = [0.25, 0.375, 0.375];
+        let exact = solve_exact(&costs, &gammas).unwrap();
+        let greedy = solve_greedy(&costs, &gammas).unwrap();
+        greedy.check_constraints(3).unwrap();
+        assert!(greedy.objective >= exact.objective - 1e-9);
+        let caps = capacities(&gammas, 8);
+        for (c, cap) in greedy.counts(3).iter().zip(&caps) {
+            assert!(c <= cap);
+        }
+    }
+
+    #[test]
+    fn greedy_repairs_empty_models() {
+        let costs = matrix(vec![
+            vec![0.0, 0.0, 0.0, 0.0],
+            vec![0.9, 0.9, 0.9, 0.9],
+        ]);
+        let caps = vec![4usize, 4];
+        let a = solve_greedy_caps(&costs, &caps).unwrap();
+        a.check_constraints(2).unwrap();
+        assert_eq!(a.counts(2), vec![3, 1]);
+    }
+
+    #[test]
+    fn scales_to_paper_size() {
+        // 500 queries × 3 models solves instantly.
+        let mut costs = vec![vec![0.0; 500]; 3];
+        let mut x = 0.123f64;
+        for k in 0..3 {
+            for i in 0..500 {
+                x = (x * 9301.0 + 49297.0) % 233280.0;
+                costs[k][i] = x / 233280.0 - 0.5;
+            }
+        }
+        let costs = matrix(costs);
+        let a = solve_exact(&costs, &[0.05, 0.2, 0.75]).unwrap();
+        assert_eq!(a.counts(3), vec![25, 100, 375]);
+        let b = solve_exact_mode(&costs, &[0.05, 0.2, 0.75], CapacityMode::Eq3Only).unwrap();
+        b.check_constraints(3).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let costs = matrix(vec![vec![0.0; 3]]);
+        assert!(solve_exact(&costs, &[0.5, 0.5]).is_err());
+        let costs2 = matrix(vec![vec![0.0; 2], vec![0.0; 2], vec![0.0; 2]]);
+        // fewer queries than models
+        assert!(solve_exact_caps(&costs2, &[1, 1, 1]).is_err());
+    }
+}

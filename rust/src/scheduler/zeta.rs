@@ -1,0 +1,173 @@
+//! The Fig. 3 experiment: sweep the operational parameter ζ ∈ [0, 1],
+//! solve the offline assignment at each value, and evaluate mean energy,
+//! mean runtime, and mean accuracy — against the flat baselines.
+
+use super::baselines;
+use super::problem::{evaluate, CapacityMode, CostMatrix, Evaluation};
+use super::solve::solve_exact_mode;
+use crate::models::{ModelSet, Normalizer};
+use crate::util::Rng;
+use crate::workload::Query;
+
+/// One swept point.
+#[derive(Debug, Clone, Copy)]
+pub struct ZetaPoint {
+    pub zeta: f64,
+    pub eval: Evaluation,
+}
+
+/// Full sweep output: the scheduler curve plus baseline evaluations.
+#[derive(Debug, Clone)]
+pub struct ZetaSweep {
+    pub points: Vec<ZetaPoint>,
+    /// (label, evaluation) — flat lines of Fig. 3
+    pub baselines: Vec<(String, Evaluation)>,
+}
+
+/// Run the sweep. `gammas` are the partition fractions; `n_points` ζ
+/// values are spaced uniformly on [0, 1]. `mode` selects the γ
+/// interpretation (see [`CapacityMode`]); Fig. 3 uses `Eq3Only`.
+pub fn sweep_mode(
+    sets: &[ModelSet],
+    queries: &[Query],
+    gammas: &[f64],
+    n_points: usize,
+    mode: CapacityMode,
+    rng: &mut Rng,
+) -> anyhow::Result<ZetaSweep> {
+    assert!(n_points >= 2);
+    let norm = Normalizer::from_workload(sets, queries);
+
+    let mut points = Vec::with_capacity(n_points);
+    for i in 0..n_points {
+        let zeta = i as f64 / (n_points - 1) as f64;
+        let costs = CostMatrix::build(sets, &norm, queries, zeta);
+        let assignment = solve_exact_mode(&costs, gammas, mode)?;
+        points.push(ZetaPoint {
+            zeta,
+            eval: evaluate(&assignment, sets, queries),
+        });
+    }
+
+    let mut baselines_out = Vec::new();
+    for (k, s) in sets.iter().enumerate() {
+        let a = baselines::single_model(queries, k);
+        baselines_out.push((format!("single:{}", s.model_id), evaluate(&a, sets, queries)));
+    }
+    let rr = baselines::round_robin(queries, sets.len());
+    baselines_out.push(("round-robin".to_string(), evaluate(&rr, sets, queries)));
+    let rnd = baselines::random(queries, sets.len(), rng);
+    baselines_out.push(("random".to_string(), evaluate(&rnd, sets, queries)));
+
+    Ok(ZetaSweep {
+        points,
+        baselines: baselines_out,
+    })
+}
+
+/// The Fig. 3 configuration: literal Eq. 3 constraints.
+pub fn sweep(
+    sets: &[ModelSet],
+    queries: &[Query],
+    gammas: &[f64],
+    n_points: usize,
+    rng: &mut Rng,
+) -> anyhow::Result<ZetaSweep> {
+    sweep_mode(sets, queries, gammas, n_points, CapacityMode::Eq3Only, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{AccuracyModel, Target, WorkloadModel};
+    use crate::workload::{generate, AlpacaParams};
+
+    /// Hand-built model sets with the paper's qualitative structure:
+    /// bigger → more accurate and more expensive.
+    fn paper_like_sets() -> Vec<ModelSet> {
+        let mk = |id: &str, scale: f64, acc: f64| ModelSet {
+            model_id: id.into(),
+            energy: WorkloadModel {
+                model_id: id.into(),
+                target: Target::EnergyJ,
+                coefs: [0.6 * scale, 9.0 * scale, 0.004 * scale],
+                r2: 0.97,
+                f_stat: 1e3,
+                p_value: 0.0,
+                n_obs: 100,
+            },
+            runtime: WorkloadModel {
+                model_id: id.into(),
+                target: Target::RuntimeS,
+                coefs: [0.002 * scale, 0.03 * scale, 1.5e-5 * scale],
+                r2: 0.97,
+                f_stat: 1e3,
+                p_value: 0.0,
+                n_obs: 100,
+            },
+            accuracy: AccuracyModel::new(id, acc),
+        };
+        vec![
+            mk("llama2-7b", 1.0, 50.97),
+            mk("llama2-13b", 1.8, 55.69),
+            mk("llama2-70b", 6.5, 64.52),
+        ]
+    }
+
+    #[test]
+    fn energy_decreases_accuracy_decreases_with_zeta() {
+        let sets = paper_like_sets();
+        let mut rng = Rng::new(100);
+        let queries = generate(200, &AlpacaParams::default(), &mut rng);
+        let sw = sweep(&sets, &queries, &[0.05, 0.2, 0.75], 6, &mut rng).unwrap();
+        let first = sw.points.first().unwrap().eval;
+        let last = sw.points.last().unwrap().eval;
+        // ζ=0 prioritizes accuracy (expensive); ζ=1 prioritizes energy.
+        assert!(first.mean_energy_j > last.mean_energy_j);
+        assert!(first.mean_accuracy > last.mean_accuracy);
+        assert!(first.mean_runtime_s > last.mean_runtime_s);
+    }
+
+    #[test]
+    fn monotone_energy_along_sweep() {
+        // The optimizer's energy should be non-increasing in ζ (up to
+        // capacity-tie noise, which the exact solver does not exhibit on a
+        // fixed instance).
+        let sets = paper_like_sets();
+        let mut rng = Rng::new(200);
+        let queries = generate(150, &AlpacaParams::default(), &mut rng);
+        let sw = sweep(&sets, &queries, &[0.05, 0.2, 0.75], 11, &mut rng).unwrap();
+        let energies: Vec<f64> = sw.points.iter().map(|p| p.eval.mean_energy_j).collect();
+        for w in energies.windows(2) {
+            assert!(w[1] <= w[0] + 1e-9, "{energies:?}");
+        }
+    }
+
+    #[test]
+    fn baselines_present_and_flat_semantics() {
+        let sets = paper_like_sets();
+        let mut rng = Rng::new(300);
+        let queries = generate(600, &AlpacaParams::default(), &mut rng);
+        let sw = sweep(&sets, &queries, &[0.05, 0.2, 0.75], 3, &mut rng).unwrap();
+        let labels: Vec<&str> = sw.baselines.iter().map(|(l, _)| l.as_str()).collect();
+        assert!(labels.contains(&"single:llama2-7b"));
+        assert!(labels.contains(&"round-robin"));
+        assert!(labels.contains(&"random"));
+        // Round-robin and random are near-indistinguishable (paper note).
+        let rr = sw.baselines.iter().find(|(l, _)| l == "round-robin").unwrap().1;
+        let rnd = sw.baselines.iter().find(|(l, _)| l == "random").unwrap().1;
+        let rel = (rr.mean_energy_j - rnd.mean_energy_j).abs() / rr.mean_energy_j;
+        assert!(rel < 0.25, "rel={rel}");
+    }
+
+    #[test]
+    fn scheduler_beats_round_robin_on_energy_at_high_zeta() {
+        let sets = paper_like_sets();
+        let mut rng = Rng::new(400);
+        let queries = generate(200, &AlpacaParams::default(), &mut rng);
+        let sw = sweep(&sets, &queries, &[0.05, 0.2, 0.75], 5, &mut rng).unwrap();
+        let rr = sw.baselines.iter().find(|(l, _)| l == "round-robin").unwrap().1;
+        let high_zeta = sw.points.last().unwrap().eval;
+        assert!(high_zeta.mean_energy_j < rr.mean_energy_j);
+    }
+}

@@ -1,0 +1,126 @@
+//! Descriptive statistics and confidence intervals.
+
+use super::dist::t_critical;
+
+/// Summary of a univariate sample.
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    /// sample variance (n−1 denominator)
+    pub var: f64,
+    pub sd: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Compute summary statistics. Empty input yields NaNs with n = 0.
+pub fn describe(xs: &[f64]) -> Summary {
+    let n = xs.len();
+    if n == 0 {
+        return Summary {
+            n: 0,
+            mean: f64::NAN,
+            var: f64::NAN,
+            sd: f64::NAN,
+            min: f64::NAN,
+            max: f64::NAN,
+        };
+    }
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    Summary {
+        n,
+        mean,
+        var,
+        sd: var.sqrt(),
+        min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+        max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+/// Half-width of the `conf` (e.g. 0.95) Student-t confidence interval for
+/// the mean of `xs`. Returns +∞ for n < 2 (no width estimate yet).
+pub fn ci_half_width(xs: &[f64], conf: f64) -> f64 {
+    let s = describe(xs);
+    if s.n < 2 {
+        return f64::INFINITY;
+    }
+    let t = t_critical(conf, (s.n - 1) as f64);
+    t * s.sd / (s.n as f64).sqrt()
+}
+
+/// Sample mean (convenience).
+pub fn mean(xs: &[f64]) -> f64 {
+    describe(xs).mean
+}
+
+/// Quantile via linear interpolation on the sorted sample (type-7, the
+/// numpy default). `q` in [0, 1].
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn describe_basics() {
+        let s = describe(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.var - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn describe_empty_and_singleton() {
+        assert_eq!(describe(&[]).n, 0);
+        assert!(describe(&[]).mean.is_nan());
+        let s = describe(&[7.0]);
+        assert_eq!(s.var, 0.0);
+        assert_eq!(s.mean, 7.0);
+    }
+
+    #[test]
+    fn ci_half_width_shrinks_with_n() {
+        // Same sd, more points → tighter CI.
+        let a: Vec<f64> = (0..5).map(|i| i as f64).collect();
+        let b: Vec<f64> = (0..50).map(|i| (i % 5) as f64).collect();
+        assert!(ci_half_width(&b, 0.95) < ci_half_width(&a, 0.95));
+        assert!(ci_half_width(&[1.0], 0.95).is_infinite());
+    }
+
+    #[test]
+    fn ci_known_value() {
+        // n=4, sd=1.2909..., t*(0.95, 3)=3.182 → hw = 3.182·sd/2 ≈ 2.054.
+        let hw = ci_half_width(&[1.0, 2.0, 3.0, 4.0], 0.95);
+        assert!((hw - 2.054).abs() < 5e-3, "hw={hw}");
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+        assert!((quantile(&xs, 0.25) - 1.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,133 @@
+//! Probability distributions needed by the inference layer: Student-t and
+//! Fisher F CDFs / survival functions (for OLS and ANOVA p-values) and the
+//! standard normal CDF. Quantiles are obtained by bisection on the CDF —
+//! robustness over speed; these run once per fitted model, not per query.
+
+use super::special::{beta_inc, erf};
+
+/// Standard normal CDF Φ(x).
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Student-t CDF with `df` degrees of freedom.
+pub fn t_cdf(t: f64, df: f64) -> f64 {
+    assert!(df > 0.0);
+    let x = df / (df + t * t);
+    let p = 0.5 * beta_inc(0.5 * df, 0.5, x);
+    if t >= 0.0 {
+        1.0 - p
+    } else {
+        p
+    }
+}
+
+/// Two-sided Student-t p-value: P(|T| >= |t|).
+pub fn t_sf_two_sided(t: f64, df: f64) -> f64 {
+    let x = df / (df + t * t);
+    beta_inc(0.5 * df, 0.5, x)
+}
+
+/// Student-t two-sided critical value t* such that P(|T| <= t*) = `conf`
+/// (e.g. conf = 0.95 for a 95% confidence interval). Bisection on the CDF.
+pub fn t_critical(conf: f64, df: f64) -> f64 {
+    assert!((0.0..1.0).contains(&conf));
+    let target = 0.5 + conf / 2.0;
+    bisect(|t| t_cdf(t, df), target, 0.0, 1e3)
+}
+
+/// F-distribution CDF with (d1, d2) degrees of freedom.
+pub fn f_cdf(f: f64, d1: f64, d2: f64) -> f64 {
+    assert!(d1 > 0.0 && d2 > 0.0);
+    if f <= 0.0 {
+        return 0.0;
+    }
+    beta_inc(0.5 * d1, 0.5 * d2, d1 * f / (d1 * f + d2))
+}
+
+/// F-distribution survival function P(F >= f): the ANOVA/OLS p-value.
+pub fn f_sf(f: f64, d1: f64, d2: f64) -> f64 {
+    if f <= 0.0 {
+        return 1.0;
+    }
+    beta_inc(0.5 * d2, 0.5 * d1, d2 / (d2 + d1 * f))
+}
+
+/// Monotone-increasing root find: smallest x in [lo, hi] with g(x) ≈ target.
+fn bisect<G: Fn(f64) -> f64>(g: G, target: f64, mut lo: f64, mut hi: f64) -> f64 {
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if g(mid) < target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn normal_cdf_values() {
+        close(normal_cdf(0.0), 0.5, 1e-12);
+        close(normal_cdf(1.959963985), 0.975, 1e-6);
+        close(normal_cdf(-1.959963985), 0.025, 1e-6);
+    }
+
+    #[test]
+    fn t_cdf_symmetry_and_limits() {
+        close(t_cdf(0.0, 7.0), 0.5, 1e-12);
+        close(t_cdf(2.0, 30.0) + t_cdf(-2.0, 30.0), 1.0, 1e-12);
+        // Large df approaches the normal.
+        close(t_cdf(1.96, 1e6), normal_cdf(1.96), 1e-4);
+    }
+
+    #[test]
+    fn t_critical_tables() {
+        // Classic table values.
+        close(t_critical(0.95, 10.0), 2.228, 2e-3);
+        close(t_critical(0.95, 24.0), 2.064, 2e-3);
+        close(t_critical(0.99, 5.0), 4.032, 5e-3);
+    }
+
+    #[test]
+    fn t_two_sided_p() {
+        // t=2.228, df=10 → p ≈ 0.05
+        close(t_sf_two_sided(2.228, 10.0), 0.05, 1e-3);
+    }
+
+    #[test]
+    fn f_cdf_median_equal_dfs() {
+        // For d1 = d2, F median is 1.
+        close(f_cdf(1.0, 10.0, 10.0), 0.5, 1e-12);
+    }
+
+    #[test]
+    fn f_sf_table_values() {
+        // F(0.95; 2, 10) critical value ≈ 4.103 → sf(4.103) ≈ 0.05.
+        close(f_sf(4.103, 2.0, 10.0), 0.05, 1e-3);
+        // F(0.95; 5, 20) ≈ 2.711.
+        close(f_sf(2.711, 5.0, 20.0), 0.05, 1e-3);
+    }
+
+    #[test]
+    fn f_sf_tail_tiny() {
+        // Very large F with big dfs produces an extremely small p-value (the
+        // regime of Tables 2 and 3 in the paper).
+        let p = f_sf(126.63, 8.0, 500.0);
+        assert!(p < 1e-60, "p={p}");
+        assert!(p > 0.0);
+    }
+
+    #[test]
+    fn f_cdf_sf_complement() {
+        close(f_cdf(2.5, 3.0, 17.0) + f_sf(2.5, 3.0, 17.0), 1.0, 1e-12);
+    }
+}

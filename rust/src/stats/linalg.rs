@@ -1,0 +1,252 @@
+//! Small dense linear algebra: just enough for OLS normal equations —
+//! row-major matrices, X'X / X'y products, and a Cholesky solve/inverse for
+//! symmetric positive-definite systems (the Gram matrix of a full-rank
+//! design is SPD).
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut m = Mat::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    pub fn identity(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Gram matrix X'X (cols × cols), exploiting symmetry.
+    pub fn gram(&self) -> Mat {
+        let p = self.cols;
+        let mut g = Mat::zeros(p, p);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..p {
+                let xi = row[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                for j in i..p {
+                    g.data[i * p + j] += xi * row[j];
+                }
+            }
+        }
+        for i in 0..p {
+            for j in 0..i {
+                g.data[i * p + j] = g.data[j * p + i];
+            }
+        }
+        g
+    }
+
+    /// X'y for a vector y of length `rows`.
+    pub fn tx_vec(&self, y: &[f64]) -> Vec<f64> {
+        assert_eq!(y.len(), self.rows);
+        let p = self.cols;
+        let mut out = vec![0.0; p];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            let yr = y[r];
+            for j in 0..p {
+                out[j] += row[j] * yr;
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product X·b.
+    pub fn mul_vec(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.cols);
+        (0..self.rows)
+            .map(|r| {
+                self.row(r)
+                    .iter()
+                    .zip(b)
+                    .map(|(x, w)| x * w)
+                    .sum::<f64>()
+            })
+            .collect()
+    }
+}
+
+/// Cholesky factorization of an SPD matrix: A = L·L'. Returns `None` if the
+/// matrix is not positive definite (rank-deficient design).
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    // Relative pivot tolerance: a pivot that collapses below eps × its
+    // original diagonal entry signals (numerical) rank deficiency.
+    let max_diag = (0..n).map(|i| a.get(i, i)).fold(0.0f64, f64::max);
+    let tol = max_diag * 1e-10;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.get(i, j);
+            for k in 0..j {
+                sum -= l.get(i, k) * l.get(j, k);
+            }
+            if i == j {
+                if sum <= tol {
+                    return None;
+                }
+                l.set(i, j, sum.sqrt());
+            } else {
+                l.set(i, j, sum / l.get(j, j));
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve A·x = b given the Cholesky factor L of A (forward + back subst.).
+pub fn cholesky_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    // L·z = b
+    let mut z = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l.get(i, k) * z[k];
+        }
+        z[i] = s / l.get(i, i);
+    }
+    // L'·x = z
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = z[i];
+        for k in (i + 1)..n {
+            s -= l.get(k, i) * x[k];
+        }
+        x[i] = s / l.get(i, i);
+    }
+    x
+}
+
+/// Inverse of an SPD matrix via its Cholesky factor (column-by-column solve).
+pub fn spd_inverse(a: &Mat) -> Option<Mat> {
+    let l = cholesky(a)?;
+    let n = a.rows;
+    let mut inv = Mat::zeros(n, n);
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let col = cholesky_solve(&l, &e);
+        for i in 0..n {
+            inv.set(i, j, col[i]);
+        }
+        e[j] = 0.0;
+    }
+    Some(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn gram_small() {
+        let x = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let g = x.gram();
+        // X'X = [[35, 44], [44, 56]]
+        close(g.get(0, 0), 35.0, 1e-12);
+        close(g.get(0, 1), 44.0, 1e-12);
+        close(g.get(1, 0), 44.0, 1e-12);
+        close(g.get(1, 1), 56.0, 1e-12);
+    }
+
+    #[test]
+    fn tx_vec_matches_manual() {
+        let x = Mat::from_rows(&[vec![1.0, 0.0], vec![0.0, 2.0]]);
+        assert_eq!(x.tx_vec(&[3.0, 4.0]), vec![3.0, 8.0]);
+    }
+
+    #[test]
+    fn cholesky_solves_spd() {
+        // A = [[4,2],[2,3]], b = [10, 9] → x = [1.5, 2.0]
+        let a = Mat::from_rows(&[vec![4.0, 2.0], vec![2.0, 3.0]]);
+        let l = cholesky(&a).unwrap();
+        let x = cholesky_solve(&l, &[10.0, 9.0]);
+        close(x[0], 1.5, 1e-12);
+        close(x[1], 2.0, 1e-12);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]);
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn spd_inverse_roundtrip() {
+        let a = Mat::from_rows(&[
+            vec![6.0, 2.0, 1.0],
+            vec![2.0, 5.0, 2.0],
+            vec![1.0, 2.0, 4.0],
+        ]);
+        let inv = spd_inverse(&a).unwrap();
+        // A·A⁻¹ = I
+        for i in 0..3 {
+            let row: Vec<f64> = (0..3).map(|j| a.get(i, j)).collect();
+            let prod = (0..3)
+                .map(|j| {
+                    (0..3)
+                        .map(|k| row[k] * inv.get(k, j))
+                        .sum::<f64>()
+                })
+                .collect::<Vec<_>>();
+            for (j, v) in prod.iter().enumerate() {
+                close(*v, if i == j { 1.0 } else { 0.0 }, 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn mul_vec_identity() {
+        let i = Mat::identity(4);
+        let b = vec![1.0, -2.0, 3.0, 0.5];
+        assert_eq!(i.mul_vec(&b), b);
+    }
+}

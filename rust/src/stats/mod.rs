@@ -1,0 +1,19 @@
+//! Statistics substrate: the paper's analysis layer (§5–§6) needs OLS with
+//! full inference output, two-way ANOVA with interaction, and the classical
+//! distributions behind their p-values. No scipy/statsmodels on the Rust
+//! side — everything is implemented here and unit-tested against known
+//! table values.
+
+pub mod anova;
+pub mod describe;
+pub mod dist;
+pub mod linalg;
+pub mod ols;
+pub mod special;
+pub mod stopping;
+
+pub use anova::{two_way, two_way_blocked, AnovaTable, Obs};
+pub use describe::{ci_half_width, describe, mean, quantile, Summary};
+pub use dist::{f_cdf, f_sf, normal_cdf, t_cdf, t_critical, t_sf_two_sided};
+pub use ols::{fit as ols_fit, Coef, OlsError, OlsFit};
+pub use stopping::{StopReason, StoppingRule};

@@ -1,0 +1,301 @@
+//! Ordinary least squares with the inference summary the paper reports
+//! (Table 3): coefficients, standard errors, t/p per coefficient, R²,
+//! overall F-statistic and its p-value.
+//!
+//! Matches `statsmodels.OLS` conventions: with an intercept the R² is
+//! centered; without one (the paper's Eq. 6/7 have no intercept) the
+//! *uncentered* R² is reported and the F-test has `p` numerator degrees of
+//! freedom.
+
+use super::dist::{f_sf, t_sf_two_sided};
+use super::linalg::{cholesky, cholesky_solve, spd_inverse, Mat};
+
+/// One fitted coefficient with its inference columns.
+#[derive(Debug, Clone)]
+pub struct Coef {
+    pub name: String,
+    pub value: f64,
+    pub std_err: f64,
+    pub t_stat: f64,
+    pub p_value: f64,
+}
+
+/// Full OLS fit summary.
+#[derive(Debug, Clone)]
+pub struct OlsFit {
+    pub coefs: Vec<Coef>,
+    pub n: usize,
+    /// number of estimated parameters (including intercept if present)
+    pub p: usize,
+    pub has_intercept: bool,
+    pub r2: f64,
+    pub r2_adj: f64,
+    pub f_stat: f64,
+    pub f_p_value: f64,
+    /// residual sum of squares
+    pub ss_res: f64,
+    /// residual standard error
+    pub sigma: f64,
+}
+
+/// Error cases for a degenerate fit.
+#[derive(Debug, thiserror::Error)]
+pub enum OlsError {
+    #[error("need more observations ({n}) than parameters ({p})")]
+    TooFewObservations { n: usize, p: usize },
+    #[error("design matrix is rank deficient")]
+    RankDeficient,
+    #[error("design/response length mismatch: {x} rows vs {y} responses")]
+    LengthMismatch { x: usize, y: usize },
+}
+
+/// Fit `y ~ X` by OLS. `names` labels the columns of `x`; if
+/// `add_intercept`, a leading constant column is prepended.
+pub fn fit(
+    x_rows: &[Vec<f64>],
+    y: &[f64],
+    names: &[&str],
+    add_intercept: bool,
+) -> Result<OlsFit, OlsError> {
+    if x_rows.len() != y.len() {
+        return Err(OlsError::LengthMismatch {
+            x: x_rows.len(),
+            y: y.len(),
+        });
+    }
+    let n = y.len();
+    let k = names.len();
+    let p = k + usize::from(add_intercept);
+    if n <= p {
+        return Err(OlsError::TooFewObservations { n, p });
+    }
+
+    // Build the design matrix.
+    let mut design = Mat::zeros(n, p);
+    for (i, row) in x_rows.iter().enumerate() {
+        assert_eq!(row.len(), k, "design row {i} has wrong width");
+        let mut j = 0;
+        if add_intercept {
+            design.set(i, 0, 1.0);
+            j = 1;
+        }
+        for (c, v) in row.iter().enumerate() {
+            design.set(i, j + c, *v);
+        }
+    }
+
+    // Normal equations via Cholesky.
+    let gram = design.gram();
+    let l = cholesky(&gram).ok_or(OlsError::RankDeficient)?;
+    let xty = design.tx_vec(y);
+    let beta = cholesky_solve(&l, &xty);
+
+    // Residuals.
+    let yhat = design.mul_vec(&beta);
+    let ss_res: f64 = y
+        .iter()
+        .zip(&yhat)
+        .map(|(yi, yh)| (yi - yh) * (yi - yh))
+        .sum();
+
+    // Total sum of squares: centered iff an intercept is present
+    // (statsmodels convention for no-intercept models).
+    let ss_tot = if add_intercept {
+        let mean = y.iter().sum::<f64>() / n as f64;
+        y.iter().map(|yi| (yi - mean) * (yi - mean)).sum::<f64>()
+    } else {
+        y.iter().map(|yi| yi * yi).sum::<f64>()
+    };
+
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 0.0 };
+    let df_resid = (n - p) as f64;
+    let df_model = if add_intercept { (p - 1) as f64 } else { p as f64 };
+    let r2_adj = 1.0 - (1.0 - r2) * (n as f64 - f64::from(add_intercept as u8)) / df_resid;
+
+    let sigma2 = ss_res / df_resid;
+    let f_stat = if ss_res > 0.0 {
+        ((ss_tot - ss_res) / df_model) / sigma2
+    } else {
+        f64::INFINITY
+    };
+    let f_p_value = if f_stat.is_finite() {
+        f_sf(f_stat, df_model, df_resid)
+    } else {
+        0.0
+    };
+
+    // Per-coefficient inference from (X'X)⁻¹.
+    let inv = spd_inverse(&gram).ok_or(OlsError::RankDeficient)?;
+    let mut coefs = Vec::with_capacity(p);
+    let mut label = Vec::with_capacity(p);
+    if add_intercept {
+        label.push("const".to_string());
+    }
+    label.extend(names.iter().map(|s| s.to_string()));
+    for j in 0..p {
+        let se = (sigma2 * inv.get(j, j)).sqrt();
+        let t = if se > 0.0 { beta[j] / se } else { f64::INFINITY };
+        coefs.push(Coef {
+            name: label[j].clone(),
+            value: beta[j],
+            std_err: se,
+            t_stat: t,
+            p_value: if t.is_finite() {
+                t_sf_two_sided(t, df_resid)
+            } else {
+                0.0
+            },
+        });
+    }
+
+    Ok(OlsFit {
+        coefs,
+        n,
+        p,
+        has_intercept: add_intercept,
+        r2,
+        r2_adj,
+        f_stat,
+        f_p_value,
+        ss_res,
+        sigma: sigma2.sqrt(),
+    })
+}
+
+impl OlsFit {
+    /// Predicted value for a raw (pre-intercept) regressor row.
+    pub fn predict(&self, row: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        let mut idx = 0;
+        if self.has_intercept {
+            acc += self.coefs[0].value;
+            idx = 1;
+        }
+        assert_eq!(row.len() + idx, self.coefs.len());
+        for (c, v) in self.coefs[idx..].iter().zip(row) {
+            acc += c.value * v;
+        }
+        acc
+    }
+
+    pub fn coef(&self, name: &str) -> Option<&Coef> {
+        self.coefs.iter().find(|c| c.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn exact_line_with_intercept() {
+        // y = 2 + 3x, noiseless.
+        let x: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..10).map(|i| 2.0 + 3.0 * i as f64).collect();
+        let fit = fit(&x, &y, &["x"], true).unwrap();
+        close(fit.coef("const").unwrap().value, 2.0, 1e-9);
+        close(fit.coef("x").unwrap().value, 3.0, 1e-9);
+        close(fit.r2, 1.0, 1e-12);
+    }
+
+    #[test]
+    fn no_intercept_bilinear_recovery() {
+        // The paper's model shape: y = a·t_in + b·t_out + c·t_in·t_out.
+        let (a, b, c) = (0.7, 2.1, 0.003);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for ti in [8.0, 32.0, 128.0, 512.0, 2048.0] {
+            for to in [8.0, 32.0, 128.0, 512.0, 2048.0] {
+                rows.push(vec![ti, to, ti * to]);
+                y.push(a * ti + b * to + c * ti * to);
+            }
+        }
+        let fit = fit(&rows, &y, &["t_in", "t_out", "t_in*t_out"], false).unwrap();
+        close(fit.coef("t_in").unwrap().value, a, 1e-8);
+        close(fit.coef("t_out").unwrap().value, b, 1e-8);
+        close(fit.coef("t_in*t_out").unwrap().value, c, 1e-10);
+        assert!(fit.r2 > 0.999999);
+    }
+
+    #[test]
+    fn noisy_fit_r2_and_significance() {
+        let mut rng = Rng::new(1234);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..300 {
+            let ti = rng.range(8.0, 2048.0);
+            let to = rng.range(8.0, 2048.0);
+            let mean = 0.5 * ti + 1.8 * to + 0.002 * ti * to;
+            rows.push(vec![ti, to, ti * to]);
+            y.push(mean * rng.noise_factor(0.05));
+        }
+        let f = fit(&rows, &y, &["ti", "to", "titd"], false).unwrap();
+        assert!(f.r2 > 0.96, "r2={}", f.r2);
+        assert!(f.f_p_value < 1e-30);
+        for c in &f.coefs {
+            assert!(c.p_value < 1e-3, "{}: p={}", c.name, c.p_value);
+        }
+    }
+
+    #[test]
+    fn prediction_matches_training_points_noiseless() {
+        let x: Vec<Vec<f64>> = (1..20).map(|i| vec![i as f64, (i * i) as f64]).collect();
+        let y: Vec<f64> = x.iter().map(|r| 1.0 + 2.0 * r[0] - 0.1 * r[1]).collect();
+        let f = fit(&x, &y, &["a", "b"], true).unwrap();
+        for (r, yi) in x.iter().zip(&y) {
+            close(f.predict(r), *yi, 1e-8);
+        }
+    }
+
+    #[test]
+    fn rejects_rank_deficiency() {
+        // Second column is 2× the first.
+        let x: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64, 2.0 * i as f64]).collect();
+        let y: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        assert!(matches!(
+            fit(&x, &y, &["a", "b"], false),
+            Err(OlsError::RankDeficient)
+        ));
+    }
+
+    #[test]
+    fn rejects_underdetermined() {
+        let x = vec![vec![1.0, 2.0], vec![2.0, 1.0]];
+        let y = vec![1.0, 2.0];
+        assert!(matches!(
+            fit(&x, &y, &["a", "b"], true),
+            Err(OlsError::TooFewObservations { .. })
+        ));
+    }
+
+    #[test]
+    fn length_mismatch_detected() {
+        let x = vec![vec![1.0]];
+        let y = vec![1.0, 2.0];
+        assert!(matches!(
+            fit(&x, &y, &["a"], false),
+            Err(OlsError::LengthMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn irrelevant_regressor_insignificant() {
+        let mut rng = Rng::new(99);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..400 {
+            let x1 = rng.range(0.0, 10.0);
+            let junk = rng.range(0.0, 10.0);
+            rows.push(vec![x1, junk]);
+            y.push(3.0 * x1 + rng.normal_with(0.0, 1.0));
+        }
+        let f = fit(&rows, &y, &["x1", "junk"], true).unwrap();
+        assert!(f.coef("x1").unwrap().p_value < 1e-10);
+        assert!(f.coef("junk").unwrap().p_value > 0.01);
+    }
+}

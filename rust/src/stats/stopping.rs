@@ -1,0 +1,116 @@
+//! The paper's trial-stopping criterion (§5.1.3): repeat trials until
+//! (i) the 95% CI half-width of the measured runtime is within 0.5 s of the
+//! mean, or (ii) 25 trials have been run.
+
+use super::describe::ci_half_width;
+
+/// Stopping-rule configuration. Defaults mirror §5.1.3.
+#[derive(Debug, Clone, Copy)]
+pub struct StoppingRule {
+    /// confidence level of the interval (paper: 0.95)
+    pub confidence: f64,
+    /// absolute half-width target in the response's units (paper: 0.5 s)
+    pub tolerance: f64,
+    /// trial cap (paper: 25)
+    pub max_trials: usize,
+    /// minimum trials before the CI is consulted
+    pub min_trials: usize,
+}
+
+impl Default for StoppingRule {
+    fn default() -> Self {
+        StoppingRule {
+            confidence: 0.95,
+            tolerance: 0.5,
+            max_trials: 25,
+            min_trials: 3,
+        }
+    }
+}
+
+/// Why a measurement cell stopped collecting trials.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// CI half-width within tolerance
+    Converged,
+    /// hit the trial cap
+    MaxTrials,
+    /// still collecting
+    Continue,
+}
+
+impl StoppingRule {
+    /// Decide whether another trial is needed given the samples so far.
+    pub fn check(&self, samples: &[f64]) -> StopReason {
+        if samples.len() >= self.max_trials {
+            return StopReason::MaxTrials;
+        }
+        if samples.len() < self.min_trials {
+            return StopReason::Continue;
+        }
+        if ci_half_width(samples, self.confidence) <= self.tolerance {
+            StopReason::Converged
+        } else {
+            StopReason::Continue
+        }
+    }
+
+    /// Drive a sampling closure until the rule stops it; returns the samples
+    /// and the reason.
+    pub fn run<F: FnMut(usize) -> f64>(&self, mut trial: F) -> (Vec<f64>, StopReason) {
+        let mut samples = Vec::new();
+        loop {
+            match self.check(&samples) {
+                StopReason::Continue => {
+                    let i = samples.len();
+                    samples.push(trial(i));
+                }
+                reason => return (samples, reason),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn converges_fast_on_low_variance() {
+        let rule = StoppingRule::default();
+        let mut rng = Rng::new(1);
+        let (samples, reason) = rule.run(|_| 10.0 + rng.normal_with(0.0, 0.01));
+        assert_eq!(reason, StopReason::Converged);
+        assert!(samples.len() <= 5, "n={}", samples.len());
+    }
+
+    #[test]
+    fn caps_at_max_trials_on_high_variance() {
+        let rule = StoppingRule::default();
+        let mut rng = Rng::new(2);
+        let (samples, reason) = rule.run(|_| 10.0 + rng.normal_with(0.0, 20.0));
+        assert_eq!(reason, StopReason::MaxTrials);
+        assert_eq!(samples.len(), 25);
+    }
+
+    #[test]
+    fn respects_min_trials() {
+        let rule = StoppingRule::default();
+        // Identical samples converge instantly once min_trials reached.
+        let (samples, reason) = rule.run(|_| 1.0);
+        assert_eq!(reason, StopReason::Converged);
+        assert_eq!(samples.len(), rule.min_trials);
+    }
+
+    #[test]
+    fn check_is_pure() {
+        let rule = StoppingRule {
+            tolerance: 1.0,
+            ..Default::default()
+        };
+        let samples = vec![1.0, 1.1, 0.9, 1.0];
+        assert_eq!(rule.check(&samples), StopReason::Converged);
+        assert_eq!(rule.check(&samples), StopReason::Converged);
+    }
+}

@@ -1,0 +1,12 @@
+//! Energy instrumentation simulators (§3.2 of the paper): an NVML-style
+//! GPU energy counter (what PyJoules wraps), a μProf-style per-core CPU
+//! power timechart with psutil residency attribution, and the combined
+//! measurement harness.
+
+pub mod meter;
+pub mod nvml;
+pub mod uprof;
+
+pub use meter::{measure, Measurement};
+pub use nvml::{measure_gpu, GpuEnergyReading};
+pub use uprof::{measure_cpu, CpuEnergyReading, POLL_INTERVAL_S};

@@ -1,0 +1,139 @@
+//! Simulated NVML energy counter (what PyJoules reads on real hardware).
+//!
+//! NVML exposes a monotonically increasing board-energy counter with
+//! millijoule resolution, updated internally at ~10 Hz from the power
+//! sensor. PyJoules samples the counter before and after the measured
+//! region, so the estimate carries (a) mJ quantization and (b) edge error
+//! from the sensor update period. Both are reproduced here so the
+//! characterization data inherits realistic estimator behavior.
+
+use crate::perfmodel::PowerTrace;
+use crate::util::Rng;
+
+/// NVML sensor update period (seconds).
+const SENSOR_PERIOD_S: f64 = 0.1;
+
+/// Energy measurement for one device group over one trace.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuEnergyReading {
+    /// measured energy, joules
+    pub energy_j: f64,
+    /// exact (unobservable) energy, for estimator-error tests
+    pub true_energy_j: f64,
+}
+
+/// Integrate the trace the way the NVML board-energy counter behaves: the
+/// driver integrates the power sensor continuously, so the bulk of the
+/// region is captured exactly; the reads at the region boundaries lag the
+/// sensor by up to one update period, contributing edge error; and the
+/// counter itself is quantized to millijoules.
+pub fn measure_gpu(trace: &PowerTrace, rng: &mut Rng) -> GpuEnergyReading {
+    let true_energy = trace.gpu_energy_j();
+    let total_t = trace.runtime_s();
+
+    // Edge error: each boundary read reflects the counter as of up to one
+    // sensor period earlier, so the measured window slides by up to ±T at
+    // each end, weighted by the local power level.
+    let lead = rng.range(0.0, SENSOR_PERIOD_S.min(total_t));
+    let lag = rng.range(0.0, SENSOR_PERIOD_S.min(total_t));
+    let edge_err = lag * power_at(trace, (total_t - 1e-12).max(0.0))
+        - lead * power_at(trace, 0.0);
+    // Sensor calibration error, slowly varying → one draw per region.
+    let calib = rng.noise_factor(0.01);
+
+    let measured = (true_energy + edge_err).max(0.0) * calib;
+    // Counter quantization: millijoules.
+    let measured = (measured * 1000.0).round() / 1000.0;
+    GpuEnergyReading {
+        energy_j: measured,
+        true_energy_j: true_energy,
+    }
+}
+
+/// Instantaneous total GPU power at time `t` into the trace.
+pub fn power_at(trace: &PowerTrace, t: f64) -> f64 {
+    let mut acc = 0.0;
+    for s in &trace.segments {
+        if t < acc + s.duration_s {
+            return s.gpu_w;
+        }
+        acc += s.duration_s;
+    }
+    trace.segments.last().map(|s| s.gpu_w).unwrap_or(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::Segment;
+
+    fn flat_trace(duration: f64, watts: f64) -> PowerTrace {
+        PowerTrace {
+            segments: vec![Segment {
+                duration_s: duration,
+                gpu_w: watts,
+                cpu_cores: 0,
+                cpu_load: 0.0,
+            }],
+        }
+    }
+
+    #[test]
+    fn flat_trace_measured_closely() {
+        let tr = flat_trace(2.0, 300.0);
+        let r = measure_gpu(&tr, &mut Rng::new(1));
+        // Edge error ≤ 2 sensor periods × 300 W = 60 J; calibration ±~2%.
+        assert!((r.energy_j - 600.0).abs() < 75.0, "{}", r.energy_j);
+        assert!((r.true_energy_j - 600.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn estimator_error_small_on_long_traces() {
+        // Alternating power levels; sensor sampling can mis-attribute edges
+        // but the relative error over a multi-second region stays small.
+        let mut segments = Vec::new();
+        for i in 0..60 {
+            segments.push(Segment {
+                duration_s: 0.05,
+                gpu_w: if i % 2 == 0 { 150.0 } else { 350.0 },
+                cpu_cores: 0,
+                cpu_load: 0.0,
+            });
+        }
+        let tr = PowerTrace { segments };
+        let r = measure_gpu(&tr, &mut Rng::new(3));
+        let rel = (r.energy_j - r.true_energy_j).abs() / r.true_energy_j;
+        assert!(rel < 0.1, "rel={rel}");
+    }
+
+    #[test]
+    fn power_at_selects_segment() {
+        let tr = PowerTrace {
+            segments: vec![
+                Segment {
+                    duration_s: 1.0,
+                    gpu_w: 100.0,
+                    cpu_cores: 0,
+                    cpu_load: 0.0,
+                },
+                Segment {
+                    duration_s: 1.0,
+                    gpu_w: 200.0,
+                    cpu_cores: 0,
+                    cpu_load: 0.0,
+                },
+            ],
+        };
+        assert_eq!(power_at(&tr, 0.5), 100.0);
+        assert_eq!(power_at(&tr, 1.5), 200.0);
+        assert_eq!(power_at(&tr, 99.0), 200.0); // clamp to last
+    }
+
+    #[test]
+    fn quantized_to_millijoule() {
+        let tr = flat_trace(0.0123, 333.0);
+        let r = measure_gpu(&tr, &mut Rng::new(5));
+        let mj = r.energy_j * 1000.0;
+        assert!((mj - mj.round()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,7 @@
+//! Property-testing helper (no `proptest` in the offline cache): runs a
+//! property over many seeded random cases and, on failure, reports the
+//! first failing seed so the case can be replayed deterministically.
+
+pub mod prop;
+
+pub use prop::{forall, Config};

@@ -1,0 +1,92 @@
+//! `forall` — a minimal deterministic property-test driver.
+//!
+//! ```no_run
+//! use ecoserve::testkit::{forall, Config};
+//! use ecoserve::util::Rng;
+//!
+//! forall(Config::default().cases(64), |rng: &mut Rng| {
+//!     let x = rng.range(0.0, 1.0);
+//!     assert!(x >= 0.0 && x < 1.0);
+//! });
+//! ```
+//!
+//! Each case gets an `Rng` derived from `base_seed + case index`; a failing
+//! case panics with the exact seed so it can be replayed with
+//! `Rng::new(seed)` in a focused unit test.
+
+use crate::util::Rng;
+
+/// Driver configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 100,
+            base_seed: 0xEC0_5EED,
+        }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Config {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Config {
+        self.base_seed = s;
+        self
+    }
+}
+
+/// Run `property` across `cfg.cases` seeded random cases.
+pub fn forall<F: FnMut(&mut Rng)>(cfg: Config, mut property: F) {
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property failed at case {case} (replay with Rng::new({seed:#x})): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(Config::default().cases(32), |rng| {
+            let a = rng.int_range(0, 100);
+            assert!((0..=100).contains(&a));
+        });
+    }
+
+    #[test]
+    fn reports_failing_seed() {
+        let result = std::panic::catch_unwind(|| {
+            forall(Config::default().cases(50).seed(7), |rng| {
+                // Fails eventually.
+                assert!(rng.f64() < 0.5, "drew a large value");
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay with Rng::new("), "{msg}");
+    }
+}

@@ -1,0 +1,181 @@
+//! Tiny command-line argument parser (no `clap` in the offline cache).
+//!
+//! Supports the shapes the `ecoserve` binary and the examples need:
+//! a positional subcommand followed by `--flag`, `--key value`, and
+//! `--key=value` options. Unknown options are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, positional arguments, and options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// option names consumed via accessors, for unknown-option detection
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an explicit iterator (used by tests).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    /// String option.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    /// Numeric option with default; panics with a readable message on a
+    /// malformed value (CLI surface, not library surface).
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        match self.opt(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> usize {
+        match self.opt(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn opt_u64(&self, key: &str, default: u64) -> u64 {
+        match self.opt(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    /// Boolean flag (`--verbose`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Comma-separated list option.
+    pub fn opt_list(&self, key: &str) -> Vec<String> {
+        self.opt(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+            .unwrap_or_default()
+    }
+
+    /// After all accessors ran, reject options the command never asked about.
+    pub fn reject_unknown(&self) -> anyhow::Result<()> {
+        let seen = self.seen.borrow();
+        for k in self.opts.keys().chain(self.flags.iter()) {
+            if !seen.iter().any(|s| s == k) {
+                anyhow::bail!("unknown option --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = args("fit --seed 42 --models llama2-7b,llama2-70b --verbose");
+        assert_eq!(a.command.as_deref(), Some("fit"));
+        assert_eq!(a.opt_u64("seed", 0), 42);
+        assert_eq!(a.opt_list("models"), vec!["llama2-7b", "llama2-70b"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = args("route --zeta=0.5 --out=results");
+        assert_eq!(a.opt_f64("zeta", 0.0), 0.5);
+        assert_eq!(a.opt_or("out", "x"), "results");
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("serve");
+        assert_eq!(a.opt_usize("batch", 32), 32);
+        assert_eq!(a.opt_or("model", "default"), "default");
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = args("anova data.csv more.csv");
+        assert_eq!(a.positional, vec!["data.csv", "more.csv"]);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = args("x --mu -1.5");
+        assert_eq!(a.opt_f64("mu", 0.0), -1.5);
+    }
+
+    #[test]
+    fn unknown_rejection() {
+        let a = args("fit --seed 1 --oops 2");
+        let _ = a.opt_u64("seed", 0);
+        assert!(a.reject_unknown().is_err());
+        let _ = a.opt_u64("oops", 0);
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "expects a number")]
+    fn malformed_number_panics() {
+        let a = args("x --zeta abc");
+        a.opt_f64("zeta", 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Foundation substrates built in-repo because the offline crate cache
+//! carries no `rand`, `serde`, `clap`, or `criterion`: deterministic PRNG and
+//! distributions, JSON, CLI parsing, tables/CSV, timing + micro-bench
+//! harness, and leveled logging.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod table;
+pub mod timer;
+
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Rng;
+pub use table::{fnum, Table};
+pub use timer::{bench, black_box, human_time, Stopwatch};

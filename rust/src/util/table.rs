@@ -1,0 +1,228 @@
+//! ASCII table and CSV rendering for report output.
+//!
+//! Every paper table/figure regenerator prints through this module so that
+//! `results/` files and terminal output share one formatting path.
+
+use std::fmt::Write as _;
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder: header row + data rows of strings.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    align: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            align: header
+                .iter()
+                .enumerate()
+                .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+                .collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Override the default alignment (first column left, rest right).
+    pub fn with_align(mut self, align: Vec<Align>) -> Table {
+        assert_eq!(align.len(), self.header.len());
+        self.align = align;
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render as an aligned ASCII table.
+    pub fn to_ascii(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "# {}", self.title);
+        }
+        let fmt_row = |cells: &[String], width: &[usize], align: &[Align]| -> String {
+            let mut line = String::from("|");
+            for ((c, w), a) in cells.iter().zip(width).zip(align) {
+                let pad = w - c.chars().count();
+                match a {
+                    Align::Left => {
+                        let _ = write!(line, " {}{} |", c, " ".repeat(pad));
+                    }
+                    Align::Right => {
+                        let _ = write!(line, " {}{} |", " ".repeat(pad), c);
+                    }
+                }
+            }
+            line
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header, &width, &self.align));
+        let mut sep = String::from("|");
+        for w in &width {
+            let _ = write!(sep, "{}|", "-".repeat(w + 2));
+        }
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &width, &self.align));
+        }
+        out
+    }
+
+    /// Render as CSV (RFC 4180 quoting).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let _ = writeln!(
+            out,
+            "{}",
+            self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+}
+
+/// Format a float with `digits` significant-looking decimal places, trimming
+/// to scientific notation for very small/large magnitudes (p-values).
+pub fn fnum(x: f64, digits: usize) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    let a = x.abs();
+    if a >= 1e6 || a < 1e-3 {
+        format!("{x:.*e}", digits.max(2))
+    } else {
+        format!("{x:.*}", digits)
+    }
+}
+
+/// Render a numeric series as a compact ASCII sparkline-ish plot for terminal
+/// figures (one line per series point set is handled by the caller).
+pub fn ascii_series(label: &str, xs: &[f64], ys: &[f64], width: usize) -> String {
+    assert_eq!(xs.len(), ys.len());
+    if ys.is_empty() {
+        return format!("{label}: (empty)\n");
+    }
+    let ymin = ys.iter().cloned().fold(f64::INFINITY, f64::min);
+    let ymax = ys.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = if (ymax - ymin).abs() < 1e-12 { 1.0 } else { ymax - ymin };
+    let blocks = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    // Resample to `width` points.
+    let mut line = String::new();
+    for i in 0..width.min(ys.len().max(1)) {
+        let idx = i * (ys.len() - 1).max(1) / (width.min(ys.len()) - 1).max(1);
+        let f = (ys[idx] - ymin) / span;
+        let b = blocks[((f * 7.0).round() as usize).min(7)];
+        line.push(b);
+    }
+    format!(
+        "{label:<28} {line}  [{} .. {}]\n",
+        fnum(ymin, 3),
+        fnum(ymax, 3)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_aligns_columns() {
+        let mut t = Table::new("demo", &["LLM", "R2"]);
+        t.row(vec!["llama2-70b".into(), "0.976".into()]);
+        t.row(vec!["mistral-7b".into(), "0.975".into()]);
+        let s = t.to_ascii();
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[0].starts_with("# demo"));
+        // All table rows equal width.
+        let widths: Vec<usize> = lines[1..].iter().map(|l| l.chars().count()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    fn csv_quotes_specials() {
+        let mut t = Table::new("q", &["a", "b"]);
+        t.row(vec!["x,y".into(), "he said \"hi\"".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"he said \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("w", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn fnum_scientific_for_pvalues() {
+        assert_eq!(fnum(0.0, 3), "0");
+        let s = fnum(4.67e-15, 2);
+        assert!(s.contains('e'), "{s}");
+        assert_eq!(fnum(0.976, 3), "0.976");
+    }
+
+    #[test]
+    fn series_renders() {
+        let xs: Vec<f64> = (0..16).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x * x).collect();
+        let s = ascii_series("runtime", &xs, &ys, 16);
+        assert!(s.contains("runtime"));
+        assert!(s.contains('█'));
+    }
+
+    #[test]
+    fn series_flat_ok() {
+        let s = ascii_series("flat", &[0.0, 1.0], &[5.0, 5.0], 8);
+        assert!(!s.is_empty());
+    }
+}

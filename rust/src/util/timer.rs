@@ -1,0 +1,135 @@
+//! Wall-clock timing helpers and the micro-benchmark harness used by the
+//! `harness = false` bench targets (no `criterion` in the offline cache).
+
+use std::time::{Duration, Instant};
+
+/// A scoped stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Summary statistics of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStats {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>7} it  mean {:>12}  median {:>12}  p95 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            human_time(self.mean_s),
+            human_time(self.median_s),
+            human_time(self.p95_s),
+            human_time(self.min_s),
+        )
+    }
+}
+
+/// Render seconds with an appropriate unit.
+pub fn human_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Micro-bench runner: warms up, then times `f` repeatedly until `budget`
+/// wall time is spent or `max_iters` reached (whichever first, but at least
+/// `min_iters`). Returns per-iteration statistics.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchStats {
+    const MIN_ITERS: usize = 5;
+    const MAX_ITERS: usize = 10_000;
+    // Warm-up: one untimed call.
+    f();
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while (samples.len() < MIN_ITERS)
+        || (start.elapsed() < budget && samples.len() < MAX_ITERS)
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean_s: mean,
+        median_s: samples[n / 2],
+        p95_s: samples[(n as f64 * 0.95) as usize % n],
+        min_s: samples[0],
+        max_s: samples[n - 1],
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value (std equivalent of
+/// `criterion::black_box`; `std::hint::black_box` is stable since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.elapsed_s() >= 0.004);
+    }
+
+    #[test]
+    fn bench_runs_min_iters() {
+        let mut count = 0usize;
+        let stats = bench("noop", Duration::from_millis(1), || {
+            count += 1;
+        });
+        assert!(stats.iters >= 5);
+        assert_eq!(stats.iters + 1, count); // +1 warm-up
+        assert!(stats.min_s <= stats.median_s);
+        assert!(stats.median_s <= stats.max_s);
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert!(human_time(2e-9).ends_with("ns"));
+        assert!(human_time(2e-6).ends_with("µs"));
+        assert!(human_time(2e-3).ends_with("ms"));
+        assert!(human_time(2.0).ends_with("s"));
+    }
+}

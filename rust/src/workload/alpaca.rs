@@ -1,0 +1,139 @@
+//! Synthetic Alpaca-like workload generator.
+//!
+//! The paper's case study samples 500 queries from the Alpaca dataset
+//! (52 002 instruction/response pairs whose responses come from GPT-4).
+//! The dataset itself is an external artifact, so we generate workloads
+//! matching its published token-length statistics: instruction+input
+//! lengths are short and right-skewed (median ≈ 20–30 tokens, mean ≈ 40),
+//! responses are longer and heavier-tailed (median ≈ 40–60, mean ≈ 65,
+//! with a tail past 500). Log-normal marginals with a mild positive
+//! length correlation reproduce those moments; the scheduler only ever
+//! consumes the (τ_in, τ_out) pairs. A real trace can be dropped in via
+//! `workload::trace`.
+
+use super::query::Query;
+use crate::util::Rng;
+
+/// Length-distribution parameters (log-normal, token units).
+#[derive(Debug, Clone, Copy)]
+pub struct AlpacaParams {
+    pub mu_in: f64,
+    pub sigma_in: f64,
+    pub mu_out: f64,
+    pub sigma_out: f64,
+    /// correlation knob: fraction of the output's log-length inherited
+    /// from the input's log-deviation (longer prompts → longer answers)
+    pub rho: f64,
+    /// truncation bounds (tokenizer context limits in the paper's setup)
+    pub min_tokens: u32,
+    pub max_in: u32,
+    pub max_out: u32,
+}
+
+impl Default for AlpacaParams {
+    fn default() -> Self {
+        AlpacaParams {
+            // exp(3.35) ≈ 28 median input tokens, right-skewed
+            mu_in: 3.35,
+            sigma_in: 0.75,
+            // exp(4.0) ≈ 55 median output tokens, heavier tail
+            mu_out: 4.0,
+            sigma_out: 0.85,
+            rho: 0.35,
+            min_tokens: 1,
+            max_in: 2048,
+            max_out: 4096,
+        }
+    }
+}
+
+/// Generate a workload of `n` queries.
+pub fn generate(n: usize, params: &AlpacaParams, rng: &mut Rng) -> Vec<Query> {
+    (0..n)
+        .map(|id| {
+            let z_in = rng.normal();
+            let z_out = params.rho * z_in
+                + (1.0 - params.rho * params.rho).sqrt() * rng.normal();
+            let t_in = (params.mu_in + params.sigma_in * z_in).exp();
+            let t_out = (params.mu_out + params.sigma_out * z_out).exp();
+            Query {
+                id: id as u32,
+                t_in: (t_in.round() as u32).clamp(params.min_tokens, params.max_in),
+                t_out: (t_out.round() as u32).clamp(params.min_tokens, params.max_out),
+            }
+        })
+        .collect()
+}
+
+/// The paper's 500-query sample with the default parameters.
+pub fn paper_sample(rng: &mut Rng) -> Vec<Query> {
+    generate(500, &AlpacaParams::default(), rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::query::stats;
+
+    #[test]
+    fn moments_match_alpaca_statistics() {
+        let mut rng = Rng::new(2024);
+        let qs = generate(20_000, &AlpacaParams::default(), &mut rng);
+        let s = stats(&qs);
+        // Published Alpaca token statistics (HF dataset card magnitudes).
+        assert!(s.mean_in > 25.0 && s.mean_in < 60.0, "mean_in={}", s.mean_in);
+        assert!(s.mean_out > 50.0 && s.mean_out < 110.0, "mean_out={}", s.mean_out);
+        // Right-skew: mean > median.
+        let mut ins: Vec<f64> = qs.iter().map(|q| q.t_in as f64).collect();
+        ins.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median_in = ins[ins.len() / 2];
+        assert!(s.mean_in > median_in);
+    }
+
+    #[test]
+    fn bounds_respected() {
+        let mut rng = Rng::new(3);
+        let p = AlpacaParams {
+            max_in: 100,
+            max_out: 200,
+            ..Default::default()
+        };
+        for q in generate(5000, &p, &mut rng) {
+            assert!(q.t_in >= 1 && q.t_in <= 100);
+            assert!(q.t_out >= 1 && q.t_out <= 200);
+        }
+    }
+
+    #[test]
+    fn lengths_positively_correlated() {
+        let mut rng = Rng::new(5);
+        let qs = generate(20_000, &AlpacaParams::default(), &mut rng);
+        let mi = qs.iter().map(|q| (q.t_in as f64).ln()).sum::<f64>() / qs.len() as f64;
+        let mo = qs.iter().map(|q| (q.t_out as f64).ln()).sum::<f64>() / qs.len() as f64;
+        let mut cov = 0.0;
+        let mut vi = 0.0;
+        let mut vo = 0.0;
+        for q in &qs {
+            let di = (q.t_in as f64).ln() - mi;
+            let dov = (q.t_out as f64).ln() - mo;
+            cov += di * dov;
+            vi += di * di;
+            vo += dov * dov;
+        }
+        let r = cov / (vi.sqrt() * vo.sqrt());
+        assert!(r > 0.2 && r < 0.6, "r={r}");
+    }
+
+    #[test]
+    fn paper_sample_size() {
+        let mut rng = Rng::new(7);
+        assert_eq!(paper_sample(&mut rng).len(), 500);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(50, &AlpacaParams::default(), &mut Rng::new(9));
+        let b = generate(50, &AlpacaParams::default(), &mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+}

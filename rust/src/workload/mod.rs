@@ -1,0 +1,11 @@
+//! Workload layer: query types, the synthetic Alpaca-like generator used
+//! by the §6.3 case study, and JSONL trace I/O for real traces.
+
+pub mod alpaca;
+pub mod predictor;
+pub mod query;
+pub mod trace;
+
+pub use alpaca::{generate, paper_sample, AlpacaParams};
+pub use predictor::{predicted_workload, LengthPredictor};
+pub use query::{stats, Query, WorkloadStats};

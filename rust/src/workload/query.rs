@@ -1,0 +1,75 @@
+//! Query and workload types (§4): a query is its token-count pair
+//! `q = (τ_in, τ_out)`; a workload is a multiset of queries.
+
+/// One inference query, identified for assignment bookkeeping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Query {
+    pub id: u32,
+    pub t_in: u32,
+    pub t_out: u32,
+}
+
+impl Query {
+    pub fn total_tokens(&self) -> u32 {
+        self.t_in + self.t_out
+    }
+}
+
+/// Aggregate statistics of a workload.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadStats {
+    pub n: usize,
+    pub mean_in: f64,
+    pub mean_out: f64,
+    pub max_in: u32,
+    pub max_out: u32,
+    pub total_tokens: u64,
+}
+
+pub fn stats(queries: &[Query]) -> WorkloadStats {
+    let n = queries.len();
+    if n == 0 {
+        return WorkloadStats {
+            n: 0,
+            mean_in: 0.0,
+            mean_out: 0.0,
+            max_in: 0,
+            max_out: 0,
+            total_tokens: 0,
+        };
+    }
+    WorkloadStats {
+        n,
+        mean_in: queries.iter().map(|q| q.t_in as f64).sum::<f64>() / n as f64,
+        mean_out: queries.iter().map(|q| q.t_out as f64).sum::<f64>() / n as f64,
+        max_in: queries.iter().map(|q| q.t_in).max().unwrap(),
+        max_out: queries.iter().map(|q| q.t_out).max().unwrap(),
+        total_tokens: queries.iter().map(|q| q.total_tokens() as u64).sum(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let qs = vec![
+            Query { id: 0, t_in: 10, t_out: 20 },
+            Query { id: 1, t_in: 30, t_out: 40 },
+        ];
+        let s = stats(&qs);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.mean_in, 20.0);
+        assert_eq!(s.mean_out, 30.0);
+        assert_eq!(s.max_out, 40);
+        assert_eq!(s.total_tokens, 100);
+    }
+
+    #[test]
+    fn stats_empty() {
+        let s = stats(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.total_tokens, 0);
+    }
+}

@@ -1,0 +1,88 @@
+//! Workload trace I/O: JSONL with one `{"id":…,"t_in":…,"t_out":…}` object
+//! per line, so real traces (e.g. tokenized Alpaca) drop into the same
+//! pipeline as the synthetic generator.
+
+use super::query::Query;
+use crate::util::Json;
+use std::path::Path;
+
+/// Serialize queries to JSONL text.
+pub fn to_jsonl(queries: &[Query]) -> String {
+    let mut out = String::new();
+    for q in queries {
+        let obj = Json::obj(vec![
+            ("id", Json::num(q.id as f64)),
+            ("t_in", Json::num(q.t_in as f64)),
+            ("t_out", Json::num(q.t_out as f64)),
+        ]);
+        out.push_str(&obj.to_string_compact());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse queries from JSONL text.
+pub fn from_jsonl(text: &str) -> anyhow::Result<Vec<Query>> {
+    let mut queries = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("trace line {}: {e}", i + 1))?;
+        let get = |k: &str| -> anyhow::Result<u32> {
+            v.get(k)
+                .as_u64()
+                .map(|x| x as u32)
+                .ok_or_else(|| anyhow::anyhow!("trace line {}: missing/invalid '{k}'", i + 1))
+        };
+        queries.push(Query {
+            id: get("id")?,
+            t_in: get("t_in")?,
+            t_out: get("t_out")?,
+        });
+    }
+    Ok(queries)
+}
+
+pub fn save(queries: &[Query], path: &Path) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, to_jsonl(queries))?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> anyhow::Result<Vec<Query>> {
+    from_jsonl(&std::fs::read_to_string(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let qs = vec![
+            Query { id: 0, t_in: 28, t_out: 55 },
+            Query { id: 1, t_in: 2048, t_out: 1 },
+        ];
+        let text = to_jsonl(&qs);
+        assert_eq!(text.lines().count(), 2);
+        let back = from_jsonl(&text).unwrap();
+        assert_eq!(back, qs);
+    }
+
+    #[test]
+    fn skips_blank_lines() {
+        let text = "{\"id\":0,\"t_in\":1,\"t_out\":2}\n\n";
+        assert_eq!(from_jsonl(text).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(from_jsonl("not json\n").is_err());
+        assert!(from_jsonl("{\"id\":0}\n").is_err());
+        assert!(from_jsonl("{\"id\":0,\"t_in\":-3,\"t_out\":2}\n").is_err());
+    }
+}

@@ -1,0 +1,150 @@
+//! Integration test: the complete offline pipeline — characterize → ANOVA
+//! → fit → normalize → optimize → evaluate — must reproduce the paper's
+//! qualitative results end to end (DESIGN.md §5 statistical targets).
+
+use ecoserve::characterize::{self, Campaign};
+use ecoserve::config::{llama_family, swing_node, ExperimentConfig, Partition};
+use ecoserve::hardware::Node;
+use ecoserve::models::fit_all;
+use ecoserve::perfmodel::Cluster;
+use ecoserve::scheduler::{sweep_mode, CapacityMode};
+use ecoserve::stats;
+use ecoserve::util::Rng;
+use ecoserve::workload::{generate, AlpacaParams};
+
+fn family_rows(
+    cfg: &ExperimentConfig,
+    trials: usize,
+    seed: u64,
+) -> Vec<characterize::Row> {
+    let campaign = Campaign::new(Cluster::new(Node::new(swing_node())), cfg.clone());
+    let mut rng = Rng::new(seed);
+    let mut rows = Vec::new();
+    for spec in llama_family() {
+        rows.extend(characterize::rows_from_cells(&campaign.grid(
+            &spec,
+            trials,
+            &mut rng,
+        )));
+    }
+    rows
+}
+
+#[test]
+fn full_offline_pipeline_matches_paper_shape() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.grid_levels = vec![8, 32, 128, 512, 2048];
+    let rows = family_rows(&cfg, 3, 99);
+
+    // --- Table 2 shape (model as blocking factor) --------------------------
+    let e_obs = characterize::anova_blocks(&rows, |r| r.total_energy_j());
+    let anova = stats::two_way_blocked(&e_obs, "in", "out").unwrap();
+    assert!(anova.factor_b.f_stat > anova.factor_a.f_stat);
+    assert!(anova.factor_a.p_value < 0.01);
+    assert!(anova.factor_b.p_value < 1e-20);
+    assert!(anova.interaction.p_value < 0.01);
+
+    // --- Table 3 shape ---------------------------------------------------
+    let family = llama_family();
+    let sets = fit_all(&family, &rows).unwrap();
+    for s in &sets {
+        assert!(s.energy.r2 > 0.96, "{} energy R² {}", s.model_id, s.energy.r2);
+        assert!(s.runtime.r2 > 0.96, "{} runtime R² {}", s.model_id, s.runtime.r2);
+        assert!(s.energy.p_value < 1e-40);
+    }
+    // Energy cost ordering follows model size on the dominant (output)
+    // term and on total predictions. (The interaction term α₂ does NOT
+    // follow size: Llama-2 7B uses MHA, so its KV cache is larger per
+    // token than the 70B's GQA cache — a real effect, not a bug.)
+    assert!(sets[0].energy.coefs[1] < sets[1].energy.coefs[1]);
+    assert!(sets[1].energy.coefs[1] < sets[2].energy.coefs[1]);
+    // Ordering checks at the paper's own operating points (Fig. 1: vary
+    // input with τ_out = 32; Fig. 2: vary output with τ_in = 32). At large
+    // (τ_in AND τ_out) the 13B (MHA → big KV cache) genuinely crosses the
+    // 70B (GQA) on runtime, so we do not assert there.
+    for (ti, to) in [(32.0, 32.0), (512.0, 32.0), (32.0, 512.0), (2048.0, 32.0)] {
+        let e: Vec<f64> = sets.iter().map(|s| s.energy.predict(ti, to)).collect();
+        assert!(e[0] < e[1] && e[1] < e[2], "energy ({ti},{to}): {e:?}");
+        let r: Vec<f64> = sets.iter().map(|s| s.runtime.predict(ti, to)).collect();
+        assert!(r[0] < r[1], "runtime ({ti},{to}): {r:?}");
+    }
+
+    // --- Fig. 3 shape ----------------------------------------------------
+    let mut rng = Rng::new(777);
+    let queries = generate(400, &AlpacaParams::default(), &mut rng);
+    let partition = Partition::paper_case_study();
+    let sweep = sweep_mode(
+        &sets,
+        &queries,
+        &partition.gammas,
+        7,
+        CapacityMode::Eq3Only,
+        &mut rng,
+    )
+    .unwrap();
+
+    // Energy monotone non-increasing in ζ; accuracy non-increasing.
+    let pts = &sweep.points;
+    for w in pts.windows(2) {
+        assert!(w[1].eval.mean_energy_j <= w[0].eval.mean_energy_j + 1e-9);
+        assert!(w[1].eval.mean_accuracy <= w[0].eval.mean_accuracy + 1e-9);
+    }
+    // The frontier spans a real range (the whole point of the paper).
+    let e0 = pts.first().unwrap().eval.mean_energy_j;
+    let e1 = pts.last().unwrap().eval.mean_energy_j;
+    assert!(
+        e0 / e1 > 2.0,
+        "ζ should buy at least 2× mean-energy reduction: {e0} → {e1}"
+    );
+    // Scheduler at ζ=1 beats every query-independent baseline on energy.
+    for (label, ev) in &sweep.baselines {
+        if label.starts_with("single:llama2-7b") {
+            continue; // the 7B-only baseline IS the energy floor
+        }
+        assert!(
+            e1 <= ev.mean_energy_j + 1e-9,
+            "ζ=1 should beat {label}: {e1} vs {}",
+            ev.mean_energy_j
+        );
+    }
+}
+
+#[test]
+fn dataset_roundtrip_preserves_fits() {
+    // Fits computed from a CSV round-trip must match the originals —
+    // guards the persistence path used by `repro-all`.
+    let mut cfg = ExperimentConfig::default();
+    cfg.grid_levels = vec![8, 128, 2048];
+    let rows = family_rows(&cfg, 2, 5);
+    let family = llama_family();
+    let sets_a = fit_all(&family, &rows).unwrap();
+
+    let csv = characterize::to_csv(&rows);
+    let rows_b = characterize::from_csv(&csv).unwrap();
+    let sets_b = fit_all(&family, &rows_b).unwrap();
+
+    for (a, b) in sets_a.iter().zip(&sets_b) {
+        for t in 0..3 {
+            let rel = (a.energy.coefs[t] - b.energy.coefs[t]).abs()
+                / a.energy.coefs[t].abs().max(1e-12);
+            assert!(rel < 1e-6, "{} coef {t} drifted {rel}", a.model_id);
+        }
+    }
+}
+
+#[test]
+fn stopping_rule_caps_and_converges_in_campaign() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.grid_levels = vec![8, 2048];
+    let campaign = Campaign::new(Cluster::new(Node::new(swing_node())), cfg);
+    let spec = ecoserve::config::lookup("llama2-70b").unwrap();
+    let mut rng = Rng::new(3);
+    let cells = campaign.grid(&spec, 25, &mut rng);
+    for c in &cells {
+        assert!(c.trials.len() >= 3);
+        assert!(c.trials.len() <= 25);
+        // Long-running cells (big t_out) have sizeable absolute runtimes;
+        // the 0.5 s tolerance usually converges quickly because variance
+        // is low — but never beyond the cap.
+    }
+}

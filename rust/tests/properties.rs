@@ -1,0 +1,224 @@
+//! Property-based integration tests (via `testkit::forall`): solver
+//! optimality against brute force on random instances, scheduler
+//! invariants, statistical-layer invariants.
+
+use ecoserve::models::{AccuracyModel, ModelSet, Normalizer, Target, WorkloadModel};
+use ecoserve::scheduler::{
+    capacities, capacity_bounds, solve_exact_caps, solve_greedy_caps, CapacityMode, CostMatrix,
+};
+use ecoserve::stats;
+use ecoserve::testkit::{forall, Config};
+use ecoserve::util::Rng;
+use ecoserve::workload::Query;
+
+fn random_costs(rng: &mut Rng, n_models: usize, n_queries: usize) -> CostMatrix {
+    let costs = (0..n_models)
+        .map(|_| (0..n_queries).map(|_| rng.range(-1.0, 1.0)).collect())
+        .collect();
+    CostMatrix {
+        costs,
+        n_models,
+        n_queries,
+    }
+}
+
+/// Brute-force optimum subject to (≥1, ≤cap) per model.
+fn brute_force(costs: &CostMatrix, caps: &[usize]) -> f64 {
+    fn rec(i: usize, assign: &mut Vec<usize>, caps: &[usize], c: &CostMatrix, best: &mut f64) {
+        if i == assign.len() {
+            let mut counts = vec![0usize; c.n_models];
+            for &m in assign.iter() {
+                counts[m] += 1;
+            }
+            if counts.iter().zip(caps).all(|(x, cap)| *x >= 1 && x <= cap) {
+                let obj: f64 = assign.iter().enumerate().map(|(q, &m)| c.cost(m, q)).sum();
+                if obj < *best {
+                    *best = obj;
+                }
+            }
+            return;
+        }
+        for m in 0..c.n_models {
+            assign[i] = m;
+            rec(i + 1, assign, caps, c, best);
+        }
+    }
+    let mut best = f64::INFINITY;
+    rec(0, &mut vec![0; costs.n_queries], caps, costs, &mut best);
+    best
+}
+
+#[test]
+fn prop_mcmf_is_optimal_on_random_instances() {
+    forall(Config::default().cases(60), |rng| {
+        let n_models = rng.int_range(2, 3) as usize;
+        let n_queries = rng.int_range(n_models as i64, 7) as usize;
+        let costs = random_costs(rng, n_models, n_queries);
+        // Random feasible caps.
+        let mut caps = vec![1usize; n_models];
+        let mut extra = n_queries - n_models;
+        while extra > 0 {
+            caps[rng.index(n_models)] += 1;
+            extra -= 1;
+        }
+        for c in caps.iter_mut() {
+            *c += rng.index(3); // slack
+        }
+        let exact = solve_exact_caps(&costs, &caps).unwrap();
+        let bf = brute_force(&costs, &caps);
+        assert!(
+            (exact.objective - bf).abs() < 1e-6,
+            "mcmf {} vs brute {bf}",
+            exact.objective
+        );
+        // Greedy is feasible and never better than exact.
+        let greedy = solve_greedy_caps(&costs, &caps).unwrap();
+        assert!(greedy.objective >= exact.objective - 1e-9);
+        greedy.check_constraints(n_models).unwrap();
+        exact.check_constraints(n_models).unwrap();
+    });
+}
+
+#[test]
+fn prop_capacities_always_partition_exactly() {
+    forall(Config::default().cases(100), |rng| {
+        let k = rng.int_range(1, 6) as usize;
+        let n = rng.int_range(k as i64, 2000) as usize;
+        // Random positive gammas normalized to 1.
+        let raw: Vec<f64> = (0..k).map(|_| rng.range(0.01, 1.0)).collect();
+        let sum: f64 = raw.iter().sum();
+        let gammas: Vec<f64> = raw.iter().map(|g| g / sum).collect();
+        let caps = capacities(&gammas, n);
+        assert_eq!(caps.iter().sum::<usize>(), n, "caps must sum to n");
+        assert!(caps.iter().all(|&c| c >= 1), "each model ≥ 1");
+    });
+}
+
+#[test]
+fn prop_cost_matrix_bounded_and_monotone_in_zeta() {
+    forall(Config::default().cases(40), |rng| {
+        let sets: Vec<ModelSet> = (0..3)
+            .map(|i| {
+                let scale = rng.range(0.5, 8.0);
+                ModelSet {
+                    model_id: format!("m{i}"),
+                    energy: WorkloadModel {
+                        model_id: format!("m{i}"),
+                        target: Target::EnergyJ,
+                        coefs: [0.5 * scale, 8.0 * scale, 0.003 * scale],
+                        r2: 0.97,
+                        f_stat: 1.0,
+                        p_value: 0.0,
+                        n_obs: 1,
+                    },
+                    runtime: WorkloadModel {
+                        model_id: format!("m{i}"),
+                        target: Target::RuntimeS,
+                        coefs: [1e-3, 1e-2, 1e-6],
+                        r2: 0.97,
+                        f_stat: 1.0,
+                        p_value: 0.0,
+                        n_obs: 1,
+                    },
+                    accuracy: AccuracyModel::new(&format!("m{i}"), rng.range(40.0, 70.0)),
+                }
+            })
+            .collect();
+        let queries: Vec<Query> = (0..20)
+            .map(|id| Query {
+                id,
+                t_in: rng.int_range(1, 2048) as u32,
+                t_out: rng.int_range(1, 4096) as u32,
+            })
+            .collect();
+        let norm = Normalizer::from_workload(&sets, &queries);
+
+        // Costs live in [−1, 1] at the extremes and are monotone in ζ for
+        // each (k, q) pair.
+        let c0 = CostMatrix::build(&sets, &norm, &queries, 0.0);
+        let c5 = CostMatrix::build(&sets, &norm, &queries, 0.5);
+        let c1 = CostMatrix::build(&sets, &norm, &queries, 1.0);
+        for k in 0..3 {
+            for i in 0..queries.len() {
+                assert!((-1.0..=0.0).contains(&c0.cost(k, i)), "ζ=0 ⇒ −â ∈ [−1,0]");
+                assert!((0.0..=1.0).contains(&c1.cost(k, i)), "ζ=1 ⇒ ê ∈ [0,1]");
+                assert!(c0.cost(k, i) <= c5.cost(k, i) + 1e-12);
+                assert!(c5.cost(k, i) <= c1.cost(k, i) + 1e-12);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_capacity_bounds_feasible_for_modes() {
+    forall(Config::default().cases(60), |rng| {
+        let k = rng.int_range(2, 5) as usize;
+        let n = rng.int_range(k as i64, 600) as usize;
+        let raw: Vec<f64> = (0..k).map(|_| rng.range(0.01, 1.0)).collect();
+        let sum: f64 = raw.iter().sum();
+        let gammas: Vec<f64> = raw.iter().map(|g| g / sum).collect();
+        for mode in [CapacityMode::Eq3Only, CapacityMode::GammaHard] {
+            let caps = capacity_bounds(mode, &gammas, n);
+            assert_eq!(caps.len(), k);
+            assert!(
+                caps.iter().sum::<usize>() >= n,
+                "{mode:?}: caps must cover the workload"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_ols_recovers_random_bilinear_models() {
+    forall(Config::default().cases(30), |rng| {
+        let a0 = rng.range(0.01, 2.0);
+        let a1 = rng.range(0.1, 20.0);
+        let a2 = rng.range(1e-5, 1e-2);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..60 {
+            let ti = rng.range(8.0, 2048.0);
+            let to = rng.range(8.0, 4096.0);
+            xs.push(vec![ti, to, ti * to]);
+            ys.push(a0 * ti + a1 * to + a2 * ti * to);
+        }
+        let fit = stats::ols_fit(&xs, &ys, &["a", "b", "ab"], false).unwrap();
+        let rel = |got: f64, want: f64| (got - want).abs() / want;
+        assert!(rel(fit.coefs[0].value, a0) < 1e-6);
+        assert!(rel(fit.coefs[1].value, a1) < 1e-6);
+        assert!(rel(fit.coefs[2].value, a2) < 1e-6);
+        assert!(fit.r2 > 0.999999);
+    });
+}
+
+#[test]
+fn prop_anova_f_distribution_under_null() {
+    // Under a pure-noise null, ANOVA p-values should be roughly uniform:
+    // count how often p < 0.1 across seeds; expect ≈ 10%, tolerate wide.
+    let mut hits = 0;
+    let total = 120;
+    for seed in 0..total {
+        let mut rng = Rng::new(seed as u64);
+        let mut obs = Vec::new();
+        for a in [1u32, 2, 3] {
+            for b in [1u32, 2, 3] {
+                for _ in 0..4 {
+                    obs.push(stats::Obs {
+                        a,
+                        b,
+                        y: rng.normal(),
+                    });
+                }
+            }
+        }
+        let t = stats::two_way(&obs, "A", "B").unwrap();
+        if t.interaction.p_value < 0.1 {
+            hits += 1;
+        }
+    }
+    let rate = hits as f64 / total as f64;
+    assert!(
+        (0.02..=0.25).contains(&rate),
+        "null rejection rate at p<0.1 should be ≈0.1, got {rate}"
+    );
+}

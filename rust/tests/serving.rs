@@ -1,0 +1,113 @@
+//! Integration test over the real serving stack (gated on `make
+//! artifacts`): ζ-cost routing with γ quotas through actual PJRT engines,
+//! and cross-layer consistency between the Rust serving path and the
+//! fitted-model predictions.
+
+use ecoserve::characterize::quick_fit;
+use ecoserve::config::{llama_family, Partition};
+use ecoserve::coordinator::{serve, Policy, Request, Router, ServeConfig};
+use ecoserve::models::Normalizer;
+use ecoserve::util::Rng;
+use ecoserve::workload::Query;
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+fn make_requests(n: u64, seed: u64) -> Vec<(Request, Query)> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|id| {
+            let t_in = rng.int_range(2, 40) as usize;
+            let n_gen = rng.int_range(1, 8) as usize;
+            let prompt: Vec<i32> = (0..t_in).map(|_| rng.int_range(1, 500) as i32).collect();
+            (
+                Request {
+                    id,
+                    prompt,
+                    n_gen,
+                    submitted: Instant::now(),
+                },
+                Query {
+                    id: id as u32,
+                    t_in: t_in as u32,
+                    t_out: n_gen as u32,
+                },
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn zeta_router_with_quota_serves_and_respects_shares() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let family = llama_family();
+    let fitted = quick_fit(&family, 42).unwrap();
+    let requests = make_requests(30, 7);
+    let probe: Vec<Query> = requests.iter().map(|(_, q)| *q).collect();
+    let norm = Normalizer::from_workload(&fitted.sets, &probe);
+    let partition = Partition::paper_case_study();
+
+    // ζ=0: everything wants the 70B; the quota must push overflow down.
+    let router = Router::new(fitted.sets.clone(), norm, 0.0, Policy::ZetaCost)
+        .with_quota(&partition.gammas, 0.05);
+    let ids: Vec<&str> = family.iter().map(|m| m.id).collect();
+    let cfg = ServeConfig::new(artifacts_dir(), &ids);
+    let (responses, metrics) = serve(&cfg, router, requests).unwrap();
+
+    assert_eq!(responses.len(), 30);
+    let m70 = metrics.per_model.get("llama2-70b").map(|m| m.requests).unwrap_or(0);
+    // γ₃ = 0.75 (+slack+grace): the 70B must NOT take everything.
+    assert!(m70 < 30, "quota should divert some load, got {m70}/30 on 70B");
+    assert!(m70 >= 18, "the accurate model should still take the lion's share");
+    // All three models hosted → at least two used under this workload.
+    assert!(metrics.per_model.len() >= 2);
+    // Every response has tokens within vocab.
+    for r in &responses {
+        assert!(!r.tokens.is_empty());
+        assert!(r.tokens.iter().all(|&t| (0..512).contains(&t)));
+        assert!(r.latency_s > 0.0 && r.queue_s >= 0.0);
+    }
+}
+
+#[test]
+fn single_model_policy_equals_direct_engine_output() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // Serving through the coordinator must produce exactly the tokens the
+    // engine produces directly — no corruption in routing/batching.
+    let family = llama_family();
+    let fitted = quick_fit(&family, 42).unwrap();
+    let requests = make_requests(4, 11);
+    let probe: Vec<Query> = requests.iter().map(|(_, q)| *q).collect();
+    let norm = Normalizer::from_workload(&fitted.sets, &probe);
+    let router = Router::new(fitted.sets.clone(), norm, 0.5, Policy::Single(0));
+
+    let prompts: Vec<Vec<i32>> = requests.iter().map(|(r, _)| r.prompt.clone()).collect();
+    let n_gen: Vec<usize> = requests.iter().map(|(r, _)| r.n_gen).collect();
+
+    let cfg = ServeConfig::new(artifacts_dir(), &["llama2-7b"]);
+    let (responses, _) = serve(&cfg, router, requests).unwrap();
+
+    // Direct engine run with the same batch.
+    let client = xla::PjRtClient::cpu().unwrap();
+    let manifest = ecoserve::runtime::Manifest::load(&artifacts_dir()).unwrap();
+    let engine =
+        ecoserve::runtime::Engine::load(&client, manifest.model("llama2-7b").unwrap()).unwrap();
+    let direct = engine.generate(&prompts, &n_gen).unwrap();
+
+    for (resp, want) in responses.iter().zip(direct.tokens) {
+        assert_eq!(resp.tokens, want, "request {}", resp.id);
+    }
+}
