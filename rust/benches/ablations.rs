@@ -10,8 +10,8 @@ use ecoserve::models::{Normalizer, Target, WorkloadModel};
 use ecoserve::hardware::Node;
 use ecoserve::perfmodel::Cluster;
 use ecoserve::scheduler::{
-    capacity_bounds, evaluate, solve_exact_caps, solve_greedy_caps, sweep_mode, CapacityMode,
-    CostMatrix,
+    capacity_bounds, evaluate, solve_exact_bucketed, solve_exact_caps, solve_greedy_caps,
+    sweep_mode, BucketedProblem, CapacityMode, CostMatrix,
 };
 use ecoserve::util::{bench, black_box, Rng};
 use std::time::Duration;
@@ -62,16 +62,22 @@ fn main() {
 
     for zeta in [0.25, 0.5, 0.75] {
         let costs = CostMatrix::build(&sets, &norm, &queries, zeta);
+        let bp = BucketedProblem::build(&sets, &norm, &queries, zeta);
         let exact_stats = bench(&format!("exact/zeta{zeta}"), Duration::from_secs(2), || {
             black_box(solve_exact_caps(&costs, &caps).unwrap());
+        });
+        let bucketed_stats = bench(&format!("bucketed/zeta{zeta}"), Duration::from_secs(2), || {
+            black_box(solve_exact_bucketed(&bp, &caps).unwrap());
         });
         let greedy_stats = bench(&format!("greedy/zeta{zeta}"), Duration::from_secs(2), || {
             black_box(solve_greedy_caps(&costs, &caps).unwrap());
         });
         let exact = solve_exact_caps(&costs, &caps).unwrap();
+        let bucketed = solve_exact_bucketed(&bp, &caps).unwrap();
         let greedy = solve_greedy_caps(&costs, &caps).unwrap();
         let gap = (greedy.objective - exact.objective) / exact.objective.abs().max(1e-12);
         println!("{}", exact_stats.line());
+        println!("{}", bucketed_stats.line());
         println!("{}", greedy_stats.line());
         println!(
             "  zeta={zeta}: objective exact {:.4} vs greedy {:.4} (gap {:+.3}%)",
@@ -80,6 +86,13 @@ fn main() {
             gap * 100.0
         );
         assert!(greedy.objective >= exact.objective - 1e-9, "exactness");
+        assert!(
+            (bucketed.objective - exact.objective).abs()
+                <= 1e-6 * exact.objective.abs().max(1.0),
+            "bucketed {} vs dense {}",
+            bucketed.objective,
+            exact.objective
+        );
     }
 
     // ---- 3. capacity interpretation ---------------------------------------

@@ -7,7 +7,8 @@ use ecoserve::config::{llama_family, Partition};
 use ecoserve::models::Normalizer;
 use ecoserve::report;
 use ecoserve::scheduler::{
-    solve_exact_mode, sweep_mode, CapacityMode, CostMatrix,
+    solve_exact_bucketed_mode, solve_exact_mode, sweep_mode, BucketedProblem, CapacityMode,
+    CostMatrix,
 };
 use ecoserve::util::{bench, black_box, Rng};
 use std::time::Duration;
@@ -35,6 +36,24 @@ fn main() {
         stats.median_s < 1.0,
         "exact solve should be well under a second, got {}",
         stats.median_s
+    );
+
+    // The shape-bucketed production path on the same instance.
+    let bp = BucketedProblem::build(&fitted.sets, &norm, &queries, 0.5);
+    let bstats = bench("mcmf/solve_bucketed_500x3", Duration::from_secs(3), || {
+        black_box(
+            solve_exact_bucketed_mode(&bp, &partition.gammas, CapacityMode::Eq3Only).unwrap(),
+        );
+    });
+    println!("{}", bstats.line());
+    let dense = solve_exact_mode(&costs, &partition.gammas, CapacityMode::Eq3Only).unwrap();
+    let bucketed =
+        solve_exact_bucketed_mode(&bp, &partition.gammas, CapacityMode::Eq3Only).unwrap();
+    assert!(
+        (bucketed.objective - dense.objective).abs() <= 1e-6 * dense.objective.abs().max(1.0),
+        "bucketed {} vs dense {}",
+        bucketed.objective,
+        dense.objective
     );
 
     // Full sweep.

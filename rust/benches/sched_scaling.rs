@@ -1,0 +1,169 @@
+//! Bench: million-query scheduler scaling. Sweeps the workload size
+//! 1k → 500k queries over an 8-model zoo with ≤ 256 distinct shapes,
+//! timing the shape-bucketed production path (group → per-shape cost
+//! matrix → CSR min-cost flow → expansion) against the dense per-query
+//! solver where the latter is still tractable, and writes the series to
+//! `BENCH_sched.json`. `cargo bench --bench sched_scaling`.
+//!
+//! Acceptance bar: the 100k-query × 8-model instance must solve end to
+//! end in under one second.
+
+use ecoserve::models::{AccuracyModel, ModelSet, Normalizer, Target, WorkloadModel};
+use ecoserve::scheduler::{
+    capacity_bounds, group_by_shape, solve_exact_bucketed, solve_exact_caps, BucketedProblem,
+    CapacityMode, CostMatrix,
+};
+use ecoserve::util::{bench, black_box, Json, Rng, Stopwatch};
+use ecoserve::workload::Query;
+use std::time::Duration;
+
+const N_MODELS: usize = 8;
+const N_SHAPES: usize = 256;
+
+/// Hand-built zoo with the paper's qualitative structure: bigger models
+/// are more accurate and more expensive (no fitting campaign — this bench
+/// measures the solver, not the characterization pipeline).
+fn zoo() -> Vec<ModelSet> {
+    (0..N_MODELS)
+        .map(|k| {
+            let id = format!("m{k}");
+            let scale = 1.0 + 0.8 * k as f64;
+            ModelSet {
+                model_id: id.clone(),
+                energy: WorkloadModel {
+                    model_id: id.clone(),
+                    target: Target::EnergyJ,
+                    coefs: [0.6 * scale, 9.0 * scale, 0.004 * scale],
+                    r2: 0.97,
+                    f_stat: 1e3,
+                    p_value: 0.0,
+                    n_obs: 100,
+                },
+                runtime: WorkloadModel {
+                    model_id: id.clone(),
+                    target: Target::RuntimeS,
+                    coefs: [0.002 * scale, 0.03 * scale, 1.5e-5 * scale],
+                    r2: 0.97,
+                    f_stat: 1e3,
+                    p_value: 0.0,
+                    n_obs: 100,
+                },
+                accuracy: AccuracyModel::new(&id, 45.0 + 3.0 * k as f64),
+            }
+        })
+        .collect()
+}
+
+fn workload(n: usize, rng: &mut Rng) -> Vec<Query> {
+    // A fixed table of ≤ 256 shapes; each query draws one. This is the
+    // regime the bucketing targets: |Q| ≫ |shapes|.
+    let table: Vec<(u32, u32)> = (0..N_SHAPES)
+        .map(|_| {
+            (
+                8 + rng.index(2040) as u32,
+                8 + rng.index(4088) as u32,
+            )
+        })
+        .collect();
+    (0..n)
+        .map(|id| {
+            let (t_in, t_out) = table[rng.index(N_SHAPES)];
+            Query {
+                id: id as u32,
+                t_in,
+                t_out,
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    println!("=== sched_scaling: shape-bucketed transportation solver ===");
+    let sets = zoo();
+    let gammas = [0.05, 0.05, 0.1, 0.1, 0.15, 0.15, 0.2, 0.2];
+    let zeta = 0.5;
+    let mut rng = Rng::new(0xBEEF);
+    let mut rows: Vec<Json> = Vec::new();
+
+    for &n in &[1_000usize, 10_000, 100_000, 500_000] {
+        let queries = workload(n, &mut rng);
+        // Shape-deduplicated scan: identical maxima to the full-workload
+        // pass at a fraction of the cost.
+        let norm = Normalizer::from_shapes(&sets, &group_by_shape(&queries).shapes);
+
+        // Build phase: group + per-shape cost matrix.
+        let sw = Stopwatch::start();
+        let bp = BucketedProblem::build(&sets, &norm, &queries, zeta);
+        let build_once_s = sw.elapsed_s();
+        let n_shapes = bp.groups.n_shapes();
+        assert!(n_shapes <= N_SHAPES);
+
+        let caps_eq3 = capacity_bounds(CapacityMode::Eq3Only, &gammas, n);
+        let caps_gamma = capacity_bounds(CapacityMode::GammaHard, &gammas, n);
+
+        let budget = Duration::from_millis(800);
+        let build_stats = bench(&format!("build_bucketed/n{n}"), budget, || {
+            black_box(BucketedProblem::build(&sets, &norm, &queries, zeta));
+        });
+        let eq3_stats = bench(&format!("solve_eq3/n{n}"), budget, || {
+            black_box(solve_exact_bucketed(&bp, &caps_eq3).unwrap());
+        });
+        let gamma_stats = bench(&format!("solve_gamma/n{n}"), budget, || {
+            black_box(solve_exact_bucketed(&bp, &caps_gamma).unwrap());
+        });
+        println!("{}", build_stats.line());
+        println!("{}", eq3_stats.line());
+        println!("{}", gamma_stats.line());
+
+        let total_s = build_stats.median_s + eq3_stats.median_s;
+        println!(
+            "  n={n}: {n_shapes} shapes, build+solve median {:.1} ms",
+            total_s * 1e3
+        );
+
+        // Acceptance bar: 100k × 8 end to end under a second.
+        if n == 100_000 {
+            assert!(
+                total_s < 1.0,
+                "100k-query instance must solve in < 1 s, got {total_s:.3} s"
+            );
+        }
+
+        // Exactness cross-check against the dense per-query solver at a
+        // size where the dense graph is still cheap (it augments one unit
+        // per path, so it scales quadratically with |Q|).
+        if n <= 1_000 {
+            let dense = CostMatrix::build(&sets, &norm, &queries, zeta);
+            for caps in [&caps_eq3, &caps_gamma] {
+                let d = solve_exact_caps(&dense, caps).unwrap();
+                let b = solve_exact_bucketed(&bp, caps).unwrap();
+                assert!(
+                    (d.objective - b.objective).abs() <= 1e-6 * d.objective.abs().max(1.0),
+                    "n={n}: bucketed {} vs dense {}",
+                    b.objective,
+                    d.objective
+                );
+            }
+            println!("  n={n}: bucketed matches dense objective ✓");
+        }
+
+        rows.push(Json::obj(vec![
+            ("n_queries", Json::num(n as f64)),
+            ("n_models", Json::num(N_MODELS as f64)),
+            ("n_shapes", Json::num(n_shapes as f64)),
+            ("build_first_s", Json::num(build_once_s)),
+            ("build_median_s", Json::num(build_stats.median_s)),
+            ("solve_eq3_median_s", Json::num(eq3_stats.median_s)),
+            ("solve_gamma_median_s", Json::num(gamma_stats.median_s)),
+            ("total_median_s", Json::num(total_s)),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("sched_scaling")),
+        ("zeta", Json::num(zeta)),
+        ("series", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_sched.json", doc.to_string_pretty()).expect("write BENCH_sched.json");
+    println!("✓ wrote BENCH_sched.json");
+}

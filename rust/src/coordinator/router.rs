@@ -102,16 +102,23 @@ impl Router {
                 k
             }
             Policy::ZetaCost => {
-                // Rank by cost; take the best admitted model.
-                let mut order: Vec<usize> = (0..self.sets.len()).collect();
-                order.sort_by(|&a, &b| {
-                    self.cost(q, a).partial_cmp(&self.cost(q, b)).unwrap()
-                });
-                let admitted = order
-                    .iter()
-                    .copied()
-                    .find(|&k| self.quota.as_ref().map(|t| t.admits(k)).unwrap_or(true));
-                admitted.unwrap_or(order[0])
+                // One pass, no allocation: cheapest admitted model, falling
+                // back to the cheapest overall when quotas deny everything.
+                // Strict `<` keeps the lowest index on ties, matching the
+                // stable-sort behavior this replaced.
+                let mut best_admitted: Option<(usize, f64)> = None;
+                let mut best_overall: Option<(usize, f64)> = None;
+                for k in 0..self.sets.len() {
+                    let c = self.cost(q, k);
+                    if best_overall.map(|(_, bc)| c < bc).unwrap_or(true) {
+                        best_overall = Some((k, c));
+                    }
+                    let admitted = self.quota.as_ref().map(|t| t.admits(k)).unwrap_or(true);
+                    if admitted && best_admitted.map(|(_, bc)| c < bc).unwrap_or(true) {
+                        best_admitted = Some((k, c));
+                    }
+                }
+                best_admitted.or(best_overall).map(|(k, _)| k).unwrap()
             }
         };
         if let Some(t) = self.quota.as_mut() {

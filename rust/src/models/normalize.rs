@@ -5,7 +5,7 @@
 //! combinations of the workload at hand.
 
 use super::set::ModelSet;
-use crate::workload::Query;
+use crate::workload::{Query, Shape};
 
 /// Normalization scales for a (workload, model set) pair.
 #[derive(Debug, Clone, Copy)]
@@ -16,13 +16,26 @@ pub struct Normalizer {
 }
 
 impl Normalizer {
-    /// Scan the workload × model grid for the maxima.
+    /// Scan the workload × model grid for the maxima. A query contributes
+    /// only through its shape, so this delegates to
+    /// [`Normalizer::from_shapes`] (duplicate shapes rescan but cannot
+    /// change a maximum).
     pub fn from_workload(sets: &[ModelSet], queries: &[Query]) -> Normalizer {
+        let shapes: Vec<Shape> = queries.iter().map(Query::shape).collect();
+        Self::from_shapes(sets, &shapes)
+    }
+
+    /// Maxima over *distinct shapes* only. Because every model prediction
+    /// depends on a query solely through `(τ_in, τ_out)`, this yields
+    /// exactly the same normalizer as [`Normalizer::from_workload`] on any
+    /// workload whose shape set matches — at O(|shapes|·|models|) instead
+    /// of O(|Q|·|models|).
+    pub fn from_shapes(sets: &[ModelSet], shapes: &[Shape]) -> Normalizer {
         let mut max_e = 0.0f64;
         let mut max_a = 0.0f64;
         let mut max_r = 0.0f64;
-        for q in queries {
-            let (ti, to) = (q.t_in as f64, q.t_out as f64);
+        for sh in shapes {
+            let (ti, to) = (sh.t_in as f64, sh.t_out as f64);
             for s in sets {
                 max_e = max_e.max(s.energy.predict(ti, to));
                 max_a = max_a.max(s.accuracy.score(ti, to));
@@ -36,18 +49,28 @@ impl Normalizer {
         }
     }
 
+    /// ê_K at explicit token counts ∈ [0, 1].
+    #[inline]
+    pub fn energy_hat_tok(&self, set: &ModelSet, t_in: f64, t_out: f64) -> f64 {
+        (set.energy.predict(t_in, t_out) / self.max_energy_j).clamp(0.0, 1.0)
+    }
+
+    /// â_K at explicit token counts ∈ [0, 1].
+    #[inline]
+    pub fn accuracy_hat_tok(&self, set: &ModelSet, t_in: f64, t_out: f64) -> f64 {
+        (set.accuracy.score(t_in, t_out) / self.max_accuracy).clamp(0.0, 1.0)
+    }
+
     /// ê_K(q) ∈ [0, 1].
     #[inline]
     pub fn energy_hat(&self, set: &ModelSet, q: &Query) -> f64 {
-        (set.energy.predict(q.t_in as f64, q.t_out as f64) / self.max_energy_j)
-            .clamp(0.0, 1.0)
+        self.energy_hat_tok(set, q.t_in as f64, q.t_out as f64)
     }
 
     /// â_K(q) ∈ [0, 1].
     #[inline]
     pub fn accuracy_hat(&self, set: &ModelSet, q: &Query) -> f64 {
-        (set.accuracy.score(q.t_in as f64, q.t_out as f64) / self.max_accuracy)
-            .clamp(0.0, 1.0)
+        self.accuracy_hat_tok(set, q.t_in as f64, q.t_out as f64)
     }
 }
 
@@ -120,5 +143,27 @@ mod tests {
         let sets = vec![set("a", [1.0, 1.0, 0.0], 50.0)];
         let n = Normalizer::from_workload(&sets, &[]);
         assert!(n.max_energy_j > 0.0); // no div-by-zero downstream
+    }
+
+    #[test]
+    fn from_shapes_matches_from_workload() {
+        let sets = vec![set("small", [0.1, 1.0, 1e-4], 50.0), set("big", [1.0, 10.0, 1e-3], 65.0)];
+        // Workload with heavy shape duplication.
+        let queries: Vec<Query> = (0..60)
+            .map(|i| {
+                let (ti, to) = [(8, 8), (512, 256), (2048, 2048)][i % 3];
+                Query { id: i as u32, t_in: ti, t_out: to }
+            })
+            .collect();
+        let shapes: Vec<crate::workload::Shape> =
+            [(8, 8), (512, 256), (2048, 2048)]
+                .iter()
+                .map(|&(t_in, t_out)| crate::workload::Shape { t_in, t_out })
+                .collect();
+        let a = Normalizer::from_workload(&sets, &queries);
+        let b = Normalizer::from_shapes(&sets, &shapes);
+        assert_eq!(a.max_energy_j, b.max_energy_j);
+        assert_eq!(a.max_accuracy, b.max_accuracy);
+        assert_eq!(a.max_runtime_s, b.max_runtime_s);
     }
 }

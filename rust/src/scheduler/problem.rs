@@ -2,44 +2,234 @@
 //! `Q` across hosted models `K` minimizing the ζ-blend of normalized
 //! energy and (negated) accuracy, subject to the data-center partition
 //! fractions γ_K.
+//!
+//! # Shape bucketing
+//!
+//! Eqs. 6–7 characterize a query purely by its `(τ_in, τ_out)` token
+//! counts, so queries with equal [`Shape`]s have *identical* cost rows —
+//! the per-query bipartite matching is really a small transportation
+//! problem over distinct shapes with multiplicities. [`group_by_shape`]
+//! performs that reduction and [`BucketedProblem`] packages it for the
+//! solver: a million-query workload with a few hundred distinct shapes
+//! solves in the time of a few-hundred-node flow problem, independent of
+//! |Q| (plus two O(|Q|) passes for grouping and expansion).
 
 use crate::models::{ModelSet, Normalizer};
-use crate::workload::Query;
+use crate::workload::{Query, Shape};
+use std::collections::HashMap;
 
-/// Per-(query, model) cost table: `cost[k][i]` is the Eq. 2 summand of
+/// Queries per chunk below which cost construction stays single-threaded
+/// (thread spawn/join overhead dominates tiny fills).
+const PAR_MIN_ITEMS: usize = 8192;
+
+/// Per-(query, model) cost table: `cost(k, i)` is the Eq. 2 summand of
 /// assigning query `i` to model `k`.
+///
+/// Storage is one flat query-major `Vec<f64>` (`data[i·K + k]`): each
+/// query's costs over the K models are contiguous, which is what every
+/// consumer scans (solver edge construction, greedy argmin/spread,
+/// bucketing) and what lets construction parallelize over disjoint query
+/// chunks with zero synchronization.
 #[derive(Debug, Clone)]
 pub struct CostMatrix {
-    /// indexed [model][query]
-    pub costs: Vec<Vec<f64>>,
+    /// row-major by query: `data[query * n_models + model]`
+    data: Vec<f64>,
     pub n_models: usize,
     pub n_queries: usize,
 }
 
 impl CostMatrix {
     /// Build from fitted model sets with the ζ blend:
-    /// `ζ·ê_K(q) − (1−ζ)·â_K(q)`.
+    /// `ζ·ê_K(q) − (1−ζ)·â_K(q)`. Large workloads are filled by a pool of
+    /// scoped threads over disjoint query chunks.
     pub fn build(sets: &[ModelSet], norm: &Normalizer, queries: &[Query], zeta: f64) -> CostMatrix {
-        assert!((0.0..=1.0).contains(&zeta), "zeta in [0,1]");
-        let costs = sets
-            .iter()
-            .map(|s| {
-                queries
-                    .iter()
-                    .map(|q| zeta * norm.energy_hat(s, q) - (1.0 - zeta) * norm.accuracy_hat(s, q))
-                    .collect()
-            })
-            .collect();
-        CostMatrix {
-            costs,
+        let shapes: Vec<Shape> = queries.iter().map(Query::shape).collect();
+        Self::build_for_shapes(sets, norm, &shapes, zeta)
+    }
+
+    /// Build one cost row per *shape* (the bucketed reduction's matrix:
+    /// `n_queries` is the number of distinct shapes).
+    pub fn build_for_shapes(
+        sets: &[ModelSet],
+        norm: &Normalizer,
+        shapes: &[Shape],
+        zeta: f64,
+    ) -> CostMatrix {
+        let mut m = CostMatrix {
+            data: vec![0.0; shapes.len() * sets.len()],
             n_models: sets.len(),
-            n_queries: queries.len(),
+            n_queries: shapes.len(),
+        };
+        m.refill(sets, norm, shapes, zeta);
+        m
+    }
+
+    /// Recompute all entries in place for a new ζ (used by sweeps: the
+    /// shape grouping is ζ-independent, only the blend changes).
+    pub fn refill(&mut self, sets: &[ModelSet], norm: &Normalizer, shapes: &[Shape], zeta: f64) {
+        assert!((0.0..=1.0).contains(&zeta), "zeta in [0,1]");
+        assert_eq!(shapes.len(), self.n_queries);
+        assert_eq!(sets.len(), self.n_models);
+        let nm = self.n_models;
+        if nm == 0 {
+            return; // no models ⇒ nothing to fill (and chunk size 0 is invalid)
+        }
+
+        let fill = |shapes: &[Shape], out: &mut [f64]| {
+            for (sh, row) in shapes.iter().zip(out.chunks_exact_mut(nm)) {
+                let (ti, to) = (sh.t_in as f64, sh.t_out as f64);
+                for (s, c) in sets.iter().zip(row.iter_mut()) {
+                    *c = zeta * norm.energy_hat_tok(s, ti, to)
+                        - (1.0 - zeta) * norm.accuracy_hat_tok(s, ti, to);
+                }
+            }
+        };
+
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(16);
+        if shapes.len() < PAR_MIN_ITEMS || threads <= 1 {
+            fill(shapes, self.data.as_mut_slice());
+            return;
+        }
+        // ceil(len / threads), at least PAR_MIN_ITEMS/2 per chunk
+        let chunk = ((shapes.len() + threads - 1) / threads).max(PAR_MIN_ITEMS / 2);
+        let fill = &fill;
+        std::thread::scope(|scope| {
+            for (qs, out) in shapes.chunks(chunk).zip(self.data.chunks_mut(chunk * nm)) {
+                scope.spawn(move || fill(qs, out));
+            }
+        });
+    }
+
+    /// Wrap model-major rows (`rows[k][i]`, the pre-refactor layout) —
+    /// handy for tests and hand-built instances.
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> CostMatrix {
+        let n_models = rows.len();
+        let n_queries = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut data = vec![0.0; n_models * n_queries];
+        for (k, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), n_queries, "ragged cost rows");
+            for (i, &c) in row.iter().enumerate() {
+                data[i * n_models + k] = c;
+            }
+        }
+        CostMatrix {
+            data,
+            n_models,
+            n_queries,
         }
     }
 
     #[inline]
     pub fn cost(&self, model: usize, query: usize) -> f64 {
-        self.costs[model][query]
+        self.data[query * self.n_models + model]
+    }
+
+    /// All K costs of one query, contiguous.
+    #[inline]
+    pub fn row(&self, query: usize) -> &[f64] {
+        let k = self.n_models;
+        &self.data[query * k..(query + 1) * k]
+    }
+}
+
+/// The shape-bucketed view of a workload: distinct shapes in first-
+/// appearance order, their multiplicities, and the query → shape-index
+/// map needed to expand shape-level flows back to per-query assignments.
+#[derive(Debug, Clone)]
+pub struct ShapeGroups {
+    /// distinct shapes, first-appearance order (deterministic)
+    pub shapes: Vec<Shape>,
+    /// queries carrying each shape; sums to the workload size
+    pub multiplicity: Vec<usize>,
+    /// per original query: index into `shapes`
+    pub shape_of: Vec<usize>,
+}
+
+impl ShapeGroups {
+    pub fn n_shapes(&self) -> usize {
+        self.shapes.len()
+    }
+
+    pub fn n_queries(&self) -> usize {
+        self.shape_of.len()
+    }
+
+    /// Query indices grouped by shape, each group in original query order
+    /// (counting sort; used by assignment expansion).
+    pub fn members(&self) -> Vec<Vec<u32>> {
+        let mut members: Vec<Vec<u32>> = self
+            .multiplicity
+            .iter()
+            .map(|&m| Vec::with_capacity(m))
+            .collect();
+        for (q, &s) in self.shape_of.iter().enumerate() {
+            members[s].push(q as u32);
+        }
+        members
+    }
+}
+
+/// Collapse a workload into `(shape, multiplicity)` groups — one O(|Q|)
+/// hash pass.
+pub fn group_by_shape(queries: &[Query]) -> ShapeGroups {
+    let mut index: HashMap<u64, usize> = HashMap::with_capacity(queries.len().min(1 << 16));
+    let mut shapes = Vec::new();
+    let mut multiplicity = Vec::new();
+    let mut shape_of = Vec::with_capacity(queries.len());
+    for q in queries {
+        let sh = q.shape();
+        let idx = *index.entry(sh.key()).or_insert_with(|| {
+            shapes.push(sh);
+            multiplicity.push(0);
+            shapes.len() - 1
+        });
+        multiplicity[idx] += 1;
+        shape_of.push(idx);
+    }
+    ShapeGroups {
+        shapes,
+        multiplicity,
+        shape_of,
+    }
+}
+
+/// A fully reduced instance: the shape grouping plus the per-shape cost
+/// matrix (`costs.n_queries == groups.n_shapes()`). This is what
+/// `solve_exact_bucketed` consumes.
+#[derive(Debug, Clone)]
+pub struct BucketedProblem {
+    pub groups: ShapeGroups,
+    pub costs: CostMatrix,
+}
+
+impl BucketedProblem {
+    /// Group the workload and build the shape-level cost matrix.
+    pub fn build(
+        sets: &[ModelSet],
+        norm: &Normalizer,
+        queries: &[Query],
+        zeta: f64,
+    ) -> BucketedProblem {
+        let groups = group_by_shape(queries);
+        let costs = CostMatrix::build_for_shapes(sets, norm, &groups.shapes, zeta);
+        BucketedProblem { groups, costs }
+    }
+
+    /// Re-blend the cost matrix for a new ζ without regrouping.
+    pub fn set_zeta(&mut self, sets: &[ModelSet], norm: &Normalizer, zeta: f64) {
+        self.costs.refill(sets, norm, &self.groups.shapes, zeta);
+    }
+
+    /// Total queries in the underlying workload.
+    pub fn n_queries(&self) -> usize {
+        self.groups.n_queries()
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.costs.n_models
     }
 }
 
@@ -246,5 +436,44 @@ mod tests {
             objective: 0.0,
         };
         assert!(bad.check_constraints(2).is_err());
+    }
+
+    #[test]
+    fn from_rows_round_trips_layout() {
+        let m = CostMatrix::from_rows(vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        assert_eq!(m.n_models, 2);
+        assert_eq!(m.n_queries, 3);
+        assert_eq!(m.cost(0, 0), 1.0);
+        assert_eq!(m.cost(1, 0), 4.0);
+        assert_eq!(m.cost(0, 2), 3.0);
+        assert_eq!(m.cost(1, 2), 6.0);
+        assert_eq!(m.row(1), &[2.0, 5.0]);
+    }
+
+    #[test]
+    fn group_by_shape_counts_and_order() {
+        let q = |id: u32, t_in: u32, t_out: u32| Query { id, t_in, t_out };
+        let queries = vec![q(0, 5, 7), q(1, 2, 2), q(2, 5, 7), q(3, 9, 1), q(4, 5, 7)];
+        let g = group_by_shape(&queries);
+        assert_eq!(g.n_shapes(), 3);
+        assert_eq!(g.n_queries(), 5);
+        // First-appearance order.
+        assert_eq!(g.shapes[0], Shape { t_in: 5, t_out: 7 });
+        assert_eq!(g.shapes[1], Shape { t_in: 2, t_out: 2 });
+        assert_eq!(g.shapes[2], Shape { t_in: 9, t_out: 1 });
+        assert_eq!(g.multiplicity, vec![3, 1, 1]);
+        assert_eq!(g.shape_of, vec![0, 1, 0, 2, 0]);
+        let members = g.members();
+        assert_eq!(members[0], vec![0, 2, 4]);
+        assert_eq!(members[1], vec![1]);
+        assert_eq!(members[2], vec![3]);
+    }
+
+    #[test]
+    fn group_by_shape_empty() {
+        let g = group_by_shape(&[]);
+        assert_eq!(g.n_shapes(), 0);
+        assert_eq!(g.n_queries(), 0);
+        assert!(g.members().is_empty());
     }
 }

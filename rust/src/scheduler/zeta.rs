@@ -3,8 +3,8 @@
 //! mean runtime, and mean accuracy — against the flat baselines.
 
 use super::baselines;
-use super::problem::{evaluate, CapacityMode, CostMatrix, Evaluation};
-use super::solve::solve_exact_mode;
+use super::problem::{evaluate, BucketedProblem, CapacityMode, Evaluation};
+use super::solve::solve_exact_bucketed_mode;
 use crate::models::{ModelSet, Normalizer};
 use crate::util::Rng;
 use crate::workload::Query;
@@ -38,11 +38,17 @@ pub fn sweep_mode(
     assert!(n_points >= 2);
     let norm = Normalizer::from_workload(sets, queries);
 
+    // The shape grouping is ζ-independent: group once, re-blend the
+    // per-shape costs at each swept point (the bucketed solver is exact —
+    // see `scheduler::solve` — so the sweep is unchanged, just faster).
+    let mut bp = BucketedProblem::build(sets, &norm, queries, 0.0); // ζ₀ = 0
     let mut points = Vec::with_capacity(n_points);
     for i in 0..n_points {
         let zeta = i as f64 / (n_points - 1) as f64;
-        let costs = CostMatrix::build(sets, &norm, queries, zeta);
-        let assignment = solve_exact_mode(&costs, gammas, mode)?;
+        if i > 0 {
+            bp.set_zeta(sets, &norm, zeta);
+        }
+        let assignment = solve_exact_bucketed_mode(&bp, gammas, mode)?;
         points.push(ZetaPoint {
             zeta,
             eval: evaluate(&assignment, sets, queries),

@@ -120,6 +120,33 @@ mod tests {
     }
 
     #[test]
+    fn bucket_of_domain_extremes() {
+        // τ_in = 0 (empty prompt): the max(1) floor keeps it in bucket 0
+        // rather than underflowing `leading_zeros(0) = 32`.
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(0), bucket_of(1));
+        // τ_in = u32::MAX: leading_zeros = 0 → raw bucket 31, capped to 15.
+        assert_eq!(bucket_of(u32::MAX), 15);
+        // Every representable input must land inside the bucket table.
+        for t in [0, 1, 2, 15, 16, 1 << 14, 1 << 15, (1 << 15) + 1, u32::MAX] {
+            assert!(bucket_of(t) < 16, "t_in={t}");
+        }
+    }
+
+    #[test]
+    fn observe_and_predict_at_extremes() {
+        let mut p = LengthPredictor::new();
+        for _ in 0..5 {
+            p.observe(0, 7);
+            p.observe(u32::MAX, 301);
+        }
+        // Both extremes train (and hit) their own buckets without panicking.
+        assert_eq!(p.predict(0), 7);
+        assert_eq!(p.predict(u32::MAX), 301);
+        assert_eq!(p.n_observed(), 10);
+    }
+
+    #[test]
     fn learns_conditional_structure() {
         // τ_out = 3·τ_in exactly: predictions should track the buckets.
         let history: Vec<Query> = (0..2000)

@@ -13,6 +13,53 @@ impl Query {
     pub fn total_tokens(&self) -> u32 {
         self.t_in + self.t_out
     }
+
+    /// The scheduling-relevant shape of this query.
+    #[inline]
+    pub fn shape(&self) -> Shape {
+        Shape {
+            t_in: self.t_in,
+            t_out: self.t_out,
+        }
+    }
+}
+
+/// A query *shape*: the `(τ_in, τ_out)` magnitude pair, stripped of
+/// identity.
+///
+/// The paper's workload model (§4, Eqs. 6–7) characterizes a query by its
+/// token counts alone, so two queries with equal shapes have *identical*
+/// cost rows in the assignment problem — the shape-bucketing invariant the
+/// scheduler's transportation reduction rests on. `Ord`/`Hash` make shapes
+/// usable as grouping keys.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Shape {
+    pub t_in: u32,
+    pub t_out: u32,
+}
+
+impl Shape {
+    /// Dense 64-bit key (`τ_in` in the high word), cheap to hash and sort.
+    #[inline]
+    pub fn key(&self) -> u64 {
+        ((self.t_in as u64) << 32) | self.t_out as u64
+    }
+
+    /// A representative query of this shape (the id carries no meaning).
+    #[inline]
+    pub fn to_query(&self) -> Query {
+        Query {
+            id: u32::MAX,
+            t_in: self.t_in,
+            t_out: self.t_out,
+        }
+    }
+}
+
+impl From<Query> for Shape {
+    fn from(q: Query) -> Shape {
+        q.shape()
+    }
 }
 
 /// Aggregate statistics of a workload.
@@ -71,5 +118,18 @@ mod tests {
         let s = stats(&[]);
         assert_eq!(s.n, 0);
         assert_eq!(s.total_tokens, 0);
+    }
+
+    #[test]
+    fn shape_identity_and_key() {
+        let a = Query { id: 1, t_in: 7, t_out: 9 };
+        let b = Query { id: 2, t_in: 7, t_out: 9 };
+        let c = Query { id: 3, t_in: 9, t_out: 7 };
+        assert_eq!(a.shape(), b.shape());
+        assert_ne!(a.shape(), c.shape());
+        assert_ne!(a.shape().key(), c.shape().key());
+        assert_eq!(a.shape().key(), (7u64 << 32) | 9);
+        let q = a.shape().to_query();
+        assert_eq!((q.t_in, q.t_out), (7, 9));
     }
 }

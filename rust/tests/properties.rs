@@ -4,7 +4,8 @@
 
 use ecoserve::models::{AccuracyModel, ModelSet, Normalizer, Target, WorkloadModel};
 use ecoserve::scheduler::{
-    capacities, capacity_bounds, solve_exact_caps, solve_greedy_caps, CapacityMode, CostMatrix,
+    capacities, capacity_bounds, solve_exact_bucketed, solve_exact_caps, solve_greedy_caps,
+    BucketedProblem, CapacityMode, CostMatrix,
 };
 use ecoserve::stats;
 use ecoserve::testkit::{forall, Config};
@@ -15,11 +16,39 @@ fn random_costs(rng: &mut Rng, n_models: usize, n_queries: usize) -> CostMatrix 
     let costs = (0..n_models)
         .map(|_| (0..n_queries).map(|_| rng.range(-1.0, 1.0)).collect())
         .collect();
-    CostMatrix {
-        costs,
-        n_models,
-        n_queries,
-    }
+    CostMatrix::from_rows(costs)
+}
+
+/// Random paper-like model sets (bigger scale → pricier and, separately,
+/// a random accuracy level).
+fn random_sets(rng: &mut Rng, n_models: usize) -> Vec<ModelSet> {
+    (0..n_models)
+        .map(|i| {
+            let scale = rng.range(0.5, 8.0);
+            ModelSet {
+                model_id: format!("m{i}"),
+                energy: WorkloadModel {
+                    model_id: format!("m{i}"),
+                    target: Target::EnergyJ,
+                    coefs: [0.5 * scale, 8.0 * scale, 0.003 * scale],
+                    r2: 0.97,
+                    f_stat: 1.0,
+                    p_value: 0.0,
+                    n_obs: 1,
+                },
+                runtime: WorkloadModel {
+                    model_id: format!("m{i}"),
+                    target: Target::RuntimeS,
+                    coefs: [1e-3, 1e-2, 1e-6],
+                    r2: 0.97,
+                    f_stat: 1.0,
+                    p_value: 0.0,
+                    n_obs: 1,
+                },
+                accuracy: AccuracyModel::new(&format!("m{i}"), rng.range(40.0, 70.0)),
+            }
+        })
+        .collect()
 }
 
 /// Brute-force optimum subject to (≥1, ≤cap) per model.
@@ -97,33 +126,7 @@ fn prop_capacities_always_partition_exactly() {
 #[test]
 fn prop_cost_matrix_bounded_and_monotone_in_zeta() {
     forall(Config::default().cases(40), |rng| {
-        let sets: Vec<ModelSet> = (0..3)
-            .map(|i| {
-                let scale = rng.range(0.5, 8.0);
-                ModelSet {
-                    model_id: format!("m{i}"),
-                    energy: WorkloadModel {
-                        model_id: format!("m{i}"),
-                        target: Target::EnergyJ,
-                        coefs: [0.5 * scale, 8.0 * scale, 0.003 * scale],
-                        r2: 0.97,
-                        f_stat: 1.0,
-                        p_value: 0.0,
-                        n_obs: 1,
-                    },
-                    runtime: WorkloadModel {
-                        model_id: format!("m{i}"),
-                        target: Target::RuntimeS,
-                        coefs: [1e-3, 1e-2, 1e-6],
-                        r2: 0.97,
-                        f_stat: 1.0,
-                        p_value: 0.0,
-                        n_obs: 1,
-                    },
-                    accuracy: AccuracyModel::new(&format!("m{i}"), rng.range(40.0, 70.0)),
-                }
-            })
-            .collect();
+        let sets = random_sets(rng, 3);
         let queries: Vec<Query> = (0..20)
             .map(|id| Query {
                 id,
@@ -144,6 +147,73 @@ fn prop_cost_matrix_bounded_and_monotone_in_zeta() {
                 assert!((0.0..=1.0).contains(&c1.cost(k, i)), "ζ=1 ⇒ ê ∈ [0,1]");
                 assert!(c0.cost(k, i) <= c5.cost(k, i) + 1e-12);
                 assert!(c5.cost(k, i) <= c1.cost(k, i) + 1e-12);
+            }
+        }
+    });
+}
+
+/// The shape-bucketed transportation reduction must be *exact*: on any
+/// workload with duplicated shapes its objective equals the dense
+/// per-query solver's to 1e-9, under both γ interpretations, and its
+/// expansion is a feasible assignment whose recomputed dense objective
+/// matches what it reported.
+#[test]
+fn prop_bucketed_matches_dense_on_duplicated_shapes() {
+    forall(Config::default().cases(40), |rng| {
+        let n_models = 2 + rng.index(3); // 2..=4
+        let sets = random_sets(rng, n_models);
+
+        // A small shape table guarantees heavy duplication.
+        let n_shapes = 2 + rng.index(5); // 2..=6
+        let table: Vec<(u32, u32)> = (0..n_shapes)
+            .map(|_| {
+                (
+                    rng.int_range(1, 2048) as u32,
+                    rng.int_range(1, 4096) as u32,
+                )
+            })
+            .collect();
+        let nq = n_models + rng.index(30); // ≥ one query per model
+        let queries: Vec<Query> = (0..nq)
+            .map(|id| {
+                let (t_in, t_out) = table[rng.index(n_shapes)];
+                Query {
+                    id: id as u32,
+                    t_in,
+                    t_out,
+                }
+            })
+            .collect();
+
+        let norm = Normalizer::from_workload(&sets, &queries);
+        let zeta = rng.range(0.0, 1.0);
+        let dense = CostMatrix::build(&sets, &norm, &queries, zeta);
+        let bp = BucketedProblem::build(&sets, &norm, &queries, zeta);
+        assert!(bp.groups.n_shapes() <= n_shapes);
+        assert_eq!(bp.n_queries(), nq);
+
+        // Random positive gammas normalized to 1.
+        let raw: Vec<f64> = (0..n_models).map(|_| rng.range(0.01, 1.0)).collect();
+        let sum: f64 = raw.iter().sum();
+        let gammas: Vec<f64> = raw.iter().map(|g| g / sum).collect();
+
+        for mode in [CapacityMode::Eq3Only, CapacityMode::GammaHard] {
+            let caps = capacity_bounds(mode, &gammas, nq);
+            let d = solve_exact_caps(&dense, &caps).unwrap();
+            let b = solve_exact_bucketed(&bp, &caps).unwrap();
+            assert!(
+                (d.objective - b.objective).abs() < 1e-9,
+                "{mode:?}: bucketed {} vs dense {}",
+                b.objective,
+                d.objective
+            );
+            assert!(
+                (b.objective_under(&dense) - b.objective).abs() < 1e-9,
+                "{mode:?}: expansion objective drifts from reported"
+            );
+            b.check_constraints(n_models).unwrap();
+            for (c, cap) in b.counts(n_models).iter().zip(&caps) {
+                assert!(c <= cap, "{mode:?}: capacity violated");
             }
         }
     });

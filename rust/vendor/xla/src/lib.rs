@@ -1,0 +1,184 @@
+//! Offline stub of the `xla` (PJRT) bindings.
+//!
+//! The real crate wraps the native XLA/PJRT toolchain, which the build
+//! container does not ship. This stub exposes the exact API surface the
+//! `ecoserve` runtime layer compiles against; every execution path returns
+//! a descriptive [`Error`] at runtime instead of running a computation.
+//! All callers gate PJRT work on `artifacts/manifest.json` existing, so
+//! tests and benches skip cleanly without the native backend.
+//!
+//! Like the real client (which is `Rc`-based), [`PjRtClient`] is `!Send`:
+//! the coordinator's one-engine-host-thread discipline still typechecks.
+
+use std::fmt;
+use std::marker::PhantomData;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Error type matching the real crate's `anyhow`-compatible surface.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "xla stub: {what} requires the native PJRT backend, which is not \
+         available in this build (run `make artifacts` on a machine with the \
+         XLA toolchain)"
+    ))
+}
+
+/// Element types a [`Literal`] can carry.
+pub trait NativeType: Copy + 'static {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+impl NativeType for u32 {}
+impl NativeType for u64 {}
+
+/// Host-side tensor value. The stub records only the logical shape.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        Literal {
+            dims: vec![values.len() as i64],
+        }
+    }
+
+    /// Reinterpret the literal with new dimensions.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let old: i64 = self.dims.iter().product();
+        let new: i64 = dims.iter().product();
+        if old != new {
+            return Err(Error(format!(
+                "xla stub: reshape {:?} -> {:?} changes element count",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+        })
+    }
+
+    /// Copy the elements out to a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    /// Destructure a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    /// Destructure a 1-tuple literal into its single element.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO-text artifact.
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        Err(Error(format!(
+            "xla stub: cannot parse HLO text {} without the native backend",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// An XLA computation ready for compilation.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device-resident buffer returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtBuffer {
+    /// Transfer the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments; one result buffer list per device.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle. `Rc`-based like the real crate, hence `!Send`.
+#[derive(Debug, Clone)]
+pub struct PjRtClient {
+    _rc: Rc<()>,
+}
+
+impl PjRtClient {
+    /// Connect to the host CPU PJRT plugin.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    /// Compile a computation for this client's devices.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_paths_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("nope.hlo").is_err());
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[2, 2]).is_ok());
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(l.to_vec::<f32>().is_err());
+    }
+}
