@@ -1,7 +1,7 @@
 //! Quickstart: the whole pipeline in one minute —
 //! characterize a small model zoo on the simulated Swing node, fit the
 //! paper's workload-based energy/runtime models, and route a workload at a
-//! chosen energy/accuracy trade-off ζ.
+//! chosen energy/accuracy trade-off ζ through the `plan` facade.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -9,9 +9,9 @@
 
 use ecoserve::characterize::quick_fit;
 use ecoserve::config::{llama_family, Partition};
-use ecoserve::models::Normalizer;
+use ecoserve::plan::{Planner, SolverKind};
 use ecoserve::report;
-use ecoserve::scheduler::{evaluate, solve_exact_mode, CapacityMode, CostMatrix};
+use ecoserve::scheduler::CapacityMode;
 use ecoserve::util::Rng;
 use ecoserve::workload::{generate, AlpacaParams};
 
@@ -26,14 +26,20 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(7);
     let queries = generate(500, &AlpacaParams::default(), &mut rng);
 
-    // 3. Route it at three operating points.
+    // 3. One planning session, three operating points: `rezeta` re-blends
+    //    the cached per-shape costs and re-solves — no regrouping, no
+    //    normalizer rescan, no hand-wired cost matrices.
     let partition = Partition::paper_case_study();
-    let norm = Normalizer::from_workload(&fitted.sets, &queries);
+    let mut session = Planner::new(&fitted.sets)
+        .partition(&partition)
+        .capacity(CapacityMode::Eq3Only)
+        .solver(SolverKind::Bucketed)
+        .zeta(0.0)
+        .session(&queries)?;
     for zeta in [0.0, 0.5, 1.0] {
-        let costs = CostMatrix::build(&fitted.sets, &norm, &queries, zeta);
-        let assignment = solve_exact_mode(&costs, &partition.gammas, CapacityMode::Eq3Only)?;
-        let eval = evaluate(&assignment, &fitted.sets, &queries);
-        let counts = assignment.counts(fitted.sets.len());
+        session.rezeta(zeta)?;
+        let counts = session.assignment().unwrap().counts(fitted.sets.len());
+        let eval = session.evaluate().unwrap();
         println!(
             "zeta={zeta:.1}  counts={counts:?}  mean energy {:>8.1} J  \
              mean runtime {:>6.3} s  mean accuracy {:>5.2}%",

@@ -56,14 +56,14 @@ fn main() -> anyhow::Result<()> {
     let cpu = Cpu::new(epyc_7742(), 0);
 
     let mut validate = |label: &str, sample: &[Query], bound: f64| -> anyhow::Result<f64> {
-        let norm = ecoserve::models::Normalizer::from_workload(&fitted.sets, sample);
-        let costs =
-            ecoserve::scheduler::CostMatrix::build(&fitted.sets, &norm, sample, 0.5);
-        let assignment = ecoserve::scheduler::solve_exact_mode(
-            &costs,
-            &partition.gammas,
-            CapacityMode::Eq3Only,
-        )?;
+        // The facade owns normalization and cost construction.
+        let mut session = ecoserve::plan::Planner::new(&fitted.sets)
+            .partition(&partition)
+            .capacity(CapacityMode::Eq3Only)
+            .zeta(0.5)
+            .session(sample)?;
+        session.solve()?;
+        let assignment = session.assignment().unwrap();
         let mut measured = 0.0;
         let mut predicted = 0.0;
         for (i, q) in sample.iter().enumerate() {

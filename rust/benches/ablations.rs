@@ -9,6 +9,7 @@ use ecoserve::config::{llama_family, swing_node, ExperimentConfig, Partition};
 use ecoserve::models::{Normalizer, Target, WorkloadModel};
 use ecoserve::hardware::Node;
 use ecoserve::perfmodel::Cluster;
+use ecoserve::plan::{Planner, SolverKind};
 use ecoserve::scheduler::{
     capacity_bounds, evaluate, solve_exact_bucketed, solve_exact_caps, solve_greedy_caps,
     sweep_mode, BucketedProblem, CapacityMode, CostMatrix,
@@ -72,9 +73,22 @@ fn main() {
         let greedy_stats = bench(&format!("greedy/zeta{zeta}"), Duration::from_secs(2), || {
             black_box(solve_greedy_caps(&costs, &caps).unwrap());
         });
-        let exact = solve_exact_caps(&costs, &caps).unwrap();
-        let bucketed = solve_exact_bucketed(&bp, &caps).unwrap();
-        let greedy = solve_greedy_caps(&costs, &caps).unwrap();
+        // Objective comparisons go through the facade so every backend is
+        // exercised behind the same `Solver` interface.
+        let solve_kind = |kind: SolverKind| {
+            let mut session = Planner::new(&sets)
+                .partition(&partition)
+                .capacity(CapacityMode::GammaHard)
+                .zeta(zeta)
+                .solver(kind)
+                .session(&queries)
+                .unwrap();
+            session.solve().unwrap();
+            session.assignment().unwrap().clone()
+        };
+        let exact = solve_kind(SolverKind::Dense);
+        let bucketed = solve_kind(SolverKind::Bucketed);
+        let greedy = solve_kind(SolverKind::Greedy);
         let gap = (greedy.objective - exact.objective) / exact.objective.abs().max(1e-12);
         println!("{}", exact_stats.line());
         println!("{}", bucketed_stats.line());

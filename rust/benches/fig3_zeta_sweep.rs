@@ -5,11 +5,9 @@
 use ecoserve::characterize::quick_fit;
 use ecoserve::config::{llama_family, Partition};
 use ecoserve::models::Normalizer;
+use ecoserve::plan::Planner;
 use ecoserve::report;
-use ecoserve::scheduler::{
-    solve_exact_bucketed_mode, solve_exact_mode, sweep_mode, BucketedProblem, CapacityMode,
-    CostMatrix,
-};
+use ecoserve::scheduler::{solve_exact_mode, sweep_mode, CapacityMode, CostMatrix};
 use ecoserve::util::{bench, black_box, Rng};
 use std::time::Duration;
 
@@ -38,17 +36,22 @@ fn main() {
         stats.median_s
     );
 
-    // The shape-bucketed production path on the same instance.
-    let bp = BucketedProblem::build(&fitted.sets, &norm, &queries, 0.5);
-    let bstats = bench("mcmf/solve_bucketed_500x3", Duration::from_secs(3), || {
-        black_box(
-            solve_exact_bucketed_mode(&bp, &partition.gammas, CapacityMode::Eq3Only).unwrap(),
-        );
+    // The shape-bucketed production path via the `plan` facade, end to
+    // end (group + normalize + blend + solve) on the same instance.
+    let planner = Planner::new(&fitted.sets)
+        .partition(&partition)
+        .capacity(CapacityMode::Eq3Only)
+        .zeta(0.5);
+    let bstats = bench("plan/session_bucketed_500x3", Duration::from_secs(3), || {
+        let mut session = planner.session(&queries).unwrap();
+        session.solve().unwrap();
+        black_box(session.assignment().unwrap().objective);
     });
     println!("{}", bstats.line());
     let dense = solve_exact_mode(&costs, &partition.gammas, CapacityMode::Eq3Only).unwrap();
-    let bucketed =
-        solve_exact_bucketed_mode(&bp, &partition.gammas, CapacityMode::Eq3Only).unwrap();
+    let mut session = planner.session(&queries).unwrap();
+    session.solve().unwrap();
+    let bucketed = session.assignment().unwrap();
     assert!(
         (bucketed.objective - dense.objective).abs() <= 1e-6 * dense.objective.abs().max(1.0),
         "bucketed {} vs dense {}",

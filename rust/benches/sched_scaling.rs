@@ -2,13 +2,19 @@
 //! 1k → 500k queries over an 8-model zoo with ≤ 256 distinct shapes,
 //! timing the shape-bucketed production path (group → per-shape cost
 //! matrix → CSR min-cost flow → expansion) against the dense per-query
-//! solver where the latter is still tractable, and writes the series to
+//! solver where the latter is still tractable; then replays a day of
+//! incremental arrivals (24 batches × 20k queries) through one
+//! `PlanSession`, timing the warm-started `extend` re-solves against cold
+//! from-scratch solves of the cumulative workload. Writes both series to
 //! `BENCH_sched.json`. `cargo bench --bench sched_scaling`.
 //!
-//! Acceptance bar: the 100k-query × 8-model instance must solve end to
-//! end in under one second.
+//! Acceptance bars: the 100k-query × 8-model instance must solve end to
+//! end in under one second, and every warm re-solve must match its cold
+//! cross-check (the tight 1e-9 equivalence property lives in
+//! `tests/plan.rs`).
 
 use ecoserve::models::{AccuracyModel, ModelSet, Normalizer, Target, WorkloadModel};
+use ecoserve::plan::Planner;
 use ecoserve::scheduler::{
     capacity_bounds, group_by_shape, solve_exact_bucketed, solve_exact_caps, BucketedProblem,
     CapacityMode, CostMatrix,
@@ -54,27 +60,35 @@ fn zoo() -> Vec<ModelSet> {
         .collect()
 }
 
-fn workload(n: usize, rng: &mut Rng) -> Vec<Query> {
-    // A fixed table of ≤ 256 shapes; each query draws one. This is the
-    // regime the bucketing targets: |Q| ≫ |shapes|.
-    let table: Vec<(u32, u32)> = (0..N_SHAPES)
+/// A fixed table of ≤ 256 shapes shared by every draw. This is the regime
+/// the bucketing targets: |Q| ≫ |shapes|.
+fn shape_table(rng: &mut Rng) -> Vec<(u32, u32)> {
+    (0..N_SHAPES)
         .map(|_| {
             (
                 8 + rng.index(2040) as u32,
                 8 + rng.index(4088) as u32,
             )
         })
-        .collect();
+        .collect()
+}
+
+fn draw(table: &[(u32, u32)], n: usize, id0: usize, rng: &mut Rng) -> Vec<Query> {
     (0..n)
-        .map(|id| {
-            let (t_in, t_out) = table[rng.index(N_SHAPES)];
+        .map(|i| {
+            let (t_in, t_out) = table[rng.index(table.len())];
             Query {
-                id: id as u32,
+                id: (id0 + i) as u32,
                 t_in,
                 t_out,
             }
         })
         .collect()
+}
+
+fn workload(n: usize, rng: &mut Rng) -> Vec<Query> {
+    let table = shape_table(rng);
+    draw(&table, n, 0, rng)
 }
 
 fn main() {
@@ -159,10 +173,84 @@ fn main() {
         ]));
     }
 
+    // ---- incremental arrivals: warm-started extend vs cold re-solve -----
+    // A day of traffic: 24 batches × 20k queries from one shape table. The
+    // session applies each batch as multiplicity deltas and warm-starts
+    // the min-cost flow from the previous optimum; the cold baseline
+    // regroups and re-solves the cumulative workload from scratch.
+    println!("\n=== incremental arrivals: 24 × 20k, warm extend vs cold re-solve ===");
+    const N_BATCHES: usize = 24;
+    const BATCH: usize = 20_000;
+    let table = shape_table(&mut rng);
+    let batches: Vec<Vec<Query>> = (0..N_BATCHES)
+        .map(|h| draw(&table, BATCH, h * BATCH, &mut rng))
+        .collect();
+
+    let mut session = Planner::new(&sets)
+        .gammas(&gammas)
+        .capacity(CapacityMode::Eq3Only)
+        .zeta(zeta)
+        .session(&batches[0])
+        .unwrap();
+    session.solve().unwrap();
+
+    let mut cumulative: Vec<Query> = batches[0].clone();
+    let mut warm_total_s = 0.0;
+    let mut cold_total_s = 0.0;
+    let mut inc_rows: Vec<Json> = Vec::new();
+    for batch in &batches[1..] {
+        let sw = Stopwatch::start();
+        session.extend(batch).unwrap();
+        let warm_s = sw.elapsed_s();
+        let warm_obj = session.assignment().unwrap().objective;
+
+        cumulative.extend_from_slice(batch);
+        let sw = Stopwatch::start();
+        let norm = Normalizer::from_shapes(&sets, &group_by_shape(&cumulative).shapes);
+        let bp = BucketedProblem::build(&sets, &norm, &cumulative, zeta);
+        let caps = capacity_bounds(CapacityMode::Eq3Only, &gammas, cumulative.len());
+        let cold = solve_exact_bucketed(&bp, &caps).unwrap();
+        let cold_s = sw.elapsed_s();
+
+        // Same cross-check bar as the dense-vs-bucketed comparison above
+        // (the tight 1e-9 property lives in tests/plan.rs).
+        assert!(
+            (warm_obj - cold.objective).abs() <= 1e-6 * cold.objective.abs().max(1.0),
+            "n={}: warm {} vs cold {}",
+            cumulative.len(),
+            warm_obj,
+            cold.objective
+        );
+        warm_total_s += warm_s;
+        cold_total_s += cold_s;
+        inc_rows.push(Json::obj(vec![
+            ("n_cumulative", Json::num(cumulative.len() as f64)),
+            ("warm_s", Json::num(warm_s)),
+            ("cold_s", Json::num(cold_s)),
+        ]));
+    }
+    println!(
+        "  {} batches: warm total {:.1} ms, cold total {:.1} ms ({:.1}x)",
+        N_BATCHES - 1,
+        warm_total_s * 1e3,
+        cold_total_s * 1e3,
+        cold_total_s / warm_total_s.max(1e-12)
+    );
+
     let doc = Json::obj(vec![
         ("bench", Json::str("sched_scaling")),
         ("zeta", Json::num(zeta)),
         ("series", Json::Arr(rows)),
+        (
+            "incremental",
+            Json::obj(vec![
+                ("batches", Json::num(N_BATCHES as f64)),
+                ("batch_size", Json::num(BATCH as f64)),
+                ("warm_total_s", Json::num(warm_total_s)),
+                ("cold_total_s", Json::num(cold_total_s)),
+                ("per_batch", Json::Arr(inc_rows)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_sched.json", doc.to_string_pretty()).expect("write BENCH_sched.json");
     println!("✓ wrote BENCH_sched.json");

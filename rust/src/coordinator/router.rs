@@ -1,9 +1,16 @@
 //! The ζ-aware online router: the paper's offline objective applied per
 //! arriving query, plus γ-quota admission — how a deployment would apply
 //! the fitted models in real time (§7's "real-time systems" outlook).
+//!
+//! When an offline [`Plan`](crate::plan::Plan) is attached
+//! ([`Router::with_plan`]), arriving queries whose shape still has plan
+//! budget follow the offline optimum directly; everything else falls back
+//! to the configured policy — the offline-plan → online-serve handoff.
 
 use crate::models::{ModelSet, Normalizer};
+use crate::plan::Plan;
 use crate::workload::Query;
+use std::collections::HashMap;
 
 /// Routing policies supported by the coordinator.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -55,6 +62,51 @@ impl QuotaTracker {
     }
 }
 
+/// Remaining per-shape flow budget of an attached offline plan.
+#[derive(Debug, Clone)]
+pub struct PlanTable {
+    /// shape key → remaining per-model counts
+    remaining: HashMap<u64, Vec<usize>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PlanTable {
+    pub fn new(plan: &Plan) -> PlanTable {
+        PlanTable {
+            remaining: plan
+                .shape_flows
+                .iter()
+                .map(|sf| (sf.shape.key(), sf.flows.clone()))
+                .collect(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Consume one unit of plan budget for this shape, lowest model index
+    /// first (same-shape queries share a cost row, so any consumption
+    /// order realizes the plan's objective).
+    fn take(&mut self, key: u64) -> Option<usize> {
+        let k = self.remaining.get_mut(&key).and_then(|flows| {
+            flows.iter().position(|&f| f > 0).map(|k| {
+                flows[k] -= 1;
+                k
+            })
+        });
+        match k {
+            Some(_) => self.hits += 1,
+            None => self.misses += 1,
+        }
+        k
+    }
+
+    /// (plan-followed, fallback) decision counts so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
+
 /// The router proper. Pure data — lives on the coordinator thread.
 #[derive(Debug, Clone)]
 pub struct Router {
@@ -63,6 +115,7 @@ pub struct Router {
     pub zeta: f64,
     pub policy: Policy,
     pub quota: Option<QuotaTracker>,
+    pub plan: Option<PlanTable>,
     rr_next: usize,
 }
 
@@ -74,6 +127,7 @@ impl Router {
             zeta,
             policy,
             quota: None,
+            plan: None,
             rr_next: 0,
         }
     }
@@ -82,6 +136,19 @@ impl Router {
     pub fn with_quota(mut self, gammas: &[f64], slack: f64) -> Router {
         assert_eq!(gammas.len(), self.sets.len());
         self.quota = Some(QuotaTracker::new(gammas, slack));
+        self
+    }
+
+    /// Attach an offline [`Plan`]: queries whose shape still has plan
+    /// budget are routed per the offline optimum; the rest fall back to
+    /// the configured policy.
+    pub fn with_plan(mut self, plan: &Plan) -> Router {
+        assert_eq!(
+            plan.model_ids.len(),
+            self.sets.len(),
+            "plan models must match the hosted zoo"
+        );
+        self.plan = Some(PlanTable::new(plan));
         self
     }
 
@@ -94,6 +161,16 @@ impl Router {
 
     /// Route one query → model index.
     pub fn route(&mut self, q: &Query) -> usize {
+        // Offline plan first: follow the solved optimum while its
+        // per-shape budget lasts.
+        if let Some(table) = self.plan.as_mut() {
+            if let Some(k) = table.take(q.shape().key()) {
+                if let Some(t) = self.quota.as_mut() {
+                    t.record(k);
+                }
+                return k;
+            }
+        }
         let k = match self.policy {
             Policy::Single(k) => k.min(self.sets.len() - 1),
             Policy::RoundRobin => {
@@ -217,6 +294,39 @@ mod tests {
         let n = norm_for(&s);
         let mut r = Router::new(s, n, 0.5, Policy::Single(1));
         assert!((0..10).all(|i| r.route(&q(i, 10, 10)) == 1));
+    }
+
+    #[test]
+    fn plan_budget_routes_then_falls_back() {
+        use crate::plan::{Plan, ShapeFlow, PLAN_VERSION};
+        use crate::workload::Shape;
+        let s = sets();
+        let n = norm_for(&s);
+        let plan = Plan {
+            version: PLAN_VERSION,
+            zeta: 1.0,
+            gammas: vec![1.0 / 3.0; 3],
+            mode: crate::scheduler::CapacityMode::Eq3Only,
+            solver: "bucketed".to_string(),
+            model_ids: s.iter().map(|m| m.model_id.clone()).collect(),
+            n_queries: 3,
+            objective: 0.0,
+            norm_max: [n.max_energy_j, n.max_accuracy, n.max_runtime_s],
+            // Shape (100, 100): 1 to "mid", 2 to "big".
+            shape_flows: vec![ShapeFlow {
+                shape: Shape { t_in: 100, t_out: 100 },
+                flows: vec![0, 1, 2],
+            }],
+        };
+        // ζ=1 policy alone would send everything to "small" (index 0).
+        let mut r = Router::new(s, n, 1.0, Policy::ZetaCost).with_plan(&plan);
+        let routed: Vec<usize> = (0..5).map(|i| r.route(&q(i, 100, 100))).collect();
+        // Plan budget first (lowest index with budget: mid, then big ×2),
+        // then the ζ-cost fallback (small).
+        assert_eq!(routed, vec![1, 2, 2, 0, 0]);
+        assert_eq!(r.plan.as_ref().unwrap().stats(), (3, 2));
+        // Unknown shapes miss the plan and fall back immediately.
+        assert_eq!(r.route(&q(9, 7, 7)), 0);
     }
 
     #[test]

@@ -7,10 +7,11 @@
 //!
 //! * **L3 (this crate)** — the coordination contribution: workload
 //!   characterization campaign, workload-based energy/runtime model fitting,
-//!   the ζ-weighted offline assignment optimizer, and an online serving
-//!   runtime (router → batcher → per-model workers) that executes AOT-
-//!   compiled model artifacts through PJRT. Python never runs on the
-//!   request path.
+//!   the ζ-weighted offline assignment optimizer behind the [`plan`]
+//!   facade (`Planner` → `PlanSession` → serializable `Plan` artifacts),
+//!   and an online serving runtime (router → batcher → per-model workers)
+//!   that executes AOT-compiled model artifacts through PJRT. Python never
+//!   runs on the request path.
 //! * **L2 (python/compile/model.py)** — proxy LLM zoo in JAX (dense and
 //!   sparse-MoE decoders), lowered once to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (decode attention,
@@ -26,6 +27,7 @@ pub mod coordinator;
 pub mod hardware;
 pub mod models;
 pub mod perfmodel;
+pub mod plan;
 pub mod report;
 pub mod runtime;
 pub mod scheduler;

@@ -7,8 +7,10 @@
 //! ecoserve anova                       Table 2
 //! ecoserve fit                         Table 3 (+ fitted coefficients)
 //! ecoserve sweep-zeta                  Fig. 3 (scheduler + baselines)
+//! ecoserve plan --out plan.json        solve offline, save the Plan artifact
 //! ecoserve route --zeta 0.5            one offline assignment, counts
-//! ecoserve serve                       end-to-end PJRT serving demo
+//! ecoserve route --plan plan.json      apply a saved Plan to the workload
+//! ecoserve serve --plan plan.json      serving demo fed by the offline Plan
 //! ecoserve repro-all --out results     everything above, as CSV/MD files
 //! ```
 
@@ -20,8 +22,9 @@ use ecoserve::coordinator::{Policy, Request, Router, ServeConfig};
 use ecoserve::hardware::Node;
 use ecoserve::models::Normalizer;
 use ecoserve::perfmodel::Cluster;
+use ecoserve::plan::{Plan, Planner, SolverKind};
 use ecoserve::report;
-use ecoserve::scheduler::{self, CapacityMode, CostMatrix};
+use ecoserve::scheduler::{self, CapacityMode};
 use ecoserve::stats;
 use ecoserve::util::{logging, Args, Rng};
 use ecoserve::workload::{self, Query};
@@ -62,6 +65,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("anova") => cmd_anova(args),
         Some("fit") => cmd_fit(args),
         Some("sweep-zeta") => cmd_sweep_zeta(args),
+        Some("plan") => cmd_plan(args),
         Some("route") => cmd_route(args),
         Some("serve") => cmd_serve(args),
         Some("repro-all") => cmd_repro_all(args),
@@ -86,9 +90,17 @@ COMMANDS
   fit                       Table 3: OLS fits of e_K and r_K per model
   sweep-zeta                Fig. 3: ζ sweep vs baselines
                             [--points N] [--queries N] [--gamma-caps]
+  plan                      solve offline and save a Plan artifact
+                            [--zeta X] [--queries N] [--gamma-caps]
+                            [--solver bucketed|dense|greedy|round-robin|
+                             random|single:K] [--workload alpaca|serve-proxy]
+                            [--requests N] [--out plan.json]
   route                     solve one assignment [--zeta X] [--queries N]
+                            [--solver KIND] [--gamma-caps] [--plan FILE]
+                            [--workload alpaca|serve-proxy] [--requests N]
   serve                     end-to-end PJRT serving demo
                             [--artifacts DIR] [--requests N] [--zeta X]
+                            [--plan FILE]
   repro-all                 regenerate every table and figure [--out DIR]
 
 GLOBAL  --seed N   --quiet   --verbose
@@ -183,11 +195,7 @@ fn cmd_sweep_zeta(args: &Args) -> anyhow::Result<()> {
     let seed = args.opt_u64("seed", 42);
     let n_points = args.opt_usize("points", 11);
     let n_queries = args.opt_usize("queries", 500);
-    let mode = if args.flag("gamma-caps") {
-        CapacityMode::GammaHard
-    } else {
-        CapacityMode::Eq3Only
-    };
+    let mode = capacity_mode_arg(args);
     let partition = Partition::paper_case_study();
     partition.validate()?;
 
@@ -213,48 +221,152 @@ fn cmd_sweep_zeta(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_route(args: &Args) -> anyhow::Result<()> {
-    let seed = args.opt_u64("seed", 42);
-    let zeta = args.opt_f64("zeta", 0.5);
-    let n_queries = args.opt_usize("queries", 500);
-    let partition = Partition::paper_case_study();
-    let family = llama_family();
-    let fitted = characterize::quick_fit(&family, seed)?;
-    let mut rng = Rng::new(seed ^ 0xA0_77E);
-    let queries = case_study_queries(n_queries, &mut rng);
+fn capacity_mode_arg(args: &Args) -> CapacityMode {
+    if args.flag("gamma-caps") {
+        CapacityMode::GammaHard
+    } else {
+        CapacityMode::Eq3Only
+    }
+}
 
-    let norm = Normalizer::from_workload(&fitted.sets, &queries);
-    let costs = CostMatrix::build(&fitted.sets, &norm, &queries, zeta);
-    let t0 = Instant::now();
-    let assignment =
-        scheduler::solve_exact_mode(&costs, &partition.gammas, CapacityMode::Eq3Only)?;
-    let solve_time = t0.elapsed();
-    let eval = scheduler::evaluate(&assignment, &fitted.sets, &queries);
+/// The workload a plan is computed over: the §6.3 Alpaca-like case study,
+/// or the same proxy-scale request stream `serve` replays (so a saved plan
+/// matches `serve --plan` shape-for-shape).
+fn plan_workload(args: &Args, seed: u64) -> anyhow::Result<Vec<Query>> {
+    match args.opt_or("workload", "alpaca").as_str() {
+        "alpaca" => {
+            let n_queries = args.opt_usize("queries", 500);
+            let mut rng = Rng::new(seed ^ 0xA0_77E);
+            Ok(case_study_queries(n_queries, &mut rng))
+        }
+        "serve-proxy" => {
+            let n_requests = args.opt_usize("requests", 24);
+            Ok(proxy_requests(n_requests, seed)
+                .into_iter()
+                .map(|(_, q)| q)
+                .collect())
+        }
+        other => anyhow::bail!("--workload must be alpaca|serve-proxy, got {other}"),
+    }
+}
 
-    println!("zeta = {zeta}, {n_queries} queries, solved in {solve_time:?}");
-    let counts = assignment.counts(fitted.sets.len());
-    for (k, s) in fitted.sets.iter().enumerate() {
-        println!("  {:<12} {:>4} queries", s.model_id, counts[k]);
+/// A plan is only applicable to the zoo it was solved for: model ids must
+/// match exactly, in order.
+fn check_plan_matches(plan: &Plan, sets: &[ecoserve::models::ModelSet]) -> anyhow::Result<()> {
+    let plan_ids: Vec<&str> = plan.model_ids.iter().map(String::as_str).collect();
+    let family_ids: Vec<&str> = sets.iter().map(|s| s.model_id.as_str()).collect();
+    if plan_ids != family_ids {
+        anyhow::bail!("plan models {plan_ids:?} do not match the zoo {family_ids:?}");
+    }
+    Ok(())
+}
+
+fn print_assignment_summary(
+    sets: &[ecoserve::models::ModelSet],
+    assignment: &scheduler::Assignment,
+    queries: &[Query],
+) {
+    let eval = scheduler::evaluate(assignment, sets, queries);
+    let counts = assignment.counts(sets.len());
+    for (k, s) in sets.iter().enumerate() {
+        println!("  {:<12} {:>6} queries", s.model_id, counts[k]);
     }
     println!(
         "  mean energy {:.1} J | mean runtime {:.3} s | mean accuracy {:.2}%",
         eval.mean_energy_j, eval.mean_runtime_s, eval.mean_accuracy
     );
+}
+
+fn cmd_plan(args: &Args) -> anyhow::Result<()> {
+    let seed = args.opt_u64("seed", 42);
+    let zeta = args.opt_f64("zeta", 0.5);
+    let out = PathBuf::from(args.opt_or("out", "plan.json"));
+    let solver = SolverKind::parse(&args.opt_or("solver", "bucketed"))?;
+    let partition = Partition::paper_case_study();
+    partition.validate()?;
+    let family = llama_family();
+    let fitted = characterize::quick_fit(&family, seed)?;
+    let queries = plan_workload(args, seed)?;
+
+    let mut session = Planner::new(&fitted.sets)
+        .partition(&partition)
+        .capacity(capacity_mode_arg(args))
+        .zeta(zeta)
+        .solver(solver)
+        .seed(seed)
+        .session(&queries)?;
+    let t0 = Instant::now();
+    session.solve()?;
+    let solve_time = t0.elapsed();
+    let plan = session.plan()?;
+    plan.save(&out)?;
+
+    println!(
+        "plan: {} queries ({} distinct shapes), zeta = {zeta}, solver = {}, solved in {solve_time:?}",
+        plan.n_queries,
+        plan.shape_flows.len(),
+        plan.solver
+    );
+    print_assignment_summary(&fitted.sets, session.assignment().unwrap(), &queries);
+    println!("  objective {:.6} → {}", plan.objective, out.display());
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    let artifacts = PathBuf::from(args.opt_or("artifacts", "artifacts"));
-    let n_requests = args.opt_usize("requests", 24);
-    let zeta = args.opt_f64("zeta", 0.5);
+fn cmd_route(args: &Args) -> anyhow::Result<()> {
     let seed = args.opt_u64("seed", 42);
-
     let family = llama_family();
     let fitted = characterize::quick_fit(&family, seed)?;
-    let mut rng = Rng::new(seed ^ 0x5E7);
 
-    // Proxy-scale request stream (prompts fit the artifact prompt window).
-    let requests: Vec<(Request, Query)> = (0..n_requests as u64)
+    // Apply a saved offline plan instead of solving.
+    if let Some(path) = args.opt("plan") {
+        let plan = Plan::load(Path::new(path))?;
+        check_plan_matches(&plan, &fitted.sets)?;
+        let queries = plan_workload(args, seed)?;
+        let assignment = plan.assignment_for(&queries)?;
+        println!(
+            "plan {}: zeta = {}, {} queries, solver = {}",
+            path,
+            plan.zeta,
+            plan.n_queries,
+            plan.solver
+        );
+        print_assignment_summary(&fitted.sets, &assignment, &queries);
+        return Ok(());
+    }
+
+    let zeta = args.opt_f64("zeta", 0.5);
+    let solver = SolverKind::parse(&args.opt_or("solver", "bucketed"))?;
+    let partition = Partition::paper_case_study();
+    let queries = plan_workload(args, seed)?;
+
+    // The bucketed production path: solves at shape granularity, so large
+    // --queries stay O(shapes × models) instead of O(|Q|²·K).
+    let mut session = Planner::new(&fitted.sets)
+        .partition(&partition)
+        .capacity(capacity_mode_arg(args))
+        .zeta(zeta)
+        .solver(solver)
+        .seed(seed)
+        .session(&queries)?;
+    let t0 = Instant::now();
+    session.solve()?;
+    let solve_time = t0.elapsed();
+
+    println!(
+        "zeta = {zeta}, {} queries ({} distinct shapes), solved in {solve_time:?}",
+        queries.len(),
+        session.n_shapes()
+    );
+    print_assignment_summary(&fitted.sets, session.assignment().unwrap(), &queries);
+    Ok(())
+}
+
+/// Proxy-scale request stream (prompts fit the artifact prompt window).
+/// Deterministic in `(n, seed)` so `ecoserve plan --workload serve-proxy`
+/// produces a plan that matches `serve --plan` shape-for-shape.
+fn proxy_requests(n: usize, seed: u64) -> Vec<(Request, Query)> {
+    let mut rng = Rng::new(seed ^ 0x5E7);
+    (0..n as u64)
         .map(|id| {
             let t_in = rng.int_range(2, 48) as usize;
             let n_gen = rng.int_range(1, 16) as usize;
@@ -273,13 +385,54 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 },
             )
         })
-        .collect();
+        .collect()
+}
 
-    let probe: Vec<Query> = requests.iter().map(|(_, q)| *q).collect();
-    let norm = Normalizer::from_workload(&fitted.sets, &probe);
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let artifacts = PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    let n_requests = args.opt_usize("requests", 24);
+    let zeta = args.opt_f64("zeta", 0.5);
+    let seed = args.opt_u64("seed", 42);
+
+    let family = llama_family();
+    let fitted = characterize::quick_fit(&family, seed)?;
+
+    let requests = proxy_requests(n_requests, seed);
+
+    // Feed the offline optimum to the online router: plan-budgeted shapes
+    // follow the Plan, and the fallback scores under the *plan's* ζ and
+    // normalizer so online decisions stay consistent with the offline
+    // optimum.
+    let plan = match args.opt("plan") {
+        Some(path) => {
+            let plan = Plan::load(Path::new(path))?;
+            check_plan_matches(&plan, &fitted.sets)?;
+            if args.opt("zeta").is_some() && plan.zeta != zeta {
+                eprintln!(
+                    "note: --zeta {zeta} overridden by the plan's zeta {} \
+                     (fallback routing follows the plan's operating point)",
+                    plan.zeta
+                );
+            }
+            ecoserve::info!("routing with offline plan {path} (zeta {})", plan.zeta);
+            Some(plan)
+        }
+        None => None,
+    };
+
+    let (norm, zeta) = match &plan {
+        Some(p) => (p.normalizer(), p.zeta),
+        None => {
+            let probe: Vec<Query> = requests.iter().map(|(_, q)| *q).collect();
+            (Normalizer::from_workload(&fitted.sets, &probe), zeta)
+        }
+    };
     let partition = Partition::paper_case_study();
-    let router = Router::new(fitted.sets.clone(), norm, zeta, Policy::ZetaCost)
+    let mut router = Router::new(fitted.sets.clone(), norm, zeta, Policy::ZetaCost)
         .with_quota(&partition.gammas, 0.10);
+    if let Some(p) = &plan {
+        router = router.with_plan(p);
+    }
 
     let ids: Vec<&str> = family.iter().map(|m| m.id).collect();
     let cfg = ServeConfig::new(artifacts, &ids);

@@ -1,0 +1,403 @@
+//! The versioned, serializable [`Plan`] artifact: the offline optimum in a
+//! form the serving tier can load — per-shape flow counts plus the
+//! normalization and configuration needed to reproduce the scores online.
+//!
+//! Serialization uses the in-repo `util::json` (the offline crate cache
+//! carries no serde), with a v-envelope (`format` marker + `version`
+//! integer) so future layouts can evolve without breaking old readers.
+
+use crate::models::Normalizer;
+use crate::scheduler::{group_by_shape, Assignment, CapacityMode, ShapeGroups};
+use crate::util::Json;
+use crate::workload::{Query, Shape};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Envelope format marker.
+pub const PLAN_FORMAT: &str = "ecoserve.plan";
+/// Current artifact layout version.
+pub const PLAN_VERSION: u64 = 1;
+
+/// Flow counts for one distinct query shape: how many queries of this
+/// `(τ_in, τ_out)` go to each hosted model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShapeFlow {
+    pub shape: Shape,
+    /// per-model query counts (len = number of models); sums to the
+    /// shape's multiplicity
+    pub flows: Vec<usize>,
+}
+
+/// A complete offline plan: the solved Eq. 2–5 optimum at shape
+/// granularity, with enough context (ζ, γ, capacity mode, normalizer
+/// maxima, solver identity) to audit it and to apply it online.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    pub version: u64,
+    pub zeta: f64,
+    pub gammas: Vec<f64>,
+    pub mode: CapacityMode,
+    /// label of the backend that produced the assignment
+    pub solver: String,
+    pub model_ids: Vec<String>,
+    pub n_queries: usize,
+    /// Eq. 2 objective under the plan's normalizer and ζ
+    pub objective: f64,
+    /// dynamic-normalization maxima: [max_energy_j, max_accuracy,
+    /// max_runtime_s]
+    pub norm_max: [f64; 3],
+    pub shape_flows: Vec<ShapeFlow>,
+}
+
+fn mode_str(mode: CapacityMode) -> &'static str {
+    match mode {
+        CapacityMode::Eq3Only => "eq3-only",
+        CapacityMode::GammaHard => "gamma-hard",
+    }
+}
+
+fn mode_parse(s: &str) -> anyhow::Result<CapacityMode> {
+    match s {
+        "eq3-only" => Ok(CapacityMode::Eq3Only),
+        "gamma-hard" => Ok(CapacityMode::GammaHard),
+        other => anyhow::bail!("unknown capacity mode '{other}'"),
+    }
+}
+
+impl Plan {
+    /// Package a solved assignment (internal; use
+    /// [`PlanSession::plan`](crate::plan::PlanSession::plan)).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_solution(
+        sets: &[crate::models::ModelSet],
+        gammas: &[f64],
+        mode: CapacityMode,
+        solver: &str,
+        zeta: f64,
+        norm: &Normalizer,
+        groups: &ShapeGroups,
+        assignment: &Assignment,
+    ) -> Plan {
+        let nm = sets.len();
+        let mut flows = vec![vec![0usize; nm]; groups.n_shapes()];
+        for (q, &s) in groups.shape_of.iter().enumerate() {
+            flows[s][assignment.model_of[q]] += 1;
+        }
+        Plan {
+            version: PLAN_VERSION,
+            zeta,
+            gammas: gammas.to_vec(),
+            mode,
+            solver: solver.to_string(),
+            model_ids: sets.iter().map(|s| s.model_id.clone()).collect(),
+            n_queries: groups.n_queries(),
+            objective: assignment.objective,
+            norm_max: [norm.max_energy_j, norm.max_accuracy, norm.max_runtime_s],
+            shape_flows: groups
+                .shapes
+                .iter()
+                .zip(flows)
+                .map(|(&shape, flows)| ShapeFlow { shape, flows })
+                .collect(),
+        }
+    }
+
+    /// Queries per model across all shapes.
+    pub fn counts(&self) -> Vec<usize> {
+        let nm = self.model_ids.len();
+        let mut counts = vec![0usize; nm];
+        for sf in &self.shape_flows {
+            for (k, &f) in sf.flows.iter().enumerate() {
+                counts[k] += f;
+            }
+        }
+        counts
+    }
+
+    /// The normalizer the plan was scored under (for consistent online
+    /// scoring of shapes the plan has no flow for).
+    pub fn normalizer(&self) -> Normalizer {
+        Normalizer {
+            max_energy_j: self.norm_max[0],
+            max_accuracy: self.norm_max[1],
+            max_runtime_s: self.norm_max[2],
+        }
+    }
+
+    /// Expand the shape-level flows onto a concrete workload whose shape
+    /// multiset matches the plan's (e.g. the same seeded workload the plan
+    /// was computed from). Queries of each shape are assigned in original
+    /// order to models in ascending index — the same deterministic
+    /// expansion the bucketed solver uses.
+    pub fn assignment_for(&self, queries: &[Query]) -> anyhow::Result<Assignment> {
+        let groups = group_by_shape(queries);
+        if groups.n_queries() != self.n_queries {
+            anyhow::bail!(
+                "plan covers {} queries, workload has {}",
+                self.n_queries,
+                groups.n_queries()
+            );
+        }
+        let by_key: HashMap<u64, &ShapeFlow> = self
+            .shape_flows
+            .iter()
+            .map(|sf| (sf.shape.key(), sf))
+            .collect();
+        let members = groups.members();
+        let mut model_of = vec![usize::MAX; groups.n_queries()];
+        for (i, sh) in groups.shapes.iter().enumerate() {
+            let sf = by_key.get(&sh.key()).ok_or_else(|| {
+                anyhow::anyhow!("workload shape ({}, {}) not in plan", sh.t_in, sh.t_out)
+            })?;
+            let total: usize = sf.flows.iter().sum();
+            if total != groups.multiplicity[i] {
+                anyhow::bail!(
+                    "shape ({}, {}): plan has {} queries, workload has {}",
+                    sh.t_in,
+                    sh.t_out,
+                    total,
+                    groups.multiplicity[i]
+                );
+            }
+            let mem = &members[i];
+            let mut cursor = 0usize;
+            for (k, &f) in sf.flows.iter().enumerate() {
+                for _ in 0..f {
+                    model_of[mem[cursor] as usize] = k;
+                    cursor += 1;
+                }
+            }
+        }
+        Ok(Assignment {
+            model_of,
+            objective: self.objective,
+        })
+    }
+
+    // -------------------------------------------------------- serialization
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str(PLAN_FORMAT)),
+            ("version", Json::num(self.version as f64)),
+            ("zeta", Json::num(self.zeta)),
+            (
+                "gammas",
+                Json::arr(self.gammas.iter().map(|&g| Json::num(g))),
+            ),
+            ("capacity_mode", Json::str(mode_str(self.mode))),
+            ("solver", Json::str(self.solver.clone())),
+            (
+                "model_ids",
+                Json::arr(self.model_ids.iter().map(|s| Json::str(s.as_str()))),
+            ),
+            ("n_queries", Json::num(self.n_queries as f64)),
+            ("objective", Json::num(self.objective)),
+            (
+                "normalizer",
+                Json::obj(vec![
+                    ("max_energy_j", Json::num(self.norm_max[0])),
+                    ("max_accuracy", Json::num(self.norm_max[1])),
+                    ("max_runtime_s", Json::num(self.norm_max[2])),
+                ]),
+            ),
+            (
+                "shape_flows",
+                Json::arr(self.shape_flows.iter().map(|sf| {
+                    Json::obj(vec![
+                        ("t_in", Json::num(sf.shape.t_in as f64)),
+                        ("t_out", Json::num(sf.shape.t_out as f64)),
+                        (
+                            "flows",
+                            Json::arr(sf.flows.iter().map(|&f| Json::num(f as f64))),
+                        ),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Plan> {
+        let format = v.get("format").as_str().unwrap_or_default();
+        if format != PLAN_FORMAT {
+            anyhow::bail!("not an ecoserve plan (format '{format}')");
+        }
+        let version = v
+            .get("version")
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("plan missing version"))?;
+        if version > PLAN_VERSION {
+            anyhow::bail!("plan version {version} newer than supported {PLAN_VERSION}");
+        }
+        let req_num = |key: &str| -> anyhow::Result<f64> {
+            v.get(key)
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("plan missing numeric '{key}'"))
+        };
+        let norm = v.get("normalizer");
+        let norm_field = |key: &str| -> anyhow::Result<f64> {
+            norm.get(key)
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("plan missing normalizer.{key}"))
+        };
+        let gammas: Vec<f64> = v
+            .get("gammas")
+            .as_arr()
+            .unwrap_or_default()
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect();
+        let model_ids: Vec<String> = v
+            .get("model_ids")
+            .as_arr()
+            .unwrap_or_default()
+            .iter()
+            .filter_map(|j| j.as_str().map(str::to_string))
+            .collect();
+        if model_ids.is_empty() {
+            anyhow::bail!("plan has no model_ids");
+        }
+        let mut shape_flows = Vec::new();
+        for sf in v.get("shape_flows").as_arr().unwrap_or_default() {
+            let t_in = sf
+                .get("t_in")
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("shape flow missing t_in"))? as u32;
+            let t_out = sf
+                .get("t_out")
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("shape flow missing t_out"))? as u32;
+            let flows: Vec<usize> = sf
+                .get("flows")
+                .as_arr()
+                .unwrap_or_default()
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            if flows.len() != model_ids.len() {
+                anyhow::bail!(
+                    "shape ({t_in}, {t_out}) has {} flows for {} models",
+                    flows.len(),
+                    model_ids.len()
+                );
+            }
+            shape_flows.push(ShapeFlow {
+                shape: Shape { t_in, t_out },
+                flows,
+            });
+        }
+        Ok(Plan {
+            version,
+            zeta: req_num("zeta")?,
+            gammas,
+            mode: mode_parse(v.get("capacity_mode").as_str().unwrap_or_default())?,
+            solver: v.get("solver").as_str().unwrap_or_default().to_string(),
+            model_ids,
+            n_queries: v
+                .get("n_queries")
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("plan missing n_queries"))?,
+            objective: req_num("objective")?,
+            norm_max: [
+                norm_field("max_energy_j")?,
+                norm_field("max_accuracy")?,
+                norm_field("max_runtime_s")?,
+            ],
+            shape_flows,
+        })
+    }
+
+    /// Write the artifact (pretty JSON, parent directories created).
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Load an artifact written by [`Plan::save`].
+    pub fn load(path: &Path) -> anyhow::Result<Plan> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let v = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        Plan::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_plan() -> Plan {
+        Plan {
+            version: PLAN_VERSION,
+            zeta: 0.375,
+            gammas: vec![0.25, 0.75],
+            mode: CapacityMode::Eq3Only,
+            solver: "bucketed".to_string(),
+            model_ids: vec!["small".to_string(), "big".to_string()],
+            n_queries: 5,
+            objective: -0.123456789,
+            norm_max: [123.5, 66_000.0, 9.25],
+            shape_flows: vec![
+                ShapeFlow {
+                    shape: Shape { t_in: 8, t_out: 16 },
+                    flows: vec![2, 1],
+                },
+                ShapeFlow {
+                    shape: Shape { t_in: 100, t_out: 7 },
+                    flows: vec![0, 2],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let p = tiny_plan();
+        let text = p.to_json().to_string_pretty();
+        let q = Plan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn rejects_foreign_and_future_documents() {
+        assert!(Plan::from_json(&Json::parse("{}").unwrap()).is_err());
+        let mut j = tiny_plan().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("version".into(), Json::num((PLAN_VERSION + 1) as f64));
+        }
+        assert!(Plan::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn counts_sum_flows() {
+        assert_eq!(tiny_plan().counts(), vec![2, 3]);
+    }
+
+    #[test]
+    fn assignment_expansion_matches_flows() {
+        let p = tiny_plan();
+        let q = |id: u32, t_in: u32, t_out: u32| Query { id, t_in, t_out };
+        // 3 queries of shape (8,16), 2 of (100,7), interleaved.
+        let queries = vec![
+            q(0, 8, 16),
+            q(1, 100, 7),
+            q(2, 8, 16),
+            q(3, 100, 7),
+            q(4, 8, 16),
+        ];
+        let a = p.assignment_for(&queries).unwrap();
+        // Shape (8,16): members 0,2,4 → model 0, 0, 1; shape (100,7):
+        // members 1,3 → model 1, 1.
+        assert_eq!(a.model_of, vec![0, 1, 0, 1, 1]);
+        // Mismatched multiset is rejected.
+        assert!(p.assignment_for(&queries[..4]).is_err());
+        let wrong = vec![q(0, 9, 9); 5];
+        assert!(p.assignment_for(&wrong).is_err());
+    }
+}

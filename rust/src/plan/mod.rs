@@ -1,0 +1,34 @@
+//! `ecoserve::plan` — the session-based planning facade over the paper's
+//! pipeline (fit → normalize → blend → solve → evaluate → serve).
+//!
+//! The paper's framework is a pipeline, but the crate used to expose it as
+//! loose parts: every caller hand-wired `Normalizer` →
+//! `CostMatrix`/`BucketedProblem` → one of seven `solve_*` free functions,
+//! re-deriving shape groups and normalization on every ζ step and every
+//! arrival batch. This module is the seam that replaces that:
+//!
+//! * [`Planner`] — a builder that owns normalization and cost
+//!   construction: `Planner::new(&sets).partition(&p).zeta(0.5)`.
+//! * [`Solver`] — an object-safe trait unifying the exact dense MCMF, the
+//!   shape-bucketed transportation reduction, greedy, and the
+//!   query-independent baselines ([`SolverKind`] selects); the extension
+//!   point for network-simplex and future backends, with [`SolverState`]
+//!   carrying reusable buffers.
+//! * [`PlanSession`] — stateful: caches the shape grouping, the
+//!   normalizer, and the last optimal flow/potentials, so
+//!   [`rezeta`](PlanSession::rezeta) re-solves a ζ step without
+//!   regrouping and [`extend`](PlanSession::extend) applies
+//!   shape-multiplicity deltas with a warm-started min-cost flow.
+//! * [`Plan`] — a versioned, serializable artifact (`ecoserve plan --out
+//!   plan.json`) that `route`/`serve` load to feed the offline optimum to
+//!   the online [`Router`](crate::coordinator::Router) directly.
+
+pub mod artifact;
+pub mod planner;
+pub mod session;
+pub mod solver;
+
+pub use artifact::{Plan, ShapeFlow, PLAN_FORMAT, PLAN_VERSION};
+pub use planner::Planner;
+pub use session::PlanSession;
+pub use solver::{ProblemView, Solver, SolverKind, SolverState};

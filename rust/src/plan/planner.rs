@@ -1,0 +1,130 @@
+//! The [`Planner`] builder: the single entry point for turning fitted
+//! model sets plus a workload into an assignment. It owns normalization
+//! and cost construction — callers no longer hand-wire `Normalizer` →
+//! `CostMatrix`/`BucketedProblem` → `solve_*`.
+//!
+//! ```no_run
+//! use ecoserve::plan::{Planner, SolverKind};
+//! use ecoserve::scheduler::CapacityMode;
+//! # fn demo(sets: &[ecoserve::models::ModelSet],
+//! #         partition: &ecoserve::config::Partition,
+//! #         queries: &[ecoserve::workload::Query]) -> anyhow::Result<()> {
+//! let mut session = Planner::new(sets)
+//!     .partition(partition)
+//!     .capacity(CapacityMode::Eq3Only)
+//!     .zeta(0.5)
+//!     .solver(SolverKind::Bucketed)
+//!     .session(queries)?;
+//! session.solve()?;
+//! let plan = session.plan()?; // serializable artifact
+//! # let _ = plan;
+//! # Ok(())
+//! # }
+//! ```
+
+use super::session::PlanSession;
+use super::solver::SolverKind;
+use crate::config::Partition;
+use crate::models::ModelSet;
+use crate::scheduler::CapacityMode;
+use crate::workload::Query;
+
+/// Builder for planning sessions. Cheap to construct and reconfigure; the
+/// heavy state (grouping, costs, flow) lives in the [`PlanSession`] it
+/// creates.
+#[derive(Debug, Clone)]
+pub struct Planner<'a> {
+    sets: &'a [ModelSet],
+    gammas: Vec<f64>,
+    mode: CapacityMode,
+    zeta: f64,
+    solver: SolverKind,
+    seed: u64,
+}
+
+impl<'a> Planner<'a> {
+    /// Start from fitted model sets. Defaults: uniform γ, the paper's
+    /// literal Eq. 3 capacity reading, ζ = 0.5, the bucketed production
+    /// solver, seed 0.
+    pub fn new(sets: &'a [ModelSet]) -> Planner<'a> {
+        let k = sets.len().max(1);
+        Planner {
+            sets,
+            gammas: vec![1.0 / k as f64; sets.len()],
+            mode: CapacityMode::Eq3Only,
+            zeta: 0.5,
+            solver: SolverKind::Bucketed,
+            seed: 0,
+        }
+    }
+
+    /// Partition fractions from a validated [`Partition`].
+    pub fn partition(mut self, p: &Partition) -> Planner<'a> {
+        self.gammas = p.gammas.clone();
+        self
+    }
+
+    /// Partition fractions γ directly.
+    pub fn gammas(mut self, gammas: &[f64]) -> Planner<'a> {
+        self.gammas = gammas.to_vec();
+        self
+    }
+
+    /// How γ is read as capacity constraints (see [`CapacityMode`]).
+    pub fn capacity(mut self, mode: CapacityMode) -> Planner<'a> {
+        self.mode = mode;
+        self
+    }
+
+    /// The energy/accuracy blend ζ ∈ [0, 1].
+    pub fn zeta(mut self, zeta: f64) -> Planner<'a> {
+        assert!((0.0..=1.0).contains(&zeta), "zeta in [0,1]");
+        self.zeta = zeta;
+        self
+    }
+
+    /// Which backend solves the assignment (see [`SolverKind`]).
+    pub fn solver(mut self, kind: SolverKind) -> Planner<'a> {
+        self.solver = kind;
+        self
+    }
+
+    /// Seed for randomized backends (deterministic given the seed).
+    pub fn seed(mut self, seed: u64) -> Planner<'a> {
+        self.seed = seed;
+        self
+    }
+
+    /// Open a stateful session over a workload: groups shapes, scans the
+    /// normalization maxima, and blends the per-shape costs once. The
+    /// session owns copies of everything and carries warm-start state
+    /// across [`rezeta`](PlanSession::rezeta) /
+    /// [`extend`](PlanSession::extend) calls.
+    pub fn session(&self, queries: &[Query]) -> anyhow::Result<PlanSession> {
+        if self.sets.is_empty() {
+            anyhow::bail!("planner needs at least one model set");
+        }
+        if self.gammas.len() != self.sets.len() {
+            anyhow::bail!(
+                "{} gammas for {} models",
+                self.gammas.len(),
+                self.sets.len()
+            );
+        }
+        Ok(PlanSession::new(
+            self.sets.to_vec(),
+            self.gammas.clone(),
+            self.mode,
+            self.solver,
+            self.seed,
+            self.zeta,
+            queries,
+        ))
+    }
+
+    /// One-shot convenience: open a session, solve, and package the
+    /// artifact.
+    pub fn plan(&self, queries: &[Query]) -> anyhow::Result<super::Plan> {
+        self.session(queries)?.plan()
+    }
+}

@@ -1,0 +1,301 @@
+//! The stateful planning session: owns the workload, the shape grouping,
+//! the normalizer, the ζ-blended per-shape costs, and the solver's
+//! warm-start state — so repeated solves (ζ sweeps, arrival batches) reuse
+//! everything that is reusable.
+//!
+//! * [`PlanSession::rezeta`] re-blends the per-shape costs and re-solves
+//!   **without regrouping or renormalizing** (the grouping and the dynamic
+//!   normalization maxima are ζ-independent).
+//! * [`PlanSession::extend`] appends an arrival batch as shape-
+//!   multiplicity deltas. When no new shape appears and the normalizer is
+//!   unchanged, the costs are still valid and the bucketed backend
+//!   warm-starts its min-cost flow from the previous optimal
+//!   flow/potentials (ROADMAP: incremental re-solve); otherwise the costs
+//!   are rebuilt and the solve is cold — in both cases the result equals a
+//!   from-scratch solve of the cumulative workload.
+
+use super::artifact::Plan;
+use super::solver::{ProblemView, Solver, SolverKind, SolverState};
+use crate::models::{ModelSet, Normalizer};
+use crate::scheduler::{
+    capacity_bounds, evaluate, Assignment, BucketedProblem, CapacityMode, CostMatrix, Evaluation,
+    ShapeGroups,
+};
+use crate::workload::Query;
+use std::collections::HashMap;
+
+/// A planning session over a growing workload. Created by
+/// [`Planner::session`](crate::plan::Planner::session); fully owned (no
+/// borrows), so it can outlive the planner and cross thread boundaries.
+pub struct PlanSession {
+    sets: Vec<ModelSet>,
+    gammas: Vec<f64>,
+    mode: CapacityMode,
+    solver: Box<dyn Solver>,
+    solver_kind: SolverKind,
+    seed: u64,
+
+    queries: Vec<Query>,
+    bp: BucketedProblem,
+    /// shape key → index into `bp.groups.shapes` (incremental grouping)
+    shape_index: HashMap<u64, usize>,
+    norm: Normalizer,
+
+    zeta: f64,
+    /// ζ the cost matrix is currently blended at
+    costs_zeta: f64,
+    state: SolverState,
+    last: Option<Assignment>,
+}
+
+impl PlanSession {
+    pub(crate) fn new(
+        sets: Vec<ModelSet>,
+        gammas: Vec<f64>,
+        mode: CapacityMode,
+        solver_kind: SolverKind,
+        seed: u64,
+        zeta: f64,
+        queries: &[Query],
+    ) -> PlanSession {
+        let groups = crate::scheduler::group_by_shape(queries);
+        let shape_index: HashMap<u64, usize> = groups
+            .shapes
+            .iter()
+            .enumerate()
+            .map(|(i, sh)| (sh.key(), i))
+            .collect();
+        let norm = Normalizer::from_shapes(&sets, &groups.shapes);
+        let costs = CostMatrix::build_for_shapes(&sets, &norm, &groups.shapes, zeta);
+        PlanSession {
+            solver: solver_kind.instantiate(),
+            solver_kind,
+            sets,
+            gammas,
+            mode,
+            seed,
+            queries: queries.to_vec(),
+            bp: BucketedProblem { groups, costs },
+            shape_index,
+            norm,
+            zeta,
+            costs_zeta: zeta,
+            state: SolverState::default(),
+            last: None,
+        }
+    }
+
+    // ------------------------------------------------------------ accessors
+
+    pub fn n_queries(&self) -> usize {
+        self.queries.len()
+    }
+
+    pub fn n_shapes(&self) -> usize {
+        self.bp.groups.n_shapes()
+    }
+
+    pub fn zeta(&self) -> f64 {
+        self.zeta
+    }
+
+    pub fn sets(&self) -> &[ModelSet] {
+        &self.sets
+    }
+
+    pub fn queries(&self) -> &[Query] {
+        &self.queries
+    }
+
+    pub fn normalizer(&self) -> &Normalizer {
+        &self.norm
+    }
+
+    pub fn groups(&self) -> &ShapeGroups {
+        &self.bp.groups
+    }
+
+    /// The last computed assignment, if any solve ran.
+    pub fn assignment(&self) -> Option<&Assignment> {
+        self.last.as_ref()
+    }
+
+    /// Evaluate the last assignment in physical units over the session
+    /// workload.
+    pub fn evaluate(&self) -> Option<Evaluation> {
+        self.last
+            .as_ref()
+            .map(|a| evaluate(a, &self.sets, &self.queries))
+    }
+
+    /// Evaluate the suffix of the last assignment starting at session
+    /// query index `start` against externally supplied "real" queries
+    /// (e.g. oracle lengths when the session planned on predicted ones).
+    pub fn evaluate_tail(&self, start: usize, real: &[Query]) -> Option<Evaluation> {
+        let a = self.last.as_ref()?;
+        if start + real.len() != a.model_of.len() {
+            return None;
+        }
+        let sub = Assignment {
+            model_of: a.model_of[start..].to_vec(),
+            objective: f64::NAN,
+        };
+        Some(evaluate(&sub, &self.sets, real))
+    }
+
+    // -------------------------------------------------------------- solving
+
+    fn caps(&self) -> Vec<usize> {
+        capacity_bounds(self.mode, &self.gammas, self.queries.len())
+    }
+
+    /// Re-blend the costs if ζ drifted from what the matrix holds.
+    fn ensure_costs(&mut self) {
+        if self.zeta != self.costs_zeta {
+            self.bp.set_zeta(&self.sets, &self.norm, self.zeta);
+            self.costs_zeta = self.zeta;
+            self.state.invalidate();
+            self.last = None;
+        }
+    }
+
+    fn run_solve(&mut self) -> anyhow::Result<()> {
+        let caps = self.caps();
+        let view = ProblemView {
+            sets: &self.sets,
+            queries: &self.queries,
+            bp: &self.bp,
+            caps: &caps,
+            seed: self.seed,
+        };
+        self.last = Some(self.solver.solve(&view, &mut self.state)?);
+        Ok(())
+    }
+
+    /// Solve the current instance (no-op if already solved at this ζ and
+    /// workload). Returns the assignment.
+    pub fn solve(&mut self) -> anyhow::Result<&Assignment> {
+        self.ensure_costs();
+        if self.last.is_none() {
+            self.run_solve()?;
+        }
+        Ok(self.last.as_ref().unwrap())
+    }
+
+    /// Set the operating point without solving; the next
+    /// [`solve`](PlanSession::solve)/[`extend`](PlanSession::extend) picks
+    /// it up. (Lets a ζ change and an arrival batch share one solve.)
+    pub fn set_zeta(&mut self, zeta: f64) {
+        assert!((0.0..=1.0).contains(&zeta), "zeta in [0,1]");
+        if zeta != self.zeta {
+            self.zeta = zeta;
+            self.last = None;
+        }
+    }
+
+    /// Re-solve at a new ζ: re-blends the cached per-shape costs in place
+    /// and solves — no regrouping, no normalizer rescan.
+    pub fn rezeta(&mut self, zeta: f64) -> anyhow::Result<&Assignment> {
+        self.set_zeta(zeta);
+        self.solve()
+    }
+
+    /// Append an arrival batch and re-solve the cumulative workload.
+    ///
+    /// The grouping is updated incrementally (one hash probe per query).
+    /// If the batch introduces no new shape and leaves the normalization
+    /// maxima unchanged, the cost matrix is untouched and the solver may
+    /// warm-start from its previous optimum; otherwise costs are rebuilt
+    /// and the solve is cold. Either way the returned assignment equals a
+    /// from-scratch solve of the cumulative workload (cross-checked to
+    /// 1e-9 in `tests/plan.rs`).
+    pub fn extend(&mut self, batch: &[Query]) -> anyhow::Result<&Assignment> {
+        if batch.is_empty() {
+            return self.solve();
+        }
+        let mut new_shapes = false;
+        for q in batch {
+            self.queries.push(*q);
+            let sh = q.shape();
+            let groups = &mut self.bp.groups;
+            match self.shape_index.entry(sh.key()) {
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    let i = *e.get();
+                    groups.multiplicity[i] += 1;
+                    groups.shape_of.push(i);
+                }
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    new_shapes = true;
+                    groups.shapes.push(sh);
+                    groups.multiplicity.push(1);
+                    groups.shape_of.push(groups.shapes.len() - 1);
+                    v.insert(groups.shapes.len() - 1);
+                }
+            }
+        }
+        self.last = None;
+
+        // Dynamic normalization: maxima can only grow, and only when a new
+        // shape arrives.
+        let mut norm_changed = false;
+        if new_shapes {
+            let norm = Normalizer::from_shapes(&self.sets, &self.bp.groups.shapes);
+            norm_changed = norm.max_energy_j != self.norm.max_energy_j
+                || norm.max_accuracy != self.norm.max_accuracy
+                || norm.max_runtime_s != self.norm.max_runtime_s;
+            self.norm = norm;
+        }
+
+        let zeta_changed = self.zeta != self.costs_zeta;
+        if new_shapes || norm_changed || zeta_changed {
+            // Costs are stale: cold path. New rows (or new maxima) need a
+            // fresh matrix; a pure ζ change re-blends the existing
+            // allocation in place.
+            if new_shapes || norm_changed {
+                self.bp.costs = CostMatrix::build_for_shapes(
+                    &self.sets,
+                    &self.norm,
+                    &self.bp.groups.shapes,
+                    self.zeta,
+                );
+            } else {
+                self.bp.set_zeta(&self.sets, &self.norm, self.zeta);
+            }
+            self.costs_zeta = self.zeta;
+            self.state.invalidate();
+            self.run_solve()?;
+        } else {
+            // Costs valid; only multiplicities/capacities grew: the
+            // backend may warm-start.
+            let caps = self.caps();
+            let view = ProblemView {
+                sets: &self.sets,
+                queries: &self.queries,
+                bp: &self.bp,
+                caps: &caps,
+                seed: self.seed,
+            };
+            self.last = Some(self.solver.extend(&view, &mut self.state)?);
+        }
+        Ok(self.last.as_ref().unwrap())
+    }
+
+    // ------------------------------------------------------------ artifacts
+
+    /// Package the current optimum as a serializable [`Plan`] artifact
+    /// (solving first if needed).
+    pub fn plan(&mut self) -> anyhow::Result<Plan> {
+        self.solve()?;
+        let a = self.last.as_ref().unwrap();
+        Ok(Plan::from_solution(
+            &self.sets,
+            &self.gammas,
+            self.mode,
+            &self.solver_kind.label(),
+            self.zeta,
+            &self.norm,
+            &self.bp.groups,
+            a,
+        ))
+    }
+}

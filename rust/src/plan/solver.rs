@@ -1,0 +1,290 @@
+//! The pluggable solver backends behind the planning facade: one
+//! object-safe [`Solver`] trait unifying the exact bucketed transportation
+//! reduction, the dense per-query MCMF, the greedy heuristic, and the
+//! query-independent baselines — plus [`SolverState`], the reusable
+//! buffers (dense cost expansion, last optimal flow/potentials) a
+//! [`PlanSession`](crate::plan::PlanSession) carries between solves.
+//!
+//! This trait is the extension point for future backends (the ROADMAP's
+//! network-simplex alternative slots in as another `Solver` impl and a
+//! `SolverKind` variant, cross-checked by the existing 1e-9 equivalence
+//! properties).
+
+use crate::models::ModelSet;
+use crate::scheduler::baselines;
+use crate::scheduler::{
+    solve_exact_caps, solve_greedy_caps, Assignment, BucketedFlow, BucketedProblem, CostMatrix,
+};
+use crate::util::Rng;
+use crate::workload::Query;
+
+/// Which backend a [`Planner`](crate::plan::Planner) instantiates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverKind {
+    /// Shape-bucketed exact transportation solve (the production path;
+    /// supports warm-started extension).
+    Bucketed,
+    /// Dense per-query min-cost flow (exactness cross-check).
+    Dense,
+    /// Regret-ordered greedy heuristic (ablation baseline).
+    Greedy,
+    /// Cyclic query-independent baseline.
+    RoundRobin,
+    /// Uniform-random query-independent baseline (seeded by the planner).
+    Random,
+    /// Everything to one model (index).
+    Single(usize),
+}
+
+impl SolverKind {
+    /// Stable textual name (used in CLI flags and [`Plan`] artifacts).
+    ///
+    /// [`Plan`]: crate::plan::Plan
+    pub fn label(&self) -> String {
+        match self {
+            SolverKind::Bucketed => "bucketed".to_string(),
+            SolverKind::Dense => "dense".to_string(),
+            SolverKind::Greedy => "greedy".to_string(),
+            SolverKind::RoundRobin => "round-robin".to_string(),
+            SolverKind::Random => "random".to_string(),
+            SolverKind::Single(k) => format!("single:{k}"),
+        }
+    }
+
+    /// Parse the CLI spelling (`bucketed|dense|greedy|round-robin|random|single:K`).
+    pub fn parse(s: &str) -> anyhow::Result<SolverKind> {
+        Ok(match s {
+            "bucketed" => SolverKind::Bucketed,
+            "dense" => SolverKind::Dense,
+            "greedy" => SolverKind::Greedy,
+            "round-robin" => SolverKind::RoundRobin,
+            "random" => SolverKind::Random,
+            other => {
+                if let Some(k) = other.strip_prefix("single:") {
+                    SolverKind::Single(k.parse().map_err(|_| {
+                        anyhow::anyhow!("single:K expects a model index, got '{k}'")
+                    })?)
+                } else {
+                    anyhow::bail!(
+                        "unknown solver '{other}' \
+                         (expected bucketed|dense|greedy|round-robin|random|single:K)"
+                    );
+                }
+            }
+        })
+    }
+
+    /// Instantiate the backend.
+    pub fn instantiate(self) -> Box<dyn Solver> {
+        match self {
+            SolverKind::Bucketed => Box::new(BucketedSolver),
+            SolverKind::Dense => Box::new(DenseSolver),
+            SolverKind::Greedy => Box::new(GreedySolver),
+            SolverKind::RoundRobin => Box::new(RoundRobinSolver),
+            SolverKind::Random => Box::new(RandomSolver),
+            SolverKind::Single(k) => Box::new(SingleSolver(k)),
+        }
+    }
+}
+
+/// Everything a backend needs to solve the session's current instance.
+/// Borrowed from the session per call so backends stay stateless; state
+/// that outlives a call goes in [`SolverState`].
+pub struct ProblemView<'a> {
+    pub sets: &'a [ModelSet],
+    pub queries: &'a [Query],
+    /// Shape grouping + per-shape ζ-blended costs.
+    pub bp: &'a BucketedProblem,
+    /// Per-model capacity upper bounds (Eq. 3 lower bound is implicit).
+    pub caps: &'a [usize],
+    /// Deterministic seed for randomized backends.
+    pub seed: u64,
+}
+
+/// Reusable solver buffers, owned by the session and invalidated whenever
+/// the cost matrix changes (ζ step, normalizer change, new shapes).
+#[derive(Debug, Default)]
+pub struct SolverState {
+    /// The solved transportation graph with its optimal flow — the warm
+    /// start for multiplicity-delta extensions.
+    pub(crate) flow: Option<BucketedFlow>,
+    /// Dense per-query expansion of the shape-level costs (dense/greedy
+    /// backends).
+    pub(crate) dense: Option<CostMatrix>,
+}
+
+impl SolverState {
+    /// Drop everything derived from the current costs/grouping.
+    pub fn invalidate(&mut self) {
+        self.flow = None;
+        self.dense = None;
+    }
+}
+
+/// An assignment backend. Object-safe: sessions hold `Box<dyn Solver>`
+/// (identity lives in [`SolverKind`], which the session also carries).
+pub trait Solver {
+    /// Solve the instance from scratch, leaving any warm-start state for
+    /// subsequent calls in `state`.
+    fn solve(&self, p: &ProblemView<'_>, state: &mut SolverState)
+        -> anyhow::Result<Assignment>;
+
+    /// Re-solve after the session applied shape-multiplicity deltas
+    /// (costs unchanged, supplies/capacities grown). Backends without
+    /// incremental structure fall back to a cold solve.
+    fn extend(
+        &self,
+        p: &ProblemView<'_>,
+        state: &mut SolverState,
+    ) -> anyhow::Result<Assignment> {
+        state.invalidate();
+        self.solve(p, state)
+    }
+}
+
+/// Expand the per-shape cost rows to a dense per-query matrix (model-major
+/// construction, one O(|Q|·K) pass).
+fn expand_dense(bp: &BucketedProblem) -> CostMatrix {
+    let nm = bp.n_models();
+    let rows: Vec<Vec<f64>> = (0..nm)
+        .map(|k| {
+            bp.groups
+                .shape_of
+                .iter()
+                .map(|&s| bp.costs.cost(k, s))
+                .collect()
+        })
+        .collect();
+    CostMatrix::from_rows(rows)
+}
+
+fn dense_of<'s>(p: &ProblemView<'_>, state: &'s mut SolverState) -> &'s CostMatrix {
+    if state.dense.is_none() {
+        state.dense = Some(expand_dense(p.bp));
+    }
+    state.dense.as_ref().unwrap()
+}
+
+/// Objective of a query-independent assignment under the session costs
+/// (the legacy baselines report NaN; the facade reports the real blend).
+fn objective_of(bp: &BucketedProblem, model_of: &[usize]) -> f64 {
+    model_of
+        .iter()
+        .zip(&bp.groups.shape_of)
+        .map(|(&k, &s)| bp.costs.cost(k, s))
+        .sum()
+}
+
+/// The production backend: exact at shape granularity, warm-extensible.
+struct BucketedSolver;
+
+impl Solver for BucketedSolver {
+    fn solve(&self, p: &ProblemView<'_>, state: &mut SolverState)
+        -> anyhow::Result<Assignment> {
+        state.invalidate();
+        let mut flow = BucketedFlow::build(p.bp, p.caps)?;
+        flow.solve()?;
+        let a = flow.assignment(p.bp);
+        state.flow = Some(flow);
+        Ok(a)
+    }
+
+    fn extend(
+        &self,
+        p: &ProblemView<'_>,
+        state: &mut SolverState,
+    ) -> anyhow::Result<Assignment> {
+        state.dense = None;
+        if let Some(flow) = state.flow.as_mut() {
+            if flow.extend(&p.bp.groups.multiplicity, p.caps)? {
+                return Ok(flow.assignment(p.bp));
+            }
+        }
+        self.solve(p, state)
+    }
+}
+
+/// Dense per-query exact solve (cross-check path).
+struct DenseSolver;
+
+impl Solver for DenseSolver {
+    fn solve(&self, p: &ProblemView<'_>, state: &mut SolverState)
+        -> anyhow::Result<Assignment> {
+        state.flow = None;
+        let dense = dense_of(p, state);
+        solve_exact_caps(dense, p.caps)
+    }
+}
+
+/// Regret-ordered greedy heuristic.
+struct GreedySolver;
+
+impl Solver for GreedySolver {
+    fn solve(&self, p: &ProblemView<'_>, state: &mut SolverState)
+        -> anyhow::Result<Assignment> {
+        state.flow = None;
+        let dense = dense_of(p, state);
+        solve_greedy_caps(dense, p.caps)
+    }
+}
+
+struct RoundRobinSolver;
+
+impl Solver for RoundRobinSolver {
+    fn solve(&self, p: &ProblemView<'_>, state: &mut SolverState)
+        -> anyhow::Result<Assignment> {
+        state.invalidate();
+        let mut a = baselines::round_robin(p.queries, p.sets.len());
+        a.objective = objective_of(p.bp, &a.model_of);
+        Ok(a)
+    }
+}
+
+struct RandomSolver;
+
+impl Solver for RandomSolver {
+    fn solve(&self, p: &ProblemView<'_>, state: &mut SolverState)
+        -> anyhow::Result<Assignment> {
+        state.invalidate();
+        let mut rng = Rng::new(p.seed ^ p.queries.len() as u64);
+        let mut a = baselines::random(p.queries, p.sets.len(), &mut rng);
+        a.objective = objective_of(p.bp, &a.model_of);
+        Ok(a)
+    }
+}
+
+struct SingleSolver(usize);
+
+impl Solver for SingleSolver {
+    fn solve(&self, p: &ProblemView<'_>, state: &mut SolverState)
+        -> anyhow::Result<Assignment> {
+        state.invalidate();
+        if self.0 >= p.sets.len() {
+            anyhow::bail!("single:{} out of range ({} models)", self.0, p.sets.len());
+        }
+        let mut a = baselines::single_model(p.queries, self.0);
+        a.objective = objective_of(p.bp, &a.model_of);
+        Ok(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_labels_roundtrip_through_parse() {
+        for kind in [
+            SolverKind::Bucketed,
+            SolverKind::Dense,
+            SolverKind::Greedy,
+            SolverKind::RoundRobin,
+            SolverKind::Random,
+            SolverKind::Single(2),
+        ] {
+            assert_eq!(SolverKind::parse(&kind.label()).unwrap(), kind);
+        }
+        assert!(SolverKind::parse("simplex").is_err());
+        assert!(SolverKind::parse("single:x").is_err());
+    }
+}

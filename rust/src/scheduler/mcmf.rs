@@ -101,6 +101,15 @@ impl MinCostFlow {
         self.cap[self.rev[handle.0 as usize] as usize]
     }
 
+    /// Grow the capacity of a previously added forward edge in place.
+    /// Adds to the *residual* forward capacity, i.e. the edge's total
+    /// capacity increases by `delta` regardless of current flow. The CSR
+    /// index stays valid because no edge is added or removed.
+    pub fn add_capacity(&mut self, handle: EdgeHandle, delta: i64) {
+        assert!(delta >= 0, "capacity can only grow");
+        self.cap[handle.0 as usize] += delta;
+    }
+
     /// Build the CSR adjacency index (counting sort of edge ids by tail
     /// node). The tail of edge `e` is `to[rev[e]]`.
     fn build_csr(&mut self) {
@@ -191,6 +200,121 @@ impl MinCostFlow {
         debug_assert!(!more || !self.relax_sweep(&mut pot), "not a layered DAG");
         let _ = more;
         self.augment_loop(s, t, max_flow, pot)
+    }
+
+    /// Cancel negative-cost cycles in the residual graph, pushing the
+    /// bottleneck around each, until none remain. Returns the (non-
+    /// positive) total cost change.
+    ///
+    /// After capacities grow on a solved graph, the existing flow can stop
+    /// being min-cost *for its own value*: the new residual capacity can
+    /// expose cheaper routings as negative residual cycles (typically
+    /// running through source and sink — trade a routed unit of one supply
+    /// for a now-available cheaper unit of another). Canceling them
+    /// restores the extremality invariant that successive shortest paths
+    /// needs to resume exactly. Detection is Bellman–Ford with an implicit
+    /// virtual source (all distances start at 0), so cycles anywhere in
+    /// the graph are found; each cancellation strictly decreases residual
+    /// cost, so the loop terminates on integer costs.
+    pub fn cancel_negative_cycles(&mut self) -> i64 {
+        self.build_csr();
+        let n = self.n_nodes;
+        if n == 0 {
+            return 0;
+        }
+        let mut total_delta = 0i64;
+        let mut dist = vec![0i64; n];
+        let mut parent_edge = vec![u32::MAX; n];
+        loop {
+            dist.fill(0);
+            parent_edge.fill(u32::MAX);
+            let mut last_relaxed = usize::MAX;
+            for _ in 0..n {
+                last_relaxed = usize::MAX;
+                for u in 0..n {
+                    for &e in self.out(u) {
+                        let e = e as usize;
+                        if self.cap[e] <= 0 {
+                            continue;
+                        }
+                        let v = self.to[e] as usize;
+                        if dist[u] + self.cost[e] < dist[v] {
+                            dist[v] = dist[u] + self.cost[e];
+                            parent_edge[v] = e as u32;
+                            last_relaxed = v;
+                        }
+                    }
+                }
+                if last_relaxed == usize::MAX {
+                    break;
+                }
+            }
+            if last_relaxed == usize::MAX {
+                return total_delta; // settled: no negative cycle remains
+            }
+            // Still relaxing after n sweeps: `last_relaxed` is reachable
+            // from a predecessor-graph cycle (which has negative cost);
+            // n parent steps are guaranteed to land on the cycle.
+            let mut y = last_relaxed;
+            for _ in 0..n {
+                y = self.to[self.rev[parent_edge[y] as usize] as usize] as usize;
+            }
+            // Collect the cycle through y, then push its bottleneck.
+            let mut cycle: Vec<usize> = Vec::new();
+            let mut v = y;
+            loop {
+                let e = parent_edge[v] as usize;
+                cycle.push(e);
+                v = self.to[self.rev[e] as usize] as usize;
+                if v == y {
+                    break;
+                }
+            }
+            let bottleneck = cycle.iter().map(|&e| self.cap[e]).min().unwrap();
+            debug_assert!(bottleneck > 0);
+            for &e in &cycle {
+                self.cap[e] -= bottleneck;
+                self.cap[self.rev[e] as usize] += bottleneck;
+                total_delta += bottleneck * self.cost[e];
+            }
+            debug_assert!(total_delta < 0, "canceled cycle must cut cost");
+        }
+    }
+
+    /// Resume augmentation from the *current* flow (warm start): push up to
+    /// `additional_flow` more units from `s` to `t` on top of whatever the
+    /// graph already carries.
+    ///
+    /// Valid after capacities were grown with [`MinCostFlow::add_capacity`]
+    /// (e.g. a transportation instance whose supplies/demands increased by
+    /// deltas). Negative residual cycles exposed by the new capacity are
+    /// canceled first ([`MinCostFlow::cancel_negative_cycles`]), restoring
+    /// a min-cost flow at the current value; potentials are then re-derived
+    /// by Bellman–Ford relaxation sweeps and successive shortest paths
+    /// resume — which is exact: SSP from an extreme flow with valid
+    /// potentials yields the true optimum at every larger value. The
+    /// returned cost includes the (negative) cycle-cancellation delta, so
+    /// it composes additively with earlier results. `None` is returned only
+    /// if the potentials unexpectedly fail to settle (a safety net; cannot
+    /// happen after cancellation).
+    pub fn solve_warm(&mut self, s: usize, t: usize, additional_flow: i64) -> Option<FlowResult> {
+        self.build_csr();
+        let cancel_delta = self.cancel_negative_cycles();
+        let mut pot = vec![INF; self.n_nodes];
+        pot[s] = 0;
+        let mut settled = false;
+        for _ in 0..=self.n_nodes {
+            if !self.relax_sweep(&mut pot) {
+                settled = true;
+                break;
+            }
+        }
+        if !settled {
+            return None; // unreachable after cancellation; defensive
+        }
+        let mut r = self.augment_loop(s, t, additional_flow, pot);
+        r.cost += cancel_delta;
+        Some(r)
     }
 
     /// Successive shortest augmenting paths with reusable Dijkstra buffers
@@ -436,6 +560,59 @@ mod tests {
         let r = g.solve_layered(0, 2, 1_000_000);
         assert_eq!(r.flow, 1_000_000);
         assert_eq!(r.cost, 5_000_000);
+    }
+
+    #[test]
+    fn warm_start_matches_cold_on_grown_transportation() {
+        // Solve a small transportation instance, grow supplies/sink caps,
+        // warm-continue, and compare against a cold solve of the grown
+        // instance: total cost must agree exactly.
+        // nodes: 0=s, 1..2 shapes, 3..4 models, 5=t
+        let costs = [[3i64, 7], [6, 2]];
+        let build = |mult: [i64; 2], caps: [i64; 2]| {
+            let mut g = MinCostFlow::new(6);
+            let mut src = Vec::new();
+            let mut mid = Vec::new();
+            let mut snk = Vec::new();
+            for i in 0..2 {
+                src.push(g.add_edge(0, 1 + i, mult[i], 0));
+                for k in 0..2 {
+                    mid.push(g.add_edge(1 + i, 3 + k, mult[i] + 10, costs[i][k]));
+                }
+            }
+            for k in 0..2 {
+                snk.push(g.add_edge(3 + k, 5, caps[k], 0));
+            }
+            (g, src, mid, snk)
+        };
+
+        let (mut warm, src, _, snk) = build([2, 2], [2, 2]);
+        let r0 = warm.solve_layered(0, 5, 4);
+        assert_eq!(r0.flow, 4);
+
+        // Grow: +3 on shape 0, +1 on shape 1; sinks +2 each.
+        warm.add_capacity(src[0], 3);
+        warm.add_capacity(src[1], 1);
+        warm.add_capacity(snk[0], 2);
+        warm.add_capacity(snk[1], 2);
+        let r1 = warm.solve_warm(0, 5, 4).expect("warm start settles");
+        assert_eq!(r1.flow, 4);
+
+        let (mut cold, _, _, _) = build([5, 3], [4, 4]);
+        let rc = cold.solve_layered(0, 5, 8);
+        assert_eq!(rc.flow, 8);
+        assert_eq!(rc.cost, r0.cost + r1.cost, "warm continuation must stay optimal");
+    }
+
+    #[test]
+    fn warm_start_with_zero_additional_flow_is_noop() {
+        let mut g = MinCostFlow::new(3);
+        let h = g.add_edge(0, 1, 2, 1);
+        g.add_edge(1, 2, 2, 1);
+        g.solve_layered(0, 2, 2);
+        let r = g.solve_warm(0, 2, 0).unwrap();
+        assert_eq!(r, FlowResult { flow: 0, cost: 0 });
+        assert_eq!(g.flow_on(h), 2);
     }
 
     #[test]

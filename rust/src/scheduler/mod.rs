@@ -3,6 +3,14 @@
 //! paper's PuLP ILP), greedy and query-independent baselines, and the
 //! Fig. 3 ζ sweep.
 //!
+//! Callers should normally go through the [`crate::plan`] facade
+//! ([`Planner`](crate::plan::Planner) →
+//! [`PlanSession`](crate::plan::PlanSession)) rather than hand-wiring
+//! `Normalizer` → `CostMatrix`/`BucketedProblem` → `solve_*`: the session
+//! caches the shape grouping, the normalizer, and the last optimal flow,
+//! so ζ re-solves and arrival-batch extensions reuse work. The pieces
+//! below are the engines underneath that facade.
+//!
 //! # Scaling: the shape-bucketing invariant
 //!
 //! The paper's workload models (Eqs. 6–7) — and therefore the Eq. 2 cost
@@ -48,6 +56,6 @@ pub use problem::{
 };
 pub use solve::{
     solve_exact, solve_exact_bucketed, solve_exact_bucketed_mode, solve_exact_caps,
-    solve_exact_mode, solve_greedy, solve_greedy_caps,
+    solve_exact_mode, solve_greedy, solve_greedy_caps, BucketedFlow,
 };
 pub use zeta::{sweep, sweep_mode, ZetaPoint, ZetaSweep};

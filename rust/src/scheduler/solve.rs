@@ -3,6 +3,14 @@
 //! transportation reduction that scales it to million-query workloads,
 //! and a greedy heuristic used as an ablation baseline.
 //!
+//! **Prefer the [`crate::plan`] facade.** [`Planner`](crate::plan::Planner)
+//! owns normalization and cost construction, a
+//! [`PlanSession`](crate::plan::PlanSession) caches the shape grouping and
+//! warm-start state across ζ steps and arrival batches, and
+//! [`SolverKind`](crate::plan::SolverKind) selects among the backends
+//! below. The free functions here are the underlying engines and remain
+//! public for direct use and cross-checking.
+//!
 //! # Which solver to use
 //!
 //! * [`solve_exact_bucketed`] — the production path. Solves at *shape*
@@ -11,6 +19,8 @@
 //!   Exactness is preserved because queries of equal shape have identical
 //!   cost rows (see `scheduler::problem`), so any optimal shape-level flow
 //!   expands to an optimal per-query assignment with the same objective.
+//!   It is a thin wrapper over [`BucketedFlow`], the stateful core that
+//!   also supports warm-started incremental re-solves.
 //! * [`solve_exact_caps`] — the dense per-query graph (|Q|·K edges). Same
 //!   optimum; kept as the exactness cross-check and for cost matrices that
 //!   did not come from a shape-parameterized workload.
@@ -95,82 +105,221 @@ pub fn solve_exact_caps(costs: &CostMatrix, caps: &[usize]) -> anyhow::Result<As
     })
 }
 
-/// Solve exactly at *shape* granularity and expand back to queries.
+/// The stateful core of the shape-bucketed exact solver: the transportation
+/// graph with its edge handles kept, so a solved instance can be *extended*
+/// in place (multiplicity/capacity deltas + warm-started augmentation from
+/// the previous optimal flow and potentials) instead of re-solved from
+/// scratch. [`solve_exact_bucketed`] wraps it for the one-shot case; the
+/// [`crate::plan`] session drives the incremental case.
 ///
 /// Graph: source → shape i (cap mᵢ) → model k (cap mᵢ, cost c_ki) → sink
 /// (same Eq. 3 reward split as the dense graph). The graph has
 /// 2 + S + K nodes and S·(K+1) + 2K arcs — independent of |Q| — and each
 /// augmentation moves a whole bottleneck of flow, so a 10⁶-query workload
 /// with a few hundred distinct shapes solves as a few-hundred-node flow.
-///
-/// Expansion assigns, per shape, its member queries (in original order) to
-/// models in ascending model index, consuming the shape→model flows. Any
-/// expansion of an optimal shape-level flow is optimal for the per-query
-/// problem because same-shape queries share a cost row.
-pub fn solve_exact_bucketed(bp: &BucketedProblem, caps: &[usize]) -> anyhow::Result<Assignment> {
-    let ns = bp.groups.n_shapes();
-    let nq = bp.n_queries();
-    let nm = bp.n_models();
-    if bp.costs.n_queries != ns {
-        anyhow::bail!(
-            "bucketed cost matrix has {} rows, expected one per shape ({ns})",
-            bp.costs.n_queries
-        );
-    }
-    check_feasible(nq, nm, caps)?;
+#[derive(Debug, Clone)]
+pub struct BucketedFlow {
+    g: MinCostFlow,
+    /// shape→model arcs, shape-major (`i * nm + k`)
+    shape_model: Vec<EdgeHandle>,
+    /// source→shape arcs (supply = multiplicity)
+    source: Vec<EdgeHandle>,
+    /// the cap-(u_k−1) zero-cost model→sink arcs (grown on extension)
+    sink_zero: Vec<EdgeHandle>,
+    mult: Vec<usize>,
+    caps: Vec<usize>,
+    ns: usize,
+    nm: usize,
+    /// total flow routed so far (== Σ mult once solved)
+    routed: i64,
+}
 
-    let reward = eq3_reward(nq);
-
-    // Node layout: 0 = source, 1..=ns shapes, ns+1..=ns+nm models, last = sink.
-    let s = 0usize;
-    let t = ns + nm + 1;
-    let snode = |i: usize| 1 + i;
-    let mnode = |k: usize| 1 + ns + k;
-
-    let mut g = MinCostFlow::new(t + 1);
-    let mut handles: Vec<EdgeHandle> = Vec::with_capacity(ns * nm);
-    for i in 0..ns {
-        let mult = bp.groups.multiplicity[i] as i64;
-        g.add_edge(s, snode(i), mult, 0);
-        let row = bp.costs.row(i);
-        for (k, &c) in row.iter().enumerate() {
-            let c = (c * COST_SCALE).round() as i64;
-            handles.push(g.add_edge(snode(i), mnode(k), mult, c));
+impl BucketedFlow {
+    /// Build the (unsolved) transportation graph for a bucketed instance.
+    pub fn build(bp: &BucketedProblem, caps: &[usize]) -> anyhow::Result<BucketedFlow> {
+        let ns = bp.groups.n_shapes();
+        let nq = bp.n_queries();
+        let nm = bp.n_models();
+        if bp.costs.n_queries != ns {
+            anyhow::bail!(
+                "bucketed cost matrix has {} rows, expected one per shape ({ns})",
+                bp.costs.n_queries
+            );
         }
-    }
-    for (k, &cap) in caps.iter().enumerate() {
-        g.add_edge(mnode(k), t, 1, -reward);
-        if cap > 1 {
-            g.add_edge(mnode(k), t, cap as i64 - 1, 0);
-        }
-    }
+        check_feasible(nq, nm, caps)?;
 
-    let r = g.solve_layered(s, t, nq as i64);
-    if r.flow != nq as i64 {
-        anyhow::bail!("infeasible: routed {}/{} queries", r.flow, nq);
-    }
+        let reward = eq3_reward(nq);
 
-    // Expand shape-level flows to per-query assignments.
-    let members = bp.groups.members();
-    let mut model_of = vec![usize::MAX; nq];
-    let mut objective = 0.0f64;
-    for (i, mem) in members.iter().enumerate() {
-        let mut cursor = 0usize;
-        for k in 0..nm {
-            let f = g.flow_on(handles[i * nm + k]);
-            objective += f as f64 * bp.costs.cost(k, i);
-            for _ in 0..f {
-                model_of[mem[cursor] as usize] = k;
-                cursor += 1;
+        // Node layout: 0 = source, 1..=ns shapes, ns+1..=ns+nm models, last = sink.
+        let t = ns + nm + 1;
+        let snode = |i: usize| 1 + i;
+        let mnode = |k: usize| 1 + ns + k;
+
+        let mut g = MinCostFlow::new(t + 1);
+        let mut shape_model: Vec<EdgeHandle> = Vec::with_capacity(ns * nm);
+        let mut source: Vec<EdgeHandle> = Vec::with_capacity(ns);
+        for i in 0..ns {
+            let mult = bp.groups.multiplicity[i] as i64;
+            source.push(g.add_edge(0, snode(i), mult, 0));
+            let row = bp.costs.row(i);
+            for (k, &c) in row.iter().enumerate() {
+                let c = (c * COST_SCALE).round() as i64;
+                shape_model.push(g.add_edge(snode(i), mnode(k), mult, c));
             }
         }
-        debug_assert_eq!(cursor, mem.len(), "shape {i}: flow != multiplicity");
+        // The reward arc enforces Eq. 3 (≥ 1 query per model); the
+        // zero-cost arc carries the rest and is added even at capacity 0
+        // so extensions have a handle to grow.
+        let mut sink_zero: Vec<EdgeHandle> = Vec::with_capacity(nm);
+        for (k, &cap) in caps.iter().enumerate() {
+            g.add_edge(mnode(k), t, 1, -reward);
+            sink_zero.push(g.add_edge(mnode(k), t, (cap as i64 - 1).max(0), 0));
+        }
+
+        Ok(BucketedFlow {
+            g,
+            shape_model,
+            source,
+            sink_zero,
+            mult: bp.groups.multiplicity.clone(),
+            caps: caps.to_vec(),
+            ns,
+            nm,
+            routed: 0,
+        })
     }
-    debug_assert!(model_of.iter().all(|&m| m != usize::MAX));
-    Ok(Assignment {
-        model_of,
-        objective,
-    })
+
+    /// Route all outstanding supply (cold solve via the layered-DAG path).
+    pub fn solve(&mut self) -> anyhow::Result<()> {
+        let want: i64 = self.mult.iter().map(|&m| m as i64).sum::<i64>() - self.routed;
+        let t = self.ns + self.nm + 1;
+        let r = self.g.solve_layered(0, t, want);
+        if r.flow != want {
+            anyhow::bail!(
+                "infeasible: routed {}/{} queries",
+                self.routed + r.flow,
+                self.routed + want
+            );
+        }
+        self.routed += r.flow;
+        Ok(())
+    }
+
+    /// Apply multiplicity/capacity deltas and warm-start the augmentation
+    /// from the previous optimal flow. Returns `Ok(true)` on success;
+    /// `Ok(false)` when the instance cannot be warm-extended (shape count
+    /// changed, or a multiplicity or capacity shrank) — the caller should
+    /// then rebuild cold.
+    ///
+    /// Exactness: grown capacities can re-expose cheaper routings as
+    /// negative residual cycles; [`MinCostFlow::solve_warm`] cancels them
+    /// first (restoring a min-cost flow at the current value) and then
+    /// resumes successive shortest paths, which is exact from an extreme
+    /// flow. The Eq. 3 reward magnitude is capacity-independent (diverting
+    /// one query to an empty model changes the blend objective by < 2 cost
+    /// units, far below any reward), so keeping the original reward arcs
+    /// is harmless and the grown instance's optimum is reached exactly.
+    pub fn extend(&mut self, mult: &[usize], caps: &[usize]) -> anyhow::Result<bool> {
+        if mult.len() != self.ns || caps.len() != self.nm {
+            return Ok(false);
+        }
+        if mult
+            .iter()
+            .zip(&self.mult)
+            .any(|(new, old)| new < old)
+            || caps.iter().zip(&self.caps).any(|(new, old)| new < old)
+        {
+            return Ok(false); // shrinking supply/capacity needs a cold solve
+        }
+        // Deliberate conservative fallback: a declared-zero capacity is
+        // overstated by its Eq. 3 reward arc (effective 1, a pre-existing
+        // quirk unreachable via `capacity_bounds`), so growing it warm
+        // would compound the overstatement — rebuild cold instead.
+        if caps
+            .iter()
+            .zip(&self.caps)
+            .any(|(new, old)| *old == 0 && new > old)
+        {
+            return Ok(false);
+        }
+        let nq: usize = mult.iter().sum();
+        check_feasible(nq, self.nm, caps)?;
+
+        for (i, (&new, &old)) in mult.iter().zip(&self.mult).enumerate() {
+            let delta = (new - old) as i64;
+            if delta > 0 {
+                self.g.add_capacity(self.source[i], delta);
+                // shape→model arcs must carry up to the new multiplicity
+                for k in 0..self.nm {
+                    self.g.add_capacity(self.shape_model[i * self.nm + k], delta);
+                }
+            }
+        }
+        for (k, (&new, &old)) in caps.iter().zip(&self.caps).enumerate() {
+            let delta = (new - old) as i64;
+            if delta > 0 {
+                self.g.add_capacity(self.sink_zero[k], delta);
+            }
+        }
+
+        let extra = nq as i64 - self.routed;
+        let t = self.ns + self.nm + 1;
+        match self.g.solve_warm(0, t, extra) {
+            None => Ok(false),
+            Some(r) if r.flow == extra => {
+                self.routed += extra;
+                self.mult = mult.to_vec();
+                self.caps = caps.to_vec();
+                Ok(true)
+            }
+            Some(r) => anyhow::bail!(
+                "infeasible extension: routed {}/{} additional queries",
+                r.flow,
+                extra
+            ),
+        }
+    }
+
+    /// Expand the shape-level flows back to a per-query assignment under
+    /// the given bucketed instance (whose grouping must match this graph).
+    ///
+    /// Expansion assigns, per shape, its member queries (in original
+    /// order) to models in ascending model index, consuming the
+    /// shape→model flows. Any expansion of an optimal shape-level flow is
+    /// optimal for the per-query problem because same-shape queries share
+    /// a cost row.
+    pub fn assignment(&self, bp: &BucketedProblem) -> Assignment {
+        assert_eq!(bp.groups.n_shapes(), self.ns, "grouping drifted from graph");
+        let nq = bp.n_queries();
+        let members = bp.groups.members();
+        let mut model_of = vec![usize::MAX; nq];
+        let mut objective = 0.0f64;
+        for (i, mem) in members.iter().enumerate() {
+            let mut cursor = 0usize;
+            for k in 0..self.nm {
+                let f = self.g.flow_on(self.shape_model[i * self.nm + k]);
+                objective += f as f64 * bp.costs.cost(k, i);
+                for _ in 0..f {
+                    model_of[mem[cursor] as usize] = k;
+                    cursor += 1;
+                }
+            }
+            debug_assert_eq!(cursor, mem.len(), "shape {i}: flow != multiplicity");
+        }
+        debug_assert!(model_of.iter().all(|&m| m != usize::MAX));
+        Assignment {
+            model_of,
+            objective,
+        }
+    }
+}
+
+/// Solve exactly at *shape* granularity and expand back to queries — the
+/// one-shot wrapper over [`BucketedFlow`].
+pub fn solve_exact_bucketed(bp: &BucketedProblem, caps: &[usize]) -> anyhow::Result<Assignment> {
+    let mut flow = BucketedFlow::build(bp, caps)?;
+    flow.solve()?;
+    Ok(flow.assignment(bp))
 }
 
 /// Bucketed solve under a capacity mode derived from γ.

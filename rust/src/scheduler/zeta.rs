@@ -3,9 +3,9 @@
 //! mean runtime, and mean accuracy — against the flat baselines.
 
 use super::baselines;
-use super::problem::{evaluate, BucketedProblem, CapacityMode, Evaluation};
-use super::solve::solve_exact_bucketed_mode;
-use crate::models::{ModelSet, Normalizer};
+use super::problem::{evaluate, CapacityMode, Evaluation};
+use crate::models::ModelSet;
+use crate::plan::{Planner, SolverKind};
 use crate::util::Rng;
 use crate::workload::Query;
 
@@ -36,22 +36,23 @@ pub fn sweep_mode(
     rng: &mut Rng,
 ) -> anyhow::Result<ZetaSweep> {
     assert!(n_points >= 2);
-    let norm = Normalizer::from_workload(sets, queries);
 
-    // The shape grouping is ζ-independent: group once, re-blend the
-    // per-shape costs at each swept point (the bucketed solver is exact —
-    // see `scheduler::solve` — so the sweep is unchanged, just faster).
-    let mut bp = BucketedProblem::build(sets, &norm, queries, 0.0); // ζ₀ = 0
+    // One session for the whole sweep: the shape grouping and the
+    // normalizer are ζ-independent, so `rezeta` only re-blends the
+    // per-shape costs and re-solves (see `crate::plan`).
+    let mut session = Planner::new(sets)
+        .gammas(gammas)
+        .capacity(mode)
+        .zeta(0.0)
+        .solver(SolverKind::Bucketed)
+        .session(queries)?;
     let mut points = Vec::with_capacity(n_points);
     for i in 0..n_points {
         let zeta = i as f64 / (n_points - 1) as f64;
-        if i > 0 {
-            bp.set_zeta(sets, &norm, zeta);
-        }
-        let assignment = solve_exact_bucketed_mode(&bp, gammas, mode)?;
+        session.rezeta(zeta)?;
         points.push(ZetaPoint {
             zeta,
-            eval: evaluate(&assignment, sets, queries),
+            eval: session.evaluate().expect("solved above"),
         });
     }
 

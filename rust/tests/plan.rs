@@ -1,0 +1,327 @@
+//! Property and integration tests for the `ecoserve::plan` facade:
+//! artifact round-trips, ζ re-solve and warm-started extension
+//! equivalence (to 1e-9 against cold solves), and backend ordering
+//! (greedy never beats the exact optimum).
+
+use ecoserve::models::{AccuracyModel, ModelSet, Normalizer, Target, WorkloadModel};
+use ecoserve::plan::{Plan, Planner, SolverKind};
+use ecoserve::scheduler::{
+    capacity_bounds, group_by_shape, solve_exact_bucketed, BucketedProblem, CapacityMode,
+};
+use ecoserve::testkit::{forall, Config};
+use ecoserve::util::Rng;
+use ecoserve::workload::Query;
+
+/// Random paper-like model sets (same generator as tests/properties.rs).
+fn random_sets(rng: &mut Rng, n_models: usize) -> Vec<ModelSet> {
+    (0..n_models)
+        .map(|i| {
+            let scale = rng.range(0.5, 8.0);
+            ModelSet {
+                model_id: format!("m{i}"),
+                energy: WorkloadModel {
+                    model_id: format!("m{i}"),
+                    target: Target::EnergyJ,
+                    coefs: [0.5 * scale, 8.0 * scale, 0.003 * scale],
+                    r2: 0.97,
+                    f_stat: 1.0,
+                    p_value: 0.0,
+                    n_obs: 1,
+                },
+                runtime: WorkloadModel {
+                    model_id: format!("m{i}"),
+                    target: Target::RuntimeS,
+                    coefs: [1e-3, 1e-2, 1e-6],
+                    r2: 0.97,
+                    f_stat: 1.0,
+                    p_value: 0.0,
+                    n_obs: 1,
+                },
+                accuracy: AccuracyModel::new(&format!("m{i}"), rng.range(40.0, 70.0)),
+            }
+        })
+        .collect()
+}
+
+/// Workload drawn from a small shape table (heavy duplication — the
+/// bucketed regime).
+fn shaped_workload(
+    rng: &mut Rng,
+    table: &[(u32, u32)],
+    n: usize,
+    id0: usize,
+) -> Vec<Query> {
+    (0..n)
+        .map(|i| {
+            let (t_in, t_out) = table[rng.index(table.len())];
+            Query {
+                id: (id0 + i) as u32,
+                t_in,
+                t_out,
+            }
+        })
+        .collect()
+}
+
+fn random_table(rng: &mut Rng, n_shapes: usize) -> Vec<(u32, u32)> {
+    (0..n_shapes)
+        .map(|_| {
+            (
+                rng.int_range(1, 2048) as u32,
+                rng.int_range(1, 4096) as u32,
+            )
+        })
+        .collect()
+}
+
+fn random_gammas(rng: &mut Rng, k: usize) -> Vec<f64> {
+    let raw: Vec<f64> = (0..k).map(|_| rng.range(0.01, 1.0)).collect();
+    let sum: f64 = raw.iter().sum();
+    raw.iter().map(|g| g / sum).collect()
+}
+
+/// Cold reference: from-scratch bucketed solve of a workload (the exact
+/// hand-wired pipeline the facade replaced).
+fn cold_objective(
+    sets: &[ModelSet],
+    queries: &[Query],
+    gammas: &[f64],
+    mode: CapacityMode,
+    zeta: f64,
+) -> f64 {
+    let norm = Normalizer::from_shapes(sets, &group_by_shape(queries).shapes);
+    let bp = BucketedProblem::build(sets, &norm, queries, zeta);
+    let caps = capacity_bounds(mode, gammas, queries.len());
+    solve_exact_bucketed(&bp, &caps).unwrap().objective
+}
+
+#[test]
+fn plan_artifact_save_load_roundtrip_is_equal() {
+    let mut rng = Rng::new(0xA57);
+    let sets = random_sets(&mut rng, 3);
+    let table = random_table(&mut rng, 6);
+    let queries = shaped_workload(&mut rng, &table, 40, 0);
+
+    let mut session = Planner::new(&sets)
+        .gammas(&[0.2, 0.3, 0.5])
+        .capacity(CapacityMode::Eq3Only)
+        .zeta(0.4)
+        .session(&queries)
+        .unwrap();
+    let plan = session.plan().unwrap();
+
+    let path = std::path::Path::new(env!("CARGO_TARGET_TMPDIR")).join("roundtrip_plan.json");
+    plan.save(&path).unwrap();
+    let loaded = Plan::load(&path).unwrap();
+    assert_eq!(plan, loaded, "save→load must be lossless");
+    std::fs::remove_file(&path).ok();
+
+    // The artifact expands back onto the same workload with matching
+    // counts and objective.
+    let a = loaded.assignment_for(&queries).unwrap();
+    assert_eq!(
+        a.counts(sets.len()),
+        session.assignment().unwrap().counts(sets.len())
+    );
+    assert_eq!(a.objective, plan.objective);
+}
+
+#[test]
+fn prop_rezeta_matches_cold_solves_along_sweep() {
+    forall(Config::default().cases(20), |rng| {
+        let n_models = 2 + rng.index(3);
+        let sets = random_sets(rng, n_models);
+        let n_shapes = 2 + rng.index(5);
+        let table = random_table(rng, n_shapes);
+        let nq = n_models + rng.index(40);
+        let queries = shaped_workload(rng, &table, nq, 0);
+        let gammas = random_gammas(rng, n_models);
+        let mode = if rng.chance(0.5) {
+            CapacityMode::Eq3Only
+        } else {
+            CapacityMode::GammaHard
+        };
+
+        let mut session = Planner::new(&sets)
+            .gammas(&gammas)
+            .capacity(mode)
+            .zeta(0.0)
+            .session(&queries)
+            .unwrap();
+        for i in 0..5 {
+            let zeta = i as f64 / 4.0;
+            session.rezeta(zeta).unwrap();
+            let got = session.assignment().unwrap().objective;
+            let want = cold_objective(&sets, &queries, &gammas, mode, zeta);
+            assert!(
+                (got - want).abs() < 1e-9,
+                "zeta={zeta}: rezeta {got} vs cold {want}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_warm_extend_matches_cold_bucketed_solve() {
+    forall(Config::default().cases(25), |rng| {
+        let n_models = 2 + rng.index(3);
+        let sets = random_sets(rng, n_models);
+        let n_shapes = 3 + rng.index(5);
+        let table = random_table(rng, n_shapes);
+        let nq0 = n_models + rng.index(30);
+        let initial = shaped_workload(rng, &table, nq0, 0);
+        let gammas = random_gammas(rng, n_models);
+        let zeta = rng.range(0.0, 1.0);
+        // GammaHard caps come from largest-remainder apportionment, which
+        // is non-monotone in |Q| — shrinking caps must take the cold
+        // fallback inside `BucketedFlow::extend`; Eq3Only caps grow
+        // monotonically and exercise the warm path.
+        let mode = if rng.chance(0.5) {
+            CapacityMode::Eq3Only
+        } else {
+            CapacityMode::GammaHard
+        };
+
+        let mut session = Planner::new(&sets)
+            .gammas(&gammas)
+            .capacity(mode)
+            .zeta(zeta)
+            .session(&initial)
+            .unwrap();
+        session.solve().unwrap();
+
+        let mut cumulative = initial;
+        for batch_no in 0..3 {
+            // Batches usually reuse known shapes (the warm path) but
+            // occasionally bring new ones (forcing the cold rebuild path)
+            // — both must agree with the from-scratch solve.
+            let batch = if rng.chance(0.8) {
+                let n = 1 + rng.index(20);
+                shaped_workload(rng, &table, n, cumulative.len())
+            } else {
+                let wider = random_table(rng, 2);
+                let n = 1 + rng.index(10);
+                shaped_workload(rng, &wider, n, cumulative.len())
+            };
+            session.extend(&batch).unwrap();
+            cumulative.extend_from_slice(&batch);
+
+            let got = session.assignment().unwrap().objective;
+            let want = cold_objective(&sets, &cumulative, &gammas, mode, zeta);
+            assert!(
+                (got - want).abs() < 1e-9,
+                "batch {batch_no} ({mode:?}, |Q|={}): warm {got} vs cold {want}",
+                cumulative.len()
+            );
+            assert_eq!(session.n_queries(), cumulative.len());
+            session
+                .assignment()
+                .unwrap()
+                .check_constraints(n_models)
+                .unwrap();
+        }
+    });
+}
+
+#[test]
+fn prop_greedy_never_beats_the_exact_optimum() {
+    forall(Config::default().cases(30), |rng| {
+        let n_models = 2 + rng.index(3);
+        let sets = random_sets(rng, n_models);
+        let n_shapes = 2 + rng.index(6);
+        let table = random_table(rng, n_shapes);
+        let nq = n_models + rng.index(40);
+        let queries = shaped_workload(rng, &table, nq, 0);
+        let gammas = random_gammas(rng, n_models);
+        let zeta = rng.range(0.0, 1.0);
+
+        let planner = Planner::new(&sets)
+            .gammas(&gammas)
+            .capacity(CapacityMode::GammaHard)
+            .zeta(zeta);
+        let solve = |kind: SolverKind| {
+            let mut s = planner.clone().solver(kind).session(&queries).unwrap();
+            s.solve().unwrap();
+            s.assignment().unwrap().objective
+        };
+        let exact = solve(SolverKind::Bucketed);
+        let greedy = solve(SolverKind::Greedy);
+        assert!(
+            greedy >= exact - 1e-9,
+            "greedy {greedy} must not beat exact {exact}"
+        );
+    });
+}
+
+#[test]
+fn rezeta_and_extend_interleave_consistently() {
+    // A ζ change immediately followed by a batch (the carbon-aware loop's
+    // shape) must equal the cold solve of the cumulative workload at the
+    // new ζ.
+    let mut rng = Rng::new(0xCAFE);
+    let sets = random_sets(&mut rng, 3);
+    let table = random_table(&mut rng, 8);
+    let initial = shaped_workload(&mut rng, &table, 50, 0);
+    let gammas = [0.2, 0.3, 0.5];
+
+    let mut session = Planner::new(&sets)
+        .gammas(&gammas)
+        .capacity(CapacityMode::Eq3Only)
+        .zeta(0.5)
+        .session(&initial)
+        .unwrap();
+    session.solve().unwrap();
+
+    let mut cumulative = initial;
+    for (i, zeta) in [0.3, 0.3, 0.9].into_iter().enumerate() {
+        let batch = shaped_workload(&mut rng, &table, 20, cumulative.len());
+        session.set_zeta(zeta);
+        session.extend(&batch).unwrap();
+        cumulative.extend_from_slice(&batch);
+        let got = session.assignment().unwrap().objective;
+        let want = cold_objective(&sets, &cumulative, &gammas, CapacityMode::Eq3Only, zeta);
+        assert!(
+            (got - want).abs() < 1e-9,
+            "step {i}: interleaved {got} vs cold {want}"
+        );
+    }
+}
+
+#[test]
+fn solver_backends_share_the_interface() {
+    // Every backend solves the same instance through the facade and
+    // reports a real (finite) objective; exact backends agree, heuristics
+    // and baselines are no better.
+    let mut rng = Rng::new(0xBEE);
+    let sets = random_sets(&mut rng, 3);
+    let table = random_table(&mut rng, 5);
+    let queries = shaped_workload(&mut rng, &table, 60, 0);
+    let planner = Planner::new(&sets)
+        .gammas(&[0.25, 0.35, 0.4])
+        .capacity(CapacityMode::GammaHard)
+        .zeta(0.6)
+        .seed(7);
+
+    let solve = |kind: SolverKind| {
+        let mut s = planner.clone().solver(kind).session(&queries).unwrap();
+        s.solve().unwrap();
+        s.assignment().unwrap().clone()
+    };
+    let bucketed = solve(SolverKind::Bucketed);
+    let dense = solve(SolverKind::Dense);
+    assert!((bucketed.objective - dense.objective).abs() < 1e-9);
+    // Greedy obeys the same capacities, so it cannot beat the optimum.
+    let greedy = solve(SolverKind::Greedy);
+    assert!(greedy.objective >= bucketed.objective - 1e-9);
+    // The query-independent baselines ignore capacities but must still
+    // report a real (finite) blend objective over the full workload.
+    for kind in [
+        SolverKind::RoundRobin,
+        SolverKind::Random,
+        SolverKind::Single(1),
+    ] {
+        let a = solve(kind);
+        assert!(a.objective.is_finite(), "{kind:?} must report a real objective");
+        assert_eq!(a.model_of.len(), queries.len());
+    }
+}
