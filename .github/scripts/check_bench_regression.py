@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Gate BENCH_sched.json against a committed baseline.
+
+Usage: check_bench_regression.py BASELINE ACTUAL [--factor 2.0]
+
+The baseline mirrors the bench's JSON layout but only carries the numeric
+keys to gate on; every value is a *ceiling in seconds* chosen generously
+for CI runners. A measurement regresses when it exceeds factor x its
+baseline ceiling. "series" / "cold" style lists are matched entry-by-entry
+on `n_queries`; plain objects are walked recursively; keys present only in
+the actual output are ignored, while a baseline key missing from the
+actual output is an error (the bench stopped emitting something we gate
+on).
+
+Exit code 0 = within the band, 1 = regression or structural mismatch.
+"""
+
+import argparse
+import json
+import sys
+
+
+def walk(baseline, actual, path, factor, failures):
+    if isinstance(baseline, dict):
+        if not isinstance(actual, dict):
+            failures.append(f"{path}: expected an object in the bench output")
+            return
+        for key, bval in baseline.items():
+            if key in ("bench", "note", "n_queries", "smoke"):
+                continue
+            if key not in actual:
+                failures.append(f"{path}.{key}: missing from the bench output")
+                continue
+            walk(bval, actual[key], f"{path}.{key}", factor, failures)
+    elif isinstance(baseline, list):
+        if not isinstance(actual, list):
+            failures.append(f"{path}: expected a list in the bench output")
+            return
+        for bentry in baseline:
+            nq = bentry.get("n_queries") if isinstance(bentry, dict) else None
+            if nq is None:
+                failures.append(f"{path}: baseline list entries need n_queries")
+                continue
+            match = next(
+                (a for a in actual if isinstance(a, dict) and a.get("n_queries") == nq),
+                None,
+            )
+            if match is None:
+                failures.append(f"{path}[n_queries={nq:g}]: missing from the bench output")
+                continue
+            walk(bentry, match, f"{path}[n_queries={nq:g}]", factor, failures)
+    elif isinstance(baseline, (int, float)) and not isinstance(baseline, bool):
+        if not isinstance(actual, (int, float)) or isinstance(actual, bool):
+            failures.append(f"{path}: expected a number, got {actual!r}")
+            return
+        limit = factor * baseline
+        verdict = "ok" if actual <= limit else "REGRESSION"
+        print(f"  {path}: {actual:.6f}s vs ceiling {baseline:.6f}s x{factor:g} -> {verdict}")
+        if actual > limit:
+            failures.append(
+                f"{path}: {actual:.6f}s exceeds {factor:g}x baseline ({baseline:.6f}s)"
+            )
+    # Strings/bools in the baseline are annotations; nothing to gate.
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("baseline")
+    parser.add_argument("actual")
+    parser.add_argument("--factor", type=float, default=2.0)
+    args = parser.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.actual) as f:
+        actual = json.load(f)
+
+    failures = []
+    print(f"comparing {args.actual} against {args.baseline} (tolerance {args.factor:g}x)")
+    walk(baseline, actual, "$", args.factor, failures)
+
+    if failures:
+        print("\nbench regression gate FAILED:", file=sys.stderr)
+        for failure in failures:
+            print(f"  - {failure}", file=sys.stderr)
+        return 1
+    print("bench regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,22 +2,29 @@
 //! 1k → 500k queries over an 8-model zoo with ≤ 256 distinct shapes,
 //! timing the shape-bucketed production path (group → per-shape cost
 //! matrix → CSR min-cost flow → expansion) against the dense per-query
-//! solver where the latter is still tractable; then replays a day of
-//! incremental arrivals (24 batches × 20k queries) through one
-//! `PlanSession`, timing the warm-started `extend` re-solves against cold
-//! from-scratch solves of the cumulative workload. Writes both series to
+//! solver where the latter is still tractable — and head-to-head against
+//! the primal network-simplex backend on the identical shape-level
+//! instance. Then replays a day of incremental arrivals (24 batches ×
+//! 20k queries) through one `PlanSession` per exact backend, timing the
+//! warm-started `extend` re-solves (SSP and simplex) against cold
+//! from-scratch solves of the cumulative workload. Writes all series to
 //! `BENCH_sched.json`. `cargo bench --bench sched_scaling`.
 //!
+//! Setting `ECOSERVE_BENCH_SMOKE=1` shrinks the sweep (1k/10k queries,
+//! 6 × 2k batches, smaller timing budgets) for the CI `bench-smoke` job,
+//! which gates `BENCH_sched.json` against the committed baselines in
+//! `benches/baselines/BENCH_sched_smoke.json`.
+//!
 //! Acceptance bars: the 100k-query × 8-model instance must solve end to
-//! end in under one second, and every warm re-solve must match its cold
-//! cross-check (the tight 1e-9 equivalence property lives in
-//! `tests/plan.rs`).
+//! end in under one second (full mode), and every solver pair must match
+//! on the objective (the tight 1e-9 equivalence properties live in
+//! `tests/plan.rs` and `tests/netsimplex.rs`).
 
 use ecoserve::models::{AccuracyModel, ModelSet, Normalizer, Target, WorkloadModel};
-use ecoserve::plan::Planner;
+use ecoserve::plan::{Planner, SolverKind};
 use ecoserve::scheduler::{
-    capacity_bounds, group_by_shape, solve_exact_bucketed, solve_exact_caps, BucketedProblem,
-    CapacityMode, CostMatrix,
+    capacity_bounds, group_by_shape, solve_exact_bucketed, solve_exact_caps,
+    solve_exact_netsimplex, BucketedProblem, CapacityMode, CostMatrix,
 };
 use ecoserve::util::{bench, black_box, Json, Rng, Stopwatch};
 use ecoserve::workload::Query;
@@ -91,15 +98,36 @@ fn workload(n: usize, rng: &mut Rng) -> Vec<Query> {
     draw(&table, n, 0, rng)
 }
 
+fn assert_objectives_agree(label: &str, a: f64, b: f64) {
+    assert!(
+        (a - b).abs() <= 1e-6 * b.abs().max(1.0),
+        "{label}: {a} vs {b}"
+    );
+}
+
 fn main() {
-    println!("=== sched_scaling: shape-bucketed transportation solver ===");
+    let smoke = std::env::var("ECOSERVE_BENCH_SMOKE")
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false);
+    println!(
+        "=== sched_scaling: shape-bucketed transportation solver{} ===",
+        if smoke { " (smoke mode)" } else { "" }
+    );
     let sets = zoo();
     let gammas = [0.05, 0.05, 0.1, 0.1, 0.15, 0.15, 0.2, 0.2];
     let zeta = 0.5;
     let mut rng = Rng::new(0xBEEF);
     let mut rows: Vec<Json> = Vec::new();
+    let mut head_to_head_cold: Vec<Json> = Vec::new();
 
-    for &n in &[1_000usize, 10_000, 100_000, 500_000] {
+    let sizes: &[usize] = if smoke {
+        &[1_000, 10_000]
+    } else {
+        &[1_000, 10_000, 100_000, 500_000]
+    };
+    let budget = Duration::from_millis(if smoke { 150 } else { 800 });
+
+    for &n in sizes {
         let queries = workload(n, &mut rng);
         // Shape-deduplicated scan: identical maxima to the full-workload
         // pass at a fraction of the cost.
@@ -115,7 +143,6 @@ fn main() {
         let caps_eq3 = capacity_bounds(CapacityMode::Eq3Only, &gammas, n);
         let caps_gamma = capacity_bounds(CapacityMode::GammaHard, &gammas, n);
 
-        let budget = Duration::from_millis(800);
         let build_stats = bench(&format!("build_bucketed/n{n}"), budget, || {
             black_box(BucketedProblem::build(&sets, &norm, &queries, zeta));
         });
@@ -125,14 +152,34 @@ fn main() {
         let gamma_stats = bench(&format!("solve_gamma/n{n}"), budget, || {
             black_box(solve_exact_bucketed(&bp, &caps_gamma).unwrap());
         });
+        // Head-to-head: the identical shape-level instance through the
+        // primal network-simplex backend.
+        let simplex_stats = bench(&format!("solve_simplex/n{n}"), budget, || {
+            black_box(solve_exact_netsimplex(&bp, &caps_eq3).unwrap());
+        });
         println!("{}", build_stats.line());
         println!("{}", eq3_stats.line());
         println!("{}", gamma_stats.line());
+        println!("{}", simplex_stats.line());
+
+        // Both exact backends must land on the same optimum.
+        for caps in [&caps_eq3, &caps_gamma] {
+            let ssp = solve_exact_bucketed(&bp, caps).unwrap();
+            let simplex = solve_exact_netsimplex(&bp, caps).unwrap();
+            assert_objectives_agree(
+                &format!("n={n}: simplex vs ssp"),
+                simplex.objective,
+                ssp.objective,
+            );
+        }
 
         let total_s = build_stats.median_s + eq3_stats.median_s;
         println!(
-            "  n={n}: {n_shapes} shapes, build+solve median {:.1} ms",
-            total_s * 1e3
+            "  n={n}: {n_shapes} shapes, build+solve median {:.1} ms \
+             (ssp {:.1} ms vs simplex {:.1} ms)",
+            total_s * 1e3,
+            eq3_stats.median_s * 1e3,
+            simplex_stats.median_s * 1e3,
         );
 
         // Acceptance bar: 100k × 8 end to end under a second.
@@ -151,12 +198,7 @@ fn main() {
             for caps in [&caps_eq3, &caps_gamma] {
                 let d = solve_exact_caps(&dense, caps).unwrap();
                 let b = solve_exact_bucketed(&bp, caps).unwrap();
-                assert!(
-                    (d.objective - b.objective).abs() <= 1e-6 * d.objective.abs().max(1.0),
-                    "n={n}: bucketed {} vs dense {}",
-                    b.objective,
-                    d.objective
-                );
+                assert_objectives_agree(&format!("n={n}: bucketed vs dense"), b.objective, d.objective);
             }
             println!("  n={n}: bucketed matches dense objective ✓");
         }
@@ -169,33 +211,48 @@ fn main() {
             ("build_median_s", Json::num(build_stats.median_s)),
             ("solve_eq3_median_s", Json::num(eq3_stats.median_s)),
             ("solve_gamma_median_s", Json::num(gamma_stats.median_s)),
+            ("solve_simplex_median_s", Json::num(simplex_stats.median_s)),
             ("total_median_s", Json::num(total_s)),
+        ]));
+        head_to_head_cold.push(Json::obj(vec![
+            ("n_queries", Json::num(n as f64)),
+            ("ssp_s", Json::num(eq3_stats.median_s)),
+            ("simplex_s", Json::num(simplex_stats.median_s)),
         ]));
     }
 
     // ---- incremental arrivals: warm-started extend vs cold re-solve -----
-    // A day of traffic: 24 batches × 20k queries from one shape table. The
-    // session applies each batch as multiplicity deltas and warm-starts
-    // the min-cost flow from the previous optimum; the cold baseline
-    // regroups and re-solves the cumulative workload from scratch.
-    println!("\n=== incremental arrivals: 24 × 20k, warm extend vs cold re-solve ===");
-    const N_BATCHES: usize = 24;
-    const BATCH: usize = 20_000;
+    // A day of traffic: 24 batches × 20k queries from one shape table. One
+    // session per exact backend applies each batch as multiplicity deltas
+    // and warm-starts from its previous optimum (SSP flow/potentials vs
+    // simplex basis); the cold baseline regroups and re-solves the
+    // cumulative workload from scratch.
+    let n_batches: usize = if smoke { 6 } else { 24 };
+    let batch_size: usize = if smoke { 2_000 } else { 20_000 };
+    println!(
+        "\n=== incremental arrivals: {} × {}, warm extend (ssp, simplex) vs cold ===",
+        n_batches, batch_size
+    );
     let table = shape_table(&mut rng);
-    let batches: Vec<Vec<Query>> = (0..N_BATCHES)
-        .map(|h| draw(&table, BATCH, h * BATCH, &mut rng))
+    let batches: Vec<Vec<Query>> = (0..n_batches)
+        .map(|h| draw(&table, batch_size, h * batch_size, &mut rng))
         .collect();
 
-    let mut session = Planner::new(&sets)
+    let planner = Planner::new(&sets)
         .gammas(&gammas)
         .capacity(CapacityMode::Eq3Only)
-        .zeta(zeta)
+        .zeta(zeta);
+    let mut session = planner.session(&batches[0]).unwrap();
+    session.solve().unwrap();
+    let mut simplex_session = planner
+        .solver(SolverKind::NetworkSimplex)
         .session(&batches[0])
         .unwrap();
-    session.solve().unwrap();
+    simplex_session.solve().unwrap();
 
     let mut cumulative: Vec<Query> = batches[0].clone();
     let mut warm_total_s = 0.0;
+    let mut warm_simplex_total_s = 0.0;
     let mut cold_total_s = 0.0;
     let mut inc_rows: Vec<Json> = Vec::new();
     for batch in &batches[1..] {
@@ -203,6 +260,11 @@ fn main() {
         session.extend(batch).unwrap();
         let warm_s = sw.elapsed_s();
         let warm_obj = session.assignment().unwrap().objective;
+
+        let sw = Stopwatch::start();
+        simplex_session.extend(batch).unwrap();
+        let warm_simplex_s = sw.elapsed_s();
+        let warm_simplex_obj = simplex_session.assignment().unwrap().objective;
 
         cumulative.extend_from_slice(batch);
         let sw = Stopwatch::start();
@@ -213,40 +275,62 @@ fn main() {
         let cold_s = sw.elapsed_s();
 
         // Same cross-check bar as the dense-vs-bucketed comparison above
-        // (the tight 1e-9 property lives in tests/plan.rs).
-        assert!(
-            (warm_obj - cold.objective).abs() <= 1e-6 * cold.objective.abs().max(1.0),
-            "n={}: warm {} vs cold {}",
-            cumulative.len(),
+        // (the tight 1e-9 properties live in tests/plan.rs and
+        // tests/netsimplex.rs).
+        assert_objectives_agree(
+            &format!("n={}: warm ssp vs cold", cumulative.len()),
             warm_obj,
-            cold.objective
+            cold.objective,
+        );
+        assert_objectives_agree(
+            &format!("n={}: warm simplex vs cold", cumulative.len()),
+            warm_simplex_obj,
+            cold.objective,
         );
         warm_total_s += warm_s;
+        warm_simplex_total_s += warm_simplex_s;
         cold_total_s += cold_s;
         inc_rows.push(Json::obj(vec![
             ("n_cumulative", Json::num(cumulative.len() as f64)),
             ("warm_s", Json::num(warm_s)),
+            ("warm_simplex_s", Json::num(warm_simplex_s)),
             ("cold_s", Json::num(cold_s)),
         ]));
     }
     println!(
-        "  {} batches: warm total {:.1} ms, cold total {:.1} ms ({:.1}x)",
-        N_BATCHES - 1,
+        "  {} batches: warm ssp {:.1} ms, warm simplex {:.1} ms, cold {:.1} ms ({:.1}x vs ssp)",
+        n_batches - 1,
         warm_total_s * 1e3,
+        warm_simplex_total_s * 1e3,
         cold_total_s * 1e3,
         cold_total_s / warm_total_s.max(1e-12)
     );
 
     let doc = Json::obj(vec![
         ("bench", Json::str("sched_scaling")),
+        ("smoke", Json::Bool(smoke)),
         ("zeta", Json::num(zeta)),
         ("series", Json::Arr(rows)),
         (
+            "head_to_head",
+            Json::obj(vec![
+                ("cold", Json::Arr(head_to_head_cold)),
+                (
+                    "warm",
+                    Json::obj(vec![
+                        ("ssp_total_s", Json::num(warm_total_s)),
+                        ("simplex_total_s", Json::num(warm_simplex_total_s)),
+                    ]),
+                ),
+            ]),
+        ),
+        (
             "incremental",
             Json::obj(vec![
-                ("batches", Json::num(N_BATCHES as f64)),
-                ("batch_size", Json::num(BATCH as f64)),
+                ("batches", Json::num(n_batches as f64)),
+                ("batch_size", Json::num(batch_size as f64)),
                 ("warm_total_s", Json::num(warm_total_s)),
+                ("warm_simplex_total_s", Json::num(warm_simplex_total_s)),
                 ("cold_total_s", Json::num(cold_total_s)),
                 ("per_batch", Json::Arr(inc_rows)),
             ]),

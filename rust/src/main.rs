@@ -90,10 +90,12 @@ COMMANDS
   fit                       Table 3: OLS fits of e_K and r_K per model
   sweep-zeta                Fig. 3: ζ sweep vs baselines
                             [--points N] [--queries N] [--gamma-caps]
+                            [--solver KIND]
   plan                      solve offline and save a Plan artifact
                             [--zeta X] [--queries N] [--gamma-caps]
-                            [--solver bucketed|dense|greedy|round-robin|
-                             random|single:K] [--workload alpaca|serve-proxy]
+                            [--solver bucketed|net-simplex|dense|greedy|
+                             round-robin|random|single:K]
+                            [--workload alpaca|serve-proxy]
                             [--requests N] [--out plan.json]
   route                     solve one assignment [--zeta X] [--queries N]
                             [--solver KIND] [--gamma-caps] [--plan FILE]
@@ -195,6 +197,7 @@ fn cmd_sweep_zeta(args: &Args) -> anyhow::Result<()> {
     let seed = args.opt_u64("seed", 42);
     let n_points = args.opt_usize("points", 11);
     let n_queries = args.opt_usize("queries", 500);
+    let solver = SolverKind::parse(&args.opt_or("solver", "bucketed"))?;
     let mode = capacity_mode_arg(args);
     let partition = Partition::paper_case_study();
     partition.validate()?;
@@ -203,12 +206,13 @@ fn cmd_sweep_zeta(args: &Args) -> anyhow::Result<()> {
     let fitted = characterize::quick_fit(&family, seed)?;
     let mut rng = Rng::new(seed ^ 0xF16_3);
     let queries = case_study_queries(n_queries, &mut rng);
-    let sweep = scheduler::sweep_mode(
+    let sweep = scheduler::sweep_solver(
         &fitted.sets,
         &queries,
         &partition.gammas,
         n_points,
         mode,
+        solver,
         &mut rng,
     )?;
     print!("{}", report::zeta_ascii(&sweep));

@@ -10,10 +10,11 @@
 //! * [`Planner`] — a builder that owns normalization and cost
 //!   construction: `Planner::new(&sets).partition(&p).zeta(0.5)`.
 //! * [`Solver`] — an object-safe trait unifying the exact dense MCMF, the
-//!   shape-bucketed transportation reduction, greedy, and the
-//!   query-independent baselines ([`SolverKind`] selects); the extension
-//!   point for network-simplex and future backends, with [`SolverState`]
-//!   carrying reusable buffers.
+//!   shape-bucketed transportation reduction, the primal network simplex
+//!   (`SolverKind::NetworkSimplex`, warm-startable across ζ steps and
+//!   batches), greedy, and the query-independent baselines
+//!   ([`SolverKind`] selects), with [`SolverState`] carrying reusable
+//!   buffers — the extension point for future backends.
 //! * [`PlanSession`] — stateful: caches the shape grouping, the
 //!   normalizer, and the last optimal flow/potentials, so
 //!   [`rezeta`](PlanSession::rezeta) re-solves a ζ step without

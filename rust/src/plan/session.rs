@@ -149,17 +149,25 @@ impl PlanSession {
         capacity_bounds(self.mode, &self.gammas, self.queries.len())
     }
 
-    /// Re-blend the costs if ζ drifted from what the matrix holds.
-    fn ensure_costs(&mut self) {
+    /// Re-blend the costs if ζ drifted from what the matrix holds. Returns
+    /// whether a re-blend happened — in that case the solver may warm-start
+    /// its previous basis via [`Solver::rezeta`] instead of solving cold.
+    fn ensure_costs(&mut self) -> bool {
         if self.zeta != self.costs_zeta {
             self.bp.set_zeta(&self.sets, &self.norm, self.zeta);
             self.costs_zeta = self.zeta;
-            self.state.invalidate();
             self.last = None;
+            true
+        } else {
+            false
         }
     }
 
-    fn run_solve(&mut self) -> anyhow::Result<()> {
+    /// One solver invocation over the current instance. `reblended` routes
+    /// to [`Solver::rezeta`] (costs were re-blended in place — backends
+    /// with a warm-startable basis resume from it, the rest invalidate and
+    /// solve cold) instead of [`Solver::solve`].
+    fn run_solver(&mut self, reblended: bool) -> anyhow::Result<()> {
         let caps = self.caps();
         let view = ProblemView {
             sets: &self.sets,
@@ -168,16 +176,24 @@ impl PlanSession {
             caps: &caps,
             seed: self.seed,
         };
-        self.last = Some(self.solver.solve(&view, &mut self.state)?);
+        self.last = Some(if reblended {
+            self.solver.rezeta(&view, &mut self.state)?
+        } else {
+            self.solver.solve(&view, &mut self.state)?
+        });
         Ok(())
+    }
+
+    fn run_solve(&mut self) -> anyhow::Result<()> {
+        self.run_solver(false)
     }
 
     /// Solve the current instance (no-op if already solved at this ζ and
     /// workload). Returns the assignment.
     pub fn solve(&mut self) -> anyhow::Result<&Assignment> {
-        self.ensure_costs();
+        let reblended = self.ensure_costs();
         if self.last.is_none() {
-            self.run_solve()?;
+            self.run_solver(reblended)?;
         }
         Ok(self.last.as_ref().unwrap())
     }

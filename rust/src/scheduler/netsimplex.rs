@@ -1,0 +1,999 @@
+//! Primal network simplex for the shape-level transportation problem —
+//! the ROADMAP's alternative to successive shortest paths
+//! ([`MinCostFlow`](super::mcmf::MinCostFlow)).
+//!
+//! Network simplex walks between spanning-tree bases of the min-cost-flow
+//! LP instead of augmenting along shortest paths: strongly polynomial in
+//! practice with better constants once the shape×model edge count passes
+//! ~10⁴ — the heterogeneous-cluster regime (arXiv 2407.00010) where many
+//! model×GPU placements multiply K.
+//!
+//! # Implementation
+//!
+//! [`NetSimplex`] is a general capacitated min-cost-flow core in the style
+//! of LEMON's `NetworkSimplex`:
+//!
+//! * the basis is a spanning tree over the problem nodes plus an
+//!   artificial root, stored as **parent / thread / depth** arrays (the
+//!   thread is the preorder successor chain, used for leaves-first walks);
+//! * the initial basis is the all-artificial star through the root, which
+//!   is **strongly feasible**; the leaving-arc tie-break keeps it so, which
+//!   is the classical anti-cycling guarantee for degenerate pivots;
+//! * entering arcs are found by **block pricing**: scan √m-sized blocks of
+//!   arcs cyclically and take the most negative signed reduced cost in the
+//!   first block that has one;
+//! * artificial arcs carry a big-M cost and are excluded from pricing;
+//!   nonzero artificial flow at termination means the instance is
+//!   infeasible.
+//!
+//! Pivots re-derive the thread/depth/potential arrays from the parent
+//! array in O(n); at transportation scale (n = S+K+3 ≲ a few hundred,
+//! independent of |Q|) this keeps the hot path allocation-light and the
+//! code auditable.
+//!
+//! [`SimplexFlow`] wraps the core for the bucketed assignment instance
+//! with exactly the same graph as [`BucketedFlow`](super::BucketedFlow)
+//! (source → shapes → models → sink, Eq. 3 reward split, identical
+//! fixed-point cost scaling), so both backends optimize the *same* integer
+//! program and their objectives agree to float precision — the 1e-9
+//! equivalence property in `tests/netsimplex.rs`. It is warm-startable
+//! from the previous basis on both session paths:
+//!
+//! * [`SimplexFlow::rezeta`] — costs re-blended in place: flows and basis
+//!   stay primal feasible, so repricing resumes pivoting from the old
+//!   basis;
+//! * [`SimplexFlow::extend`] — supplies/capacities grown: non-tree arcs
+//!   stay pinned at their bounds, tree-arc flows are recomputed leaves-
+//!   first from the new balances, and if they remain within bounds the
+//!   old basis already satisfies the optimality conditions (falls back to
+//!   a cold rebuild otherwise).
+
+use super::problem::{Assignment, BucketedProblem};
+use super::solve::{check_feasible, eq3_reward, COST_SCALE};
+
+const STATE_TREE: i8 = 0;
+const STATE_LOWER: i8 = 1;
+const STATE_UPPER: i8 = -1;
+
+/// Capacity of artificial root arcs (effectively unbounded).
+const INF_CAP: i64 = i64::MAX / 4;
+
+const NONE: usize = usize::MAX;
+
+/// Pivot budget for warm restarts: a warm basis is feasible but not
+/// guaranteed strongly feasible, so a (theoretical) degenerate cycle is
+/// cut off and reported to the caller, who rebuilds cold.
+fn warm_pivot_budget(m: usize) -> usize {
+    200 * (m + 1) + 10_000
+}
+
+/// Primal network simplex over a capacitated min-cost-flow network with
+/// node balances (positive = supply, negative = demand).
+#[derive(Debug, Clone, Default)]
+pub struct NetSimplex {
+    /// real node count; the artificial root is node `n`
+    n: usize,
+    // ---- real arcs
+    from: Vec<usize>,
+    to: Vec<usize>,
+    cap: Vec<i64>,
+    cost: Vec<i64>,
+    supply: Vec<i64>,
+    // ---- basis state over real arcs then `n` artificial root arcs
+    flow: Vec<i64>,
+    state: Vec<i8>,
+    /// artificial arc of node `u` is `m + u`; true ⇒ directed u → root
+    art_to_root: Vec<bool>,
+    art_cost: i64,
+    // ---- spanning-tree arrays over `n + 1` nodes (root last)
+    parent: Vec<usize>,
+    pred: Vec<usize>,
+    thread: Vec<usize>,
+    depth: Vec<u32>,
+    pi: Vec<i64>,
+    /// block-pricing cursor
+    next_arc: usize,
+    solved: bool,
+}
+
+impl NetSimplex {
+    pub fn new(n_nodes: usize) -> NetSimplex {
+        NetSimplex {
+            n: n_nodes,
+            supply: vec![0; n_nodes],
+            ..NetSimplex::default()
+        }
+    }
+
+    /// Add a directed arc with capacity and per-unit cost; returns its id.
+    pub fn add_arc(&mut self, from: usize, to: usize, cap: i64, cost: i64) -> usize {
+        assert!(from != to, "self-loops unsupported");
+        assert!(from < self.n && to < self.n, "node out of range");
+        assert!(cap >= 0);
+        self.from.push(from);
+        self.to.push(to);
+        self.cap.push(cap);
+        self.cost.push(cost);
+        self.from.len() - 1
+    }
+
+    /// Replace an arc's cost in place (the basis keeps its flows; call
+    /// [`NetSimplex::reprice`] afterwards to restore optimality).
+    pub fn set_cost(&mut self, arc: usize, cost: i64) {
+        self.cost[arc] = cost;
+    }
+
+    /// Grow an arc's capacity in place. If the arc currently sits at its
+    /// upper bound in a solved basis it stays pinned there (its flow grows
+    /// with the bound); [`NetSimplex::warm_extend`] re-balances the tree.
+    pub fn add_capacity(&mut self, arc: usize, delta: i64) {
+        assert!(delta >= 0, "capacity can only grow");
+        self.cap[arc] += delta;
+        if self.solved && self.state[arc] == STATE_UPPER {
+            self.flow[arc] += delta;
+        }
+    }
+
+    /// Set a node's balance (positive supply / negative demand). Balances
+    /// must sum to zero at solve time.
+    pub fn set_supply(&mut self, node: usize, b: i64) {
+        self.supply[node] = b;
+    }
+
+    /// Flow on a real arc (valid after a successful solve).
+    pub fn flow_on(&self, arc: usize) -> i64 {
+        self.flow[arc]
+    }
+
+    pub fn is_solved(&self) -> bool {
+        self.solved
+    }
+
+    // ------------------------------------------------- extended arc space
+
+    fn m_real(&self) -> usize {
+        self.from.len()
+    }
+
+    fn ext_from(&self, e: usize) -> usize {
+        let m = self.m_real();
+        if e < m {
+            self.from[e]
+        } else if self.art_to_root[e - m] {
+            e - m
+        } else {
+            self.n
+        }
+    }
+
+    fn ext_to(&self, e: usize) -> usize {
+        let m = self.m_real();
+        if e < m {
+            self.to[e]
+        } else if self.art_to_root[e - m] {
+            self.n
+        } else {
+            e - m
+        }
+    }
+
+    fn ext_cap(&self, e: usize) -> i64 {
+        if e < self.m_real() {
+            self.cap[e]
+        } else {
+            INF_CAP
+        }
+    }
+
+    fn ext_cost(&self, e: usize) -> i64 {
+        if e < self.m_real() {
+            self.cost[e]
+        } else {
+            self.art_cost
+        }
+    }
+
+    // ------------------------------------------------------------ solving
+
+    /// Solve from scratch: all-artificial strongly feasible starting basis,
+    /// then primal pivots to optimality. Returns `false` iff the instance
+    /// is infeasible (artificial flow remains).
+    pub fn solve(&mut self) -> bool {
+        let n = self.n;
+        let m = self.m_real();
+        let root = n;
+        debug_assert_eq!(self.supply.iter().sum::<i64>(), 0, "unbalanced supplies");
+
+        let max_abs = self.cost.iter().map(|c| c.abs()).max().unwrap_or(0);
+        self.art_cost = (max_abs + 1).saturating_mul(n as i64 + 1);
+
+        self.flow = vec![0; m + n];
+        self.state = vec![STATE_LOWER; m + n];
+        self.art_to_root = vec![true; n];
+        self.parent = vec![NONE; n + 1];
+        self.pred = vec![NONE; n + 1];
+        for u in 0..n {
+            self.parent[u] = root;
+            self.pred[u] = m + u;
+            self.state[m + u] = STATE_TREE;
+            if self.supply[u] >= 0 {
+                self.art_to_root[u] = true;
+                self.flow[m + u] = self.supply[u];
+            } else {
+                self.art_to_root[u] = false;
+                self.flow[m + u] = -self.supply[u];
+            }
+        }
+        self.rebuild_tree_meta();
+        self.next_arc = 0;
+        self.solved = false;
+
+        // A strongly feasible start cannot cycle; no budget needed.
+        let finished = self.pivot_loop(usize::MAX);
+        debug_assert!(finished, "unbudgeted pivot loop returned early");
+        let _ = finished;
+
+        if self.flow[m..].iter().any(|&f| f != 0) {
+            return false; // infeasible: some balance still routes via root
+        }
+        self.solved = true;
+        true
+    }
+
+    /// Warm restart after in-place cost edits: flows and basis are still
+    /// primal feasible, so re-derive potentials and resume pivoting.
+    /// Returns `false` if there is no solved basis to restart from or the
+    /// warm pivot budget is exhausted — rebuild cold in that case.
+    pub fn reprice(&mut self) -> bool {
+        if !self.solved {
+            return false;
+        }
+        let m = self.m_real();
+        // Big-M must stay dominant if cost magnitudes grew.
+        let max_abs = self.cost.iter().map(|c| c.abs()).max().unwrap_or(0);
+        let fresh = (max_abs + 1).saturating_mul(self.n as i64 + 1);
+        if fresh > self.art_cost {
+            self.art_cost = fresh;
+        }
+        self.rebuild_tree_meta();
+        self.next_arc = 0;
+        if !self.pivot_loop(warm_pivot_budget(m)) || self.flow[m..].iter().any(|&f| f != 0) {
+            self.solved = false;
+            return false;
+        }
+        true
+    }
+
+    /// Warm restart after supplies/capacities grew: keep every non-tree
+    /// arc at its (possibly re-pinned) bound and recompute tree-arc flows
+    /// leaves-first from the new balances. If they stay within bounds the
+    /// basis still satisfies the simplex optimality conditions — costs are
+    /// unchanged, so the repaired flow is already optimal. Returns `false`
+    /// when the old tree cannot carry the grown instance — the basis is
+    /// marked unsolved then (capacities/supplies were already mutated, so
+    /// it no longer describes any instance) and the caller rebuilds cold.
+    pub fn warm_extend(&mut self) -> bool {
+        if !self.solved {
+            return false;
+        }
+        let n = self.n;
+        let m = self.m_real();
+        let root = n;
+
+        // Node excess = balance minus net outflow over non-tree arcs.
+        let mut excess = vec![0i64; n + 1];
+        excess[..n].copy_from_slice(&self.supply);
+        for e in 0..self.flow.len() {
+            if self.state[e] == STATE_TREE || self.flow[e] == 0 {
+                continue;
+            }
+            let f = self.flow[e];
+            excess[self.ext_from(e)] -= f;
+            excess[self.ext_to(e)] += f;
+        }
+
+        // Preorder via the thread chain; reversed, children precede parents.
+        let mut order = Vec::with_capacity(n + 1);
+        let mut u = root;
+        loop {
+            order.push(u);
+            u = self.thread[u];
+            if u == root {
+                break;
+            }
+        }
+        debug_assert_eq!(order.len(), n + 1);
+
+        let mut new_flow: Vec<(usize, i64)> = Vec::with_capacity(n);
+        for &u in order[1..].iter().rev() {
+            let e = self.pred[u];
+            let up = self.ext_from(e) == u; // arc directed u → parent
+            let f = if up { excess[u] } else { -excess[u] };
+            if f < 0 || f > self.ext_cap(e) {
+                self.solved = false; // tree arc would leave its bounds
+                return false;
+            }
+            if e >= m && f != 0 {
+                self.solved = false; // would route through an artificial arc
+                return false;
+            }
+            let p = self.parent[u];
+            if up {
+                excess[p] += f;
+            } else {
+                excess[p] -= f;
+            }
+            new_flow.push((e, f));
+        }
+        if excess[root] != 0 {
+            self.solved = false; // unbalanced supplies
+            return false;
+        }
+        for &(e, f) in &new_flow {
+            self.flow[e] = f;
+        }
+        true
+    }
+
+    // ------------------------------------------------------------- pivots
+
+    /// Signed reduced cost of a non-tree real arc: negative ⇒ profitable.
+    fn signed_rc(&self, e: usize) -> i64 {
+        let rc = self.cost[e] + self.pi[self.from[e]] - self.pi[self.to[e]];
+        self.state[e] as i64 * rc
+    }
+
+    /// Block pricing: cyclic √m blocks, best candidate of the first block
+    /// that contains one.
+    fn find_entering(&mut self) -> Option<usize> {
+        let m = self.m_real();
+        if m == 0 {
+            return None;
+        }
+        let block = ((m as f64).sqrt() as usize + 1).max(16).min(m);
+        let mut e = self.next_arc.min(m - 1);
+        let mut scanned = 0usize;
+        while scanned < m {
+            let mut best: Option<(i64, usize)> = None;
+            let take = block.min(m - scanned);
+            for _ in 0..take {
+                if self.state[e] != STATE_TREE {
+                    let rc = self.signed_rc(e);
+                    if rc < 0 && best.map(|(b, _)| rc < b).unwrap_or(true) {
+                        best = Some((rc, e));
+                    }
+                }
+                e += 1;
+                if e == m {
+                    e = 0;
+                }
+                scanned += 1;
+            }
+            if let Some((_, arc)) = best {
+                self.next_arc = e;
+                return Some(arc);
+            }
+        }
+        None
+    }
+
+    /// Run pivots until optimality or until `max_pivots` is exhausted
+    /// (returns `false` in the latter case).
+    fn pivot_loop(&mut self, max_pivots: usize) -> bool {
+        let mut pivots = 0usize;
+        while let Some(e) = self.find_entering() {
+            if pivots >= max_pivots {
+                return false;
+            }
+            pivots += 1;
+            self.pivot(e);
+        }
+        true
+    }
+
+    /// One primal pivot around the cycle the entering arc closes with the
+    /// tree. The leaving-arc tie-break (strict `<` on the first path,
+    /// `<=` on the second) preserves strong feasibility — the classical
+    /// anti-cycling rule.
+    fn pivot(&mut self, in_arc: usize) {
+        let src = self.from[in_arc];
+        let dst = self.to[in_arc];
+
+        // Join = lowest common ancestor of the entering arc's endpoints.
+        let join = {
+            let (mut u, mut v) = (src, dst);
+            while self.depth[u] > self.depth[v] {
+                u = self.parent[u];
+            }
+            while self.depth[v] > self.depth[u] {
+                v = self.parent[v];
+            }
+            while u != v {
+                u = self.parent[u];
+                v = self.parent[v];
+            }
+            u
+        };
+
+        // Cycle orientation: flow increases along first → second.
+        let (first, second) = if self.state[in_arc] == STATE_LOWER {
+            (src, dst)
+        } else {
+            (dst, src)
+        };
+
+        let mut delta = self.cap[in_arc];
+        let mut u_out = NONE;
+        let mut on_first = false;
+        let mut u = first;
+        while u != join {
+            let e = self.pred[u];
+            let fwd = self.ext_from(e) == u;
+            let d = if fwd {
+                self.flow[e]
+            } else {
+                self.ext_cap(e) - self.flow[e]
+            };
+            if d < delta {
+                delta = d;
+                u_out = u;
+                on_first = true;
+            }
+            u = self.parent[u];
+        }
+        let mut u = second;
+        while u != join {
+            let e = self.pred[u];
+            let fwd = self.ext_from(e) == u;
+            let d = if fwd {
+                self.ext_cap(e) - self.flow[e]
+            } else {
+                self.flow[e]
+            };
+            if d <= delta {
+                delta = d;
+                u_out = u;
+                on_first = false;
+            }
+            u = self.parent[u];
+        }
+
+        // Push the bottleneck around the cycle.
+        if delta > 0 {
+            let val = self.state[in_arc] as i64 * delta;
+            self.flow[in_arc] += val;
+            let mut u = src;
+            while u != join {
+                let e = self.pred[u];
+                let fwd = self.ext_from(e) == u;
+                self.flow[e] += if fwd { -val } else { val };
+                u = self.parent[u];
+            }
+            let mut u = dst;
+            while u != join {
+                let e = self.pred[u];
+                let fwd = self.ext_from(e) == u;
+                self.flow[e] += if fwd { val } else { -val };
+                u = self.parent[u];
+            }
+        }
+
+        if u_out == NONE {
+            // Bounded by the entering arc itself: bound flip, tree intact.
+            self.state[in_arc] = -self.state[in_arc];
+            return;
+        }
+
+        // Re-root the cut subtree: reverse parent/pred along u_in → u_out,
+        // then hang u_in under v_in via the entering arc.
+        let (u_in, v_in) = if on_first {
+            (first, second)
+        } else {
+            (second, first)
+        };
+        let out_arc = self.pred[u_out];
+        let mut path = vec![u_in];
+        while *path.last().unwrap() != u_out {
+            path.push(self.parent[*path.last().unwrap()]);
+        }
+        let old_preds: Vec<usize> = path.iter().map(|&w| self.pred[w]).collect();
+        self.parent[u_in] = v_in;
+        self.pred[u_in] = in_arc;
+        for j in 1..path.len() {
+            self.parent[path[j]] = path[j - 1];
+            self.pred[path[j]] = old_preds[j - 1];
+        }
+        self.state[in_arc] = STATE_TREE;
+        self.state[out_arc] = if self.flow[out_arc] == 0 {
+            STATE_LOWER
+        } else {
+            STATE_UPPER
+        };
+        self.rebuild_tree_meta();
+    }
+
+    /// Re-derive thread, depth and potentials from the parent/pred arrays
+    /// (O(n); n is a few hundred at transportation scale).
+    fn rebuild_tree_meta(&mut self) {
+        let n = self.n;
+        let root = n;
+        let nn = n + 1;
+
+        // Children lists by counting sort on parent.
+        let mut head = vec![0usize; nn + 1];
+        for u in 0..n {
+            head[self.parent[u] + 1] += 1;
+        }
+        for i in 0..nn {
+            head[i + 1] += head[i];
+        }
+        let mut kids = vec![0usize; n];
+        let mut fill = head.clone();
+        for u in 0..n {
+            let p = self.parent[u];
+            kids[fill[p]] = u;
+            fill[p] += 1;
+        }
+
+        self.depth = vec![0; nn];
+        self.pi = vec![0; nn];
+        self.thread = vec![root; nn];
+        let mut order = Vec::with_capacity(nn);
+        let mut stack = vec![root];
+        while let Some(u) = stack.pop() {
+            order.push(u);
+            if u != root {
+                let e = self.pred[u];
+                let p = self.parent[u];
+                self.depth[u] = self.depth[p] + 1;
+                // Tree arcs have zero reduced cost: c + π(from) − π(to) = 0.
+                self.pi[u] = if self.ext_to(e) == u {
+                    self.pi[p] + self.ext_cost(e)
+                } else {
+                    self.pi[p] - self.ext_cost(e)
+                };
+            }
+            for i in head[u]..head[u + 1] {
+                stack.push(kids[i]);
+            }
+        }
+        debug_assert_eq!(order.len(), nn, "parent array is not a tree");
+        for w in order.windows(2) {
+            self.thread[w[0]] = w[1];
+        }
+        // Last preorder node threads back to the root (already the default).
+    }
+}
+
+/// The network-simplex twin of [`BucketedFlow`](super::BucketedFlow):
+/// the same source → shapes → models → sink transportation graph (Eq. 3
+/// reward split included, costs quantized with the shared
+/// `COST_SCALE`), solved by primal network simplex and warm-startable
+/// from the previous basis across ζ steps (`rezeta`) and arrival batches
+/// (`extend`).
+#[derive(Debug, Clone)]
+pub struct SimplexFlow {
+    g: NetSimplex,
+    /// source → shape arcs (cap = multiplicity)
+    source: Vec<usize>,
+    /// shape → model arcs, shape-major (`i * nm + k`)
+    shape_model: Vec<usize>,
+    /// the cap-(u_k−1) zero-cost model → sink arcs (grown on extension)
+    sink_zero: Vec<usize>,
+    mult: Vec<usize>,
+    caps: Vec<usize>,
+    ns: usize,
+    nm: usize,
+}
+
+impl SimplexFlow {
+    /// Build the (unsolved) transportation network for a bucketed instance.
+    pub fn build(bp: &BucketedProblem, caps: &[usize]) -> anyhow::Result<SimplexFlow> {
+        let ns = bp.groups.n_shapes();
+        let nq = bp.n_queries();
+        let nm = bp.n_models();
+        if bp.costs.n_queries != ns {
+            anyhow::bail!(
+                "bucketed cost matrix has {} rows, expected one per shape ({ns})",
+                bp.costs.n_queries
+            );
+        }
+        check_feasible(nq, nm, caps)?;
+
+        let reward = eq3_reward(nq);
+
+        // Node layout: 0 = source, 1..=ns shapes, ns+1..=ns+nm models, last = sink.
+        let t = ns + nm + 1;
+        let snode = |i: usize| 1 + i;
+        let mnode = |k: usize| 1 + ns + k;
+
+        let mut g = NetSimplex::new(t + 1);
+        let mut source = Vec::with_capacity(ns);
+        let mut shape_model = Vec::with_capacity(ns * nm);
+        for i in 0..ns {
+            let mult = bp.groups.multiplicity[i] as i64;
+            source.push(g.add_arc(0, snode(i), mult, 0));
+            let row = bp.costs.row(i);
+            for (k, &c) in row.iter().enumerate() {
+                let c = (c * COST_SCALE).round() as i64;
+                shape_model.push(g.add_arc(snode(i), mnode(k), mult, c));
+            }
+        }
+        let mut sink_zero = Vec::with_capacity(nm);
+        for (k, &cap) in caps.iter().enumerate() {
+            g.add_arc(mnode(k), t, 1, -reward);
+            sink_zero.push(g.add_arc(mnode(k), t, (cap as i64 - 1).max(0), 0));
+        }
+        g.set_supply(0, nq as i64);
+        g.set_supply(t, -(nq as i64));
+
+        Ok(SimplexFlow {
+            g,
+            source,
+            shape_model,
+            sink_zero,
+            mult: bp.groups.multiplicity.clone(),
+            caps: caps.to_vec(),
+            ns,
+            nm,
+        })
+    }
+
+    /// Cold solve: fresh strongly feasible basis, pivot to optimality.
+    pub fn solve(&mut self) -> anyhow::Result<()> {
+        if !self.g.solve() {
+            anyhow::bail!("infeasible: capacities cannot absorb the workload");
+        }
+        Ok(())
+    }
+
+    /// Warm re-solve after the per-shape costs were re-blended for a new ζ
+    /// (same grouping, same capacities): update the shape→model arc costs
+    /// in place and resume pivoting from the previous basis. Returns
+    /// `Ok(false)` when the instance does not match or there is no basis
+    /// to warm-start from — the caller should rebuild cold.
+    pub fn rezeta(&mut self, bp: &BucketedProblem, caps: &[usize]) -> anyhow::Result<bool> {
+        if bp.groups.n_shapes() != self.ns
+            || bp.n_models() != self.nm
+            || bp.costs.n_queries != self.ns
+            || caps != self.caps.as_slice()
+            || bp.groups.multiplicity != self.mult
+        {
+            return Ok(false);
+        }
+        if !self.g.is_solved() {
+            return Ok(false);
+        }
+        for i in 0..self.ns {
+            let row = bp.costs.row(i);
+            for (k, &c) in row.iter().enumerate() {
+                self.g
+                    .set_cost(self.shape_model[i * self.nm + k], (c * COST_SCALE).round() as i64);
+            }
+        }
+        Ok(self.g.reprice())
+    }
+
+    /// Apply multiplicity/capacity growth and warm-start from the previous
+    /// basis. Returns `Ok(true)` on success; `Ok(false)` when the instance
+    /// cannot be warm-extended (shape count changed, something shrank, or
+    /// the old tree cannot carry the grown flow) — rebuild cold then.
+    pub fn extend(&mut self, mult: &[usize], caps: &[usize]) -> anyhow::Result<bool> {
+        if mult.len() != self.ns || caps.len() != self.nm || !self.g.is_solved() {
+            return Ok(false);
+        }
+        if mult.iter().zip(&self.mult).any(|(new, old)| new < old)
+            || caps.iter().zip(&self.caps).any(|(new, old)| new < old)
+        {
+            return Ok(false); // shrinking supply/capacity needs a cold solve
+        }
+        // Same conservative fallback as `BucketedFlow::extend`: a declared
+        // zero capacity is overstated by its Eq. 3 reward arc, so growing
+        // it warm would compound the overstatement.
+        if caps
+            .iter()
+            .zip(&self.caps)
+            .any(|(new, old)| *old == 0 && new > old)
+        {
+            return Ok(false);
+        }
+        let nq: usize = mult.iter().sum();
+        check_feasible(nq, self.nm, caps)?;
+
+        for (i, (&new, &old)) in mult.iter().zip(&self.mult).enumerate() {
+            let delta = (new - old) as i64;
+            if delta > 0 {
+                self.g.add_capacity(self.source[i], delta);
+                for k in 0..self.nm {
+                    self.g.add_capacity(self.shape_model[i * self.nm + k], delta);
+                }
+            }
+        }
+        for (k, (&new, &old)) in caps.iter().zip(&self.caps).enumerate() {
+            let delta = (new - old) as i64;
+            if delta > 0 {
+                self.g.add_capacity(self.sink_zero[k], delta);
+            }
+        }
+        let t = self.ns + self.nm + 1;
+        self.g.set_supply(0, nq as i64);
+        self.g.set_supply(t, -(nq as i64));
+
+        if self.g.warm_extend() {
+            self.mult = mult.to_vec();
+            self.caps = caps.to_vec();
+            Ok(true)
+        } else {
+            // The graph was already grown, so the old basis no longer
+            // describes any instance; `warm_extend` marked it unsolved,
+            // which also makes a retry of this call decline immediately
+            // instead of re-applying the deltas. The caller must rebuild.
+            Ok(false)
+        }
+    }
+
+    /// Expand the shape-level flows back to a per-query assignment — the
+    /// same deterministic expansion as `BucketedFlow::assignment`.
+    pub fn assignment(&self, bp: &BucketedProblem) -> Assignment {
+        assert_eq!(bp.groups.n_shapes(), self.ns, "grouping drifted from graph");
+        let nq = bp.n_queries();
+        let members = bp.groups.members();
+        let mut model_of = vec![usize::MAX; nq];
+        let mut objective = 0.0f64;
+        for (i, mem) in members.iter().enumerate() {
+            let mut cursor = 0usize;
+            for k in 0..self.nm {
+                let f = self.g.flow_on(self.shape_model[i * self.nm + k]);
+                objective += f as f64 * bp.costs.cost(k, i);
+                for _ in 0..f {
+                    model_of[mem[cursor] as usize] = k;
+                    cursor += 1;
+                }
+            }
+            debug_assert_eq!(cursor, mem.len(), "shape {i}: flow != multiplicity");
+        }
+        debug_assert!(model_of.iter().all(|&m| m != usize::MAX));
+        Assignment {
+            model_of,
+            objective,
+        }
+    }
+}
+
+/// One-shot network-simplex solve of a bucketed instance (the
+/// [`SimplexFlow`] wrapper mirrors [`solve_exact_bucketed`]).
+///
+/// [`solve_exact_bucketed`]: super::solve_exact_bucketed
+pub fn solve_exact_netsimplex(
+    bp: &BucketedProblem,
+    caps: &[usize],
+) -> anyhow::Result<Assignment> {
+    let mut flow = SimplexFlow::build(bp, caps)?;
+    flow.solve()?;
+    Ok(flow.assignment(bp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::problem::{CostMatrix, ShapeGroups};
+    use crate::scheduler::solve::solve_exact_bucketed;
+    use crate::util::Rng;
+    use crate::workload::Shape;
+
+    /// Hand-build a bucketed instance: `shape_costs[k][i]`, multiplicities
+    /// per shape (zero allowed).
+    fn instance(shape_costs: Vec<Vec<f64>>, mult: Vec<usize>) -> BucketedProblem {
+        let ns = shape_costs[0].len();
+        assert_eq!(mult.len(), ns);
+        let shapes: Vec<Shape> = (0..ns)
+            .map(|i| Shape {
+                t_in: i as u32 + 1,
+                t_out: 1,
+            })
+            .collect();
+        let mut shape_of = Vec::new();
+        for (i, &m) in mult.iter().enumerate() {
+            for _ in 0..m {
+                shape_of.push(i);
+            }
+        }
+        BucketedProblem {
+            groups: ShapeGroups {
+                shapes,
+                multiplicity: mult,
+                shape_of,
+            },
+            costs: CostMatrix::from_rows(shape_costs),
+        }
+    }
+
+    #[test]
+    fn matches_ssp_on_fixed_instance() {
+        let bp = instance(
+            vec![
+                vec![0.1, 0.7, 0.4],
+                vec![0.5, 0.2, 0.9],
+                vec![0.8, 0.3, 0.1],
+            ],
+            vec![3, 2, 2],
+        );
+        for caps in [vec![3usize, 2, 2], vec![7, 7, 7], vec![1, 5, 1]] {
+            let a = solve_exact_netsimplex(&bp, &caps).unwrap();
+            let b = solve_exact_bucketed(&bp, &caps).unwrap();
+            assert!(
+                (a.objective - b.objective).abs() < 1e-9,
+                "simplex {} vs ssp {} under {caps:?}",
+                a.objective,
+                b.objective
+            );
+            a.check_constraints(3).unwrap();
+            for (c, cap) in a.counts(3).iter().zip(&caps) {
+                assert!(c <= cap);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_ssp_on_randomized_instances() {
+        let mut rng = Rng::new(0x515);
+        for _ in 0..40 {
+            let ns = 1 + rng.index(6);
+            let nm = 1 + rng.index(4);
+            let mult: Vec<usize> = (0..ns).map(|_| rng.index(6)).collect();
+            let nq: usize = mult.iter().sum();
+            if nq < nm.max(1) {
+                continue;
+            }
+            let costs: Vec<Vec<f64>> = (0..nm)
+                .map(|_| (0..ns).map(|_| rng.range(-1.0, 1.0)).collect())
+                .collect();
+            let bp = instance(costs, mult);
+            let caps: Vec<usize> = (0..nm).map(|_| 1 + rng.index(nq + 2)).collect();
+            if caps.iter().sum::<usize>() < nq {
+                continue;
+            }
+            let a = solve_exact_netsimplex(&bp, &caps).unwrap();
+            let b = solve_exact_bucketed(&bp, &caps).unwrap();
+            assert!(
+                (a.objective - b.objective).abs() < 1e-9,
+                "simplex {} vs ssp {}",
+                a.objective,
+                b.objective
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_single_model_and_equal_shapes() {
+        // Single model: everything lands on it.
+        let bp = instance(vec![vec![0.4, -0.2]], vec![3, 4]);
+        let a = solve_exact_netsimplex(&bp, &[7]).unwrap();
+        assert_eq!(a.counts(1), vec![7]);
+        let b = solve_exact_bucketed(&bp, &[7]).unwrap();
+        assert!((a.objective - b.objective).abs() < 1e-9);
+
+        // One shape, saturated caps: exact seat split is forced.
+        let bp = instance(vec![vec![0.9], vec![0.1]], vec![6]);
+        let a = solve_exact_netsimplex(&bp, &[2, 4]).unwrap();
+        let b = solve_exact_bucketed(&bp, &[2, 4]).unwrap();
+        assert_eq!(a.counts(2), vec![2, 4]);
+        assert!((a.objective - b.objective).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_multiplicity_shapes_are_inert() {
+        let bp = instance(
+            vec![vec![0.2, 5.0, 0.8], vec![0.6, -5.0, 0.3]],
+            vec![3, 0, 2],
+        );
+        let a = solve_exact_netsimplex(&bp, &[4, 4]).unwrap();
+        let b = solve_exact_bucketed(&bp, &[4, 4]).unwrap();
+        assert_eq!(a.model_of.len(), 5);
+        assert!(
+            (a.objective - b.objective).abs() < 1e-9,
+            "simplex {} vs ssp {}",
+            a.objective,
+            b.objective
+        );
+    }
+
+    #[test]
+    fn infeasible_caps_error_then_relaxed_succeed() {
+        let bp = instance(vec![vec![0.1, 0.5], vec![0.9, 0.2]], vec![4, 4]);
+        assert!(solve_exact_netsimplex(&bp, &[3, 3]).is_err());
+        assert!(solve_exact_bucketed(&bp, &[3, 3]).is_err());
+        let a = solve_exact_netsimplex(&bp, &[5, 5]).unwrap();
+        let b = solve_exact_bucketed(&bp, &[5, 5]).unwrap();
+        assert!((a.objective - b.objective).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warm_rezeta_matches_cold() {
+        let mut rng = Rng::new(0x2E7A);
+        let ns = 5;
+        let nm = 3;
+        let mult = vec![4usize, 1, 3, 2, 5];
+        let nq: usize = mult.iter().sum();
+        let caps = vec![nq; nm];
+        let base: Vec<Vec<f64>> = (0..nm)
+            .map(|_| (0..ns).map(|_| rng.range(-1.0, 1.0)).collect())
+            .collect();
+        let mut bp = instance(base.clone(), mult);
+
+        let mut flow = SimplexFlow::build(&bp, &caps).unwrap();
+        flow.solve().unwrap();
+
+        for step in 0..4 {
+            // Re-blend costs in place (stand-in for a ζ step).
+            let blended: Vec<Vec<f64>> = base
+                .iter()
+                .map(|row| row.iter().map(|c| c * (0.2 + 0.25 * step as f64)).collect())
+                .collect();
+            bp.costs = CostMatrix::from_rows(blended);
+            let warm = flow.rezeta(&bp, &caps).unwrap();
+            assert!(warm, "same-instance reprice must warm-start");
+            let a = flow.assignment(&bp);
+            let b = solve_exact_bucketed(&bp, &caps).unwrap();
+            assert!(
+                (a.objective - b.objective).abs() < 1e-9,
+                "step {step}: warm {} vs cold {}",
+                a.objective,
+                b.objective
+            );
+        }
+    }
+
+    #[test]
+    fn warm_extend_matches_cold_or_declines() {
+        let mut rng = Rng::new(0xE27);
+        for case in 0..20 {
+            let ns = 2 + rng.index(4);
+            let nm = 2 + rng.index(3);
+            let mult: Vec<usize> = (0..ns).map(|_| 1 + rng.index(5)).collect();
+            let nq: usize = mult.iter().sum();
+            let costs: Vec<Vec<f64>> = (0..nm)
+                .map(|_| (0..ns).map(|_| rng.range(-1.0, 1.0)).collect())
+                .collect();
+            let caps: Vec<usize> = (0..nm).map(|_| 2 + rng.index(nq + 2)).collect();
+            if caps.iter().sum::<usize>() < nq || nq < nm {
+                continue;
+            }
+            let bp = instance(costs.clone(), mult.clone());
+            let mut flow = SimplexFlow::build(&bp, &caps).unwrap();
+            flow.solve().unwrap();
+
+            let grown: Vec<usize> = mult.iter().map(|&m| m + rng.index(4)).collect();
+            let caps2: Vec<usize> = caps
+                .iter()
+                .map(|&c| c + 1 + rng.index(6))
+                .collect();
+            let bp2 = instance(costs, grown.clone());
+            if flow.extend(&grown, &caps2).unwrap() {
+                let a = flow.assignment(&bp2);
+                let b = solve_exact_bucketed(&bp2, &caps2).unwrap();
+                assert!(
+                    (a.objective - b.objective).abs() < 1e-9,
+                    "case {case}: warm {} vs cold {}",
+                    a.objective,
+                    b.objective
+                );
+            } else {
+                // Declined: a cold rebuild must still solve the instance.
+                let a = solve_exact_netsimplex(&bp2, &caps2).unwrap();
+                let b = solve_exact_bucketed(&bp2, &caps2).unwrap();
+                assert!((a.objective - b.objective).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn extend_declines_on_shape_count_change_or_shrink() {
+        let bp = instance(vec![vec![0.1, 0.5], vec![0.9, 0.2]], vec![3, 3]);
+        let mut flow = SimplexFlow::build(&bp, &[6, 6]).unwrap();
+        flow.solve().unwrap();
+        assert!(!flow.extend(&[3, 3, 1], &[6, 6]).unwrap()); // shape count
+        assert!(!flow.extend(&[2, 3], &[6, 6]).unwrap()); // shrunk multiplicity
+        assert!(!flow.extend(&[3, 3], &[5, 6]).unwrap()); // shrunk capacity
+    }
+}

@@ -24,6 +24,11 @@
 //! * [`solve_exact_caps`] — the dense per-query graph (|Q|·K edges). Same
 //!   optimum; kept as the exactness cross-check and for cost matrices that
 //!   did not come from a shape-parameterized workload.
+//! * [`solve_exact_netsimplex`] — the same shape-level transportation
+//!   instance solved by primal network simplex
+//!   ([`SimplexFlow`](super::netsimplex::SimplexFlow)) instead of
+//!   successive shortest paths; better constants at large shape×model
+//!   edge counts, cross-checked to the same optimum.
 //! * [`solve_greedy_caps`] — regret-ordered heuristic baseline.
 
 use super::mcmf::{EdgeHandle, MinCostFlow};
@@ -31,15 +36,19 @@ use super::problem::{
     capacity_bounds, Assignment, BucketedProblem, CapacityMode, CostMatrix,
 };
 
+pub use super::netsimplex::solve_exact_netsimplex;
+
 /// Fixed-point scale for converting f64 costs to integer flow costs.
 /// Costs are in [−1, 1] (normalized blend), so 1e9 keeps nine significant
-/// digits without overflow on 500k-edge instances.
-const COST_SCALE: f64 = 1e9;
+/// digits without overflow on 500k-edge instances. Shared with the
+/// network-simplex backend (`scheduler::netsimplex`) so both solvers
+/// optimize the identical integer program.
+pub(crate) const COST_SCALE: f64 = 1e9;
 
 /// Reward magnitude for the Eq. 3 lower-bound arcs: larger than any
 /// achievable |objective| so that covering every model is always
 /// preferred. Costs are ≤ 1 per query.
-fn eq3_reward(n_queries: usize) -> i64 {
+pub(crate) fn eq3_reward(n_queries: usize) -> i64 {
     ((n_queries as f64 + 2.0) * COST_SCALE) as i64
 }
 
@@ -332,7 +341,7 @@ pub fn solve_exact_bucketed_mode(
     solve_exact_bucketed(bp, &caps)
 }
 
-fn check_feasible(nq: usize, nm: usize, caps: &[usize]) -> anyhow::Result<()> {
+pub(crate) fn check_feasible(nq: usize, nm: usize, caps: &[usize]) -> anyhow::Result<()> {
     if nm == 0 || nq == 0 {
         anyhow::bail!("empty problem");
     }
@@ -661,6 +670,38 @@ mod tests {
         let a2 = solve_exact_bucketed(&bp, &[4, 4]).unwrap();
         assert_eq!(a1, a2);
         assert_eq!(a1.model_of.len(), 5);
+    }
+
+    #[test]
+    fn bucketed_flow_extend_declines_reshape_and_shrink() {
+        // The warm path only applies to grown instances over the same
+        // shape set; anything else must report `Ok(false)` so the caller
+        // rebuilds cold (`BucketedFlow::extend`'s documented fallback).
+        let shape_table = [(1, 1), (2, 2)];
+        let shape_of = [0usize, 0, 1];
+        let (bp, _) = bucketed_fixture(
+            &shape_table,
+            &shape_of,
+            vec![vec![0.1, 0.6], vec![0.4, 0.2]],
+        );
+        let mut flow = BucketedFlow::build(&bp, &[3, 3]).unwrap();
+        flow.solve().unwrap();
+        // Shape count changed (new shape arrived): cold rebuild required.
+        assert!(!flow.extend(&[2, 1, 1], &[3, 3]).unwrap());
+        // Shrunk multiplicity or capacity: cold rebuild required.
+        assert!(!flow.extend(&[1, 1], &[3, 3]).unwrap());
+        assert!(!flow.extend(&[2, 1], &[2, 3]).unwrap());
+        // A genuine growth still warm-extends after the declines.
+        assert!(flow.extend(&[3, 2], &[5, 5]).unwrap());
+        let a = flow.assignment(&{
+            let (bp2, _) = bucketed_fixture(
+                &shape_table,
+                &[0usize, 0, 0, 1, 1],
+                vec![vec![0.1, 0.6], vec![0.4, 0.2]],
+            );
+            bp2
+        });
+        assert_eq!(a.model_of.len(), 5);
     }
 
     #[test]

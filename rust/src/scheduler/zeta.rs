@@ -24,15 +24,20 @@ pub struct ZetaSweep {
     pub baselines: Vec<(String, Evaluation)>,
 }
 
-/// Run the sweep. `gammas` are the partition fractions; `n_points` ζ
-/// values are spaced uniformly on [0, 1]. `mode` selects the γ
-/// interpretation (see [`CapacityMode`]); Fig. 3 uses `Eq3Only`.
-pub fn sweep_mode(
+/// Run the sweep with an explicit solver backend. `gammas` are the
+/// partition fractions; `n_points` ζ values are spaced uniformly on
+/// [0, 1]. `mode` selects the γ interpretation (see [`CapacityMode`]);
+/// Fig. 3 uses `Eq3Only`. The ζ steps go through
+/// [`PlanSession::rezeta`](crate::plan::PlanSession::rezeta), so backends
+/// with a warm-startable basis (network simplex) reprice instead of
+/// re-solving cold.
+pub fn sweep_solver(
     sets: &[ModelSet],
     queries: &[Query],
     gammas: &[f64],
     n_points: usize,
     mode: CapacityMode,
+    solver: SolverKind,
     rng: &mut Rng,
 ) -> anyhow::Result<ZetaSweep> {
     assert!(n_points >= 2);
@@ -44,7 +49,7 @@ pub fn sweep_mode(
         .gammas(gammas)
         .capacity(mode)
         .zeta(0.0)
-        .solver(SolverKind::Bucketed)
+        .solver(solver)
         .session(queries)?;
     let mut points = Vec::with_capacity(n_points);
     for i in 0..n_points {
@@ -70,6 +75,26 @@ pub fn sweep_mode(
         points,
         baselines: baselines_out,
     })
+}
+
+/// Run the sweep with the bucketed production solver.
+pub fn sweep_mode(
+    sets: &[ModelSet],
+    queries: &[Query],
+    gammas: &[f64],
+    n_points: usize,
+    mode: CapacityMode,
+    rng: &mut Rng,
+) -> anyhow::Result<ZetaSweep> {
+    sweep_solver(
+        sets,
+        queries,
+        gammas,
+        n_points,
+        mode,
+        SolverKind::Bucketed,
+        rng,
+    )
 }
 
 /// The Fig. 3 configuration: literal Eq. 3 constraints.

@@ -1,0 +1,351 @@
+//! Solver-equivalence properties for the network-simplex backend: the
+//! primal simplex and the successive-shortest-paths solver optimize the
+//! identical shape-level integer program, so their objectives must agree
+//! to 1e-9 across capacity modes, ζ values, warm starts, and degenerate
+//! instances (zero-multiplicity shapes, saturated caps, single model,
+//! infeasible-then-relaxed capacity vectors). CI's `bench-smoke` job keeps
+//! the performance side of the same story honest.
+
+use ecoserve::models::{AccuracyModel, ModelSet, Normalizer, Target, WorkloadModel};
+use ecoserve::plan::{Planner, SolverKind};
+use ecoserve::scheduler::{
+    capacity_bounds, group_by_shape, solve_exact_bucketed, solve_exact_netsimplex,
+    BucketedProblem, CapacityMode, CostMatrix, ShapeGroups,
+};
+use ecoserve::testkit::{forall, Config};
+use ecoserve::util::Rng;
+use ecoserve::workload::{Query, Shape};
+
+/// Random paper-like model sets (same generator as tests/plan.rs).
+fn random_sets(rng: &mut Rng, n_models: usize) -> Vec<ModelSet> {
+    (0..n_models)
+        .map(|i| {
+            let scale = rng.range(0.5, 8.0);
+            ModelSet {
+                model_id: format!("m{i}"),
+                energy: WorkloadModel {
+                    model_id: format!("m{i}"),
+                    target: Target::EnergyJ,
+                    coefs: [0.5 * scale, 8.0 * scale, 0.003 * scale],
+                    r2: 0.97,
+                    f_stat: 1.0,
+                    p_value: 0.0,
+                    n_obs: 1,
+                },
+                runtime: WorkloadModel {
+                    model_id: format!("m{i}"),
+                    target: Target::RuntimeS,
+                    coefs: [1e-3, 1e-2, 1e-6],
+                    r2: 0.97,
+                    f_stat: 1.0,
+                    p_value: 0.0,
+                    n_obs: 1,
+                },
+                accuracy: AccuracyModel::new(&format!("m{i}"), rng.range(40.0, 70.0)),
+            }
+        })
+        .collect()
+}
+
+fn random_table(rng: &mut Rng, n_shapes: usize) -> Vec<(u32, u32)> {
+    (0..n_shapes)
+        .map(|_| {
+            (
+                rng.int_range(1, 2048) as u32,
+                rng.int_range(1, 4096) as u32,
+            )
+        })
+        .collect()
+}
+
+fn shaped_workload(rng: &mut Rng, table: &[(u32, u32)], n: usize, id0: usize) -> Vec<Query> {
+    (0..n)
+        .map(|i| {
+            let (t_in, t_out) = table[rng.index(table.len())];
+            Query {
+                id: (id0 + i) as u32,
+                t_in,
+                t_out,
+            }
+        })
+        .collect()
+}
+
+fn random_gammas(rng: &mut Rng, k: usize) -> Vec<f64> {
+    let raw: Vec<f64> = (0..k).map(|_| rng.range(0.01, 1.0)).collect();
+    let sum: f64 = raw.iter().sum();
+    raw.iter().map(|g| g / sum).collect()
+}
+
+/// Cold reference: from-scratch bucketed SSP solve.
+fn cold_objective(
+    sets: &[ModelSet],
+    queries: &[Query],
+    gammas: &[f64],
+    mode: CapacityMode,
+    zeta: f64,
+) -> f64 {
+    let norm = Normalizer::from_shapes(sets, &group_by_shape(queries).shapes);
+    let bp = BucketedProblem::build(sets, &norm, queries, zeta);
+    let caps = capacity_bounds(mode, gammas, queries.len());
+    solve_exact_bucketed(&bp, &caps).unwrap().objective
+}
+
+/// Hand-built bucketed instance with explicit multiplicities (zero
+/// allowed): `shape_costs[k][i]`.
+fn instance(shape_costs: Vec<Vec<f64>>, mult: Vec<usize>) -> BucketedProblem {
+    let ns = shape_costs[0].len();
+    assert_eq!(mult.len(), ns);
+    let shapes: Vec<Shape> = (0..ns)
+        .map(|i| Shape {
+            t_in: i as u32 + 1,
+            t_out: 1,
+        })
+        .collect();
+    let mut shape_of = Vec::new();
+    for (i, &m) in mult.iter().enumerate() {
+        for _ in 0..m {
+            shape_of.push(i);
+        }
+    }
+    BucketedProblem {
+        groups: ShapeGroups {
+            shapes,
+            multiplicity: mult,
+            shape_of,
+        },
+        costs: CostMatrix::from_rows(shape_costs),
+    }
+}
+
+#[test]
+fn prop_netsimplex_matches_ssp_across_modes_and_zetas() {
+    forall(Config::default().cases(25), |rng| {
+        let n_models = 1 + rng.index(4);
+        let sets = random_sets(rng, n_models);
+        let n_shapes = 1 + rng.index(6);
+        let table = random_table(rng, n_shapes);
+        let nq = n_models + rng.index(40);
+        let queries = shaped_workload(rng, &table, nq, 0);
+        let gammas = random_gammas(rng, n_models);
+        let zeta = rng.range(0.0, 1.0);
+        let mode = if rng.chance(0.5) {
+            CapacityMode::Eq3Only
+        } else {
+            CapacityMode::GammaHard // saturated caps: Σ caps == |Q|
+        };
+
+        let planner = Planner::new(&sets).gammas(&gammas).capacity(mode).zeta(zeta);
+        let solve = |kind: SolverKind| {
+            let mut s = planner.clone().solver(kind).session(&queries).unwrap();
+            s.solve().unwrap();
+            s.assignment().unwrap().clone()
+        };
+        let simplex = solve(SolverKind::NetworkSimplex);
+        let ssp = solve(SolverKind::Bucketed);
+        assert!(
+            (simplex.objective - ssp.objective).abs() < 1e-9,
+            "{mode:?} zeta={zeta}: simplex {} vs ssp {}",
+            simplex.objective,
+            ssp.objective
+        );
+        simplex.check_constraints(n_models).unwrap();
+        let caps = capacity_bounds(mode, &gammas, nq);
+        for (c, cap) in simplex.counts(n_models).iter().zip(&caps) {
+            assert!(c <= cap);
+        }
+    });
+}
+
+#[test]
+fn prop_netsimplex_rezeta_warm_matches_cold_sweep() {
+    forall(Config::default().cases(15), |rng| {
+        let n_models = 2 + rng.index(3);
+        let sets = random_sets(rng, n_models);
+        let table = random_table(rng, 2 + rng.index(5));
+        let nq = n_models + rng.index(40);
+        let queries = shaped_workload(rng, &table, nq, 0);
+        let gammas = random_gammas(rng, n_models);
+        let mode = if rng.chance(0.5) {
+            CapacityMode::Eq3Only
+        } else {
+            CapacityMode::GammaHard
+        };
+
+        // One simplex session across the whole sweep: each rezeta step
+        // reprices the previous basis instead of solving cold.
+        let mut session = Planner::new(&sets)
+            .gammas(&gammas)
+            .capacity(mode)
+            .zeta(0.0)
+            .solver(SolverKind::NetworkSimplex)
+            .session(&queries)
+            .unwrap();
+        for i in 0..5 {
+            let zeta = i as f64 / 4.0;
+            session.rezeta(zeta).unwrap();
+            let got = session.assignment().unwrap().objective;
+            let want = cold_objective(&sets, &queries, &gammas, mode, zeta);
+            assert!(
+                (got - want).abs() < 1e-9,
+                "zeta={zeta}: simplex rezeta {got} vs cold ssp {want}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_netsimplex_extend_warm_matches_cold() {
+    forall(Config::default().cases(15), |rng| {
+        let n_models = 2 + rng.index(3);
+        let sets = random_sets(rng, n_models);
+        let table = random_table(rng, 3 + rng.index(5));
+        let nq0 = n_models + rng.index(30);
+        let initial = shaped_workload(rng, &table, nq0, 0);
+        let gammas = random_gammas(rng, n_models);
+        let zeta = rng.range(0.0, 1.0);
+        let mode = if rng.chance(0.5) {
+            CapacityMode::Eq3Only
+        } else {
+            CapacityMode::GammaHard
+        };
+
+        let mut session = Planner::new(&sets)
+            .gammas(&gammas)
+            .capacity(mode)
+            .zeta(zeta)
+            .solver(SolverKind::NetworkSimplex)
+            .session(&initial)
+            .unwrap();
+        session.solve().unwrap();
+
+        let mut cumulative = initial;
+        for batch_no in 0..3 {
+            // Mostly known shapes (the basis-repair warm path), sometimes
+            // new ones (the cold rebuild path) — both must agree with the
+            // from-scratch SSP solve.
+            let batch = if rng.chance(0.8) {
+                let n = 1 + rng.index(20);
+                shaped_workload(rng, &table, n, cumulative.len())
+            } else {
+                let wider = random_table(rng, 2);
+                let n = 1 + rng.index(10);
+                shaped_workload(rng, &wider, n, cumulative.len())
+            };
+            session.extend(&batch).unwrap();
+            cumulative.extend_from_slice(&batch);
+
+            let got = session.assignment().unwrap().objective;
+            let want = cold_objective(&sets, &cumulative, &gammas, mode, zeta);
+            assert!(
+                (got - want).abs() < 1e-9,
+                "batch {batch_no} ({mode:?}, |Q|={}): simplex {got} vs cold ssp {want}",
+                cumulative.len()
+            );
+            session
+                .assignment()
+                .unwrap()
+                .check_constraints(n_models)
+                .unwrap();
+        }
+    });
+}
+
+#[test]
+fn prop_zero_multiplicity_shapes_agree() {
+    forall(Config::default().cases(30), |rng| {
+        let ns = 2 + rng.index(5);
+        let nm = 1 + rng.index(3);
+        // At least one shape pinned to multiplicity zero.
+        let mut mult: Vec<usize> = (0..ns).map(|_| rng.index(6)).collect();
+        mult[rng.index(ns)] = 0;
+        let nq: usize = mult.iter().sum();
+        if nq < nm {
+            return;
+        }
+        let costs: Vec<Vec<f64>> = (0..nm)
+            .map(|_| (0..ns).map(|_| rng.range(-1.0, 1.0)).collect())
+            .collect();
+        let bp = instance(costs, mult);
+        let caps: Vec<usize> = (0..nm).map(|_| 1 + rng.index(nq + 2)).collect();
+        if caps.iter().sum::<usize>() < nq {
+            return;
+        }
+        let a = solve_exact_netsimplex(&bp, &caps).unwrap();
+        let b = solve_exact_bucketed(&bp, &caps).unwrap();
+        assert!(
+            (a.objective - b.objective).abs() < 1e-9,
+            "simplex {} vs ssp {}",
+            a.objective,
+            b.objective
+        );
+        assert_eq!(a.model_of.len(), nq);
+    });
+}
+
+#[test]
+fn prop_infeasible_then_relaxed_caps_agree() {
+    forall(Config::default().cases(30), |rng| {
+        let ns = 1 + rng.index(4);
+        let nm = 2 + rng.index(3);
+        let mult: Vec<usize> = (0..ns).map(|_| 1 + rng.index(6)).collect();
+        let nq: usize = mult.iter().sum();
+        if nq < nm {
+            return;
+        }
+        let costs: Vec<Vec<f64>> = (0..nm)
+            .map(|_| (0..ns).map(|_| rng.range(-1.0, 1.0)).collect())
+            .collect();
+        let bp = instance(costs, mult);
+
+        // Infeasible: one seat per model sums below the workload whenever
+        // |Q| > K. Both backends must reject the instance.
+        let caps: Vec<usize> = vec![1; nm];
+        if caps.iter().sum::<usize>() < nq {
+            assert!(solve_exact_netsimplex(&bp, &caps).is_err());
+            assert!(solve_exact_bucketed(&bp, &caps).is_err());
+        }
+
+        // Relaxed: grow capacities until feasible; both succeed and agree.
+        let mut relaxed = caps.clone();
+        let mut k = 0usize;
+        while relaxed.iter().sum::<usize>() < nq {
+            relaxed[k % nm] += 1 + rng.index(3);
+            k += 1;
+        }
+        let a = solve_exact_netsimplex(&bp, &relaxed).unwrap();
+        let b = solve_exact_bucketed(&bp, &relaxed).unwrap();
+        assert!(
+            (a.objective - b.objective).abs() < 1e-9,
+            "simplex {} vs ssp {}",
+            a.objective,
+            b.objective
+        );
+    });
+}
+
+#[test]
+fn sweep_solver_accepts_the_netsimplex_backend() {
+    // The Fig. 3 sweep entry point drives the backend by name end to end
+    // (CLI `sweep-zeta --solver net-simplex` takes this exact path).
+    let mut rng = Rng::new(0x51F3);
+    let sets = random_sets(&mut rng, 3);
+    let table = random_table(&mut rng, 6);
+    let queries = shaped_workload(&mut rng, &table, 60, 0);
+    let gammas = [0.2, 0.3, 0.5];
+    let sweep = ecoserve::scheduler::sweep_solver(
+        &sets,
+        &queries,
+        &gammas,
+        3,
+        CapacityMode::Eq3Only,
+        SolverKind::parse("net-simplex").unwrap(),
+        &mut rng,
+    )
+    .unwrap();
+    assert_eq!(sweep.points.len(), 3);
+    assert!(sweep
+        .points
+        .iter()
+        .all(|p| p.eval.mean_energy_j.is_finite()));
+}

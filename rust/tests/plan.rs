@@ -6,7 +6,8 @@
 use ecoserve::models::{AccuracyModel, ModelSet, Normalizer, Target, WorkloadModel};
 use ecoserve::plan::{Plan, Planner, SolverKind};
 use ecoserve::scheduler::{
-    capacity_bounds, group_by_shape, solve_exact_bucketed, BucketedProblem, CapacityMode,
+    capacity_bounds, group_by_shape, solve_exact_bucketed, BucketedFlow, BucketedProblem,
+    CapacityMode,
 };
 use ecoserve::testkit::{forall, Config};
 use ecoserve::util::Rng;
@@ -254,6 +255,61 @@ fn prop_greedy_never_beats_the_exact_optimum() {
 }
 
 #[test]
+fn extend_with_new_shapes_takes_the_cold_rebuild_path() {
+    // `BucketedFlow::extend` warm-starts only when the shape set is
+    // unchanged; a batch carrying brand-new shapes changes the shape count
+    // and must force the documented cold-rebuild fallback — first checked
+    // directly on the flow core, then through the session, where the
+    // result must still equal a from-scratch solve of the cumulative
+    // workload.
+    let mut rng = Rng::new(0xC01D);
+    let sets = random_sets(&mut rng, 3);
+    let table = random_table(&mut rng, 5);
+    let initial = shaped_workload(&mut rng, &table, 40, 0);
+    let gammas = [0.25, 0.35, 0.4];
+
+    // Direct: a solved BucketedFlow declines mismatched shape counts.
+    let norm = Normalizer::from_shapes(&sets, &group_by_shape(&initial).shapes);
+    let bp = BucketedProblem::build(&sets, &norm, &initial, 0.5);
+    let caps = capacity_bounds(CapacityMode::Eq3Only, &gammas, initial.len());
+    let mut flow = BucketedFlow::build(&bp, &caps).unwrap();
+    flow.solve().unwrap();
+    let grown_shape_count = vec![1usize; bp.groups.n_shapes() + 1];
+    assert!(
+        !flow.extend(&grown_shape_count, &caps).unwrap(),
+        "a changed shape count must decline the warm path"
+    );
+
+    // Session: a batch of entirely new shapes (disjoint token range from
+    // `random_table`'s 1..=2048 × 1..=4096) regroups and re-solves cold.
+    let mut session = Planner::new(&sets)
+        .gammas(&gammas)
+        .capacity(CapacityMode::Eq3Only)
+        .zeta(0.5)
+        .session(&initial)
+        .unwrap();
+    session.solve().unwrap();
+    let shapes_before = session.n_shapes();
+
+    let fresh_table: Vec<(u32, u32)> = (0..4).map(|i| (5000 + i, 9000 + i)).collect();
+    let batch = shaped_workload(&mut rng, &fresh_table, 15, initial.len());
+    session.extend(&batch).unwrap();
+    assert!(
+        session.n_shapes() > shapes_before,
+        "batch must have introduced new shapes"
+    );
+
+    let mut cumulative = initial;
+    cumulative.extend_from_slice(&batch);
+    let got = session.assignment().unwrap().objective;
+    let want = cold_objective(&sets, &cumulative, &gammas, CapacityMode::Eq3Only, 0.5);
+    assert!(
+        (got - want).abs() < 1e-9,
+        "cold-rebuild extend {got} vs from-scratch {want}"
+    );
+}
+
+#[test]
 fn rezeta_and_extend_interleave_consistently() {
     // A ζ change immediately followed by a batch (the carbon-aware loop's
     // shape) must equal the cold solve of the cumulative workload at the
@@ -310,6 +366,9 @@ fn solver_backends_share_the_interface() {
     let bucketed = solve(SolverKind::Bucketed);
     let dense = solve(SolverKind::Dense);
     assert!((bucketed.objective - dense.objective).abs() < 1e-9);
+    // The network-simplex backend solves the same integer program exactly.
+    let simplex = solve(SolverKind::NetworkSimplex);
+    assert!((bucketed.objective - simplex.objective).abs() < 1e-9);
     // Greedy obeys the same capacities, so it cannot beat the optimum.
     let greedy = solve(SolverKind::Greedy);
     assert!(greedy.objective >= bucketed.objective - 1e-9);
