@@ -55,14 +55,22 @@ impl Batcher {
 
     /// Enqueue; returns a full batch if the size trigger fired.
     pub fn push(&mut self, req: Request) -> Option<Batch> {
-        self.pending.push((req, Instant::now()));
+        self.push_at(req, Instant::now())
+    }
+
+    /// Enqueue with an explicit entry timestamp. The live coordinator
+    /// calls [`push`](Batcher::push); the discrete-event simulator (and
+    /// the boundary tests) inject virtual clocks here so age triggers are
+    /// exactly reproducible.
+    pub fn push_at(&mut self, req: Request, now: Instant) -> Option<Batch> {
+        self.pending.push((req, now));
         if self.pending.len() >= self.max_batch {
             return self.flush();
         }
         None
     }
 
-    /// Flush if the oldest pending request *entered the batcher* more than
+    /// Flush if the oldest pending request *entered the batcher* at least
     /// `max_wait` ago.
     pub fn poll(&mut self, now: Instant) -> Option<Batch> {
         let oldest = self.pending.first()?.1;
@@ -71,6 +79,14 @@ impl Batcher {
         } else {
             None
         }
+    }
+
+    /// The instant at which [`poll`](Batcher::poll) will next fire: oldest
+    /// pending entry + `max_wait`. `None` when nothing is pending. Event
+    /// loops (the simulator, a tokio timer) schedule their age-flush wakeup
+    /// at exactly this instant.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.pending.first().map(|&(_, entered)| entered + self.max_wait)
     }
 
     /// Unconditional flush (drain at shutdown).
@@ -112,19 +128,106 @@ mod tests {
     }
 
     #[test]
-    fn flushes_on_age() {
-        let mut b = Batcher::new("m", 8, Duration::from_millis(1));
-        b.push(req(0));
-        assert!(b.poll(Instant::now()).is_none() || true); // may or may not yet
-        std::thread::sleep(Duration::from_millis(3));
-        let batch = b.poll(Instant::now()).unwrap();
+    fn flushes_at_exactly_max_wait() {
+        let wait = Duration::from_millis(50);
+        let mut b = Batcher::new("m", 8, wait);
+        let t0 = Instant::now();
+        assert!(b.push_at(req(0), t0).is_none());
+        assert_eq!(b.deadline(), Some(t0 + wait));
+        // One nanosecond early: not yet.
+        assert!(b.poll(t0 + wait - Duration::from_nanos(1)).is_none());
+        // At exactly the deadline: fires (>= comparison).
+        let batch = b.poll(t0 + wait).unwrap();
         assert_eq!(batch.requests.len(), 1);
+        assert!(b.deadline().is_none());
     }
 
     #[test]
-    fn poll_empty_is_none() {
+    fn deadline_tracks_oldest_not_newest() {
+        let wait = Duration::from_millis(10);
+        let mut b = Batcher::new("m", 8, wait);
+        let t0 = Instant::now();
+        b.push_at(req(0), t0);
+        b.push_at(req(1), t0 + Duration::from_millis(7));
+        // A younger request does not extend the window.
+        assert_eq!(b.deadline(), Some(t0 + wait));
+        let batch = b.poll(t0 + wait).unwrap();
+        assert_eq!(batch.requests.len(), 2); // both ride the age flush
+    }
+
+    #[test]
+    fn size_trigger_wins_race_with_age_trigger() {
+        let wait = Duration::from_millis(10);
+        let mut b = Batcher::new("m", 2, wait);
+        let t0 = Instant::now();
+        assert!(b.push_at(req(0), t0).is_none());
+        // The filling push lands exactly at the age deadline: the size
+        // trigger flushes inline, so the poll that would have age-flushed
+        // finds nothing.
+        let batch = b.push_at(req(1), t0 + wait).unwrap();
+        assert_eq!(batch.requests.len(), 2);
+        assert!(b.poll(t0 + wait).is_none());
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn zero_pending_flush_and_poll_are_none() {
         let mut b = Batcher::new("m", 8, Duration::from_millis(1));
+        assert!(b.flush().is_none());
         assert!(b.poll(Instant::now()).is_none());
+        assert!(b.deadline().is_none());
+        // Still true after a full cycle drained the queue.
+        b.push(req(0));
+        b.flush().unwrap();
+        assert!(b.flush().is_none());
+        assert!(b.poll(Instant::now()).is_none());
+    }
+
+    /// Property: across arbitrary interleavings of submit / poll / flush,
+    /// every submitted request is delivered exactly once (no drops, no
+    /// duplicates), regardless of trigger order.
+    #[test]
+    fn no_request_dropped_or_duplicated_across_interleavings() {
+        use crate::testkit::{forall, Config};
+        forall(Config::default().cases(200), |rng| {
+            let max_batch = rng.int_range(1, 6) as usize;
+            let wait = Duration::from_millis(rng.int_range(1, 20) as u64);
+            let mut b = Batcher::new("m", max_batch, wait);
+            let t0 = Instant::now();
+            let mut now = t0;
+            let mut next_id = 0u64;
+            let mut submitted = Vec::new();
+            let mut delivered = Vec::new();
+            let collect = |batch: Option<Batch>, delivered: &mut Vec<u64>| {
+                if let Some(batch) = batch {
+                    assert!(!batch.requests.is_empty());
+                    assert!(batch.requests.len() <= max_batch);
+                    delivered.extend(batch.requests.iter().map(|r| r.id));
+                }
+            };
+            for _ in 0..rng.int_range(1, 60) {
+                now += Duration::from_millis(rng.int_range(0, 15) as u64);
+                match rng.int_range(0, 9) {
+                    0..=5 => {
+                        submitted.push(next_id);
+                        let batch = b.push_at(req(next_id), now);
+                        next_id += 1;
+                        collect(batch, &mut delivered);
+                    }
+                    6..=7 => collect(b.poll(now), &mut delivered),
+                    _ => collect(b.flush(), &mut delivered),
+                }
+            }
+            // Drain whatever is still pending.
+            while !b.is_empty() {
+                let batch = b.flush();
+                assert!(batch.is_some());
+                collect(batch, &mut delivered);
+            }
+            // FIFO batching preserves submission order overall, so exact
+            // equality covers both "no drop" and "no duplicate".
+            assert_eq!(delivered, submitted);
+        });
     }
 
     #[test]

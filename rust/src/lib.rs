@@ -9,9 +9,11 @@
 //!   characterization campaign, workload-based energy/runtime model fitting,
 //!   the ζ-weighted offline assignment optimizer behind the [`plan`]
 //!   facade (`Planner` → `PlanSession` → serializable `Plan` artifacts),
-//!   and an online serving runtime (router → batcher → per-model workers)
-//!   that executes AOT-compiled model artifacts through PJRT. Python never
-//!   runs on the request path.
+//!   an online serving runtime (router → batcher → per-model workers)
+//!   that executes AOT-compiled model artifacts through PJRT, and a
+//!   deterministic discrete-event serving simulator ([`sim`]) that
+//!   replays plans under stochastic arrival processes. Python never runs
+//!   on the request path.
 //! * **L2 (python/compile/model.py)** — proxy LLM zoo in JAX (dense and
 //!   sparse-MoE decoders), lowered once to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (decode attention,
@@ -31,6 +33,7 @@ pub mod plan;
 pub mod report;
 pub mod runtime;
 pub mod scheduler;
+pub mod sim;
 pub mod stats;
 pub mod telemetry;
 pub mod testkit;

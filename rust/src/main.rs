@@ -11,6 +11,7 @@
 //! ecoserve route --zeta 0.5            one offline assignment, counts
 //! ecoserve route --plan plan.json      apply a saved Plan to the workload
 //! ecoserve serve --plan plan.json      serving demo fed by the offline Plan
+//! ecoserve simulate --plan plan.json   replay the plan under timed arrivals
 //! ecoserve repro-all --out results     everything above, as CSV/MD files
 //! ```
 
@@ -25,6 +26,7 @@ use ecoserve::perfmodel::Cluster;
 use ecoserve::plan::{Plan, Planner, SolverKind};
 use ecoserve::report;
 use ecoserve::scheduler::{self, CapacityMode};
+use ecoserve::sim::{self, ArrivalProcess, CompareSpec, PolicyKind, SimConfig};
 use ecoserve::stats;
 use ecoserve::util::{logging, Args, Rng};
 use ecoserve::workload::{self, Query};
@@ -68,6 +70,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("plan") => cmd_plan(args),
         Some("route") => cmd_route(args),
         Some("serve") => cmd_serve(args),
+        Some("simulate") => cmd_simulate(args),
         Some("repro-all") => cmd_repro_all(args),
         Some(other) => anyhow::bail!("unknown command '{other}' (run with no args for help)"),
         None => {
@@ -103,6 +106,12 @@ COMMANDS
   serve                     end-to-end PJRT serving demo
                             [--artifacts DIR] [--requests N] [--zeta X]
                             [--plan FILE]
+  simulate                  deterministic discrete-event serving simulation
+                            [--policy plan|greedy|round-robin|random|compare]
+                            [--plan FILE] [--arrival poisson:R|gamma:R:CV2|
+                             trace] [--trace FILE] [--queries N] [--zeta X]
+                            [--duration S] [--max-batch N] [--max-wait-ms MS]
+                            [--slo-ms MS] [--out metrics.json]
   repro-all                 regenerate every table and figure [--out DIR]
 
 GLOBAL  --seed N   --quiet   --verbose
@@ -447,6 +456,137 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "first response tokens: {:?}",
         responses.first().map(|r| &r.tokens)
     );
+    Ok(())
+}
+
+/// Replay a timestamped workload through a routing policy (or all of
+/// them) on the simulated heterogeneous cluster — the offline plan's
+/// contact with queueing, batching and burstiness.
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let seed = args.opt_u64("seed", 42);
+    let family = llama_family();
+    let fitted = characterize::quick_fit(&family, seed)?;
+    let sets: &[ecoserve::models::ModelSet] = &fitted.sets;
+
+    // Workload + arrival times. The default synthetic workload matches
+    // `ecoserve plan`'s (same generator, same seed derivation), so a plan
+    // saved there covers this stream shape-for-shape.
+    let arrival = ArrivalProcess::parse(&args.opt_or("arrival", "poisson:50"))?;
+    let mut arrival_rng = Rng::new(seed ^ 0xA881_4A11);
+    let (queries, arrivals_s) = match args.opt("trace") {
+        Some(path) => {
+            let records = ecoserve::workload::trace::load_records(Path::new(path))?;
+            let queries: Vec<Query> = records.iter().map(|r| r.query).collect();
+            let times = match arrival {
+                ArrivalProcess::Trace => sim::trace_times(&records)?,
+                _ => arrival.times(queries.len(), &mut arrival_rng)?,
+            };
+            (queries, times)
+        }
+        None => {
+            if arrival == ArrivalProcess::Trace {
+                anyhow::bail!("--arrival trace needs --trace FILE with t_arrive timestamps");
+            }
+            let queries = plan_workload(args, seed)?;
+            let times = arrival.times(queries.len(), &mut arrival_rng)?;
+            (queries, times)
+        }
+    };
+
+    let plan = match args.opt("plan") {
+        Some(path) => {
+            let plan = Plan::load(Path::new(path))?;
+            check_plan_matches(&plan, sets)?;
+            Some(plan)
+        }
+        None => None,
+    };
+    let (norm, zeta) = match &plan {
+        Some(p) => (p.normalizer(), p.zeta),
+        None => (
+            Normalizer::from_workload(sets, &queries),
+            args.opt_f64("zeta", 0.5),
+        ),
+    };
+
+    let max_batch = args.opt_usize("max-batch", 8);
+    let max_wait_ms = args.opt_f64("max-wait-ms", 50.0);
+    if max_batch == 0 {
+        anyhow::bail!("--max-batch must be at least 1");
+    }
+    // Mirror Simulator::new's bounds here so bad flags get a clean error
+    // instead of an assert panic.
+    if !max_wait_ms.is_finite() || !(0.0..=1e12).contains(&max_wait_ms) {
+        anyhow::bail!("--max-wait-ms must be finite and in [0, 1e12], got {max_wait_ms}");
+    }
+    let duration_s = args
+        .opt("duration")
+        .map(|s| {
+            s.parse::<f64>()
+                .ok()
+                .filter(|d| d.is_finite() && *d >= 0.0)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("--duration expects non-negative seconds, got '{s}'")
+                })
+        })
+        .transpose()?;
+    let cfg = SimConfig {
+        max_batch,
+        max_wait_s: max_wait_ms / 1000.0,
+        slo_s: args.opt_f64("slo-ms", 30_000.0) / 1000.0,
+        duration_s,
+    };
+    let spec = CompareSpec {
+        sets,
+        norm,
+        zeta,
+        plan: plan.as_ref(),
+        seed,
+        cfg,
+        arrival_label: arrival.label(),
+    };
+
+    let policy_arg = args.opt_or("policy", if plan.is_some() { "plan" } else { "greedy" });
+    if policy_arg == "compare" {
+        // Policy-comparison harness: every policy replays the same trace.
+        let kinds: Vec<PolicyKind> = PolicyKind::all()
+            .into_iter()
+            .filter(|&k| k != PolicyKind::Plan || plan.is_some())
+            .collect();
+        if plan.is_none() {
+            ecoserve::info!("no --plan given: comparing the query-level policies only");
+        }
+        let rows = sim::compare(&spec, &queries, &arrivals_s, &kinds)?;
+        println!("{}", report::sim_comparison(&rows).to_ascii());
+        if let Some(out) = args.opt("out") {
+            report::write_result(
+                Path::new(out),
+                &sim::comparison_to_json(&rows).to_string_pretty(),
+            )?;
+        }
+    } else {
+        let kind = PolicyKind::parse(&policy_arg)?;
+        let rows = sim::compare(&spec, &queries, &arrivals_s, &[kind])?;
+        let m = &rows[0];
+        println!("{}", report::sim_summary(m).to_ascii());
+        println!(
+            "  total energy {:.1} J | mean latency {:.3} s | p95 {:.3} s | \
+             queue {:.3} s | SLO({}s) {:.1}% | makespan {:.2} s",
+            m.total_energy_j,
+            m.mean_latency_s,
+            m.p95_latency_s,
+            m.mean_queue_s,
+            m.slo_s,
+            100.0 * m.slo_attainment,
+            m.makespan_s
+        );
+        if let Some((followed, fallback)) = m.plan_decisions {
+            println!("  plan followed {followed} queries, fallback routed {fallback}");
+        }
+        if let Some(out) = args.opt("out") {
+            report::write_result(Path::new(out), &m.to_json().to_string_pretty())?;
+        }
+    }
     Ok(())
 }
 

@@ -4,6 +4,7 @@
 
 use crate::config::LlmSpec;
 use crate::models::ModelSet;
+use crate::sim::SimMetrics;
 use crate::stats::AnovaTable;
 use crate::util::{fnum, Table};
 
@@ -106,6 +107,77 @@ pub fn coefficients(sets: &[ModelSet]) -> Table {
     t
 }
 
+/// Per-node summary of one simulated serving run (`ecoserve simulate`).
+pub fn sim_summary(m: &SimMetrics) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Simulated serving: policy={} arrival={} seed={} ({} queries, {} dropped)",
+            m.policy, m.arrival, m.seed, m.n_queries, m.n_dropped
+        ),
+        &[
+            "node",
+            "queries",
+            "batches",
+            "mean batch",
+            "energy (J)",
+            "busy (s)",
+            "util",
+        ],
+    );
+    for nd in &m.nodes {
+        let util = if m.makespan_s > 0.0 {
+            nd.busy_s / m.makespan_s
+        } else {
+            0.0
+        };
+        t.row(vec![
+            nd.model_id.clone(),
+            nd.queries.to_string(),
+            nd.batches.to_string(),
+            format!("{:.2}", nd.mean_batch_size()),
+            fnum(nd.energy_j, 1),
+            format!("{:.3}", nd.busy_s),
+            format!("{:.1}%", 100.0 * util),
+        ]);
+    }
+    t
+}
+
+/// Side-by-side policy comparison over the same seeded trace
+/// (`ecoserve simulate --policy compare`).
+pub fn sim_comparison(rows: &[SimMetrics]) -> Table {
+    let arrival = rows
+        .first()
+        .map(|m| m.arrival.clone())
+        .unwrap_or_default();
+    let mut t = Table::new(
+        &format!("Policy comparison on one seeded trace (arrival={arrival})"),
+        &[
+            "policy",
+            "energy (J)",
+            "mean lat (s)",
+            "p95 lat (s)",
+            "queue (s)",
+            "SLO att.",
+            "makespan (s)",
+            "util",
+        ],
+    );
+    for m in rows {
+        t.row(vec![
+            m.policy.clone(),
+            fnum(m.total_energy_j, 1),
+            format!("{:.3}", m.mean_latency_s),
+            format!("{:.3}", m.p95_latency_s),
+            format!("{:.3}", m.mean_queue_s),
+            format!("{:.1}%", 100.0 * m.slo_attainment),
+            format!("{:.2}", m.makespan_s),
+            format!("{:.1}%", 100.0 * m.mean_utilization()),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,5 +210,50 @@ mod tests {
         let t = table2(&an, &an);
         assert_eq!(t.n_rows(), 6);
         assert!(t.to_csv().contains("Interaction"));
+    }
+
+    #[test]
+    fn sim_tables_render() {
+        use crate::sim::{NodeStats, QueryOutcome};
+        let m = SimMetrics::from_outcomes(
+            "greedy".into(),
+            "poisson:10".into(),
+            42,
+            0.5,
+            30.0,
+            0,
+            None,
+            vec![NodeStats {
+                model_id: "llama2-7b".into(),
+                queries: 2,
+                batches: 1,
+                energy_j: 12.5,
+                busy_s: 0.5,
+            }],
+            vec![
+                QueryOutcome {
+                    id: 0,
+                    model: 0,
+                    t_arrive: 0.0,
+                    t_start: 0.25,
+                    t_complete: 0.75,
+                    energy_j: 6.25,
+                },
+                QueryOutcome {
+                    id: 1,
+                    model: 0,
+                    t_arrive: 0.25,
+                    t_start: 0.25,
+                    t_complete: 0.75,
+                    energy_j: 6.25,
+                },
+            ],
+        );
+        let summary = sim_summary(&m).to_ascii();
+        assert!(summary.contains("llama2-7b"), "{summary}");
+        assert!(summary.contains("policy=greedy"), "{summary}");
+        let cmp = sim_comparison(std::slice::from_ref(&m)).to_ascii();
+        assert!(cmp.contains("greedy"), "{cmp}");
+        assert!(cmp.contains("poisson:10"), "{cmp}");
     }
 }

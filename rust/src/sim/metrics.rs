@@ -1,0 +1,336 @@
+//! Per-query and per-node accounting of a simulated serving run, and its
+//! deterministic JSON artifact.
+//!
+//! The JSON layout is stable by construction: objects serialize through
+//! [`Json`] (BTreeMap-backed, keys sorted), floats use Rust's shortest
+//! round-trip formatting, and every value derives from virtual-time
+//! arithmetic — so equal `(workload, policy, seed, config)` runs emit
+//! byte-identical artifacts. CI diffs two runs to enforce this.
+
+use crate::stats::quantile;
+use crate::util::Json;
+
+/// Lifecycle of one simulated query (all times in virtual seconds from
+/// simulation start).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QueryOutcome {
+    pub id: u32,
+    /// index of the serving model/node
+    pub model: usize,
+    pub t_arrive: f64,
+    /// batch execution start (arrival + queue + batching wait)
+    pub t_start: f64,
+    pub t_complete: f64,
+    /// predicted energy attributed to this query (Eq. 6 at its shape)
+    pub energy_j: f64,
+}
+
+impl QueryOutcome {
+    pub fn latency_s(&self) -> f64 {
+        self.t_complete - self.t_arrive
+    }
+
+    pub fn queue_s(&self) -> f64 {
+        self.t_start - self.t_arrive
+    }
+}
+
+/// Accumulated counters for one simulated node (one hosted model).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NodeStats {
+    pub model_id: String,
+    pub queries: u64,
+    pub batches: u64,
+    pub energy_j: f64,
+    /// total virtual time the node's engine was executing batches
+    pub busy_s: f64,
+}
+
+impl NodeStats {
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.queries as f64 / self.batches as f64
+    }
+}
+
+/// Aggregate metrics of one simulated run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimMetrics {
+    pub policy: String,
+    pub arrival: String,
+    pub seed: u64,
+    pub zeta: f64,
+    /// queries served (arrivals inside the duration window)
+    pub n_queries: usize,
+    /// arrivals dropped by the `--duration` cap
+    pub n_dropped: usize,
+    /// last completion time (virtual seconds)
+    pub makespan_s: f64,
+    pub total_energy_j: f64,
+    pub mean_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub p95_latency_s: f64,
+    pub max_latency_s: f64,
+    pub mean_queue_s: f64,
+    /// latency SLO the attainment fraction is measured against
+    pub slo_s: f64,
+    /// fraction of queries with latency ≤ `slo_s`
+    pub slo_attainment: f64,
+    /// (plan-followed, fallback) router decisions, plan policy only
+    pub plan_decisions: Option<(u64, u64)>,
+    pub nodes: Vec<NodeStats>,
+    /// per-query lifecycle records (kept out of the JSON artifact)
+    pub outcomes: Vec<QueryOutcome>,
+}
+
+impl SimMetrics {
+    /// Aggregate raw recordings into the metrics artifact.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_outcomes(
+        policy: String,
+        arrival: String,
+        seed: u64,
+        zeta: f64,
+        slo_s: f64,
+        n_dropped: usize,
+        plan_decisions: Option<(u64, u64)>,
+        nodes: Vec<NodeStats>,
+        outcomes: Vec<QueryOutcome>,
+    ) -> SimMetrics {
+        let n = outcomes.len();
+        let latencies: Vec<f64> = outcomes.iter().map(QueryOutcome::latency_s).collect();
+        let mean = |xs: &[f64]| {
+            if xs.is_empty() {
+                0.0
+            } else {
+                xs.iter().sum::<f64>() / xs.len() as f64
+            }
+        };
+        let q = |p: f64| {
+            if latencies.is_empty() {
+                0.0
+            } else {
+                quantile(&latencies, p)
+            }
+        };
+        let queue: Vec<f64> = outcomes.iter().map(QueryOutcome::queue_s).collect();
+        SimMetrics {
+            policy,
+            arrival,
+            seed,
+            zeta,
+            n_queries: n,
+            n_dropped,
+            makespan_s: outcomes
+                .iter()
+                .map(|o| o.t_complete)
+                .fold(0.0f64, f64::max),
+            total_energy_j: outcomes.iter().map(|o| o.energy_j).sum(),
+            mean_latency_s: mean(&latencies),
+            p50_latency_s: q(0.5),
+            p95_latency_s: q(0.95),
+            max_latency_s: latencies.iter().copied().fold(0.0f64, f64::max),
+            mean_queue_s: mean(&queue),
+            slo_s,
+            slo_attainment: if n == 0 {
+                0.0
+            } else {
+                latencies.iter().filter(|&&l| l <= slo_s).count() as f64 / n as f64
+            },
+            plan_decisions,
+            nodes,
+            outcomes,
+        }
+    }
+
+    /// Mean node utilization: busy time over makespan, averaged over
+    /// nodes. Zero on an empty run.
+    pub fn mean_utilization(&self) -> f64 {
+        if self.makespan_s <= 0.0 || self.nodes.is_empty() {
+            return 0.0;
+        }
+        self.nodes
+            .iter()
+            .map(|nd| nd.busy_s / self.makespan_s)
+            .sum::<f64>()
+            / self.nodes.len() as f64
+    }
+
+    /// The deterministic metrics artifact (aggregates only; per-query
+    /// outcomes stay in memory).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("format", Json::str("ecoserve.sim-metrics")),
+            ("version", Json::num(1.0)),
+            ("policy", Json::str(self.policy.clone())),
+            ("arrival", Json::str(self.arrival.clone())),
+            // As a decimal string: the f64-backed Json would round seeds
+            // above 2^53 and the artifact could no longer reproduce the
+            // run it identifies.
+            ("seed", Json::str(self.seed.to_string())),
+            ("zeta", Json::num(self.zeta)),
+            ("n_queries", Json::num(self.n_queries as f64)),
+            ("n_dropped", Json::num(self.n_dropped as f64)),
+            ("makespan_s", Json::num(self.makespan_s)),
+            ("total_energy_j", Json::num(self.total_energy_j)),
+            ("mean_latency_s", Json::num(self.mean_latency_s)),
+            ("p50_latency_s", Json::num(self.p50_latency_s)),
+            ("p95_latency_s", Json::num(self.p95_latency_s)),
+            ("max_latency_s", Json::num(self.max_latency_s)),
+            ("mean_queue_s", Json::num(self.mean_queue_s)),
+            ("slo_s", Json::num(self.slo_s)),
+            ("slo_attainment", Json::num(self.slo_attainment)),
+            ("mean_utilization", Json::num(self.mean_utilization())),
+            (
+                "nodes",
+                Json::arr(self.nodes.iter().map(|nd| {
+                    Json::obj(vec![
+                        ("model_id", Json::str(nd.model_id.clone())),
+                        ("queries", Json::num(nd.queries as f64)),
+                        ("batches", Json::num(nd.batches as f64)),
+                        ("mean_batch_size", Json::num(nd.mean_batch_size())),
+                        ("energy_j", Json::num(nd.energy_j)),
+                        ("busy_s", Json::num(nd.busy_s)),
+                        (
+                            "utilization",
+                            Json::num(if self.makespan_s > 0.0 {
+                                nd.busy_s / self.makespan_s
+                            } else {
+                                0.0
+                            }),
+                        ),
+                    ])
+                })),
+            ),
+        ];
+        if let Some((hits, misses)) = self.plan_decisions {
+            fields.push((
+                "plan_decisions",
+                Json::obj(vec![
+                    ("followed", Json::num(hits as f64)),
+                    ("fallback", Json::num(misses as f64)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(id: u32, model: usize, arrive: f64, start: f64, complete: f64) -> QueryOutcome {
+        QueryOutcome {
+            id,
+            model,
+            t_arrive: arrive,
+            t_start: start,
+            t_complete: complete,
+            energy_j: 2.0,
+        }
+    }
+
+    fn metrics() -> SimMetrics {
+        SimMetrics::from_outcomes(
+            "greedy".into(),
+            "poisson:10".into(),
+            42,
+            0.5,
+            1.0,
+            3,
+            None,
+            vec![
+                NodeStats {
+                    model_id: "small".into(),
+                    queries: 2,
+                    batches: 1,
+                    energy_j: 4.0,
+                    busy_s: 1.0,
+                },
+                NodeStats {
+                    model_id: "big".into(),
+                    queries: 1,
+                    batches: 1,
+                    energy_j: 2.0,
+                    busy_s: 2.0,
+                },
+            ],
+            vec![
+                outcome(0, 0, 0.0, 0.5, 1.5),
+                outcome(1, 0, 0.5, 0.5, 1.5),
+                outcome(2, 1, 1.0, 1.0, 3.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn aggregates_are_correct() {
+        let m = metrics();
+        assert_eq!(m.n_queries, 3);
+        assert_eq!(m.n_dropped, 3);
+        assert_eq!(m.makespan_s, 3.0);
+        assert_eq!(m.total_energy_j, 6.0);
+        // latencies: 1.5, 1.0, 2.0
+        assert!((m.mean_latency_s - 1.5).abs() < 1e-12);
+        assert_eq!(m.max_latency_s, 2.0);
+        assert_eq!(m.p50_latency_s, 1.5);
+        // queue waits: 0.5, 0.0, 0.0
+        assert!((m.mean_queue_s - 0.5 / 3.0).abs() < 1e-12);
+        // SLO 1.0 s: only the 1.0-latency query attains it.
+        assert!((m.slo_attainment - 1.0 / 3.0).abs() < 1e-12);
+        // utilization: (1/3 + 2/3)/2
+        assert!((m.mean_utilization() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_is_deterministic_and_complete() {
+        let a = metrics().to_json().to_string_pretty();
+        let b = metrics().to_json().to_string_pretty();
+        assert_eq!(a, b);
+        // Seeds survive as exact decimal strings even above 2^53.
+        assert!(a.contains("\"seed\": \"42\""), "{a}");
+        let mut big = metrics();
+        big.seed = (1u64 << 53) + 1;
+        assert!(
+            big.to_json()
+                .to_string_pretty()
+                .contains("\"seed\": \"9007199254740993\"")
+        );
+        for key in [
+            "\"policy\"",
+            "\"arrival\"",
+            "\"total_energy_j\"",
+            "\"slo_attainment\"",
+            "\"nodes\"",
+            "\"utilization\"",
+        ] {
+            assert!(a.contains(key), "missing {key} in {a}");
+        }
+        assert!(!a.contains("plan_decisions"));
+        let mut m = metrics();
+        m.plan_decisions = Some((2, 1));
+        assert!(m.to_json().to_string_pretty().contains("plan_decisions"));
+    }
+
+    #[test]
+    fn empty_run_has_no_nans() {
+        let m = SimMetrics::from_outcomes(
+            "greedy".into(),
+            "poisson:1".into(),
+            1,
+            0.5,
+            1.0,
+            0,
+            None,
+            vec![],
+            vec![],
+        );
+        let text = m.to_json().to_string_compact();
+        assert!(!text.contains("null"), "{text}");
+        assert_eq!(m.mean_latency_s, 0.0);
+        assert_eq!(m.slo_attainment, 0.0);
+    }
+}

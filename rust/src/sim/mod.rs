@@ -1,0 +1,50 @@
+//! `ecoserve::sim` — a deterministic discrete-event serving simulator:
+//! what does an offline [`Plan`](crate::plan::Plan) actually cost when
+//! queries arrive *over time*?
+//!
+//! The paper evaluates energy-optimal schedules offline, on a workload
+//! known in full. Deployed serving is different: queries arrive under a
+//! stochastic process, batchers hold them back, engines serialize them,
+//! and queueing decides whether the plan's predicted energy/latency
+//! survives burstiness. This module closes that loop without hardware:
+//!
+//! * [`ArrivalProcess`] — Poisson, Gamma-burst, or trace-replayed
+//!   (`t_arrive` in the workload JSONL) arrival timestamps, all seeded
+//!   through [`util::Rng`](crate::util::Rng);
+//! * [`SimPolicy`] — the routing decision per arriving query:
+//!   plan-following (the production
+//!   [`Router::with_plan`](crate::coordinator::Router::with_plan)
+//!   handoff), ζ-cost greedy, round-robin, or seeded random;
+//! * [`Simulator`] — the event loop (arrive → route → batch → execute →
+//!   complete) on a virtual integer-nanosecond clock, with one
+//!   [`Batcher`](crate::coordinator::Batcher)-fronted serial engine per
+//!   hosted model, service times and energies taken from the fitted
+//!   workload models (Eqs. 6–7);
+//! * [`SimMetrics`] — per-query lifecycles and per-node accounting
+//!   (energy J, latency, queue wait, SLO attainment, utilization),
+//!   serialized as a byte-stable JSON artifact;
+//! * [`compare()`] — the same seeded trace replayed under several
+//!   policies in one invocation (`ecoserve simulate --policy compare`).
+//!
+//! # Determinism contract
+//!
+//! A run is a pure function of `(model sets, workload, arrival times,
+//! policy, seed, SimConfig)`. Virtual time is integer nanoseconds, event
+//! ties break on creation order, all randomness flows from the seed, and
+//! the JSON artifact serializes through sorted maps with shortest
+//! round-trip float formatting — so repeated runs are byte-identical
+//! (property-tested in `tests/sim.rs`, diffed in CI's `sim-smoke`).
+//! This event loop is the seam future online features (preemption, DVFS,
+//! carbon-aware ζ control) plug into.
+
+pub mod arrival;
+pub mod compare;
+pub mod metrics;
+pub mod policy;
+pub mod simulator;
+
+pub use arrival::{trace_times, ArrivalProcess};
+pub use compare::{compare, comparison_to_json, CompareSpec};
+pub use metrics::{NodeStats, QueryOutcome, SimMetrics};
+pub use policy::{PolicyKind, SimPolicy};
+pub use simulator::{SimConfig, Simulator};

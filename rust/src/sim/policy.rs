@@ -1,0 +1,159 @@
+//! Online routing policies the simulator can replay a workload through.
+//!
+//! The plan-following policy reuses the production handoff
+//! ([`Router::with_plan`](crate::coordinator::Router::with_plan)): while a
+//! query's shape still has offline budget it follows the
+//! [`Plan`](crate::plan::Plan), then falls back to ζ-cost. The baselines
+//! are the same query-independent strategies the offline Fig. 3 sweep
+//! compares against, now exercised under queueing.
+
+use crate::coordinator::{Policy, Router};
+use crate::models::{ModelSet, Normalizer};
+use crate::plan::Plan;
+use crate::util::Rng;
+use crate::workload::Query;
+
+/// Which routing policy drives the simulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Follow the offline [`Plan`]'s per-shape budgets, ζ-cost fallback.
+    Plan,
+    /// Per-query ζ-cost argmin (the online greedy the paper's §7 sketches).
+    Greedy,
+    /// Cyclic query-independent baseline.
+    RoundRobin,
+    /// Uniform-random query-independent baseline (seeded).
+    Random,
+}
+
+impl PolicyKind {
+    /// Stable textual name (CLI flag value and metrics label).
+    pub fn label(&self) -> &'static str {
+        match self {
+            PolicyKind::Plan => "plan",
+            PolicyKind::Greedy => "greedy",
+            PolicyKind::RoundRobin => "round-robin",
+            PolicyKind::Random => "random",
+        }
+    }
+
+    /// Parse the CLI spelling (`plan|greedy|round-robin|random`).
+    pub fn parse(s: &str) -> anyhow::Result<PolicyKind> {
+        Ok(match s {
+            "plan" => PolicyKind::Plan,
+            "greedy" => PolicyKind::Greedy,
+            "round-robin" => PolicyKind::RoundRobin,
+            "random" => PolicyKind::Random,
+            other => anyhow::bail!(
+                "unknown policy '{other}' (expected plan|greedy|round-robin|random|compare)"
+            ),
+        })
+    }
+
+    /// Every kind, in comparison-harness order.
+    pub fn all() -> [PolicyKind; 4] {
+        [
+            PolicyKind::Plan,
+            PolicyKind::Greedy,
+            PolicyKind::RoundRobin,
+            PolicyKind::Random,
+        ]
+    }
+}
+
+/// A routing policy instance: the decision state consumed query-by-query
+/// as the simulated stream arrives.
+pub struct SimPolicy {
+    kind: PolicyKind,
+    router: Router,
+    rng: Rng,
+}
+
+impl SimPolicy {
+    /// Build a policy over the hosted model sets. `plan` is required for
+    /// [`PolicyKind::Plan`] and ignored otherwise; `norm`/`zeta` define
+    /// the ζ-cost scoring used by greedy and by the plan fallback.
+    pub fn new(
+        kind: PolicyKind,
+        sets: &[ModelSet],
+        norm: Normalizer,
+        zeta: f64,
+        plan: Option<&Plan>,
+        seed: u64,
+    ) -> anyhow::Result<SimPolicy> {
+        let router = match kind {
+            PolicyKind::Plan => {
+                let plan = plan.ok_or_else(|| {
+                    anyhow::anyhow!("policy 'plan' needs a plan artifact (--plan FILE)")
+                })?;
+                Router::new(sets.to_vec(), norm, plan.zeta, Policy::ZetaCost).with_plan(plan)
+            }
+            PolicyKind::Greedy => Router::new(sets.to_vec(), norm, zeta, Policy::ZetaCost),
+            PolicyKind::RoundRobin => {
+                Router::new(sets.to_vec(), norm, zeta, Policy::RoundRobin)
+            }
+            // The router is only a model-table carrier here; decisions
+            // come from the seeded rng below.
+            PolicyKind::Random => Router::new(sets.to_vec(), norm, zeta, Policy::RoundRobin),
+        };
+        Ok(SimPolicy {
+            kind,
+            router,
+            rng: Rng::new(seed ^ 0x51_AA7E),
+        })
+    }
+
+    pub fn kind(&self) -> PolicyKind {
+        self.kind
+    }
+
+    /// Route one arriving query to a model index.
+    pub fn route(&mut self, q: &Query) -> usize {
+        match self.kind {
+            PolicyKind::Random => self.rng.index(self.router.sets.len()),
+            _ => self.router.route(q),
+        }
+    }
+
+    /// (plan-followed, fallback) counts, when a plan is attached.
+    pub fn plan_stats(&self) -> Option<(u64, u64)> {
+        self.router.plan.as_ref().map(|t| t.stats())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::synthetic_pair as sets;
+
+    #[test]
+    fn labels_roundtrip_and_compare_is_not_a_kind() {
+        for kind in PolicyKind::all() {
+            assert_eq!(PolicyKind::parse(kind.label()).unwrap(), kind);
+        }
+        assert!(PolicyKind::parse("compare").is_err());
+    }
+
+    #[test]
+    fn plan_policy_requires_plan() {
+        let s = sets();
+        let norm = Normalizer::from_workload(&s, &[Query { id: 0, t_in: 8, t_out: 8 }]);
+        let err = SimPolicy::new(PolicyKind::Plan, &s, norm, 0.5, None, 1).unwrap_err();
+        assert!(err.to_string().contains("--plan"), "{err}");
+    }
+
+    #[test]
+    fn random_policy_is_seed_deterministic() {
+        let s = sets();
+        let norm = Normalizer::from_workload(&s, &[Query { id: 0, t_in: 8, t_out: 8 }]);
+        let route_all = |seed: u64| -> Vec<usize> {
+            let mut p =
+                SimPolicy::new(PolicyKind::Random, &s, norm, 0.5, None, seed).unwrap();
+            (0..64)
+                .map(|i| p.route(&Query { id: i, t_in: 10, t_out: 10 }))
+                .collect()
+        };
+        assert_eq!(route_all(7), route_all(7));
+        assert_ne!(route_all(7), route_all(8));
+    }
+}

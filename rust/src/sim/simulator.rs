@@ -1,0 +1,534 @@
+//! The discrete-event serving simulator: arrival → route → batch →
+//! execute → complete, on a virtual integer-nanosecond clock.
+//!
+//! # Event model
+//!
+//! One node per hosted model, each with a
+//! [`Batcher`](crate::coordinator::Batcher) (the production accumulation
+//! queue, driven here with injected virtual timestamps) and a serial
+//! engine. Three event kinds drive the run:
+//!
+//! * **Arrive** — the policy routes the query to a node; the node's
+//!   batcher either flushes a full batch (size trigger) or the node
+//!   schedules a timeout at the batcher's deadline (age trigger).
+//! * **Timeout** — the node polls its batcher at the deadline; an aged
+//!   batch moves to the ready queue.
+//! * **Complete** — the engine frees, accounts the batch (service time =
+//!   slowest member's predicted runtime, energy = sum of members'
+//!   predicted energies), and starts the next ready batch.
+//!
+//! # Determinism contract
+//!
+//! The clock is a `u64` of virtual nanoseconds; ties pop in event-creation
+//! order (a strictly increasing sequence number). Service times and
+//! energies come from the fitted [`ModelSet`](crate::models::ModelSet)
+//! predictions, arrivals from a seeded [`Rng`](crate::util::Rng) — no
+//! wall-clock reads, no thread scheduling, no hash-order iteration feed
+//! any decision. Equal `(sets, queries, arrivals, policy, seed, config)`
+//! therefore produce identical [`SimMetrics`], byte-for-byte in JSON;
+//! `tests/sim.rs` and the CI `sim-smoke` step both enforce this.
+
+use super::metrics::{NodeStats, QueryOutcome, SimMetrics};
+use super::policy::SimPolicy;
+use crate::coordinator::{Batch, Batcher, Request};
+use crate::models::ModelSet;
+use crate::workload::Query;
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+use std::time::{Duration, Instant};
+
+/// Knobs of the simulated serving tier.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    /// per-node batch size trigger
+    pub max_batch: usize,
+    /// per-node batch age trigger, seconds
+    pub max_wait_s: f64,
+    /// latency SLO the attainment metric is measured against, seconds
+    pub slo_s: f64,
+    /// drop arrivals after this virtual time (open-ended when `None`)
+    pub duration_s: Option<f64>,
+}
+
+impl Default for SimConfig {
+    fn default() -> SimConfig {
+        SimConfig {
+            max_batch: 8,
+            max_wait_s: 0.05,
+            slo_s: 30.0,
+            duration_s: None,
+        }
+    }
+}
+
+/// A configured simulator: the hosted models plus run metadata recorded
+/// into the metrics artifact.
+pub struct Simulator<'a> {
+    sets: &'a [ModelSet],
+    cfg: SimConfig,
+    arrival_label: String,
+    seed: u64,
+    zeta: f64,
+}
+
+enum EvKind {
+    /// query index arrives
+    Arrive(usize),
+    /// node's batcher deadline fires
+    Timeout(usize),
+    /// node finishes the batch started at `start` over `members`
+    Complete {
+        node: usize,
+        start: u64,
+        members: Vec<usize>,
+    },
+}
+
+struct Ev {
+    t: u64,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Ev) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+
+impl Eq for Ev {}
+
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Ev) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Ev {
+    /// Reversed on `(t, seq)` so `BinaryHeap` (a max-heap) pops the
+    /// earliest event, FIFO among ties.
+    fn cmp(&self, other: &Ev) -> Ordering {
+        other.t.cmp(&self.t).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct Node {
+    batcher: Batcher,
+    busy: bool,
+    ready: VecDeque<Batch>,
+    /// dedupes Timeout events: only the one matching this value acts
+    next_timeout: Option<u64>,
+    stats: NodeStats,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(sets: &'a [ModelSet], cfg: SimConfig) -> Simulator<'a> {
+        assert!(!sets.is_empty(), "simulator needs at least one model");
+        assert!(cfg.max_batch > 0, "max_batch must be positive");
+        assert!(
+            cfg.max_wait_s.is_finite() && (0.0..=1e9).contains(&cfg.max_wait_s),
+            "max_wait_s must be finite and in [0, 1e9]"
+        );
+        Simulator {
+            sets,
+            cfg,
+            arrival_label: "trace".to_string(),
+            seed: 0,
+            zeta: 0.5,
+        }
+    }
+
+    /// Record run metadata (arrival process label, seed, ζ) into the
+    /// produced artifact.
+    pub fn labeled(mut self, arrival: &str, seed: u64, zeta: f64) -> Simulator<'a> {
+        self.arrival_label = arrival.to_string();
+        self.seed = seed;
+        self.zeta = zeta;
+        self
+    }
+
+    /// Replay `queries` arriving at `arrivals_s` (seconds, parallel to
+    /// `queries`, any order) through `policy` on the simulated cluster.
+    pub fn run(
+        &self,
+        queries: &[Query],
+        arrivals_s: &[f64],
+        policy: &mut SimPolicy,
+    ) -> anyhow::Result<SimMetrics> {
+        if queries.len() != arrivals_s.len() {
+            anyhow::bail!(
+                "{} queries but {} arrival times",
+                queries.len(),
+                arrivals_s.len()
+            );
+        }
+        // The upper bound keeps virtual nanoseconds far inside u64/Instant
+        // range (1e9 s ≈ 31 years of trace time).
+        if let Some(bad) = arrivals_s
+            .iter()
+            .find(|t| !t.is_finite() || **t < 0.0 || **t > 1e9)
+        {
+            anyhow::bail!("arrival times must be finite, >= 0 and <= 1e9 s, got {bad}");
+        }
+
+        // Virtual clock: u64 nanoseconds mapped onto a fixed anchor
+        // Instant for the Batcher. All comparisons reduce to exact
+        // integer-nanosecond arithmetic.
+        let anchor = Instant::now();
+        let to_ns = |s: f64| -> u64 { (s * 1e9).round() as u64 };
+        let ns_to_s = |ns: u64| -> f64 { ns as f64 / 1e9 };
+        let at = |ns: u64| -> Instant { anchor + Duration::from_nanos(ns) };
+
+        let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
+        let mut seq = 0u64;
+
+        // Arrivals in time order (stable on index for equal timestamps);
+        // the duration cap drops late arrivals up front.
+        let mut order: Vec<usize> = (0..queries.len()).collect();
+        order.sort_by(|&a, &b| {
+            arrivals_s[a]
+                .partial_cmp(&arrivals_s[b])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let horizon_ns = self.cfg.duration_s.map(to_ns);
+        let mut n_dropped = 0usize;
+        for &qi in &order {
+            let t = to_ns(arrivals_s[qi]);
+            if horizon_ns.is_some_and(|h| t > h) {
+                n_dropped += 1;
+                continue;
+            }
+            heap.push(Ev {
+                t,
+                seq,
+                kind: EvKind::Arrive(qi),
+            });
+            seq += 1;
+        }
+
+        let max_wait = Duration::from_secs_f64(self.cfg.max_wait_s);
+        let mut nodes: Vec<Node> = self
+            .sets
+            .iter()
+            .map(|s| Node {
+                batcher: Batcher::new(&s.model_id, self.cfg.max_batch, max_wait),
+                busy: false,
+                ready: VecDeque::new(),
+                next_timeout: None,
+                stats: NodeStats {
+                    model_id: s.model_id.clone(),
+                    ..NodeStats::default()
+                },
+            })
+            .collect();
+
+        let mut arrive_ns: Vec<u64> = vec![0; queries.len()];
+        let mut outcomes: Vec<QueryOutcome> = Vec::with_capacity(queries.len());
+
+        // Start the next ready batch on an idle node: service time is the
+        // slowest member's predicted runtime (lockstep batch execution).
+        let try_start =
+            |k: usize, t: u64, nodes: &mut Vec<Node>, heap: &mut BinaryHeap<Ev>, seq: &mut u64| {
+                let node = &mut nodes[k];
+                if node.busy {
+                    return;
+                }
+                let Some(batch) = node.ready.pop_front() else {
+                    return;
+                };
+                let members: Vec<usize> = batch.requests.iter().map(|r| r.id as usize).collect();
+                let service_s = members
+                    .iter()
+                    .map(|&qi| {
+                        let q = &queries[qi];
+                        self.sets[k].runtime.predict(q.t_in as f64, q.t_out as f64)
+                    })
+                    .fold(0.0f64, f64::max)
+                    .max(0.0);
+                node.busy = true;
+                heap.push(Ev {
+                    t: t.saturating_add(to_ns(service_s)),
+                    seq: *seq,
+                    kind: EvKind::Complete {
+                        node: k,
+                        start: t,
+                        members,
+                    },
+                });
+                *seq += 1;
+            };
+
+        // Schedule (or refresh) the node's age-flush wakeup at the
+        // batcher's deadline.
+        let schedule_timeout =
+            |k: usize, nodes: &mut Vec<Node>, heap: &mut BinaryHeap<Ev>, seq: &mut u64| {
+                let node = &mut nodes[k];
+                let Some(deadline) = node.batcher.deadline() else {
+                    return;
+                };
+                let dl_ns = deadline.duration_since(anchor).as_nanos() as u64;
+                if node.next_timeout != Some(dl_ns) {
+                    node.next_timeout = Some(dl_ns);
+                    heap.push(Ev {
+                        t: dl_ns,
+                        seq: *seq,
+                        kind: EvKind::Timeout(k),
+                    });
+                    *seq += 1;
+                }
+            };
+
+        while let Some(Ev { t, kind, .. }) = heap.pop() {
+            match kind {
+                EvKind::Arrive(qi) => {
+                    let q = &queries[qi];
+                    let k = policy.route(q);
+                    debug_assert!(k < self.sets.len());
+                    arrive_ns[qi] = t;
+                    let req = Request {
+                        id: qi as u64,
+                        prompt: Vec::new(),
+                        n_gen: q.t_out as usize,
+                        submitted: at(t),
+                    };
+                    if let Some(batch) = nodes[k].batcher.push_at(req, at(t)) {
+                        nodes[k].ready.push_back(batch);
+                        try_start(k, t, &mut nodes, &mut heap, &mut seq);
+                    } else {
+                        schedule_timeout(k, &mut nodes, &mut heap, &mut seq);
+                    }
+                }
+                EvKind::Timeout(k) => {
+                    if nodes[k].next_timeout != Some(t) {
+                        continue; // superseded by a size flush or later deadline
+                    }
+                    nodes[k].next_timeout = None;
+                    if let Some(batch) = nodes[k].batcher.poll(at(t)) {
+                        nodes[k].ready.push_back(batch);
+                        try_start(k, t, &mut nodes, &mut heap, &mut seq);
+                    }
+                    schedule_timeout(k, &mut nodes, &mut heap, &mut seq);
+                }
+                EvKind::Complete {
+                    node: k,
+                    start,
+                    members,
+                } => {
+                    let node = &mut nodes[k];
+                    node.busy = false;
+                    node.stats.batches += 1;
+                    node.stats.queries += members.len() as u64;
+                    node.stats.busy_s += ns_to_s(t - start);
+                    for qi in members {
+                        let q = &queries[qi];
+                        let energy_j =
+                            self.sets[k].energy.predict(q.t_in as f64, q.t_out as f64);
+                        node.stats.energy_j += energy_j;
+                        outcomes.push(QueryOutcome {
+                            id: q.id,
+                            model: k,
+                            t_arrive: ns_to_s(arrive_ns[qi]),
+                            t_start: ns_to_s(start),
+                            t_complete: ns_to_s(t),
+                            energy_j,
+                        });
+                    }
+                    try_start(k, t, &mut nodes, &mut heap, &mut seq);
+                }
+            }
+        }
+
+        // Conservation invariant: every admitted arrival completed.
+        let admitted = queries.len() - n_dropped;
+        if outcomes.len() != admitted {
+            anyhow::bail!(
+                "simulator lost queries: {} admitted, {} completed",
+                admitted,
+                outcomes.len()
+            );
+        }
+        for node in &nodes {
+            debug_assert!(node.batcher.is_empty() && node.ready.is_empty() && !node.busy);
+        }
+
+        Ok(SimMetrics::from_outcomes(
+            policy.kind().label().to_string(),
+            self.arrival_label.clone(),
+            self.seed,
+            self.zeta,
+            self.cfg.slo_s,
+            n_dropped,
+            policy.plan_stats(),
+            nodes.into_iter().map(|n| n.stats).collect(),
+            outcomes,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Normalizer;
+    use crate::sim::PolicyKind;
+    use crate::testkit::synthetic_pair as sets;
+
+    fn q(id: u32, t_in: u32, t_out: u32) -> Query {
+        Query { id, t_in, t_out }
+    }
+
+    fn norm(sets: &[ModelSet]) -> Normalizer {
+        let probe: Vec<Query> = (1..50).map(|i| q(i, 10 * i, 20 * i)).collect();
+        Normalizer::from_workload(sets, &probe)
+    }
+
+    fn greedy(s: &[ModelSet], zeta: f64) -> SimPolicy {
+        SimPolicy::new(PolicyKind::Greedy, s, norm(s), zeta, None, 7).unwrap()
+    }
+
+    #[test]
+    fn single_query_waits_out_the_age_trigger() {
+        let s = sets();
+        let cfg = SimConfig {
+            max_batch: 8,
+            max_wait_s: 0.5,
+            ..SimConfig::default()
+        };
+        let queries = vec![q(0, 100, 100)];
+        let m = Simulator::new(&s, cfg)
+            .run(&queries, &[1.0], &mut greedy(&s, 1.0))
+            .unwrap();
+        assert_eq!(m.n_queries, 1);
+        let o = m.outcomes[0];
+        // ζ=1 greedy routes to the energy-min model ("small").
+        assert_eq!(o.model, 0);
+        assert_eq!(o.t_arrive, 1.0);
+        // Alone in the batcher: starts exactly at arrival + max_wait.
+        assert!((o.t_start - 1.5).abs() < 1e-9, "t_start={}", o.t_start);
+        let service = s[0].runtime.predict(100.0, 100.0);
+        assert!(
+            (o.t_complete - (1.5 + service)).abs() < 1e-6,
+            "t_complete={}",
+            o.t_complete
+        );
+        assert!((m.total_energy_j - s[0].energy.predict(100.0, 100.0)).abs() < 1e-9);
+        assert_eq!(m.nodes[0].batches, 1);
+        assert_eq!(m.nodes[1].batches, 0);
+    }
+
+    #[test]
+    fn size_trigger_starts_immediately() {
+        let s = sets();
+        let cfg = SimConfig {
+            max_batch: 2,
+            max_wait_s: 10.0,
+            ..SimConfig::default()
+        };
+        let queries = vec![q(0, 50, 50), q(1, 100, 100)];
+        let m = Simulator::new(&s, cfg)
+            .run(&queries, &[0.0, 0.0], &mut greedy(&s, 1.0))
+            .unwrap();
+        // Both land on "small"; batch fills instantly → zero queue wait.
+        assert_eq!(m.mean_queue_s, 0.0);
+        assert_eq!(m.nodes[0].batches, 1);
+        // Lockstep batch: both complete at the slower member's runtime.
+        let slow = s[0].runtime.predict(100.0, 100.0);
+        for o in &m.outcomes {
+            assert!((o.t_complete - slow).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn busy_engine_queues_the_next_batch() {
+        let s = sets();
+        let cfg = SimConfig {
+            max_batch: 1, // every query is its own batch
+            max_wait_s: 10.0,
+            ..SimConfig::default()
+        };
+        let queries = vec![q(0, 200, 400), q(1, 200, 400)];
+        let m = Simulator::new(&s, cfg)
+            .run(&queries, &[0.0, 0.0], &mut greedy(&s, 1.0))
+            .unwrap();
+        let service = s[0].runtime.predict(200.0, 400.0);
+        let mut by_id = m.outcomes.clone();
+        by_id.sort_by_key(|o| o.id);
+        // First batch runs [0, service); second starts when the engine
+        // frees, so its queue wait is one full service time.
+        assert!((by_id[0].t_start - 0.0).abs() < 1e-9);
+        assert!((by_id[1].t_start - service).abs() < 1e-6);
+        assert!((m.makespan_s - 2.0 * service).abs() < 1e-6);
+        assert!((m.nodes[0].busy_s - 2.0 * service).abs() < 1e-6);
+    }
+
+    #[test]
+    fn duration_cap_drops_late_arrivals() {
+        let s = sets();
+        let cfg = SimConfig {
+            duration_s: Some(1.0),
+            ..SimConfig::default()
+        };
+        let queries = vec![q(0, 10, 10), q(1, 10, 10), q(2, 10, 10)];
+        let m = Simulator::new(&s, cfg)
+            .run(&queries, &[0.5, 2.0, 1.0], &mut greedy(&s, 0.5))
+            .unwrap();
+        assert_eq!(m.n_queries, 2);
+        assert_eq!(m.n_dropped, 1);
+        let served: Vec<u32> = {
+            let mut ids: Vec<u32> = m.outcomes.iter().map(|o| o.id).collect();
+            ids.sort();
+            ids
+        };
+        assert_eq!(served, vec![0, 2]);
+    }
+
+    #[test]
+    fn conservation_across_random_streams() {
+        use crate::testkit::{forall, Config};
+        let s = sets();
+        forall(Config::default().cases(30), |rng| {
+            let n = rng.int_range(1, 120) as usize;
+            let queries: Vec<Query> = (0..n)
+                .map(|i| {
+                    q(
+                        i as u32,
+                        rng.int_range(1, 500) as u32,
+                        rng.int_range(1, 500) as u32,
+                    )
+                })
+                .collect();
+            let arrivals: Vec<f64> = (0..n).map(|_| rng.range(0.0, 3.0)).collect();
+            let cfg = SimConfig {
+                max_batch: rng.int_range(1, 6) as usize,
+                max_wait_s: rng.range(0.0, 0.2),
+                ..SimConfig::default()
+            };
+            let mut policy = greedy(&s, rng.range(0.0, 1.0));
+            let m = Simulator::new(&s, cfg)
+                .run(&queries, &arrivals, &mut policy)
+                .unwrap();
+            assert_eq!(m.n_queries, n);
+            // Each query served exactly once.
+            let mut ids: Vec<u32> = m.outcomes.iter().map(|o| o.id).collect();
+            ids.sort();
+            assert_eq!(ids, (0..n as u32).collect::<Vec<_>>());
+            // Causality: arrive ≤ start ≤ complete for every query.
+            for o in &m.outcomes {
+                assert!(o.t_arrive <= o.t_start + 1e-12);
+                assert!(o.t_start <= o.t_complete + 1e-12);
+            }
+            // Energy is conserved: node totals equal the outcome sum.
+            let node_total: f64 = m.nodes.iter().map(|nd| nd.energy_j).sum();
+            assert!((node_total - m.total_energy_j).abs() < 1e-6);
+        });
+    }
+
+    #[test]
+    fn mismatched_arrival_lengths_error() {
+        let s = sets();
+        let err = Simulator::new(&s, SimConfig::default())
+            .run(&[q(0, 1, 1)], &[0.0, 1.0], &mut greedy(&s, 0.5))
+            .unwrap_err();
+        assert!(err.to_string().contains("arrival"), "{err}");
+    }
+}

@@ -1,0 +1,72 @@
+//! Shared synthetic model fixtures for unit and integration suites.
+//!
+//! Several test modules (router, simulator, policies, comparison harness)
+//! need small fitted [`ModelSet`]s with paper-like coefficient magnitudes
+//! and a clear cheap↔accurate ordering. Building them here keeps the
+//! magic coefficients in one place: a model of `scale` s costs s× the
+//! base energy/runtime, so "small" is always the ζ=1 argmin and the most
+//! accurate model is always the ζ=0 argmin.
+
+use crate::models::{AccuracyModel, ModelSet, Target, WorkloadModel};
+
+/// One synthetic fitted model: bilinear energy/runtime models scaled by
+/// `scale`, leaderboard accuracy `accuracy` (percent).
+pub fn synthetic_set(id: &str, scale: f64, accuracy: f64) -> ModelSet {
+    ModelSet {
+        model_id: id.to_string(),
+        energy: WorkloadModel {
+            model_id: id.to_string(),
+            target: Target::EnergyJ,
+            coefs: [0.6 * scale, 9.0 * scale, 0.004 * scale],
+            r2: 0.97,
+            f_stat: 1e3,
+            p_value: 0.0,
+            n_obs: 100,
+        },
+        runtime: WorkloadModel {
+            model_id: id.to_string(),
+            target: Target::RuntimeS,
+            coefs: [2e-3 * scale, 3e-2 * scale, 1e-5 * scale],
+            r2: 0.97,
+            f_stat: 1e3,
+            p_value: 0.0,
+            n_obs: 100,
+        },
+        accuracy: AccuracyModel::new(id, accuracy),
+    }
+}
+
+/// Two hosted models: cheap-but-weak "small", costly-but-strong "big".
+pub fn synthetic_pair() -> Vec<ModelSet> {
+    vec![
+        synthetic_set("small", 1.0, 50.97),
+        synthetic_set("big", 6.5, 64.52),
+    ]
+}
+
+/// Three hosted models spanning the cost/accuracy frontier.
+pub fn synthetic_trio() -> Vec<ModelSet> {
+    vec![
+        synthetic_set("small", 1.0, 50.97),
+        synthetic_set("mid", 1.8, 55.69),
+        synthetic_set("big", 6.5, 64.52),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_orders_cost_and_accuracy() {
+        let trio = synthetic_trio();
+        assert_eq!(trio.len(), 3);
+        for pair in trio.windows(2) {
+            // Costlier in both energy and runtime, but more accurate.
+            assert!(pair[0].energy.predict(50.0, 50.0) < pair[1].energy.predict(50.0, 50.0));
+            assert!(pair[0].runtime.predict(50.0, 50.0) < pair[1].runtime.predict(50.0, 50.0));
+            assert!(pair[0].accuracy.a_k < pair[1].accuracy.a_k);
+        }
+        assert_eq!(synthetic_pair()[1].model_id, "big");
+    }
+}

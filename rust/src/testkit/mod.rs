@@ -1,7 +1,10 @@
 //! Property-testing helper (no `proptest` in the offline cache): runs a
 //! property over many seeded random cases and, on failure, reports the
-//! first failing seed so the case can be replayed deterministically.
+//! first failing seed so the case can be replayed deterministically —
+//! plus shared synthetic model fixtures for the serving/sim test suites.
 
+pub mod fixtures;
 pub mod prop;
 
+pub use fixtures::{synthetic_pair, synthetic_set, synthetic_trio};
 pub use prop::{forall, Config};

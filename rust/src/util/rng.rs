@@ -138,6 +138,38 @@ impl Rng {
         -(1.0 - self.f64()).ln() / lambda
     }
 
+    /// Gamma deviate with the given `shape` and `scale` (mean
+    /// `shape·scale`, variance `shape·scale²`) via Marsaglia–Tsang
+    /// squeeze–rejection, with the `U^{1/shape}` boost for `shape < 1`.
+    /// Inter-arrival gaps drawn from this with shape < 1 are burstier
+    /// than exponential (CV² = 1/shape > 1), which is how the serving
+    /// simulator models bursty traffic.
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        debug_assert!(shape > 0.0 && scale > 0.0);
+        if shape < 1.0 {
+            // Gamma(a) = Gamma(a+1) · U^{1/a}
+            let u = 1.0 - self.f64(); // (0, 1]: keeps powf finite
+            return self.gamma(shape + 1.0, scale) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = 1.0 - self.f64(); // (0, 1]: keeps ln finite
+            if u < 1.0 - 0.0331 * x * x * x * x {
+                return d * v3 * scale;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln()) {
+                return d * v3 * scale;
+            }
+        }
+    }
+
     /// Zipf-like draw over ranks [0, n) with exponent `s` (inverse-CDF over
     /// precomputed weights is avoided; rejection sampling per Devroye).
     pub fn zipf(&mut self, n: usize, s: f64) -> usize {
@@ -324,6 +356,26 @@ mod tests {
         let mut b = root.fork(2);
         let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
         assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn gamma_moments_both_regimes() {
+        let mut r = Rng::new(41);
+        let n = 100_000;
+        // shape ≥ 1 (Marsaglia–Tsang path): mean k·θ, var k·θ².
+        let xs: Vec<f64> = (0..n).map(|_| r.gamma(4.0, 0.5)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+        // shape < 1 (boosted path): burstier than exponential, CV² = 1/k.
+        let ys: Vec<f64> = (0..n).map(|_| r.gamma(0.25, 4.0)).collect();
+        assert!(ys.iter().all(|&y| y >= 0.0));
+        let mean_y = ys.iter().sum::<f64>() / n as f64;
+        let var_y = ys.iter().map(|y| (y - mean_y) * (y - mean_y)).sum::<f64>() / n as f64;
+        let cv2 = var_y / (mean_y * mean_y);
+        assert!((mean_y - 1.0).abs() < 0.05, "mean={mean_y}");
+        assert!((cv2 - 4.0).abs() < 0.5, "cv2={cv2}");
     }
 
     #[test]

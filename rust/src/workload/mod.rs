@@ -9,3 +9,4 @@ pub mod trace;
 pub use alpaca::{generate, paper_sample, AlpacaParams};
 pub use predictor::{predicted_workload, LengthPredictor};
 pub use query::{stats, Query, Shape, WorkloadStats};
+pub use trace::TraceRecord;

@@ -1,29 +1,72 @@
 //! Workload trace I/O: JSONL with one `{"id":…,"t_in":…,"t_out":…}` object
 //! per line, so real traces (e.g. tokenized Alpaca) drop into the same
 //! pipeline as the synthetic generator.
+//!
+//! A line may additionally carry an optional `"t_arrive"` field — the
+//! arrival timestamp in seconds from trace start — which the serving
+//! simulator ([`crate::sim`]) replays verbatim (`--arrival trace`). The
+//! three-field form stays valid: readers ignore a missing `t_arrive`, and
+//! writers only emit it when present, so old traces and old readers keep
+//! working unchanged.
 
 use super::query::Query;
 use crate::util::Json;
 use std::path::Path;
 
-/// Serialize queries to JSONL text.
+/// One trace line: the query plus its optional arrival time (seconds from
+/// trace start; `None` for untimed offline traces).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRecord {
+    pub query: Query,
+    pub t_arrive: Option<f64>,
+}
+
+impl TraceRecord {
+    pub fn untimed(query: Query) -> TraceRecord {
+        TraceRecord {
+            query,
+            t_arrive: None,
+        }
+    }
+}
+
+/// Serialize queries to JSONL text (three-field form, no arrival times).
 pub fn to_jsonl(queries: &[Query]) -> String {
+    let records: Vec<TraceRecord> = queries.iter().copied().map(TraceRecord::untimed).collect();
+    to_jsonl_records(&records)
+}
+
+/// Serialize trace records to JSONL text; `t_arrive` is emitted only for
+/// records that carry one, keeping untimed traces in the legacy layout.
+pub fn to_jsonl_records(records: &[TraceRecord]) -> String {
     let mut out = String::new();
-    for q in queries {
-        let obj = Json::obj(vec![
-            ("id", Json::num(q.id as f64)),
-            ("t_in", Json::num(q.t_in as f64)),
-            ("t_out", Json::num(q.t_out as f64)),
-        ]);
-        out.push_str(&obj.to_string_compact());
+    for r in records {
+        let mut fields = vec![
+            ("id", Json::num(r.query.id as f64)),
+            ("t_in", Json::num(r.query.t_in as f64)),
+            ("t_out", Json::num(r.query.t_out as f64)),
+        ];
+        if let Some(t) = r.t_arrive {
+            fields.push(("t_arrive", Json::num(t)));
+        }
+        out.push_str(&Json::obj(fields).to_string_compact());
         out.push('\n');
     }
     out
 }
 
-/// Parse queries from JSONL text.
+/// Parse queries from JSONL text, dropping any arrival times.
 pub fn from_jsonl(text: &str) -> anyhow::Result<Vec<Query>> {
-    let mut queries = Vec::new();
+    Ok(from_jsonl_records(text)?
+        .into_iter()
+        .map(|r| r.query)
+        .collect())
+}
+
+/// Parse trace records from JSONL text. `t_arrive`, when present, must be
+/// a finite number ≥ 0.
+pub fn from_jsonl_records(text: &str) -> anyhow::Result<Vec<TraceRecord>> {
+    let mut records = Vec::new();
     for (i, line) in text.lines().enumerate() {
         if line.trim().is_empty() {
             continue;
@@ -36,25 +79,55 @@ pub fn from_jsonl(text: &str) -> anyhow::Result<Vec<Query>> {
                 .map(|x| x as u32)
                 .ok_or_else(|| anyhow::anyhow!("trace line {}: missing/invalid '{k}'", i + 1))
         };
-        queries.push(Query {
-            id: get("id")?,
-            t_in: get("t_in")?,
-            t_out: get("t_out")?,
+        let t_arrive = match v.get("t_arrive") {
+            Json::Null => None,
+            j => {
+                let t = j.as_f64().ok_or_else(|| {
+                    anyhow::anyhow!("trace line {}: 't_arrive' must be a number", i + 1)
+                })?;
+                if !t.is_finite() || t < 0.0 {
+                    anyhow::bail!(
+                        "trace line {}: 't_arrive' must be finite and >= 0, got {t}",
+                        i + 1
+                    );
+                }
+                Some(t)
+            }
+        };
+        records.push(TraceRecord {
+            query: Query {
+                id: get("id")?,
+                t_in: get("t_in")?,
+                t_out: get("t_out")?,
+            },
+            t_arrive,
         });
     }
-    Ok(queries)
+    Ok(records)
 }
 
 pub fn save(queries: &[Query], path: &Path) -> anyhow::Result<()> {
+    write_text(path, &to_jsonl(queries))
+}
+
+pub fn save_records(records: &[TraceRecord], path: &Path) -> anyhow::Result<()> {
+    write_text(path, &to_jsonl_records(records))
+}
+
+fn write_text(path: &Path, text: &str) -> anyhow::Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    std::fs::write(path, to_jsonl(queries))?;
+    std::fs::write(path, text)?;
     Ok(())
 }
 
 pub fn load(path: &Path) -> anyhow::Result<Vec<Query>> {
     from_jsonl(&std::fs::read_to_string(path)?)
+}
+
+pub fn load_records(path: &Path) -> anyhow::Result<Vec<TraceRecord>> {
+    from_jsonl_records(&std::fs::read_to_string(path)?)
 }
 
 #[cfg(test)]
@@ -74,6 +147,37 @@ mod tests {
     }
 
     #[test]
+    fn untimed_serialization_keeps_legacy_layout() {
+        let qs = vec![Query { id: 3, t_in: 7, t_out: 9 }];
+        let text = to_jsonl(&qs);
+        assert!(!text.contains("t_arrive"), "{text}");
+    }
+
+    #[test]
+    fn timed_records_roundtrip_exactly() {
+        let records = vec![
+            TraceRecord {
+                query: Query { id: 0, t_in: 8, t_out: 16 },
+                t_arrive: Some(0.0),
+            },
+            TraceRecord {
+                query: Query { id: 1, t_in: 100, t_out: 7 },
+                t_arrive: Some(1.0625),
+            },
+            TraceRecord::untimed(Query { id: 2, t_in: 5, t_out: 5 }),
+        ];
+        let text = to_jsonl_records(&records);
+        let back = from_jsonl_records(&text).unwrap();
+        assert_eq!(back, records);
+        // Legacy readers see the same queries, times dropped.
+        let plain = from_jsonl(&text).unwrap();
+        assert_eq!(
+            plain,
+            records.iter().map(|r| r.query).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
     fn skips_blank_lines() {
         let text = "{\"id\":0,\"t_in\":1,\"t_out\":2}\n\n";
         assert_eq!(from_jsonl(text).unwrap().len(), 1);
@@ -84,5 +188,25 @@ mod tests {
         assert!(from_jsonl("not json\n").is_err());
         assert!(from_jsonl("{\"id\":0}\n").is_err());
         assert!(from_jsonl("{\"id\":0,\"t_in\":-3,\"t_out\":2}\n").is_err());
+    }
+
+    #[test]
+    fn malformed_errors_name_line_and_field() {
+        let err = from_jsonl_records("{\"id\":0,\"t_in\":1,\"t_out\":2}\n{\"id\":1}\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("t_in") || err.contains("t_out"), "{err}");
+
+        let err = from_jsonl_records("{\"id\":0,\"t_in\":1,\"t_out\":2,\"t_arrive\":\"soon\"}\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(err.contains("t_arrive"), "{err}");
+
+        let err = from_jsonl_records("{\"id\":0,\"t_in\":1,\"t_out\":2,\"t_arrive\":-0.5}\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains(">= 0"), "{err}");
     }
 }

@@ -384,3 +384,72 @@ fn solver_backends_share_the_interface() {
         assert_eq!(a.model_of.len(), queries.len());
     }
 }
+
+/// Golden-fixture forward-compat: the committed v1 artifact must keep
+/// loading exactly (field-for-field and byte-for-byte on re-save), and a
+/// future-versioned envelope must be rejected with a clear error — the
+/// contract that lets old plans outlive layout changes.
+#[test]
+fn golden_v1_plan_fixture_round_trips_and_gates_versions() {
+    use ecoserve::plan::{ShapeFlow, PLAN_FORMAT, PLAN_VERSION};
+    use ecoserve::util::Json;
+    use ecoserve::workload::Shape;
+
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/plan_v1.json");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let plan = Plan::load(&path).unwrap();
+
+    let expected = Plan {
+        version: 1,
+        zeta: 0.375,
+        gammas: vec![0.25, 0.75],
+        mode: CapacityMode::Eq3Only,
+        solver: "bucketed".to_string(),
+        model_ids: vec!["small".to_string(), "big".to_string()],
+        n_queries: 5,
+        objective: -0.125,
+        norm_max: [123.5, 66_000.0, 9.25],
+        shape_flows: vec![
+            ShapeFlow {
+                shape: Shape { t_in: 8, t_out: 16 },
+                flows: vec![2, 1],
+            },
+            ShapeFlow {
+                shape: Shape { t_in: 100, t_out: 7 },
+                flows: vec![0, 2],
+            },
+        ],
+    };
+    assert_eq!(plan, expected, "v1 fixture no longer parses field-for-field");
+
+    // Re-serialization reproduces the committed bytes exactly: the writer
+    // (key order, indentation, number formatting) is part of the format.
+    assert_eq!(plan.to_json().to_string_pretty(), text);
+    // And semantically: parse(fixture) == to_json(load(fixture)).
+    assert_eq!(Json::parse(&text).unwrap(), plan.to_json());
+
+    // An unknown (newer) version in the envelope is rejected, loudly.
+    let mut doc = plan.to_json();
+    if let Json::Obj(m) = &mut doc {
+        m.insert("version".into(), Json::num((PLAN_VERSION + 1) as f64));
+    }
+    let tmp = std::path::Path::new(env!("CARGO_TARGET_TMPDIR")).join("plan_future.json");
+    std::fs::write(&tmp, doc.to_string_pretty()).unwrap();
+    let err = Plan::load(&tmp).unwrap_err().to_string();
+    std::fs::remove_file(&tmp).ok();
+    assert!(
+        err.contains("newer than supported"),
+        "unclear future-version error: {err}"
+    );
+    assert!(err.contains(&format!("{}", PLAN_VERSION + 1)), "{err}");
+
+    // A foreign format marker is rejected too.
+    let mut doc = plan.to_json();
+    if let Json::Obj(m) = &mut doc {
+        m.insert("format".into(), Json::str("not.a.plan"));
+    }
+    let err = Plan::from_json(&doc).unwrap_err().to_string();
+    assert!(err.contains("not an ecoserve plan"), "{err}");
+    assert_eq!(PLAN_FORMAT, "ecoserve.plan");
+}
