@@ -1,16 +1,18 @@
 #!/usr/bin/env python3
-"""Gate BENCH_sched.json against a committed baseline.
+"""Gate a bench JSON (BENCH_sched.json, BENCH_sim.json) against a
+committed baseline.
 
 Usage: check_bench_regression.py BASELINE ACTUAL [--factor 2.0]
 
 The baseline mirrors the bench's JSON layout but only carries the numeric
 keys to gate on; every value is a *ceiling in seconds* chosen generously
 for CI runners. A measurement regresses when it exceeds factor x its
-baseline ceiling. "series" / "cold" style lists are matched entry-by-entry
-on `n_queries`; plain objects are walked recursively; keys present only in
-the actual output are ignored, while a baseline key missing from the
-actual output is an error (the bench stopped emitting something we gate
-on).
+baseline ceiling. "series" style lists are matched entry-by-entry on the
+identity keys the baseline entry carries (any of `n_queries`, `policy`,
+`n_lines`, `name` — so one size can have several gated rows, e.g. one per
+policy); plain objects are walked recursively; keys present only in the
+actual output are ignored, while a baseline key missing from the actual
+output is an error (the bench stopped emitting something we gate on).
 
 Exit code 0 = within the band, 1 = regression or structural mismatch.
 """
@@ -19,6 +21,11 @@ import argparse
 import json
 import sys
 
+# Keys that identify a list entry (matched, never gated).
+IDENTITY_KEYS = ("n_queries", "policy", "n_lines", "name")
+# Annotation keys (never gated).
+SKIP_KEYS = ("bench", "note", "smoke") + IDENTITY_KEYS
+
 
 def walk(baseline, actual, path, factor, failures):
     if isinstance(baseline, dict):
@@ -26,7 +33,7 @@ def walk(baseline, actual, path, factor, failures):
             failures.append(f"{path}: expected an object in the bench output")
             return
         for key, bval in baseline.items():
-            if key in ("bench", "note", "n_queries", "smoke"):
+            if key in SKIP_KEYS:
                 continue
             if key not in actual:
                 failures.append(f"{path}.{key}: missing from the bench output")
@@ -37,18 +44,36 @@ def walk(baseline, actual, path, factor, failures):
             failures.append(f"{path}: expected a list in the bench output")
             return
         for bentry in baseline:
-            nq = bentry.get("n_queries") if isinstance(bentry, dict) else None
-            if nq is None:
-                failures.append(f"{path}: baseline list entries need n_queries")
-                continue
-            match = next(
-                (a for a in actual if isinstance(a, dict) and a.get("n_queries") == nq),
-                None,
+            ident = (
+                {k: bentry[k] for k in IDENTITY_KEYS if k in bentry}
+                if isinstance(bentry, dict)
+                else {}
             )
-            if match is None:
-                failures.append(f"{path}[n_queries={nq:g}]: missing from the bench output")
+            if not ident:
+                failures.append(
+                    f"{path}: baseline list entries need an identity key "
+                    f"(one of {', '.join(IDENTITY_KEYS)})"
+                )
                 continue
-            walk(bentry, match, f"{path}[n_queries={nq:g}]", factor, failures)
+            label = ",".join(f"{k}={v}" for k, v in ident.items())
+            matches = [
+                a
+                for a in actual
+                if isinstance(a, dict)
+                and all(a.get(k) == v for k, v in ident.items())
+            ]
+            if not matches:
+                failures.append(f"{path}[{label}]: missing from the bench output")
+                continue
+            if len(matches) > 1:
+                # A partial identity silently gating only the first match
+                # would let the others regress unnoticed.
+                failures.append(
+                    f"{path}[{label}]: identity keys match {len(matches)} bench "
+                    f"entries; add more identity keys to the baseline entry"
+                )
+                continue
+            walk(bentry, matches[0], f"{path}[{label}]", factor, failures)
     elif isinstance(baseline, (int, float)) and not isinstance(baseline, bool):
         if not isinstance(actual, (int, float)) or isinstance(actual, bool):
             failures.append(f"{path}: expected a number, got {actual!r}")

@@ -1,0 +1,601 @@
+//! Bench: simulator scaling to tens of millions of queries. For each
+//! workload size and policy (plan-following, ζ-cost greedy) it times
+//!
+//! * **memo** — the production path: streaming metrics, shape-memoized
+//!   predictions, zero-alloc event loop;
+//! * **cold** — the same loop with prediction memoization off
+//!   (`SimConfig::memoize = false`): per-batch polynomial re-evaluation,
+//!   isolating what the (shape, model) tables buy;
+//! * **legacy** — a faithful in-bench copy of the pre-PR (PR 4) event
+//!   loop, kept verbatim below: per-query `Vec<QueryOutcome>` storage,
+//!   per-batch `Vec` allocations through the live `Batcher`, all |Q|
+//!   arrivals preloaded into the event heap, and exact end-of-run
+//!   quantiles via two sort passes. Run at sizes ≤ 1M (its memory is
+//!   O(|Q|) by construction); its totals are cross-checked against the
+//!   new loop to 1e-9 so the speedup ratio compares identical work.
+//!
+//! It also times the streaming JSONL trace loader (so trace replay isn't
+//! the bottleneck at 10M lines) and one `--seeds 3` parallel policy
+//! comparison, then writes everything to `BENCH_sim.json`.
+//! `cargo bench --bench sim_scaling`.
+//!
+//! Setting `ECOSERVE_BENCH_SMOKE=1` shrinks the sweep (20k/100k queries,
+//! 50k trace lines) for the CI `bench-smoke` job, which gates
+//! `BENCH_sim.json` against the committed ceilings in
+//! `benches/baselines/BENCH_sim_smoke.json` (>2× fails).
+//!
+//! Acceptance bars (full mode): the 1M-query memoized runs must beat the
+//! in-bench legacy loop by ≥ 10× simulated-queries/sec, and the 10M-query
+//! runs complete with no per-query metric storage (`outcomes` stays
+//! `None`; metrics memory is the fixed histogram + accumulator set).
+
+use ecoserve::models::{ModelSet, Normalizer};
+use ecoserve::plan::{Plan, Planner, SolverKind};
+use ecoserve::scheduler::CapacityMode;
+use ecoserve::sim::{
+    compare_replicated, ARRIVAL_SEED_SALT, ArrivalProcess, Arrivals, CompareSpec, PolicyKind,
+    SimConfig, SimMetrics, SimPolicy, Simulator,
+};
+use ecoserve::testkit::synthetic_set;
+use ecoserve::util::{Json, Rng, Stopwatch};
+use ecoserve::workload::{trace, Query, TraceRecord};
+
+const N_SHAPES: usize = 256;
+const ZETA: f64 = 0.5;
+
+fn zoo() -> Vec<ModelSet> {
+    vec![
+        synthetic_set("m0", 1.0, 50.97),
+        synthetic_set("m1", 1.8, 55.69),
+        synthetic_set("m2", 3.0, 60.11),
+        synthetic_set("m3", 6.5, 64.52),
+    ]
+}
+
+fn shape_table(rng: &mut Rng) -> Vec<(u32, u32)> {
+    (0..N_SHAPES)
+        .map(|_| (8 + rng.index(504) as u32, 8 + rng.index(1016) as u32))
+        .collect()
+}
+
+fn workload(table: &[(u32, u32)], n: usize, rng: &mut Rng) -> Vec<Query> {
+    (0..n)
+        .map(|i| {
+            let (t_in, t_out) = table[rng.index(table.len())];
+            Query {
+                id: i as u32,
+                t_in,
+                t_out,
+            }
+        })
+        .collect()
+}
+
+/// Arrival rate ≈ 80% of the cluster's aggregate batch-service capacity
+/// at the mean shape: the workload is feasible in aggregate, so the run
+/// exercises queueing rather than a pure backlog drain (per-node backlog
+/// still depends on how the policy splits traffic).
+fn arrival_rate(sets: &[ModelSet], table: &[(u32, u32)], max_batch: usize) -> f64 {
+    let (mut ti, mut to) = (0.0, 0.0);
+    for &(a, b) in table {
+        ti += a as f64 / table.len() as f64;
+        to += b as f64 / table.len() as f64;
+    }
+    let capacity: f64 = sets
+        .iter()
+        .map(|s| max_batch as f64 / s.runtime.predict(ti, to).max(1e-9))
+        .sum();
+    0.8 * capacity
+}
+
+fn assert_close(label: &str, a: f64, b: f64) {
+    assert!(
+        (a - b).abs() <= 1e-9 * b.abs().max(1.0),
+        "{label}: {a} vs {b}"
+    );
+}
+
+/// The pre-PR simulator, kept verbatim as the speedup reference. See the
+/// module docs; this is PR 4's `Simulator::run` + `SimMetrics::
+/// from_outcomes` on the public API, trimmed only of artifact plumbing.
+mod legacy {
+    use ecoserve::coordinator::{Batch, Batcher, Request};
+    use ecoserve::models::ModelSet;
+    use ecoserve::sim::SimPolicy;
+    use ecoserve::stats::quantile;
+    use ecoserve::workload::Query;
+    use std::cmp::Ordering;
+    use std::collections::{BinaryHeap, VecDeque};
+    use std::time::{Duration, Instant};
+
+    pub struct Outcome {
+        pub t_arrive: f64,
+        pub t_start: f64,
+        pub t_complete: f64,
+        pub energy_j: f64,
+    }
+
+    pub struct Aggregates {
+        pub n: usize,
+        pub total_energy_j: f64,
+        pub makespan_s: f64,
+        pub mean_latency_s: f64,
+        pub p50_latency_s: f64,
+        pub p95_latency_s: f64,
+        pub mean_queue_s: f64,
+    }
+
+    enum EvKind {
+        Arrive(usize),
+        Timeout(usize),
+        Complete {
+            node: usize,
+            start: u64,
+            members: Vec<usize>,
+        },
+    }
+
+    struct Ev {
+        t: u64,
+        seq: u64,
+        kind: EvKind,
+    }
+
+    impl PartialEq for Ev {
+        fn eq(&self, other: &Ev) -> bool {
+            self.t == other.t && self.seq == other.seq
+        }
+    }
+    impl Eq for Ev {}
+    impl PartialOrd for Ev {
+        fn partial_cmp(&self, other: &Ev) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for Ev {
+        fn cmp(&self, other: &Ev) -> Ordering {
+            other.t.cmp(&self.t).then_with(|| other.seq.cmp(&self.seq))
+        }
+    }
+
+    struct Node {
+        batcher: Batcher,
+        busy: bool,
+        ready: VecDeque<Batch>,
+        next_timeout: Option<u64>,
+    }
+
+    pub fn run(
+        sets: &[ModelSet],
+        max_batch: usize,
+        max_wait_s: f64,
+        queries: &[Query],
+        arrivals_s: &[f64],
+        policy: &mut SimPolicy,
+    ) -> Aggregates {
+        let anchor = Instant::now();
+        let to_ns = |s: f64| -> u64 { (s * 1e9).round() as u64 };
+        let ns_to_s = |ns: u64| -> f64 { ns as f64 / 1e9 };
+        let at = |ns: u64| -> Instant { anchor + Duration::from_nanos(ns) };
+
+        let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
+        let mut seq = 0u64;
+        let mut order: Vec<usize> = (0..queries.len()).collect();
+        order.sort_by(|&a, &b| {
+            arrivals_s[a]
+                .partial_cmp(&arrivals_s[b])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        // PR 4 preloaded every arrival into the heap.
+        for &qi in &order {
+            heap.push(Ev {
+                t: to_ns(arrivals_s[qi]),
+                seq,
+                kind: EvKind::Arrive(qi),
+            });
+            seq += 1;
+        }
+
+        let max_wait = Duration::from_secs_f64(max_wait_s);
+        let mut nodes: Vec<Node> = sets
+            .iter()
+            .map(|s| Node {
+                batcher: Batcher::new(&s.model_id, max_batch, max_wait),
+                busy: false,
+                ready: VecDeque::new(),
+                next_timeout: None,
+            })
+            .collect();
+        let mut arrive_ns: Vec<u64> = vec![0; queries.len()];
+        let mut outcomes: Vec<Outcome> = Vec::with_capacity(queries.len());
+
+        let try_start =
+            |k: usize, t: u64, nodes: &mut Vec<Node>, heap: &mut BinaryHeap<Ev>, seq: &mut u64| {
+                let node = &mut nodes[k];
+                if node.busy {
+                    return;
+                }
+                let Some(batch) = node.ready.pop_front() else {
+                    return;
+                };
+                let members: Vec<usize> =
+                    batch.requests.iter().map(|r| r.id as usize).collect();
+                let service_s = members
+                    .iter()
+                    .map(|&qi| {
+                        let q = &queries[qi];
+                        sets[k].runtime.predict(q.t_in as f64, q.t_out as f64)
+                    })
+                    .fold(0.0f64, f64::max)
+                    .max(0.0);
+                node.busy = true;
+                heap.push(Ev {
+                    t: t.saturating_add(to_ns(service_s)),
+                    seq: *seq,
+                    kind: EvKind::Complete {
+                        node: k,
+                        start: t,
+                        members,
+                    },
+                });
+                *seq += 1;
+            };
+        let schedule_timeout =
+            |k: usize, nodes: &mut Vec<Node>, heap: &mut BinaryHeap<Ev>, seq: &mut u64| {
+                let node = &mut nodes[k];
+                let Some(deadline) = node.batcher.deadline() else {
+                    return;
+                };
+                let dl_ns = deadline.duration_since(anchor).as_nanos() as u64;
+                if node.next_timeout != Some(dl_ns) {
+                    node.next_timeout = Some(dl_ns);
+                    heap.push(Ev {
+                        t: dl_ns,
+                        seq: *seq,
+                        kind: EvKind::Timeout(k),
+                    });
+                    *seq += 1;
+                }
+            };
+
+        while let Some(Ev { t, kind, .. }) = heap.pop() {
+            match kind {
+                EvKind::Arrive(qi) => {
+                    let q = &queries[qi];
+                    let k = policy.route(q);
+                    arrive_ns[qi] = t;
+                    let req = Request {
+                        id: qi as u64,
+                        prompt: Vec::new(),
+                        n_gen: q.t_out as usize,
+                        submitted: at(t),
+                    };
+                    if let Some(batch) = nodes[k].batcher.push_at(req, at(t)) {
+                        nodes[k].ready.push_back(batch);
+                        try_start(k, t, &mut nodes, &mut heap, &mut seq);
+                    } else {
+                        schedule_timeout(k, &mut nodes, &mut heap, &mut seq);
+                    }
+                }
+                EvKind::Timeout(k) => {
+                    if nodes[k].next_timeout != Some(t) {
+                        continue;
+                    }
+                    nodes[k].next_timeout = None;
+                    if let Some(batch) = nodes[k].batcher.poll(at(t)) {
+                        nodes[k].ready.push_back(batch);
+                        try_start(k, t, &mut nodes, &mut heap, &mut seq);
+                    }
+                    schedule_timeout(k, &mut nodes, &mut heap, &mut seq);
+                }
+                EvKind::Complete {
+                    node: k,
+                    start,
+                    members,
+                } => {
+                    nodes[k].busy = false;
+                    for qi in members {
+                        let q = &queries[qi];
+                        let energy_j =
+                            sets[k].energy.predict(q.t_in as f64, q.t_out as f64);
+                        outcomes.push(Outcome {
+                            t_arrive: ns_to_s(arrive_ns[qi]),
+                            t_start: ns_to_s(start),
+                            t_complete: ns_to_s(t),
+                            energy_j,
+                        });
+                    }
+                    try_start(k, t, &mut nodes, &mut heap, &mut seq);
+                }
+            }
+        }
+        assert_eq!(outcomes.len(), queries.len(), "legacy loop lost queries");
+
+        // PR 4 aggregation: collect, then sort per quantile call.
+        let latencies: Vec<f64> = outcomes
+            .iter()
+            .map(|o| o.t_complete - o.t_arrive)
+            .collect();
+        let queue: Vec<f64> = outcomes.iter().map(|o| o.t_start - o.t_arrive).collect();
+        let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len().max(1) as f64;
+        Aggregates {
+            n: outcomes.len(),
+            total_energy_j: outcomes.iter().map(|o| o.energy_j).sum(),
+            makespan_s: outcomes.iter().map(|o| o.t_complete).fold(0.0f64, f64::max),
+            mean_latency_s: mean(&latencies),
+            p50_latency_s: quantile(&latencies, 0.5),
+            p95_latency_s: quantile(&latencies, 0.95),
+            mean_queue_s: mean(&queue),
+        }
+    }
+}
+
+fn policy_for(
+    kind: PolicyKind,
+    sets: &[ModelSet],
+    norm: Normalizer,
+    plan: Option<&Plan>,
+    seed: u64,
+) -> SimPolicy {
+    SimPolicy::new(kind, sets, norm, ZETA, plan, seed).expect("policy")
+}
+
+fn sim_run(
+    sets: &[ModelSet],
+    cfg: SimConfig,
+    queries: &[Query],
+    arrivals: &[f64],
+    policy: &mut SimPolicy,
+) -> (SimMetrics, f64) {
+    let sw = Stopwatch::start();
+    let m = Simulator::new(sets, cfg)
+        .labeled("poisson", 42, ZETA)
+        .run(queries, arrivals, policy)
+        .expect("sim run");
+    (m, sw.elapsed_s())
+}
+
+fn main() {
+    let smoke = std::env::var("ECOSERVE_BENCH_SMOKE")
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false);
+    println!(
+        "=== sim_scaling: streaming, shape-memoized event loop{} ===",
+        if smoke { " (smoke mode)" } else { "" }
+    );
+    let sets = zoo();
+    let mut rng = Rng::new(0x51AB);
+    let table = shape_table(&mut rng);
+    let max_batch = 8;
+    let max_wait_s = 20.0;
+    let rate = arrival_rate(&sets, &table, max_batch);
+    println!("  arrival rate {rate:.3} q/s (~80% of mean-shape capacity)");
+
+    let sizes: &[usize] = if smoke {
+        &[20_000, 100_000]
+    } else {
+        &[100_000, 1_000_000, 10_000_000]
+    };
+    // Legacy holds O(|Q|) outcomes + an O(|Q|) event heap: cap its sizes.
+    let legacy_cap = if smoke { usize::MAX } else { 1_000_000 };
+
+    let mut series: Vec<Json> = Vec::new();
+    for &n in sizes {
+        let queries = workload(&table, n, &mut rng.fork(n as u64));
+        let arrivals = ArrivalProcess::Poisson { rate }
+            .times(n, &mut Rng::new(42 ^ ARRIVAL_SEED_SALT))
+            .expect("arrival sampling");
+        // Offline plan over the same workload (not part of the timed run;
+        // plan solve time is the scheduler benches' subject).
+        let mut session = Planner::new(&sets)
+            .capacity(CapacityMode::Eq3Only)
+            .zeta(ZETA)
+            .solver(SolverKind::Bucketed)
+            .seed(42)
+            .session(&queries)
+            .expect("plan session");
+        session.solve().expect("plan solve");
+        let plan = session.plan().expect("plan artifact");
+        let norm = plan.normalizer();
+
+        for kind in [PolicyKind::Plan, PolicyKind::Greedy] {
+            let plan_ref = (kind == PolicyKind::Plan).then_some(&plan);
+            let streaming = SimConfig {
+                max_batch,
+                max_wait_s,
+                slo_s: 60.0,
+                duration_s: None,
+                per_query: false,
+                memoize: true,
+            };
+            let (m_memo, memo_s) = sim_run(
+                &sets,
+                streaming,
+                &queries,
+                &arrivals,
+                &mut policy_for(kind, &sets, norm, plan_ref, 42),
+            );
+            assert!(
+                m_memo.outcomes.is_none(),
+                "streaming mode must not retain per-query outcomes"
+            );
+            assert_eq!(m_memo.n_queries as usize, n);
+            let (m_cold, cold_s) = sim_run(
+                &sets,
+                SimConfig {
+                    memoize: false,
+                    ..streaming
+                },
+                &queries,
+                &arrivals,
+                &mut policy_for(kind, &sets, norm, plan_ref, 42),
+            );
+            // Memoization must be invisible in the results.
+            assert_eq!(
+                m_memo.to_json().to_string_pretty(),
+                m_cold.to_json().to_string_pretty()
+            );
+
+            let mut fields = vec![
+                ("n_queries", Json::num(n as f64)),
+                ("policy", Json::str(kind.label())),
+                ("memo_s", Json::num(memo_s)),
+                ("memo_qps", Json::num(n as f64 / memo_s.max(1e-12))),
+                ("cold_s", Json::num(cold_s)),
+                ("cold_qps", Json::num(n as f64 / cold_s.max(1e-12))),
+            ];
+            let mut speedup_note = String::new();
+            if n <= legacy_cap {
+                let sw = Stopwatch::start();
+                let agg = legacy::run(
+                    &sets,
+                    max_batch,
+                    max_wait_s,
+                    &queries,
+                    &arrivals,
+                    &mut policy_for(kind, &sets, norm, plan_ref, 42),
+                );
+                let legacy_s = sw.elapsed_s();
+                // Same decisions, same physics: identical totals.
+                assert_eq!(agg.n, n);
+                assert_close("legacy vs memo energy", agg.total_energy_j, m_memo.total_energy_j);
+                assert_close("legacy vs memo makespan", agg.makespan_s, m_memo.makespan_s);
+                assert_close(
+                    "legacy vs memo mean latency",
+                    agg.mean_latency_s,
+                    m_memo.mean_latency_s,
+                );
+                assert_close(
+                    "legacy vs memo mean queue",
+                    agg.mean_queue_s,
+                    m_memo.mean_queue_s,
+                );
+                // Exact (interpolated) quantiles never exceed the
+                // histogram estimate (a bin upper edge).
+                assert!(agg.p50_latency_s <= m_memo.p50_latency_s * (1.0 + 1e-9));
+                assert!(agg.p95_latency_s <= m_memo.p95_latency_s * (1.0 + 1e-9));
+                let speedup = legacy_s / memo_s.max(1e-12);
+                fields.push(("legacy_s", Json::num(legacy_s)));
+                fields.push(("legacy_qps", Json::num(n as f64 / legacy_s.max(1e-12))));
+                fields.push(("speedup_vs_legacy", Json::num(speedup)));
+                speedup_note = format!(", {speedup:.1}x vs legacy ({legacy_s:.2} s)");
+            }
+            println!(
+                "  n={n} policy={}: memo {:.3} s ({:.2}M q/s), cold {:.3} s{}",
+                kind.label(),
+                memo_s,
+                n as f64 / memo_s.max(1e-12) / 1e6,
+                cold_s,
+                speedup_note
+            );
+            series.push(Json::obj(fields));
+        }
+    }
+
+    // ---- trace loader throughput: streaming JSONL reads ----------------
+    let n_lines: usize = if smoke { 50_000 } else { 2_000_000 };
+    let loader_queries = workload(&table, n_lines, &mut rng.fork(7));
+    let records: Vec<TraceRecord> = loader_queries
+        .iter()
+        .enumerate()
+        .map(|(i, q)| TraceRecord {
+            query: *q,
+            t_arrive: Some(i as f64 * 1e-3),
+        })
+        .collect();
+    let path = std::env::temp_dir().join(format!(
+        "ecoserve_sim_scaling_{}.jsonl",
+        std::process::id()
+    ));
+    trace::save_records(&records, &path).expect("write trace");
+    let sw = Stopwatch::start();
+    let loaded = trace::load_records(&path).expect("load trace");
+    let load_s = sw.elapsed_s();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.len(), n_lines);
+    assert_eq!(loaded[n_lines - 1], records[n_lines - 1]);
+    let lines_per_s = n_lines as f64 / load_s.max(1e-12);
+    // Replay floor: loading must comfortably outrun simulating (the memo
+    // loop clears ~1M q/s), or a 10M-line trace replay is loader-bound.
+    let floor = if smoke { 20_000.0 } else { 100_000.0 };
+    assert!(
+        lines_per_s > floor,
+        "trace loader too slow: {lines_per_s:.0} lines/s"
+    );
+    println!("  loader: {n_lines} lines in {load_s:.3} s ({:.2}M lines/s)", lines_per_s / 1e6);
+
+    // ---- parallel policy comparison with seed replication --------------
+    let n_cmp = if smoke { 10_000 } else { 200_000 };
+    let cmp_queries = workload(&table, n_cmp, &mut rng.fork(11));
+    let mut session = Planner::new(&sets)
+        .capacity(CapacityMode::Eq3Only)
+        .zeta(ZETA)
+        .solver(SolverKind::Bucketed)
+        .seed(42)
+        .session(&cmp_queries)
+        .expect("plan session");
+    session.solve().expect("plan solve");
+    let cmp_plan = session.plan().expect("plan artifact");
+    let spec = CompareSpec {
+        sets: &sets,
+        norm: cmp_plan.normalizer(),
+        zeta: ZETA,
+        plan: Some(&cmp_plan),
+        seed: 42,
+        cfg: SimConfig {
+            max_batch,
+            max_wait_s,
+            slo_s: 60.0,
+            duration_s: None,
+            per_query: false,
+            memoize: true,
+        },
+        arrival_label: format!("poisson:{rate:.3}"),
+    };
+    let n_seeds = 3;
+    let kinds = PolicyKind::all();
+    let sw = Stopwatch::start();
+    let grid = compare_replicated(
+        &spec,
+        &cmp_queries,
+        Arrivals::Sampled(ArrivalProcess::Poisson { rate }),
+        &kinds,
+        n_seeds,
+    )
+    .expect("replicated compare");
+    let compare_s = sw.elapsed_s();
+    assert_eq!(grid.len(), kinds.len());
+    assert!(grid.iter().all(|runs| runs.len() == n_seeds));
+    println!(
+        "  seeds-compare: {} policies x {n_seeds} seeds x {n_cmp} queries in {compare_s:.3} s",
+        kinds.len()
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("sim_scaling")),
+        ("smoke", Json::Bool(smoke)),
+        ("zeta", Json::num(ZETA)),
+        ("arrival_rate_qps", Json::num(rate)),
+        ("series", Json::Arr(series)),
+        (
+            "loader",
+            Json::obj(vec![
+                ("n_lines", Json::num(n_lines as f64)),
+                ("load_s", Json::num(load_s)),
+                ("lines_per_s", Json::num(lines_per_s)),
+            ]),
+        ),
+        (
+            "seeds_compare",
+            Json::obj(vec![
+                ("n_queries", Json::num(n_cmp as f64)),
+                ("n_seeds", Json::num(n_seeds as f64)),
+                ("n_policies", Json::num(kinds.len() as f64)),
+                ("wall_s", Json::num(compare_s)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_sim.json", doc.to_string_pretty()).expect("write BENCH_sim.json");
+    println!("✓ wrote BENCH_sim.json");
+}

@@ -20,6 +20,49 @@ pub struct Batch {
     pub requests: Vec<Request>,
 }
 
+/// The size/age trigger arithmetic of [`Batcher`], factored onto a plain
+/// integer-nanosecond clock for event loops that keep their own queues.
+///
+/// The discrete-event simulator ([`crate::sim`]) routes millions of
+/// queries through per-node index FIFOs and cannot afford the live
+/// batcher's per-batch allocations ([`Batch`] vectors, model-id clones),
+/// but must batch *identically* to production. `BatchWindow` is that
+/// shared contract: a batch flushes when it reaches `max_batch` entries
+/// ([`BatchWindow::filled`]) or when its oldest entry has waited
+/// `max_wait_ns` ([`BatchWindow::aged`], deadline at
+/// [`BatchWindow::deadline`] — the `>=` comparison matches
+/// [`Batcher::poll`] exactly, as the consistency property test below
+/// verifies against the live batcher).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchWindow {
+    /// size trigger: flush when this many entries are pending
+    pub max_batch: usize,
+    /// age trigger: flush when the oldest pending entry is this old (ns)
+    pub max_wait_ns: u64,
+}
+
+impl BatchWindow {
+    /// Does a pending count hit the size trigger?
+    #[inline]
+    pub fn filled(&self, pending: usize) -> bool {
+        pending >= self.max_batch
+    }
+
+    /// The instant (ns) the age trigger fires for a batch whose oldest
+    /// entry arrived at `oldest_entry_ns`.
+    #[inline]
+    pub fn deadline(&self, oldest_entry_ns: u64) -> u64 {
+        oldest_entry_ns.saturating_add(self.max_wait_ns)
+    }
+
+    /// Has the age trigger fired by `now_ns`? Inclusive at the deadline,
+    /// matching [`Batcher::poll`]'s `>=`.
+    #[inline]
+    pub fn aged(&self, oldest_entry_ns: u64, now_ns: u64) -> bool {
+        now_ns >= self.deadline(oldest_entry_ns)
+    }
+}
+
 /// Per-model accumulation queue.
 ///
 /// The age trigger runs on *batcher entry* time, not request submission
@@ -227,6 +270,57 @@ mod tests {
             // FIFO batching preserves submission order overall, so exact
             // equality covers both "no drop" and "no duplicate".
             assert_eq!(delivered, submitted);
+        });
+    }
+
+    /// Property: `BatchWindow`'s integer-nanosecond trigger arithmetic
+    /// agrees with the live `Batcher` decision for decision — the
+    /// contract the simulator's allocation-free nodes batch under.
+    #[test]
+    fn batch_window_matches_batcher_triggers() {
+        use crate::testkit::{forall, Config};
+        forall(Config::default().cases(150), |rng| {
+            let max_batch = rng.int_range(1, 6) as usize;
+            let wait_ns = rng.int_range(1, 40_000_000) as u64;
+            let window = BatchWindow {
+                max_batch,
+                max_wait_ns: wait_ns,
+            };
+            let mut b = Batcher::new("m", max_batch, Duration::from_nanos(wait_ns));
+            let anchor = Instant::now();
+            let at = |ns: u64| anchor + Duration::from_nanos(ns);
+            let mut now_ns = 0u64;
+            // Mirror of the batcher's pending entry times.
+            let mut pending: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..rng.int_range(1, 80) {
+                now_ns += rng.int_range(0, 30_000_000) as u64;
+                if rng.chance(0.7) {
+                    // Push: the size trigger must agree.
+                    pending.push(now_ns);
+                    let flushed = b.push_at(req(next_id), at(now_ns)).is_some();
+                    next_id += 1;
+                    assert_eq!(flushed, window.filled(pending.len()));
+                    if flushed {
+                        pending.clear();
+                    }
+                } else {
+                    // Poll: the age trigger and deadline must agree.
+                    let oldest = pending.first().copied();
+                    assert_eq!(
+                        b.deadline(),
+                        oldest.map(|o| at(window.deadline(o)))
+                    );
+                    let fired = b.poll(at(now_ns)).is_some();
+                    assert_eq!(
+                        fired,
+                        oldest.map(|o| window.aged(o, now_ns)).unwrap_or(false)
+                    );
+                    if fired {
+                        pending.clear();
+                    }
+                }
+            }
         });
     }
 

@@ -7,7 +7,7 @@ pub mod metrics;
 pub mod router;
 pub mod server;
 
-pub use batcher::{Batch, Batcher, Request};
+pub use batcher::{Batch, Batcher, BatchWindow, Request};
 pub use metrics::{Metrics, ModelMetrics};
 pub use router::{Policy, QuotaTracker, Router};
 pub use server::{serve, Response, ServeConfig};

@@ -111,7 +111,8 @@ COMMANDS
                             [--plan FILE] [--arrival poisson:R|gamma:R:CV2|
                              trace] [--trace FILE] [--queries N] [--zeta X]
                             [--duration S] [--max-batch N] [--max-wait-ms MS]
-                            [--slo-ms MS] [--out metrics.json]
+                            [--slo-ms MS] [--seeds N] [--per-query]
+                            [--out metrics.json]
   repro-all                 regenerate every table and figure [--out DIR]
 
 GLOBAL  --seed N   --quiet   --verbose
@@ -461,35 +462,38 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 
 /// Replay a timestamped workload through a routing policy (or all of
 /// them) on the simulated heterogeneous cluster — the offline plan's
-/// contact with queueing, batching and burstiness.
+/// contact with queueing, batching and burstiness. `--seeds N` replicates
+/// the run over N arrival draws (policies × seeds in parallel) and
+/// reports cross-seed confidence intervals.
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let seed = args.opt_u64("seed", 42);
     let family = llama_family();
     let fitted = characterize::quick_fit(&family, seed)?;
     let sets: &[ecoserve::models::ModelSet] = &fitted.sets;
 
-    // Workload + arrival times. The default synthetic workload matches
+    // Workload + arrival source. The default synthetic workload matches
     // `ecoserve plan`'s (same generator, same seed derivation), so a plan
-    // saved there covers this stream shape-for-shape.
+    // saved there covers this stream shape-for-shape. Arrival times are
+    // either replayed verbatim from the trace (fixed across seeds) or
+    // sampled once per replicate seed inside the comparison harness.
     let arrival = ArrivalProcess::parse(&args.opt_or("arrival", "poisson:50"))?;
-    let mut arrival_rng = Rng::new(seed ^ 0xA881_4A11);
-    let (queries, arrivals_s) = match args.opt("trace") {
+    let (queries, trace_arrivals): (Vec<Query>, Option<Vec<f64>>) = match args.opt("trace") {
         Some(path) => {
             let records = ecoserve::workload::trace::load_records(Path::new(path))?;
             let queries: Vec<Query> = records.iter().map(|r| r.query).collect();
-            let times = match arrival {
-                ArrivalProcess::Trace => sim::trace_times(&records)?,
-                _ => arrival.times(queries.len(), &mut arrival_rng)?,
-            };
-            (queries, times)
+            match arrival {
+                ArrivalProcess::Trace => {
+                    let times = sim::trace_times(&records)?;
+                    (queries, Some(times))
+                }
+                _ => (queries, None),
+            }
         }
         None => {
             if arrival == ArrivalProcess::Trace {
                 anyhow::bail!("--arrival trace needs --trace FILE with t_arrive timestamps");
             }
-            let queries = plan_workload(args, seed)?;
-            let times = arrival.times(queries.len(), &mut arrival_rng)?;
-            (queries, times)
+            (plan_workload(args, seed)?, None)
         }
     };
 
@@ -530,11 +534,22 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                 })
         })
         .transpose()?;
+    let n_seeds = args.opt_usize("seeds", 1);
+    if n_seeds == 0 {
+        anyhow::bail!("--seeds must be at least 1");
+    }
+    let slo_ms = args.opt_f64("slo-ms", 30_000.0);
+    if !slo_ms.is_finite() || slo_ms < 0.0 {
+        anyhow::bail!("--slo-ms must be finite and >= 0, got {slo_ms}");
+    }
     let cfg = SimConfig {
         max_batch,
         max_wait_s: max_wait_ms / 1000.0,
-        slo_s: args.opt_f64("slo-ms", 30_000.0) / 1000.0,
+        slo_s: slo_ms / 1000.0,
         duration_s,
+        // Exact quantiles + per-query lifecycles: O(|Q|) memory, opt-in.
+        per_query: args.flag("per-query"),
+        memoize: true,
     };
     let spec = CompareSpec {
         sets,
@@ -545,18 +560,43 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         cfg,
         arrival_label: arrival.label(),
     };
+    let arrivals_src = match &trace_arrivals {
+        Some(times) => sim::Arrivals::Fixed(times),
+        None => sim::Arrivals::Sampled(arrival),
+    };
 
     let policy_arg = args.opt_or("policy", if plan.is_some() { "plan" } else { "greedy" });
-    if policy_arg == "compare" {
+    let kinds: Vec<PolicyKind> = if policy_arg == "compare" {
         // Policy-comparison harness: every policy replays the same trace.
-        let kinds: Vec<PolicyKind> = PolicyKind::all()
-            .into_iter()
-            .filter(|&k| k != PolicyKind::Plan || plan.is_some())
-            .collect();
         if plan.is_none() {
             ecoserve::info!("no --plan given: comparing the query-level policies only");
         }
-        let rows = sim::compare(&spec, &queries, &arrivals_s, &kinds)?;
+        PolicyKind::all()
+            .into_iter()
+            .filter(|&k| k != PolicyKind::Plan || plan.is_some())
+            .collect()
+    } else {
+        vec![PolicyKind::parse(&policy_arg)?]
+    };
+    if matches!(arrivals_src, sim::Arrivals::Fixed(_)) && n_seeds > 1 {
+        ecoserve::info!(
+            "trace arrivals replay fixed timestamps: --seeds {n_seeds} varies \
+             only the policy randomness"
+        );
+    }
+    let grid = sim::compare_replicated(&spec, &queries, arrivals_src, &kinds, n_seeds)?;
+
+    if n_seeds > 1 {
+        println!("{}", report::sim_comparison_replicated(&grid).to_ascii());
+        if let Some(out) = args.opt("out") {
+            report::write_result(
+                Path::new(out),
+                &sim::replicated_to_json(&grid).to_string_pretty(),
+            )?;
+        }
+    } else if policy_arg == "compare" {
+        let rows: Vec<sim::SimMetrics> =
+            grid.into_iter().map(|mut runs| runs.remove(0)).collect();
         println!("{}", report::sim_comparison(&rows).to_ascii());
         if let Some(out) = args.opt("out") {
             report::write_result(
@@ -565,9 +605,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             )?;
         }
     } else {
-        let kind = PolicyKind::parse(&policy_arg)?;
-        let rows = sim::compare(&spec, &queries, &arrivals_s, &[kind])?;
-        let m = &rows[0];
+        let m = &grid[0][0];
         println!("{}", report::sim_summary(m).to_ascii());
         println!(
             "  total energy {:.1} J | mean latency {:.3} s | p95 {:.3} s | \

@@ -5,7 +5,9 @@ pub mod figures;
 pub mod tables;
 
 pub use figures::{sweep_ascii, sweep_csv, zeta_ascii, zeta_csv};
-pub use tables::{coefficients, sim_comparison, sim_summary, table1, table2, table3};
+pub use tables::{
+    coefficients, sim_comparison, sim_comparison_replicated, sim_summary, table1, table2, table3,
+};
 
 use std::path::Path;
 

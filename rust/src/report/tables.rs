@@ -5,7 +5,7 @@
 use crate::config::LlmSpec;
 use crate::models::ModelSet;
 use crate::sim::SimMetrics;
-use crate::stats::AnovaTable;
+use crate::stats::{ci_half_width, mean, AnovaTable};
 use crate::util::{fnum, Table};
 
 /// Table 1: the model zoo.
@@ -143,6 +143,55 @@ pub fn sim_summary(m: &SimMetrics) -> Table {
     t
 }
 
+/// Policy comparison replicated over several seeded arrival draws
+/// (`ecoserve simulate --seeds N`): per policy, the cross-seed mean ±
+/// 95% Student-t confidence half-width of each headline metric.
+pub fn sim_comparison_replicated(grid: &[Vec<SimMetrics>]) -> Table {
+    let n_seeds = grid.first().map(|runs| runs.len()).unwrap_or(0);
+    let arrival = grid
+        .first()
+        .and_then(|runs| runs.first())
+        .map(|m| m.arrival.clone())
+        .unwrap_or_default();
+    let mut t = Table::new(
+        &format!(
+            "Policy comparison over {n_seeds} replicate arrival draws \
+             (arrival={arrival}, mean ± 95% CI)"
+        ),
+        &[
+            "policy",
+            "energy (J)",
+            "mean lat (s)",
+            "p95 lat (s)",
+            "SLO att.",
+            "makespan (s)",
+        ],
+    );
+    let pm = |xs: &[f64], digits: usize, scale: f64| -> String {
+        if xs.len() < 2 {
+            fnum(scale * mean(xs), digits)
+        } else {
+            format!(
+                "{} ± {}",
+                fnum(scale * mean(xs), digits),
+                fnum(scale * ci_half_width(xs, 0.95), digits)
+            )
+        }
+    };
+    for runs in grid {
+        let series = |f: fn(&SimMetrics) -> f64| -> Vec<f64> { runs.iter().map(f).collect() };
+        t.row(vec![
+            runs.first().map(|m| m.policy.clone()).unwrap_or_default(),
+            pm(&series(|m| m.total_energy_j), 1, 1.0),
+            pm(&series(|m| m.mean_latency_s), 3, 1.0),
+            pm(&series(|m| m.p95_latency_s), 3, 1.0),
+            format!("{}%", pm(&series(|m| m.slo_attainment), 1, 100.0)),
+            pm(&series(|m| m.makespan_s), 2, 1.0),
+        ]);
+    }
+    t
+}
+
 /// Side-by-side policy comparison over the same seeded trace
 /// (`ecoserve simulate --policy compare`).
 pub fn sim_comparison(rows: &[SimMetrics]) -> Table {
@@ -214,13 +263,17 @@ mod tests {
 
     #[test]
     fn sim_tables_render() {
-        use crate::sim::{NodeStats, QueryOutcome};
-        let m = SimMetrics::from_outcomes(
+        use crate::sim::metrics::MetricsRecorder;
+        use crate::sim::NodeStats;
+        let ns = |s: f64| (s * 1e9).round() as u64;
+        let mut r = MetricsRecorder::new(30.0, false);
+        r.record(0, 0, ns(0.0), ns(0.25), ns(0.75), 6.25);
+        r.record(1, 0, ns(0.25), ns(0.25), ns(0.75), 6.25);
+        let m = r.finish(
             "greedy".into(),
             "poisson:10".into(),
             42,
             0.5,
-            30.0,
             0,
             None,
             vec![NodeStats {
@@ -230,24 +283,6 @@ mod tests {
                 energy_j: 12.5,
                 busy_s: 0.5,
             }],
-            vec![
-                QueryOutcome {
-                    id: 0,
-                    model: 0,
-                    t_arrive: 0.0,
-                    t_start: 0.25,
-                    t_complete: 0.75,
-                    energy_j: 6.25,
-                },
-                QueryOutcome {
-                    id: 1,
-                    model: 0,
-                    t_arrive: 0.25,
-                    t_start: 0.25,
-                    t_complete: 0.75,
-                    energy_j: 6.25,
-                },
-            ],
         );
         let summary = sim_summary(&m).to_ascii();
         assert!(summary.contains("llama2-7b"), "{summary}");
@@ -255,5 +290,11 @@ mod tests {
         let cmp = sim_comparison(std::slice::from_ref(&m)).to_ascii();
         assert!(cmp.contains("greedy"), "{cmp}");
         assert!(cmp.contains("poisson:10"), "{cmp}");
+        // The replicated table reports mean ± 95% CI per policy.
+        let grid = vec![vec![m.clone(), m.clone(), m.clone()]];
+        let rep = sim_comparison_replicated(&grid).to_ascii();
+        assert!(rep.contains("3 replicate arrival draws"), "{rep}");
+        assert!(rep.contains("greedy"), "{rep}");
+        assert!(rep.contains("±"), "{rep}");
     }
 }

@@ -12,6 +12,13 @@
 
 use crate::util::Rng;
 
+/// Seed salt for arrival-time sampling: replicate seed `s` samples its
+/// arrival sequence from `Rng::new(s ^ ARRIVAL_SEED_SALT)`, so arrival
+/// randomness never collides with policy randomness derived from the same
+/// seed. Shared by the CLI and [`crate::sim::compare_replicated`] so
+/// `--seeds 1` reproduces a plain single run.
+pub const ARRIVAL_SEED_SALT: u64 = 0xA881_4A11;
+
 /// An arrival process, parsed from its CLI spelling.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ArrivalProcess {

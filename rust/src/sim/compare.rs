@@ -1,19 +1,39 @@
-//! The policy-comparison harness: one seeded arrival trace, several
-//! routing policies, directly comparable metrics.
+//! The policy-comparison harness: one seeded arrival trace (or several
+//! replicate traces), several routing policies, directly comparable
+//! metrics — fanned out across threads, merged deterministically.
 //!
 //! Every policy replays the *same* timestamped workload on the *same*
 //! cluster configuration — only the routing decisions differ — so
 //! energy/latency/SLO deltas are attributable to the policy alone. This
 //! is the simulated analogue of the paper's Fig. 3 baseline comparison,
-//! with queueing and batching in the loop.
+//! with queueing and batching in the loop. [`compare_replicated`] extends
+//! it with `--seeds N` replication: N independent arrival draws per
+//! policy, summarized with 95% confidence intervals, so a policy gap can
+//! be told from arrival-process luck.
+//!
+//! # Parallelism vs determinism
+//!
+//! Each (policy, seed) run is a pure function of its inputs — the
+//! simulator shares nothing mutable across runs — so the harness fans the
+//! policy×seed grid across `std::thread` scoped workers and writes each
+//! result into its preassigned slot. Results are then read back in fixed
+//! (policy, seed) order, making the comparison artifact byte-stable no
+//! matter how the OS schedules the workers; arrival sequences are sampled
+//! *once per seed* before the fan-out, so compared policies see the
+//! identical trace by construction (and the sampler runs once, not once
+//! per policy).
 
+use super::arrival::{ARRIVAL_SEED_SALT, ArrivalProcess};
 use super::metrics::SimMetrics;
 use super::policy::{PolicyKind, SimPolicy};
-use super::simulator::{SimConfig, Simulator};
+use super::simulator::{Memo, SimConfig, Simulator};
 use crate::models::{ModelSet, Normalizer};
 use crate::plan::Plan;
-use crate::util::Json;
+use crate::stats::{ci_half_width, mean};
+use crate::util::{Json, Rng};
 use crate::workload::Query;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Everything a comparison run shares across policies.
 pub struct CompareSpec<'a> {
@@ -22,10 +42,19 @@ pub struct CompareSpec<'a> {
     pub zeta: f64,
     /// required when the kinds include [`PolicyKind::Plan`]
     pub plan: Option<&'a Plan>,
+    /// base seed; replicate `i` runs under `seed + i`
     pub seed: u64,
     pub cfg: SimConfig,
     /// arrival-process label recorded in each artifact
     pub arrival_label: String,
+}
+
+/// Where a replicate's arrival timestamps come from.
+pub enum Arrivals<'a> {
+    /// one fixed timestamp vector (trace replay) shared by every seed
+    Fixed(&'a [f64]),
+    /// a fresh sequence per seed, sampled from the process
+    Sampled(ArrivalProcess),
 }
 
 /// Run each policy over the identical `(queries, arrivals_s)` trace.
@@ -36,36 +65,158 @@ pub fn compare(
     arrivals_s: &[f64],
     kinds: &[PolicyKind],
 ) -> anyhow::Result<Vec<SimMetrics>> {
-    let sim = Simulator::new(spec.sets, spec.cfg).labeled(
-        &spec.arrival_label,
-        spec.seed,
-        spec.zeta,
-    );
-    kinds
-        .iter()
-        .map(|&kind| {
-            let mut policy = SimPolicy::new(
-                kind,
-                spec.sets,
-                spec.norm,
-                spec.zeta,
-                spec.plan,
-                spec.seed,
-            )?;
-            sim.run(queries, arrivals_s, &mut policy)
-        })
-        .collect()
+    let grid = compare_replicated(spec, queries, Arrivals::Fixed(arrivals_s), kinds, 1)?;
+    Ok(grid.into_iter().map(|mut runs| runs.remove(0)).collect())
+}
+
+/// The `--seeds N` replication harness: every policy × every replicate
+/// seed, in parallel. Returns `result[kind_index][seed_index]`, where
+/// replicate `i` runs under seed `spec.seed + i` — its arrival sequence
+/// (for [`Arrivals::Sampled`]) drawn once from
+/// `Rng::new(seed_i ^ ARRIVAL_SEED_SALT)` and shared across all kinds.
+pub fn compare_replicated(
+    spec: &CompareSpec<'_>,
+    queries: &[Query],
+    arrivals: Arrivals<'_>,
+    kinds: &[PolicyKind],
+    n_seeds: usize,
+) -> anyhow::Result<Vec<Vec<SimMetrics>>> {
+    anyhow::ensure!(n_seeds >= 1, "need at least one replicate seed");
+    anyhow::ensure!(!kinds.is_empty(), "need at least one policy to compare");
+    let seeds: Vec<u64> = (0..n_seeds as u64)
+        .map(|i| spec.seed.wrapping_add(i))
+        .collect();
+
+    // Arrival sequences once per seed, before the fan-out.
+    let sampled: Vec<Vec<f64>> = match &arrivals {
+        Arrivals::Fixed(_) => Vec::new(),
+        Arrivals::Sampled(process) => seeds
+            .iter()
+            .map(|&s| process.times(queries.len(), &mut Rng::new(s ^ ARRIVAL_SEED_SALT)))
+            .collect::<anyhow::Result<_>>()?,
+    };
+    let per_seed_times: Vec<&[f64]> = match &arrivals {
+        Arrivals::Fixed(times) => vec![*times; n_seeds],
+        Arrivals::Sampled(_) => sampled.iter().map(Vec::as_slice).collect(),
+    };
+    // One shape memo for the whole grid: it depends only on (sets,
+    // queries), so per-task rebuilding would repeat the O(|Q|) bucketing
+    // kinds×seeds times (and allocate one shape map per worker).
+    let memo = spec.cfg.memoize.then(|| Memo::build(spec.sets, queries));
+
+    // Fan the policy×seed grid over a worker pool; each task writes its
+    // preassigned slot, so completion order never reaches the output.
+    type Slot = Mutex<Option<anyhow::Result<SimMetrics>>>;
+    let tasks = kinds.len() * n_seeds;
+    let slots: Vec<Slot> = (0..tasks).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(tasks);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= tasks {
+                    break;
+                }
+                let (ki, si) = (i / n_seeds, i % n_seeds);
+                let seed = seeds[si];
+                let run =
+                    SimPolicy::new(kinds[ki], spec.sets, spec.norm, spec.zeta, spec.plan, seed)
+                        .and_then(|mut policy| {
+                            Simulator::new(spec.sets, spec.cfg)
+                                .labeled(&spec.arrival_label, seed, spec.zeta)
+                                .run_with_memo(
+                                    queries,
+                                    per_seed_times[si],
+                                    &mut policy,
+                                    memo.as_ref(),
+                                )
+                        });
+                *slots[i].lock().unwrap() = Some(run);
+            });
+        }
+    });
+
+    // Deterministic merge: fixed (policy, seed) order.
+    let mut slots = slots.into_iter();
+    let mut grid = Vec::with_capacity(kinds.len());
+    for _ in kinds {
+        let mut runs = Vec::with_capacity(n_seeds);
+        for _ in 0..n_seeds {
+            let slot = slots.next().unwrap().into_inner().unwrap();
+            runs.push(slot.expect("every task stores a result before joining")?);
+        }
+        grid.push(runs);
+    }
+    Ok(grid)
 }
 
 /// Bundle per-policy artifacts into one JSON document: a `policies`
-/// array with one metrics object per policy, in run order.
+/// array with one metrics object per policy, in run order (the
+/// single-seed layout; see [`replicated_to_json`] for `--seeds N`).
 pub fn comparison_to_json(rows: &[SimMetrics]) -> Json {
     Json::obj(vec![
         ("format", Json::str("ecoserve.sim-comparison")),
-        ("version", Json::num(1.0)),
+        ("version", Json::num(2.0)),
         (
             "policies",
             Json::arr(rows.iter().map(|m| m.to_json())),
+        ),
+    ])
+}
+
+/// The `--seeds N` comparison artifact: per policy, all replicate runs in
+/// seed order plus a cross-seed summary (means and 95% Student-t
+/// confidence half-widths) once there are ≥ 2 replicates.
+pub fn replicated_to_json(grid: &[Vec<SimMetrics>]) -> Json {
+    let seeds: Vec<Json> = grid
+        .first()
+        .map(|runs| runs.iter().map(|m| Json::str(m.seed.to_string())).collect())
+        .unwrap_or_default();
+    Json::obj(vec![
+        ("format", Json::str("ecoserve.sim-comparison")),
+        ("version", Json::num(2.0)),
+        ("seeds", Json::Arr(seeds)),
+        (
+            "policies",
+            Json::arr(grid.iter().map(|runs| {
+                let mut fields = vec![
+                    (
+                        "policy",
+                        Json::str(runs.first().map(|m| m.policy.clone()).unwrap_or_default()),
+                    ),
+                    ("runs", Json::arr(runs.iter().map(|m| m.to_json()))),
+                ];
+                if runs.len() >= 2 {
+                    let series = |f: fn(&SimMetrics) -> f64| -> Vec<f64> {
+                        runs.iter().map(f).collect()
+                    };
+                    let stat = |xs: &[f64]| {
+                        Json::obj(vec![
+                            ("mean", Json::num(mean(xs))),
+                            ("ci95", Json::num(ci_half_width(xs, 0.95))),
+                        ])
+                    };
+                    fields.push((
+                        "summary",
+                        Json::obj(vec![
+                            ("n_seeds", Json::num(runs.len() as f64)),
+                            (
+                                "total_energy_j",
+                                stat(&series(|m| m.total_energy_j)),
+                            ),
+                            ("mean_latency_s", stat(&series(|m| m.mean_latency_s))),
+                            ("p95_latency_s", stat(&series(|m| m.p95_latency_s))),
+                            ("slo_attainment", stat(&series(|m| m.slo_attainment))),
+                            ("makespan_s", stat(&series(|m| m.makespan_s))),
+                        ]),
+                    ));
+                }
+                Json::obj(fields)
+            })),
         ),
     ])
 }
@@ -74,7 +225,6 @@ pub fn comparison_to_json(rows: &[SimMetrics]) -> Json {
 mod tests {
     use super::*;
     use crate::testkit::synthetic_trio as sets;
-    use crate::util::Rng;
 
     #[test]
     fn baselines_share_the_trace_and_differ_only_in_routing() {
@@ -123,6 +273,91 @@ mod tests {
         let json = comparison_to_json(&rows).to_string_pretty();
         assert!(json.contains("ecoserve.sim-comparison"));
         assert!(json.contains("round-robin"));
+    }
+
+    #[test]
+    fn replication_runs_each_seed_once_and_summarizes() {
+        let s = sets();
+        let queries: Vec<Query> = (0..30)
+            .map(|i| Query {
+                id: i,
+                t_in: 1 + 11 * (i % 5),
+                t_out: 1 + 7 * (i % 3),
+            })
+            .collect();
+        let spec = CompareSpec {
+            sets: &s,
+            norm: Normalizer::from_workload(&s, &queries),
+            zeta: 0.7,
+            plan: None,
+            seed: 100,
+            cfg: SimConfig::default(),
+            arrival_label: "poisson:25".to_string(),
+        };
+        let kinds = [PolicyKind::Greedy, PolicyKind::RoundRobin];
+        let grid = compare_replicated(
+            &spec,
+            &queries,
+            Arrivals::Sampled(ArrivalProcess::Poisson { rate: 25.0 }),
+            &kinds,
+            3,
+        )
+        .unwrap();
+        assert_eq!(grid.len(), 2);
+        for (runs, kind) in grid.iter().zip(kinds) {
+            assert_eq!(runs.len(), 3);
+            for (i, m) in runs.iter().enumerate() {
+                assert_eq!(m.policy, kind.label());
+                assert_eq!(m.seed, 100 + i as u64);
+                assert_eq!(m.n_queries, 30);
+            }
+        }
+        // Replicates share arrivals across policies: same seed ⇒ same
+        // makespan-irrelevant inputs, so greedy and round-robin replicate
+        // i agree on n and arrival label but differ in routing.
+        let json = replicated_to_json(&grid).to_string_pretty();
+        assert!(json.contains("\"seeds\""), "{json}");
+        assert!(json.contains("\"100\"") && json.contains("\"102\""), "{json}");
+        assert!(json.contains("\"summary\""), "{json}");
+        assert!(json.contains("\"ci95\""), "{json}");
+        // Different seeds actually drew different arrival sequences.
+        assert_ne!(
+            grid[0][0].to_json().to_string_pretty(),
+            grid[0][1].to_json().to_string_pretty()
+        );
+    }
+
+    #[test]
+    fn parallel_merge_is_byte_stable() {
+        let s = sets();
+        let queries: Vec<Query> = (0..60)
+            .map(|i| Query {
+                id: i,
+                t_in: 1 + (i % 7) * 13,
+                t_out: 1 + (i % 4) * 31,
+            })
+            .collect();
+        let run = || {
+            let spec = CompareSpec {
+                sets: &s,
+                norm: Normalizer::from_workload(&s, &queries),
+                zeta: 0.5,
+                plan: None,
+                seed: 7,
+                cfg: SimConfig::default(),
+                arrival_label: "gamma:40:4".to_string(),
+            };
+            let grid = compare_replicated(
+                &spec,
+                &queries,
+                Arrivals::Sampled(ArrivalProcess::GammaBurst { rate: 40.0, cv2: 4.0 }),
+                &[PolicyKind::Greedy, PolicyKind::RoundRobin, PolicyKind::Random],
+                3,
+            )
+            .unwrap();
+            replicated_to_json(&grid).to_string_pretty()
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

@@ -1,20 +1,44 @@
-//! Per-query and per-node accounting of a simulated serving run, and its
-//! deterministic JSON artifact.
+//! Streaming accounting of a simulated serving run, and its deterministic
+//! versioned JSON artifact.
+//!
+//! # O(1)-memory metrics (artifact version 2)
+//!
+//! Up to artifact version 1 the simulator kept one [`QueryOutcome`] per
+//! query and computed exact quantiles by sorting at the end — O(|Q|)
+//! memory and the single largest cost of a large run. Version 2 streams:
+//! a `MetricsRecorder` folds each completion into O(1) accumulators
+//! (counts, sums, maxima, SLO attainment) plus two fixed-bin log-scale
+//! [`LogHistogram`]s (latency and queue wait), from which p50/p95 are
+//! read back deterministically to within one bin ratio (≈ 9% relative;
+//! see [`crate::stats::histogram`]). Exact per-query outcomes — and the
+//! exact sorted-vector quantiles they allow — are retained only on
+//! request (`--per-query`, [`crate::sim::SimConfig::per_query`]), which
+//! restores the O(|Q|) cost knowingly.
+//!
+//! # Determinism
 //!
 //! The JSON layout is stable by construction: objects serialize through
 //! [`Json`] (BTreeMap-backed, keys sorted), floats use Rust's shortest
 //! round-trip formatting, and every value derives from virtual-time
-//! arithmetic — so equal `(workload, policy, seed, config)` runs emit
-//! byte-identical artifacts. CI diffs two runs to enforce this.
+//! arithmetic folded in event order — so equal `(workload, policy, seed,
+//! config)` runs emit byte-identical artifacts. CI diffs two runs to
+//! enforce this.
 
-use crate::stats::quantile;
+use crate::stats::{quantile, LOG_HIST_BINS_PER_OCTAVE, LOG_HIST_LO_S, LogHistogram};
 use crate::util::Json;
 
+/// Version of the `ecoserve.sim-metrics` artifact this build writes.
+/// Version 1 (per-query exact quantiles, no histograms) is rejected on
+/// load with a migration message.
+pub const SIM_METRICS_VERSION: u32 = 2;
+
 /// Lifecycle of one simulated query (all times in virtual seconds from
-/// simulation start).
+/// simulation start). Only recorded when per-query retention is on.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QueryOutcome {
-    pub id: u32,
+    /// workload query id, widened to u64 so future 64-bit trace id spaces
+    /// need no artifact change
+    pub id: u64,
     /// index of the serving model/node
     pub model: usize,
     pub t_arrive: f64,
@@ -55,6 +79,135 @@ impl NodeStats {
     }
 }
 
+/// Streaming accumulator the event loop folds completions into: O(1)
+/// memory unless per-query retention was requested.
+#[derive(Debug, Clone)]
+pub(crate) struct MetricsRecorder {
+    slo_s: f64,
+    n: u64,
+    sum_latency_s: f64,
+    sum_queue_s: f64,
+    max_latency_s: f64,
+    max_queue_s: f64,
+    makespan_ns: u64,
+    total_energy_j: f64,
+    slo_attained: u64,
+    latency_hist: LogHistogram,
+    queue_hist: LogHistogram,
+    outcomes: Option<Vec<QueryOutcome>>,
+}
+
+impl MetricsRecorder {
+    pub(crate) fn new(slo_s: f64, per_query: bool) -> MetricsRecorder {
+        MetricsRecorder {
+            slo_s,
+            n: 0,
+            sum_latency_s: 0.0,
+            sum_queue_s: 0.0,
+            max_latency_s: 0.0,
+            max_queue_s: 0.0,
+            makespan_ns: 0,
+            total_energy_j: 0.0,
+            slo_attained: 0,
+            latency_hist: LogHistogram::new(),
+            queue_hist: LogHistogram::new(),
+            outcomes: per_query.then(Vec::new),
+        }
+    }
+
+    /// Completions recorded so far (the conservation check reads this).
+    pub(crate) fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Fold one completed query. Causality (`arrive ≤ start ≤ complete`)
+    /// is the event loop's invariant; times are virtual nanoseconds.
+    pub(crate) fn record(
+        &mut self,
+        id: u64,
+        model: usize,
+        arrive_ns: u64,
+        start_ns: u64,
+        complete_ns: u64,
+        energy_j: f64,
+    ) {
+        debug_assert!(arrive_ns <= start_ns && start_ns <= complete_ns);
+        let latency_s = (complete_ns - arrive_ns) as f64 / 1e9;
+        let queue_s = (start_ns - arrive_ns) as f64 / 1e9;
+        self.n += 1;
+        self.sum_latency_s += latency_s;
+        self.sum_queue_s += queue_s;
+        self.max_latency_s = self.max_latency_s.max(latency_s);
+        self.max_queue_s = self.max_queue_s.max(queue_s);
+        self.makespan_ns = self.makespan_ns.max(complete_ns);
+        self.total_energy_j += energy_j;
+        if latency_s <= self.slo_s {
+            self.slo_attained += 1;
+        }
+        self.latency_hist.record(latency_s);
+        self.queue_hist.record(queue_s);
+        if let Some(outcomes) = &mut self.outcomes {
+            outcomes.push(QueryOutcome {
+                id,
+                model,
+                t_arrive: arrive_ns as f64 / 1e9,
+                t_start: start_ns as f64 / 1e9,
+                t_complete: complete_ns as f64 / 1e9,
+                energy_j,
+            });
+        }
+    }
+
+    /// Close the run into the metrics artifact.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn finish(
+        self,
+        policy: String,
+        arrival: String,
+        seed: u64,
+        zeta: f64,
+        n_dropped: u64,
+        plan_decisions: Option<(u64, u64)>,
+        nodes: Vec<NodeStats>,
+    ) -> SimMetrics {
+        let n = self.n;
+        let mean = |sum: f64| if n == 0 { 0.0 } else { sum / n as f64 };
+        // Quantile estimates are bin upper edges, which sit strictly above
+        // every sample in the bin — clamp to the exact streaming maximum
+        // so the artifact never reports p95 > max (the estimate stays
+        // within the same one-bin-ratio error band).
+        SimMetrics {
+            policy,
+            arrival,
+            seed,
+            zeta,
+            n_queries: n,
+            n_dropped,
+            makespan_s: self.makespan_ns as f64 / 1e9,
+            total_energy_j: self.total_energy_j,
+            mean_latency_s: mean(self.sum_latency_s),
+            p50_latency_s: self.latency_hist.quantile(0.5).min(self.max_latency_s),
+            p95_latency_s: self.latency_hist.quantile(0.95).min(self.max_latency_s),
+            max_latency_s: self.max_latency_s,
+            mean_queue_s: mean(self.sum_queue_s),
+            p50_queue_s: self.queue_hist.quantile(0.5).min(self.max_queue_s),
+            p95_queue_s: self.queue_hist.quantile(0.95).min(self.max_queue_s),
+            max_queue_s: self.max_queue_s,
+            slo_s: self.slo_s,
+            slo_attainment: if n == 0 {
+                0.0
+            } else {
+                self.slo_attained as f64 / n as f64
+            },
+            plan_decisions,
+            nodes,
+            latency_hist: self.latency_hist,
+            queue_hist: self.queue_hist,
+            outcomes: self.outcomes,
+        }
+    }
+}
+
 /// Aggregate metrics of one simulated run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimMetrics {
@@ -63,17 +216,23 @@ pub struct SimMetrics {
     pub seed: u64,
     pub zeta: f64,
     /// queries served (arrivals inside the duration window)
-    pub n_queries: usize,
+    pub n_queries: u64,
     /// arrivals dropped by the `--duration` cap
-    pub n_dropped: usize,
+    pub n_dropped: u64,
     /// last completion time (virtual seconds)
     pub makespan_s: f64,
     pub total_energy_j: f64,
     pub mean_latency_s: f64,
+    /// histogram-estimated (≤ one bin ratio from exact; see module docs),
+    /// clamped to the exact maximum so p50/p95 never exceed it
     pub p50_latency_s: f64,
     pub p95_latency_s: f64,
+    /// exact streaming maximum
     pub max_latency_s: f64,
     pub mean_queue_s: f64,
+    pub p50_queue_s: f64,
+    pub p95_queue_s: f64,
+    pub max_queue_s: f64,
     /// latency SLO the attainment fraction is measured against
     pub slo_s: f64,
     /// fraction of queries with latency ≤ `slo_s`
@@ -81,70 +240,66 @@ pub struct SimMetrics {
     /// (plan-followed, fallback) router decisions, plan policy only
     pub plan_decisions: Option<(u64, u64)>,
     pub nodes: Vec<NodeStats>,
-    /// per-query lifecycle records (kept out of the JSON artifact)
-    pub outcomes: Vec<QueryOutcome>,
+    /// streaming latency distribution (serialized sparsely)
+    pub latency_hist: LogHistogram,
+    /// streaming queue-wait distribution
+    pub queue_hist: LogHistogram,
+    /// per-query lifecycle records; `Some` only when per-query retention
+    /// (`--per-query`) was on — O(|Q|) memory, exact quantiles
+    pub outcomes: Option<Vec<QueryOutcome>>,
+}
+
+fn hist_to_json(h: &LogHistogram) -> Json {
+    // Flat (bin, count) pairs: half the nodes of nested pairs, still
+    // self-describing next to the layout constants.
+    let mut bins = Vec::new();
+    for (bin, count) in h.nonzero() {
+        bins.push(Json::num(bin as f64));
+        bins.push(Json::num(count as f64));
+    }
+    Json::obj(vec![
+        ("bins", Json::Arr(bins)),
+        ("bins_per_octave", Json::num(LOG_HIST_BINS_PER_OCTAVE as f64)),
+        ("lo_s", Json::num(LOG_HIST_LO_S)),
+    ])
+}
+
+fn hist_from_json(v: &Json, what: &str) -> anyhow::Result<LogHistogram> {
+    if v.as_obj().is_none() {
+        anyhow::bail!("sim-metrics artifact: missing '{what}'");
+    }
+    let bpo = v.get("bins_per_octave").as_usize();
+    let lo = v.get("lo_s").as_f64();
+    if bpo != Some(LOG_HIST_BINS_PER_OCTAVE) || lo != Some(LOG_HIST_LO_S) {
+        anyhow::bail!(
+            "{what}: histogram layout {:?}/{:?} does not match this build \
+             ({LOG_HIST_BINS_PER_OCTAVE} bins/octave from {LOG_HIST_LO_S} s); \
+             regenerate the artifact",
+            bpo,
+            lo
+        );
+    }
+    let flat = v
+        .get("bins")
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{what}: missing 'bins' array"))?;
+    if flat.len() % 2 != 0 {
+        anyhow::bail!("{what}: 'bins' must hold (bin, count) pairs");
+    }
+    let mut pairs = Vec::with_capacity(flat.len() / 2);
+    for chunk in flat.chunks_exact(2) {
+        let bin = chunk[0]
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("{what}: non-integer bin index"))?;
+        let count = chunk[1]
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("{what}: non-integer bin count"))?;
+        pairs.push((bin, count));
+    }
+    LogHistogram::from_sparse(&pairs)
 }
 
 impl SimMetrics {
-    /// Aggregate raw recordings into the metrics artifact.
-    #[allow(clippy::too_many_arguments)]
-    pub(crate) fn from_outcomes(
-        policy: String,
-        arrival: String,
-        seed: u64,
-        zeta: f64,
-        slo_s: f64,
-        n_dropped: usize,
-        plan_decisions: Option<(u64, u64)>,
-        nodes: Vec<NodeStats>,
-        outcomes: Vec<QueryOutcome>,
-    ) -> SimMetrics {
-        let n = outcomes.len();
-        let latencies: Vec<f64> = outcomes.iter().map(QueryOutcome::latency_s).collect();
-        let mean = |xs: &[f64]| {
-            if xs.is_empty() {
-                0.0
-            } else {
-                xs.iter().sum::<f64>() / xs.len() as f64
-            }
-        };
-        let q = |p: f64| {
-            if latencies.is_empty() {
-                0.0
-            } else {
-                quantile(&latencies, p)
-            }
-        };
-        let queue: Vec<f64> = outcomes.iter().map(QueryOutcome::queue_s).collect();
-        SimMetrics {
-            policy,
-            arrival,
-            seed,
-            zeta,
-            n_queries: n,
-            n_dropped,
-            makespan_s: outcomes
-                .iter()
-                .map(|o| o.t_complete)
-                .fold(0.0f64, f64::max),
-            total_energy_j: outcomes.iter().map(|o| o.energy_j).sum(),
-            mean_latency_s: mean(&latencies),
-            p50_latency_s: q(0.5),
-            p95_latency_s: q(0.95),
-            max_latency_s: latencies.iter().copied().fold(0.0f64, f64::max),
-            mean_queue_s: mean(&queue),
-            slo_s,
-            slo_attainment: if n == 0 {
-                0.0
-            } else {
-                latencies.iter().filter(|&&l| l <= slo_s).count() as f64 / n as f64
-            },
-            plan_decisions,
-            nodes,
-            outcomes,
-        }
-    }
-
     /// Mean node utilization: busy time over makespan, averaged over
     /// nodes. Zero on an empty run.
     pub fn mean_utilization(&self) -> f64 {
@@ -158,12 +313,13 @@ impl SimMetrics {
             / self.nodes.len() as f64
     }
 
-    /// The deterministic metrics artifact (aggregates only; per-query
-    /// outcomes stay in memory).
+    /// The deterministic metrics artifact. Aggregates and histograms
+    /// always; an `exact` block (sorted-vector quantiles) only when
+    /// per-query outcomes were retained.
     pub fn to_json(&self) -> Json {
         let mut fields = vec![
             ("format", Json::str("ecoserve.sim-metrics")),
-            ("version", Json::num(1.0)),
+            ("version", Json::num(SIM_METRICS_VERSION as f64)),
             ("policy", Json::str(self.policy.clone())),
             ("arrival", Json::str(self.arrival.clone())),
             // As a decimal string: the f64-backed Json would round seeds
@@ -180,9 +336,14 @@ impl SimMetrics {
             ("p95_latency_s", Json::num(self.p95_latency_s)),
             ("max_latency_s", Json::num(self.max_latency_s)),
             ("mean_queue_s", Json::num(self.mean_queue_s)),
+            ("p50_queue_s", Json::num(self.p50_queue_s)),
+            ("p95_queue_s", Json::num(self.p95_queue_s)),
+            ("max_queue_s", Json::num(self.max_queue_s)),
             ("slo_s", Json::num(self.slo_s)),
             ("slo_attainment", Json::num(self.slo_attainment)),
             ("mean_utilization", Json::num(self.mean_utilization())),
+            ("latency_hist", hist_to_json(&self.latency_hist)),
+            ("queue_hist", hist_to_json(&self.queue_hist)),
             (
                 "nodes",
                 Json::arr(self.nodes.iter().map(|nd| {
@@ -214,7 +375,135 @@ impl SimMetrics {
                 ]),
             ));
         }
+        if let Some(outcomes) = self.outcomes.as_ref().filter(|o| !o.is_empty()) {
+            let lats: Vec<f64> = outcomes.iter().map(QueryOutcome::latency_s).collect();
+            let queues: Vec<f64> = outcomes.iter().map(QueryOutcome::queue_s).collect();
+            fields.push((
+                "exact",
+                Json::obj(vec![
+                    ("p50_latency_s", Json::num(quantile(&lats, 0.5))),
+                    ("p95_latency_s", Json::num(quantile(&lats, 0.95))),
+                    ("p50_queue_s", Json::num(quantile(&queues, 0.5))),
+                    ("p95_queue_s", Json::num(quantile(&queues, 0.95))),
+                ]),
+            ));
+        }
         Json::obj(fields)
+    }
+
+    /// Load an aggregates-only `SimMetrics` back from its artifact.
+    /// Per-query outcomes (and the derived `exact` block) are not part of
+    /// the artifact's reload surface. Version 1 artifacts are rejected
+    /// with a migration message; the golden test pins both behaviors.
+    pub fn from_json(v: &Json) -> anyhow::Result<SimMetrics> {
+        match v.get("format").as_str() {
+            Some("ecoserve.sim-metrics") => {}
+            other => anyhow::bail!(
+                "not a sim-metrics artifact (format {:?}, expected 'ecoserve.sim-metrics')",
+                other
+            ),
+        }
+        match v.get("version").as_u64() {
+            Some(ver) if ver == SIM_METRICS_VERSION as u64 => {}
+            Some(1) => anyhow::bail!(
+                "sim-metrics artifact is version 1 (pre-streaming: exact quantiles, \
+                 no histograms); this build reads version {SIM_METRICS_VERSION} — \
+                 regenerate with `ecoserve simulate` (add --per-query if you need \
+                 exact quantiles back)"
+            ),
+            other => anyhow::bail!(
+                "unsupported sim-metrics artifact version {:?} (this build reads \
+                 version {SIM_METRICS_VERSION})",
+                other
+            ),
+        }
+        let num = |k: &str| -> anyhow::Result<f64> {
+            v.get(k)
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("sim-metrics artifact: missing/invalid '{k}'"))
+        };
+        let string = |k: &str| -> anyhow::Result<String> {
+            v.get(k)
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("sim-metrics artifact: missing/invalid '{k}'"))
+        };
+        let seed: u64 = string("seed")?
+            .parse()
+            .map_err(|_| anyhow::anyhow!("sim-metrics artifact: 'seed' is not a u64 string"))?;
+        let nodes = v
+            .get("nodes")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("sim-metrics artifact: missing 'nodes'"))?
+            .iter()
+            .map(|nd| -> anyhow::Result<NodeStats> {
+                Ok(NodeStats {
+                    model_id: nd
+                        .get("model_id")
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("node missing 'model_id'"))?
+                        .to_string(),
+                    queries: nd
+                        .get("queries")
+                        .as_u64()
+                        .ok_or_else(|| anyhow::anyhow!("node missing 'queries'"))?,
+                    batches: nd
+                        .get("batches")
+                        .as_u64()
+                        .ok_or_else(|| anyhow::anyhow!("node missing 'batches'"))?,
+                    energy_j: nd
+                        .get("energy_j")
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("node missing 'energy_j'"))?,
+                    busy_s: nd
+                        .get("busy_s")
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("node missing 'busy_s'"))?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<NodeStats>>>()?;
+        let plan_decisions = match v.get("plan_decisions") {
+            Json::Null => None,
+            pd => Some((
+                pd.get("followed")
+                    .as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("plan_decisions missing 'followed'"))?,
+                pd.get("fallback")
+                    .as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("plan_decisions missing 'fallback'"))?,
+            )),
+        };
+        Ok(SimMetrics {
+            policy: string("policy")?,
+            arrival: string("arrival")?,
+            seed,
+            zeta: num("zeta")?,
+            n_queries: v
+                .get("n_queries")
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("sim-metrics artifact: missing 'n_queries'"))?,
+            n_dropped: v
+                .get("n_dropped")
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("sim-metrics artifact: missing 'n_dropped'"))?,
+            makespan_s: num("makespan_s")?,
+            total_energy_j: num("total_energy_j")?,
+            mean_latency_s: num("mean_latency_s")?,
+            p50_latency_s: num("p50_latency_s")?,
+            p95_latency_s: num("p95_latency_s")?,
+            max_latency_s: num("max_latency_s")?,
+            mean_queue_s: num("mean_queue_s")?,
+            p50_queue_s: num("p50_queue_s")?,
+            p95_queue_s: num("p95_queue_s")?,
+            max_queue_s: num("max_queue_s")?,
+            slo_s: num("slo_s")?,
+            slo_attainment: num("slo_attainment")?,
+            plan_decisions,
+            nodes,
+            latency_hist: hist_from_json(v.get("latency_hist"), "latency_hist")?,
+            queue_hist: hist_from_json(v.get("queue_hist"), "queue_hist")?,
+            outcomes: None,
+        })
     }
 }
 
@@ -222,24 +511,28 @@ impl SimMetrics {
 mod tests {
     use super::*;
 
-    fn outcome(id: u32, model: usize, arrive: f64, start: f64, complete: f64) -> QueryOutcome {
-        QueryOutcome {
-            id,
-            model,
-            t_arrive: arrive,
-            t_start: start,
-            t_complete: complete,
-            energy_j: 2.0,
-        }
+    fn record_outcome(
+        r: &mut MetricsRecorder,
+        id: u64,
+        model: usize,
+        arrive_s: f64,
+        start_s: f64,
+        complete_s: f64,
+    ) {
+        let ns = |s: f64| (s * 1e9).round() as u64;
+        r.record(id, model, ns(arrive_s), ns(start_s), ns(complete_s), 2.0);
     }
 
-    fn metrics() -> SimMetrics {
-        SimMetrics::from_outcomes(
+    fn metrics(per_query: bool) -> SimMetrics {
+        let mut r = MetricsRecorder::new(1.0, per_query);
+        record_outcome(&mut r, 0, 0, 0.0, 0.5, 1.5);
+        record_outcome(&mut r, 1, 0, 0.5, 0.5, 1.5);
+        record_outcome(&mut r, 2, 1, 1.0, 1.0, 3.0);
+        r.finish(
             "greedy".into(),
             "poisson:10".into(),
             42,
             0.5,
-            1.0,
             3,
             None,
             vec![
@@ -258,17 +551,12 @@ mod tests {
                     busy_s: 2.0,
                 },
             ],
-            vec![
-                outcome(0, 0, 0.0, 0.5, 1.5),
-                outcome(1, 0, 0.5, 0.5, 1.5),
-                outcome(2, 1, 1.0, 1.0, 3.0),
-            ],
         )
     }
 
     #[test]
     fn aggregates_are_correct() {
-        let m = metrics();
+        let m = metrics(false);
         assert_eq!(m.n_queries, 3);
         assert_eq!(m.n_dropped, 3);
         assert_eq!(m.makespan_s, 3.0);
@@ -276,23 +564,47 @@ mod tests {
         // latencies: 1.5, 1.0, 2.0
         assert!((m.mean_latency_s - 1.5).abs() < 1e-12);
         assert_eq!(m.max_latency_s, 2.0);
-        assert_eq!(m.p50_latency_s, 1.5);
+        // Histogram p50: within one bin ratio of the exact 1.5.
+        let ratio = 2f64.powf(1.0 / LOG_HIST_BINS_PER_OCTAVE as f64);
+        assert!(m.p50_latency_s >= 1.5 && m.p50_latency_s <= 1.5 * ratio * (1.0 + 1e-12));
         // queue waits: 0.5, 0.0, 0.0
         assert!((m.mean_queue_s - 0.5 / 3.0).abs() < 1e-12);
+        assert_eq!(m.p50_queue_s, 0.0); // median queue wait is exactly zero
+        assert_eq!(m.max_queue_s, 0.5);
         // SLO 1.0 s: only the 1.0-latency query attains it.
         assert!((m.slo_attainment - 1.0 / 3.0).abs() < 1e-12);
         // utilization: (1/3 + 2/3)/2
         assert!((m.mean_utilization() - 0.5).abs() < 1e-12);
+        // Streaming mode retains nothing per query.
+        assert!(m.outcomes.is_none());
+        assert_eq!(m.latency_hist.n(), 3);
+    }
+
+    #[test]
+    fn per_query_mode_retains_outcomes_and_exact_quantiles() {
+        let m = metrics(true);
+        let outcomes = m.outcomes.as_ref().unwrap();
+        assert_eq!(outcomes.len(), 3);
+        assert_eq!(outcomes[2].id, 2);
+        assert!((outcomes[0].latency_s() - 1.5).abs() < 1e-12);
+        let json = m.to_json().to_string_pretty();
+        assert!(json.contains("\"exact\""), "{json}");
+        assert!(json.contains("\"p95_latency_s\""));
+        // Aggregates are identical with and without retention.
+        let lean = metrics(false);
+        assert_eq!(lean.p50_latency_s, m.p50_latency_s);
+        assert_eq!(lean.total_energy_j, m.total_energy_j);
+        assert!(!lean.to_json().to_string_pretty().contains("\"exact\""));
     }
 
     #[test]
     fn json_is_deterministic_and_complete() {
-        let a = metrics().to_json().to_string_pretty();
-        let b = metrics().to_json().to_string_pretty();
+        let a = metrics(false).to_json().to_string_pretty();
+        let b = metrics(false).to_json().to_string_pretty();
         assert_eq!(a, b);
         // Seeds survive as exact decimal strings even above 2^53.
         assert!(a.contains("\"seed\": \"42\""), "{a}");
-        let mut big = metrics();
+        let mut big = metrics(false);
         big.seed = (1u64 << 53) + 1;
         assert!(
             big.to_json()
@@ -302,35 +614,75 @@ mod tests {
         for key in [
             "\"policy\"",
             "\"arrival\"",
+            "\"version\": 2",
             "\"total_energy_j\"",
             "\"slo_attainment\"",
+            "\"latency_hist\"",
+            "\"queue_hist\"",
+            "\"bins_per_octave\"",
+            "\"p95_queue_s\"",
             "\"nodes\"",
             "\"utilization\"",
         ] {
             assert!(a.contains(key), "missing {key} in {a}");
         }
         assert!(!a.contains("plan_decisions"));
-        let mut m = metrics();
+        let mut m = metrics(false);
         m.plan_decisions = Some((2, 1));
         assert!(m.to_json().to_string_pretty().contains("plan_decisions"));
     }
 
     #[test]
+    fn artifact_roundtrips_through_from_json() {
+        let mut m = metrics(false);
+        m.plan_decisions = Some((2, 1));
+        let json = m.to_json();
+        let back = SimMetrics::from_json(&json).unwrap();
+        assert_eq!(back, m);
+        // And byte-for-byte through a reserialize.
+        assert_eq!(
+            back.to_json().to_string_pretty(),
+            json.to_string_pretty()
+        );
+    }
+
+    #[test]
+    fn from_json_rejects_old_and_foreign_artifacts() {
+        let v1 = Json::parse(
+            r#"{"format": "ecoserve.sim-metrics", "version": 1, "policy": "plan"}"#,
+        )
+        .unwrap();
+        let err = SimMetrics::from_json(&v1).unwrap_err().to_string();
+        assert!(err.contains("version 1"), "{err}");
+        assert!(err.contains("regenerate"), "{err}");
+
+        let foreign = Json::parse(r#"{"format": "ecoserve.plan", "version": 2}"#).unwrap();
+        let err = SimMetrics::from_json(&foreign).unwrap_err().to_string();
+        assert!(err.contains("ecoserve.sim-metrics"), "{err}");
+
+        let future = Json::parse(
+            r#"{"format": "ecoserve.sim-metrics", "version": 99}"#,
+        )
+        .unwrap();
+        let err = SimMetrics::from_json(&future).unwrap_err().to_string();
+        assert!(err.contains("99"), "{err}");
+    }
+
+    #[test]
     fn empty_run_has_no_nans() {
-        let m = SimMetrics::from_outcomes(
+        let m = MetricsRecorder::new(1.0, false).finish(
             "greedy".into(),
             "poisson:1".into(),
             1,
             0.5,
-            1.0,
             0,
             None,
-            vec![],
             vec![],
         );
         let text = m.to_json().to_string_compact();
         assert!(!text.contains("null"), "{text}");
         assert_eq!(m.mean_latency_s, 0.0);
+        assert_eq!(m.p95_latency_s, 0.0);
         assert_eq!(m.slo_attainment, 0.0);
     }
 }

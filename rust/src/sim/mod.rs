@@ -6,7 +6,8 @@
 //! known in full. Deployed serving is different: queries arrive under a
 //! stochastic process, batchers hold them back, engines serialize them,
 //! and queueing decides whether the plan's predicted energy/latency
-//! survives burstiness. This module closes that loop without hardware:
+//! survives burstiness. This module closes that loop without hardware —
+//! at tens-of-millions-of-queries scale:
 //!
 //! * [`ArrivalProcess`] — Poisson, Gamma-burst, or trace-replayed
 //!   (`t_arrive` in the workload JSONL) arrival timestamps, all seeded
@@ -14,28 +15,37 @@
 //! * [`SimPolicy`] — the routing decision per arriving query:
 //!   plan-following (the production
 //!   [`Router::with_plan`](crate::coordinator::Router::with_plan)
-//!   handoff), ζ-cost greedy, round-robin, or seeded random;
-//! * [`Simulator`] — the event loop (arrive → route → batch → execute →
-//!   complete) on a virtual integer-nanosecond clock, with one
-//!   [`Batcher`](crate::coordinator::Batcher)-fronted serial engine per
-//!   hosted model, service times and energies taken from the fitted
-//!   workload models (Eqs. 6–7);
-//! * [`SimMetrics`] — per-query lifecycles and per-node accounting
-//!   (energy J, latency, queue wait, SLO attainment, utilization),
-//!   serialized as a byte-stable JSON artifact;
-//! * [`compare()`] — the same seeded trace replayed under several
-//!   policies in one invocation (`ecoserve simulate --policy compare`).
+//!   handoff), ζ-cost greedy (shape-memoized), round-robin, or seeded
+//!   random;
+//! * [`Simulator`] — the zero-allocation event loop (arrive → route →
+//!   batch → execute → complete) on a virtual integer-nanosecond clock:
+//!   `Copy` heap events, per-node index FIFOs instead of per-batch
+//!   vectors, arrivals streamed from one sorted array, and Eq. 6–7
+//!   service/energy predictions precomputed once per (shape, model) via
+//!   the scheduler's shape bucketing;
+//! * [`SimMetrics`] — streaming aggregates in O(1) memory: counts, sums,
+//!   maxima, SLO attainment, and fixed-bin log-scale latency/queue-wait
+//!   histograms ([`crate::stats::LogHistogram`]) for p50/p95; per-query
+//!   [`QueryOutcome`] lifecycles (and exact quantiles) only behind
+//!   `--per-query`. Serialized as a byte-stable versioned JSON artifact;
+//! * [`compare()`] / [`compare_replicated()`] — the same seeded trace
+//!   replayed under several policies in one invocation (`ecoserve
+//!   simulate --policy compare`), optionally replicated over `--seeds N`
+//!   arrival draws with cross-seed confidence intervals; the policy×seed
+//!   grid fans out across scoped threads and merges in fixed order.
 //!
 //! # Determinism contract
 //!
 //! A run is a pure function of `(model sets, workload, arrival times,
-//! policy, seed, SimConfig)`. Virtual time is integer nanoseconds, event
-//! ties break on creation order, all randomness flows from the seed, and
-//! the JSON artifact serializes through sorted maps with shortest
-//! round-trip float formatting — so repeated runs are byte-identical
-//! (property-tested in `tests/sim.rs`, diffed in CI's `sim-smoke`).
-//! This event loop is the seam future online features (preemption, DVFS,
-//! carbon-aware ζ control) plug into.
+//! policy, seed, SimConfig)`. Virtual time is integer nanoseconds,
+//! arrivals win event-time ties (then creation order), all randomness
+//! flows from the seed, and the JSON artifact serializes through sorted
+//! maps with shortest round-trip float formatting — so repeated runs are
+//! byte-identical (property-tested in `tests/sim.rs`, diffed in CI's
+//! `sim-smoke`, including the parallel `--seeds` comparison). This event
+//! loop is the seam future online features (preemption, DVFS,
+//! carbon-aware ζ control) plug into — and is now fast enough to drive
+//! them at cluster scale (`benches/sim_scaling.rs`).
 
 pub mod arrival;
 pub mod compare;
@@ -43,8 +53,10 @@ pub mod metrics;
 pub mod policy;
 pub mod simulator;
 
-pub use arrival::{trace_times, ArrivalProcess};
-pub use compare::{compare, comparison_to_json, CompareSpec};
-pub use metrics::{NodeStats, QueryOutcome, SimMetrics};
+pub use arrival::{trace_times, ARRIVAL_SEED_SALT, ArrivalProcess};
+pub use compare::{
+    compare, compare_replicated, comparison_to_json, replicated_to_json, Arrivals, CompareSpec,
+};
+pub use metrics::{NodeStats, QueryOutcome, SIM_METRICS_VERSION, SimMetrics};
 pub use policy::{PolicyKind, SimPolicy};
 pub use simulator::{SimConfig, Simulator};

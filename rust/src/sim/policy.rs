@@ -12,6 +12,7 @@ use crate::models::{ModelSet, Normalizer};
 use crate::plan::Plan;
 use crate::util::Rng;
 use crate::workload::Query;
+use std::collections::HashMap;
 
 /// Which routing policy drives the simulation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -67,6 +68,11 @@ pub struct SimPolicy {
     kind: PolicyKind,
     router: Router,
     rng: Rng,
+    /// Greedy only: shape key → chosen model. The ζ-cost argmin without a
+    /// plan or quota is a pure function of the query *shape* (Eqs. 6–7
+    /// depend on token counts alone), so at simulator scale the argmin is
+    /// computed once per distinct shape and looked up thereafter.
+    greedy_cache: HashMap<u64, usize>,
 }
 
 impl SimPolicy {
@@ -100,6 +106,7 @@ impl SimPolicy {
             kind,
             router,
             rng: Rng::new(seed ^ 0x51_AA7E),
+            greedy_cache: HashMap::new(),
         })
     }
 
@@ -111,6 +118,16 @@ impl SimPolicy {
     pub fn route(&mut self, q: &Query) -> usize {
         match self.kind {
             PolicyKind::Random => self.rng.index(self.router.sets.len()),
+            // Safe to memoize: the greedy router carries no plan and no
+            // quota, so its decision depends only on the query shape.
+            PolicyKind::Greedy => match self.greedy_cache.get(&q.shape().key()) {
+                Some(&k) => k,
+                None => {
+                    let k = self.router.route(q);
+                    self.greedy_cache.insert(q.shape().key(), k);
+                    k
+                }
+            },
             _ => self.router.route(q),
         }
     }
@@ -140,6 +157,24 @@ mod tests {
         let norm = Normalizer::from_workload(&s, &[Query { id: 0, t_in: 8, t_out: 8 }]);
         let err = SimPolicy::new(PolicyKind::Plan, &s, norm, 0.5, None, 1).unwrap_err();
         assert!(err.to_string().contains("--plan"), "{err}");
+    }
+
+    #[test]
+    fn greedy_cache_matches_fresh_router_decisions() {
+        let s = sets();
+        let norm = Normalizer::from_workload(&s, &[Query { id: 0, t_in: 8, t_out: 8 }]);
+        let mut cached = SimPolicy::new(PolicyKind::Greedy, &s, norm, 0.35, None, 1).unwrap();
+        // The uncached reference: the same router scored per query.
+        let mut fresh = Router::new(s.to_vec(), norm, 0.35, Policy::ZetaCost);
+        let mut rng = Rng::new(3);
+        for i in 0..300 {
+            let q = Query {
+                id: i,
+                t_in: 1 + 13 * rng.index(7) as u32,
+                t_out: 1 + 29 * rng.index(5) as u32,
+            };
+            assert_eq!(cached.route(&q), fresh.route(&q), "query {q:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,272 @@
+//! Fixed-bin log-scale streaming histogram: O(1)-memory quantile
+//! estimates for simulator-scale samples.
+//!
+//! The serving simulator ([`crate::sim`]) records one latency and one
+//! queue-wait observation per completed query. Holding those per query and
+//! sorting at the end costs O(|Q|) memory and O(|Q| log |Q|) time — the
+//! exact pattern that capped the simulator well below the ROADMAP's
+//! "millions of users" scale. [`LogHistogram`] replaces it: a fixed array
+//! of logarithmically spaced bins (so the *relative* quantile error is
+//! bounded by one bin ratio across twelve decades), updated in O(1) per
+//! observation, with deterministic nearest-rank quantiles read back from
+//! the bin edges.
+//!
+//! # Layout
+//!
+//! Bin 0 is the underflow bin `[0, LO)`; bin `i ≥ 1` covers
+//! `[LO·2^((i−1)/B), LO·2^(i/B))` with `LO =` [`LOG_HIST_LO_S`] (1 µs) and
+//! `B =` [`LOG_HIST_BINS_PER_OCTAVE`]. The top bin absorbs everything at
+//! or above the top edge (≈ 1.1e6 s — beyond the simulator's 1e9-second
+//! arrival horizon only for pathological waits, which then saturate
+//! rather than panic). Negative and NaN observations clamp into bin 0.
+//!
+//! # Determinism
+//!
+//! Bin selection uses one `f64::log2` per observation; quantiles use only
+//! integer prefix sums plus one `exp2`. Equal observation sequences give
+//! equal histograms, so the simulator's byte-stable JSON contract extends
+//! to the histogram fields unchanged.
+
+/// Lower edge of bin 1: observations below this land in the underflow bin
+/// and quantile estimates there report 0.0 (the bin's lower edge).
+pub const LOG_HIST_LO_S: f64 = 1e-6;
+
+/// Bins per octave (factor-of-two range); the relative width of one bin —
+/// and thus the worst-case relative quantile error — is `2^(1/8) ≈ 9%`.
+pub const LOG_HIST_BINS_PER_OCTAVE: usize = 8;
+
+/// Octaves covered above [`LOG_HIST_LO_S`]: 40 octaves ≈ 12 decades, up
+/// to ≈ 1.1e6 seconds.
+const LOG_HIST_OCTAVES: usize = 40;
+
+/// Total bin count, including the underflow bin 0.
+pub const LOG_HIST_BINS: usize = 1 + LOG_HIST_OCTAVES * LOG_HIST_BINS_PER_OCTAVE;
+
+/// A streaming log-scale histogram over non-negative seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    n: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> LogHistogram {
+        LogHistogram::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram {
+            counts: vec![0; LOG_HIST_BINS],
+            n: 0,
+        }
+    }
+
+    /// Observations recorded so far.
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// The bin an observation falls into.
+    pub fn bin_of(v: f64) -> usize {
+        // NaN and anything below LO (including negatives) → underflow bin.
+        if v.is_nan() || v < LOG_HIST_LO_S {
+            return 0;
+        }
+        let b = LOG_HIST_BINS_PER_OCTAVE as f64;
+        // v ≥ LO ⇒ log2 ≥ 0; the float→usize cast saturates, min() clamps
+        // astronomically large values into the top bin.
+        let idx = 1usize.saturating_add(((v / LOG_HIST_LO_S).log2() * b).floor() as usize);
+        idx.min(LOG_HIST_BINS - 1)
+    }
+
+    /// Inclusive lower edge of a bin (0.0 for the underflow bin).
+    pub fn lower_edge(bin: usize) -> f64 {
+        if bin == 0 {
+            return 0.0;
+        }
+        LOG_HIST_LO_S * (((bin - 1) as f64) / LOG_HIST_BINS_PER_OCTAVE as f64).exp2()
+    }
+
+    /// Exclusive upper edge of a bin (the top bin's edge is nominal — it
+    /// absorbs everything above it).
+    pub fn upper_edge(bin: usize) -> f64 {
+        LOG_HIST_LO_S * ((bin as f64) / LOG_HIST_BINS_PER_OCTAVE as f64).exp2()
+    }
+
+    /// Record one observation. O(1); never allocates.
+    #[inline]
+    pub fn record(&mut self, v: f64) {
+        self.counts[Self::bin_of(v)] += 1;
+        self.n += 1;
+    }
+
+    /// Nearest-rank quantile estimate, `q ∈ [0, 1]`: the upper edge of the
+    /// bin holding the order statistic at index `ceil(q·(n−1))` (0.0 for
+    /// the underflow bin, whose lower edge is exact). The true sorted-
+    /// sample nearest-rank quantile lies within the same bin, so the
+    /// estimate is exact to one bin ratio (≈ 9% relative) — property-
+    /// tested against exact sorted-vector quantiles. Returns 0.0 on an
+    /// empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q), "quantile q in [0,1], got {q}");
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = (((self.n - 1) as f64) * q).ceil() as u64; // 0-based
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return if i == 0 { 0.0 } else { Self::upper_edge(i) };
+            }
+        }
+        // Unreachable: Σ counts == n > rank. Kept total for safety.
+        Self::upper_edge(LOG_HIST_BINS - 1)
+    }
+
+    /// Non-empty bins as `(bin, count)` pairs, ascending — the sparse form
+    /// the JSON artifact serializes.
+    pub fn nonzero(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (i, c))
+    }
+
+    /// Rebuild from sparse `(bin, count)` pairs (artifact loading).
+    pub fn from_sparse(pairs: &[(usize, u64)]) -> anyhow::Result<LogHistogram> {
+        let mut h = LogHistogram::new();
+        for &(bin, count) in pairs {
+            if bin >= LOG_HIST_BINS {
+                anyhow::bail!("histogram bin {bin} out of range (max {})", LOG_HIST_BINS - 1);
+            }
+            h.counts[bin] = h.counts[bin]
+                .checked_add(count)
+                .ok_or_else(|| anyhow::anyhow!("histogram bin {bin} count overflows u64"))?;
+            h.n = h
+                .n
+                .checked_add(count)
+                .ok_or_else(|| anyhow::anyhow!("histogram total count overflows u64"))?;
+        }
+        Ok(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edges_are_monotone_and_bin_of_inverts_them() {
+        assert_eq!(LogHistogram::lower_edge(0), 0.0);
+        assert_eq!(LogHistogram::upper_edge(0), LOG_HIST_LO_S);
+        for bin in 1..LOG_HIST_BINS {
+            let lo = LogHistogram::lower_edge(bin);
+            let hi = LogHistogram::upper_edge(bin);
+            assert!(lo < hi, "bin {bin}: {lo} >= {hi}");
+            assert!((hi / lo - 2f64.powf(1.0 / 8.0)).abs() < 1e-12);
+            // A point safely inside the bin maps back to it.
+            let mid = (lo * hi).sqrt();
+            assert_eq!(LogHistogram::bin_of(mid), bin, "mid {mid}");
+        }
+    }
+
+    #[test]
+    fn degenerate_observations_land_in_the_underflow_bin() {
+        for v in [0.0, -1.0, f64::NAN, 1e-9, LOG_HIST_LO_S / 2.0] {
+            assert_eq!(LogHistogram::bin_of(v), 0, "{v}");
+        }
+        assert_eq!(LogHistogram::bin_of(f64::INFINITY), LOG_HIST_BINS - 1);
+        assert_eq!(LogHistogram::bin_of(1e300), LOG_HIST_BINS - 1);
+    }
+
+    #[test]
+    fn quantiles_of_known_samples() {
+        let mut h = LogHistogram::new();
+        assert_eq!(h.quantile(0.5), 0.0); // empty
+        for _ in 0..10 {
+            h.record(0.0); // underflow
+        }
+        assert_eq!(h.quantile(0.5), 0.0);
+        let mut h = LogHistogram::new();
+        for _ in 0..100 {
+            h.record(1.0);
+        }
+        let p50 = h.quantile(0.5);
+        // 1.0 s sits in some bin; its upper edge is within one bin ratio.
+        assert!(p50 >= 1.0 && p50 <= 1.0 * 2f64.powf(1.0 / 8.0) * (1.0 + 1e-12), "{p50}");
+        // Mixed: 90 fast + 10 slow → p50 near fast, p95 near slow.
+        let mut h = LogHistogram::new();
+        for _ in 0..90 {
+            h.record(0.01);
+        }
+        for _ in 0..10 {
+            h.record(10.0);
+        }
+        assert!(h.quantile(0.5) < 0.012);
+        assert!(h.quantile(0.95) > 9.0);
+        assert_eq!(h.n(), 100);
+    }
+
+    #[test]
+    fn sparse_roundtrip() {
+        let mut h = LogHistogram::new();
+        for v in [0.0, 0.5, 0.5, 3.0, 2e-6] {
+            h.record(v);
+        }
+        let pairs: Vec<(usize, u64)> = h.nonzero().collect();
+        let back = LogHistogram::from_sparse(&pairs).unwrap();
+        assert_eq!(back, h);
+        assert_eq!(back.n(), 5);
+        assert!(LogHistogram::from_sparse(&[(LOG_HIST_BINS, 1)]).is_err());
+    }
+
+    /// The satellite property: streaming p50/p95 agree with exact
+    /// sorted-vector nearest-rank quantiles to within one bin.
+    #[test]
+    fn quantiles_match_exact_sorted_vector_within_one_bin() {
+        use crate::testkit::{forall, Config};
+        let ratio = 2f64.powf(1.0 / LOG_HIST_BINS_PER_OCTAVE as f64);
+        forall(Config::default().cases(60), |rng| {
+            let n = rng.int_range(1, 4000) as usize;
+            let mut xs: Vec<f64> = (0..n)
+                .map(|_| {
+                    if rng.chance(0.1) {
+                        0.0 // queue waits are often exactly zero
+                    } else {
+                        // span many decades
+                        10f64.powf(rng.range(-7.0, 4.0))
+                    }
+                })
+                .collect();
+            let mut h = LogHistogram::new();
+            for &x in &xs {
+                h.record(x);
+            }
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+                let est = h.quantile(q);
+                let rank = (((n - 1) as f64) * q).ceil() as usize;
+                let exact = xs[rank];
+                if est == 0.0 {
+                    // Underflow bin: exact lies in [0, LO).
+                    assert!(exact < LOG_HIST_LO_S, "q={q}: exact {exact} not underflow");
+                } else {
+                    // Exact lies in the estimate's bin: (est/ratio, est].
+                    assert!(exact <= est * (1.0 + 1e-9), "q={q}: exact {exact} > est {est}");
+                    assert!(
+                        exact >= est / ratio * (1.0 - 1e-9),
+                        "q={q}: exact {exact} below bin of est {est}"
+                    );
+                }
+            }
+        });
+    }
+}

@@ -7,6 +7,7 @@
 pub mod anova;
 pub mod describe;
 pub mod dist;
+pub mod histogram;
 pub mod linalg;
 pub mod ols;
 pub mod special;
@@ -14,6 +15,7 @@ pub mod stopping;
 
 pub use anova::{two_way, two_way_blocked, AnovaTable, Obs};
 pub use describe::{ci_half_width, describe, mean, quantile, Summary};
+pub use histogram::{LOG_HIST_BINS, LOG_HIST_BINS_PER_OCTAVE, LOG_HIST_LO_S, LogHistogram};
 pub use dist::{f_cdf, f_sf, normal_cdf, t_cdf, t_critical, t_sf_two_sided};
 pub use ols::{fit as ols_fit, Coef, OlsError, OlsFit};
 pub use stopping::{StopReason, StoppingRule};

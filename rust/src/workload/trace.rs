@@ -63,45 +63,62 @@ pub fn from_jsonl(text: &str) -> anyhow::Result<Vec<Query>> {
         .collect())
 }
 
+/// Parse one JSONL line (1-based `lineno` for error messages). Returns
+/// `None` for blank lines. Shared by the in-memory parser and the
+/// streaming file loader so both reject malformed input identically.
+fn parse_record_line(line: &str, lineno: usize) -> anyhow::Result<Option<TraceRecord>> {
+    if line.trim().is_empty() {
+        return Ok(None);
+    }
+    let v = Json::parse(line).map_err(|e| anyhow::anyhow!("trace line {lineno}: {e}"))?;
+    let get = |k: &str| -> anyhow::Result<u32> {
+        let x = v
+            .get(k)
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("trace line {lineno}: missing/invalid '{k}'"))?;
+        // Explicit overflow error instead of the silent `as u32`
+        // truncation this replaced: a trace with ids (or token counts)
+        // beyond u32::MAX must fail loudly, not alias low ids.
+        u32::try_from(x).map_err(|_| {
+            anyhow::anyhow!(
+                "trace line {lineno}: '{k}' = {x} exceeds u32::MAX ({}); \
+                 the workload keeps 32-bit ids and token counts",
+                u32::MAX
+            )
+        })
+    };
+    let t_arrive = match v.get("t_arrive") {
+        Json::Null => None,
+        j => {
+            let t = j.as_f64().ok_or_else(|| {
+                anyhow::anyhow!("trace line {lineno}: 't_arrive' must be a number")
+            })?;
+            if !t.is_finite() || t < 0.0 {
+                anyhow::bail!(
+                    "trace line {lineno}: 't_arrive' must be finite and >= 0, got {t}"
+                );
+            }
+            Some(t)
+        }
+    };
+    Ok(Some(TraceRecord {
+        query: Query {
+            id: get("id")?,
+            t_in: get("t_in")?,
+            t_out: get("t_out")?,
+        },
+        t_arrive,
+    }))
+}
+
 /// Parse trace records from JSONL text. `t_arrive`, when present, must be
-/// a finite number ≥ 0.
+/// a finite number ≥ 0; ids and token counts must fit `u32`.
 pub fn from_jsonl_records(text: &str) -> anyhow::Result<Vec<TraceRecord>> {
     let mut records = Vec::new();
     for (i, line) in text.lines().enumerate() {
-        if line.trim().is_empty() {
-            continue;
+        if let Some(r) = parse_record_line(line, i + 1)? {
+            records.push(r);
         }
-        let v = Json::parse(line)
-            .map_err(|e| anyhow::anyhow!("trace line {}: {e}", i + 1))?;
-        let get = |k: &str| -> anyhow::Result<u32> {
-            v.get(k)
-                .as_u64()
-                .map(|x| x as u32)
-                .ok_or_else(|| anyhow::anyhow!("trace line {}: missing/invalid '{k}'", i + 1))
-        };
-        let t_arrive = match v.get("t_arrive") {
-            Json::Null => None,
-            j => {
-                let t = j.as_f64().ok_or_else(|| {
-                    anyhow::anyhow!("trace line {}: 't_arrive' must be a number", i + 1)
-                })?;
-                if !t.is_finite() || t < 0.0 {
-                    anyhow::bail!(
-                        "trace line {}: 't_arrive' must be finite and >= 0, got {t}",
-                        i + 1
-                    );
-                }
-                Some(t)
-            }
-        };
-        records.push(TraceRecord {
-            query: Query {
-                id: get("id")?,
-                t_in: get("t_in")?,
-                t_out: get("t_out")?,
-            },
-            t_arrive,
-        });
     }
     Ok(records)
 }
@@ -123,11 +140,35 @@ fn write_text(path: &Path, text: &str) -> anyhow::Result<()> {
 }
 
 pub fn load(path: &Path) -> anyhow::Result<Vec<Query>> {
-    from_jsonl(&std::fs::read_to_string(path)?)
+    Ok(load_records(path)?.into_iter().map(|r| r.query).collect())
 }
 
+/// Stream a JSONL trace file through one reused line buffer: O(longest
+/// line) transient memory instead of O(file) (`read_to_string`) plus
+/// per-line slicing — at 10M-line traces the loader would otherwise be
+/// the bottleneck the sim bench's throughput assertion guards against.
 pub fn load_records(path: &Path) -> anyhow::Result<Vec<TraceRecord>> {
-    from_jsonl_records(&std::fs::read_to_string(path)?)
+    use std::io::BufRead;
+    let file = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+    let mut reader = std::io::BufReader::new(file);
+    let mut records = Vec::new();
+    let mut buf = String::new();
+    let mut lineno = 0usize;
+    loop {
+        buf.clear();
+        if reader
+            .read_line(&mut buf)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?
+            == 0
+        {
+            return Ok(records);
+        }
+        lineno += 1;
+        if let Some(r) = parse_record_line(&buf, lineno)? {
+            records.push(r);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -188,6 +229,52 @@ mod tests {
         assert!(from_jsonl("not json\n").is_err());
         assert!(from_jsonl("{\"id\":0}\n").is_err());
         assert!(from_jsonl("{\"id\":0,\"t_in\":-3,\"t_out\":2}\n").is_err());
+    }
+
+    #[test]
+    fn ids_beyond_u32_error_instead_of_truncating() {
+        // 2^32 would silently alias id 0 under the old `as u32` cast.
+        let err = from_jsonl_records("{\"id\":4294967296,\"t_in\":1,\"t_out\":2}\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("exceeds u32::MAX"), "{err}");
+        assert!(err.contains("'id'"), "{err}");
+        assert!(err.contains("line 1"), "{err}");
+        // Token counts get the same guard.
+        let err = from_jsonl_records("{\"id\":0,\"t_in\":1,\"t_out\":99999999999}\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("'t_out'"), "{err}");
+        // u32::MAX itself is still a valid id.
+        let ok = from_jsonl_records("{\"id\":4294967295,\"t_in\":1,\"t_out\":2}\n").unwrap();
+        assert_eq!(ok[0].query.id, u32::MAX);
+    }
+
+    #[test]
+    fn streaming_loader_matches_in_memory_parser() {
+        let records = vec![
+            TraceRecord {
+                query: Query { id: 0, t_in: 8, t_out: 16 },
+                t_arrive: Some(0.25),
+            },
+            TraceRecord::untimed(Query { id: 1, t_in: 100, t_out: 7 }),
+        ];
+        let mut text = to_jsonl_records(&records);
+        text.push('\n'); // trailing blank line must be skipped
+        let path = std::env::temp_dir().join(format!(
+            "ecoserve_trace_stream_{}.jsonl",
+            std::process::id()
+        ));
+        std::fs::write(&path, &text).unwrap();
+        let streamed = load_records(&path).unwrap();
+        assert_eq!(streamed, from_jsonl_records(&text).unwrap());
+        assert_eq!(streamed, records);
+        assert_eq!(load(&path).unwrap(), vec![records[0].query, records[1].query]);
+        // Malformed lines report the same line numbers when streamed.
+        std::fs::write(&path, "{\"id\":0,\"t_in\":1,\"t_out\":2}\n{\"id\":1}\n").unwrap();
+        let err = load_records(&path).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

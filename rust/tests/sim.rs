@@ -1,18 +1,21 @@
 //! Integration properties of the discrete-event serving simulator:
-//! determinism (same seed + config ⇒ byte-identical metrics JSON),
-//! plan-vs-baseline energy ordering on capacity-feasible instances, and
-//! trace-replay arrival fidelity.
+//! determinism (same seed + config ⇒ byte-identical metrics JSON, single
+//! and parallel `--seeds` replicated), plan-vs-baseline energy ordering
+//! on capacity-feasible instances, trace-replay arrival fidelity,
+//! streaming-vs-exact quantile agreement, and the version-2 metrics
+//! artifact golden (byte-exact round-trip + version-1 rejection).
 
 use ecoserve::models::{AccuracyModel, ModelSet, Normalizer, Target, WorkloadModel};
 use ecoserve::plan::{Plan, Planner, SolverKind};
 use ecoserve::scheduler::capacity_bounds;
 use ecoserve::scheduler::CapacityMode;
 use ecoserve::sim::{
-    compare, comparison_to_json, ArrivalProcess, CompareSpec, PolicyKind, SimConfig, SimMetrics,
-    Simulator,
+    compare, compare_replicated, comparison_to_json, replicated_to_json, ArrivalProcess,
+    Arrivals, CompareSpec, PolicyKind, SimConfig, SimMetrics, Simulator,
 };
+use ecoserve::stats::{quantile, LOG_HIST_BINS_PER_OCTAVE};
 use ecoserve::testkit::{forall, Config};
-use ecoserve::util::Rng;
+use ecoserve::util::{Json, Rng};
 use ecoserve::workload::Query;
 
 /// Random paper-like model sets (same generator as tests/plan.rs).
@@ -47,7 +50,8 @@ fn random_sets(rng: &mut Rng, n_models: usize) -> Vec<ModelSet> {
 }
 
 /// Workload drawn from a small shape table (heavy duplication — the
-/// bucketed regime the plan budgets cover shape-for-shape).
+/// bucketed regime both the plan budgets and the simulator's prediction
+/// memoization cover shape-for-shape).
 fn shaped_workload(rng: &mut Rng, n_shapes: usize, n: usize) -> Vec<Query> {
     let table: Vec<(u32, u32)> = (0..n_shapes)
         .map(|_| {
@@ -102,7 +106,7 @@ fn run_compare(seed: u64) -> (Vec<SimMetrics>, Vec<Query>, Vec<ModelSet>) {
             max_batch: 4,
             max_wait_s: 0.02,
             slo_s: 5.0,
-            duration_s: None,
+            ..SimConfig::default()
         },
         arrival_label: "poisson:40".to_string(),
     };
@@ -129,6 +133,51 @@ fn same_seed_and_config_give_byte_identical_metrics_json() {
     });
 }
 
+/// The `--seeds N` harness fans policies × seeds over threads; two
+/// invocations must still merge into byte-identical artifacts, with each
+/// replicate under its own seed.
+#[test]
+fn parallel_seeds_compare_is_byte_identical() {
+    forall(Config::default().cases(4), |rng| {
+        let seed = rng.next_u64();
+        let one = || {
+            let mut rng = Rng::new(seed);
+            let sets = random_sets(&mut rng, 3);
+            let queries = shaped_workload(&mut rng.fork(1), 5, 80);
+            let plan = plan_for(&sets, &queries, 1.0, seed);
+            let spec = CompareSpec {
+                sets: &sets,
+                norm: plan.normalizer(),
+                zeta: 1.0,
+                plan: Some(&plan),
+                seed,
+                cfg: SimConfig {
+                    max_batch: 4,
+                    max_wait_s: 0.02,
+                    slo_s: 5.0,
+                    ..SimConfig::default()
+                },
+                arrival_label: "poisson:30".to_string(),
+            };
+            let grid = compare_replicated(
+                &spec,
+                &queries,
+                Arrivals::Sampled(ArrivalProcess::Poisson { rate: 30.0 }),
+                &PolicyKind::all(),
+                3,
+            )
+            .unwrap();
+            for runs in &grid {
+                for (i, m) in runs.iter().enumerate() {
+                    assert_eq!(m.seed, seed.wrapping_add(i as u64));
+                }
+            }
+            replicated_to_json(&grid).to_string_pretty()
+        };
+        assert_eq!(one(), one(), "seed {seed} not byte-identical");
+    });
+}
+
 #[test]
 fn different_seeds_change_the_trace() {
     let (a, _, _) = run_compare(101);
@@ -152,7 +201,7 @@ fn plan_energy_never_beaten_by_feasible_query_independent_baselines() {
         // The sim replays the exact workload the plan was solved on, so
         // every query follows the plan (no fallback decisions).
         assert_eq!(plan_m.plan_decisions.unwrap().1, 0, "seed {seed}");
-        assert_eq!(plan_m.n_queries, queries.len());
+        assert_eq!(plan_m.n_queries as usize, queries.len());
 
         let caps = capacity_bounds(
             CapacityMode::Eq3Only,
@@ -211,16 +260,100 @@ fn trace_replay_preserves_arrival_timestamps() {
         1,
     )
     .unwrap();
-    let m = Simulator::new(&sets, SimConfig::default())
+    let cfg = SimConfig {
+        per_query: true,
+        ..SimConfig::default()
+    };
+    let m = Simulator::new(&sets, cfg)
         .labeled("trace", 1, 0.5)
         .run(&queries, &arrivals, &mut policy)
         .unwrap();
     assert_eq!(m.n_queries, 10);
-    let mut by_id: Vec<_> = m.outcomes.clone();
+    let mut by_id = m.outcomes.clone().unwrap();
     by_id.sort_by_key(|o| o.id);
     for (o, want) in by_id.iter().zip(&arrivals) {
         assert_eq!(o.t_arrive, *want, "query {}", o.id);
         assert!(o.t_complete >= o.t_arrive);
     }
     assert_eq!(m.arrival, "trace");
+}
+
+/// The streaming histogram quantiles in the artifact agree with the exact
+/// sorted-vector quantiles (recomputed from retained outcomes) to within
+/// one bin ratio, on real simulated runs.
+#[test]
+fn streaming_quantiles_track_exact_quantiles_on_simulated_runs() {
+    let ratio = 2f64.powf(1.0 / LOG_HIST_BINS_PER_OCTAVE as f64);
+    forall(Config::default().cases(8), |rng| {
+        let seed = rng.next_u64();
+        let mut rng = Rng::new(seed);
+        let sets = random_sets(&mut rng, 3);
+        let n = 200 + rng.index(300);
+        let queries = shaped_workload(&mut rng.fork(1), 8, n);
+        let arrivals = ArrivalProcess::GammaBurst { rate: 60.0, cv2: 4.0 }
+            .times(n, &mut rng.fork(2))
+            .unwrap();
+        let norm = Normalizer::from_workload(&sets, &queries);
+        let mut policy =
+            ecoserve::sim::SimPolicy::new(PolicyKind::Greedy, &sets, norm, 0.5, None, seed)
+                .unwrap();
+        let cfg = SimConfig {
+            max_batch: 4,
+            max_wait_s: 0.02,
+            per_query: true,
+            ..SimConfig::default()
+        };
+        let m = Simulator::new(&sets, cfg)
+            .run(&queries, &arrivals, &mut policy)
+            .unwrap();
+        let outcomes = m.outcomes.as_ref().unwrap();
+        let lats: Vec<f64> = outcomes.iter().map(|o| o.latency_s()).collect();
+        for (est, q) in [(m.p50_latency_s, 0.5), (m.p95_latency_s, 0.95)] {
+            // Exact nearest-rank quantile of the streamed observations.
+            let mut sorted = lats.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let exact = sorted[(((sorted.len() - 1) as f64) * q).ceil() as usize];
+            assert!(
+                exact <= est * (1.0 + 1e-9) && exact >= est / ratio * (1.0 - 1e-9),
+                "seed {seed}: hist {q}-quantile {est} vs exact {exact}"
+            );
+        }
+        // The artifact's `exact` block uses the type-7 interpolated
+        // quantile (the v1 convention) over the same observations.
+        let json = m.to_json();
+        let got = json.get("exact").get("p95_latency_s").as_f64().unwrap();
+        assert!((got - quantile(&lats, 0.95)).abs() < 1e-9);
+        // Means, maxima and totals are exact regardless of retention.
+        assert!((m.max_latency_s - sorted_max(&lats)).abs() < 1e-12);
+    });
+}
+
+fn sorted_max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(0.0f64, f64::max)
+}
+
+/// Golden: the committed version-2 artifact round-trips byte-exactly
+/// through `SimMetrics::from_json` → `to_json`, and the version-1 layout
+/// is rejected with a migration message.
+#[test]
+fn metrics_artifact_golden_roundtrip_and_version_gate() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/sim_metrics_v2.json");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let parsed = Json::parse(&text).unwrap();
+    let m = SimMetrics::from_json(&parsed).unwrap();
+    assert_eq!(m.policy, "plan");
+    assert_eq!(m.seed, 42);
+    assert_eq!(m.n_queries, 7);
+    assert_eq!(m.latency_hist.n(), 7);
+    assert_eq!(m.plan_decisions, Some((5, 2)));
+    // Byte-exact reserialization pins the schema.
+    assert_eq!(m.to_json().to_string_pretty(), text);
+
+    let v1_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/sim_metrics_v1.json");
+    let v1 = Json::parse(&std::fs::read_to_string(&v1_path).unwrap()).unwrap();
+    let err = SimMetrics::from_json(&v1).unwrap_err().to_string();
+    assert!(err.contains("version 1"), "{err}");
+    assert!(err.contains("regenerate"), "{err}");
 }
