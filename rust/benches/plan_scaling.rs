@@ -1,0 +1,344 @@
+//! Bench: planning-core throughput. Three stories in one harness:
+//!
+//! 1. **Cost fill** — the Eq. 2 blend over shapes × models, comparing the
+//!    pre-kernel naive per-entry loop (kept here as the reference), the
+//!    SoA scalar [`CostKernel`], and the runtime-dispatched path (AVX2+FMA
+//!    when built with `--features simd` on a capable machine). Reported
+//!    as GB/s of cost matrix written.
+//! 2. **Sketch-fed planning scaling** — streams 1M → 100M queries into a
+//!    [`ShapeSketch`] without ever materializing a `Vec<Query>`, then
+//!    cold-solves and ζ-sweeps at shape granularity. The solve cost
+//!    depends on |shapes| × |models|, not |Q|, so the wall time is ingest
+//!    + a near-constant solve — the property that makes 100M tractable.
+//! 3. **Sketch vs materialize** — head-to-head at a size where both paths
+//!    fit in memory: end-to-end wall time, resident bytes, and a
+//!    byte-identity check on the packaged plan artifacts.
+//!
+//! Writes all series to `BENCH_plan.json`. `cargo bench --bench
+//! plan_scaling`. Setting `ECOSERVE_BENCH_SMOKE=1` shrinks the sweep
+//! (100k/1M queries, smaller fill grid and budgets) for the CI
+//! `bench-smoke` job, which gates `BENCH_plan.json` against the committed
+//! ceilings in `benches/baselines/BENCH_plan_smoke.json`.
+//!
+//! Acceptance bars (full mode only): with the AVX2 path active the
+//! dispatched fill must beat the pre-kernel naive loop by ≥ 2×, and
+//! 100M-query sketch-fed planning must finish within 10× the 10M wall
+//! time (i.e. scale no worse than linearly in the streamed ingest).
+
+use ecoserve::models::{AccuracyModel, ModelSet, Normalizer, Target, WorkloadModel};
+use ecoserve::plan::{Planner, SolverKind};
+use ecoserve::scheduler::{CapacityMode, CostKernel};
+use ecoserve::util::{bench, black_box, human_time, Json, Rng, Stopwatch};
+use ecoserve::workload::{Query, Shape, ShapeSketch};
+use std::time::Duration;
+
+const N_MODELS: usize = 8;
+/// Distinct shapes in the planning sweeps — the |Q| ≫ |shapes| regime.
+const N_SHAPES: usize = 256;
+
+/// Same hand-built zoo as `sched_scaling`: bigger models are more
+/// accurate and more expensive; this bench measures the planning core,
+/// not the fitting campaign.
+fn zoo() -> Vec<ModelSet> {
+    (0..N_MODELS)
+        .map(|k| {
+            let id = format!("m{k}");
+            let scale = 1.0 + 0.8 * k as f64;
+            ModelSet {
+                model_id: id.clone(),
+                energy: WorkloadModel {
+                    model_id: id.clone(),
+                    target: Target::EnergyJ,
+                    coefs: [0.6 * scale, 9.0 * scale, 0.004 * scale],
+                    r2: 0.97,
+                    f_stat: 1e3,
+                    p_value: 0.0,
+                    n_obs: 100,
+                },
+                runtime: WorkloadModel {
+                    model_id: id.clone(),
+                    target: Target::RuntimeS,
+                    coefs: [0.002 * scale, 0.03 * scale, 1.5e-5 * scale],
+                    r2: 0.97,
+                    f_stat: 1e3,
+                    p_value: 0.0,
+                    n_obs: 100,
+                },
+                accuracy: AccuracyModel::new(&id, 45.0 + 3.0 * k as f64),
+            }
+        })
+        .collect()
+}
+
+fn shape_table(rng: &mut Rng, n: usize) -> Vec<Shape> {
+    (0..n)
+        .map(|_| Shape {
+            t_in: 8 + rng.index(2040) as u32,
+            t_out: 8 + rng.index(4088) as u32,
+        })
+        .collect()
+}
+
+/// The pre-kernel cost fill: per-entry calls through the fitted-model
+/// structs, exactly as `CostMatrix` computed it before the SoA kernel
+/// landed. Kept verbatim as the speedup reference.
+fn naive_fill(sets: &[ModelSet], norm: &Normalizer, shapes: &[Shape], zeta: f64, out: &mut [f64]) {
+    for (i, sh) in shapes.iter().enumerate() {
+        let (ti, to) = (sh.t_in as f64, sh.t_out as f64);
+        for (k, s) in sets.iter().enumerate() {
+            out[i * sets.len() + k] = zeta * norm.energy_hat_tok(s, ti, to)
+                - (1.0 - zeta) * norm.accuracy_hat_tok(s, ti, to);
+        }
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("ECOSERVE_BENCH_SMOKE")
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false);
+    println!(
+        "=== plan_scaling: cost-fill kernels + sketch-fed planning{} ===",
+        if smoke { " (smoke mode)" } else { "" }
+    );
+    let sets = zoo();
+    let gammas = [0.05, 0.05, 0.1, 0.1, 0.15, 0.15, 0.2, 0.2];
+    let zeta = 0.5;
+    let mut rng = Rng::new(0x9A7);
+
+    // ---- 1. cost-fill throughput: naive vs scalar kernel vs dispatch ----
+    let fill_shapes = if smoke { 8_192 } else { 65_536 };
+    let fill_budget = Duration::from_millis(if smoke { 120 } else { 500 });
+    let shapes = shape_table(&mut rng, fill_shapes);
+    let norm = Normalizer::from_shapes(&sets, &shapes);
+    let kernel = CostKernel::new(&sets, &norm, zeta);
+    let n_entries = fill_shapes * N_MODELS;
+    let bytes_written = (n_entries * std::mem::size_of::<f64>()) as f64;
+    let mut out = vec![0.0f64; n_entries];
+
+    // All three fills must agree before any of them is worth timing.
+    let mut want = vec![0.0f64; n_entries];
+    naive_fill(&sets, &norm, &shapes, zeta, &mut want);
+    kernel.fill_scalar(&shapes, &mut out);
+    for (g, w) in out.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-9, "scalar fill drifted: {g} vs {w}");
+    }
+    kernel.fill(&shapes, &mut out);
+    for (g, w) in out.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-9, "dispatched fill drifted: {g} vs {w}");
+    }
+
+    let naive_stats = bench("cost_fill/naive", fill_budget, || {
+        naive_fill(&sets, &norm, &shapes, zeta, &mut out);
+        black_box(&out);
+    });
+    let scalar_stats = bench("cost_fill/scalar", fill_budget, || {
+        kernel.fill_scalar(&shapes, &mut out);
+        black_box(&out);
+    });
+    let dispatch_stats = bench("cost_fill/dispatch", fill_budget, || {
+        kernel.fill(&shapes, &mut out);
+        black_box(&out);
+    });
+    let gbps = |median_s: f64| bytes_written / median_s.max(1e-12) / 1e9;
+    let simd_active = CostKernel::simd_active();
+    let mut fill_rows: Vec<Json> = Vec::new();
+    for stats in [&naive_stats, &scalar_stats, &dispatch_stats] {
+        let name = stats.name.rsplit('/').next().unwrap().to_string();
+        println!(
+            "{}  ({:.2} GB/s written)",
+            stats.line(),
+            gbps(stats.median_s)
+        );
+        fill_rows.push(Json::obj(vec![
+            ("name", Json::str(&name)),
+            ("fill_median_s", Json::num(stats.median_s)),
+            ("gb_per_s", Json::num(gbps(stats.median_s))),
+        ]));
+    }
+    let speedup_scalar = naive_stats.median_s / scalar_stats.median_s.max(1e-12);
+    let speedup_dispatch = naive_stats.median_s / dispatch_stats.median_s.max(1e-12);
+    println!(
+        "  {fill_shapes} shapes × {N_MODELS} models: scalar {speedup_scalar:.2}x, \
+         dispatch {speedup_dispatch:.2}x vs naive (simd {})",
+        if simd_active { "active" } else { "inactive" }
+    );
+    if !smoke && simd_active {
+        assert!(
+            speedup_dispatch >= 2.0,
+            "AVX2 cost fill must be ≥ 2x the pre-kernel loop, got {speedup_dispatch:.2}x"
+        );
+    }
+
+    // ---- 2. sketch-fed planning: 1M → 100M streamed queries ------------
+    let sizes: &[usize] = if smoke {
+        &[100_000, 1_000_000]
+    } else {
+        &[1_000_000, 10_000_000, 100_000_000]
+    };
+    let solve_budget = Duration::from_millis(if smoke { 120 } else { 400 });
+    let table = shape_table(&mut rng, N_SHAPES);
+    println!("\n=== sketch-fed planning: streamed ingest + shape-level solve ===");
+    let planner = Planner::new(&sets)
+        .gammas(&gammas)
+        .capacity(CapacityMode::Eq3Only)
+        .zeta(zeta)
+        .solver(SolverKind::NetworkSimplex);
+    let mut sketch_rows: Vec<Json> = Vec::new();
+    let mut wall_by_size: Vec<(usize, f64)> = Vec::new();
+    for &n in sizes {
+        // Streamed ingest: each query is drawn, observed, and dropped —
+        // the whole point is that no Vec<Query> ever exists.
+        let sw = Stopwatch::start();
+        let mut sketch = ShapeSketch::new();
+        for _ in 0..n {
+            sketch.add(table[rng.index(table.len())]);
+        }
+        let ingest_s = sw.elapsed_s();
+        assert_eq!(sketch.n_queries(), n as u64);
+        let ingest_qps = n as f64 / ingest_s.max(1e-12);
+
+        let sw = Stopwatch::start();
+        let mut session = planner.from_sketch(&sketch).unwrap();
+        let cold = session.solve_shapes().unwrap().objective;
+        let cold_solve_s = sw.elapsed_s();
+        let plan_wall_s = ingest_s + cold_solve_s;
+        wall_by_size.push((n, plan_wall_s));
+
+        let solve_stats = bench(&format!("sketch_solve/n{n}"), solve_budget, || {
+            let mut s = planner.from_sketch(&sketch).unwrap();
+            black_box(s.solve_shapes().unwrap().objective);
+        });
+
+        // Warm ζ sweep on the held session: rezeta at shape granularity,
+        // cross-checked against a cold sketch session at the final ζ.
+        let sw = Stopwatch::start();
+        for step in [0.1, 0.3, 0.7, 0.9] {
+            black_box(session.rezeta_shapes(step).unwrap().objective);
+        }
+        let rezeta_total_s = sw.elapsed_s();
+        let warm = session.rezeta_shapes(zeta).unwrap().objective;
+        assert!(
+            (warm - cold).abs() <= 1e-6 * cold.abs().max(1.0),
+            "n={n}: warm sketch rezeta {warm} vs cold {cold}"
+        );
+
+        let sketch_bytes = sketch.mem_bytes();
+        let materialized_bytes = n * std::mem::size_of::<Query>();
+        println!("{}", solve_stats.line());
+        println!(
+            "  n={n}: ingest {} ({:.1}M q/s), cold solve {}, 4-step ζ sweep {}, \
+             sketch {} KiB vs materialized {} MiB",
+            human_time(ingest_s),
+            ingest_qps / 1e6,
+            human_time(cold_solve_s),
+            human_time(rezeta_total_s),
+            sketch_bytes / 1024,
+            materialized_bytes / (1024 * 1024),
+        );
+        sketch_rows.push(Json::obj(vec![
+            ("n_queries", Json::num(n as f64)),
+            ("n_shapes", Json::num(sketch.n_distinct() as f64)),
+            ("ingest_s", Json::num(ingest_s)),
+            ("ingest_qps", Json::num(ingest_qps)),
+            ("cold_solve_s", Json::num(cold_solve_s)),
+            ("solve_median_s", Json::num(solve_stats.median_s)),
+            ("rezeta_total_s", Json::num(rezeta_total_s)),
+            ("plan_wall_s", Json::num(plan_wall_s)),
+            ("sketch_bytes", Json::num(sketch_bytes as f64)),
+            ("materialized_bytes", Json::num(materialized_bytes as f64)),
+        ]));
+    }
+    if !smoke {
+        let wall = |n: usize| {
+            wall_by_size
+                .iter()
+                .find(|(m, _)| *m == n)
+                .map(|(_, s)| *s)
+                .unwrap()
+        };
+        let (w10m, w100m) = (wall(10_000_000), wall(100_000_000));
+        assert!(
+            w100m <= 10.0 * w10m,
+            "100M sketch-fed planning ({w100m:.2} s) must stay within 10x \
+             the 10M wall time ({w10m:.2} s)"
+        );
+        println!(
+            "  scaling bar: 100M wall {:.2} s ≤ 10 × 10M wall {:.2} s ✓",
+            w100m, w10m
+        );
+    }
+
+    // ---- 3. sketch vs materialize head-to-head --------------------------
+    let n_cmp = if smoke { 100_000 } else { 1_000_000 };
+    println!("\n=== sketch vs materialize at {n_cmp} queries ===");
+    let queries: Vec<Query> = (0..n_cmp)
+        .map(|i| {
+            let sh = table[rng.index(table.len())];
+            Query {
+                id: i as u32,
+                t_in: sh.t_in,
+                t_out: sh.t_out,
+            }
+        })
+        .collect();
+
+    let sw = Stopwatch::start();
+    let materialized_plan = planner.plan(&queries).unwrap();
+    let materialized_wall_s = sw.elapsed_s();
+
+    let sw = Stopwatch::start();
+    let mut sketch = ShapeSketch::new();
+    for q in &queries {
+        sketch.observe(q);
+    }
+    let sketched_plan = planner.plan_from_sketch(&sketch).unwrap();
+    let sketch_wall_s = sw.elapsed_s();
+
+    // The bench-level restatement of the tests/plan.rs property: same
+    // artifact, byte for byte.
+    assert_eq!(
+        sketched_plan.to_json().to_string_pretty(),
+        materialized_plan.to_json().to_string_pretty(),
+        "sketch-fed plan must be byte-identical to the materialized plan"
+    );
+    let queries_bytes = queries.len() * std::mem::size_of::<Query>();
+    println!(
+        "  materialized {} vs sketch {} ({:.2}x); resident {} KiB vs {} KiB; \
+         plans byte-identical ✓",
+        human_time(materialized_wall_s),
+        human_time(sketch_wall_s),
+        materialized_wall_s / sketch_wall_s.max(1e-12),
+        queries_bytes / 1024,
+        sketch.mem_bytes() / 1024,
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("plan_scaling")),
+        ("smoke", Json::Bool(smoke)),
+        ("zeta", Json::num(zeta)),
+        (
+            "cost_fill",
+            Json::obj(vec![
+                ("n_shapes", Json::num(fill_shapes as f64)),
+                ("n_models", Json::num(N_MODELS as f64)),
+                ("simd_active", Json::Bool(simd_active)),
+                ("speedup_scalar", Json::num(speedup_scalar)),
+                ("speedup_dispatch", Json::num(speedup_dispatch)),
+                ("series", Json::Arr(fill_rows)),
+            ]),
+        ),
+        ("sketch", Json::obj(vec![("series", Json::Arr(sketch_rows))])),
+        (
+            "materialize_comparison",
+            Json::obj(vec![
+                ("n_queries", Json::num(n_cmp as f64)),
+                ("materialized_wall_s", Json::num(materialized_wall_s)),
+                ("sketch_wall_s", Json::num(sketch_wall_s)),
+                ("queries_bytes", Json::num(queries_bytes as f64)),
+                ("sketch_bytes", Json::num(sketch.mem_bytes() as f64)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_plan.json", doc.to_string_pretty()).expect("write BENCH_plan.json");
+    println!("✓ wrote BENCH_plan.json");
+}

@@ -68,6 +68,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("fit") => cmd_fit(args),
         Some("sweep-zeta") => cmd_sweep_zeta(args),
         Some("plan") => cmd_plan(args),
+        Some("sketch") => cmd_sketch(args),
         Some("route") => cmd_route(args),
         Some("serve") => cmd_serve(args),
         Some("simulate") => cmd_simulate(args),
@@ -100,6 +101,11 @@ COMMANDS
                              round-robin|random|single:K]
                             [--workload alpaca|serve-proxy]
                             [--requests N] [--out plan.json]
+  sketch                    stream a trace into a (shape → count) sketch
+                            without materializing it; optionally plan from
+                            the sketch  [--trace FILE] [--lossy K] [--top K]
+                            [--zeta X] [--solver bucketed|net-simplex]
+                            [--gamma-caps] [--out plan.json]
   route                     solve one assignment [--zeta X] [--queries N]
                             [--solver KIND] [--gamma-caps] [--plan FILE]
                             [--workload alpaca|serve-proxy] [--requests N]
@@ -323,6 +329,88 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     );
     print_assignment_summary(&fitted.sets, session.assignment().unwrap(), &queries);
     println!("  objective {:.6} → {}", plan.objective, out.display());
+    Ok(())
+}
+
+/// Stream a workload into a [`workload::ShapeSketch`] — the planning path
+/// for traces too large to materialize — print its footprint, and
+/// optionally solve a plan straight from the sketch. For exact sketches
+/// the saved plan is byte-identical to `ecoserve plan`'s on the same
+/// workload.
+fn cmd_sketch(args: &Args) -> anyhow::Result<()> {
+    let seed = args.opt_u64("seed", 42);
+    let lossy = args
+        .opt("lossy")
+        .map(|s| {
+            s.parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--lossy expects a shape count, got '{s}'"))
+        })
+        .transpose()?;
+    let mut sketch = match lossy {
+        Some(cap) => workload::ShapeSketch::lossy(cap),
+        None => workload::ShapeSketch::new(),
+    };
+
+    let t0 = Instant::now();
+    let n = match args.opt("trace") {
+        Some(path) => sketch.ingest_trace(Path::new(path))?,
+        None => {
+            let queries = plan_workload(args, seed)?;
+            for q in &queries {
+                sketch.observe(q);
+            }
+            queries.len() as u64
+        }
+    };
+    let ingest_time = t0.elapsed();
+    if let Some(top) = args.opt("top") {
+        let top: usize = top
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--top expects a shape count, got '{top}'"))?;
+        sketch.compact(top);
+    }
+
+    print!(
+        "sketch: {n} queries → {} distinct shapes in {ingest_time:?} (~{} KiB resident)",
+        sketch.n_distinct(),
+        sketch.mem_bytes() / 1024
+    );
+    if sketch.is_exact() {
+        println!(" [exact]");
+    } else {
+        println!(
+            " [{} queries folded into the residual bucket]",
+            sketch.residual_queries()
+        );
+    }
+
+    if let Some(out) = args.opt("out") {
+        let zeta = args.opt_f64("zeta", 0.5);
+        let solver = SolverKind::parse(&args.opt_or("solver", "bucketed"))?;
+        let partition = Partition::paper_case_study();
+        partition.validate()?;
+        let family = llama_family();
+        let fitted = characterize::quick_fit(&family, seed)?;
+        let mut session = Planner::new(&fitted.sets)
+            .partition(&partition)
+            .capacity(capacity_mode_arg(args))
+            .zeta(zeta)
+            .solver(solver)
+            .seed(seed)
+            .from_sketch(&sketch)?;
+        let t1 = Instant::now();
+        session.solve_shapes()?;
+        let solve_time = t1.elapsed();
+        let plan = session.plan()?;
+        plan.save(Path::new(out))?;
+        println!(
+            "plan: {} queries ({} distinct shapes), zeta = {zeta}, solver = {}, solved in {solve_time:?}",
+            plan.n_queries,
+            plan.shape_flows.len(),
+            plan.solver
+        );
+        println!("  objective {:.6} → {out}", plan.objective);
+    }
     Ok(())
 }
 

@@ -65,6 +65,42 @@ fn mode_parse(s: &str) -> anyhow::Result<CapacityMode> {
 }
 
 impl Plan {
+    /// Package shape-level flows directly (internal): the common core
+    /// behind both the per-query path ([`Plan::from_solution`]) and
+    /// sketch-fed sessions, which produce shape flows without ever
+    /// materializing per-query assignments.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_flows(
+        sets: &[crate::models::ModelSet],
+        gammas: &[f64],
+        mode: CapacityMode,
+        solver: &str,
+        zeta: f64,
+        norm: &Normalizer,
+        shapes: &[Shape],
+        n_queries: usize,
+        flows: Vec<Vec<usize>>,
+        objective: f64,
+    ) -> Plan {
+        debug_assert_eq!(shapes.len(), flows.len());
+        Plan {
+            version: PLAN_VERSION,
+            zeta,
+            gammas: gammas.to_vec(),
+            mode,
+            solver: solver.to_string(),
+            model_ids: sets.iter().map(|s| s.model_id.clone()).collect(),
+            n_queries,
+            objective,
+            norm_max: [norm.max_energy_j, norm.max_accuracy, norm.max_runtime_s],
+            shape_flows: shapes
+                .iter()
+                .zip(flows)
+                .map(|(&shape, flows)| ShapeFlow { shape, flows })
+                .collect(),
+        }
+    }
+
     /// Package a solved assignment (internal; use
     /// [`PlanSession::plan`](crate::plan::PlanSession::plan)).
     #[allow(clippy::too_many_arguments)]
@@ -83,23 +119,18 @@ impl Plan {
         for (q, &s) in groups.shape_of.iter().enumerate() {
             flows[s][assignment.model_of[q]] += 1;
         }
-        Plan {
-            version: PLAN_VERSION,
-            zeta,
-            gammas: gammas.to_vec(),
+        Plan::from_flows(
+            sets,
+            gammas,
             mode,
-            solver: solver.to_string(),
-            model_ids: sets.iter().map(|s| s.model_id.clone()).collect(),
-            n_queries: groups.n_queries(),
-            objective: assignment.objective,
-            norm_max: [norm.max_energy_j, norm.max_accuracy, norm.max_runtime_s],
-            shape_flows: groups
-                .shapes
-                .iter()
-                .zip(flows)
-                .map(|(&shape, flows)| ShapeFlow { shape, flows })
-                .collect(),
-        }
+            solver,
+            zeta,
+            norm,
+            &groups.shapes,
+            groups.n_queries(),
+            flows,
+            assignment.objective,
+        )
     }
 
     /// Queries per model across all shapes.

@@ -32,4 +32,4 @@ pub mod solver;
 pub use artifact::{Plan, ShapeFlow, PLAN_FORMAT, PLAN_VERSION};
 pub use planner::Planner;
 pub use session::PlanSession;
-pub use solver::{ProblemView, Solver, SolverKind, SolverState};
+pub use solver::{ProblemView, ShapeSolution, Solver, SolverKind, SolverState};

@@ -27,7 +27,7 @@ use super::solver::SolverKind;
 use crate::config::Partition;
 use crate::models::ModelSet;
 use crate::scheduler::CapacityMode;
-use crate::workload::Query;
+use crate::workload::{Query, ShapeSketch};
 
 /// Builder for planning sessions. Cheap to construct and reconfigure; the
 /// heavy state (grouping, costs, flow) lives in the [`PlanSession`] it
@@ -122,9 +122,44 @@ impl<'a> Planner<'a> {
         ))
     }
 
+    /// Open a stateful session over a [`ShapeSketch`] instead of a
+    /// materialized workload — the path for traces too large to hold as
+    /// `Vec<Query>`. The session solves at shape granularity
+    /// ([`solve_shapes`](PlanSession::solve_shapes) /
+    /// [`rezeta_shapes`](PlanSession::rezeta_shapes)) and packages plans
+    /// byte-identical to the materialized path when the sketch is exact.
+    /// Requires a shape-level backend (bucketed or net-simplex).
+    pub fn from_sketch(&self, sketch: &ShapeSketch) -> anyhow::Result<PlanSession> {
+        if self.sets.is_empty() {
+            anyhow::bail!("planner needs at least one model set");
+        }
+        if self.gammas.len() != self.sets.len() {
+            anyhow::bail!(
+                "{} gammas for {} models",
+                self.gammas.len(),
+                self.sets.len()
+            );
+        }
+        PlanSession::from_sketch(
+            self.sets.to_vec(),
+            self.gammas.clone(),
+            self.mode,
+            self.solver,
+            self.seed,
+            self.zeta,
+            sketch,
+        )
+    }
+
     /// One-shot convenience: open a session, solve, and package the
     /// artifact.
     pub fn plan(&self, queries: &[Query]) -> anyhow::Result<super::Plan> {
         self.session(queries)?.plan()
+    }
+
+    /// One-shot convenience over a sketch: open a sketch-fed session,
+    /// solve at shape level, and package the artifact.
+    pub fn plan_from_sketch(&self, sketch: &ShapeSketch) -> anyhow::Result<super::Plan> {
+        self.from_sketch(sketch)?.plan()
     }
 }

@@ -15,13 +15,13 @@
 //!   from-scratch solve of the cumulative workload.
 
 use super::artifact::Plan;
-use super::solver::{ProblemView, Solver, SolverKind, SolverState};
+use super::solver::{ProblemView, ShapeSolution, Solver, SolverKind, SolverState};
 use crate::models::{ModelSet, Normalizer};
 use crate::scheduler::{
     capacity_bounds, evaluate, Assignment, BucketedProblem, CapacityMode, CostMatrix, Evaluation,
     ShapeGroups,
 };
-use crate::workload::Query;
+use crate::workload::{Query, ShapeSketch};
 use std::collections::HashMap;
 
 /// A planning session over a growing workload. Created by
@@ -41,11 +41,21 @@ pub struct PlanSession {
     shape_index: HashMap<u64, usize>,
     norm: Normalizer,
 
+    /// Total queries represented. Equals `queries.len()` for query-backed
+    /// sessions; sketch-fed sessions never materialize `queries`, so the
+    /// count is carried separately.
+    n_total: usize,
+    /// Sketch-fed: per-query structures (`queries`, `shape_of`) are empty
+    /// and solves run at shape level ([`PlanSession::solve_shapes`]).
+    sketch_fed: bool,
+
     zeta: f64,
     /// ζ the cost matrix is currently blended at
     costs_zeta: f64,
     state: SolverState,
     last: Option<Assignment>,
+    /// Last shape-level solution (sketch-fed sessions).
+    last_flows: Option<ShapeSolution>,
 }
 
 impl PlanSession {
@@ -74,6 +84,8 @@ impl PlanSession {
             gammas,
             mode,
             seed,
+            n_total: queries.len(),
+            sketch_fed: false,
             queries: queries.to_vec(),
             bp: BucketedProblem { groups, costs },
             shape_index,
@@ -82,13 +94,83 @@ impl PlanSession {
             costs_zeta: zeta,
             state: SolverState::default(),
             last: None,
+            last_flows: None,
         }
+    }
+
+    /// Open a session over a [`ShapeSketch`] instead of a materialized
+    /// workload: the grouping is taken straight from the sketch's
+    /// first-appearance shape order, so for exact sketches the resulting
+    /// plan is byte-identical to the materialized path's. Per-query
+    /// methods ([`solve`](PlanSession::solve),
+    /// [`extend`](PlanSession::extend), evaluation) are unavailable — use
+    /// [`solve_shapes`](PlanSession::solve_shapes) /
+    /// [`rezeta_shapes`](PlanSession::rezeta_shapes) /
+    /// [`plan`](PlanSession::plan).
+    pub(crate) fn from_sketch(
+        sets: Vec<ModelSet>,
+        gammas: Vec<f64>,
+        mode: CapacityMode,
+        solver_kind: SolverKind,
+        seed: u64,
+        zeta: f64,
+        sketch: &ShapeSketch,
+    ) -> anyhow::Result<PlanSession> {
+        let entries = sketch.entries();
+        let mut shapes = Vec::with_capacity(entries.len());
+        let mut multiplicity = Vec::with_capacity(entries.len());
+        for (sh, n) in &entries {
+            shapes.push(*sh);
+            multiplicity.push(usize::try_from(*n).map_err(|_| {
+                anyhow::anyhow!("shape multiplicity {n} exceeds usize on this platform")
+            })?);
+        }
+        let n_total: usize = multiplicity.iter().sum();
+        let shape_index: HashMap<u64, usize> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, sh)| (sh.key(), i))
+            .collect();
+        let norm = Normalizer::from_shapes(&sets, &shapes);
+        let costs = CostMatrix::build_for_shapes(&sets, &norm, &shapes, zeta);
+        Ok(PlanSession {
+            solver: solver_kind.instantiate(),
+            solver_kind,
+            sets,
+            gammas,
+            mode,
+            seed,
+            n_total,
+            sketch_fed: true,
+            queries: Vec::new(),
+            bp: BucketedProblem {
+                groups: ShapeGroups {
+                    shapes,
+                    multiplicity,
+                    shape_of: Vec::new(),
+                },
+                costs,
+            },
+            shape_index,
+            norm,
+            zeta,
+            costs_zeta: zeta,
+            state: SolverState::default(),
+            last: None,
+            last_flows: None,
+        })
     }
 
     // ------------------------------------------------------------ accessors
 
     pub fn n_queries(&self) -> usize {
-        self.queries.len()
+        self.n_total
+    }
+
+    /// Whether this session was opened over a [`ShapeSketch`] (no
+    /// materialized queries; shape-level solves only).
+    pub fn is_sketch_fed(&self) -> bool {
+        self.sketch_fed
     }
 
     pub fn n_shapes(&self) -> usize {
@@ -146,7 +228,7 @@ impl PlanSession {
     // -------------------------------------------------------------- solving
 
     fn caps(&self) -> Vec<usize> {
-        capacity_bounds(self.mode, &self.gammas, self.queries.len())
+        capacity_bounds(self.mode, &self.gammas, self.n_total)
     }
 
     /// Re-blend the costs if ζ drifted from what the matrix holds. Returns
@@ -157,6 +239,7 @@ impl PlanSession {
             self.bp.set_zeta(&self.sets, &self.norm, self.zeta);
             self.costs_zeta = self.zeta;
             self.last = None;
+            self.last_flows = None;
             true
         } else {
             false
@@ -191,11 +274,55 @@ impl PlanSession {
     /// Solve the current instance (no-op if already solved at this ζ and
     /// workload). Returns the assignment.
     pub fn solve(&mut self) -> anyhow::Result<&Assignment> {
+        if self.sketch_fed {
+            anyhow::bail!(
+                "sketch-fed session has no per-query assignment; \
+                 use solve_shapes()/plan()"
+            );
+        }
         let reblended = self.ensure_costs();
         if self.last.is_none() {
             self.run_solver(reblended)?;
         }
         Ok(self.last.as_ref().unwrap())
+    }
+
+    /// Solve the current instance at shape granularity (sketch-fed
+    /// sessions; no-op if already solved at this ζ). Returns the
+    /// shape-level flows and objective.
+    pub fn solve_shapes(&mut self) -> anyhow::Result<&ShapeSolution> {
+        if !self.sketch_fed {
+            anyhow::bail!("query-backed session: use solve()");
+        }
+        let reblended = self.ensure_costs();
+        if self.last_flows.is_none() {
+            let caps = self.caps();
+            let view = ProblemView {
+                sets: &self.sets,
+                queries: &self.queries,
+                bp: &self.bp,
+                caps: &caps,
+                seed: self.seed,
+            };
+            self.last_flows = Some(if reblended {
+                self.solver.rezeta_shapes(&view, &mut self.state)?
+            } else {
+                self.solver.solve_shapes(&view, &mut self.state)?
+            });
+        }
+        Ok(self.last_flows.as_ref().unwrap())
+    }
+
+    /// Shape-level [`rezeta`](PlanSession::rezeta): re-blend in place and
+    /// re-solve, warm-starting where the backend supports it.
+    pub fn rezeta_shapes(&mut self, zeta: f64) -> anyhow::Result<&ShapeSolution> {
+        self.set_zeta(zeta);
+        self.solve_shapes()
+    }
+
+    /// The last shape-level solution, if any shape-level solve ran.
+    pub fn shape_solution(&self) -> Option<&ShapeSolution> {
+        self.last_flows.as_ref()
     }
 
     /// Set the operating point without solving; the next
@@ -206,6 +333,7 @@ impl PlanSession {
         if zeta != self.zeta {
             self.zeta = zeta;
             self.last = None;
+            self.last_flows = None;
         }
     }
 
@@ -226,12 +354,19 @@ impl PlanSession {
     /// from-scratch solve of the cumulative workload (cross-checked to
     /// 1e-9 in `tests/plan.rs`).
     pub fn extend(&mut self, batch: &[Query]) -> anyhow::Result<&Assignment> {
+        if self.sketch_fed {
+            anyhow::bail!(
+                "sketch-fed session cannot extend with per-query batches; \
+                 fold the batch into a new sketch instead"
+            );
+        }
         if batch.is_empty() {
             return self.solve();
         }
         let mut new_shapes = false;
         for q in batch {
             self.queries.push(*q);
+            self.n_total += 1;
             let sh = q.shape();
             let groups = &mut self.bp.groups;
             match self.shape_index.entry(sh.key()) {
@@ -264,16 +399,15 @@ impl PlanSession {
 
         let zeta_changed = self.zeta != self.costs_zeta;
         if new_shapes || norm_changed || zeta_changed {
-            // Costs are stale: cold path. New rows (or new maxima) need a
-            // fresh matrix; a pure ζ change re-blends the existing
-            // allocation in place.
+            // Costs are stale: cold path. New rows (or new maxima) refill
+            // the existing matrix in place — `CostMatrix::refill` grows
+            // the allocation only when the shape count demands it, so a
+            // long arrival stream reuses one buffer; a pure ζ change
+            // re-blends it likewise.
             if new_shapes || norm_changed {
-                self.bp.costs = CostMatrix::build_for_shapes(
-                    &self.sets,
-                    &self.norm,
-                    &self.bp.groups.shapes,
-                    self.zeta,
-                );
+                self.bp
+                    .costs
+                    .refill(&self.sets, &self.norm, &self.bp.groups.shapes, self.zeta);
             } else {
                 self.bp.set_zeta(&self.sets, &self.norm, self.zeta);
             }
@@ -299,8 +433,27 @@ impl PlanSession {
     // ------------------------------------------------------------ artifacts
 
     /// Package the current optimum as a serializable [`Plan`] artifact
-    /// (solving first if needed).
+    /// (solving first if needed). Works for both query-backed and
+    /// sketch-fed sessions; exact sketches produce byte-identical
+    /// artifacts to the materialized path (property-tested in
+    /// `tests/plan.rs`).
     pub fn plan(&mut self) -> anyhow::Result<Plan> {
+        if self.sketch_fed {
+            self.solve_shapes()?;
+            let s = self.last_flows.as_ref().unwrap();
+            return Ok(Plan::from_flows(
+                &self.sets,
+                &self.gammas,
+                self.mode,
+                &self.solver_kind.label(),
+                self.zeta,
+                &self.norm,
+                &self.bp.groups.shapes,
+                self.n_total,
+                s.flows.clone(),
+                s.objective,
+            ));
+        }
         self.solve()?;
         let a = self.last.as_ref().unwrap();
         Ok(Plan::from_solution(

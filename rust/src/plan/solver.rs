@@ -135,6 +135,18 @@ impl SolverState {
     }
 }
 
+/// A shape-level solution: per-shape per-model flow counts plus the blend
+/// objective — what sketch-fed sessions consume instead of a per-query
+/// [`Assignment`]. The objective is accumulated in the same shape-major,
+/// model-minor order as the per-query path, so the two agree bitwise.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShapeSolution {
+    /// `flows[shape][model]` query counts; each row sums to the shape's
+    /// multiplicity.
+    pub flows: Vec<Vec<usize>>,
+    pub objective: f64,
+}
+
 /// An assignment backend. Object-safe: sessions hold `Box<dyn Solver>`
 /// (identity lives in [`SolverKind`], which the session also carries).
 pub trait Solver {
@@ -166,6 +178,33 @@ pub trait Solver {
     ) -> anyhow::Result<Assignment> {
         state.invalidate();
         self.solve(p, state)
+    }
+
+    /// Solve at shape granularity without per-query expansion — the entry
+    /// point for sketch-fed sessions, whose [`ProblemView::queries`] is
+    /// empty. Only backends that reason at shape level (bucketed,
+    /// network simplex) support this; the per-query backends decline.
+    fn solve_shapes(
+        &self,
+        p: &ProblemView<'_>,
+        state: &mut SolverState,
+    ) -> anyhow::Result<ShapeSolution> {
+        let _ = (p, state);
+        anyhow::bail!(
+            "this backend cannot solve sketch-fed (shape-level) instances; \
+             use the bucketed or net-simplex solver"
+        )
+    }
+
+    /// Shape-level re-solve after an in-place ζ re-blend. Backends with a
+    /// warm-startable basis may reprice; the default solves cold.
+    fn rezeta_shapes(
+        &self,
+        p: &ProblemView<'_>,
+        state: &mut SolverState,
+    ) -> anyhow::Result<ShapeSolution> {
+        state.invalidate();
+        self.solve_shapes(p, state)
     }
 }
 
@@ -230,6 +269,19 @@ impl Solver for BucketedSolver {
         }
         self.solve(p, state)
     }
+
+    fn solve_shapes(
+        &self,
+        p: &ProblemView<'_>,
+        state: &mut SolverState,
+    ) -> anyhow::Result<ShapeSolution> {
+        state.invalidate();
+        let mut flow = BucketedFlow::build(p.bp, p.caps)?;
+        flow.solve()?;
+        let (flows, objective) = flow.shape_flows(p.bp);
+        state.flow = Some(flow);
+        Ok(ShapeSolution { flows, objective })
+    }
 }
 
 /// Primal network simplex at shape granularity: same exact optimum as the
@@ -276,6 +328,35 @@ impl Solver for NetSimplexSolver {
             }
         }
         self.solve(p, state)
+    }
+
+    fn solve_shapes(
+        &self,
+        p: &ProblemView<'_>,
+        state: &mut SolverState,
+    ) -> anyhow::Result<ShapeSolution> {
+        state.invalidate();
+        let mut flow = SimplexFlow::build(p.bp, p.caps)?;
+        flow.solve()?;
+        let (flows, objective) = flow.shape_flows(p.bp);
+        state.simplex = Some(flow);
+        Ok(ShapeSolution { flows, objective })
+    }
+
+    fn rezeta_shapes(
+        &self,
+        p: &ProblemView<'_>,
+        state: &mut SolverState,
+    ) -> anyhow::Result<ShapeSolution> {
+        state.dense = None;
+        state.flow = None;
+        if let Some(flow) = state.simplex.as_mut() {
+            if flow.rezeta(p.bp, p.caps)? {
+                let (flows, objective) = flow.shape_flows(p.bp);
+                return Ok(ShapeSolution { flows, objective });
+            }
+        }
+        self.solve_shapes(p, state)
     }
 }
 

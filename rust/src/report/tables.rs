@@ -6,7 +6,7 @@ use crate::config::LlmSpec;
 use crate::models::ModelSet;
 use crate::sim::SimMetrics;
 use crate::stats::{ci_half_width, mean, AnovaTable};
-use crate::util::{fnum, Table};
+use crate::util::{fnum, si, Table};
 
 /// Table 1: the model zoo.
 pub fn table1(zoo: &[LlmSpec]) -> Table {
@@ -121,12 +121,18 @@ pub fn sim_summary(m: &SimMetrics) -> Table {
             "mean batch",
             "energy (J)",
             "busy (s)",
+            "q/s",
             "util",
         ],
     );
     for nd in &m.nodes {
         let util = if m.makespan_s > 0.0 {
             nd.busy_s / m.makespan_s
+        } else {
+            0.0
+        };
+        let qps = if nd.busy_s > 0.0 {
+            nd.queries as f64 / nd.busy_s
         } else {
             0.0
         };
@@ -137,6 +143,7 @@ pub fn sim_summary(m: &SimMetrics) -> Table {
             format!("{:.2}", nd.mean_batch_size()),
             fnum(nd.energy_j, 1),
             format!("{:.3}", nd.busy_s),
+            si(qps, 1),
             format!("{:.1}%", 100.0 * util),
         ]);
     }
@@ -209,10 +216,16 @@ pub fn sim_comparison(rows: &[SimMetrics]) -> Table {
             "queue (s)",
             "SLO att.",
             "makespan (s)",
+            "q/s",
             "util",
         ],
     );
     for m in rows {
+        let qps = if m.makespan_s > 0.0 {
+            m.n_queries as f64 / m.makespan_s
+        } else {
+            0.0
+        };
         t.row(vec![
             m.policy.clone(),
             fnum(m.total_energy_j, 1),
@@ -221,6 +234,7 @@ pub fn sim_comparison(rows: &[SimMetrics]) -> Table {
             format!("{:.3}", m.mean_queue_s),
             format!("{:.1}%", 100.0 * m.slo_attainment),
             format!("{:.2}", m.makespan_s),
+            si(qps, 1),
             format!("{:.1}%", 100.0 * m.mean_utilization()),
         ]);
     }

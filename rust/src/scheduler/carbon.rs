@@ -136,4 +136,72 @@ mod tests {
         let c = ZetaController::new(GridSignal { hourly: vec![100.0; 24] }, 0.2, 0.8);
         assert!((c.zeta_at(12.0) - 0.5).abs() < 1e-9);
     }
+
+    #[test]
+    fn window_boundaries_are_continuous() {
+        // ζ approached from either side of an hourly knot must agree with
+        // the knot itself: the interpolation has no jumps at window edges,
+        // including the day-wrap seam between 23:00 and 00:00.
+        let c = ZetaController::new(GridSignal::typical_day(), 0.1, 0.9);
+        let eps = 1e-9;
+        for h in 0..=24 {
+            let t = h as f64;
+            let at = c.zeta_at(t);
+            assert!(
+                (c.zeta_at(t - eps) - at).abs() < 1e-6,
+                "left limit at hour {h} jumps"
+            );
+            assert!(
+                (c.zeta_at(t + eps) - at).abs() < 1e-6,
+                "right limit at hour {h} jumps"
+            );
+        }
+        // Exactly on the seam, both labels of the same instant agree.
+        assert!((c.zeta_at(24.0) - c.zeta_at(0.0)).abs() < 1e-12);
+        assert!((c.zeta_at(-24.0) - c.zeta_at(0.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_window_signal_behaves_like_a_flat_day() {
+        // A one-entry signal is its own min and max everywhere: every
+        // query time interpolates to the same value, so ζ takes the
+        // documented flat-signal midpoint and carbon accounting still
+        // scales linearly with energy.
+        let c = ZetaController::new(GridSignal { hourly: vec![300.0] }, 0.25, 0.75);
+        for t in [-3.7, 0.0, 0.5, 1.0, 99.9] {
+            assert_eq!(c.signal.at(t), 300.0, "t={t}");
+            assert!((c.zeta_at(t) - 0.5).abs() < 1e-12, "t={t}");
+        }
+        assert!((c.carbon_g(0.25, 7.2e6) - 600.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clamp_limits_admit_the_full_zeta_range_and_degenerate_bands() {
+        // The widest legal band: ζ spans exactly [0, 1] at the signal
+        // extremes and never escapes it anywhere in between.
+        let c = ZetaController::new(GridSignal::typical_day(), 0.0, 1.0);
+        assert!((c.zeta_at(19.0) - 1.0).abs() < 1e-9);
+        assert!((c.zeta_at(3.0) - 0.0).abs() < 1e-9);
+        for h in 0..240 {
+            let z = c.zeta_at(h as f64 * 0.1);
+            assert!((0.0..=1.0).contains(&z), "h={h}: zeta {z} out of [0,1]");
+        }
+        // A degenerate band (ζ_min == ζ_max) pins ζ regardless of signal.
+        let pinned = ZetaController::new(GridSignal::typical_day(), 0.6, 0.6);
+        for h in 0..24 {
+            assert!((pinned.zeta_at(h as f64) - 0.6).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn inverted_zeta_band_is_rejected() {
+        ZetaController::new(GridSignal::typical_day(), 0.9, 0.1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_zeta_is_rejected() {
+        ZetaController::new(GridSignal::typical_day(), -0.1, 0.5);
+    }
 }

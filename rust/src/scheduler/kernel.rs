@@ -1,0 +1,342 @@
+//! Vectorized cost-fill kernel: the Eq. 2 blend
+//! `ζ·ê_K(τ) − (1−ζ)·â_K(τ)` evaluated over shapes × models.
+//!
+//! [`CostKernel`] snapshots the per-model fitted-polynomial coefficients
+//! into struct-of-arrays form (each coefficient contiguous across models)
+//! so the inner loop is pure arithmetic on flat slices — no pointer
+//! chasing through `ModelSet`. The scalar path processes shapes in 4-wide
+//! chunks written with [`f64::mul_add`]; with the `simd` cargo feature an
+//! AVX2+FMA path is compiled in and selected at runtime via
+//! `is_x86_feature_detected!`, falling back to the scalar kernel on
+//! machines without those features. Both paths perform the *same*
+//! per-lane operation sequence (fmadd, divide by the normalizer maximum,
+//! clamp, fused blend), so they agree far tighter than the 1e-9 bound the
+//! property tests gate on.
+
+use crate::models::{ModelSet, Normalizer};
+use crate::workload::Shape;
+
+/// Struct-of-arrays snapshot of the blended cost function at a fixed ζ.
+#[derive(Debug, Clone)]
+pub struct CostKernel {
+    /// energy coefficients, one lane per model: e_K = e0·τi + e1·τo + e2·τi·τo
+    e0: Vec<f64>,
+    e1: Vec<f64>,
+    e2: Vec<f64>,
+    /// accuracy slope per model: a_K = acc·(τi + τo)
+    acc: Vec<f64>,
+    max_e: f64,
+    max_a: f64,
+    /// blend weights: ζ and 1 − ζ
+    w_e: f64,
+    w_a: f64,
+}
+
+impl CostKernel {
+    pub fn new(sets: &[ModelSet], norm: &Normalizer, zeta: f64) -> CostKernel {
+        assert!((0.0..=1.0).contains(&zeta), "zeta in [0,1]");
+        CostKernel {
+            e0: sets.iter().map(|s| s.energy.coefs[0]).collect(),
+            e1: sets.iter().map(|s| s.energy.coefs[1]).collect(),
+            e2: sets.iter().map(|s| s.energy.coefs[2]).collect(),
+            acc: sets.iter().map(|s| s.accuracy.a_k).collect(),
+            max_e: norm.max_energy_j,
+            max_a: norm.max_accuracy,
+            w_e: zeta,
+            w_a: 1.0 - zeta,
+        }
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.e0.len()
+    }
+
+    /// True when this build will take the AVX2 path on this machine.
+    pub fn simd_active() -> bool {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        {
+            std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+        }
+        #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+        {
+            false
+        }
+    }
+
+    /// Fill `out` (shape-major, `shapes.len() × n_models`) with blended
+    /// costs, dispatching to the fastest kernel available at runtime.
+    pub fn fill(&self, shapes: &[Shape], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), shapes.len() * self.n_models());
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        if Self::simd_active() {
+            // SAFETY: AVX2+FMA presence just checked at runtime.
+            unsafe { self.fill_avx2(shapes, out) };
+            return;
+        }
+        self.fill_scalar(shapes, out);
+    }
+
+    /// One cost row (all K models) for one shape.
+    #[inline]
+    fn fill_row(&self, sh: &Shape, row: &mut [f64]) {
+        let (ti, to) = (sh.t_in as f64, sh.t_out as f64);
+        let (tito, tsum) = (ti * to, ti + to);
+        for (k, c) in row.iter_mut().enumerate() {
+            *c = self.lane(k, ti, to, tito, tsum);
+        }
+    }
+
+    /// The per-lane operation sequence both kernels implement.
+    #[inline]
+    fn lane(&self, k: usize, ti: f64, to: f64, tito: f64, tsum: f64) -> f64 {
+        let e = self.e2[k].mul_add(tito, self.e1[k].mul_add(to, self.e0[k] * ti));
+        let e_hat = (e / self.max_e).clamp(0.0, 1.0);
+        let a_hat = (self.acc[k] * tsum / self.max_a).clamp(0.0, 1.0);
+        self.w_e.mul_add(e_hat, -(self.w_a * a_hat))
+    }
+
+    /// Always-compiled scalar kernel: 4 shapes per step, `mul_add`
+    /// throughout, so the compiler can keep 4 independent chains in
+    /// flight even without explicit intrinsics.
+    pub fn fill_scalar(&self, shapes: &[Shape], out: &mut [f64]) {
+        let nm = self.n_models();
+        if nm == 0 {
+            return;
+        }
+        let mut chunks = shapes.chunks_exact(4);
+        let mut row = 0usize;
+        for ch in &mut chunks {
+            let mut ti = [0.0f64; 4];
+            let mut to = [0.0f64; 4];
+            let mut tito = [0.0f64; 4];
+            let mut tsum = [0.0f64; 4];
+            for j in 0..4 {
+                ti[j] = ch[j].t_in as f64;
+                to[j] = ch[j].t_out as f64;
+                tito[j] = ti[j] * to[j];
+                tsum[j] = ti[j] + to[j];
+            }
+            for k in 0..nm {
+                for j in 0..4 {
+                    out[(row + j) * nm + k] = self.lane(k, ti[j], to[j], tito[j], tsum[j]);
+                }
+            }
+            row += 4;
+        }
+        for (sh, r) in chunks
+            .remainder()
+            .iter()
+            .zip(out[row * nm..].chunks_exact_mut(nm))
+        {
+            self.fill_row(sh, r);
+        }
+    }
+
+    /// AVX2+FMA kernel: 4 shapes per 256-bit vector, one fused
+    /// multiply-add chain per model, 4 strided stores back into the
+    /// shape-major layout. Lane arithmetic mirrors [`Self::fill_scalar`]
+    /// operation for operation (`_mm256_fmadd_pd` ≡ `mul_add`, IEEE
+    /// divide, min/max clamp), so the two kernels agree to the last bit
+    /// on finite inputs.
+    ///
+    /// # Safety
+    /// Caller must have verified `avx2` and `fma` via
+    /// `is_x86_feature_detected!`.
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn fill_avx2(&self, shapes: &[Shape], out: &mut [f64]) {
+        use std::arch::x86_64::*;
+        let nm = self.n_models();
+        if nm == 0 {
+            return;
+        }
+        let zero = _mm256_setzero_pd();
+        let one = _mm256_set1_pd(1.0);
+        let max_e = _mm256_set1_pd(self.max_e);
+        let max_a = _mm256_set1_pd(self.max_a);
+        let w_e = _mm256_set1_pd(self.w_e);
+        let w_a = _mm256_set1_pd(self.w_a);
+        let mut chunks = shapes.chunks_exact(4);
+        let mut row = 0usize;
+        let mut lanes = [0.0f64; 4];
+        for ch in &mut chunks {
+            let ti = _mm256_set_pd(
+                ch[3].t_in as f64,
+                ch[2].t_in as f64,
+                ch[1].t_in as f64,
+                ch[0].t_in as f64,
+            );
+            let to = _mm256_set_pd(
+                ch[3].t_out as f64,
+                ch[2].t_out as f64,
+                ch[1].t_out as f64,
+                ch[0].t_out as f64,
+            );
+            let tito = _mm256_mul_pd(ti, to);
+            let tsum = _mm256_add_pd(ti, to);
+            for k in 0..nm {
+                let e = _mm256_fmadd_pd(
+                    _mm256_set1_pd(self.e2[k]),
+                    tito,
+                    _mm256_fmadd_pd(
+                        _mm256_set1_pd(self.e1[k]),
+                        to,
+                        _mm256_mul_pd(_mm256_set1_pd(self.e0[k]), ti),
+                    ),
+                );
+                let e_hat =
+                    _mm256_min_pd(_mm256_max_pd(_mm256_div_pd(e, max_e), zero), one);
+                let a = _mm256_mul_pd(_mm256_set1_pd(self.acc[k]), tsum);
+                let a_hat =
+                    _mm256_min_pd(_mm256_max_pd(_mm256_div_pd(a, max_a), zero), one);
+                let cost = _mm256_fmsub_pd(w_e, e_hat, _mm256_mul_pd(w_a, a_hat));
+                _mm256_storeu_pd(lanes.as_mut_ptr(), cost);
+                out[row * nm + k] = lanes[0];
+                out[(row + 1) * nm + k] = lanes[1];
+                out[(row + 2) * nm + k] = lanes[2];
+                out[(row + 3) * nm + k] = lanes[3];
+            }
+            row += 4;
+        }
+        for (sh, r) in chunks
+            .remainder()
+            .iter()
+            .zip(out[row * nm..].chunks_exact_mut(nm))
+        {
+            self.fill_row(sh, r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{AccuracyModel, Target, WorkloadModel};
+    use crate::testkit::{forall, Config};
+    use crate::util::Rng;
+
+    fn random_sets(rng: &mut Rng, n: usize) -> Vec<ModelSet> {
+        (0..n)
+            .map(|i| {
+                let scale = rng.range(0.5, 8.0);
+                ModelSet {
+                    model_id: format!("m{i}"),
+                    energy: WorkloadModel {
+                        model_id: format!("m{i}"),
+                        target: Target::EnergyJ,
+                        coefs: [0.5 * scale, 8.0 * scale, 0.003 * scale],
+                        r2: 0.97,
+                        f_stat: 1.0,
+                        p_value: 0.0,
+                        n_obs: 1,
+                    },
+                    runtime: WorkloadModel {
+                        model_id: format!("m{i}"),
+                        target: Target::RuntimeS,
+                        coefs: [1e-3, 1e-2, 1e-6],
+                        r2: 0.97,
+                        f_stat: 1.0,
+                        p_value: 0.0,
+                        n_obs: 1,
+                    },
+                    accuracy: AccuracyModel::new(&format!("m{i}"), rng.range(40.0, 70.0)),
+                }
+            })
+            .collect()
+    }
+
+    fn random_shapes(rng: &mut Rng, n: usize) -> Vec<Shape> {
+        (0..n)
+            .map(|_| Shape {
+                t_in: rng.int_range(1, 2048) as u32,
+                t_out: rng.int_range(1, 4096) as u32,
+            })
+            .collect()
+    }
+
+    /// The naive per-entry formula the kernel replaced — the reference
+    /// both kernels must agree with to 1e-9.
+    fn naive(sets: &[ModelSet], norm: &Normalizer, shapes: &[Shape], zeta: f64) -> Vec<f64> {
+        let mut out = vec![0.0; shapes.len() * sets.len()];
+        for (i, sh) in shapes.iter().enumerate() {
+            let (ti, to) = (sh.t_in as f64, sh.t_out as f64);
+            for (k, s) in sets.iter().enumerate() {
+                out[i * sets.len() + k] = zeta * norm.energy_hat_tok(s, ti, to)
+                    - (1.0 - zeta) * norm.accuracy_hat_tok(s, ti, to);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn prop_scalar_kernel_matches_naive_formula() {
+        forall(Config::default().cases(25), |rng| {
+            let sets = random_sets(rng, 1 + rng.index(7));
+            // Sizes straddling the 4-wide chunk boundary.
+            let shapes = random_shapes(rng, 1 + rng.index(23));
+            let norm = Normalizer::from_shapes(&sets, &shapes);
+            let zeta = rng.range(0.0, 1.0);
+            let kernel = CostKernel::new(&sets, &norm, zeta);
+            let mut got = vec![f64::NAN; shapes.len() * sets.len()];
+            kernel.fill_scalar(&shapes, &mut got);
+            let want = naive(&sets, &norm, &shapes, zeta);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-9, "scalar {g} vs naive {w}");
+            }
+        });
+    }
+
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    #[test]
+    fn prop_avx2_kernel_matches_scalar_kernel() {
+        if !CostKernel::simd_active() {
+            eprintln!("skipping: no AVX2+FMA on this machine");
+            return;
+        }
+        forall(Config::default().cases(25), |rng| {
+            let sets = random_sets(rng, 1 + rng.index(7));
+            let shapes = random_shapes(rng, 1 + rng.index(40));
+            let norm = Normalizer::from_shapes(&sets, &shapes);
+            let zeta = rng.range(0.0, 1.0);
+            let kernel = CostKernel::new(&sets, &norm, zeta);
+            let mut scalar = vec![f64::NAN; shapes.len() * sets.len()];
+            let mut simd = vec![f64::NAN; shapes.len() * sets.len()];
+            kernel.fill_scalar(&shapes, &mut scalar);
+            unsafe { kernel.fill_avx2(&shapes, &mut simd) };
+            for (i, (s, v)) in scalar.iter().zip(&simd).enumerate() {
+                assert!((s - v).abs() < 1e-9, "entry {i}: scalar {s} vs avx2 {v}");
+            }
+        });
+    }
+
+    #[test]
+    fn dispatch_matches_scalar() {
+        let mut rng = Rng::new(0x51D);
+        let sets = random_sets(&mut rng, 5);
+        let shapes = random_shapes(&mut rng, 37);
+        let norm = Normalizer::from_shapes(&sets, &shapes);
+        let kernel = CostKernel::new(&sets, &norm, 0.4);
+        let mut a = vec![0.0; shapes.len() * sets.len()];
+        let mut b = vec![0.0; shapes.len() * sets.len()];
+        kernel.fill(&shapes, &mut a);
+        kernel.fill_scalar(&shapes, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn zero_models_is_a_noop() {
+        let kernel = CostKernel::new(
+            &[],
+            &Normalizer {
+                max_energy_j: 1.0,
+                max_accuracy: 1.0,
+                max_runtime_s: 1.0,
+            },
+            0.5,
+        );
+        kernel.fill(&[Shape { t_in: 1, t_out: 1 }], &mut []);
+    }
+}

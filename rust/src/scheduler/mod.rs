@@ -43,6 +43,7 @@
 
 pub mod baselines;
 pub mod carbon;
+pub mod kernel;
 pub mod mcmf;
 pub mod netsimplex;
 pub mod problem;
@@ -50,6 +51,7 @@ pub mod solve;
 pub mod zeta;
 
 pub use carbon::{GridSignal, ZetaController};
+pub use kernel::CostKernel;
 pub use mcmf::{EdgeHandle, FlowResult, MinCostFlow};
 pub use netsimplex::{NetSimplex, SimplexFlow};
 pub use problem::{

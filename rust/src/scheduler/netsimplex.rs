@@ -60,6 +60,14 @@ const INF_CAP: i64 = i64::MAX / 4;
 
 const NONE: usize = usize::MAX;
 
+/// Arc count from which pricing fans out over scoped threads. Pricing is
+/// re-entered once per pivot, and a scoped spawn/join costs a few µs, so
+/// the parallel scan only pays once a serial √m block pass is comparably
+/// expensive — i.e. at arc counts far beyond the shape-bucketed regime.
+/// Tests lower this via [`NetSimplex::set_parallel_pricing_threshold`] to
+/// force the parallel path on small instances.
+const PAR_PRICE_MIN_ARCS: usize = 131_072;
+
 /// Pivot budget for warm restarts: a warm basis is feasible but not
 /// guaranteed strongly feasible, so a (theoretical) degenerate cycle is
 /// cut off and reported to the caller, who rebuilds cold.
@@ -93,6 +101,8 @@ pub struct NetSimplex {
     pi: Vec<i64>,
     /// block-pricing cursor
     next_arc: usize,
+    /// override of [`PAR_PRICE_MIN_ARCS`] (tests force the parallel path)
+    par_price_threshold: Option<usize>,
     solved: bool,
 }
 
@@ -147,6 +157,14 @@ impl NetSimplex {
 
     pub fn is_solved(&self) -> bool {
         self.solved
+    }
+
+    /// Lower (or raise) the arc count at which pricing goes parallel —
+    /// the default only engages far beyond the shape-bucketed regime.
+    /// Exposed so equivalence tests can force the parallel path on small
+    /// instances; the solution is identical either way.
+    pub fn set_parallel_pricing_threshold(&mut self, min_arcs: usize) {
+        self.par_price_threshold = Some(min_arcs);
     }
 
     // ------------------------------------------------- extended arc space
@@ -344,13 +362,26 @@ impl NetSimplex {
     }
 
     /// Block pricing: cyclic √m blocks, best candidate of the first block
-    /// that contains one.
+    /// that contains one. Past the parallel threshold the scan fans out
+    /// over scoped threads ([`Self::find_entering_parallel`]); either way
+    /// `None` is returned only after a full scan found no negative
+    /// reduced cost — the basis is optimal.
     fn find_entering(&mut self) -> Option<usize> {
         let m = self.m_real();
         if m == 0 {
             return None;
         }
         let block = ((m as f64).sqrt() as usize + 1).max(16).min(m);
+        if m >= self.par_price_threshold.unwrap_or(PAR_PRICE_MIN_ARCS) {
+            let threads = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(16)
+                .min(m);
+            if threads > 1 {
+                return self.find_entering_parallel(threads, block);
+            }
+        }
         let mut e = self.next_arc.min(m - 1);
         let mut scanned = 0usize;
         while scanned < m {
@@ -375,6 +406,53 @@ impl NetSimplex {
             }
         }
         None
+    }
+
+    /// Parallel block pricing: the arc range is split into `threads`
+    /// disjoint contiguous segments; each scoped thread scans its segment
+    /// in `block`-sized strides against the immutable (cost, π, state)
+    /// snapshot — pricing only reads basis state, pivoting stays serial —
+    /// and stops at the end of the first block holding a candidate. The
+    /// per-thread winners reduce to the global minimum by
+    /// `(reduced cost, arc id)`, so the entering arc is deterministic
+    /// regardless of thread scheduling. A thread reports `None` only
+    /// after scanning its whole segment, hence a global `None` certifies
+    /// optimality exactly like the serial scan.
+    fn find_entering_parallel(&self, threads: usize, block: usize) -> Option<usize> {
+        let m = self.m_real();
+        let base = m / threads;
+        let extra = m % threads;
+        let mut found: Vec<Option<(i64, usize)>> = vec![None; threads];
+        std::thread::scope(|scope| {
+            let this = &*self;
+            let mut start = 0usize;
+            for (t, slot) in found.iter_mut().enumerate() {
+                let end = start + base + usize::from(t < extra);
+                let seg = start..end;
+                start = end;
+                scope.spawn(move || {
+                    let mut best: Option<(i64, usize)> = None;
+                    let mut e = seg.start;
+                    while e < seg.end {
+                        let stop = (e + block).min(seg.end);
+                        while e < stop {
+                            if this.state[e] != STATE_TREE {
+                                let rc = this.signed_rc(e);
+                                if rc < 0 && best.map(|b| (rc, e) < b).unwrap_or(true) {
+                                    best = Some((rc, e));
+                                }
+                            }
+                            e += 1;
+                        }
+                        if best.is_some() {
+                            break;
+                        }
+                    }
+                    *slot = best;
+                });
+            }
+        });
+        found.into_iter().flatten().min().map(|(_, arc)| arc)
     }
 
     /// Run pivots until optimality or until `max_pivots` is exhausted
@@ -647,6 +725,11 @@ impl SimplexFlow {
         Ok(())
     }
 
+    /// See [`NetSimplex::set_parallel_pricing_threshold`].
+    pub fn set_parallel_pricing_threshold(&mut self, min_arcs: usize) {
+        self.g.set_parallel_pricing_threshold(min_arcs);
+    }
+
     /// Warm re-solve after the per-shape costs were re-blended for a new ζ
     /// (same grouping, same capacities): update the shape→model arc costs
     /// in place and resume pivoting from the previous basis. Returns
@@ -757,6 +840,28 @@ impl SimplexFlow {
             model_of,
             objective,
         }
+    }
+
+    /// Shape-level flow counts (`[shape][model]`) plus the blend
+    /// objective, without per-query expansion — the sketch-fed planning
+    /// path. Mirrors [`BucketedFlow::shape_flows`]: the objective is
+    /// summed in the same shape-major, model-minor order as
+    /// [`assignment`](SimplexFlow::assignment), keeping sketch-fed and
+    /// materialized plans byte-identical.
+    ///
+    /// [`BucketedFlow::shape_flows`]: super::solve::BucketedFlow::shape_flows
+    pub fn shape_flows(&self, bp: &BucketedProblem) -> (Vec<Vec<usize>>, f64) {
+        assert_eq!(bp.groups.n_shapes(), self.ns, "grouping drifted from graph");
+        let mut flows = vec![vec![0usize; self.nm]; self.ns];
+        let mut objective = 0.0f64;
+        for (i, row) in flows.iter_mut().enumerate() {
+            for (k, slot) in row.iter_mut().enumerate() {
+                let f = self.g.flow_on(self.shape_model[i * self.nm + k]);
+                objective += f as f64 * bp.costs.cost(k, i);
+                *slot = f as usize;
+            }
+        }
+        (flows, objective)
     }
 }
 
@@ -985,6 +1090,83 @@ mod tests {
                 assert!((a.objective - b.objective).abs() < 1e-9);
             }
         }
+    }
+
+    #[test]
+    fn forced_parallel_pricing_matches_ssp() {
+        // Threshold 0 sends every pricing pass down the scoped-thread
+        // path; the optimum must be unchanged (entering-arc choice never
+        // affects the optimal objective, and the leaving-arc anti-cycling
+        // rule is untouched).
+        let mut rng = Rng::new(0xA51);
+        for case in 0..25 {
+            let ns = 1 + rng.index(6);
+            let nm = 1 + rng.index(4);
+            let mult: Vec<usize> = (0..ns).map(|_| rng.index(6)).collect();
+            let nq: usize = mult.iter().sum();
+            if nq < nm.max(1) {
+                continue;
+            }
+            let costs: Vec<Vec<f64>> = (0..nm)
+                .map(|_| (0..ns).map(|_| rng.range(-1.0, 1.0)).collect())
+                .collect();
+            let bp = instance(costs, mult);
+            let caps: Vec<usize> = (0..nm).map(|_| 1 + rng.index(nq + 2)).collect();
+            if caps.iter().sum::<usize>() < nq {
+                continue;
+            }
+            let mut flow = SimplexFlow::build(&bp, &caps).unwrap();
+            flow.set_parallel_pricing_threshold(0);
+            flow.solve().unwrap();
+            let a = flow.assignment(&bp);
+            let b = solve_exact_bucketed(&bp, &caps).unwrap();
+            assert!(
+                (a.objective - b.objective).abs() < 1e-9,
+                "case {case}: parallel-priced simplex {} vs ssp {}",
+                a.objective,
+                b.objective
+            );
+        }
+    }
+
+    #[test]
+    fn forced_parallel_pricing_warm_rezeta_matches_cold() {
+        let mut rng = Rng::new(0xA52);
+        let mult = vec![4usize, 1, 3, 2, 5];
+        let nq: usize = mult.iter().sum();
+        let nm = 3;
+        let caps = vec![nq; nm];
+        let base: Vec<Vec<f64>> = (0..nm)
+            .map(|_| (0..5).map(|_| rng.range(-1.0, 1.0)).collect())
+            .collect();
+        let mut bp = instance(base.clone(), mult);
+        let mut flow = SimplexFlow::build(&bp, &caps).unwrap();
+        flow.set_parallel_pricing_threshold(0);
+        flow.solve().unwrap();
+        for step in 0..4 {
+            let blended: Vec<Vec<f64>> = base
+                .iter()
+                .map(|row| row.iter().map(|c| c * (0.2 + 0.25 * step as f64)).collect())
+                .collect();
+            bp.costs = CostMatrix::from_rows(blended);
+            assert!(flow.rezeta(&bp, &caps).unwrap());
+            let a = flow.assignment(&bp);
+            let b = solve_exact_bucketed(&bp, &caps).unwrap();
+            assert!(
+                (a.objective - b.objective).abs() < 1e-9,
+                "step {step}: parallel warm {} vs cold {}",
+                a.objective,
+                b.objective
+            );
+        }
+    }
+
+    #[test]
+    fn forced_parallel_pricing_detects_infeasibility() {
+        let bp = instance(vec![vec![0.1, 0.5], vec![0.9, 0.2]], vec![4, 4]);
+        let mut flow = SimplexFlow::build(&bp, &[3, 3]).unwrap();
+        flow.set_parallel_pricing_threshold(0);
+        assert!(flow.solve().is_err());
     }
 
     #[test]

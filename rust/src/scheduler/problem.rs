@@ -14,6 +14,7 @@
 //! solves in the time of a few-hundred-node flow problem, independent of
 //! |Q| (plus two O(|Q|) passes for grouping and expansion).
 
+use super::kernel::CostKernel;
 use crate::models::{ModelSet, Normalizer};
 use crate::workload::{Query, Shape};
 use std::collections::HashMap;
@@ -21,6 +22,46 @@ use std::collections::HashMap;
 /// Queries per chunk below which cost construction stays single-threaded
 /// (thread spawn/join overhead dominates tiny fills).
 const PAR_MIN_ITEMS: usize = 8192;
+
+/// Run `fill` over disjoint `(shapes, output-rows)` chunks on scoped
+/// threads. The partition is balanced: with `T` threads the first
+/// `len % T` chunks carry one extra shape, so no thread runs more than
+/// one item longer than any other (the previous ceil-divide split left
+/// the last thread short while every earlier thread was oversized).
+/// Small inputs run inline — thread spawn/join overhead dominates below
+/// [`PAR_MIN_ITEMS`].
+fn par_fill<F>(shapes: &[Shape], out: &mut [f64], nm: usize, fill: F)
+where
+    F: Fn(&[Shape], &mut [f64]) + Sync,
+{
+    debug_assert_eq!(out.len(), shapes.len() * nm);
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(16)
+        // keep every thread busy with at least PAR_MIN_ITEMS/2 shapes
+        .min((2 * shapes.len()) / PAR_MIN_ITEMS.max(1))
+        .max(1);
+    if shapes.len() < PAR_MIN_ITEMS || threads <= 1 {
+        fill(shapes, out);
+        return;
+    }
+    let base = shapes.len() / threads;
+    let extra = shapes.len() % threads;
+    std::thread::scope(|scope| {
+        let fill = &fill;
+        let mut rest_s = shapes;
+        let mut rest_o = out;
+        for t in 0..threads {
+            let n = base + usize::from(t < extra);
+            let (s, rs) = rest_s.split_at(n);
+            let (o, ro) = rest_o.split_at_mut(n * nm);
+            rest_s = rs;
+            rest_o = ro;
+            scope.spawn(move || fill(s, o));
+        }
+    });
+}
 
 /// Per-(query, model) cost table: `cost(k, i)` is the Eq. 2 summand of
 /// assigning query `i` to model `k`.
@@ -56,51 +97,32 @@ impl CostMatrix {
         zeta: f64,
     ) -> CostMatrix {
         let mut m = CostMatrix {
-            data: vec![0.0; shapes.len() * sets.len()],
+            data: Vec::new(),
             n_models: sets.len(),
-            n_queries: shapes.len(),
+            n_queries: 0,
         };
         m.refill(sets, norm, shapes, zeta);
         m
     }
 
     /// Recompute all entries in place for a new ζ (used by sweeps: the
-    /// shape grouping is ζ-independent, only the blend changes).
+    /// shape grouping is ζ-independent, only the blend changes). The
+    /// shape *set* may also change — the existing allocation is reused
+    /// whenever its capacity suffices (always, when the shape count
+    /// shrinks or stays put), so a ζ sweep or a same-shape extend never
+    /// reallocates the matrix.
     pub fn refill(&mut self, sets: &[ModelSet], norm: &Normalizer, shapes: &[Shape], zeta: f64) {
-        assert!((0.0..=1.0).contains(&zeta), "zeta in [0,1]");
-        assert_eq!(shapes.len(), self.n_queries);
         assert_eq!(sets.len(), self.n_models);
         let nm = self.n_models;
+        self.n_queries = shapes.len();
+        // `resize` keeps the allocation on shrink and grows only when
+        // capacity is genuinely insufficient.
+        self.data.resize(shapes.len() * nm, 0.0);
         if nm == 0 {
-            return; // no models ⇒ nothing to fill (and chunk size 0 is invalid)
+            return; // no models ⇒ nothing to fill
         }
-
-        let fill = |shapes: &[Shape], out: &mut [f64]| {
-            for (sh, row) in shapes.iter().zip(out.chunks_exact_mut(nm)) {
-                let (ti, to) = (sh.t_in as f64, sh.t_out as f64);
-                for (s, c) in sets.iter().zip(row.iter_mut()) {
-                    *c = zeta * norm.energy_hat_tok(s, ti, to)
-                        - (1.0 - zeta) * norm.accuracy_hat_tok(s, ti, to);
-                }
-            }
-        };
-
-        let threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-            .min(16);
-        if shapes.len() < PAR_MIN_ITEMS || threads <= 1 {
-            fill(shapes, self.data.as_mut_slice());
-            return;
-        }
-        // ceil(len / threads), at least PAR_MIN_ITEMS/2 per chunk
-        let chunk = ((shapes.len() + threads - 1) / threads).max(PAR_MIN_ITEMS / 2);
-        let fill = &fill;
-        std::thread::scope(|scope| {
-            for (qs, out) in shapes.chunks(chunk).zip(self.data.chunks_mut(chunk * nm)) {
-                scope.spawn(move || fill(qs, out));
-            }
-        });
+        let kernel = CostKernel::new(sets, norm, zeta);
+        par_fill(shapes, &mut self.data, nm, |sh, out| kernel.fill(sh, out));
     }
 
     /// Wrap model-major rows (`rows[k][i]`, the pre-refactor layout) —
@@ -132,6 +154,13 @@ impl CostMatrix {
     pub fn row(&self, query: usize) -> &[f64] {
         let k = self.n_models;
         &self.data[query * k..(query + 1) * k]
+    }
+
+    /// The whole matrix, query-major (`data[query · K + model]`) — used
+    /// by the throughput bench and the allocation-stability tests.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
     }
 }
 
@@ -223,9 +252,13 @@ impl BucketedProblem {
         self.costs.refill(sets, norm, &self.groups.shapes, zeta);
     }
 
-    /// Total queries in the underlying workload.
+    /// Total queries in the underlying workload. Summed from the shape
+    /// multiplicities (not `shape_of.len()`) so sketch-fed instances —
+    /// which carry multiplicities but never materialize the per-query
+    /// vector — report the true workload size. For query-backed groupings
+    /// the two agree by construction.
     pub fn n_queries(&self) -> usize {
-        self.groups.n_queries()
+        self.groups.multiplicity.iter().sum()
     }
 
     pub fn n_models(&self) -> usize {
@@ -475,5 +508,88 @@ mod tests {
         assert_eq!(g.n_shapes(), 0);
         assert_eq!(g.n_queries(), 0);
         assert!(g.members().is_empty());
+    }
+
+    use crate::models::{AccuracyModel, Target, WorkloadModel};
+
+    fn test_sets(n: usize) -> Vec<ModelSet> {
+        (0..n)
+            .map(|i| {
+                let scale = 0.5 + i as f64;
+                ModelSet {
+                    model_id: format!("m{i}"),
+                    energy: WorkloadModel {
+                        model_id: format!("m{i}"),
+                        target: Target::EnergyJ,
+                        coefs: [0.5 * scale, 8.0 * scale, 0.003 * scale],
+                        r2: 0.97,
+                        f_stat: 1.0,
+                        p_value: 0.0,
+                        n_obs: 1,
+                    },
+                    runtime: WorkloadModel {
+                        model_id: format!("m{i}"),
+                        target: Target::RuntimeS,
+                        coefs: [1e-3, 1e-2, 1e-6],
+                        r2: 0.97,
+                        f_stat: 1.0,
+                        p_value: 0.0,
+                        n_obs: 1,
+                    },
+                    accuracy: AccuracyModel::new(&format!("m{i}"), 45.0 + 3.0 * i as f64),
+                }
+            })
+            .collect()
+    }
+
+    fn test_shapes(n: usize) -> Vec<Shape> {
+        (0..n)
+            .map(|i| Shape {
+                t_in: 1 + (i as u32 * 37) % 2040,
+                t_out: 1 + (i as u32 * 91) % 4088,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn refill_keeps_allocation_across_rezeta_sweep_and_shrink() {
+        let sets = test_sets(4);
+        let shapes = test_shapes(64);
+        let norm = Normalizer::from_shapes(&sets, &shapes);
+        let mut m = CostMatrix::build_for_shapes(&sets, &norm, &shapes, 0.0);
+        let ptr = m.as_slice().as_ptr();
+        // A full ζ sweep must never touch the allocation.
+        for i in 0..=8 {
+            m.refill(&sets, &norm, &shapes, i as f64 / 8.0);
+            assert_eq!(m.as_slice().as_ptr(), ptr, "rezeta step {i} reallocated");
+        }
+        // Shrinking the shape set reuses the buffer too.
+        m.refill(&sets, &norm, &shapes[..17], 0.5);
+        assert_eq!(m.as_slice().as_ptr(), ptr, "shrink reallocated");
+        assert_eq!(m.n_queries, 17);
+        assert_eq!(m.as_slice().len(), 17 * sets.len());
+        // Growing back within the retained capacity stays in place as well.
+        m.refill(&sets, &norm, &shapes, 0.25);
+        assert_eq!(m.as_slice().as_ptr(), ptr, "regrow within capacity reallocated");
+        assert_eq!(m.n_queries, shapes.len());
+        // Values after the round trip equal a fresh build.
+        let fresh = CostMatrix::build_for_shapes(&sets, &norm, &shapes, 0.25);
+        assert_eq!(m.as_slice(), fresh.as_slice());
+    }
+
+    #[test]
+    fn parallel_fill_matches_serial_fill() {
+        // Enough shapes to cross PAR_MIN_ITEMS and take the threaded
+        // path, with a length chosen to make the balanced partition
+        // uneven (base + 1 chunks first).
+        let sets = test_sets(3);
+        let shapes = test_shapes(PAR_MIN_ITEMS + 1037);
+        let norm = Normalizer::from_shapes(&sets, &shapes);
+        let par = CostMatrix::build_for_shapes(&sets, &norm, &shapes, 0.7);
+        // Serial reference through the same kernel, one chunk.
+        let kernel = super::CostKernel::new(&sets, &norm, 0.7);
+        let mut serial = vec![0.0; shapes.len() * sets.len()];
+        kernel.fill(&shapes, &mut serial);
+        assert_eq!(par.as_slice(), serial.as_slice());
     }
 }

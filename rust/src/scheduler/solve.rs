@@ -321,6 +321,28 @@ impl BucketedFlow {
             objective,
         }
     }
+
+    /// Shape-level flow counts (`[shape][model]`) plus the blend objective,
+    /// without expanding to per-query assignments. Sketch-fed planning
+    /// sessions ([`Planner::from_sketch`](crate::plan::Planner::from_sketch))
+    /// package these directly into a [`Plan`](crate::plan::Plan). The
+    /// objective is summed in the same shape-major, model-minor order as
+    /// [`assignment`](BucketedFlow::assignment), so the two paths produce
+    /// bitwise-identical objectives (and therefore byte-identical
+    /// serialized artifacts).
+    pub fn shape_flows(&self, bp: &BucketedProblem) -> (Vec<Vec<usize>>, f64) {
+        assert_eq!(bp.groups.n_shapes(), self.ns, "grouping drifted from graph");
+        let mut flows = vec![vec![0usize; self.nm]; self.ns];
+        let mut objective = 0.0f64;
+        for (i, row) in flows.iter_mut().enumerate() {
+            for (k, slot) in row.iter_mut().enumerate() {
+                let f = self.g.flow_on(self.shape_model[i * self.nm + k]);
+                objective += f as f64 * bp.costs.cost(k, i);
+                *slot = f as usize;
+            }
+        }
+        (flows, objective)
+    }
 }
 
 /// Solve exactly at *shape* granularity and expand back to queries — the

@@ -13,5 +13,5 @@ pub mod timer;
 pub use cli::Args;
 pub use json::Json;
 pub use rng::Rng;
-pub use table::{fnum, Table};
+pub use table::{fnum, si, Table};
 pub use timer::{bench, black_box, human_time, Stopwatch};

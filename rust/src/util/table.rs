@@ -144,6 +144,24 @@ pub fn fnum(x: f64, digits: usize) -> String {
     }
 }
 
+/// Format a non-negative rate or count with an SI suffix (`12.5k`,
+/// `3.42M`, `1.08G`) for table cells where `fnum`'s scientific notation
+/// reads poorly — queries/sec and bytes/sec columns. Values under 1000
+/// pass through `fnum` unchanged; non-finite values render as-is.
+pub fn si(x: f64, digits: usize) -> String {
+    assert!(x >= 0.0 || !x.is_finite(), "si() formats non-negative rates");
+    if !x.is_finite() {
+        return format!("{x}");
+    }
+    let steps = [(1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "k")];
+    for (scale, suffix) in steps {
+        if x >= scale {
+            return format!("{:.*}{}", digits, x / scale, suffix);
+        }
+    }
+    fnum(x, digits)
+}
+
 /// Render a numeric series as a compact ASCII sparkline-ish plot for terminal
 /// figures (one line per series point set is handled by the caller).
 pub fn ascii_series(label: &str, xs: &[f64], ys: &[f64], width: usize) -> String {
@@ -209,6 +227,18 @@ mod tests {
         let s = fnum(4.67e-15, 2);
         assert!(s.contains('e'), "{s}");
         assert_eq!(fnum(0.976, 3), "0.976");
+    }
+
+    #[test]
+    fn si_suffixes_round_trip_magnitudes() {
+        assert_eq!(si(0.0, 1), "0");
+        assert_eq!(si(999.0, 0), "999");
+        assert_eq!(si(12_500.0, 1), "12.5k");
+        assert_eq!(si(3_420_000.0, 2), "3.42M");
+        assert_eq!(si(1_080_000_000.0, 2), "1.08G");
+        assert_eq!(si(2.5e12, 1), "2.5T");
+        // Exactly at a boundary takes the suffix.
+        assert_eq!(si(1000.0, 1), "1.0k");
     }
 
     #[test]

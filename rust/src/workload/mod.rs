@@ -4,9 +4,11 @@
 pub mod alpaca;
 pub mod predictor;
 pub mod query;
+pub mod sketch;
 pub mod trace;
 
 pub use alpaca::{generate, paper_sample, AlpacaParams};
 pub use predictor::{predicted_workload, LengthPredictor};
 pub use query::{stats, Query, Shape, WorkloadStats};
+pub use sketch::ShapeSketch;
 pub use trace::TraceRecord;

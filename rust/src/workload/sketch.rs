@@ -1,0 +1,462 @@
+//! Shape sketches: fold a workload — streamed from a JSONL trace or an
+//! in-memory query slice — into `(Shape → multiplicity)` counts without
+//! ever materializing `Vec<Query>`.
+//!
+//! The paper's cost model (§4, Eqs. 6–7) sees a query only through its
+//! `(τ_in, τ_out)` shape, so the planning pipeline needs exactly the
+//! distinct shapes and their multiplicities: a 100M-line trace with a few
+//! hundred distinct token-length pairs collapses into a few KiB of
+//! counters. [`Planner::from_sketch`](crate::plan::Planner::from_sketch)
+//! opens a planning session directly over a sketch; for exact sketches
+//! the resulting [`Plan`](crate::plan::Plan) is byte-identical to the one
+//! produced from the materialized trace (property-tested in
+//! `tests/plan.rs`).
+//!
+//! Two modes:
+//!
+//! * **Exact** ([`ShapeSketch::new`]): every distinct shape gets its own
+//!   counter, in an open-addressing table (linear probing over a
+//!   power-of-two slot array; the in-repo substitute for `hashbrown`,
+//!   which the offline crate cache does not carry).
+//! * **Lossy** ([`ShapeSketch::lossy`]): at most `max_shapes` distinct
+//!   counters; once full, novel shapes fold into a *residual bucket*
+//!   that accumulates `(count, Σ τ_in, Σ τ_out)` and is reported as one
+//!   rounded-mean representative shape. [`ShapeSketch::compact`] applies
+//!   the same folding after the fact (keep the top-K heaviest shapes).
+//!   Totals are preserved exactly; only shape identity is approximated.
+
+use super::query::{Query, Shape};
+use super::trace;
+use std::path::Path;
+
+/// Empty-slot sentinel in the probe table.
+const EMPTY: usize = usize::MAX;
+
+/// A streaming `(Shape → multiplicity)` sketch of a workload.
+#[derive(Debug, Clone)]
+pub struct ShapeSketch {
+    /// Distinct shapes in first-appearance order — the same order
+    /// `group_by_shape` produces, which is what keeps sketch-fed plans
+    /// byte-identical to materialized ones.
+    shapes: Vec<Shape>,
+    counts: Vec<u64>,
+    /// Open-addressing probe table: slot → index into `shapes`/`counts`.
+    table: Vec<usize>,
+    /// Distinct-shape cap (`None` = exact).
+    max_shapes: Option<usize>,
+    residual_count: u64,
+    residual_ti: u64,
+    residual_to: u64,
+}
+
+/// SplitMix64 finalizer: the shape key is two token counts packed into a
+/// u64, so low bits cluster badly without mixing.
+#[inline]
+fn mix(key: u64) -> u64 {
+    let mut z = key.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Default for ShapeSketch {
+    fn default() -> ShapeSketch {
+        ShapeSketch::new()
+    }
+}
+
+impl ShapeSketch {
+    /// An exact sketch: one counter per distinct shape.
+    pub fn new() -> ShapeSketch {
+        ShapeSketch {
+            shapes: Vec::new(),
+            counts: Vec::new(),
+            table: vec![EMPTY; 64],
+            max_shapes: None,
+            residual_count: 0,
+            residual_ti: 0,
+            residual_to: 0,
+        }
+    }
+
+    /// A lossy sketch: at most `max_shapes ≥ 1` distinct counters; novel
+    /// shapes beyond that fold into the residual bucket.
+    pub fn lossy(max_shapes: usize) -> ShapeSketch {
+        assert!(max_shapes >= 1, "lossy sketch needs at least one counter");
+        let mut s = ShapeSketch::new();
+        s.max_shapes = Some(max_shapes);
+        s
+    }
+
+    // ------------------------------------------------------------- ingest
+
+    /// Count one query of shape `sh`.
+    #[inline]
+    pub fn add(&mut self, sh: Shape) {
+        self.add_n(sh, 1);
+    }
+
+    /// Count `n` queries of shape `sh`.
+    pub fn add_n(&mut self, sh: Shape, n: u64) {
+        if n == 0 {
+            return;
+        }
+        if let Some(i) = self.find(sh) {
+            self.counts[i] += n;
+            return;
+        }
+        if self
+            .max_shapes
+            .map(|cap| self.shapes.len() >= cap)
+            .unwrap_or(false)
+        {
+            self.fold_residual(sh, n);
+            return;
+        }
+        self.insert_new(sh, n);
+    }
+
+    /// Count one query.
+    #[inline]
+    pub fn observe(&mut self, q: &Query) {
+        self.add_n(q.shape(), 1);
+    }
+
+    /// Sketch an in-memory workload.
+    pub fn from_queries(queries: &[Query]) -> ShapeSketch {
+        let mut s = ShapeSketch::new();
+        for q in queries {
+            s.observe(q);
+        }
+        s
+    }
+
+    /// Stream a JSONL trace file into this sketch (exact or lossy per the
+    /// constructor); returns the number of records ingested. O(longest
+    /// line) transient memory — the trace is never materialized.
+    pub fn ingest_trace(&mut self, path: &Path) -> anyhow::Result<u64> {
+        let mut n = 0u64;
+        trace::for_each_record(path, |r| {
+            self.add_n(r.query.shape(), 1);
+            n += 1;
+            Ok(())
+        })?;
+        Ok(n)
+    }
+
+    /// Exact sketch of a whole trace file (streaming).
+    pub fn from_trace_file(path: &Path) -> anyhow::Result<ShapeSketch> {
+        let mut s = ShapeSketch::new();
+        s.ingest_trace(path)?;
+        Ok(s)
+    }
+
+    // ------------------------------------------------------------ queries
+
+    /// Total queries represented, including the residual bucket.
+    pub fn n_queries(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.residual_count
+    }
+
+    /// Distinct shapes held exactly (residual bucket excluded).
+    pub fn n_distinct(&self) -> usize {
+        self.shapes.len()
+    }
+
+    /// No query was folded into the residual bucket: the sketch is a
+    /// lossless reordering-free summary of the workload.
+    pub fn is_exact(&self) -> bool {
+        self.residual_count == 0
+    }
+
+    /// Queries folded into the residual bucket.
+    pub fn residual_queries(&self) -> u64 {
+        self.residual_count
+    }
+
+    /// The residual bucket as a rounded-mean representative shape, if any
+    /// queries were folded.
+    pub fn residual_shape(&self) -> Option<(Shape, u64)> {
+        if self.residual_count == 0 {
+            return None;
+        }
+        let n = self.residual_count;
+        let mean = |sum: u64| ((sum + n / 2) / n).max(1) as u32;
+        Some((
+            Shape {
+                t_in: mean(self.residual_ti),
+                t_out: mean(self.residual_to),
+            },
+            n,
+        ))
+    }
+
+    /// `(shape, multiplicity)` entries in first-appearance order. The
+    /// residual bucket, if any, is appended last as its representative
+    /// shape — unless that shape collides with an existing entry, in
+    /// which case the residual count merges into it (so the entry list
+    /// never carries duplicate shapes).
+    pub fn entries(&self) -> Vec<(Shape, u64)> {
+        let mut out: Vec<(Shape, u64)> = self
+            .shapes
+            .iter()
+            .copied()
+            .zip(self.counts.iter().copied())
+            .collect();
+        if let Some((sh, n)) = self.residual_shape() {
+            match out.iter_mut().find(|(s, _)| s.key() == sh.key()) {
+                Some((_, c)) => *c += n,
+                None => out.push((sh, n)),
+            }
+        }
+        out
+    }
+
+    /// Approximate resident size in bytes (counter arrays + probe table);
+    /// the sketch-vs-materialize bench reports this against
+    /// `|Q| * size_of::<Query>()`.
+    pub fn mem_bytes(&self) -> usize {
+        self.shapes.capacity() * std::mem::size_of::<Shape>()
+            + self.counts.capacity() * std::mem::size_of::<u64>()
+            + self.table.capacity() * std::mem::size_of::<usize>()
+    }
+
+    // ---------------------------------------------------------- compact
+
+    /// Keep the `top_k` heaviest shapes (ties broken toward earlier first
+    /// appearance, so the result is deterministic) and fold the rest into
+    /// the residual bucket. Keeps the relative first-appearance order of
+    /// the survivors; totals are preserved exactly. No-op when the sketch
+    /// already holds at most `top_k` shapes.
+    pub fn compact(&mut self, top_k: usize) {
+        assert!(top_k >= 1, "compact needs at least one surviving shape");
+        if self.shapes.len() <= top_k {
+            return;
+        }
+        let mut order: Vec<usize> = (0..self.shapes.len()).collect();
+        // Heaviest first; first-appearance index breaks ties.
+        order.sort_by_key(|&i| (std::cmp::Reverse(self.counts[i]), i));
+        let mut keep = vec![false; self.shapes.len()];
+        for &i in &order[..top_k] {
+            keep[i] = true;
+        }
+        let mut shapes = Vec::with_capacity(top_k);
+        let mut counts = Vec::with_capacity(top_k);
+        for i in 0..self.shapes.len() {
+            if keep[i] {
+                shapes.push(self.shapes[i]);
+                counts.push(self.counts[i]);
+            } else {
+                let n = self.counts[i];
+                self.residual_count += n;
+                self.residual_ti += n * self.shapes[i].t_in as u64;
+                self.residual_to += n * self.shapes[i].t_out as u64;
+            }
+        }
+        self.shapes = shapes;
+        self.counts = counts;
+        self.rebuild_table();
+    }
+
+    // ---------------------------------------------------------- internals
+
+    fn fold_residual(&mut self, sh: Shape, n: u64) {
+        self.residual_count += n;
+        self.residual_ti += n * sh.t_in as u64;
+        self.residual_to += n * sh.t_out as u64;
+    }
+
+    fn find(&self, sh: Shape) -> Option<usize> {
+        let key = sh.key();
+        let mask = self.table.len() - 1;
+        let mut slot = (mix(key) as usize) & mask;
+        loop {
+            match self.table[slot] {
+                EMPTY => return None,
+                i if self.shapes[i].key() == key => return Some(i),
+                _ => slot = (slot + 1) & mask,
+            }
+        }
+    }
+
+    fn insert_new(&mut self, sh: Shape, n: u64) {
+        // Grow at 50% load so probe chains stay short.
+        if (self.shapes.len() + 1) * 2 > self.table.len() {
+            self.table = vec![EMPTY; self.table.len() * 2];
+            let table = &mut self.table;
+            let mask = table.len() - 1;
+            for (i, s) in self.shapes.iter().enumerate() {
+                let mut slot = (mix(s.key()) as usize) & mask;
+                while table[slot] != EMPTY {
+                    slot = (slot + 1) & mask;
+                }
+                table[slot] = i;
+            }
+        }
+        let mask = self.table.len() - 1;
+        let mut slot = (mix(sh.key()) as usize) & mask;
+        while self.table[slot] != EMPTY {
+            slot = (slot + 1) & mask;
+        }
+        self.table[slot] = self.shapes.len();
+        self.shapes.push(sh);
+        self.counts.push(n);
+    }
+
+    fn rebuild_table(&mut self) {
+        let mut cap = 64usize;
+        while self.shapes.len() * 2 > cap {
+            cap *= 2;
+        }
+        self.table = vec![EMPTY; cap];
+        let mask = cap - 1;
+        for (i, s) in self.shapes.iter().enumerate() {
+            let mut slot = (mix(s.key()) as usize) & mask;
+            while self.table[slot] != EMPTY {
+                slot = (slot + 1) & mask;
+            }
+            self.table[slot] = i;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::group_by_shape;
+    use crate::util::Rng;
+
+    fn random_queries(rng: &mut Rng, n: usize, distinct: u32) -> Vec<Query> {
+        (0..n)
+            .map(|id| {
+                let ti = 1 + rng.index(distinct as usize) as u32;
+                let to = 1 + rng.index(distinct as usize) as u32;
+                Query {
+                    id: id as u32,
+                    t_in: ti,
+                    t_out: to,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn exact_sketch_matches_group_by_shape() {
+        let mut rng = Rng::new(0x5CE7);
+        for _ in 0..10 {
+            let queries = random_queries(&mut rng, 500, 12);
+            let sketch = ShapeSketch::from_queries(&queries);
+            let groups = group_by_shape(&queries);
+            assert!(sketch.is_exact());
+            assert_eq!(sketch.n_queries(), queries.len() as u64);
+            let entries = sketch.entries();
+            assert_eq!(entries.len(), groups.n_shapes());
+            for (i, (sh, n)) in entries.iter().enumerate() {
+                // Same shapes in the same (first-appearance) order with
+                // the same multiplicities — the byte-identity invariant.
+                assert_eq!(*sh, groups.shapes[i]);
+                assert_eq!(*n as usize, groups.multiplicity[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn table_growth_keeps_every_counter() {
+        // Enough distinct shapes to force several table doublings.
+        let mut sketch = ShapeSketch::new();
+        for ti in 1..=100u32 {
+            for to in 1..=100u32 {
+                sketch.add_n(Shape { t_in: ti, t_out: to }, (ti + to) as u64);
+            }
+        }
+        assert_eq!(sketch.n_distinct(), 10_000);
+        let expected: u64 = (1..=100u64)
+            .flat_map(|ti| (1..=100u64).map(move |to| ti + to))
+            .sum();
+        assert_eq!(sketch.n_queries(), expected);
+        // Spot-check lookups after growth.
+        let entries = sketch.entries();
+        assert_eq!(entries[0], (Shape { t_in: 1, t_out: 1 }, 2));
+        sketch.add_n(Shape { t_in: 7, t_out: 9 }, 5);
+        let e = sketch
+            .entries()
+            .into_iter()
+            .find(|(s, _)| *s == Shape { t_in: 7, t_out: 9 })
+            .unwrap();
+        assert_eq!(e.1, 16 + 5);
+    }
+
+    #[test]
+    fn lossy_folds_novel_shapes_beyond_cap() {
+        let mut sketch = ShapeSketch::lossy(2);
+        sketch.add_n(Shape { t_in: 10, t_out: 10 }, 4);
+        sketch.add_n(Shape { t_in: 20, t_out: 20 }, 3);
+        // Third distinct shape folds; existing shapes keep counting.
+        sketch.add_n(Shape { t_in: 30, t_out: 50 }, 2);
+        sketch.add_n(Shape { t_in: 10, t_out: 10 }, 1);
+        assert!(!sketch.is_exact());
+        assert_eq!(sketch.n_distinct(), 2);
+        assert_eq!(sketch.n_queries(), 10);
+        assert_eq!(sketch.residual_queries(), 2);
+        let (rep, n) = sketch.residual_shape().unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(rep, Shape { t_in: 30, t_out: 50 });
+        let entries = sketch.entries();
+        assert_eq!(entries.len(), 3);
+        assert_eq!(entries[2], (Shape { t_in: 30, t_out: 50 }, 2));
+    }
+
+    #[test]
+    fn residual_representative_merges_on_collision() {
+        let mut sketch = ShapeSketch::lossy(1);
+        sketch.add_n(Shape { t_in: 5, t_out: 5 }, 3);
+        // Two folded shapes whose mean rounds to the held shape.
+        sketch.add_n(Shape { t_in: 4, t_out: 4 }, 1);
+        sketch.add_n(Shape { t_in: 6, t_out: 6 }, 1);
+        let entries = sketch.entries();
+        assert_eq!(entries, vec![(Shape { t_in: 5, t_out: 5 }, 5)]);
+        assert_eq!(sketch.n_queries(), 5);
+    }
+
+    #[test]
+    fn compact_keeps_heaviest_in_first_appearance_order() {
+        let mut sketch = ShapeSketch::new();
+        sketch.add_n(Shape { t_in: 1, t_out: 1 }, 5);
+        sketch.add_n(Shape { t_in: 2, t_out: 2 }, 9);
+        sketch.add_n(Shape { t_in: 3, t_out: 3 }, 1);
+        sketch.add_n(Shape { t_in: 4, t_out: 4 }, 9);
+        let before = sketch.n_queries();
+        sketch.compact(2);
+        assert_eq!(sketch.n_distinct(), 2);
+        assert_eq!(sketch.n_queries(), before);
+        let entries = sketch.entries();
+        // Survivors (counts 9 and 9) keep their relative order; shapes
+        // (1,1) and (3,3) fold into the residual.
+        assert_eq!(entries[0].0, Shape { t_in: 2, t_out: 2 });
+        assert_eq!(entries[1].0, Shape { t_in: 4, t_out: 4 });
+        assert_eq!(sketch.residual_queries(), 6);
+        // Lookups still work against the rebuilt table.
+        sketch.add_n(Shape { t_in: 2, t_out: 2 }, 1);
+        assert_eq!(sketch.entries()[0].1, 10);
+        // compact at or above the current size is a no-op.
+        let snapshot = sketch.entries();
+        sketch.compact(100);
+        assert_eq!(sketch.entries(), snapshot);
+    }
+
+    #[test]
+    fn trace_streaming_matches_in_memory_sketch() {
+        let mut rng = Rng::new(0x7A1);
+        let queries = random_queries(&mut rng, 300, 9);
+        let path = std::env::temp_dir().join(format!(
+            "ecoserve_sketch_stream_{}.jsonl",
+            std::process::id()
+        ));
+        std::fs::write(&path, crate::workload::trace::to_jsonl(&queries)).unwrap();
+        let streamed = ShapeSketch::from_trace_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let in_memory = ShapeSketch::from_queries(&queries);
+        assert_eq!(streamed.entries(), in_memory.entries());
+        assert_eq!(streamed.n_queries(), 300);
+    }
+}

@@ -143,16 +143,22 @@ pub fn load(path: &Path) -> anyhow::Result<Vec<Query>> {
     Ok(load_records(path)?.into_iter().map(|r| r.query).collect())
 }
 
-/// Stream a JSONL trace file through one reused line buffer: O(longest
-/// line) transient memory instead of O(file) (`read_to_string`) plus
-/// per-line slicing — at 10M-line traces the loader would otherwise be
-/// the bottleneck the sim bench's throughput assertion guards against.
-pub fn load_records(path: &Path) -> anyhow::Result<Vec<TraceRecord>> {
+/// Stream a JSONL trace file record-by-record through one reused line
+/// buffer: O(longest line) transient memory instead of O(file). The
+/// visitor may bail (`Err`) to abort the walk. Shares the line parser
+/// with the in-memory loaders, so malformed input is rejected with the
+/// same line-numbered errors. This is the entry point for consumers that
+/// must not materialize the trace — notably
+/// [`ShapeSketch::from_trace_file`](super::sketch::ShapeSketch), which
+/// folds a 100M-line trace into a few hundred shape counters.
+pub fn for_each_record<F>(path: &Path, mut f: F) -> anyhow::Result<()>
+where
+    F: FnMut(TraceRecord) -> anyhow::Result<()>,
+{
     use std::io::BufRead;
     let file = std::fs::File::open(path)
         .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
     let mut reader = std::io::BufReader::new(file);
-    let mut records = Vec::new();
     let mut buf = String::new();
     let mut lineno = 0usize;
     loop {
@@ -162,13 +168,25 @@ pub fn load_records(path: &Path) -> anyhow::Result<Vec<TraceRecord>> {
             .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?
             == 0
         {
-            return Ok(records);
+            return Ok(());
         }
         lineno += 1;
         if let Some(r) = parse_record_line(&buf, lineno)? {
-            records.push(r);
+            f(r)?;
         }
     }
+}
+
+/// Load a whole trace file into memory (streaming under the hood; at
+/// 10M-line traces a `read_to_string` loader would be the bottleneck the
+/// sim bench's throughput assertion guards against).
+pub fn load_records(path: &Path) -> anyhow::Result<Vec<TraceRecord>> {
+    let mut records = Vec::new();
+    for_each_record(path, |r| {
+        records.push(r);
+        Ok(())
+    })?;
+    Ok(records)
 }
 
 #[cfg(test)]

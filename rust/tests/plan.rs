@@ -453,3 +453,138 @@ fn golden_v1_plan_fixture_round_trips_and_gates_versions() {
     assert!(err.contains("not an ecoserve plan"), "{err}");
     assert_eq!(PLAN_FORMAT, "ecoserve.plan");
 }
+
+#[test]
+fn prop_sketch_fed_plans_are_byte_identical_to_materialized() {
+    // The streaming sketch path must not be a "close enough"
+    // approximation: an exact sketch carries the same shapes in the same
+    // first-appearance order with the same multiplicities, so the packaged
+    // artifact — every serialized byte of it — must equal the one from a
+    // materialized `Vec<Query>` session.
+    use ecoserve::workload::ShapeSketch;
+
+    forall(Config::default().cases(20), |rng| {
+        let n_models = 2 + rng.index(3);
+        let sets = random_sets(rng, n_models);
+        let n_shapes = 2 + rng.index(7);
+        let table = random_table(rng, n_shapes);
+        let nq = n_models + rng.index(60);
+        let queries = shaped_workload(rng, &table, nq, 0);
+        let gammas = random_gammas(rng, n_models);
+        let zeta = rng.range(0.0, 1.0);
+        let mode = if rng.chance(0.5) {
+            CapacityMode::Eq3Only
+        } else {
+            CapacityMode::GammaHard
+        };
+        let sketch = ShapeSketch::from_queries(&queries);
+        assert!(sketch.is_exact());
+        assert_eq!(sketch.n_queries(), queries.len() as u64);
+
+        for kind in [SolverKind::Bucketed, SolverKind::NetworkSimplex] {
+            let planner = Planner::new(&sets)
+                .gammas(&gammas)
+                .capacity(mode)
+                .zeta(zeta)
+                .solver(kind);
+            let materialized = planner.plan(&queries).unwrap();
+            let sketched = planner.plan_from_sketch(&sketch).unwrap();
+            assert_eq!(
+                sketched.to_json().to_string_pretty(),
+                materialized.to_json().to_string_pretty(),
+                "{kind:?} ({mode:?}, zeta={zeta}, |Q|={nq}): sketch-fed plan drifted"
+            );
+        }
+    });
+}
+
+#[test]
+fn sketch_rezeta_matches_fresh_sketch_sessions() {
+    // Warm ζ re-solves on a sketch-fed net-simplex session must package
+    // the same artifact bytes as a cold sketch session opened at that ζ.
+    use ecoserve::workload::ShapeSketch;
+
+    let mut rng = Rng::new(0x5EE7);
+    let sets = random_sets(&mut rng, 3);
+    let table = random_table(&mut rng, 6);
+    let queries = shaped_workload(&mut rng, &table, 80, 0);
+    let gammas = [0.3, 0.3, 0.4];
+    let sketch = ShapeSketch::from_queries(&queries);
+
+    let planner = Planner::new(&sets)
+        .gammas(&gammas)
+        .capacity(CapacityMode::Eq3Only)
+        .solver(SolverKind::NetworkSimplex);
+    let mut warm = planner.clone().zeta(0.0).from_sketch(&sketch).unwrap();
+    warm.solve_shapes().unwrap();
+    for i in 0..5 {
+        let zeta = i as f64 / 4.0;
+        warm.rezeta_shapes(zeta).unwrap();
+        let fresh = planner.clone().zeta(zeta).plan_from_sketch(&sketch).unwrap();
+        assert_eq!(
+            warm.plan().unwrap().to_json().to_string_pretty(),
+            fresh.to_json().to_string_pretty(),
+            "zeta={zeta}: warm sketch rezeta drifted from cold"
+        );
+    }
+
+    // And through the on-disk artifact path: the saved bytes of a
+    // sketch-fed plan equal the saved bytes of the materialized plan.
+    let dir = std::path::Path::new(env!("CARGO_TARGET_TMPDIR"));
+    let sketch_path = dir.join("sketch_fed.json");
+    let mat_path = dir.join("materialized.json");
+    let p = planner.clone().zeta(0.5);
+    p.plan_from_sketch(&sketch).unwrap().save(&sketch_path).unwrap();
+    p.plan(&queries).unwrap().save(&mat_path).unwrap();
+    let a = std::fs::read(&sketch_path).unwrap();
+    let b = std::fs::read(&mat_path).unwrap();
+    std::fs::remove_file(&sketch_path).ok();
+    std::fs::remove_file(&mat_path).ok();
+    assert_eq!(a, b, "saved artifacts must be byte-identical");
+}
+
+#[test]
+fn sketch_sessions_gate_the_query_level_api_and_vice_versa() {
+    // Sketch-fed sessions have no per-query identity, so the per-query
+    // API must refuse loudly (not panic, not silently mis-answer); and a
+    // query-backed session must refuse the shape-level entry points.
+    // Per-query-only backends cannot solve shape-level instances at all.
+    use ecoserve::workload::ShapeSketch;
+
+    let mut rng = Rng::new(0x51DE);
+    let sets = random_sets(&mut rng, 2);
+    let table = random_table(&mut rng, 4);
+    let queries = shaped_workload(&mut rng, &table, 30, 0);
+    let sketch = ShapeSketch::from_queries(&queries);
+    let planner = Planner::new(&sets).gammas(&[0.5, 0.5]).zeta(0.5);
+
+    let mut sketch_session = planner.from_sketch(&sketch).unwrap();
+    assert!(sketch_session.is_sketch_fed());
+    assert_eq!(sketch_session.n_queries(), queries.len());
+    assert!(sketch_session.solve().is_err(), "per-query solve must bail");
+    assert!(
+        sketch_session.extend(&queries[..1]).is_err(),
+        "per-query extend must bail"
+    );
+    sketch_session.solve_shapes().unwrap();
+    let plan = sketch_session.plan().unwrap();
+    assert_eq!(plan.n_queries, queries.len());
+
+    let mut query_session = planner.session(&queries).unwrap();
+    assert!(!query_session.is_sketch_fed());
+    assert!(
+        query_session.solve_shapes().is_err(),
+        "shape-level solve on a query-backed session must bail"
+    );
+
+    let mut greedy = planner
+        .clone()
+        .solver(SolverKind::Greedy)
+        .from_sketch(&sketch)
+        .unwrap();
+    let err = greedy.solve_shapes().unwrap_err().to_string();
+    assert!(
+        err.contains("shape-level"),
+        "greedy must explain it cannot solve sketch-fed instances: {err}"
+    );
+}
