@@ -552,6 +552,8 @@ fn main() {
             memoize: true,
         },
         arrival_label: format!("poisson:{rate:.3}"),
+        // PolicyKind::all() includes replan, which needs a control config.
+        control: Some(Default::default()),
     };
     let n_seeds = 3;
     let kinds = PolicyKind::all();

@@ -1,0 +1,313 @@
+//! Carbon-aware ζ governance and realized-carbon accounting on the
+//! simulated clock.
+//!
+//! Two cooperating pieces, deliberately split:
+//!
+//! * [`CarbonGovernor`] — the *decision* side. Owned by the replanning
+//!   policy, it maps simulated time onto the grid's carbon window and
+//!   steps the operational ζ through
+//!   [`ZetaController`](crate::scheduler::ZetaController) once per window
+//!   (plus a bounded bias from the
+//!   [`PatternLearner`](super::PatternLearner)'s load forecast). Every ζ
+//!   step is recorded into a trajectory that lands in the metrics
+//!   artifact.
+//! * [`CarbonMeter`] — the *accounting* side. Owned by the simulator
+//!   itself, so realized grams-CO₂ are attributed identically for every
+//!   policy under comparison: each completed query's predicted energy is
+//!   converted at the grid intensity interpolated at its completion
+//!   instant, and folded into per-window totals ([`CarbonWindow`]).
+//!
+//! Both sides read the same [`CarbonConfig`]: a diurnal
+//! [`GridSignal`](crate::scheduler::GridSignal) compressed onto the
+//! simulation via `day_s` (how many simulated seconds one signal day
+//! spans — smoke tests use short days so a few simulated seconds sweep
+//! the whole diurnal curve).
+
+use crate::scheduler::{GridSignal, ZetaController};
+
+/// Shared configuration of the carbon control loop.
+#[derive(Debug, Clone)]
+pub struct CarbonConfig {
+    /// diurnal carbon-intensity curve (gCO₂/kWh), wrapping
+    pub signal: GridSignal,
+    /// ζ at the cleanest observed signal
+    pub zeta_min: f64,
+    /// ζ at the dirtiest observed signal
+    pub zeta_max: f64,
+    /// simulated seconds spanned by one signal day (one carbon window =
+    /// `day_s / signal.hourly.len()` seconds)
+    pub day_s: f64,
+}
+
+impl CarbonConfig {
+    /// The stylized diurnal curve over a literal 24-hour day.
+    pub fn typical(zeta_min: f64, zeta_max: f64) -> CarbonConfig {
+        CarbonConfig {
+            signal: GridSignal::typical_day(),
+            zeta_min,
+            zeta_max,
+            day_s: 86_400.0,
+        }
+    }
+
+    /// Simulated seconds per carbon window (one signal entry).
+    pub fn window_s(&self) -> f64 {
+        self.day_s / self.signal.hourly.len() as f64
+    }
+
+    /// Simulated nanoseconds → signal hours (fractional; the signal wraps).
+    pub fn t_hours(&self, t_ns: u64) -> f64 {
+        (t_ns as f64 / 1e9) / self.window_s()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.signal.hourly.is_empty(),
+            "carbon signal needs at least one window"
+        );
+        anyhow::ensure!(
+            self.day_s.is_finite() && self.day_s > 0.0,
+            "carbon day length must be positive, got {}",
+            self.day_s
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.zeta_min)
+                && (0.0..=1.0).contains(&self.zeta_max)
+                && self.zeta_min <= self.zeta_max,
+            "carbon zeta band [{}, {}] must satisfy 0 <= min <= max <= 1",
+            self.zeta_min,
+            self.zeta_max
+        );
+        Ok(())
+    }
+}
+
+/// Steps ζ once per carbon window from simulated time. The simulator's
+/// event loop drives this through the policy hook on its `Timeout` /
+/// `Complete` arms (and on arrivals), so ζ moves exactly when virtual
+/// time crosses a window boundary — never from wall-clock reads.
+#[derive(Debug, Clone)]
+pub struct CarbonGovernor {
+    ctl: ZetaController,
+    window_s: f64,
+    last_window: u64,
+    zeta: f64,
+    /// (virtual seconds, ζ) at every step, starting at t = 0
+    trajectory: Vec<(f64, f64)>,
+}
+
+impl CarbonGovernor {
+    pub fn new(cfg: &CarbonConfig) -> CarbonGovernor {
+        let ctl = ZetaController::new(cfg.signal.clone(), cfg.zeta_min, cfg.zeta_max);
+        let zeta = ctl.zeta_at(0.0);
+        CarbonGovernor {
+            ctl,
+            window_s: cfg.window_s(),
+            last_window: 0,
+            zeta,
+            trajectory: vec![(0.0, zeta)],
+        }
+    }
+
+    /// Current operational ζ.
+    pub fn zeta(&self) -> f64 {
+        self.zeta
+    }
+
+    /// Width of the ζ band (the learner's bias is expressed against it).
+    pub fn span(&self) -> f64 {
+        self.ctl.zeta_max - self.ctl.zeta_min
+    }
+
+    /// Every (t_s, ζ) step taken so far, starting with the initial point.
+    pub fn trajectory(&self) -> &[(f64, f64)] {
+        &self.trajectory
+    }
+
+    /// Advance to the carbon window containing `t_ns`. Returns the new ζ
+    /// when a window boundary was crossed *and* ζ actually moved; `bias`
+    /// is an absolute ζ offset (the pattern learner's pre-positioning),
+    /// clamped back into the configured band.
+    pub fn step(&mut self, t_ns: u64, bias: f64) -> Option<f64> {
+        let w = ((t_ns as f64 / 1e9) / self.window_s).floor() as u64;
+        if w == self.last_window {
+            return None;
+        }
+        self.last_window = w;
+        let base = self.ctl.zeta_at(w as f64);
+        let z = (base + bias).clamp(self.ctl.zeta_min, self.ctl.zeta_max);
+        if (z - self.zeta).abs() <= 1e-12 {
+            return None;
+        }
+        self.zeta = z;
+        self.trajectory.push((w as f64 * self.window_s, z));
+        Some(z)
+    }
+}
+
+/// Realized carbon of one accounting window (one signal entry's span).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CarbonWindow {
+    /// window ordinal from simulation start (does not wrap with the day)
+    pub index: u64,
+    /// window start, virtual seconds
+    pub start_s: f64,
+    /// signal value at the window's knot (gCO₂/kWh)
+    pub intensity: f64,
+    /// predicted energy completed inside the window (J)
+    pub energy_j: f64,
+    /// realized grams CO₂ (each completion converted at the interpolated
+    /// signal of its exact completion instant)
+    pub carbon_g: f64,
+}
+
+/// The carbon block of the metrics artifact: per-window accounting plus
+/// the run total.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CarbonReport {
+    pub day_s: f64,
+    pub total_g: f64,
+    pub windows: Vec<CarbonWindow>,
+}
+
+/// Streams completions into per-window realized-carbon totals. Owned by
+/// the simulator (not the policy), so every compared policy is accounted
+/// under the identical signal and time mapping.
+#[derive(Debug, Clone)]
+pub struct CarbonMeter {
+    signal: GridSignal,
+    window_s: f64,
+    day_s: f64,
+    windows: Vec<CarbonWindow>,
+    total_g: f64,
+}
+
+impl CarbonMeter {
+    pub fn new(cfg: &CarbonConfig) -> CarbonMeter {
+        CarbonMeter {
+            signal: cfg.signal.clone(),
+            window_s: cfg.window_s(),
+            day_s: cfg.day_s,
+            windows: Vec::new(),
+            total_g: 0.0,
+        }
+    }
+
+    /// Account one completion: `energy_j` joules drawn at virtual time
+    /// `t_ns`. Completions arrive in event order (non-decreasing time),
+    /// so windows are appended monotonically.
+    pub fn record(&mut self, t_ns: u64, energy_j: f64) {
+        let t_hours = (t_ns as f64 / 1e9) / self.window_s;
+        let g = energy_j / 3.6e6 * self.signal.at(t_hours);
+        let index = t_hours.floor() as u64;
+        let needs_new = self.windows.last().map(|w| w.index != index).unwrap_or(true);
+        if needs_new {
+            debug_assert!(
+                self.windows.last().map(|w| w.index < index).unwrap_or(true),
+                "completions must arrive in time order"
+            );
+            self.windows.push(CarbonWindow {
+                index,
+                start_s: index as f64 * self.window_s,
+                intensity: self.signal.at(index as f64),
+                energy_j: 0.0,
+                carbon_g: 0.0,
+            });
+        }
+        let w = self.windows.last_mut().unwrap();
+        w.energy_j += energy_j;
+        w.carbon_g += g;
+        self.total_g += g;
+    }
+
+    pub fn report(self) -> CarbonReport {
+        CarbonReport {
+            day_s: self.day_s,
+            total_g: self.total_g,
+            windows: self.windows,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(day_s: f64) -> CarbonConfig {
+        CarbonConfig {
+            signal: GridSignal::typical_day(),
+            zeta_min: 0.2,
+            zeta_max: 0.8,
+            day_s,
+        }
+    }
+
+    #[test]
+    fn governor_steps_only_on_window_boundaries() {
+        // 24-second day: one window per simulated second.
+        let mut g = CarbonGovernor::new(&cfg(24.0));
+        let z0 = g.zeta();
+        assert!((z0 - 0.2 - (210.0 - 190.0) / (460.0 - 190.0) * 0.6).abs() < 1e-12);
+        // Inside window 0: no step.
+        assert_eq!(g.step(500_000_000, 0.0), None);
+        assert_eq!(g.trajectory().len(), 1);
+        // Crossing into window 1 (signal 210 → 200) moves ζ down.
+        let z1 = g.step(1_000_000_000, 0.0).unwrap();
+        assert!(z1 < z0);
+        assert_eq!(g.trajectory().len(), 2);
+        assert_eq!(g.trajectory()[1].0, 1.0);
+        // Re-ticking the same window is idempotent.
+        assert_eq!(g.step(1_400_000_000, 0.0), None);
+    }
+
+    #[test]
+    fn governor_bias_is_clamped_to_the_band() {
+        let mut g = CarbonGovernor::new(&cfg(24.0));
+        let z = g.step(19_000_000_000, 10.0).unwrap(); // window 19 = peak
+        assert_eq!(z, 0.8);
+        let z = g.step(3_000_000_000, -10.0).unwrap(); // window 3 = trough
+        assert_eq!(z, 0.2);
+    }
+
+    #[test]
+    fn meter_accounts_per_window_and_totals() {
+        let mut m = CarbonMeter::new(&cfg(24.0));
+        // 1 kWh at t = 0 (signal 210) → 210 g in window 0.
+        m.record(0, 3.6e6);
+        // 0.5 kWh at t = 2.5 s (signal halfway 195 → 190 = 192.5).
+        m.record(2_500_000_000, 1.8e6);
+        let r = m.report();
+        assert_eq!(r.windows.len(), 2);
+        assert_eq!(r.windows[0].index, 0);
+        assert!((r.windows[0].carbon_g - 210.0).abs() < 1e-9);
+        assert_eq!(r.windows[1].index, 2);
+        assert!((r.windows[1].intensity - 195.0).abs() < 1e-9);
+        assert!((r.windows[1].carbon_g - 0.5 * 192.5).abs() < 1e-9);
+        assert!((r.total_g - (210.0 + 0.5 * 192.5)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn meter_windows_do_not_wrap_with_the_day() {
+        let mut m = CarbonMeter::new(&cfg(24.0));
+        // t = 25 s on a 24-second day: window 25, intensity wraps to hour 1.
+        m.record(25_000_000_000, 3.6e6);
+        let r = m.report();
+        assert_eq!(r.windows[0].index, 25);
+        assert!((r.windows[0].intensity - 200.0).abs() < 1e-9);
+        assert_eq!(r.windows[0].start_s, 25.0);
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_bands_and_days() {
+        assert!(cfg(24.0).validate().is_ok());
+        assert!(cfg(0.0).validate().is_err());
+        assert!(cfg(f64::NAN).validate().is_err());
+        let mut bad = cfg(24.0);
+        bad.zeta_min = 0.9;
+        bad.zeta_max = 0.1;
+        assert!(bad.validate().is_err());
+        let mut empty = cfg(24.0);
+        empty.signal.hourly.clear();
+        assert!(empty.validate().is_err());
+    }
+}

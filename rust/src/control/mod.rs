@@ -1,0 +1,32 @@
+//! `ecoserve::control` — the online control plane: closed-loop
+//! replanning and carbon-aware ζ scheduling *inside* the simulated clock.
+//!
+//! The paper's framework is offline — solve once, serve the plan (Eq. 2
+//! over Eq. 3's capacity constraints). This module closes the loop the
+//! paper's §7 outlook sketches: the same workload-based energy models
+//! drive *online* decisions, deterministically, on the discrete-event
+//! simulator's virtual time. Three coordinated pieces:
+//!
+//! * [`ReplanPolicy`] — routes from a live
+//!   [`PlanSession`](crate::plan::PlanSession), re-solving via
+//!   warm-started `extend` every N arrivals or early when SLO pressure
+//!   (streaming queue-wait p95) crosses a threshold; between solves,
+//!   queries follow the solved shape→model proportions with a
+//!   largest-deficit rule.
+//! * [`CarbonGovernor`] / [`CarbonMeter`] — step ζ per grid-carbon window
+//!   from simulated time (warm `rezeta_shapes` repricing) and account
+//!   realized grams-CO₂ per window into the metrics artifact.
+//! * [`PatternLearner`] — an EWMA arrival-regime detector
+//!   (burst/trough/steady) that pre-positions ζ ahead of predicted load
+//!   rather than reacting to it.
+//!
+//! Everything here is deterministic: same (seed, arrival process, config)
+//! ⇒ byte-identical metrics artifacts, CI-gated like the rest of `sim`.
+
+pub mod governor;
+pub mod pattern;
+pub mod replan;
+
+pub use governor::{CarbonConfig, CarbonGovernor, CarbonMeter, CarbonReport, CarbonWindow};
+pub use pattern::{PatternLearner, Regime};
+pub use replan::{ControlConfig, ReplanPolicy, ReplanStats};

@@ -1,0 +1,212 @@
+//! Online arrival-regime detection: EWMA rate tracking over fixed
+//! virtual-time windows, classified into coarse regimes so the
+//! [`CarbonGovernor`](super::CarbonGovernor) can *pre-position* ζ ahead
+//! of predicted load instead of reacting after queues build.
+//!
+//! The learner is deliberately tiny and deterministic: two exponential
+//! moving averages of the per-window arrival rate — a fast one (recent
+//! load) and a slow one (diurnal baseline) — whose ratio is the "load
+//! pressure". Pressure well above 1 means a burst is forming (the fast
+//! average has outrun the baseline); well below 1 means a trough. The
+//! classification feeds a bounded ζ bias: bursts push ζ up (shed energy
+//! before queues grow), troughs let ζ relax toward the carbon-optimal
+//! setting.
+
+/// Coarse arrival regime over the most recent windows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Regime {
+    /// not enough windows folded to classify
+    Warmup,
+    /// fast and slow rates agree
+    Steady,
+    /// recent rate well above the baseline
+    Burst,
+    /// recent rate well below the baseline
+    Trough,
+}
+
+/// EWMA smoothing of the fast (recent) rate estimate.
+const ALPHA_FAST: f64 = 0.5;
+/// EWMA smoothing of the slow (baseline) rate estimate.
+const ALPHA_SLOW: f64 = 0.1;
+/// Pressure above this → [`Regime::Burst`].
+const BURST_PRESSURE: f64 = 1.5;
+/// Pressure below this → [`Regime::Trough`].
+const TROUGH_PRESSURE: f64 = 1.0 / BURST_PRESSURE;
+/// Windows folded before the learner leaves [`Regime::Warmup`].
+const WARMUP_WINDOWS: u64 = 3;
+
+/// Streaming arrival-pattern detector on the simulated clock.
+#[derive(Debug, Clone)]
+pub struct PatternLearner {
+    window_s: f64,
+    cur_window: u64,
+    cur_count: u64,
+    ewma_fast: f64,
+    ewma_slow: f64,
+    n_windows: u64,
+    regime: Regime,
+}
+
+impl PatternLearner {
+    /// `window_s`: the fixed classification window in virtual seconds
+    /// (the replan policy aligns it with the carbon window when carbon
+    /// control is on).
+    pub fn new(window_s: f64) -> PatternLearner {
+        assert!(
+            window_s.is_finite() && window_s > 0.0,
+            "learner window must be positive"
+        );
+        PatternLearner {
+            window_s,
+            cur_window: 0,
+            cur_count: 0,
+            ewma_fast: 0.0,
+            ewma_slow: 0.0,
+            n_windows: 0,
+            regime: Regime::Warmup,
+        }
+    }
+
+    /// Count one arrival at virtual time `t_ns` (folds any completed
+    /// windows first).
+    pub fn observe(&mut self, t_ns: u64) {
+        self.advance(t_ns);
+        self.cur_count += 1;
+    }
+
+    /// Advance the window clock to `t_ns` without counting an arrival
+    /// (driven from timeout/completion ticks so idle windows still fold).
+    pub fn advance(&mut self, t_ns: u64) {
+        let w = ((t_ns as f64 / 1e9) / self.window_s).floor() as u64;
+        while self.cur_window < w {
+            self.fold();
+            self.cur_window += 1;
+            self.cur_count = 0;
+        }
+    }
+
+    fn fold(&mut self) {
+        let rate = self.cur_count as f64 / self.window_s;
+        if self.n_windows == 0 {
+            self.ewma_fast = rate;
+            self.ewma_slow = rate;
+        } else {
+            self.ewma_fast = ALPHA_FAST * rate + (1.0 - ALPHA_FAST) * self.ewma_fast;
+            self.ewma_slow = ALPHA_SLOW * rate + (1.0 - ALPHA_SLOW) * self.ewma_slow;
+        }
+        self.n_windows += 1;
+        self.regime = if self.n_windows < WARMUP_WINDOWS {
+            Regime::Warmup
+        } else {
+            let p = self.pressure();
+            if p > BURST_PRESSURE {
+                Regime::Burst
+            } else if p < TROUGH_PRESSURE {
+                Regime::Trough
+            } else {
+                Regime::Steady
+            }
+        };
+    }
+
+    /// Fast-over-slow rate ratio (1 = recent load matches the baseline).
+    pub fn pressure(&self) -> f64 {
+        self.ewma_fast / self.ewma_slow.max(1e-12)
+    }
+
+    /// Current regime classification.
+    pub fn regime(&self) -> Regime {
+        self.regime
+    }
+
+    /// Recent arrival-rate estimate (queries per virtual second).
+    pub fn rate_estimate(&self) -> f64 {
+        self.ewma_fast
+    }
+
+    /// ζ pre-positioning bias for a governor band of width `span`:
+    /// bursts push ζ a quarter-band up (shed energy ahead of the load),
+    /// troughs a quarter-band down (spend the slack on accuracy).
+    pub fn zeta_bias(&self, span: f64) -> f64 {
+        match self.regime {
+            Regime::Burst => 0.25 * span,
+            Regime::Trough => -0.25 * span,
+            Regime::Warmup | Regime::Steady => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ns(s: f64) -> u64 {
+        (s * 1e9).round() as u64
+    }
+
+    /// Feed `count` arrivals spread over each of `windows` seconds.
+    fn feed(l: &mut PatternLearner, start_s: f64, windows: usize, count: usize) -> f64 {
+        let mut t = start_s;
+        for w in 0..windows {
+            for i in 0..count {
+                l.observe(ns(start_s + w as f64 + i as f64 / count as f64));
+            }
+            t = start_s + (w + 1) as f64;
+        }
+        t
+    }
+
+    #[test]
+    fn warmup_then_steady_on_constant_rate() {
+        let mut l = PatternLearner::new(1.0);
+        assert_eq!(l.regime(), Regime::Warmup);
+        let t = feed(&mut l, 0.0, 6, 10);
+        l.advance(ns(t + 0.5)); // fold the last full window
+        assert_eq!(l.regime(), Regime::Steady);
+        assert!((l.rate_estimate() - 10.0).abs() < 1.0);
+        assert!((l.pressure() - 1.0).abs() < 0.05);
+        assert_eq!(l.zeta_bias(0.4), 0.0);
+    }
+
+    #[test]
+    fn burst_detection_and_bias() {
+        let mut l = PatternLearner::new(1.0);
+        let t = feed(&mut l, 0.0, 6, 5); // baseline 5/s
+        let t = feed(&mut l, t, 3, 40); // burst 40/s
+        l.advance(ns(t + 0.5));
+        assert_eq!(l.regime(), Regime::Burst);
+        assert!(l.pressure() > BURST_PRESSURE);
+        assert!((l.zeta_bias(0.4) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trough_detection_via_idle_windows() {
+        let mut l = PatternLearner::new(1.0);
+        let t = feed(&mut l, 0.0, 6, 20);
+        // Idle gap: advancing the clock folds empty windows.
+        l.advance(ns(t + 4.5));
+        assert_eq!(l.regime(), Regime::Trough);
+        assert!(l.pressure() < TROUGH_PRESSURE);
+        assert!((l.zeta_bias(0.4) + 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_under_replay() {
+        let times: Vec<u64> = (0..200).map(|i| ns(0.03 * i as f64)).collect();
+        let run = || {
+            let mut l = PatternLearner::new(1.0);
+            for &t in &times {
+                l.observe(t);
+            }
+            (l.regime(), l.pressure(), l.rate_estimate())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_window_is_rejected() {
+        PatternLearner::new(0.0);
+    }
+}

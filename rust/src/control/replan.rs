@@ -1,0 +1,434 @@
+//! Closed-loop replanning: a serving policy that routes from a *live*
+//! [`PlanSession`] instead of a frozen plan artifact.
+//!
+//! The loop is MPC-shaped: arrivals accumulate into a pending batch; every
+//! `replan_every` arrivals — or early, when the SLO-pressure trigger fires
+//! (streaming queue-wait p95 since the last replan crossing a threshold) —
+//! the batch is folded into the session via warm-started
+//! [`extend`](PlanSession::extend), and the refreshed shape-level flows
+//! become routing *proportions*. Between solves, queries follow those
+//! proportions with a largest-deficit rule (the online analogue of
+//! consuming plan budget, but self-renewing), and shapes the session has
+//! never solved fall back to the ζ-cost [`Router`].
+//!
+//! When a [`CarbonConfig`](super::CarbonConfig) is attached, a
+//! [`CarbonGovernor`](super::CarbonGovernor) steps the operational ζ per
+//! carbon window — warm shape-level repricing via
+//! [`rezeta_shapes`](PlanSession::rezeta_shapes) — and the
+//! [`PatternLearner`](super::PatternLearner) pre-positions ζ ahead of the
+//! load it forecasts.
+
+use super::governor::{CarbonConfig, CarbonGovernor};
+use super::pattern::PatternLearner;
+use crate::coordinator::{Policy, Router};
+use crate::models::{ModelSet, Normalizer};
+use crate::plan::{PlanSession, Planner, SolverKind};
+use crate::stats::LogHistogram;
+use crate::workload::Query;
+
+/// Minimum queue-wait samples before the SLO trigger may fire.
+const SLO_MIN_SAMPLES: u64 = 8;
+/// Learner window when no carbon config supplies one (virtual seconds).
+const DEFAULT_LEARN_WINDOW_S: f64 = 1.0;
+
+/// Configuration of the online control plane (`--policy replan`).
+#[derive(Debug, Clone)]
+pub struct ControlConfig {
+    /// re-solve after this many arrivals accumulate (≥ 1)
+    pub replan_every: usize,
+    /// early replan when the queue-wait p95 since the last replan crosses
+    /// this threshold (virtual seconds)
+    pub slo_trigger_s: Option<f64>,
+    /// carbon-aware ζ governance; `None` = static ζ
+    pub carbon: Option<CarbonConfig>,
+}
+
+impl Default for ControlConfig {
+    fn default() -> ControlConfig {
+        ControlConfig {
+            replan_every: 64,
+            slo_trigger_s: None,
+            carbon: None,
+        }
+    }
+}
+
+impl ControlConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.replan_every >= 1, "--replan-every must be >= 1");
+        if let Some(s) = self.slo_trigger_s {
+            anyhow::ensure!(
+                s.is_finite() && s > 0.0,
+                "--slo-trigger-ms must be positive, got {} s",
+                s
+            );
+        }
+        if let Some(c) = &self.carbon {
+            c.validate()?;
+        }
+        Ok(())
+    }
+}
+
+/// Control-plane counters reported into the metrics artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ReplanStats {
+    /// solver invocations triggered by the arrival cadence or SLO pressure
+    pub replans: u64,
+    /// subset of `replans` forced by the SLO-pressure trigger
+    pub slo_replans: u64,
+    /// queries routed by the deficit rule over solved proportions
+    pub planned_routed: u64,
+    /// queries routed by the ζ-cost fallback (shape not yet solved)
+    pub fallback_routed: u64,
+}
+
+/// The closed-loop policy. Deterministic: no randomness, no wall-clock —
+/// every decision is a function of (arrival sequence, virtual time, seed).
+pub struct ReplanPolicy {
+    replan_every: usize,
+    slo_trigger_s: Option<f64>,
+
+    session: PlanSession,
+    router: Router,
+    governor: Option<CarbonGovernor>,
+    learner: PatternLearner,
+    /// operational ζ (tracks the governor when carbon control is on)
+    zeta: f64,
+
+    pending: Vec<Query>,
+    /// per-shape routing proportions from the last solve (rows align with
+    /// the session's shape slots)
+    targets: Vec<Vec<f64>>,
+    /// queries actually routed per (shape, model) since the run started
+    served: Vec<Vec<u64>>,
+    total_served: Vec<u64>,
+
+    /// queue waits observed since the last replan (SLO-pressure estimate)
+    queue_hist: LogHistogram,
+    stats: ReplanStats,
+    n_models: usize,
+}
+
+impl ReplanPolicy {
+    pub fn new(
+        sets: &[ModelSet],
+        norm: Normalizer,
+        zeta: f64,
+        seed: u64,
+        cfg: &ControlConfig,
+    ) -> anyhow::Result<ReplanPolicy> {
+        cfg.validate()?;
+        let governor = cfg.carbon.as_ref().map(CarbonGovernor::new);
+        let zeta0 = governor.as_ref().map(|g| g.zeta()).unwrap_or(zeta);
+        let session = Planner::new(sets)
+            .zeta(zeta0)
+            .solver(SolverKind::Bucketed)
+            .seed(seed)
+            .session(&[])?;
+        let router = Router::new(sets.to_vec(), norm, zeta0, Policy::ZetaCost);
+        let window_s = cfg
+            .carbon
+            .as_ref()
+            .map(|c| c.window_s())
+            .unwrap_or(DEFAULT_LEARN_WINDOW_S);
+        Ok(ReplanPolicy {
+            replan_every: cfg.replan_every,
+            slo_trigger_s: cfg.slo_trigger_s,
+            session,
+            router,
+            governor,
+            learner: PatternLearner::new(window_s),
+            zeta: zeta0,
+            pending: Vec::new(),
+            targets: Vec::new(),
+            served: Vec::new(),
+            total_served: Vec::new(),
+            queue_hist: LogHistogram::new(),
+            stats: ReplanStats::default(),
+            n_models: sets.len(),
+        })
+    }
+
+    /// Current operational ζ.
+    pub fn zeta(&self) -> f64 {
+        self.zeta
+    }
+
+    pub fn stats(&self) -> ReplanStats {
+        self.stats
+    }
+
+    /// The governor's (t_s, ζ) trajectory, when carbon control is on.
+    pub fn zeta_trajectory(&self) -> Option<Vec<(f64, f64)>> {
+        self.governor.as_ref().map(|g| g.trajectory().to_vec())
+    }
+
+    /// Clock tick from the simulator's event loop (`Timeout`/`Complete`
+    /// arms): folds learner windows and steps the carbon governor. A ζ
+    /// step reprices the live session at shape level (warm) and refreshes
+    /// the routing proportions.
+    pub fn tick(&mut self, t_ns: u64) -> anyhow::Result<()> {
+        self.learner.advance(t_ns);
+        let Some(g) = self.governor.as_mut() else {
+            return Ok(());
+        };
+        let bias = self.learner.zeta_bias(g.span());
+        if let Some(z) = g.step(t_ns, bias) {
+            self.zeta = z;
+            self.router.zeta = z;
+            if self.session.n_queries() > 0 {
+                self.session
+                    .rezeta_shapes(z)
+                    .map_err(|e| e.context("replan: shape-level ζ reprice failed"))?;
+                self.refresh_targets();
+            } else {
+                self.session.set_zeta(z);
+            }
+        }
+        Ok(())
+    }
+
+    /// Completion hook: feed the realized queue wait into the SLO-pressure
+    /// estimate.
+    pub fn on_complete(&mut self, queue_s: f64) {
+        self.queue_hist.record(queue_s);
+    }
+
+    /// Route one arrival at virtual time `t_ns`.
+    pub fn route_at(&mut self, t_ns: u64, q: &Query) -> anyhow::Result<usize> {
+        self.tick(t_ns)?;
+        self.learner.observe(t_ns);
+        self.pending.push(*q);
+        let slo = self.slo_pressure();
+        if self.pending.len() >= self.replan_every || slo {
+            self.replan(slo)
+                .map_err(|e| e.context("replan: extend over arrival batch failed"))?;
+        }
+        Ok(self.route_query(q))
+    }
+
+    fn slo_pressure(&self) -> bool {
+        match self.slo_trigger_s {
+            Some(thr) => {
+                self.queue_hist.n() >= SLO_MIN_SAMPLES && self.queue_hist.quantile(0.95) > thr
+            }
+            None => false,
+        }
+    }
+
+    fn replan(&mut self, slo: bool) -> anyhow::Result<()> {
+        let batch = std::mem::take(&mut self.pending);
+        self.session.set_zeta(self.zeta);
+        self.session.extend(&batch)?;
+        self.refresh_targets();
+        self.queue_hist = LogHistogram::new();
+        self.stats.replans += 1;
+        if slo {
+            self.stats.slo_replans += 1;
+        }
+        Ok(())
+    }
+
+    /// Rebuild routing proportions from the session's current optimum.
+    /// Shape slots are stable across extends, so served counts carry over;
+    /// new shapes append zeroed rows.
+    fn refresh_targets(&mut self) {
+        let flows = self
+            .session
+            .current_flows()
+            .expect("refresh_targets: session has a solution");
+        let mult = &self.session.groups().multiplicity;
+        self.targets = flows
+            .iter()
+            .zip(mult)
+            .map(|(row, &m)| {
+                let m = (m as f64).max(1.0);
+                row.iter().map(|&f| f as f64 / m).collect()
+            })
+            .collect();
+        self.served.resize(self.targets.len(), vec![0; self.n_models]);
+        self.total_served.resize(self.targets.len(), 0);
+    }
+
+    /// Largest-deficit routing over the solved proportions: send the query
+    /// where the realized mix lags the target mix the most. Ties break to
+    /// the lowest model index; models with zero target proportion have
+    /// non-positive deficit and only win if every proportion is zero
+    /// (impossible: rows sum to 1).
+    fn route_query(&mut self, q: &Query) -> usize {
+        if let Some(si) = self.session.shape_slot(q.shape().key()) {
+            if si < self.targets.len() {
+                let tot = (self.total_served[si] + 1) as f64;
+                let mut best = 0usize;
+                let mut best_d = f64::NEG_INFINITY;
+                for (k, &p) in self.targets[si].iter().enumerate() {
+                    let d = p * tot - self.served[si][k] as f64;
+                    if d > best_d {
+                        best_d = d;
+                        best = k;
+                    }
+                }
+                self.served[si][best] += 1;
+                self.total_served[si] += 1;
+                self.stats.planned_routed += 1;
+                return best;
+            }
+        }
+        self.stats.fallback_routed += 1;
+        self.router.route(q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::workload::Query;
+
+    fn ns(s: f64) -> u64 {
+        (s * 1e9).round() as u64
+    }
+
+    fn setup(cfg: &ControlConfig) -> ReplanPolicy {
+        let sets = testkit::synthetic_trio();
+        let norm = Normalizer::from_workload(&sets, &queries(64));
+        ReplanPolicy::new(&sets, norm, 0.5, 7, cfg).unwrap()
+    }
+
+    fn queries(n: usize) -> Vec<Query> {
+        (0..n)
+            .map(|i| Query {
+                id: i as u32,
+                t_in: 20 + (i % 5) as u32 * 10,
+                t_out: 40 + (i % 3) as u32 * 25,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn replans_on_the_arrival_cadence() {
+        let mut p = setup(&ControlConfig {
+            replan_every: 16,
+            ..ControlConfig::default()
+        });
+        for (i, q) in queries(48).iter().enumerate() {
+            p.route_at(ns(0.01 * i as f64), q).unwrap();
+        }
+        assert_eq!(p.stats().replans, 3);
+        assert_eq!(p.stats().slo_replans, 0);
+        // Arrivals 1–15 precede the first solve (fallback); from the first
+        // replan on, every known shape routes by deficit.
+        assert!(p.stats().fallback_routed >= 15);
+        assert!(p.stats().planned_routed >= 32);
+    }
+
+    #[test]
+    fn deficit_routing_tracks_the_solved_proportions() {
+        let mut p = setup(&ControlConfig {
+            replan_every: 8,
+            ..ControlConfig::default()
+        });
+        let qs = queries(200);
+        for (i, q) in qs.iter().enumerate() {
+            p.route_at(ns(0.01 * i as f64), q).unwrap();
+        }
+        // The realized per-shape mix must match the final proportions to
+        // within one query per model (deficit rounding).
+        for (si, row) in p.targets.iter().enumerate() {
+            let tot = p.total_served[si] as f64;
+            if tot == 0.0 {
+                continue;
+            }
+            for (k, &prop) in row.iter().enumerate() {
+                let realized = p.served[si][k] as f64;
+                assert!(
+                    (realized - prop * tot).abs() <= 1.0 + 1e-9,
+                    "shape {si} model {k}: realized {realized} vs target {}",
+                    prop * tot
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn slo_trigger_forces_early_replans() {
+        let mut p = setup(&ControlConfig {
+            replan_every: 1_000_000, // cadence never fires
+            slo_trigger_s: Some(0.05),
+            ..ControlConfig::default()
+        });
+        let qs = queries(40);
+        for (i, q) in qs.iter().enumerate() {
+            // Report queue waits well over the 50 ms trigger.
+            p.on_complete(0.5);
+            p.route_at(ns(0.01 * i as f64), q).unwrap();
+        }
+        assert!(p.stats().replans >= 1);
+        assert_eq!(p.stats().replans, p.stats().slo_replans);
+    }
+
+    #[test]
+    fn governor_steps_zeta_and_records_a_trajectory() {
+        let mut p = setup(&ControlConfig {
+            replan_every: 8,
+            carbon: Some(CarbonConfig {
+                day_s: 24.0, // one carbon window per simulated second
+                ..CarbonConfig::typical(0.1, 0.9)
+            }),
+            ..ControlConfig::default()
+        });
+        let qs = queries(120);
+        for (i, q) in qs.iter().enumerate() {
+            p.route_at(ns(0.05 * i as f64), q).unwrap(); // spans ~6 windows
+        }
+        let traj = p.zeta_trajectory().unwrap();
+        assert!(traj.len() >= 2, "expected ζ to move, got {traj:?}");
+        assert!(traj.windows(2).all(|w| w[0].0 < w[1].0));
+        for &(_, z) in &traj {
+            assert!((0.1..=0.9).contains(&z));
+        }
+        // Session ζ follows the governor.
+        assert!((p.session.zeta() - p.zeta()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn determinism_under_replay() {
+        let run = || {
+            let mut p = setup(&ControlConfig {
+                replan_every: 8,
+                slo_trigger_s: Some(0.05),
+                carbon: Some(CarbonConfig {
+                    day_s: 24.0,
+                    ..CarbonConfig::typical(0.2, 0.8)
+                }),
+            });
+            let mut routes = Vec::new();
+            for (i, q) in queries(100).iter().enumerate() {
+                if i % 3 == 0 {
+                    p.on_complete(0.02 * (i % 7) as f64 + 1e-4);
+                }
+                routes.push(p.route_at(ns(0.02 * i as f64), q).unwrap());
+            }
+            (routes, p.stats(), p.zeta_trajectory())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(ControlConfig::default().validate().is_ok());
+        assert!(ControlConfig {
+            replan_every: 0,
+            ..ControlConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(ControlConfig {
+            slo_trigger_s: Some(0.0),
+            ..ControlConfig::default()
+        }
+        .validate()
+        .is_err());
+    }
+}

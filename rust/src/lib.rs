@@ -25,6 +25,7 @@
 
 pub mod characterize;
 pub mod config;
+pub mod control;
 pub mod coordinator;
 pub mod hardware;
 pub mod models;

@@ -19,6 +19,7 @@ use ecoserve::characterize::{self, Campaign};
 use ecoserve::config::{
     llama_family, lookup, swing_node, ExperimentConfig, LlmSpec, Partition,
 };
+use ecoserve::control::{CarbonConfig, ControlConfig};
 use ecoserve::coordinator::{Policy, Request, Router, ServeConfig};
 use ecoserve::hardware::Node;
 use ecoserve::models::Normalizer;
@@ -94,7 +95,7 @@ COMMANDS
   fit                       Table 3: OLS fits of e_K and r_K per model
   sweep-zeta                Fig. 3: ζ sweep vs baselines
                             [--points N] [--queries N] [--gamma-caps]
-                            [--solver KIND]
+                            [--solver KIND] [--sketch]
   plan                      solve offline and save a Plan artifact
                             [--zeta X] [--queries N] [--gamma-caps]
                             [--solver bucketed|net-simplex|dense|greedy|
@@ -113,12 +114,15 @@ COMMANDS
                             [--artifacts DIR] [--requests N] [--zeta X]
                             [--plan FILE]
   simulate                  deterministic discrete-event serving simulation
-                            [--policy plan|greedy|round-robin|random|compare]
+                            [--policy plan|replan|greedy|round-robin|random|
+                             compare]
                             [--plan FILE] [--arrival poisson:R|gamma:R:CV2|
                              trace] [--trace FILE] [--queries N] [--zeta X]
                             [--duration S] [--max-batch N] [--max-wait-ms MS]
                             [--slo-ms MS] [--seeds N] [--per-query]
-                            [--out metrics.json]
+                            [--replan-every N] [--slo-trigger-ms MS]
+                            [--carbon] [--carbon-band MIN:MAX]
+                            [--carbon-day-s S] [--out metrics.json]
   repro-all                 regenerate every table and figure [--out DIR]
 
 GLOBAL  --seed N   --quiet   --verbose
@@ -222,15 +226,32 @@ fn cmd_sweep_zeta(args: &Args) -> anyhow::Result<()> {
     let fitted = characterize::quick_fit(&family, seed)?;
     let mut rng = Rng::new(seed ^ 0xF16_3);
     let queries = case_study_queries(n_queries, &mut rng);
-    let sweep = scheduler::sweep_solver(
-        &fitted.sets,
-        &queries,
-        &partition.gammas,
-        n_points,
-        mode,
-        solver,
-        &mut rng,
-    )?;
+    let sweep = if args.flag("sketch") {
+        // Shape-sketch path: collapse the workload to (shape → count)
+        // first and sweep shape-level. The sketch of a materialized
+        // workload is exact, so this CSV is byte-identical to the
+        // query-backed sweep below (property-tested in scheduler::zeta).
+        let sketch = workload::ShapeSketch::from_queries(&queries);
+        scheduler::sweep_sketch(
+            &fitted.sets,
+            &sketch,
+            &partition.gammas,
+            n_points,
+            mode,
+            solver,
+            &mut rng,
+        )?
+    } else {
+        scheduler::sweep_solver(
+            &fitted.sets,
+            &queries,
+            &partition.gammas,
+            n_points,
+            mode,
+            solver,
+            &mut rng,
+        )?
+    };
     print!("{}", report::zeta_ascii(&sweep));
 
     let out_dir = args.opt_or("out", "results");
@@ -630,6 +651,67 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     if !slo_ms.is_finite() || slo_ms < 0.0 {
         anyhow::bail!("--slo-ms must be finite and >= 0, got {slo_ms}");
     }
+
+    // Online control plane (ecoserve::control). Always constructed so
+    // `--policy replan` and `--policy compare` work without extra flags;
+    // carbon metering stays off unless --carbon is passed.
+    let replan_every = args.opt_usize("replan-every", 64);
+    if replan_every == 0 {
+        anyhow::bail!("--replan-every must be at least 1");
+    }
+    let slo_trigger_s = args
+        .opt("slo-trigger-ms")
+        .map(|s| {
+            s.parse::<f64>()
+                .ok()
+                .filter(|ms| ms.is_finite() && *ms > 0.0)
+                .map(|ms| ms / 1000.0)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("--slo-trigger-ms expects positive milliseconds, got '{s}'")
+                })
+        })
+        .transpose()?;
+    let carbon = if args.flag("carbon") {
+        let (zeta_min, zeta_max) = match args.opt("carbon-band") {
+            Some(band) => {
+                let parse = |s: &str| {
+                    s.parse::<f64>()
+                        .ok()
+                        .filter(|z| z.is_finite() && (0.0..=1.0).contains(z))
+                };
+                match band.split_once(':') {
+                    Some((lo, hi)) => match (parse(lo), parse(hi)) {
+                        (Some(lo), Some(hi)) if lo <= hi => (lo, hi),
+                        _ => anyhow::bail!(
+                            "--carbon-band expects MIN:MAX with 0 <= MIN <= MAX <= 1, \
+                             got '{band}'"
+                        ),
+                    },
+                    None => anyhow::bail!("--carbon-band expects MIN:MAX, got '{band}'"),
+                }
+            }
+            // Default band floors at the static ζ: the governor only ever
+            // pushes ζ up (toward energy) as the grid gets dirtier, so a
+            // carbon-governed run never spends more energy than the
+            // static plan it replaces.
+            None => (zeta, zeta.max(0.9)),
+        };
+        let day_s = args.opt_f64("carbon-day-s", 86_400.0);
+        if !day_s.is_finite() || day_s <= 0.0 {
+            anyhow::bail!("--carbon-day-s must be finite and > 0, got {day_s}");
+        }
+        let mut carbon = CarbonConfig::typical(zeta_min, zeta_max);
+        carbon.day_s = day_s;
+        Some(carbon)
+    } else {
+        None
+    };
+    let control = ControlConfig {
+        replan_every,
+        slo_trigger_s,
+        carbon,
+    };
+
     let cfg = SimConfig {
         max_batch,
         max_wait_s: max_wait_ms / 1000.0,
@@ -647,6 +729,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         seed,
         cfg,
         arrival_label: arrival.label(),
+        control: Some(control),
     };
     let arrivals_src = match &trace_arrivals {
         Some(times) => sim::Arrivals::Fixed(times),
@@ -657,7 +740,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let kinds: Vec<PolicyKind> = if policy_arg == "compare" {
         // Policy-comparison harness: every policy replays the same trace.
         if plan.is_none() {
-            ecoserve::info!("no --plan given: comparing the query-level policies only");
+            ecoserve::info!("no --plan given: skipping the plan-following policy");
         }
         PolicyKind::all()
             .into_iter()
@@ -708,6 +791,19 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         );
         if let Some((followed, fallback)) = m.plan_decisions {
             println!("  plan followed {followed} queries, fallback routed {fallback}");
+        }
+        if let Some(rs) = m.replan_stats {
+            println!(
+                "  replans {} ({} SLO-triggered) | planned routed {} | fallback {}",
+                rs.replans, rs.slo_replans, rs.planned_routed, rs.fallback_routed
+            );
+        }
+        if let Some(c) = &m.carbon {
+            println!(
+                "  realized carbon {:.2} g over {} grid window(s)",
+                c.total_g,
+                c.windows.len()
+            );
         }
         if let Some(out) = args.opt("out") {
             report::write_result(Path::new(out), &m.to_json().to_string_pretty())?;

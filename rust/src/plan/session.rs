@@ -287,13 +287,17 @@ impl PlanSession {
         Ok(self.last.as_ref().unwrap())
     }
 
-    /// Solve the current instance at shape granularity (sketch-fed
-    /// sessions; no-op if already solved at this ζ). Returns the
-    /// shape-level flows and objective.
+    /// Solve the current instance at shape granularity (no-op if already
+    /// solved at this ζ). Returns the shape-level flows and objective.
+    ///
+    /// Works for both sketch-fed and query-backed sessions — the latter is
+    /// the controller-facing re-solve surface: an online control loop that
+    /// grows the session via [`extend`](PlanSession::extend) can reprice ζ
+    /// at shape granularity ([`rezeta_shapes`](PlanSession::rezeta_shapes))
+    /// without paying for a per-query assignment it will immediately
+    /// re-aggregate into routing proportions. Requires a backend with a
+    /// shape-level solve (bucketed / net-simplex).
     pub fn solve_shapes(&mut self) -> anyhow::Result<&ShapeSolution> {
-        if !self.sketch_fed {
-            anyhow::bail!("query-backed session: use solve()");
-        }
         let reblended = self.ensure_costs();
         if self.last_flows.is_none() {
             let caps = self.caps();
@@ -323,6 +327,29 @@ impl PlanSession {
     /// The last shape-level solution, if any shape-level solve ran.
     pub fn shape_solution(&self) -> Option<&ShapeSolution> {
         self.last_flows.as_ref()
+    }
+
+    /// Index of a shape (by key) in the session's grouping, if present.
+    /// Stable across [`extend`](PlanSession::extend): existing shapes keep
+    /// their slot, new ones append.
+    pub fn shape_slot(&self, key: u64) -> Option<usize> {
+        self.shape_index.get(&key).copied()
+    }
+
+    /// Shape-level flows of the current optimum, whichever granularity it
+    /// was solved at: a shape-level solve returns its flows directly; a
+    /// per-query assignment is aggregated through the grouping. `None` if
+    /// nothing is solved.
+    pub fn current_flows(&self) -> Option<Vec<Vec<usize>>> {
+        if let Some(s) = &self.last_flows {
+            return Some(s.flows.clone());
+        }
+        let a = self.last.as_ref()?;
+        let mut flows = vec![vec![0usize; self.sets.len()]; self.bp.groups.n_shapes()];
+        for (qi, &k) in a.model_of.iter().enumerate() {
+            flows[self.bp.groups.shape_of[qi]][k] += 1;
+        }
+        Some(flows)
     }
 
     /// Set the operating point without solving; the next
@@ -385,6 +412,7 @@ impl PlanSession {
             }
         }
         self.last = None;
+        self.last_flows = None;
 
         // Dynamic normalization: maxima can only grow, and only when a new
         // shape arrives.

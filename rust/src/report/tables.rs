@@ -160,19 +160,22 @@ pub fn sim_comparison_replicated(grid: &[Vec<SimMetrics>]) -> Table {
         .and_then(|runs| runs.first())
         .map(|m| m.arrival.clone())
         .unwrap_or_default();
+    // Realized-carbon column only on carbon-metered comparison runs —
+    // headers stay dynamic so policy rows can never misalign with them.
+    let with_carbon = grid
+        .iter()
+        .any(|runs| runs.iter().any(|m| m.carbon.is_some()));
+    let mut headers = vec!["policy", "energy (J)"];
+    if with_carbon {
+        headers.push("carbon (g)");
+    }
+    headers.extend(["mean lat (s)", "p95 lat (s)", "SLO att.", "makespan (s)"]);
     let mut t = Table::new(
         &format!(
             "Policy comparison over {n_seeds} replicate arrival draws \
              (arrival={arrival}, mean ± 95% CI)"
         ),
-        &[
-            "policy",
-            "energy (J)",
-            "mean lat (s)",
-            "p95 lat (s)",
-            "SLO att.",
-            "makespan (s)",
-        ],
+        &headers,
     );
     let pm = |xs: &[f64], digits: usize, scale: f64| -> String {
         if xs.len() < 2 {
@@ -187,14 +190,28 @@ pub fn sim_comparison_replicated(grid: &[Vec<SimMetrics>]) -> Table {
     };
     for runs in grid {
         let series = |f: fn(&SimMetrics) -> f64| -> Vec<f64> { runs.iter().map(f).collect() };
-        t.row(vec![
+        let mut row = vec![
             runs.first().map(|m| m.policy.clone()).unwrap_or_default(),
             pm(&series(|m| m.total_energy_j), 1, 1.0),
+        ];
+        if with_carbon {
+            row.push(if runs.iter().all(|m| m.carbon.is_some()) {
+                pm(
+                    &series(|m| m.carbon.as_ref().map_or(0.0, |c| c.total_g)),
+                    2,
+                    1.0,
+                )
+            } else {
+                "-".to_string()
+            });
+        }
+        row.extend([
             pm(&series(|m| m.mean_latency_s), 3, 1.0),
             pm(&series(|m| m.p95_latency_s), 3, 1.0),
             format!("{}%", pm(&series(|m| m.slo_attainment), 1, 100.0)),
             pm(&series(|m| m.makespan_s), 2, 1.0),
         ]);
+        t.row(row);
     }
     t
 }
@@ -206,19 +223,23 @@ pub fn sim_comparison(rows: &[SimMetrics]) -> Table {
         .first()
         .map(|m| m.arrival.clone())
         .unwrap_or_default();
+    let with_carbon = rows.iter().any(|m| m.carbon.is_some());
+    let mut headers = vec!["policy", "energy (J)"];
+    if with_carbon {
+        headers.push("carbon (g)");
+    }
+    headers.extend([
+        "mean lat (s)",
+        "p95 lat (s)",
+        "queue (s)",
+        "SLO att.",
+        "makespan (s)",
+        "q/s",
+        "util",
+    ]);
     let mut t = Table::new(
         &format!("Policy comparison on one seeded trace (arrival={arrival})"),
-        &[
-            "policy",
-            "energy (J)",
-            "mean lat (s)",
-            "p95 lat (s)",
-            "queue (s)",
-            "SLO att.",
-            "makespan (s)",
-            "q/s",
-            "util",
-        ],
+        &headers,
     );
     for m in rows {
         let qps = if m.makespan_s > 0.0 {
@@ -226,9 +247,14 @@ pub fn sim_comparison(rows: &[SimMetrics]) -> Table {
         } else {
             0.0
         };
-        t.row(vec![
-            m.policy.clone(),
-            fnum(m.total_energy_j, 1),
+        let mut row = vec![m.policy.clone(), fnum(m.total_energy_j, 1)];
+        if with_carbon {
+            row.push(match m.carbon.as_ref() {
+                Some(c) => fnum(c.total_g, 2),
+                None => "-".to_string(),
+            });
+        }
+        row.extend([
             format!("{:.3}", m.mean_latency_s),
             format!("{:.3}", m.p95_latency_s),
             format!("{:.3}", m.mean_queue_s),
@@ -237,6 +263,7 @@ pub fn sim_comparison(rows: &[SimMetrics]) -> Table {
             si(qps, 1),
             format!("{:.1}%", 100.0 * m.mean_utilization()),
         ]);
+        t.row(row);
     }
     t
 }
@@ -310,5 +337,24 @@ mod tests {
         assert!(rep.contains("3 replicate arrival draws"), "{rep}");
         assert!(rep.contains("greedy"), "{rep}");
         assert!(rep.contains("±"), "{rep}");
+        // No carbon metering → no carbon column.
+        assert!(!cmp.contains("carbon (g)"), "{cmp}");
+        assert!(!rep.contains("carbon (g)"), "{rep}");
+        // Carbon-metered rows grow a realized-carbon column.
+        let mut mc = m.clone();
+        mc.carbon = Some(crate::control::CarbonReport {
+            day_s: 86400.0,
+            total_g: 1.25,
+            windows: vec![],
+        });
+        let cmp = sim_comparison(std::slice::from_ref(&mc)).to_ascii();
+        assert!(cmp.contains("carbon (g)"), "{cmp}");
+        assert!(cmp.contains("1.25"), "{cmp}");
+        let rep =
+            sim_comparison_replicated(&[vec![mc.clone(), mc.clone()], vec![m.clone(), m]])
+                .to_ascii();
+        assert!(rep.contains("carbon (g)"), "{rep}");
+        // Unmetered rows render a dash under the carbon column.
+        assert!(rep.contains('-'), "{rep}");
     }
 }

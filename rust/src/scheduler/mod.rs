@@ -55,11 +55,11 @@ pub use kernel::CostKernel;
 pub use mcmf::{EdgeHandle, FlowResult, MinCostFlow};
 pub use netsimplex::{NetSimplex, SimplexFlow};
 pub use problem::{
-    capacities, capacity_bounds, evaluate, group_by_shape, Assignment, BucketedProblem,
-    CapacityMode, CostMatrix, Evaluation, ShapeGroups,
+    capacities, capacity_bounds, evaluate, evaluate_flows, group_by_shape, Assignment,
+    BucketedProblem, CapacityMode, CostMatrix, Evaluation, ShapeGroups,
 };
 pub use solve::{
     solve_exact, solve_exact_bucketed, solve_exact_bucketed_mode, solve_exact_caps,
     solve_exact_mode, solve_exact_netsimplex, solve_greedy, solve_greedy_caps, BucketedFlow,
 };
-pub use zeta::{sweep, sweep_mode, sweep_solver, ZetaPoint, ZetaSweep};
+pub use zeta::{sweep, sweep_mode, sweep_sketch, sweep_solver, ZetaPoint, ZetaSweep};

@@ -409,6 +409,42 @@ pub struct Evaluation {
     pub total_runtime_s: f64,
 }
 
+/// Evaluate shape-level flows (`flows[s][k]` = queries of shape `s`
+/// served by model `k`) under the fitted models — the bucketed analogue
+/// of [`evaluate`], usable when no per-query assignment was materialized
+/// (sketch-fed sessions, controller flow tables). One Eq. 6–7 prediction
+/// per populated `(shape, model)` cell instead of one per query, so the
+/// result is a deterministic function of the flows alone: equal flows
+/// evaluate bit-identically regardless of which path produced them.
+pub fn evaluate_flows(sets: &[ModelSet], shapes: &[Shape], flows: &[Vec<usize>]) -> Evaluation {
+    assert_eq!(shapes.len(), flows.len(), "one flow row per shape");
+    let mut n = 0usize;
+    let mut e = 0.0;
+    let mut r = 0.0;
+    let mut a = 0.0;
+    for (sh, row) in shapes.iter().zip(flows) {
+        for (k, &cnt) in row.iter().enumerate() {
+            if cnt == 0 {
+                continue;
+            }
+            let s = &sets[k];
+            let c = cnt as f64;
+            n += cnt;
+            e += c * s.energy.predict(sh.t_in as f64, sh.t_out as f64);
+            r += c * s.runtime.predict(sh.t_in as f64, sh.t_out as f64);
+            a += c * s.accuracy.a_k;
+        }
+    }
+    let nf = if n == 0 { 1.0 } else { n as f64 };
+    Evaluation {
+        mean_energy_j: e / nf,
+        mean_runtime_s: r / nf,
+        mean_accuracy: a / nf,
+        total_energy_j: e,
+        total_runtime_s: r,
+    }
+}
+
 /// Evaluate an assignment under the fitted models.
 pub fn evaluate(assignment: &Assignment, sets: &[ModelSet], queries: &[Query]) -> Evaluation {
     let n = queries.len() as f64;
@@ -549,6 +585,37 @@ mod tests {
                 t_out: 1 + (i as u32 * 91) % 4088,
             })
             .collect()
+    }
+
+    #[test]
+    fn evaluate_flows_matches_per_query_evaluate() {
+        let sets = test_sets(3);
+        let queries: Vec<Query> = (0..40)
+            .map(|i| Query {
+                id: i,
+                t_in: 1 + (i % 5) * 17,
+                t_out: 1 + (i % 7) * 23,
+            })
+            .collect();
+        let a = Assignment {
+            model_of: (0..queries.len()).map(|i| i % 3).collect(),
+            objective: 0.0,
+        };
+        let per_query = evaluate(&a, &sets, &queries);
+        let g = group_by_shape(&queries);
+        let mut flows = vec![vec![0usize; 3]; g.n_shapes()];
+        for (qi, &k) in a.model_of.iter().enumerate() {
+            flows[g.shape_of[qi]][k] += 1;
+        }
+        let by_flows = evaluate_flows(&sets, &g.shapes, &flows);
+        assert!((per_query.mean_energy_j - by_flows.mean_energy_j).abs() < 1e-9);
+        assert!((per_query.mean_runtime_s - by_flows.mean_runtime_s).abs() < 1e-9);
+        assert!((per_query.mean_accuracy - by_flows.mean_accuracy).abs() < 1e-9);
+        assert!((per_query.total_energy_j - by_flows.total_energy_j).abs() < 1e-6);
+        // Empty flows: zero means, no NaN.
+        let empty = evaluate_flows(&sets, &[], &[]);
+        assert_eq!(empty.mean_energy_j, 0.0);
+        assert_eq!(empty.total_energy_j, 0.0);
     }
 
     #[test]

@@ -1,13 +1,19 @@
 //! The Fig. 3 experiment: sweep the operational parameter ζ ∈ [0, 1],
 //! solve the offline assignment at each value, and evaluate mean energy,
 //! mean runtime, and mean accuracy — against the flat baselines.
+//!
+//! Evaluation (the swept points *and* the baselines) runs at shape
+//! granularity through [`evaluate_flows`]: one Eq. 6–7 prediction per
+//! populated `(shape, model)` cell, with baselines laid out shape-major.
+//! That makes the sweep a pure function of the shape grouping, so a
+//! query-backed sweep and a sweep over the exact [`ShapeSketch`] of the
+//! same workload ([`sweep_sketch`]) produce byte-identical CSVs.
 
-use super::baselines;
-use super::problem::{evaluate, CapacityMode, Evaluation};
+use super::problem::{evaluate_flows, CapacityMode, Evaluation};
 use crate::models::ModelSet;
-use crate::plan::{Planner, SolverKind};
+use crate::plan::{PlanSession, Planner, SolverKind};
 use crate::util::Rng;
-use crate::workload::Query;
+use crate::workload::{Query, ShapeSketch};
 
 /// One swept point.
 #[derive(Debug, Clone, Copy)]
@@ -40,8 +46,6 @@ pub fn sweep_solver(
     solver: SolverKind,
     rng: &mut Rng,
 ) -> anyhow::Result<ZetaSweep> {
-    assert!(n_points >= 2);
-
     // One session for the whole sweep: the shape grouping and the
     // normalizer are ζ-independent, so `rezeta` only re-blends the
     // per-shape costs and re-solves (see `crate::plan`).
@@ -51,25 +55,112 @@ pub fn sweep_solver(
         .zeta(0.0)
         .solver(solver)
         .session(queries)?;
+    sweep_session(sets, &mut session, n_points, solver, rng)
+}
+
+/// The sweep over a [`ShapeSketch`] instead of a materialized workload —
+/// the path for traces too large to hold as `Vec<Query>`. Requires a
+/// shape-level backend (bucketed or net-simplex). For an *exact* sketch
+/// of a workload, the result is byte-identical to [`sweep_solver`] over
+/// that workload: both paths solve, evaluate, and draw baseline
+/// randomness at shape granularity in the same order.
+pub fn sweep_sketch(
+    sets: &[ModelSet],
+    sketch: &ShapeSketch,
+    gammas: &[f64],
+    n_points: usize,
+    mode: CapacityMode,
+    solver: SolverKind,
+    rng: &mut Rng,
+) -> anyhow::Result<ZetaSweep> {
+    let mut session = Planner::new(sets)
+        .gammas(gammas)
+        .capacity(mode)
+        .zeta(0.0)
+        .solver(solver)
+        .from_sketch(sketch)?;
+    sweep_session(sets, &mut session, n_points, solver, rng)
+}
+
+/// Shared sweep body: ζ steps against one warm session, then the
+/// shape-major flat baselines. Shape-level backends re-solve through
+/// [`PlanSession::rezeta_shapes`] (no per-query expansion); the rest go
+/// through [`PlanSession::rezeta`] and aggregate their assignment into
+/// flows — either way every evaluation is flows-based, so the numbers
+/// depend only on the shape grouping.
+fn sweep_session(
+    sets: &[ModelSet],
+    session: &mut PlanSession,
+    n_points: usize,
+    solver: SolverKind,
+    rng: &mut Rng,
+) -> anyhow::Result<ZetaSweep> {
+    assert!(n_points >= 2);
+    let shape_level = matches!(
+        solver,
+        SolverKind::Bucketed | SolverKind::NetworkSimplex
+    );
     let mut points = Vec::with_capacity(n_points);
     for i in 0..n_points {
         let zeta = i as f64 / (n_points - 1) as f64;
-        session.rezeta(zeta)?;
+        if shape_level {
+            session.rezeta_shapes(zeta)?;
+        } else {
+            session.rezeta(zeta)?;
+        }
+        let flows = session.current_flows().expect("solved above");
         points.push(ZetaPoint {
             zeta,
-            eval: session.evaluate().expect("solved above"),
+            eval: evaluate_flows(sets, &session.groups().shapes, &flows),
         });
     }
 
+    // Flat baselines, laid out shape-major over the grouping (identical
+    // for the query-backed and sketch paths): every multiplicity slot of
+    // shape s_0 first, then s_1, and so on.
+    let groups = session.groups();
+    let shapes = &groups.shapes;
+    let mult = &groups.multiplicity;
+    let nm = sets.len();
     let mut baselines_out = Vec::new();
     for (k, s) in sets.iter().enumerate() {
-        let a = baselines::single_model(queries, k);
-        baselines_out.push((format!("single:{}", s.model_id), evaluate(&a, sets, queries)));
+        let flows: Vec<Vec<usize>> = mult
+            .iter()
+            .map(|&m| {
+                let mut row = vec![0usize; nm];
+                row[k] = m;
+                row
+            })
+            .collect();
+        baselines_out.push((
+            format!("single:{}", s.model_id),
+            evaluate_flows(sets, shapes, &flows),
+        ));
     }
-    let rr = baselines::round_robin(queries, sets.len());
-    baselines_out.push(("round-robin".to_string(), evaluate(&rr, sets, queries)));
-    let rnd = baselines::random(queries, sets.len(), rng);
-    baselines_out.push(("random".to_string(), evaluate(&rnd, sets, queries)));
+    let mut slot = 0usize;
+    let rr: Vec<Vec<usize>> = mult
+        .iter()
+        .map(|&m| {
+            let mut row = vec![0usize; nm];
+            for _ in 0..m {
+                row[slot % nm] += 1;
+                slot += 1;
+            }
+            row
+        })
+        .collect();
+    baselines_out.push(("round-robin".to_string(), evaluate_flows(sets, shapes, &rr)));
+    let rnd: Vec<Vec<usize>> = mult
+        .iter()
+        .map(|&m| {
+            let mut row = vec![0usize; nm];
+            for _ in 0..m {
+                row[rng.index(nm)] += 1;
+            }
+            row
+        })
+        .collect();
+    baselines_out.push(("random".to_string(), evaluate_flows(sets, shapes, &rnd)));
 
     Ok(ZetaSweep {
         points,
@@ -190,6 +281,49 @@ mod tests {
         let rnd = sw.baselines.iter().find(|(l, _)| l == "random").unwrap().1;
         let rel = (rr.mean_energy_j - rnd.mean_energy_j).abs() / rr.mean_energy_j;
         assert!(rel < 0.25, "rel={rel}");
+    }
+
+    #[test]
+    fn sketch_sweep_is_byte_identical_to_query_sweep() {
+        // Satellite of the control-plane PR: the sweep is a pure function
+        // of the shape grouping, so an exact sketch reproduces the
+        // query-backed CSV byte for byte (solver flows, evaluation order,
+        // and baseline rng draws all run shape-major).
+        let sets = paper_like_sets();
+        let mut rng = Rng::new(500);
+        let queries = generate(300, &AlpacaParams::default(), &mut rng);
+        let sketch = crate::workload::ShapeSketch::from_queries(&queries);
+        assert!(sketch.is_exact());
+        let gammas = [0.05, 0.2, 0.75];
+        for solver in [SolverKind::Bucketed, SolverKind::NetworkSimplex] {
+            let mut rng_q = Rng::new(900);
+            let by_queries = sweep_solver(
+                &sets,
+                &queries,
+                &gammas,
+                5,
+                CapacityMode::Eq3Only,
+                solver,
+                &mut rng_q,
+            )
+            .unwrap();
+            let mut rng_s = Rng::new(900);
+            let by_sketch = sweep_sketch(
+                &sets,
+                &sketch,
+                &gammas,
+                5,
+                CapacityMode::Eq3Only,
+                solver,
+                &mut rng_s,
+            )
+            .unwrap();
+            assert_eq!(
+                crate::report::zeta_csv(&by_queries),
+                crate::report::zeta_csv(&by_sketch),
+                "{solver:?}"
+            );
+        }
     }
 
     #[test]

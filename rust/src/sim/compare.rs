@@ -27,6 +27,7 @@ use super::arrival::{ARRIVAL_SEED_SALT, ArrivalProcess};
 use super::metrics::SimMetrics;
 use super::policy::{PolicyKind, SimPolicy};
 use super::simulator::{Memo, SimConfig, Simulator};
+use crate::control::ControlConfig;
 use crate::models::{ModelSet, Normalizer};
 use crate::plan::Plan;
 use crate::stats::{ci_half_width, mean};
@@ -47,6 +48,11 @@ pub struct CompareSpec<'a> {
     pub cfg: SimConfig,
     /// arrival-process label recorded in each artifact
     pub arrival_label: String,
+    /// control-plane configuration: required when the kinds include
+    /// [`PolicyKind::Replan`]; its carbon signal (when set) also turns on
+    /// carbon metering for *every* policy in the grid, so realized gCO₂
+    /// is directly comparable across rows
+    pub control: Option<ControlConfig>,
 }
 
 /// Where a replicate's arrival timestamps come from.
@@ -123,18 +129,30 @@ pub fn compare_replicated(
                 }
                 let (ki, si) = (i / n_seeds, i % n_seeds);
                 let seed = seeds[si];
-                let run =
-                    SimPolicy::new(kinds[ki], spec.sets, spec.norm, spec.zeta, spec.plan, seed)
-                        .and_then(|mut policy| {
-                            Simulator::new(spec.sets, spec.cfg)
-                                .labeled(&spec.arrival_label, seed, spec.zeta)
-                                .run_with_memo(
-                                    queries,
-                                    per_seed_times[si],
-                                    &mut policy,
-                                    memo.as_ref(),
-                                )
-                        });
+                let run = SimPolicy::new(
+                    kinds[ki],
+                    spec.sets,
+                    spec.norm,
+                    spec.zeta,
+                    spec.plan,
+                    seed,
+                    spec.control.as_ref(),
+                )
+                .and_then(|mut policy| {
+                    let mut sim = Simulator::new(spec.sets, spec.cfg)
+                        .labeled(&spec.arrival_label, seed, spec.zeta);
+                    if let Some(carbon) =
+                        spec.control.as_ref().and_then(|c| c.carbon.as_ref())
+                    {
+                        sim = sim.with_carbon(carbon.clone());
+                    }
+                    sim.run_with_memo(
+                        queries,
+                        per_seed_times[si],
+                        &mut policy,
+                        memo.as_ref(),
+                    )
+                });
                 *slots[i].lock().unwrap() = Some(run);
             });
         }
@@ -160,7 +178,7 @@ pub fn compare_replicated(
 pub fn comparison_to_json(rows: &[SimMetrics]) -> Json {
     Json::obj(vec![
         ("format", Json::str("ecoserve.sim-comparison")),
-        ("version", Json::num(2.0)),
+        ("version", Json::num(3.0)),
         (
             "policies",
             Json::arr(rows.iter().map(|m| m.to_json())),
@@ -178,7 +196,7 @@ pub fn replicated_to_json(grid: &[Vec<SimMetrics>]) -> Json {
         .unwrap_or_default();
     Json::obj(vec![
         ("format", Json::str("ecoserve.sim-comparison")),
-        ("version", Json::num(2.0)),
+        ("version", Json::num(3.0)),
         ("seeds", Json::Arr(seeds)),
         (
             "policies",
@@ -200,20 +218,28 @@ pub fn replicated_to_json(grid: &[Vec<SimMetrics>]) -> Json {
                             ("ci95", Json::num(ci_half_width(xs, 0.95))),
                         ])
                     };
-                    fields.push((
-                        "summary",
-                        Json::obj(vec![
-                            ("n_seeds", Json::num(runs.len() as f64)),
-                            (
-                                "total_energy_j",
-                                stat(&series(|m| m.total_energy_j)),
-                            ),
-                            ("mean_latency_s", stat(&series(|m| m.mean_latency_s))),
-                            ("p95_latency_s", stat(&series(|m| m.p95_latency_s))),
-                            ("slo_attainment", stat(&series(|m| m.slo_attainment))),
-                            ("makespan_s", stat(&series(|m| m.makespan_s))),
-                        ]),
-                    ));
+                    let mut summary = vec![
+                        ("n_seeds", Json::num(runs.len() as f64)),
+                        (
+                            "total_energy_j",
+                            stat(&series(|m| m.total_energy_j)),
+                        ),
+                        ("mean_latency_s", stat(&series(|m| m.mean_latency_s))),
+                        ("p95_latency_s", stat(&series(|m| m.p95_latency_s))),
+                        ("slo_attainment", stat(&series(|m| m.slo_attainment))),
+                        ("makespan_s", stat(&series(|m| m.makespan_s))),
+                    ];
+                    // Realized carbon, when every replicate was metered
+                    // (carbon-aware comparison runs).
+                    if runs.iter().all(|m| m.carbon.is_some()) {
+                        summary.push((
+                            "total_carbon_g",
+                            stat(&series(|m| {
+                                m.carbon.as_ref().map_or(0.0, |c| c.total_g)
+                            })),
+                        ));
+                    }
+                    fields.push(("summary", Json::obj(summary)));
                 }
                 Json::obj(fields)
             })),
@@ -254,6 +280,7 @@ mod tests {
             seed: 9,
             cfg: SimConfig::default(),
             arrival_label: "poisson:20".to_string(),
+            control: None,
         };
         let kinds = [
             PolicyKind::Greedy,
@@ -293,6 +320,7 @@ mod tests {
             seed: 100,
             cfg: SimConfig::default(),
             arrival_label: "poisson:25".to_string(),
+            control: None,
         };
         let kinds = [PolicyKind::Greedy, PolicyKind::RoundRobin];
         let grid = compare_replicated(
@@ -346,6 +374,7 @@ mod tests {
                 seed: 7,
                 cfg: SimConfig::default(),
                 arrival_label: "gamma:40:4".to_string(),
+                control: None,
             };
             let grid = compare_replicated(
                 &spec,
@@ -372,7 +401,59 @@ mod tests {
             seed: 1,
             cfg: SimConfig::default(),
             arrival_label: "poisson:1".to_string(),
+            control: None,
         };
         assert!(compare(&spec, &queries, &[0.0], &[PolicyKind::Plan]).is_err());
+        // Replan likewise refuses to run without a control configuration.
+        assert!(compare(&spec, &queries, &[0.0], &[PolicyKind::Replan]).is_err());
+    }
+
+    #[test]
+    fn carbon_control_meters_every_policy_in_the_grid() {
+        let s = sets();
+        let queries: Vec<Query> = (0..30)
+            .map(|i| Query {
+                id: i,
+                t_in: 1 + 11 * (i % 5),
+                t_out: 1 + 7 * (i % 3),
+            })
+            .collect();
+        let control = ControlConfig {
+            replan_every: 8,
+            slo_trigger_s: None,
+            carbon: Some(crate::control::CarbonConfig::typical(0.2, 0.8)),
+        };
+        let spec = CompareSpec {
+            sets: &s,
+            norm: Normalizer::from_workload(&s, &queries),
+            zeta: 0.5,
+            plan: None,
+            seed: 11,
+            cfg: SimConfig::default(),
+            arrival_label: "poisson:25".to_string(),
+            control: Some(control),
+        };
+        let kinds = [PolicyKind::Replan, PolicyKind::Greedy];
+        let grid = compare_replicated(
+            &spec,
+            &queries,
+            Arrivals::Sampled(ArrivalProcess::Poisson { rate: 25.0 }),
+            &kinds,
+            2,
+        )
+        .unwrap();
+        for (runs, kind) in grid.iter().zip(kinds) {
+            for m in runs {
+                assert_eq!(m.policy, kind.label());
+                let carbon = m.carbon.as_ref().expect("every policy is metered");
+                assert!(carbon.total_g > 0.0);
+            }
+        }
+        // Only the replan rows carry control counters.
+        assert!(grid[0].iter().all(|m| m.replan_stats.is_some()));
+        assert!(grid[1].iter().all(|m| m.replan_stats.is_none()));
+        let json = replicated_to_json(&grid).to_string_pretty();
+        assert!(json.contains("\"total_carbon_g\""), "{json}");
+        assert!(json.contains("\"version\": 3"), "{json}");
     }
 }

@@ -24,13 +24,16 @@
 //! config)` runs emit byte-identical artifacts. CI diffs two runs to
 //! enforce this.
 
+use crate::control::{CarbonReport, CarbonWindow, ReplanStats};
 use crate::stats::{quantile, LOG_HIST_BINS_PER_OCTAVE, LOG_HIST_LO_S, LogHistogram};
 use crate::util::Json;
 
 /// Version of the `ecoserve.sim-metrics` artifact this build writes.
-/// Version 1 (per-query exact quantiles, no histograms) is rejected on
-/// load with a migration message.
-pub const SIM_METRICS_VERSION: u32 = 2;
+/// Version 3 adds the online-control fields (realized carbon per window,
+/// ζ trajectory, replan counters). Versions 1 (per-query exact quantiles,
+/// no histograms) and 2 (pre-control) are rejected on load with migration
+/// messages.
+pub const SIM_METRICS_VERSION: u32 = 3;
 
 /// Lifecycle of one simulated query (all times in virtual seconds from
 /// simulation start). Only recorded when per-query retention is on.
@@ -204,6 +207,12 @@ impl MetricsRecorder {
             latency_hist: self.latency_hist,
             queue_hist: self.queue_hist,
             outcomes: self.outcomes,
+            // Control-plane blocks are attached by the simulator after the
+            // streaming close-out (they come from the policy/meter, not
+            // from completion folding).
+            replan_stats: None,
+            carbon: None,
+            zeta_trajectory: None,
         }
     }
 }
@@ -247,6 +256,12 @@ pub struct SimMetrics {
     /// per-query lifecycle records; `Some` only when per-query retention
     /// (`--per-query`) was on — O(|Q|) memory, exact quantiles
     pub outcomes: Option<Vec<QueryOutcome>>,
+    /// control-plane counters (replan policy only)
+    pub replan_stats: Option<ReplanStats>,
+    /// realized grams-CO₂ per carbon window (`--carbon` runs)
+    pub carbon: Option<CarbonReport>,
+    /// the governor's (t_s, ζ) steps (replan under carbon control)
+    pub zeta_trajectory: Option<Vec<(f64, f64)>>,
 }
 
 fn hist_to_json(h: &LogHistogram) -> Json {
@@ -375,6 +390,50 @@ impl SimMetrics {
                 ]),
             ));
         }
+        if let Some(rs) = self.replan_stats {
+            fields.push((
+                "replan",
+                Json::obj(vec![
+                    ("replans", Json::num(rs.replans as f64)),
+                    ("slo_replans", Json::num(rs.slo_replans as f64)),
+                    ("planned_routed", Json::num(rs.planned_routed as f64)),
+                    ("fallback_routed", Json::num(rs.fallback_routed as f64)),
+                ]),
+            ));
+        }
+        if let Some(carbon) = self.carbon.as_ref() {
+            fields.push((
+                "carbon",
+                Json::obj(vec![
+                    ("day_s", Json::num(carbon.day_s)),
+                    ("total_g", Json::num(carbon.total_g)),
+                    (
+                        "windows",
+                        Json::arr(carbon.windows.iter().map(|w| {
+                            Json::obj(vec![
+                                // Decimal string for the same reason as
+                                // `seed`: window indices are u64 and the
+                                // f64-backed Json would round past 2^53.
+                                ("index", Json::str(w.index.to_string())),
+                                ("start_s", Json::num(w.start_s)),
+                                ("intensity_g_per_kwh", Json::num(w.intensity)),
+                                ("energy_j", Json::num(w.energy_j)),
+                                ("carbon_g", Json::num(w.carbon_g)),
+                            ])
+                        })),
+                    ),
+                ]),
+            ));
+        }
+        if let Some(traj) = self.zeta_trajectory.as_ref() {
+            // Flat (t_s, zeta) pairs, mirroring the histogram layout.
+            let mut flat = Vec::with_capacity(traj.len() * 2);
+            for &(t_s, z) in traj {
+                flat.push(Json::num(t_s));
+                flat.push(Json::num(z));
+            }
+            fields.push(("zeta_trajectory", Json::Arr(flat)));
+        }
         if let Some(outcomes) = self.outcomes.as_ref().filter(|o| !o.is_empty()) {
             let lats: Vec<f64> = outcomes.iter().map(QueryOutcome::latency_s).collect();
             let queues: Vec<f64> = outcomes.iter().map(QueryOutcome::queue_s).collect();
@@ -393,8 +452,9 @@ impl SimMetrics {
 
     /// Load an aggregates-only `SimMetrics` back from its artifact.
     /// Per-query outcomes (and the derived `exact` block) are not part of
-    /// the artifact's reload surface. Version 1 artifacts are rejected
-    /// with a migration message; the golden test pins both behaviors.
+    /// the artifact's reload surface. Version 1 and 2 artifacts are
+    /// rejected with migration messages; the golden test pins both
+    /// behaviors.
     pub fn from_json(v: &Json) -> anyhow::Result<SimMetrics> {
         match v.get("format").as_str() {
             Some("ecoserve.sim-metrics") => {}
@@ -410,6 +470,12 @@ impl SimMetrics {
                  no histograms); this build reads version {SIM_METRICS_VERSION} — \
                  regenerate with `ecoserve simulate` (add --per-query if you need \
                  exact quantiles back)"
+            ),
+            Some(2) => anyhow::bail!(
+                "sim-metrics artifact is version 2 (pre-control: no carbon, \
+                 ζ-trajectory, or replan fields); this build reads version \
+                 {SIM_METRICS_VERSION} — regenerate with `ecoserve simulate` \
+                 (add --carbon for per-window carbon accounting)"
             ),
             other => anyhow::bail!(
                 "unsupported sim-metrics artifact version {:?} (this build reads \
@@ -473,6 +539,85 @@ impl SimMetrics {
                     .ok_or_else(|| anyhow::anyhow!("plan_decisions missing 'fallback'"))?,
             )),
         };
+        let replan_stats = match v.get("replan") {
+            Json::Null => None,
+            rs => {
+                let count = |k: &str| -> anyhow::Result<u64> {
+                    rs.get(k)
+                        .as_u64()
+                        .ok_or_else(|| anyhow::anyhow!("replan missing '{k}'"))
+                };
+                Some(ReplanStats {
+                    replans: count("replans")?,
+                    slo_replans: count("slo_replans")?,
+                    planned_routed: count("planned_routed")?,
+                    fallback_routed: count("fallback_routed")?,
+                })
+            }
+        };
+        let carbon = match v.get("carbon") {
+            Json::Null => None,
+            c => {
+                let cf = |j: &Json, k: &str| -> anyhow::Result<f64> {
+                    j.get(k)
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("carbon missing '{k}'"))
+                };
+                let windows = c
+                    .get("windows")
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("carbon missing 'windows'"))?
+                    .iter()
+                    .map(|w| -> anyhow::Result<CarbonWindow> {
+                        Ok(CarbonWindow {
+                            index: w
+                                .get("index")
+                                .as_str()
+                                .ok_or_else(|| anyhow::anyhow!("carbon window missing 'index'"))?
+                                .parse()
+                                .map_err(|_| {
+                                    anyhow::anyhow!(
+                                        "carbon window 'index' is not a u64 string"
+                                    )
+                                })?,
+                            start_s: cf(w, "start_s")?,
+                            intensity: cf(w, "intensity_g_per_kwh")?,
+                            energy_j: cf(w, "energy_j")?,
+                            carbon_g: cf(w, "carbon_g")?,
+                        })
+                    })
+                    .collect::<anyhow::Result<Vec<CarbonWindow>>>()?;
+                Some(CarbonReport {
+                    day_s: cf(c, "day_s")?,
+                    total_g: cf(c, "total_g")?,
+                    windows,
+                })
+            }
+        };
+        let zeta_trajectory = match v.get("zeta_trajectory") {
+            Json::Null => None,
+            zt => {
+                let flat = zt
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("'zeta_trajectory' must be an array"))?;
+                if flat.len() % 2 != 0 {
+                    anyhow::bail!("'zeta_trajectory' must hold (t_s, zeta) pairs");
+                }
+                Some(
+                    flat.chunks_exact(2)
+                        .map(|c| -> anyhow::Result<(f64, f64)> {
+                            let t_s = c[0].as_f64().ok_or_else(|| {
+                                anyhow::anyhow!("zeta_trajectory: non-numeric time")
+                            })?;
+                            let z = c[1].as_f64().ok_or_else(|| {
+                                anyhow::anyhow!("zeta_trajectory: non-numeric ζ")
+                            })?;
+                            Ok((t_s, z))
+                        })
+                        .collect::<anyhow::Result<Vec<(f64, f64)>>>()?,
+                )
+            }
+        };
         Ok(SimMetrics {
             policy: string("policy")?,
             arrival: string("arrival")?,
@@ -503,6 +648,9 @@ impl SimMetrics {
             latency_hist: hist_from_json(v.get("latency_hist"), "latency_hist")?,
             queue_hist: hist_from_json(v.get("queue_hist"), "queue_hist")?,
             outcomes: None,
+            replan_stats,
+            carbon,
+            zeta_trajectory,
         })
     }
 }
@@ -614,7 +762,7 @@ mod tests {
         for key in [
             "\"policy\"",
             "\"arrival\"",
-            "\"version\": 2",
+            "\"version\": 3",
             "\"total_energy_j\"",
             "\"slo_attainment\"",
             "\"latency_hist\"",
@@ -647,6 +795,54 @@ mod tests {
     }
 
     #[test]
+    fn control_blocks_roundtrip_with_decimal_window_indices() {
+        let mut m = metrics(false);
+        m.replan_stats = Some(ReplanStats {
+            replans: 4,
+            slo_replans: 1,
+            planned_routed: 90,
+            fallback_routed: 10,
+        });
+        m.carbon = Some(CarbonReport {
+            day_s: 86400.0,
+            total_g: 3.25,
+            windows: vec![
+                CarbonWindow {
+                    index: 0,
+                    start_s: 0.0,
+                    intensity: 210.0,
+                    energy_j: 18000.0,
+                    carbon_g: 1.05,
+                },
+                CarbonWindow {
+                    // Above 2^53: only the decimal-string encoding keeps
+                    // this exact through the f64-backed Json.
+                    index: (1u64 << 53) + 1,
+                    start_s: 3600.0,
+                    intensity: 200.0,
+                    energy_j: 39600.0,
+                    carbon_g: 2.2,
+                },
+            ],
+        });
+        m.zeta_trajectory = Some(vec![(0.0, 0.24), (3600.0, 0.31)]);
+        let json = m.to_json();
+        let text = json.to_string_pretty();
+        assert!(text.contains("\"replan\""), "{text}");
+        assert!(text.contains("\"carbon\""), "{text}");
+        assert!(text.contains("\"index\": \"9007199254740993\""), "{text}");
+        assert!(text.contains("\"zeta_trajectory\""), "{text}");
+        let back = SimMetrics::from_json(&json).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.to_json().to_string_pretty(), text);
+        // Absent blocks stay absent (no nulls in lean artifacts).
+        let lean = metrics(false).to_json().to_string_pretty();
+        for key in ["\"replan\"", "\"carbon\"", "\"zeta_trajectory\""] {
+            assert!(!lean.contains(key), "unexpected {key} in {lean}");
+        }
+    }
+
+    #[test]
     fn from_json_rejects_old_and_foreign_artifacts() {
         let v1 = Json::parse(
             r#"{"format": "ecoserve.sim-metrics", "version": 1, "policy": "plan"}"#,
@@ -654,6 +850,15 @@ mod tests {
         .unwrap();
         let err = SimMetrics::from_json(&v1).unwrap_err().to_string();
         assert!(err.contains("version 1"), "{err}");
+        assert!(err.contains("regenerate"), "{err}");
+
+        let v2 = Json::parse(
+            r#"{"format": "ecoserve.sim-metrics", "version": 2, "policy": "plan"}"#,
+        )
+        .unwrap();
+        let err = SimMetrics::from_json(&v2).unwrap_err().to_string();
+        assert!(err.contains("version 2"), "{err}");
+        assert!(err.contains("pre-control"), "{err}");
         assert!(err.contains("regenerate"), "{err}");
 
         let foreign = Json::parse(r#"{"format": "ecoserve.plan", "version": 2}"#).unwrap();

@@ -15,8 +15,10 @@
 //! * [`SimPolicy`] — the routing decision per arriving query:
 //!   plan-following (the production
 //!   [`Router::with_plan`](crate::coordinator::Router::with_plan)
-//!   handoff), ζ-cost greedy (shape-memoized), round-robin, or seeded
-//!   random;
+//!   handoff), closed-loop replanning
+//!   ([`ReplanPolicy`](crate::control::ReplanPolicy), optionally under
+//!   carbon-aware ζ control), ζ-cost greedy (shape-memoized),
+//!   round-robin, or seeded random;
 //! * [`Simulator`] — the zero-allocation event loop (arrive → route →
 //!   batch → execute → complete) on a virtual integer-nanosecond clock:
 //!   `Copy` heap events, per-node index FIFOs instead of per-batch
@@ -42,10 +44,12 @@
 //! flows from the seed, and the JSON artifact serializes through sorted
 //! maps with shortest round-trip float formatting — so repeated runs are
 //! byte-identical (property-tested in `tests/sim.rs`, diffed in CI's
-//! `sim-smoke`, including the parallel `--seeds` comparison). This event
-//! loop is the seam future online features (preemption, DVFS,
-//! carbon-aware ζ control) plug into — and is now fast enough to drive
-//! them at cluster scale (`benches/sim_scaling.rs`).
+//! `sim-smoke`, including the parallel `--seeds` comparison and the
+//! replan+carbon control loop). The event loop's controller hook is the
+//! seam online features plug into: [`crate::control`] already drives
+//! closed-loop replanning and carbon-aware ζ scheduling through it, and
+//! it remains open for preemption/DVFS — fast enough to drive them at
+//! cluster scale (`benches/sim_scaling.rs`).
 
 pub mod arrival;
 pub mod compare;

@@ -7,6 +7,7 @@
 //! are the same query-independent strategies the offline Fig. 3 sweep
 //! compares against, now exercised under queueing.
 
+use crate::control::{ControlConfig, ReplanPolicy, ReplanStats};
 use crate::coordinator::{Policy, Router};
 use crate::models::{ModelSet, Normalizer};
 use crate::plan::Plan;
@@ -19,6 +20,9 @@ use std::collections::HashMap;
 pub enum PolicyKind {
     /// Follow the offline [`Plan`]'s per-shape budgets, ζ-cost fallback.
     Plan,
+    /// Closed-loop replanning from a live session
+    /// ([`ReplanPolicy`](crate::control::ReplanPolicy)).
+    Replan,
     /// Per-query ζ-cost argmin (the online greedy the paper's §7 sketches).
     Greedy,
     /// Cyclic query-independent baseline.
@@ -32,29 +36,36 @@ impl PolicyKind {
     pub fn label(&self) -> &'static str {
         match self {
             PolicyKind::Plan => "plan",
+            PolicyKind::Replan => "replan",
             PolicyKind::Greedy => "greedy",
             PolicyKind::RoundRobin => "round-robin",
             PolicyKind::Random => "random",
         }
     }
 
-    /// Parse the CLI spelling (`plan|greedy|round-robin|random`).
+    /// Parse the CLI spelling (`plan|replan|greedy|round-robin|random`).
     pub fn parse(s: &str) -> anyhow::Result<PolicyKind> {
         Ok(match s {
             "plan" => PolicyKind::Plan,
+            "replan" => PolicyKind::Replan,
             "greedy" => PolicyKind::Greedy,
             "round-robin" => PolicyKind::RoundRobin,
             "random" => PolicyKind::Random,
             other => anyhow::bail!(
-                "unknown policy '{other}' (expected plan|greedy|round-robin|random|compare)"
+                "unknown policy '{other}' \
+                 (expected plan|replan|greedy|round-robin|random|compare)"
             ),
         })
     }
 
-    /// Every kind, in comparison-harness order.
-    pub fn all() -> [PolicyKind; 4] {
-        [
+    /// Every kind, in comparison-harness order. A dynamic list (not a
+    /// fixed-size array) on purpose: the comparison grid and the report
+    /// tables key every row off the run's own policy label, so growing
+    /// this list can never silently misalign comparison columns.
+    pub fn all() -> Vec<PolicyKind> {
+        vec![
             PolicyKind::Plan,
+            PolicyKind::Replan,
             PolicyKind::Greedy,
             PolicyKind::RoundRobin,
             PolicyKind::Random,
@@ -73,12 +84,15 @@ pub struct SimPolicy {
     /// depend on token counts alone), so at simulator scale the argmin is
     /// computed once per distinct shape and looked up thereafter.
     greedy_cache: HashMap<u64, usize>,
+    /// Replan only: the online control plane.
+    replan: Option<ReplanPolicy>,
 }
 
 impl SimPolicy {
     /// Build a policy over the hosted model sets. `plan` is required for
-    /// [`PolicyKind::Plan`] and ignored otherwise; `norm`/`zeta` define
-    /// the ζ-cost scoring used by greedy and by the plan fallback.
+    /// [`PolicyKind::Plan`] and ignored otherwise; `control` likewise for
+    /// [`PolicyKind::Replan`]; `norm`/`zeta` define the ζ-cost scoring
+    /// used by greedy and by the plan/replan fallbacks.
     pub fn new(
         kind: PolicyKind,
         sets: &[ModelSet],
@@ -86,13 +100,26 @@ impl SimPolicy {
         zeta: f64,
         plan: Option<&Plan>,
         seed: u64,
+        control: Option<&ControlConfig>,
     ) -> anyhow::Result<SimPolicy> {
+        let mut replan = None;
         let router = match kind {
             PolicyKind::Plan => {
                 let plan = plan.ok_or_else(|| {
                     anyhow::anyhow!("policy 'plan' needs a plan artifact (--plan FILE)")
                 })?;
                 Router::new(sets.to_vec(), norm, plan.zeta, Policy::ZetaCost).with_plan(plan)
+            }
+            PolicyKind::Replan => {
+                let cfg = control.ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "policy 'replan' needs a control configuration \
+                         (--replan-every/--slo-trigger-ms/--carbon)"
+                    )
+                })?;
+                replan = Some(ReplanPolicy::new(sets, norm, zeta, seed, cfg)?);
+                // Carrier only; decisions come from the replan loop above.
+                Router::new(sets.to_vec(), norm, zeta, Policy::ZetaCost)
             }
             PolicyKind::Greedy => Router::new(sets.to_vec(), norm, zeta, Policy::ZetaCost),
             PolicyKind::RoundRobin => {
@@ -107,6 +134,7 @@ impl SimPolicy {
             router,
             rng: Rng::new(seed ^ 0x51_AA7E),
             greedy_cache: HashMap::new(),
+            replan,
         })
     }
 
@@ -132,9 +160,45 @@ impl SimPolicy {
         }
     }
 
+    /// Route one arriving query at virtual time `t_ns`. Time-aware
+    /// policies (replan) tick their control loop here; the rest ignore the
+    /// clock and defer to [`route`](SimPolicy::route).
+    pub fn route_at(&mut self, t_ns: u64, q: &Query) -> anyhow::Result<usize> {
+        match self.replan.as_mut() {
+            Some(r) => r.route_at(t_ns, q),
+            None => Ok(self.route(q)),
+        }
+    }
+
+    /// Clock tick from the simulator's event loop (timeout/completion
+    /// events). No-op for clock-independent policies.
+    pub fn tick(&mut self, t_ns: u64) -> anyhow::Result<()> {
+        match self.replan.as_mut() {
+            Some(r) => r.tick(t_ns),
+            None => Ok(()),
+        }
+    }
+
+    /// Completion hook: realized queue wait of one finished query.
+    pub fn on_complete(&mut self, queue_s: f64) {
+        if let Some(r) = self.replan.as_mut() {
+            r.on_complete(queue_s);
+        }
+    }
+
     /// (plan-followed, fallback) counts, when a plan is attached.
     pub fn plan_stats(&self) -> Option<(u64, u64)> {
         self.router.plan.as_ref().map(|t| t.stats())
+    }
+
+    /// Control-plane counters, when this is the replan policy.
+    pub fn replan_stats(&self) -> Option<ReplanStats> {
+        self.replan.as_ref().map(|r| r.stats())
+    }
+
+    /// The governor's ζ trajectory, when replanning under carbon control.
+    pub fn zeta_trajectory(&self) -> Option<Vec<(f64, f64)>> {
+        self.replan.as_ref().and_then(|r| r.zeta_trajectory())
     }
 }
 
@@ -155,15 +219,35 @@ mod tests {
     fn plan_policy_requires_plan() {
         let s = sets();
         let norm = Normalizer::from_workload(&s, &[Query { id: 0, t_in: 8, t_out: 8 }]);
-        let err = SimPolicy::new(PolicyKind::Plan, &s, norm, 0.5, None, 1).unwrap_err();
+        let err = SimPolicy::new(PolicyKind::Plan, &s, norm, 0.5, None, 1, None).unwrap_err();
         assert!(err.to_string().contains("--plan"), "{err}");
+    }
+
+    #[test]
+    fn replan_policy_requires_control_config() {
+        let s = sets();
+        let norm = Normalizer::from_workload(&s, &[Query { id: 0, t_in: 8, t_out: 8 }]);
+        let err =
+            SimPolicy::new(PolicyKind::Replan, &s, norm, 0.5, None, 1, None).unwrap_err();
+        assert!(err.to_string().contains("control"), "{err}");
+        let cfg = crate::control::ControlConfig::default();
+        let mut p =
+            SimPolicy::new(PolicyKind::Replan, &s, norm, 0.5, None, 1, Some(&cfg)).unwrap();
+        let k = p
+            .route_at(0, &Query { id: 0, t_in: 8, t_out: 8 })
+            .unwrap();
+        assert!(k < s.len());
+        assert!(p.replan_stats().is_some());
+        // No carbon config → no ζ trajectory.
+        assert!(p.zeta_trajectory().is_none());
     }
 
     #[test]
     fn greedy_cache_matches_fresh_router_decisions() {
         let s = sets();
         let norm = Normalizer::from_workload(&s, &[Query { id: 0, t_in: 8, t_out: 8 }]);
-        let mut cached = SimPolicy::new(PolicyKind::Greedy, &s, norm, 0.35, None, 1).unwrap();
+        let mut cached =
+            SimPolicy::new(PolicyKind::Greedy, &s, norm, 0.35, None, 1, None).unwrap();
         // The uncached reference: the same router scored per query.
         let mut fresh = Router::new(s.to_vec(), norm, 0.35, Policy::ZetaCost);
         let mut rng = Rng::new(3);
@@ -183,7 +267,7 @@ mod tests {
         let norm = Normalizer::from_workload(&s, &[Query { id: 0, t_in: 8, t_out: 8 }]);
         let route_all = |seed: u64| -> Vec<usize> {
             let mut p =
-                SimPolicy::new(PolicyKind::Random, &s, norm, 0.5, None, seed).unwrap();
+                SimPolicy::new(PolicyKind::Random, &s, norm, 0.5, None, seed, None).unwrap();
             (0..64)
                 .map(|i| p.route(&Query { id: i, t_in: 10, t_out: 10 }))
                 .collect()

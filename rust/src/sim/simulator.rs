@@ -54,6 +54,7 @@
 
 use super::metrics::{MetricsRecorder, NodeStats, SimMetrics};
 use super::policy::SimPolicy;
+use crate::control::{CarbonConfig, CarbonMeter};
 use crate::coordinator::BatchWindow;
 use crate::models::ModelSet;
 use crate::scheduler::group_by_shape;
@@ -101,6 +102,7 @@ pub struct Simulator<'a> {
     arrival_label: String,
     seed: u64,
     zeta: f64,
+    carbon: Option<CarbonConfig>,
 }
 
 /// Heap events are `Copy`: batch membership lives in the node FIFOs, so
@@ -220,6 +222,7 @@ impl<'a> Simulator<'a> {
             arrival_label: "trace".to_string(),
             seed: 0,
             zeta: 0.5,
+            carbon: None,
         }
     }
 
@@ -229,6 +232,16 @@ impl<'a> Simulator<'a> {
         self.arrival_label = arrival.to_string();
         self.seed = seed;
         self.zeta = zeta;
+        self
+    }
+
+    /// Meter realized grams-CO₂ per carbon window: each completion's
+    /// predicted energy is converted at the grid intensity of its virtual
+    /// completion instant ([`CarbonMeter`]), and the per-window totals
+    /// land in the metrics artifact. Simulator-owned so every compared
+    /// policy is accounted under the identical signal.
+    pub fn with_carbon(mut self, cfg: CarbonConfig) -> Simulator<'a> {
+        self.carbon = Some(cfg);
         self
     }
 
@@ -347,6 +360,7 @@ impl<'a> Simulator<'a> {
         let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
         let mut seq = 0u64;
         let mut recorder = MetricsRecorder::new(self.cfg.slo_s, self.cfg.per_query);
+        let mut meter = self.carbon.as_ref().map(CarbonMeter::new);
 
         // Start the next ready batch on an idle node: service time is the
         // slowest member's predicted runtime (lockstep batch execution).
@@ -410,7 +424,7 @@ impl<'a> Simulator<'a> {
                 let qi = order[next_arrival] as usize;
                 next_arrival += 1;
                 let t = arrival_t.unwrap();
-                let k = policy.route(&queries[qi]);
+                let k = policy.route_at(t, &queries[qi])?;
                 debug_assert!(k < self.sets.len());
                 let node = &mut nodes[k];
                 node.fifo.push_back(InFlight {
@@ -429,6 +443,9 @@ impl<'a> Simulator<'a> {
                 continue;
             }
             let Ev { t, kind, .. } = heap.pop().unwrap();
+            // Controller hook: time-aware policies (replan) step their
+            // carbon governor / pattern learner on every event edge.
+            policy.tick(t)?;
             match kind {
                 EvKind::Timeout { node: k } => {
                     let k = k as usize;
@@ -463,6 +480,10 @@ impl<'a> Simulator<'a> {
                         let e = energy_of(k, qi);
                         node.stats.energy_j += e;
                         recorder.record(queries[qi].id as u64, k, f.arrive_ns, start, t, e);
+                        if let Some(m) = meter.as_mut() {
+                            m.record(t, e);
+                        }
+                        policy.on_complete((start - f.arrive_ns) as f64 / 1e9);
                     }
                     try_start(k, t, &mut nodes, &mut heap, &mut seq);
                 }
@@ -486,7 +507,7 @@ impl<'a> Simulator<'a> {
             );
         }
 
-        Ok(recorder.finish(
+        let mut m = recorder.finish(
             policy.kind().label().to_string(),
             self.arrival_label.clone(),
             self.seed,
@@ -494,7 +515,11 @@ impl<'a> Simulator<'a> {
             n_dropped as u64,
             policy.plan_stats(),
             nodes.into_iter().map(|n| n.stats).collect(),
-        ))
+        );
+        m.replan_stats = policy.replan_stats();
+        m.zeta_trajectory = policy.zeta_trajectory();
+        m.carbon = meter.map(CarbonMeter::report);
+        Ok(m)
     }
 }
 
@@ -515,7 +540,7 @@ mod tests {
     }
 
     fn greedy(s: &[ModelSet], zeta: f64) -> SimPolicy {
-        SimPolicy::new(PolicyKind::Greedy, s, norm(s), zeta, None, 7).unwrap()
+        SimPolicy::new(PolicyKind::Greedy, s, norm(s), zeta, None, 7, None).unwrap()
     }
 
     /// Tests that inspect per-query lifecycles opt into retention.
@@ -733,5 +758,69 @@ mod tests {
             .run(&[q(0, 1, 1)], &[0.0, 1.0], &mut greedy(&s, 0.5))
             .unwrap_err();
         assert!(err.to_string().contains("arrival"), "{err}");
+    }
+
+    #[test]
+    fn carbon_meter_totals_match_energy_times_intensity() {
+        use crate::control::CarbonConfig;
+        use crate::scheduler::GridSignal;
+        let s = sets();
+        // Flat signal: realized carbon must equal total energy converted
+        // at the single intensity, however completions spread over time.
+        let carbon = CarbonConfig {
+            signal: GridSignal {
+                hourly: vec![300.0; 24],
+            },
+            zeta_min: 0.5,
+            zeta_max: 0.5,
+            day_s: 24.0,
+        };
+        let queries: Vec<Query> = (0..20).map(|i| q(i, 50 + 10 * (i % 3), 80)).collect();
+        let arrivals: Vec<f64> = (0..20).map(|i| 0.1 * i as f64).collect();
+        let m = Simulator::new(&s, SimConfig::default())
+            .with_carbon(carbon)
+            .run(&queries, &arrivals, &mut greedy(&s, 0.5))
+            .unwrap();
+        let r = m.carbon.as_ref().unwrap();
+        assert!((r.total_g - m.total_energy_j / 3.6e6 * 300.0).abs() < 1e-9);
+        let windowed: f64 = r.windows.iter().map(|w| w.energy_j).sum();
+        assert!((windowed - m.total_energy_j).abs() < 1e-9);
+        // Metering alone adds no control plane: no ζ trajectory.
+        assert!(m.zeta_trajectory.is_none());
+        assert!(m.replan_stats.is_none());
+    }
+
+    #[test]
+    fn replan_policy_runs_under_the_simulator_clock() {
+        use crate::control::{CarbonConfig, ControlConfig};
+        let s = sets();
+        let cfg = ControlConfig {
+            replan_every: 8,
+            slo_trigger_s: Some(0.2),
+            carbon: Some(CarbonConfig {
+                day_s: 24.0, // one carbon window per simulated second
+                ..CarbonConfig::typical(0.2, 0.8)
+            }),
+        };
+        let mut p =
+            SimPolicy::new(PolicyKind::Replan, &s, norm(&s), 0.5, None, 7, Some(&cfg))
+                .unwrap();
+        let queries: Vec<Query> = (0..100)
+            .map(|i| q(i, 20 + 10 * (i % 4), 40 + 20 * (i % 3)))
+            .collect();
+        // Spans ~5 virtual seconds → several carbon windows.
+        let arrivals: Vec<f64> = (0..100).map(|i| 0.05 * i as f64).collect();
+        let m = Simulator::new(&s, SimConfig::default())
+            .with_carbon(cfg.carbon.clone().unwrap())
+            .labeled("fixed", 7, 0.5)
+            .run(&queries, &arrivals, &mut p)
+            .unwrap();
+        assert_eq!(m.policy, "replan");
+        assert_eq!(m.n_queries, 100);
+        let rs = m.replan_stats.unwrap();
+        assert!(rs.replans >= 1, "{rs:?}");
+        assert_eq!(rs.planned_routed + rs.fallback_routed, 100, "{rs:?}");
+        assert!(m.carbon.is_some());
+        assert!(!m.zeta_trajectory.as_ref().unwrap().is_empty());
     }
 }

@@ -224,6 +224,58 @@ fn prop_warm_extend_matches_cold_bucketed_solve() {
     });
 }
 
+/// Extend edge cases: an empty batch is exactly `solve()` (no state
+/// disturbance), a batch of already-seen shapes stays on the warm path
+/// without growing the shape set, and a stream of small extends lands on
+/// the same optimum as one big extend of their concatenation.
+#[test]
+fn extend_edge_cases_empty_seen_only_and_split_batches() {
+    let mut rng = Rng::new(0xE9E);
+    let sets = random_sets(&mut rng, 3);
+    let table = random_table(&mut rng, 5);
+    let initial = shaped_workload(&mut rng, &table, 24, 0);
+    let gammas = vec![1.0 / 3.0; 3];
+    let zeta = 0.6;
+    let planner = Planner::new(&sets).gammas(&gammas).zeta(zeta);
+
+    // Empty batch before any solve: behaves as the first solve.
+    let mut s = planner.session(&initial).unwrap();
+    let obj0 = s.extend(&[]).unwrap().objective;
+    assert_eq!(s.n_queries(), initial.len());
+    // Empty batch after a solve: a no-op re-returning the optimum.
+    let obj1 = s.extend(&[]).unwrap().objective;
+    assert_eq!(obj0, obj1);
+    let cold = cold_objective(&sets, &initial, &gammas, CapacityMode::Eq3Only, zeta);
+    assert!((obj0 - cold).abs() < 1e-9, "session {obj0} vs cold {cold}");
+
+    // A batch made only of already-seen shapes must not grow the shape
+    // set (warm path) and must still match the from-scratch optimum.
+    let n_shapes_before = s.n_shapes();
+    let seen_batch = shaped_workload(&mut rng, &table, 17, initial.len());
+    s.extend(&seen_batch).unwrap();
+    assert_eq!(s.n_shapes(), n_shapes_before, "no new shape slots");
+    let mut cumulative = initial.clone();
+    cumulative.extend_from_slice(&seen_batch);
+    let want = cold_objective(&sets, &cumulative, &gammas, CapacityMode::Eq3Only, zeta);
+    let got = s.assignment().unwrap().objective;
+    assert!((got - want).abs() < 1e-9, "warm {got} vs cold {want}");
+
+    // Many small extends ≡ one large extend of the concatenation.
+    let tail = shaped_workload(&mut rng, &table, 30, cumulative.len());
+    let mut many = planner.session(&cumulative).unwrap();
+    for chunk in tail.chunks(7) {
+        many.extend(chunk).unwrap();
+    }
+    let mut one = planner.session(&cumulative).unwrap();
+    one.extend(&tail).unwrap();
+    let (a, b) = (
+        many.assignment().unwrap().objective,
+        one.assignment().unwrap().objective,
+    );
+    assert!((a - b).abs() < 1e-9, "split {a} vs single {b}");
+    assert_eq!(many.n_queries(), one.n_queries());
+}
+
 #[test]
 fn prop_greedy_never_beats_the_exact_optimum() {
     forall(Config::default().cases(30), |rng| {
@@ -546,8 +598,9 @@ fn sketch_rezeta_matches_fresh_sketch_sessions() {
 #[test]
 fn sketch_sessions_gate_the_query_level_api_and_vice_versa() {
     // Sketch-fed sessions have no per-query identity, so the per-query
-    // API must refuse loudly (not panic, not silently mis-answer); and a
-    // query-backed session must refuse the shape-level entry points.
+    // API must refuse loudly (not panic, not silently mis-answer). A
+    // query-backed session, by contrast, supports *both* granularities:
+    // shape-level solves are the online controller's re-solve surface.
     // Per-query-only backends cannot solve shape-level instances at all.
     use ecoserve::workload::ShapeSketch;
 
@@ -572,9 +625,17 @@ fn sketch_sessions_gate_the_query_level_api_and_vice_versa() {
 
     let mut query_session = planner.session(&queries).unwrap();
     assert!(!query_session.is_sketch_fed());
+    // Shape-level solve on a query-backed session: same optimum as the
+    // per-query solve, flows conserving every shape's multiplicity.
+    let shape_obj = query_session.solve_shapes().unwrap().objective;
+    let flows = query_session.current_flows().unwrap();
+    for (row, &m) in flows.iter().zip(&query_session.groups().multiplicity) {
+        assert_eq!(row.iter().sum::<usize>(), m);
+    }
+    let query_obj = query_session.solve().unwrap().objective;
     assert!(
-        query_session.solve_shapes().is_err(),
-        "shape-level solve on a query-backed session must bail"
+        (shape_obj - query_obj).abs() < 1e-9,
+        "shape-level {shape_obj} vs per-query {query_obj}"
     );
 
     let mut greedy = planner

@@ -2,8 +2,10 @@
 //! determinism (same seed + config ⇒ byte-identical metrics JSON, single
 //! and parallel `--seeds` replicated), plan-vs-baseline energy ordering
 //! on capacity-feasible instances, trace-replay arrival fidelity,
-//! streaming-vs-exact quantile agreement, and the version-2 metrics
-//! artifact golden (byte-exact round-trip + version-1 rejection).
+//! streaming-vs-exact quantile agreement, the version-3 metrics artifact
+//! golden (byte-exact round-trip + version-1/-2 rejection), and the
+//! online control plane (replan+carbon determinism; the carbon-governed
+//! replan's energy never exceeding the static plan's on a Gamma burst).
 
 use ecoserve::models::{AccuracyModel, ModelSet, Normalizer, Target, WorkloadModel};
 use ecoserve::plan::{Plan, Planner, SolverKind};
@@ -109,6 +111,9 @@ fn run_compare(seed: u64) -> (Vec<SimMetrics>, Vec<Query>, Vec<ModelSet>) {
             ..SimConfig::default()
         },
         arrival_label: "poisson:40".to_string(),
+        // PolicyKind::all() includes replan, which needs a control config
+        // (static ζ here: no carbon signal attached).
+        control: Some(Default::default()),
     };
     let rows = compare(&spec, &queries, &arrivals, &PolicyKind::all()).unwrap();
     (rows, queries, sets)
@@ -158,6 +163,7 @@ fn parallel_seeds_compare_is_byte_identical() {
                     ..SimConfig::default()
                 },
                 arrival_label: "poisson:30".to_string(),
+                control: Some(Default::default()),
             };
             let grid = compare_replicated(
                 &spec,
@@ -258,6 +264,7 @@ fn trace_replay_preserves_arrival_timestamps() {
         0.5,
         None,
         1,
+        None,
     )
     .unwrap();
     let cfg = SimConfig {
@@ -294,9 +301,16 @@ fn streaming_quantiles_track_exact_quantiles_on_simulated_runs() {
             .times(n, &mut rng.fork(2))
             .unwrap();
         let norm = Normalizer::from_workload(&sets, &queries);
-        let mut policy =
-            ecoserve::sim::SimPolicy::new(PolicyKind::Greedy, &sets, norm, 0.5, None, seed)
-                .unwrap();
+        let mut policy = ecoserve::sim::SimPolicy::new(
+            PolicyKind::Greedy,
+            &sets,
+            norm,
+            0.5,
+            None,
+            seed,
+            None,
+        )
+        .unwrap();
         let cfg = SimConfig {
             max_batch: 4,
             max_wait_s: 0.02,
@@ -332,13 +346,13 @@ fn sorted_max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(0.0f64, f64::max)
 }
 
-/// Golden: the committed version-2 artifact round-trips byte-exactly
-/// through `SimMetrics::from_json` → `to_json`, and the version-1 layout
-/// is rejected with a migration message.
+/// Golden: the committed version-3 artifact round-trips byte-exactly
+/// through `SimMetrics::from_json` → `to_json`, and the version-1 and
+/// version-2 layouts are rejected with migration messages.
 #[test]
 fn metrics_artifact_golden_roundtrip_and_version_gate() {
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("tests/fixtures/sim_metrics_v2.json");
+        .join("tests/fixtures/sim_metrics_v3.json");
     let text = std::fs::read_to_string(&path).unwrap();
     let parsed = Json::parse(&text).unwrap();
     let m = SimMetrics::from_json(&parsed).unwrap();
@@ -347,13 +361,157 @@ fn metrics_artifact_golden_roundtrip_and_version_gate() {
     assert_eq!(m.n_queries, 7);
     assert_eq!(m.latency_hist.n(), 7);
     assert_eq!(m.plan_decisions, Some((5, 2)));
+    // A lean (no control plane) artifact parses with the control blocks
+    // absent, and reserializes without inventing them.
+    assert_eq!(m.replan_stats, None);
+    assert_eq!(m.carbon, None);
+    assert_eq!(m.zeta_trajectory, None);
     // Byte-exact reserialization pins the schema.
     assert_eq!(m.to_json().to_string_pretty(), text);
 
-    let v1_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("tests/fixtures/sim_metrics_v1.json");
-    let v1 = Json::parse(&std::fs::read_to_string(&v1_path).unwrap()).unwrap();
-    let err = SimMetrics::from_json(&v1).unwrap_err().to_string();
-    assert!(err.contains("version 1"), "{err}");
-    assert!(err.contains("regenerate"), "{err}");
+    for (fixture, tag) in [
+        ("tests/fixtures/sim_metrics_v1.json", "version 1"),
+        ("tests/fixtures/sim_metrics_v2.json", "version 2"),
+    ] {
+        let old_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(fixture);
+        let old = Json::parse(&std::fs::read_to_string(&old_path).unwrap()).unwrap();
+        let err = SimMetrics::from_json(&old).unwrap_err().to_string();
+        assert!(err.contains(tag), "{fixture}: {err}");
+        assert!(err.contains("regenerate"), "{fixture}: {err}");
+    }
+}
+
+/// Model sets where accuracy and energy are strongly anti-correlated:
+/// the cheapest model is the least accurate. Pushing ζ up must then
+/// strictly shed energy, which is what the carbon governor exploits.
+fn anticorrelated_sets() -> Vec<ModelSet> {
+    let mut rng = Rng::new(9);
+    let mut sets = random_sets(&mut rng, 3);
+    for (i, s) in sets.iter_mut().enumerate() {
+        let scale = 1.0 + 4.0 * i as f64; // energy: 1×, 5×, 9×
+        s.energy.coefs = [0.5 * scale, 8.0 * scale, 0.003 * scale];
+        s.accuracy = AccuracyModel::new(&s.model_id, 40.0 + 15.0 * i as f64);
+    }
+    sets
+}
+
+fn control_cfg() -> ecoserve::control::ControlConfig {
+    ecoserve::control::ControlConfig {
+        replan_every: 16,
+        slo_trigger_s: Some(0.5),
+        carbon: Some(ecoserve::control::CarbonConfig {
+            // One grid "day" per 6 simulated seconds (0.25 s windows): a
+            // multi-second run sweeps the whole diurnal curve, trough to
+            // peak, so the governor genuinely moves ζ.
+            day_s: 6.0,
+            ..ecoserve::control::CarbonConfig::typical(0.3, 0.95)
+        }),
+    }
+}
+
+/// The full control stack — closed-loop replanning under carbon-aware ζ
+/// governance — is as deterministic as the static policies: same seed and
+/// config, byte-identical artifacts (including the carbon and replan
+/// blocks and the ζ trajectory).
+#[test]
+fn replan_with_carbon_is_byte_identical_across_runs() {
+    let one = || {
+        let mut rng = Rng::new(4242);
+        let sets = anticorrelated_sets();
+        let queries = shaped_workload(&mut rng.fork(1), 6, 300);
+        let plan = plan_for(&sets, &queries, 0.3, 4242);
+        let spec = CompareSpec {
+            sets: &sets,
+            norm: plan.normalizer(),
+            zeta: 0.3,
+            plan: Some(&plan),
+            seed: 4242,
+            cfg: SimConfig {
+                max_batch: 4,
+                max_wait_s: 0.02,
+                slo_s: 5.0,
+                ..SimConfig::default()
+            },
+            arrival_label: "gamma:60:4".to_string(),
+            control: Some(control_cfg()),
+        };
+        let kinds = [PolicyKind::Plan, PolicyKind::Replan, PolicyKind::Greedy];
+        let grid = compare_replicated(
+            &spec,
+            &queries,
+            Arrivals::Sampled(ArrivalProcess::GammaBurst { rate: 60.0, cv2: 4.0 }),
+            &kinds,
+            2,
+        )
+        .unwrap();
+        for runs in &grid {
+            for m in runs {
+                // Carbon metering covers every policy in the grid...
+                assert!(m.carbon.is_some(), "{}: no carbon block", m.policy);
+                assert!(m.carbon.as_ref().unwrap().total_g > 0.0);
+                // ...but only replan rows carry the control-loop stats.
+                assert_eq!(m.replan_stats.is_some(), m.policy == "replan");
+                assert_eq!(m.zeta_trajectory.is_some(), m.policy == "replan");
+            }
+        }
+        replicated_to_json(&grid).to_string_pretty()
+    };
+    let a = one();
+    assert_eq!(a, one(), "control stack not byte-identical");
+    assert!(a.contains("total_carbon_g"));
+    // Per-run artifacts round-trip with control blocks intact.
+}
+
+/// With the carbon band floored at the static ζ, the governor only ever
+/// pushes ζ *up* (toward energy) as the grid dirties — so on sets where
+/// accuracy trades against energy, the replanned run never spends more
+/// energy than the frozen static plan it replaces. This is the CI
+/// sim-smoke gate, asserted in-process on a Gamma burst.
+#[test]
+fn carbon_governed_replan_never_spends_more_energy_than_the_static_plan() {
+    let mut rng = Rng::new(7);
+    let sets = anticorrelated_sets();
+    let queries = shaped_workload(&mut rng.fork(1), 6, 400);
+    let zeta = 0.3;
+    let plan = plan_for(&sets, &queries, zeta, 7);
+    let spec = CompareSpec {
+        sets: &sets,
+        norm: plan.normalizer(),
+        zeta,
+        plan: Some(&plan),
+        seed: 7,
+        cfg: SimConfig {
+            max_batch: 4,
+            max_wait_s: 0.02,
+            slo_s: 5.0,
+            ..SimConfig::default()
+        },
+        arrival_label: "gamma:60:4".to_string(),
+        // Band floor = static ζ: replan's operational ζ ≥ the plan's.
+        control: Some(control_cfg()),
+    };
+    let arrivals = ArrivalProcess::GammaBurst { rate: 60.0, cv2: 4.0 }
+        .times(queries.len(), &mut Rng::new(7))
+        .unwrap();
+    let rows = compare(
+        &spec,
+        &queries,
+        &arrivals,
+        &[PolicyKind::Plan, PolicyKind::Replan],
+    )
+    .unwrap();
+    let plan_m = &rows[0];
+    let replan_m = &rows[1];
+    let rs = replan_m.replan_stats.unwrap();
+    assert!(rs.replans > 0, "control loop never re-solved");
+    assert!(rs.planned_routed > 0, "deficit routing never engaged");
+    // Small slack: the first `replan_every - 1` arrivals route via the
+    // ζ-cost fallback before the first solve exists.
+    let eps = 0.02 * plan_m.total_energy_j.abs();
+    assert!(
+        replan_m.total_energy_j <= plan_m.total_energy_j + eps,
+        "replan {} J > plan {} J",
+        replan_m.total_energy_j,
+        plan_m.total_energy_j
+    );
 }
