@@ -9,8 +9,9 @@ keys to gate on; every value is a *ceiling in seconds* chosen generously
 for CI runners. A measurement regresses when it exceeds factor x its
 baseline ceiling. "series" style lists are matched entry-by-entry on the
 identity keys the baseline entry carries (any of `n_queries`, `policy`,
-`n_lines`, `name` — so one size can have several gated rows, e.g. one per
-policy); plain objects are walked recursively; keys present only in the
+`engine`, `n_lines`, `name` — so one size can have several gated rows,
+e.g. one per policy per engine); plain objects are walked recursively;
+keys present only in the
 actual output are ignored, while a baseline key missing from the actual
 output is an error (the bench stopped emitting something we gate on).
 
@@ -22,7 +23,7 @@ import json
 import sys
 
 # Keys that identify a list entry (matched, never gated).
-IDENTITY_KEYS = ("n_queries", "policy", "n_lines", "name")
+IDENTITY_KEYS = ("n_queries", "policy", "engine", "n_lines", "name")
 # Annotation keys (never gated).
 SKIP_KEYS = ("bench", "note", "smoke") + IDENTITY_KEYS
 

@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Unit tests for the bench regression gate (check_bench_regression.py).
+
+Run from the repo root (or any directory):
+
+    python3 .github/scripts/test_check_bench_regression.py
+
+CI runs these in the `tooling` job so a gate refactor can't silently stop
+matching series rows or comparing ceilings.
+"""
+
+import os
+import sys
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from check_bench_regression import IDENTITY_KEYS, walk
+
+
+def gate(baseline, actual, factor=2.0):
+    failures = []
+    walk(baseline, actual, "$", factor, failures)
+    return failures
+
+
+class WalkTests(unittest.TestCase):
+    def test_scalar_within_band_passes(self):
+        self.assertEqual(gate({"load_s": 1.0}, {"load_s": 1.9}), [])
+
+    def test_scalar_over_factor_fails(self):
+        failures = gate({"load_s": 1.0}, {"load_s": 2.1})
+        self.assertEqual(len(failures), 1)
+        self.assertIn("exceeds", failures[0])
+
+    def test_missing_gated_key_fails(self):
+        failures = gate({"load_s": 1.0}, {})
+        self.assertEqual(len(failures), 1)
+        self.assertIn("missing", failures[0])
+
+    def test_extra_actual_keys_are_ignored(self):
+        actual = {"load_s": 0.5, "lines_per_s": 1e6, "note": "new field"}
+        self.assertEqual(gate({"load_s": 1.0}, actual), [])
+
+    def test_annotation_keys_are_never_gated(self):
+        # "note"/"bench"/"smoke" and identity keys carry strings or
+        # match-only values; none of them should produce a comparison.
+        baseline = {"bench": "x", "note": "y", "smoke": True, "policy": "plan"}
+        self.assertEqual(gate(baseline, {}), [])
+
+    def test_series_matches_on_compound_identity(self):
+        baseline = {
+            "series": [
+                {"n_queries": 100, "policy": "plan", "engine": "lockstep", "memo_s": 1.0},
+                {"n_queries": 100, "policy": "plan", "engine": "continuous", "memo_s": 4.0},
+            ]
+        }
+        actual = {
+            "series": [
+                {"n_queries": 100, "policy": "plan", "engine": "lockstep", "memo_s": 1.5},
+                {"n_queries": 100, "policy": "plan", "engine": "continuous", "memo_s": 7.0},
+            ]
+        }
+        self.assertEqual(gate(baseline, actual), [])
+        # Each row is gated against its own ceiling: swap the entries'
+        # timings and the lockstep row (ceiling 1.0) must fail alone.
+        actual["series"][0]["memo_s"] = 7.0
+        actual["series"][1]["memo_s"] = 1.5
+        failures = gate(baseline, actual)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("engine=lockstep", failures[0])
+
+    def test_ambiguous_identity_fails_instead_of_gating_first_match(self):
+        # A baseline row without "engine" matches both engine variants of
+        # the same (n_queries, policy): the gate must refuse, not pick one.
+        baseline = {"series": [{"n_queries": 100, "policy": "plan", "memo_s": 1.0}]}
+        actual = {
+            "series": [
+                {"n_queries": 100, "policy": "plan", "engine": "lockstep", "memo_s": 0.1},
+                {"n_queries": 100, "policy": "plan", "engine": "continuous", "memo_s": 99.0},
+            ]
+        }
+        failures = gate(baseline, actual)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("2 bench entries", failures[0])
+
+    def test_missing_series_row_fails(self):
+        baseline = {"series": [{"policy": "greedy", "engine": "continuous", "memo_s": 1.0}]}
+        failures = gate(baseline, {"series": []})
+        self.assertEqual(len(failures), 1)
+        self.assertIn("missing from the bench output", failures[0])
+
+    def test_baseline_entry_without_identity_fails(self):
+        failures = gate({"series": [{"memo_s": 1.0}]}, {"series": [{"memo_s": 0.5}]})
+        self.assertEqual(len(failures), 1)
+        self.assertIn("identity key", failures[0])
+
+    def test_factor_is_respected(self):
+        self.assertEqual(gate({"wall_s": 1.0}, {"wall_s": 2.9}, factor=3.0), [])
+        self.assertEqual(len(gate({"wall_s": 1.0}, {"wall_s": 3.1}, factor=3.0)), 1)
+
+    def test_engine_is_an_identity_key(self):
+        self.assertIn("engine", IDENTITY_KEYS)
+
+    def test_non_numeric_actual_for_gated_key_fails(self):
+        failures = gate({"load_s": 1.0}, {"load_s": "fast"})
+        self.assertEqual(len(failures), 1)
+        self.assertIn("expected a number", failures[0])
+
+
+if __name__ == "__main__":
+    unittest.main()

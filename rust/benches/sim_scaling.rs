@@ -14,9 +14,14 @@
 //!   O(|Q|) by construction); its totals are cross-checked against the
 //!   new loop to 1e-9 so the speedup ratio compares identical work.
 //!
-//! It also times the streaming JSONL trace loader (so trace replay isn't
-//! the bottleneck at 10M lines) and one `--seeds 3` parallel policy
-//! comparison, then writes everything to `BENCH_sim.json`.
+//! Each (size, policy) row is also re-run under the iteration-level
+//! continuous-batching engine (`EngineKind::Continuous`, sizes ≤ 1M —
+//! one heap event per iteration rather than per batch), cross-checked
+//! for exact total-energy agreement with lockstep and gated as its own
+//! series entry. It also times the streaming JSONL trace loader (so
+//! trace replay isn't the bottleneck at 10M lines) and one `--seeds 3`
+//! parallel policy comparison, then writes everything to
+//! `BENCH_sim.json`.
 //! `cargo bench --bench sim_scaling`.
 //!
 //! Setting `ECOSERVE_BENCH_SMOKE=1` shrinks the sweep (20k/100k queries,
@@ -33,8 +38,8 @@ use ecoserve::models::{ModelSet, Normalizer};
 use ecoserve::plan::{Plan, Planner, SolverKind};
 use ecoserve::scheduler::CapacityMode;
 use ecoserve::sim::{
-    compare_replicated, ARRIVAL_SEED_SALT, ArrivalProcess, Arrivals, CompareSpec, PolicyKind,
-    SimConfig, SimMetrics, SimPolicy, Simulator,
+    compare_replicated, ARRIVAL_SEED_SALT, ArrivalProcess, Arrivals, CompareSpec, EngineKind,
+    PolicyKind, SimConfig, SimMetrics, SimPolicy, Simulator,
 };
 use ecoserve::testkit::synthetic_set;
 use ecoserve::util::{Json, Rng, Stopwatch};
@@ -338,7 +343,7 @@ fn policy_for(
     plan: Option<&Plan>,
     seed: u64,
 ) -> SimPolicy {
-    SimPolicy::new(kind, sets, norm, ZETA, plan, seed).expect("policy")
+    SimPolicy::new(kind, sets, norm, ZETA, plan, seed, None).expect("policy")
 }
 
 fn sim_run(
@@ -379,6 +384,10 @@ fn main() {
     };
     // Legacy holds O(|Q|) outcomes + an O(|Q|) event heap: cap its sizes.
     let legacy_cap = if smoke { usize::MAX } else { 1_000_000 };
+    // The continuous engine pays one heap event per iteration (prefill
+    // chunk or decode step) instead of one per batch — tens of events per
+    // query at these shapes — so the 10M row stays lockstep-only.
+    let continuous_cap = if smoke { usize::MAX } else { 1_000_000 };
 
     let mut series: Vec<Json> = Vec::new();
     for &n in sizes {
@@ -405,9 +414,7 @@ fn main() {
                 max_batch,
                 max_wait_s,
                 slo_s: 60.0,
-                duration_s: None,
-                per_query: false,
-                memoize: true,
+                ..SimConfig::default()
             };
             let (m_memo, memo_s) = sim_run(
                 &sets,
@@ -440,6 +447,7 @@ fn main() {
             let mut fields = vec![
                 ("n_queries", Json::num(n as f64)),
                 ("policy", Json::str(kind.label())),
+                ("engine", Json::str("lockstep")),
                 ("memo_s", Json::num(memo_s)),
                 ("memo_qps", Json::num(n as f64 / memo_s.max(1e-12))),
                 ("cold_s", Json::num(cold_s)),
@@ -490,6 +498,44 @@ fn main() {
                 speedup_note
             );
             series.push(Json::obj(fields));
+
+            // Continuous engine on the same trace. Plan and greedy route
+            // time-independently and both engines charge the fitted
+            // whole-query energy at retirement, so totals must agree; the
+            // wall time is gated as its own (n, policy, engine) row.
+            if n <= continuous_cap {
+                let (m_cont, cont_s) = sim_run(
+                    &sets,
+                    SimConfig {
+                        engine: EngineKind::Continuous,
+                        ..streaming
+                    },
+                    &queries,
+                    &arrivals,
+                    &mut policy_for(kind, &sets, norm, plan_ref, 42),
+                );
+                assert_eq!(m_cont.n_queries as usize, n);
+                assert_close(
+                    "continuous vs lockstep energy",
+                    m_cont.total_energy_j,
+                    m_memo.total_energy_j,
+                );
+                println!(
+                    "  n={n} policy={} engine=continuous: {:.3} s ({:.2}M q/s), p95 TTFT {:.3} s",
+                    kind.label(),
+                    cont_s,
+                    n as f64 / cont_s.max(1e-12) / 1e6,
+                    m_cont.p95_ttft_s
+                );
+                series.push(Json::obj(vec![
+                    ("n_queries", Json::num(n as f64)),
+                    ("policy", Json::str(kind.label())),
+                    ("engine", Json::str("continuous")),
+                    ("memo_s", Json::num(cont_s)),
+                    ("memo_qps", Json::num(n as f64 / cont_s.max(1e-12))),
+                    ("p95_ttft_s", Json::num(m_cont.p95_ttft_s)),
+                ]));
+            }
         }
     }
 

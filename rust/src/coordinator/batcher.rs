@@ -61,6 +61,16 @@ impl BatchWindow {
     pub fn aged(&self, oldest_entry_ns: u64, now_ns: u64) -> bool {
         now_ns >= self.deadline(oldest_entry_ns)
     }
+
+    /// Working-set slots still open when `in_flight` sequences are already
+    /// admitted. The simulator's continuous-batching engine admits up to
+    /// this many queued arrivals at every iteration boundary (the
+    /// iteration-level counterpart of the lockstep size trigger; the age
+    /// trigger does not apply — admission is greedy).
+    #[inline]
+    pub fn slots_free(&self, in_flight: usize) -> usize {
+        self.max_batch.saturating_sub(in_flight)
+    }
 }
 
 /// Per-model accumulation queue.
@@ -322,6 +332,21 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn slots_free_complements_the_size_trigger() {
+        let w = BatchWindow {
+            max_batch: 4,
+            max_wait_ns: 1,
+        };
+        assert_eq!(w.slots_free(0), 4);
+        assert_eq!(w.slots_free(3), 1);
+        // At and past the size trigger no slot is open — the same boundary
+        // `filled` reports.
+        for in_flight in 0..8 {
+            assert_eq!(w.slots_free(in_flight) == 0, w.filled(in_flight));
+        }
     }
 
     #[test]

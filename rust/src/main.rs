@@ -27,7 +27,7 @@ use ecoserve::perfmodel::Cluster;
 use ecoserve::plan::{Plan, Planner, SolverKind};
 use ecoserve::report;
 use ecoserve::scheduler::{self, CapacityMode};
-use ecoserve::sim::{self, ArrivalProcess, CompareSpec, PolicyKind, SimConfig};
+use ecoserve::sim::{self, ArrivalProcess, CompareSpec, EngineKind, PolicyKind, SimConfig};
 use ecoserve::stats;
 use ecoserve::util::{logging, Args, Rng};
 use ecoserve::workload::{self, Query};
@@ -116,10 +116,12 @@ COMMANDS
   simulate                  deterministic discrete-event serving simulation
                             [--policy plan|replan|greedy|round-robin|random|
                              compare]
+                            [--engine lockstep|continuous]
                             [--plan FILE] [--arrival poisson:R|gamma:R:CV2|
                              trace] [--trace FILE] [--queries N] [--zeta X]
                             [--duration S] [--max-batch N] [--max-wait-ms MS]
-                            [--slo-ms MS] [--seeds N] [--per-query]
+                            [--slo-ms MS] [--ttft-slo-ms MS] [--tpot-slo-ms MS]
+                            [--seeds N] [--per-query]
                             [--replan-every N] [--slo-trigger-ms MS]
                             [--carbon] [--carbon-band MIN:MAX]
                             [--carbon-day-s S] [--out metrics.json]
@@ -651,6 +653,29 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     if !slo_ms.is_finite() || slo_ms < 0.0 {
         anyhow::bail!("--slo-ms must be finite and >= 0, got {slo_ms}");
     }
+    // Engine selection: lockstep (batch-serial, the paper's measurement
+    // protocol) or continuous (iteration-level batching, phase split).
+    let engine_arg = args.opt_or("engine", "lockstep");
+    let engine = EngineKind::parse(&engine_arg).ok_or_else(|| {
+        anyhow::anyhow!("--engine expects lockstep|continuous, got '{engine_arg}'")
+    })?;
+    // Token-level SLOs (optional): TTFT/TPOT attainment is reported only
+    // when the corresponding flag is set.
+    let token_slo = |flag: &str| -> anyhow::Result<Option<f64>> {
+        args.opt(flag)
+            .map(|s| {
+                s.parse::<f64>()
+                    .ok()
+                    .filter(|ms| ms.is_finite() && *ms > 0.0)
+                    .map(|ms| ms / 1000.0)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("--{flag} expects positive milliseconds, got '{s}'")
+                    })
+            })
+            .transpose()
+    };
+    let ttft_slo_s = token_slo("ttft-slo-ms")?;
+    let tpot_slo_s = token_slo("tpot-slo-ms")?;
 
     // Online control plane (ecoserve::control). Always constructed so
     // `--policy replan` and `--policy compare` work without extra flags;
@@ -716,10 +741,13 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         max_batch,
         max_wait_s: max_wait_ms / 1000.0,
         slo_s: slo_ms / 1000.0,
+        ttft_slo_s,
+        tpot_slo_s,
         duration_s,
         // Exact quantiles + per-query lifecycles: O(|Q|) memory, opt-in.
         per_query: args.flag("per-query"),
         memoize: true,
+        engine,
     };
     let spec = CompareSpec {
         sets,
@@ -789,6 +817,18 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             100.0 * m.slo_attainment,
             m.makespan_s
         );
+        print!(
+            "  engine {} | TTFT p95 {:.3} s | TPOT p95 {:.4} s | prefill {:.1} J | \
+             decode {:.1} J",
+            m.engine, m.p95_ttft_s, m.p95_tpot_s, m.prefill_energy_j, m.decode_energy_j
+        );
+        if let (Some(slo), Some(att)) = (m.ttft_slo_s, m.ttft_attainment) {
+            print!(" | TTFT SLO({slo}s) {:.1}%", 100.0 * att);
+        }
+        if let (Some(slo), Some(att)) = (m.tpot_slo_s, m.tpot_attainment) {
+            print!(" | TPOT SLO({slo}s) {:.1}%", 100.0 * att);
+        }
+        println!();
         if let Some((followed, fallback)) = m.plan_decisions {
             println!("  plan followed {followed} queries, fallback routed {fallback}");
         }

@@ -114,6 +114,16 @@ fn ffn_expert_bytes(spec: &LlmSpec) -> f64 {
     per_layer * a.n_layers as f64 * a.dtype_bytes as f64
 }
 
+/// Representative KV-cache context for a whole decode phase: a query that
+/// prefills `t_in` tokens and generates `t_out` walks contexts
+/// `t_in..t_in+t_out`, so the phase-average decode step runs at the
+/// midpoint. Summarizing the phase by one step at this context keeps the
+/// (linear-in-`c`) KV-read term exact in expectation while costing one
+/// roofline evaluation instead of `t_out`.
+pub fn mean_decode_context(t_in: u32, t_out: u32) -> u32 {
+    t_in.saturating_add(t_out / 2)
+}
+
 /// Arithmetic intensity (FLOPs per HBM byte) — used by perf analysis and
 /// the §Perf roofline discussion.
 pub fn intensity(w: &Work) -> f64 {
@@ -199,6 +209,14 @@ mod tests {
         let w1 = decode_step(&mix, 128, 1);
         let w32 = decode_step(&mix, 128, 32);
         assert!(w1.hbm_bytes < 0.55 * w32.hbm_bytes, "{} vs {}", w1.hbm_bytes, w32.hbm_bytes);
+    }
+
+    #[test]
+    fn mean_decode_context_is_the_phase_midpoint() {
+        assert_eq!(mean_decode_context(128, 256), 256);
+        assert_eq!(mean_decode_context(128, 0), 128);
+        // Saturates instead of wrapping on adversarial token counts.
+        assert_eq!(mean_decode_context(u32::MAX, u32::MAX), u32::MAX);
     }
 
     #[test]

@@ -6,6 +6,6 @@ pub mod flops;
 pub mod ground_truth;
 pub mod phase;
 
-pub use flops::{decode_step, intensity, prefill, Work};
+pub use flops::{decode_step, intensity, mean_decode_context, prefill, Work};
 pub use ground_truth::{Cluster, NoiseModel, PowerTrace, Segment};
-pub use phase::{dispatch_overhead_s, run_phase, PhaseProfile};
+pub use phase::{dispatch_overhead_s, query_phases, run_phase, PhaseProfile, QueryPhases};

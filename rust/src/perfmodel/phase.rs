@@ -2,7 +2,7 @@
 //! tensor-parallel GPU group through the roofline model, yielding duration
 //! and average board power per GPU.
 
-use super::flops::Work;
+use super::flops::{decode_step, mean_decode_context, prefill, Work};
 use crate::config::LlmSpec;
 use crate::hardware::Node;
 
@@ -61,6 +61,44 @@ pub fn run_phase(spec: &LlmSpec, node: &Node, work: &Work, tp: u32) -> PhaseProf
     }
 }
 
+/// Roofline decomposition of one whole query at batch 1: the prefill pass
+/// over `t_in` prompt tokens, then `t_out` decode steps summarized by one
+/// representative step at the phase-mean KV context
+/// ([`mean_decode_context`]).
+///
+/// The simulator's continuous-batching engine uses the *ratios* of these
+/// phase costs to split each query's fitted whole-query `r_K`/`e_K`
+/// prediction into an iteration-level prefill chunk and per-token decode
+/// steps — the fitted totals stay the source of truth (and the lockstep
+/// cross-check), while the roofline supplies the phase proportions the
+/// bilinear models cannot see.
+#[derive(Debug, Clone, Copy)]
+pub struct QueryPhases {
+    /// prefill duration, s (batch 1)
+    pub prefill_s: f64,
+    /// duration of one decode step at the mean context, s (batch 1)
+    pub decode_step_s: f64,
+    /// board energy of the prefill phase across the TP group, J
+    pub prefill_j: f64,
+    /// board energy of all `t_out` decode steps across the TP group, J
+    pub decode_j: f64,
+}
+
+/// Decompose a `(t_in, t_out)` query on `spec`'s native TP degree.
+pub fn query_phases(spec: &LlmSpec, node: &Node, t_in: u32, t_out: u32) -> QueryPhases {
+    let tp = spec.n_gpus;
+    let pre = run_phase(spec, node, &prefill(spec, t_in.max(1), 1), tp);
+    let c = mean_decode_context(t_in, t_out);
+    let dec = run_phase(spec, node, &decode_step(spec, c, 1), tp);
+    let gpus = tp as f64;
+    QueryPhases {
+        prefill_s: pre.duration_s,
+        decode_step_s: dec.duration_s,
+        prefill_j: pre.duration_s * pre.gpu_power_w * gpus,
+        decode_j: dec.duration_s * dec.gpu_power_w * gpus * t_out as f64,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,6 +145,26 @@ mod tests {
         let t1 = run_phase(&m, &n, &w, 1).duration_s;
         assert!(t4 < t1);
         assert!(t4 > t1 / 4.0); // comm + overhead prevent perfect scaling
+    }
+
+    #[test]
+    fn query_phases_split_tracks_workload_shape() {
+        let m = lookup("llama2-7b").unwrap();
+        let n = node();
+        // Long prompt, one token out: prefill dominates both time and energy.
+        let long_in = query_phases(&m, &n, 4096, 1);
+        assert!(long_in.prefill_s > long_in.decode_step_s);
+        assert!(long_in.prefill_j > long_in.decode_j);
+        // Short prompt, long generation: the decode phase dominates.
+        let long_out = query_phases(&m, &n, 16, 1024);
+        let decode_total_s = 1024.0 * long_out.decode_step_s;
+        assert!(decode_total_s > long_out.prefill_s);
+        assert!(long_out.decode_j > long_out.prefill_j);
+        // All components finite and non-negative; zero generation means
+        // zero decode energy.
+        let no_decode = query_phases(&m, &n, 64, 0);
+        assert!(no_decode.prefill_s > 0.0 && no_decode.prefill_j > 0.0);
+        assert_eq!(no_decode.decode_j, 0.0);
     }
 
     #[test]

@@ -111,15 +111,18 @@ pub fn coefficients(sets: &[ModelSet]) -> Table {
 pub fn sim_summary(m: &SimMetrics) -> Table {
     let mut t = Table::new(
         &format!(
-            "Simulated serving: policy={} arrival={} seed={} ({} queries, {} dropped)",
-            m.policy, m.arrival, m.seed, m.n_queries, m.n_dropped
+            "Simulated serving: policy={} engine={} arrival={} seed={} \
+             ({} queries, {} dropped)",
+            m.policy, m.engine, m.arrival, m.seed, m.n_queries, m.n_dropped
         ),
         &[
             "node",
             "queries",
-            "batches",
+            "iters",
             "mean batch",
             "energy (J)",
+            "prefill (J)",
+            "decode (J)",
             "busy (s)",
             "q/s",
             "util",
@@ -142,6 +145,8 @@ pub fn sim_summary(m: &SimMetrics) -> Table {
             nd.batches.to_string(),
             format!("{:.2}", nd.mean_batch_size()),
             fnum(nd.energy_j, 1),
+            fnum(nd.prefill_j, 1),
+            fnum(nd.energy_j - nd.prefill_j, 1),
             format!("{:.3}", nd.busy_s),
             si(qps, 1),
             format!("{:.1}%", 100.0 * util),
@@ -169,7 +174,13 @@ pub fn sim_comparison_replicated(grid: &[Vec<SimMetrics>]) -> Table {
     if with_carbon {
         headers.push("carbon (g)");
     }
-    headers.extend(["mean lat (s)", "p95 lat (s)", "SLO att.", "makespan (s)"]);
+    headers.extend([
+        "mean lat (s)",
+        "p95 lat (s)",
+        "p95 TTFT (s)",
+        "SLO att.",
+        "makespan (s)",
+    ]);
     let mut t = Table::new(
         &format!(
             "Policy comparison over {n_seeds} replicate arrival draws \
@@ -208,6 +219,7 @@ pub fn sim_comparison_replicated(grid: &[Vec<SimMetrics>]) -> Table {
         row.extend([
             pm(&series(|m| m.mean_latency_s), 3, 1.0),
             pm(&series(|m| m.p95_latency_s), 3, 1.0),
+            pm(&series(|m| m.p95_ttft_s), 3, 1.0),
             format!("{}%", pm(&series(|m| m.slo_attainment), 1, 100.0)),
             pm(&series(|m| m.makespan_s), 2, 1.0),
         ]);
@@ -232,6 +244,8 @@ pub fn sim_comparison(rows: &[SimMetrics]) -> Table {
         "mean lat (s)",
         "p95 lat (s)",
         "queue (s)",
+        "p95 TTFT (s)",
+        "p95 TPOT (s)",
         "SLO att.",
         "makespan (s)",
         "q/s",
@@ -258,6 +272,8 @@ pub fn sim_comparison(rows: &[SimMetrics]) -> Table {
             format!("{:.3}", m.mean_latency_s),
             format!("{:.3}", m.p95_latency_s),
             format!("{:.3}", m.mean_queue_s),
+            format!("{:.3}", m.p95_ttft_s),
+            format!("{:.4}", m.p95_tpot_s),
             format!("{:.1}%", 100.0 * m.slo_attainment),
             format!("{:.2}", m.makespan_s),
             si(qps, 1),
@@ -307,11 +323,12 @@ mod tests {
         use crate::sim::metrics::MetricsRecorder;
         use crate::sim::NodeStats;
         let ns = |s: f64| (s * 1e9).round() as u64;
-        let mut r = MetricsRecorder::new(30.0, false);
-        r.record(0, 0, ns(0.0), ns(0.25), ns(0.75), 6.25);
-        r.record(1, 0, ns(0.25), ns(0.25), ns(0.75), 6.25);
+        let mut r = MetricsRecorder::new(30.0, None, None, false);
+        r.record(0, 0, ns(0.0), ns(0.25), ns(0.4), ns(0.75), 8, 6.25, 2.5);
+        r.record(1, 0, ns(0.25), ns(0.25), ns(0.4), ns(0.75), 8, 6.25, 2.5);
         let m = r.finish(
             "greedy".into(),
+            "continuous".into(),
             "poisson:10".into(),
             42,
             0.5,
@@ -322,12 +339,15 @@ mod tests {
                 queries: 2,
                 batches: 1,
                 energy_j: 12.5,
+                prefill_j: 5.0,
                 busy_s: 0.5,
             }],
         );
         let summary = sim_summary(&m).to_ascii();
         assert!(summary.contains("llama2-7b"), "{summary}");
         assert!(summary.contains("policy=greedy"), "{summary}");
+        assert!(summary.contains("engine=continuous"), "{summary}");
+        assert!(summary.contains("prefill (J)"), "{summary}");
         let cmp = sim_comparison(std::slice::from_ref(&m)).to_ascii();
         assert!(cmp.contains("greedy"), "{cmp}");
         assert!(cmp.contains("poisson:10"), "{cmp}");

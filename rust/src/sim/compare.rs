@@ -178,7 +178,7 @@ pub fn compare_replicated(
 pub fn comparison_to_json(rows: &[SimMetrics]) -> Json {
     Json::obj(vec![
         ("format", Json::str("ecoserve.sim-comparison")),
-        ("version", Json::num(3.0)),
+        ("version", Json::num(4.0)),
         (
             "policies",
             Json::arr(rows.iter().map(|m| m.to_json())),
@@ -196,7 +196,7 @@ pub fn replicated_to_json(grid: &[Vec<SimMetrics>]) -> Json {
         .unwrap_or_default();
     Json::obj(vec![
         ("format", Json::str("ecoserve.sim-comparison")),
-        ("version", Json::num(3.0)),
+        ("version", Json::num(4.0)),
         ("seeds", Json::Arr(seeds)),
         (
             "policies",
@@ -226,6 +226,8 @@ pub fn replicated_to_json(grid: &[Vec<SimMetrics>]) -> Json {
                         ),
                         ("mean_latency_s", stat(&series(|m| m.mean_latency_s))),
                         ("p95_latency_s", stat(&series(|m| m.p95_latency_s))),
+                        ("p95_ttft_s", stat(&series(|m| m.p95_ttft_s))),
+                        ("p95_tpot_s", stat(&series(|m| m.p95_tpot_s))),
                         ("slo_attainment", stat(&series(|m| m.slo_attainment))),
                         ("makespan_s", stat(&series(|m| m.makespan_s))),
                     ];
@@ -454,6 +456,6 @@ mod tests {
         assert!(grid[1].iter().all(|m| m.replan_stats.is_none()));
         let json = replicated_to_json(&grid).to_string_pretty();
         assert!(json.contains("\"total_carbon_g\""), "{json}");
-        assert!(json.contains("\"version\": 3"), "{json}");
+        assert!(json.contains("\"version\": 4"), "{json}");
     }
 }

@@ -7,13 +7,36 @@
 //! query and computed exact quantiles by sorting at the end — O(|Q|)
 //! memory and the single largest cost of a large run. Version 2 streams:
 //! a `MetricsRecorder` folds each completion into O(1) accumulators
-//! (counts, sums, maxima, SLO attainment) plus two fixed-bin log-scale
-//! [`LogHistogram`]s (latency and queue wait), from which p50/p95 are
-//! read back deterministically to within one bin ratio (≈ 9% relative;
-//! see [`crate::stats::histogram`]). Exact per-query outcomes — and the
+//! (counts, sums, maxima, SLO attainment) plus fixed-bin log-scale
+//! [`LogHistogram`]s, from which p50/p95 are read back deterministically
+//! to within one bin ratio (≈ 9% relative; see
+//! [`crate::stats::histogram`]). Exact per-query outcomes — and the
 //! exact sorted-vector quantiles they allow — are retained only on
 //! request (`--per-query`, [`crate::sim::SimConfig::per_query`]), which
 //! restores the O(|Q|) cost knowingly.
+//!
+//! # Token-level latency (artifact version 4)
+//!
+//! Version 4 records which engine produced the run (`engine`:
+//! `lockstep` or `continuous`, [`crate::sim::EngineKind`]) and adds the
+//! token-level latency metrics the continuous-batching engine exists to
+//! improve:
+//!
+//! * **TTFT** (time to first token) — arrival to the completion of the
+//!   query's first decode step, seconds. Under the lockstep engine the
+//!   first-token instant is synthesized as-if-streamed (batch start +
+//!   own prefill + one decode step), so the two engines are comparable.
+//! * **TPOT** (time per output token) — `(t_complete − t_first_token) /
+//!   max(1, n_tokens − 1)`: the steady-state inter-token gap; for a
+//!   single-token generation the first token is the only token and TPOT
+//!   degenerates to 0 elapsed over 1 token.
+//!
+//! Both stream through the same accumulator + log-histogram machinery as
+//! latency and queue wait, with optional SLOs (`--ttft-slo-ms`,
+//! `--tpot-slo-ms`) and attainment fractions. Energy is additionally
+//! split by phase: per-node `prefill_j`/`decode_j` and run-level
+//! `prefill_energy_j`/`decode_energy_j` (the calibrated prefill/decode
+//! split of the fitted per-query predictions).
 //!
 //! # Determinism
 //!
@@ -22,18 +45,18 @@
 //! round-trip formatting, and every value derives from virtual-time
 //! arithmetic folded in event order — so equal `(workload, policy, seed,
 //! config)` runs emit byte-identical artifacts. CI diffs two runs to
-//! enforce this.
+//! enforce this, for each engine.
 
 use crate::control::{CarbonReport, CarbonWindow, ReplanStats};
 use crate::stats::{quantile, LOG_HIST_BINS_PER_OCTAVE, LOG_HIST_LO_S, LogHistogram};
 use crate::util::Json;
 
 /// Version of the `ecoserve.sim-metrics` artifact this build writes.
-/// Version 3 adds the online-control fields (realized carbon per window,
-/// ζ trajectory, replan counters). Versions 1 (per-query exact quantiles,
-/// no histograms) and 2 (pre-control) are rejected on load with migration
-/// messages.
-pub const SIM_METRICS_VERSION: u32 = 3;
+/// Version 4 adds the engine label, TTFT/TPOT distributions (with
+/// optional SLOs), and the per-phase energy split. Versions 1 (per-query
+/// exact quantiles, no histograms), 2 (pre-control), and 3 (pre-phase-
+/// split) are rejected on load with migration messages.
+pub const SIM_METRICS_VERSION: u32 = 4;
 
 /// Lifecycle of one simulated query (all times in virtual seconds from
 /// simulation start). Only recorded when per-query retention is on.
@@ -45,9 +68,14 @@ pub struct QueryOutcome {
     /// index of the serving model/node
     pub model: usize,
     pub t_arrive: f64,
-    /// batch execution start (arrival + queue + batching wait)
+    /// execution start: batch start (lockstep) or working-set admission
+    /// (continuous)
     pub t_start: f64,
+    /// completion of the first decode step (= first response token)
+    pub t_first_token: f64,
     pub t_complete: f64,
+    /// generated tokens (the workload's `t_out`)
+    pub n_tokens: u32,
     /// predicted energy attributed to this query (Eq. 6 at its shape)
     pub energy_j: f64,
 }
@@ -60,6 +88,16 @@ impl QueryOutcome {
     pub fn queue_s(&self) -> f64 {
         self.t_start - self.t_arrive
     }
+
+    /// Time to first token: arrival → first decode-step completion.
+    pub fn ttft_s(&self) -> f64 {
+        self.t_first_token - self.t_arrive
+    }
+
+    /// Time per output token after the first (steady-state decode gap).
+    pub fn tpot_s(&self) -> f64 {
+        (self.t_complete - self.t_first_token) / self.n_tokens.saturating_sub(1).max(1) as f64
+    }
 }
 
 /// Accumulated counters for one simulated node (one hosted model).
@@ -67,9 +105,13 @@ impl QueryOutcome {
 pub struct NodeStats {
     pub model_id: String,
     pub queries: u64,
+    /// executed batches (lockstep) or iterations (continuous)
     pub batches: u64,
     pub energy_j: f64,
-    /// total virtual time the node's engine was executing batches
+    /// prefill's share of `energy_j` under the calibrated phase split
+    /// (decode is the complement)
+    pub prefill_j: f64,
+    /// total virtual time the node's engine was executing
     pub busy_s: f64,
 }
 
@@ -87,33 +129,60 @@ impl NodeStats {
 #[derive(Debug, Clone)]
 pub(crate) struct MetricsRecorder {
     slo_s: f64,
+    ttft_slo_s: Option<f64>,
+    tpot_slo_s: Option<f64>,
     n: u64,
     sum_latency_s: f64,
     sum_queue_s: f64,
+    sum_ttft_s: f64,
+    sum_tpot_s: f64,
     max_latency_s: f64,
     max_queue_s: f64,
+    max_ttft_s: f64,
+    max_tpot_s: f64,
     makespan_ns: u64,
     total_energy_j: f64,
+    prefill_energy_j: f64,
     slo_attained: u64,
+    ttft_attained: u64,
+    tpot_attained: u64,
     latency_hist: LogHistogram,
     queue_hist: LogHistogram,
+    ttft_hist: LogHistogram,
+    tpot_hist: LogHistogram,
     outcomes: Option<Vec<QueryOutcome>>,
 }
 
 impl MetricsRecorder {
-    pub(crate) fn new(slo_s: f64, per_query: bool) -> MetricsRecorder {
+    pub(crate) fn new(
+        slo_s: f64,
+        ttft_slo_s: Option<f64>,
+        tpot_slo_s: Option<f64>,
+        per_query: bool,
+    ) -> MetricsRecorder {
         MetricsRecorder {
             slo_s,
+            ttft_slo_s,
+            tpot_slo_s,
             n: 0,
             sum_latency_s: 0.0,
             sum_queue_s: 0.0,
+            sum_ttft_s: 0.0,
+            sum_tpot_s: 0.0,
             max_latency_s: 0.0,
             max_queue_s: 0.0,
+            max_ttft_s: 0.0,
+            max_tpot_s: 0.0,
             makespan_ns: 0,
             total_energy_j: 0.0,
+            prefill_energy_j: 0.0,
             slo_attained: 0,
+            ttft_attained: 0,
+            tpot_attained: 0,
             latency_hist: LogHistogram::new(),
             queue_hist: LogHistogram::new(),
+            ttft_hist: LogHistogram::new(),
+            tpot_hist: LogHistogram::new(),
             outcomes: per_query.then(Vec::new),
         }
     }
@@ -123,39 +192,65 @@ impl MetricsRecorder {
         self.n
     }
 
-    /// Fold one completed query. Causality (`arrive ≤ start ≤ complete`)
-    /// is the event loop's invariant; times are virtual nanoseconds.
+    /// Fold one completed query. Causality (`arrive ≤ start ≤ first
+    /// token ≤ complete`) is the event loop's invariant; times are
+    /// virtual nanoseconds, `n_tokens` the generated token count, and
+    /// `prefill_j` the prefill share of `energy_j`.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn record(
         &mut self,
         id: u64,
         model: usize,
         arrive_ns: u64,
         start_ns: u64,
+        first_token_ns: u64,
         complete_ns: u64,
+        n_tokens: u32,
         energy_j: f64,
+        prefill_j: f64,
     ) {
-        debug_assert!(arrive_ns <= start_ns && start_ns <= complete_ns);
+        debug_assert!(
+            arrive_ns <= start_ns && start_ns <= first_token_ns && first_token_ns <= complete_ns
+        );
         let latency_s = (complete_ns - arrive_ns) as f64 / 1e9;
         let queue_s = (start_ns - arrive_ns) as f64 / 1e9;
+        let ttft_s = (first_token_ns - arrive_ns) as f64 / 1e9;
+        let tpot_s =
+            (complete_ns - first_token_ns) as f64 / 1e9 / n_tokens.saturating_sub(1).max(1) as f64;
         self.n += 1;
         self.sum_latency_s += latency_s;
         self.sum_queue_s += queue_s;
+        self.sum_ttft_s += ttft_s;
+        self.sum_tpot_s += tpot_s;
         self.max_latency_s = self.max_latency_s.max(latency_s);
         self.max_queue_s = self.max_queue_s.max(queue_s);
+        self.max_ttft_s = self.max_ttft_s.max(ttft_s);
+        self.max_tpot_s = self.max_tpot_s.max(tpot_s);
         self.makespan_ns = self.makespan_ns.max(complete_ns);
         self.total_energy_j += energy_j;
+        self.prefill_energy_j += prefill_j;
         if latency_s <= self.slo_s {
             self.slo_attained += 1;
         }
+        if self.ttft_slo_s.is_some_and(|slo| ttft_s <= slo) {
+            self.ttft_attained += 1;
+        }
+        if self.tpot_slo_s.is_some_and(|slo| tpot_s <= slo) {
+            self.tpot_attained += 1;
+        }
         self.latency_hist.record(latency_s);
         self.queue_hist.record(queue_s);
+        self.ttft_hist.record(ttft_s);
+        self.tpot_hist.record(tpot_s);
         if let Some(outcomes) = &mut self.outcomes {
             outcomes.push(QueryOutcome {
                 id,
                 model,
                 t_arrive: arrive_ns as f64 / 1e9,
                 t_start: start_ns as f64 / 1e9,
+                t_first_token: first_token_ns as f64 / 1e9,
                 t_complete: complete_ns as f64 / 1e9,
+                n_tokens,
                 energy_j,
             });
         }
@@ -166,6 +261,7 @@ impl MetricsRecorder {
     pub(crate) fn finish(
         self,
         policy: String,
+        engine: String,
         arrival: String,
         seed: u64,
         zeta: f64,
@@ -175,12 +271,20 @@ impl MetricsRecorder {
     ) -> SimMetrics {
         let n = self.n;
         let mean = |sum: f64| if n == 0 { 0.0 } else { sum / n as f64 };
+        let attainment = |attained: u64| {
+            if n == 0 {
+                0.0
+            } else {
+                attained as f64 / n as f64
+            }
+        };
         // Quantile estimates are bin upper edges, which sit strictly above
         // every sample in the bin — clamp to the exact streaming maximum
         // so the artifact never reports p95 > max (the estimate stays
         // within the same one-bin-ratio error band).
         SimMetrics {
             policy,
+            engine,
             arrival,
             seed,
             zeta,
@@ -188,6 +292,8 @@ impl MetricsRecorder {
             n_dropped,
             makespan_s: self.makespan_ns as f64 / 1e9,
             total_energy_j: self.total_energy_j,
+            prefill_energy_j: self.prefill_energy_j,
+            decode_energy_j: self.total_energy_j - self.prefill_energy_j,
             mean_latency_s: mean(self.sum_latency_s),
             p50_latency_s: self.latency_hist.quantile(0.5).min(self.max_latency_s),
             p95_latency_s: self.latency_hist.quantile(0.95).min(self.max_latency_s),
@@ -196,16 +302,26 @@ impl MetricsRecorder {
             p50_queue_s: self.queue_hist.quantile(0.5).min(self.max_queue_s),
             p95_queue_s: self.queue_hist.quantile(0.95).min(self.max_queue_s),
             max_queue_s: self.max_queue_s,
+            mean_ttft_s: mean(self.sum_ttft_s),
+            p50_ttft_s: self.ttft_hist.quantile(0.5).min(self.max_ttft_s),
+            p95_ttft_s: self.ttft_hist.quantile(0.95).min(self.max_ttft_s),
+            max_ttft_s: self.max_ttft_s,
+            mean_tpot_s: mean(self.sum_tpot_s),
+            p50_tpot_s: self.tpot_hist.quantile(0.5).min(self.max_tpot_s),
+            p95_tpot_s: self.tpot_hist.quantile(0.95).min(self.max_tpot_s),
+            max_tpot_s: self.max_tpot_s,
             slo_s: self.slo_s,
-            slo_attainment: if n == 0 {
-                0.0
-            } else {
-                self.slo_attained as f64 / n as f64
-            },
+            slo_attainment: attainment(self.slo_attained),
+            ttft_slo_s: self.ttft_slo_s,
+            ttft_attainment: self.ttft_slo_s.map(|_| attainment(self.ttft_attained)),
+            tpot_slo_s: self.tpot_slo_s,
+            tpot_attainment: self.tpot_slo_s.map(|_| attainment(self.tpot_attained)),
             plan_decisions,
             nodes,
             latency_hist: self.latency_hist,
             queue_hist: self.queue_hist,
+            ttft_hist: self.ttft_hist,
+            tpot_hist: self.tpot_hist,
             outcomes: self.outcomes,
             // Control-plane blocks are attached by the simulator after the
             // streaming close-out (they come from the policy/meter, not
@@ -221,6 +337,8 @@ impl MetricsRecorder {
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimMetrics {
     pub policy: String,
+    /// execution model that produced the run (`lockstep`/`continuous`)
+    pub engine: String,
     pub arrival: String,
     pub seed: u64,
     pub zeta: f64,
@@ -231,6 +349,10 @@ pub struct SimMetrics {
     /// last completion time (virtual seconds)
     pub makespan_s: f64,
     pub total_energy_j: f64,
+    /// prefill's share of `total_energy_j` (calibrated phase split)
+    pub prefill_energy_j: f64,
+    /// decode's share of `total_energy_j` (complement of prefill)
+    pub decode_energy_j: f64,
     pub mean_latency_s: f64,
     /// histogram-estimated (≤ one bin ratio from exact; see module docs),
     /// clamped to the exact maximum so p50/p95 never exceed it
@@ -242,10 +364,26 @@ pub struct SimMetrics {
     pub p50_queue_s: f64,
     pub p95_queue_s: f64,
     pub max_queue_s: f64,
+    /// time to first token (arrival → first decode-step completion)
+    pub mean_ttft_s: f64,
+    pub p50_ttft_s: f64,
+    pub p95_ttft_s: f64,
+    pub max_ttft_s: f64,
+    /// time per output token after the first
+    pub mean_tpot_s: f64,
+    pub p50_tpot_s: f64,
+    pub p95_tpot_s: f64,
+    pub max_tpot_s: f64,
     /// latency SLO the attainment fraction is measured against
     pub slo_s: f64,
     /// fraction of queries with latency ≤ `slo_s`
     pub slo_attainment: f64,
+    /// TTFT SLO and attainment (`--ttft-slo-ms`; absent when unset)
+    pub ttft_slo_s: Option<f64>,
+    pub ttft_attainment: Option<f64>,
+    /// TPOT SLO and attainment (`--tpot-slo-ms`; absent when unset)
+    pub tpot_slo_s: Option<f64>,
+    pub tpot_attainment: Option<f64>,
     /// (plan-followed, fallback) router decisions, plan policy only
     pub plan_decisions: Option<(u64, u64)>,
     pub nodes: Vec<NodeStats>,
@@ -253,6 +391,10 @@ pub struct SimMetrics {
     pub latency_hist: LogHistogram,
     /// streaming queue-wait distribution
     pub queue_hist: LogHistogram,
+    /// streaming time-to-first-token distribution
+    pub ttft_hist: LogHistogram,
+    /// streaming time-per-output-token distribution
+    pub tpot_hist: LogHistogram,
     /// per-query lifecycle records; `Some` only when per-query retention
     /// (`--per-query`) was on — O(|Q|) memory, exact quantiles
     pub outcomes: Option<Vec<QueryOutcome>>,
@@ -336,6 +478,7 @@ impl SimMetrics {
             ("format", Json::str("ecoserve.sim-metrics")),
             ("version", Json::num(SIM_METRICS_VERSION as f64)),
             ("policy", Json::str(self.policy.clone())),
+            ("engine", Json::str(self.engine.clone())),
             ("arrival", Json::str(self.arrival.clone())),
             // As a decimal string: the f64-backed Json would round seeds
             // above 2^53 and the artifact could no longer reproduce the
@@ -346,6 +489,8 @@ impl SimMetrics {
             ("n_dropped", Json::num(self.n_dropped as f64)),
             ("makespan_s", Json::num(self.makespan_s)),
             ("total_energy_j", Json::num(self.total_energy_j)),
+            ("prefill_energy_j", Json::num(self.prefill_energy_j)),
+            ("decode_energy_j", Json::num(self.decode_energy_j)),
             ("mean_latency_s", Json::num(self.mean_latency_s)),
             ("p50_latency_s", Json::num(self.p50_latency_s)),
             ("p95_latency_s", Json::num(self.p95_latency_s)),
@@ -354,11 +499,21 @@ impl SimMetrics {
             ("p50_queue_s", Json::num(self.p50_queue_s)),
             ("p95_queue_s", Json::num(self.p95_queue_s)),
             ("max_queue_s", Json::num(self.max_queue_s)),
+            ("mean_ttft_s", Json::num(self.mean_ttft_s)),
+            ("p50_ttft_s", Json::num(self.p50_ttft_s)),
+            ("p95_ttft_s", Json::num(self.p95_ttft_s)),
+            ("max_ttft_s", Json::num(self.max_ttft_s)),
+            ("mean_tpot_s", Json::num(self.mean_tpot_s)),
+            ("p50_tpot_s", Json::num(self.p50_tpot_s)),
+            ("p95_tpot_s", Json::num(self.p95_tpot_s)),
+            ("max_tpot_s", Json::num(self.max_tpot_s)),
             ("slo_s", Json::num(self.slo_s)),
             ("slo_attainment", Json::num(self.slo_attainment)),
             ("mean_utilization", Json::num(self.mean_utilization())),
             ("latency_hist", hist_to_json(&self.latency_hist)),
             ("queue_hist", hist_to_json(&self.queue_hist)),
+            ("ttft_hist", hist_to_json(&self.ttft_hist)),
+            ("tpot_hist", hist_to_json(&self.tpot_hist)),
             (
                 "nodes",
                 Json::arr(self.nodes.iter().map(|nd| {
@@ -368,6 +523,10 @@ impl SimMetrics {
                         ("batches", Json::num(nd.batches as f64)),
                         ("mean_batch_size", Json::num(nd.mean_batch_size())),
                         ("energy_j", Json::num(nd.energy_j)),
+                        ("prefill_j", Json::num(nd.prefill_j)),
+                        // Derived, not stored: the complement is emitted so
+                        // dashboards need no arithmetic.
+                        ("decode_j", Json::num(nd.energy_j - nd.prefill_j)),
                         ("busy_s", Json::num(nd.busy_s)),
                         (
                             "utilization",
@@ -381,6 +540,14 @@ impl SimMetrics {
                 })),
             ),
         ];
+        if let (Some(slo), Some(att)) = (self.ttft_slo_s, self.ttft_attainment) {
+            fields.push(("ttft_slo_s", Json::num(slo)));
+            fields.push(("ttft_attainment", Json::num(att)));
+        }
+        if let (Some(slo), Some(att)) = (self.tpot_slo_s, self.tpot_attainment) {
+            fields.push(("tpot_slo_s", Json::num(slo)));
+            fields.push(("tpot_attainment", Json::num(att)));
+        }
         if let Some((hits, misses)) = self.plan_decisions {
             fields.push((
                 "plan_decisions",
@@ -437,6 +604,8 @@ impl SimMetrics {
         if let Some(outcomes) = self.outcomes.as_ref().filter(|o| !o.is_empty()) {
             let lats: Vec<f64> = outcomes.iter().map(QueryOutcome::latency_s).collect();
             let queues: Vec<f64> = outcomes.iter().map(QueryOutcome::queue_s).collect();
+            let ttfts: Vec<f64> = outcomes.iter().map(QueryOutcome::ttft_s).collect();
+            let tpots: Vec<f64> = outcomes.iter().map(QueryOutcome::tpot_s).collect();
             fields.push((
                 "exact",
                 Json::obj(vec![
@@ -444,6 +613,10 @@ impl SimMetrics {
                     ("p95_latency_s", Json::num(quantile(&lats, 0.95))),
                     ("p50_queue_s", Json::num(quantile(&queues, 0.5))),
                     ("p95_queue_s", Json::num(quantile(&queues, 0.95))),
+                    ("p50_ttft_s", Json::num(quantile(&ttfts, 0.5))),
+                    ("p95_ttft_s", Json::num(quantile(&ttfts, 0.95))),
+                    ("p50_tpot_s", Json::num(quantile(&tpots, 0.5))),
+                    ("p95_tpot_s", Json::num(quantile(&tpots, 0.95))),
                 ]),
             ));
         }
@@ -452,9 +625,8 @@ impl SimMetrics {
 
     /// Load an aggregates-only `SimMetrics` back from its artifact.
     /// Per-query outcomes (and the derived `exact` block) are not part of
-    /// the artifact's reload surface. Version 1 and 2 artifacts are
-    /// rejected with migration messages; the golden test pins both
-    /// behaviors.
+    /// the artifact's reload surface. Version 1–3 artifacts are rejected
+    /// with migration messages; the golden test pins both behaviors.
     pub fn from_json(v: &Json) -> anyhow::Result<SimMetrics> {
         match v.get("format").as_str() {
             Some("ecoserve.sim-metrics") => {}
@@ -476,6 +648,12 @@ impl SimMetrics {
                  ζ-trajectory, or replan fields); this build reads version \
                  {SIM_METRICS_VERSION} — regenerate with `ecoserve simulate` \
                  (add --carbon for per-window carbon accounting)"
+            ),
+            Some(3) => anyhow::bail!(
+                "sim-metrics artifact is version 3 (pre-phase-split: no engine \
+                 label, TTFT/TPOT distributions, or per-phase energy); this build \
+                 reads version {SIM_METRICS_VERSION} — regenerate with `ecoserve \
+                 simulate` (--engine lockstep|continuous selects the engine)"
             ),
             other => anyhow::bail!(
                 "unsupported sim-metrics artifact version {:?} (this build reads \
@@ -521,6 +699,10 @@ impl SimMetrics {
                         .get("energy_j")
                         .as_f64()
                         .ok_or_else(|| anyhow::anyhow!("node missing 'energy_j'"))?,
+                    prefill_j: nd
+                        .get("prefill_j")
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("node missing 'prefill_j'"))?,
                     busy_s: nd
                         .get("busy_s")
                         .as_f64()
@@ -618,8 +800,27 @@ impl SimMetrics {
                 )
             }
         };
+        // Optional token-level SLO pairs: absent keys stay `None`; a
+        // present SLO requires its attainment.
+        let opt_slo = |slo_key: &str, att_key: &str| -> anyhow::Result<(Option<f64>, Option<f64>)> {
+            match v.get(slo_key) {
+                Json::Null => Ok((None, None)),
+                s => {
+                    let slo = s.as_f64().ok_or_else(|| {
+                        anyhow::anyhow!("sim-metrics artifact: non-numeric '{slo_key}'")
+                    })?;
+                    let att = v.get(att_key).as_f64().ok_or_else(|| {
+                        anyhow::anyhow!("sim-metrics artifact: '{slo_key}' without '{att_key}'")
+                    })?;
+                    Ok((Some(slo), Some(att)))
+                }
+            }
+        };
+        let (ttft_slo_s, ttft_attainment) = opt_slo("ttft_slo_s", "ttft_attainment")?;
+        let (tpot_slo_s, tpot_attainment) = opt_slo("tpot_slo_s", "tpot_attainment")?;
         Ok(SimMetrics {
             policy: string("policy")?,
+            engine: string("engine")?,
             arrival: string("arrival")?,
             seed,
             zeta: num("zeta")?,
@@ -633,6 +834,8 @@ impl SimMetrics {
                 .ok_or_else(|| anyhow::anyhow!("sim-metrics artifact: missing 'n_dropped'"))?,
             makespan_s: num("makespan_s")?,
             total_energy_j: num("total_energy_j")?,
+            prefill_energy_j: num("prefill_energy_j")?,
+            decode_energy_j: num("decode_energy_j")?,
             mean_latency_s: num("mean_latency_s")?,
             p50_latency_s: num("p50_latency_s")?,
             p95_latency_s: num("p95_latency_s")?,
@@ -641,12 +844,26 @@ impl SimMetrics {
             p50_queue_s: num("p50_queue_s")?,
             p95_queue_s: num("p95_queue_s")?,
             max_queue_s: num("max_queue_s")?,
+            mean_ttft_s: num("mean_ttft_s")?,
+            p50_ttft_s: num("p50_ttft_s")?,
+            p95_ttft_s: num("p95_ttft_s")?,
+            max_ttft_s: num("max_ttft_s")?,
+            mean_tpot_s: num("mean_tpot_s")?,
+            p50_tpot_s: num("p50_tpot_s")?,
+            p95_tpot_s: num("p95_tpot_s")?,
+            max_tpot_s: num("max_tpot_s")?,
             slo_s: num("slo_s")?,
             slo_attainment: num("slo_attainment")?,
+            ttft_slo_s,
+            ttft_attainment,
+            tpot_slo_s,
+            tpot_attainment,
             plan_decisions,
             nodes,
             latency_hist: hist_from_json(v.get("latency_hist"), "latency_hist")?,
             queue_hist: hist_from_json(v.get("queue_hist"), "queue_hist")?,
+            ttft_hist: hist_from_json(v.get("ttft_hist"), "ttft_hist")?,
+            tpot_hist: hist_from_json(v.get("tpot_hist"), "tpot_hist")?,
             outcomes: None,
             replan_stats,
             carbon,
@@ -659,25 +876,40 @@ impl SimMetrics {
 mod tests {
     use super::*;
 
+    #[allow(clippy::too_many_arguments)]
     fn record_outcome(
         r: &mut MetricsRecorder,
         id: u64,
         model: usize,
         arrive_s: f64,
         start_s: f64,
+        first_token_s: f64,
         complete_s: f64,
+        n_tokens: u32,
     ) {
         let ns = |s: f64| (s * 1e9).round() as u64;
-        r.record(id, model, ns(arrive_s), ns(start_s), ns(complete_s), 2.0);
+        r.record(
+            id,
+            model,
+            ns(arrive_s),
+            ns(start_s),
+            ns(first_token_s),
+            ns(complete_s),
+            n_tokens,
+            2.0,
+            0.8,
+        );
     }
 
     fn metrics(per_query: bool) -> SimMetrics {
-        let mut r = MetricsRecorder::new(1.0, per_query);
-        record_outcome(&mut r, 0, 0, 0.0, 0.5, 1.5);
-        record_outcome(&mut r, 1, 0, 0.5, 0.5, 1.5);
-        record_outcome(&mut r, 2, 1, 1.0, 1.0, 3.0);
+        let mut r = MetricsRecorder::new(1.0, Some(0.45), None, per_query);
+        // TTFTs 0.7, 0.4, 0.5; TPOTs 0.2, 0.3, 1.5.
+        record_outcome(&mut r, 0, 0, 0.0, 0.5, 0.7, 1.5, 5);
+        record_outcome(&mut r, 1, 0, 0.5, 0.5, 0.9, 1.5, 3);
+        record_outcome(&mut r, 2, 1, 1.0, 1.0, 1.5, 3.0, 1);
         r.finish(
             "greedy".into(),
+            "lockstep".into(),
             "poisson:10".into(),
             42,
             0.5,
@@ -689,6 +921,7 @@ mod tests {
                     queries: 2,
                     batches: 1,
                     energy_j: 4.0,
+                    prefill_j: 1.6,
                     busy_s: 1.0,
                 },
                 NodeStats {
@@ -696,6 +929,7 @@ mod tests {
                     queries: 1,
                     batches: 1,
                     energy_j: 2.0,
+                    prefill_j: 0.8,
                     busy_s: 2.0,
                 },
             ],
@@ -705,10 +939,14 @@ mod tests {
     #[test]
     fn aggregates_are_correct() {
         let m = metrics(false);
+        assert_eq!(m.engine, "lockstep");
         assert_eq!(m.n_queries, 3);
         assert_eq!(m.n_dropped, 3);
         assert_eq!(m.makespan_s, 3.0);
         assert_eq!(m.total_energy_j, 6.0);
+        // Each query recorded 0.8 J of prefill against 2.0 J total.
+        assert!((m.prefill_energy_j - 2.4).abs() < 1e-12);
+        assert!((m.decode_energy_j - 3.6).abs() < 1e-12);
         // latencies: 1.5, 1.0, 2.0
         assert!((m.mean_latency_s - 1.5).abs() < 1e-12);
         assert_eq!(m.max_latency_s, 2.0);
@@ -719,6 +957,17 @@ mod tests {
         assert!((m.mean_queue_s - 0.5 / 3.0).abs() < 1e-12);
         assert_eq!(m.p50_queue_s, 0.0); // median queue wait is exactly zero
         assert_eq!(m.max_queue_s, 0.5);
+        // TTFTs 0.7, 0.4, 0.5: mean 8/15, max 0.7; TTFT SLO 0.45 admits
+        // only the 0.4 → attainment 1/3.
+        assert!((m.mean_ttft_s - (0.7 + 0.4 + 0.5) / 3.0).abs() < 1e-12);
+        assert_eq!(m.max_ttft_s, 0.7);
+        assert!((m.ttft_attainment.unwrap() - 1.0 / 3.0).abs() < 1e-12);
+        // TPOTs: (1.5−0.7)/4, (1.5−0.9)/2, and the single-token query's
+        // (3.0−1.5)/1 — the max.
+        assert!((m.mean_tpot_s - (0.2 + 0.3 + 1.5) / 3.0).abs() < 1e-12);
+        assert_eq!(m.max_tpot_s, 1.5);
+        // No TPOT SLO requested → no attainment reported.
+        assert!(m.tpot_slo_s.is_none() && m.tpot_attainment.is_none());
         // SLO 1.0 s: only the 1.0-latency query attains it.
         assert!((m.slo_attainment - 1.0 / 3.0).abs() < 1e-12);
         // utilization: (1/3 + 2/3)/2
@@ -726,6 +975,8 @@ mod tests {
         // Streaming mode retains nothing per query.
         assert!(m.outcomes.is_none());
         assert_eq!(m.latency_hist.n(), 3);
+        assert_eq!(m.ttft_hist.n(), 3);
+        assert_eq!(m.tpot_hist.n(), 3);
     }
 
     #[test]
@@ -735,9 +986,15 @@ mod tests {
         assert_eq!(outcomes.len(), 3);
         assert_eq!(outcomes[2].id, 2);
         assert!((outcomes[0].latency_s() - 1.5).abs() < 1e-12);
+        assert!((outcomes[0].ttft_s() - 0.7).abs() < 1e-12);
+        assert!((outcomes[0].tpot_s() - 0.2).abs() < 1e-12);
+        // Single-token generation: TPOT divisor floors at 1.
+        assert!((outcomes[2].tpot_s() - 1.5).abs() < 1e-12);
         let json = m.to_json().to_string_pretty();
         assert!(json.contains("\"exact\""), "{json}");
         assert!(json.contains("\"p95_latency_s\""));
+        assert!(json.contains("\"p95_ttft_s\""));
+        assert!(json.contains("\"p95_tpot_s\""));
         // Aggregates are identical with and without retention.
         let lean = metrics(false);
         assert_eq!(lean.p50_latency_s, m.p50_latency_s);
@@ -761,19 +1018,33 @@ mod tests {
         );
         for key in [
             "\"policy\"",
+            "\"engine\": \"lockstep\"",
             "\"arrival\"",
-            "\"version\": 3",
+            "\"version\": 4",
             "\"total_energy_j\"",
+            "\"prefill_energy_j\"",
+            "\"decode_energy_j\"",
             "\"slo_attainment\"",
+            "\"ttft_slo_s\"",
+            "\"ttft_attainment\"",
+            "\"mean_ttft_s\"",
+            "\"p95_tpot_s\"",
             "\"latency_hist\"",
             "\"queue_hist\"",
+            "\"ttft_hist\"",
+            "\"tpot_hist\"",
             "\"bins_per_octave\"",
             "\"p95_queue_s\"",
             "\"nodes\"",
+            "\"prefill_j\"",
+            "\"decode_j\"",
             "\"utilization\"",
         ] {
             assert!(a.contains(key), "missing {key} in {a}");
         }
+        // Absent SLOs emit no keys (no nulls in lean artifacts).
+        assert!(!a.contains("tpot_slo_s"));
+        assert!(!a.contains("tpot_attainment"));
         assert!(!a.contains("plan_decisions"));
         let mut m = metrics(false);
         m.plan_decisions = Some((2, 1));
@@ -861,6 +1132,15 @@ mod tests {
         assert!(err.contains("pre-control"), "{err}");
         assert!(err.contains("regenerate"), "{err}");
 
+        let v3 = Json::parse(
+            r#"{"format": "ecoserve.sim-metrics", "version": 3, "policy": "plan"}"#,
+        )
+        .unwrap();
+        let err = SimMetrics::from_json(&v3).unwrap_err().to_string();
+        assert!(err.contains("version 3"), "{err}");
+        assert!(err.contains("pre-phase-split"), "{err}");
+        assert!(err.contains("--engine"), "{err}");
+
         let foreign = Json::parse(r#"{"format": "ecoserve.plan", "version": 2}"#).unwrap();
         let err = SimMetrics::from_json(&foreign).unwrap_err().to_string();
         assert!(err.contains("ecoserve.sim-metrics"), "{err}");
@@ -875,8 +1155,9 @@ mod tests {
 
     #[test]
     fn empty_run_has_no_nans() {
-        let m = MetricsRecorder::new(1.0, false).finish(
+        let m = MetricsRecorder::new(1.0, None, None, false).finish(
             "greedy".into(),
+            "continuous".into(),
             "poisson:1".into(),
             1,
             0.5,
@@ -888,6 +1169,9 @@ mod tests {
         assert!(!text.contains("null"), "{text}");
         assert_eq!(m.mean_latency_s, 0.0);
         assert_eq!(m.p95_latency_s, 0.0);
+        assert_eq!(m.mean_ttft_s, 0.0);
+        assert_eq!(m.p95_tpot_s, 0.0);
         assert_eq!(m.slo_attainment, 0.0);
+        assert!(m.ttft_attainment.is_none());
     }
 }

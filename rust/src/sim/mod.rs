@@ -20,14 +20,19 @@
 //!   carbon-aware ζ control), ζ-cost greedy (shape-memoized),
 //!   round-robin, or seeded random;
 //! * [`Simulator`] — the zero-allocation event loop (arrive → route →
-//!   batch → execute → complete) on a virtual integer-nanosecond clock:
+//!   batch → execute → complete) on a virtual integer-nanosecond clock,
+//!   with two selectable engines ([`EngineKind`], `--engine`): batch-
+//!   serial **lockstep** (the paper's measurement protocol) and
+//!   iteration-level **continuous batching** with a calibrated
+//!   prefill/decode phase split. Both share the hot-path machinery:
 //!   `Copy` heap events, per-node index FIFOs instead of per-batch
 //!   vectors, arrivals streamed from one sorted array, and Eq. 6–7
-//!   service/energy predictions precomputed once per (shape, model) via
-//!   the scheduler's shape bucketing;
+//!   service/energy predictions (plus the phase split) precomputed once
+//!   per (shape, model) via the scheduler's shape bucketing;
 //! * [`SimMetrics`] — streaming aggregates in O(1) memory: counts, sums,
-//!   maxima, SLO attainment, and fixed-bin log-scale latency/queue-wait
-//!   histograms ([`crate::stats::LogHistogram`]) for p50/p95; per-query
+//!   maxima, SLO attainment, and fixed-bin log-scale histograms
+//!   ([`crate::stats::LogHistogram`]) for latency, queue wait, TTFT, and
+//!   TPOT p50/p95, plus per-phase (prefill/decode) energy; per-query
 //!   [`QueryOutcome`] lifecycles (and exact quantiles) only behind
 //!   `--per-query`. Serialized as a byte-stable versioned JSON artifact;
 //! * [`compare()`] / [`compare_replicated()`] — the same seeded trace
@@ -63,4 +68,4 @@ pub use compare::{
 };
 pub use metrics::{NodeStats, QueryOutcome, SIM_METRICS_VERSION, SimMetrics};
 pub use policy::{PolicyKind, SimPolicy};
-pub use simulator::{SimConfig, Simulator};
+pub use simulator::{EngineKind, SimConfig, Simulator};

@@ -5,7 +5,12 @@
 //! query's shape still has offline budget it follows the
 //! [`Plan`](crate::plan::Plan), then falls back to ζ-cost. The baselines
 //! are the same query-independent strategies the offline Fig. 3 sweep
-//! compares against, now exercised under queueing.
+//! compares against, now exercised under queueing. Policies are
+//! engine-agnostic: both the lockstep and the continuous-batching engine
+//! ([`crate::sim::EngineKind`]) call the same `route_at`/`tick`/
+//! `on_complete` hooks at arrival and event edges, so a routing decision
+//! depends on the arrival stream and the clock, never on how the node
+//! executes its batches.
 
 use crate::control::{ControlConfig, ReplanPolicy, ReplanStats};
 use crate::coordinator::{Policy, Router};

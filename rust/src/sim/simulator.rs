@@ -2,21 +2,40 @@
 //! execute → complete, on a virtual integer-nanosecond clock, built to
 //! replay tens of millions of queries.
 //!
-//! # Event model
+//! # Engines
 //!
-//! One node per hosted model. Each node batches under the production
-//! size/age triggers ([`BatchWindow`], the integer-time core shared with
-//! [`Batcher`](crate::coordinator::Batcher)) and executes serially.
-//! Three event kinds drive the run:
+//! One node per hosted model. Each node's engine executes under one of
+//! two models, selected by [`SimConfig::engine`] (CLI `--engine`):
 //!
-//! * **Arrive** — the policy routes the query to a node; the query joins
-//!   the node's FIFO and either fills a batch (size trigger) or arms the
-//!   node's age-flush deadline.
-//! * **Timeout** — the node checks its age trigger at the armed deadline;
-//!   an aged batch moves to the ready queue.
-//! * **Complete** — the engine frees, accounts the batch (service time =
-//!   slowest member's predicted runtime, energy = sum of members'
-//!   predicted energies), and starts the next ready batch.
+//! * **Lockstep** (`--engine lockstep`) — the node batches under the
+//!   production size/age triggers ([`BatchWindow`], the integer-time core
+//!   shared with [`Batcher`](crate::coordinator::Batcher)) and executes
+//!   whole batches serially: service time = slowest member's fitted
+//!   whole-query runtime, energy = sum of members' fitted energies. This
+//!   is the paper's batch-32 measurement protocol, and it is the
+//!   cross-check the continuous engine's totals are anchored to.
+//! * **Continuous** (`--engine continuous`) — iteration-level continuous
+//!   batching. The engine steps in *iterations*: each iteration runs one
+//!   prefill chunk (the oldest unprefilled working-set member's whole
+//!   prompt) or one decode step for the entire working set (duration =
+//!   slowest member's step). Queued arrivals join the working set at
+//!   iteration boundaries, up to `max_batch` slots
+//!   ([`BatchWindow::slots_free`]; the age trigger does not apply —
+//!   admission is greedy), and finished sequences retire immediately
+//!   instead of waiting for the slowest batch member.
+//!
+//! Per-query phase costs come from a *calibrated split* of the fitted
+//! Eq. 6–7 predictions: for zoo-known models the
+//! [`perfmodel::phase::run_phase`](crate::perfmodel::run_phase) roofline
+//! (prefill vs decode [`Work`](crate::perfmodel::Work) via
+//! `perfmodel::flops`) supplies the prefill/decode proportions of runtime
+//! and energy; for synthetic model ids the bilinear coefficients are
+//! decomposed directly (`c₀·t_in` prefill vs `(c₁ + c₂·t_in)·t_out`
+//! decode). The proportions rescale the fitted whole-query `r_K`/`e_K`
+//! so that a sequence run end-to-end spends exactly its fitted service
+//! time and energy — which is why lockstep and continuous runs agree on
+//! total energy, and why batch-size-1 workloads coincide (property-tested
+//! to 1e-9 in `tests/sim.rs`).
 //!
 //! # The zero-allocation hot path
 //!
@@ -26,51 +45,94 @@
 //!   index); batch membership lives in per-node index FIFOs
 //!   (`VecDeque<InFlight>`: query index + arrival time), where a batch is
 //!   simply the next `size` entries — no per-batch vectors, requests, or
-//!   model-id clones.
+//!   model-id clones. The continuous engine keeps its working set in a
+//!   small per-node `Vec` and reuses the same `Complete` event for
+//!   iteration boundaries.
 //! * **Lazy arrivals** — arrivals stream from one sorted index array
 //!   instead of pre-filling the event heap with |Q| entries; the heap
 //!   holds only O(nodes + in-flight batches) timeouts/completes.
-//! * **Shape-memoized predictions** — the Eq. 6–7 polynomials are
-//!   evaluated once per (shape, model) up front via the scheduler's
-//!   [`group_by_shape`] bucketing; per-batch service/energy evaluation is
-//!   a table lookup. `SimConfig::memoize = false` restores the pre-memo
-//!   per-batch evaluation (identical results, kept for benchmarking).
+//! * **Shape-memoized predictions** — the Eq. 6–7 polynomials *and* the
+//!   phase split are evaluated once per (shape, model) up front via the
+//!   scheduler's [`group_by_shape`] bucketing; per-iteration evaluation
+//!   is a table lookup. `SimConfig::memoize = false` restores the
+//!   per-member evaluation (identical results, kept for benchmarking).
 //! * **Streaming metrics** — completions fold into O(1) accumulators and
-//!   log-scale histograms ([`crate::stats::LogHistogram`]); per-query
-//!   outcomes are retained only under [`SimConfig::per_query`].
+//!   log-scale histograms ([`crate::stats::LogHistogram`]) — latency,
+//!   queue wait, TTFT, and TPOT; per-query outcomes are retained only
+//!   under [`SimConfig::per_query`].
 //!
 //! # Determinism contract
 //!
 //! The clock is a `u64` of virtual nanoseconds. Arrivals are processed in
 //! (timestamp, input-index) order and win ties against timer/complete
-//! events (which tie-break on creation order) — the same total order the
-//! PR 4 loop realized by numbering arrivals first. Service times and
-//! energies come from the fitted [`ModelSet`](crate::models::ModelSet)
-//! predictions, arrivals from a seeded [`Rng`](crate::util::Rng) — no
-//! wall-clock reads, no thread scheduling, no hash-order iteration feed
-//! any decision. Equal `(sets, queries, arrivals, policy, seed, config)`
-//! therefore produce identical [`SimMetrics`], byte-for-byte in JSON;
-//! `tests/sim.rs` and the CI `sim-smoke` step both enforce this.
+//! events (which tie-break on creation order) — under both engines.
+//! Service times and energies come from the fitted
+//! [`ModelSet`](crate::models::ModelSet) predictions, arrivals from a
+//! seeded [`Rng`](crate::util::Rng) — no wall-clock reads, no thread
+//! scheduling, no hash-order iteration feed any decision. Equal
+//! `(sets, queries, arrivals, policy, seed, config)` therefore produce
+//! identical [`SimMetrics`], byte-for-byte in JSON; `tests/sim.rs` and
+//! the CI `sim-smoke` step both enforce this for each engine.
 
 use super::metrics::{MetricsRecorder, NodeStats, SimMetrics};
 use super::policy::SimPolicy;
+use crate::config::{lookup, swing_node, LlmSpec};
 use crate::control::{CarbonConfig, CarbonMeter};
 use crate::coordinator::BatchWindow;
+use crate::hardware::Node as HwNode;
 use crate::models::ModelSet;
+use crate::perfmodel::query_phases;
 use crate::scheduler::group_by_shape;
 use crate::workload::Query;
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
 
+/// Execution model of each simulated node's engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// batch-serial lockstep: a batch runs at the slowest member's fitted
+    /// whole-query runtime (the paper's measurement protocol)
+    #[default]
+    Lockstep,
+    /// iteration-level continuous batching with a prefill/decode phase
+    /// split calibrated to the fitted whole-query predictions
+    Continuous,
+}
+
+impl EngineKind {
+    /// Artifact/CLI spelling.
+    pub fn label(&self) -> &'static str {
+        match self {
+            EngineKind::Lockstep => "lockstep",
+            EngineKind::Continuous => "continuous",
+        }
+    }
+
+    /// Parse the CLI spelling.
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s {
+            "lockstep" => Some(EngineKind::Lockstep),
+            "continuous" => Some(EngineKind::Continuous),
+            _ => None,
+        }
+    }
+}
+
 /// Knobs of the simulated serving tier.
 #[derive(Debug, Clone, Copy)]
 pub struct SimConfig {
-    /// per-node batch size trigger
+    /// per-node batch size trigger (lockstep) / working-set slots
+    /// (continuous)
     pub max_batch: usize,
-    /// per-node batch age trigger, seconds
+    /// per-node batch age trigger, seconds (lockstep only — continuous
+    /// admission is greedy at iteration boundaries)
     pub max_wait_s: f64,
     /// latency SLO the attainment metric is measured against, seconds
     pub slo_s: f64,
+    /// time-to-first-token SLO, seconds (attainment reported when set)
+    pub ttft_slo_s: Option<f64>,
+    /// time-per-output-token SLO, seconds (attainment reported when set)
+    pub tpot_slo_s: Option<f64>,
     /// drop arrivals after this virtual time (open-ended when `None`)
     pub duration_s: Option<f64>,
     /// retain per-query [`QueryOutcome`](super::QueryOutcome)s and emit
@@ -79,6 +141,8 @@ pub struct SimConfig {
     /// evaluate the fitted models once per (shape, model) instead of per
     /// batch member (identical results; `false` only for benchmarks)
     pub memoize: bool,
+    /// execution model (`--engine lockstep|continuous`)
+    pub engine: EngineKind,
 }
 
 impl Default for SimConfig {
@@ -87,9 +151,12 @@ impl Default for SimConfig {
             max_batch: 8,
             max_wait_s: 0.05,
             slo_s: 30.0,
+            ttft_slo_s: None,
+            tpot_slo_s: None,
             duration_s: None,
             per_query: false,
             memoize: true,
+            engine: EngineKind::Lockstep,
         }
     }
 }
@@ -106,12 +173,13 @@ pub struct Simulator<'a> {
 }
 
 /// Heap events are `Copy`: batch membership lives in the node FIFOs, so
-/// a completion needs only its node — the running batch is unique.
+/// a completion needs only its node — the running batch (lockstep) or
+/// iteration (continuous) is unique.
 #[derive(Debug, Clone, Copy)]
 enum EvKind {
-    /// node's age-flush deadline fires
+    /// node's age-flush deadline fires (lockstep only)
     Timeout { node: u32 },
-    /// node finishes its running batch
+    /// node finishes its running batch (lockstep) / iteration (continuous)
     Complete { node: u32 },
 }
 
@@ -154,9 +222,10 @@ struct InFlight {
     arrive_ns: u64,
 }
 
-/// Per-node state. The FIFO holds, front to back: the running batch
-/// (first `running` entries), flushed ready batches (`ready` holds their
-/// sizes), then the accumulating batcher tail (`pending` entries).
+/// Per-node state (lockstep engine). The FIFO holds, front to back: the
+/// running batch (first `running` entries), flushed ready batches
+/// (`ready` holds their sizes), then the accumulating batcher tail
+/// (`pending` entries).
 struct Node {
     fifo: VecDeque<InFlight>,
     running: usize,
@@ -168,9 +237,124 @@ struct Node {
     stats: NodeStats,
 }
 
+/// One working-set member of a continuous-batching node.
+#[derive(Debug, Clone, Copy)]
+struct ActiveSeq {
+    query: u64,
+    arrive_ns: u64,
+    /// admission into the working set (queue wait ends here)
+    start_ns: u64,
+    /// completion of the first decode step (token 1); `u64::MAX` = not
+    /// yet emitted
+    first_token_ns: u64,
+    prefilled: bool,
+    steps_left: u32,
+}
+
+/// What a continuous-batching node's running iteration is doing.
+#[derive(Debug, Clone, Copy)]
+enum IterKind {
+    /// prefilling working-set member `member`'s whole prompt
+    Prefill { member: usize },
+    /// one decode step for every working-set member
+    Decode,
+}
+
+/// Per-node state (continuous engine): an admission queue plus the
+/// resident working set, stepped one iteration at a time.
+struct CNode {
+    queue: VecDeque<InFlight>,
+    active: Vec<ActiveSeq>,
+    iter: Option<IterKind>,
+    iter_start: u64,
+    stats: NodeStats,
+}
+
 /// Seconds → virtual nanoseconds (round to nearest).
 fn to_ns(s: f64) -> u64 {
     (s * 1e9).round() as u64
+}
+
+/// Calibrated per-(model, shape) phase split: the fitted whole-query
+/// service time and energy, apportioned between one prefill chunk and
+/// `t_out` decode steps.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PhaseEntry {
+    /// prefill chunk duration, virtual ns
+    pub(crate) prefill_ns: u64,
+    /// one decode step, virtual ns
+    pub(crate) step_ns: u64,
+    /// prefill's share of the fitted whole-query energy, J
+    pub(crate) prefill_j: f64,
+}
+
+/// Prefill's share of a two-phase total, clamped to [0, 1]; degenerate
+/// splits (both phases zero) fall back to an even split.
+fn phase_frac(prefill: f64, decode: f64) -> f64 {
+    let f = prefill / (prefill + decode);
+    if f.is_finite() {
+        f.clamp(0.0, 1.0)
+    } else {
+        0.5
+    }
+}
+
+/// Per-set phase-split source. Models the zoo knows
+/// ([`crate::config::lookup`]) go through the §Perf roofline
+/// ([`query_phases`]: prefill vs mean-context decode `Work` on the Swing
+/// node at the model's native TP degree); synthetic/unknown ids decompose
+/// the fitted bilinear polynomials instead (`c₀·t_in` prefill weight vs
+/// `(c₁ + c₂·t_in)·t_out` decode weight, for runtime and energy alike).
+pub(crate) struct PhaseSplitter {
+    node: HwNode,
+    specs: Vec<Option<LlmSpec>>,
+}
+
+impl PhaseSplitter {
+    pub(crate) fn new(sets: &[ModelSet]) -> PhaseSplitter {
+        PhaseSplitter {
+            node: HwNode::new(swing_node()),
+            specs: sets.iter().map(|s| lookup(&s.model_id)).collect(),
+        }
+    }
+
+    /// (prefill share of runtime, prefill share of energy), both in [0, 1].
+    fn fracs(&self, set: &ModelSet, k: usize, t_in: u32, t_out: u32) -> (f64, f64) {
+        match &self.specs[k] {
+            Some(spec) => {
+                let ph = query_phases(spec, &self.node, t_in, t_out);
+                (
+                    phase_frac(ph.prefill_s, t_out as f64 * ph.decode_step_s),
+                    phase_frac(ph.prefill_j, ph.decode_j),
+                )
+            }
+            None => {
+                let (ti, to) = (t_in as f64, t_out as f64);
+                let [r0, r1, r2] = set.runtime.coefs;
+                let [e0, e1, e2] = set.energy.coefs;
+                (
+                    phase_frac(r0 * ti, (r1 + r2 * ti) * to),
+                    phase_frac(e0 * ti, (e1 + e2 * ti) * to),
+                )
+            }
+        }
+    }
+
+    /// The calibrated split for one query shape on model `k`: proportions
+    /// from the phase model, totals from the fitted predictions — so
+    /// `prefill_ns + t_out·step_ns` reproduces the fitted service time
+    /// (to rounding) and `prefill_j ≤` the fitted energy always.
+    pub(crate) fn entry(&self, set: &ModelSet, k: usize, t_in: u32, t_out: u32) -> PhaseEntry {
+        let (ti, to) = (t_in as f64, t_out as f64);
+        let service_s = set.runtime.predict(ti, to).max(0.0);
+        let energy_j = set.energy.predict(ti, to);
+        let (tf, ef) = self.fracs(set, k, t_in, t_out);
+        PhaseEntry {
+            prefill_ns: to_ns(service_s * tf),
+            step_ns: to_ns(service_s * (1.0 - tf) / to.max(1.0)),
+            prefill_j: energy_j * ef,
+        }
+    }
 }
 
 /// Per-(shape, model) prediction tables: `tab[k * n_shapes + shape]`.
@@ -182,21 +366,32 @@ pub(crate) struct Memo {
     shape_of: Vec<usize>,
     service_ns: Vec<u64>,
     energy_j: Vec<f64>,
+    prefill_ns: Vec<u64>,
+    step_ns: Vec<u64>,
+    prefill_j: Vec<f64>,
 }
 
 impl Memo {
-    /// One polynomial evaluation per (shape, model); per-batch evaluation
-    /// becomes a table lookup.
+    /// One polynomial evaluation + one phase split per (shape, model);
+    /// per-member evaluation becomes a table lookup.
     pub(crate) fn build(sets: &[ModelSet], queries: &[Query]) -> Memo {
+        let splitter = PhaseSplitter::new(sets);
         let groups = group_by_shape(queries);
         let s = groups.n_shapes();
         let mut service_ns = vec![0u64; s * sets.len()];
         let mut energy_j = vec![0.0f64; s * sets.len()];
+        let mut prefill_ns = vec![0u64; s * sets.len()];
+        let mut step_ns = vec![0u64; s * sets.len()];
+        let mut prefill_j = vec![0.0f64; s * sets.len()];
         for (k, set) in sets.iter().enumerate() {
             for (si, sh) in groups.shapes.iter().enumerate() {
                 let (ti, to) = (sh.t_in as f64, sh.t_out as f64);
                 service_ns[k * s + si] = to_ns(set.runtime.predict(ti, to).max(0.0));
                 energy_j[k * s + si] = set.energy.predict(ti, to);
+                let e = splitter.entry(set, k, sh.t_in, sh.t_out);
+                prefill_ns[k * s + si] = e.prefill_ns;
+                step_ns[k * s + si] = e.step_ns;
+                prefill_j[k * s + si] = e.prefill_j;
             }
         }
         Memo {
@@ -204,6 +399,9 @@ impl Memo {
             shape_of: groups.shape_of,
             service_ns,
             energy_j,
+            prefill_ns,
+            step_ns,
+            prefill_j,
         }
     }
 }
@@ -311,7 +509,13 @@ impl<'a> Simulator<'a> {
         }
 
         // Shape-memoized predictions: table lookups per batch member when
-        // a memo is present, direct polynomial evaluation otherwise.
+        // a memo is present, direct polynomial evaluation otherwise. The
+        // memo-less phase path evaluates through an identical
+        // `PhaseSplitter::entry`, so memoization never changes a result.
+        let splitter = match memo {
+            Some(_) => None,
+            None => Some(PhaseSplitter::new(self.sets)),
+        };
         let service_ns_of = |k: usize, qi: usize| -> u64 {
             match memo {
                 Some(m) => m.service_ns[k * m.n_shapes + m.shape_of[qi]],
@@ -335,11 +539,111 @@ impl<'a> Simulator<'a> {
                 }
             }
         };
+        let phase_of = |k: usize, qi: usize| -> PhaseEntry {
+            match memo {
+                Some(m) => {
+                    let i = k * m.n_shapes + m.shape_of[qi];
+                    PhaseEntry {
+                        prefill_ns: m.prefill_ns[i],
+                        step_ns: m.step_ns[i],
+                        prefill_j: m.prefill_j[i],
+                    }
+                }
+                None => {
+                    let q = &queries[qi];
+                    splitter
+                        .as_ref()
+                        .expect("splitter present when memo absent")
+                        .entry(&self.sets[k], k, q.t_in, q.t_out)
+                }
+            }
+        };
 
         let window = BatchWindow {
             max_batch: self.cfg.max_batch,
             max_wait_ns: to_ns(self.cfg.max_wait_s),
         };
+        let mut recorder = MetricsRecorder::new(
+            self.cfg.slo_s,
+            self.cfg.ttft_slo_s,
+            self.cfg.tpot_slo_s,
+            self.cfg.per_query,
+        );
+        let mut meter = self.carbon.as_ref().map(CarbonMeter::new);
+
+        let stats = match self.cfg.engine {
+            EngineKind::Lockstep => self.run_lockstep(
+                queries,
+                arrivals_s,
+                policy,
+                &order,
+                admitted,
+                window,
+                &service_ns_of,
+                &energy_of,
+                &phase_of,
+                &mut recorder,
+                &mut meter,
+            )?,
+            EngineKind::Continuous => self.run_continuous(
+                queries,
+                arrivals_s,
+                policy,
+                &order,
+                admitted,
+                window,
+                &energy_of,
+                &phase_of,
+                &mut recorder,
+                &mut meter,
+            )?,
+        };
+
+        // Conservation invariant: every admitted arrival completed.
+        if recorder.n() != admitted as u64 {
+            anyhow::bail!(
+                "simulator lost queries: {} admitted, {} completed",
+                admitted,
+                recorder.n()
+            );
+        }
+
+        let mut m = recorder.finish(
+            policy.kind().label().to_string(),
+            self.cfg.engine.label().to_string(),
+            self.arrival_label.clone(),
+            self.seed,
+            self.zeta,
+            n_dropped as u64,
+            policy.plan_stats(),
+            stats,
+        );
+        m.replan_stats = policy.replan_stats();
+        m.zeta_trajectory = policy.zeta_trajectory();
+        m.carbon = meter.map(CarbonMeter::report);
+        Ok(m)
+    }
+
+    /// Batch-serial lockstep event loop (the PR 4/5 engine). First-token
+    /// instants are synthesized *as if* each member streamed its own
+    /// prefill + first decode step from batch start — so TTFT/TPOT are
+    /// comparable across engines and the lockstep numbers still expose
+    /// the batch-formation wait the continuous engine eliminates.
+    #[allow(clippy::too_many_arguments)]
+    fn run_lockstep(
+        &self,
+        queries: &[Query],
+        arrivals_s: &[f64],
+        policy: &mut SimPolicy,
+        order: &[u64],
+        admitted: usize,
+        window: BatchWindow,
+        service_ns_of: &dyn Fn(usize, usize) -> u64,
+        energy_of: &dyn Fn(usize, usize) -> f64,
+        phase_of: &dyn Fn(usize, usize) -> PhaseEntry,
+        recorder: &mut MetricsRecorder,
+        meter: &mut Option<CarbonMeter>,
+    ) -> anyhow::Result<Vec<NodeStats>> {
         let mut nodes: Vec<Node> = self
             .sets
             .iter()
@@ -359,8 +663,6 @@ impl<'a> Simulator<'a> {
 
         let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
         let mut seq = 0u64;
-        let mut recorder = MetricsRecorder::new(self.cfg.slo_s, self.cfg.per_query);
-        let mut meter = self.carbon.as_ref().map(CarbonMeter::new);
 
         // Start the next ready batch on an idle node: service time is the
         // slowest member's predicted runtime (lockstep batch execution).
@@ -478,8 +780,27 @@ impl<'a> Simulator<'a> {
                         let f = node.fifo.pop_front().expect("running batch members in fifo");
                         let qi = f.query as usize;
                         let e = energy_of(k, qi);
+                        let p = phase_of(k, qi);
+                        // As-if-streamed first token: own prefill + first
+                        // decode step from batch start, never after the
+                        // batch completes.
+                        let first_token = start
+                            .saturating_add(p.prefill_ns)
+                            .saturating_add(p.step_ns)
+                            .min(t);
                         node.stats.energy_j += e;
-                        recorder.record(queries[qi].id as u64, k, f.arrive_ns, start, t, e);
+                        node.stats.prefill_j += p.prefill_j;
+                        recorder.record(
+                            queries[qi].id as u64,
+                            k,
+                            f.arrive_ns,
+                            start,
+                            first_token,
+                            t,
+                            queries[qi].t_out,
+                            e,
+                            p.prefill_j,
+                        );
                         if let Some(m) = meter.as_mut() {
                             m.record(t, e);
                         }
@@ -490,14 +811,6 @@ impl<'a> Simulator<'a> {
             }
         }
 
-        // Conservation invariant: every admitted arrival completed.
-        if recorder.n() != admitted as u64 {
-            anyhow::bail!(
-                "simulator lost queries: {} admitted, {} completed",
-                admitted,
-                recorder.n()
-            );
-        }
         for node in &nodes {
             debug_assert!(
                 node.fifo.is_empty()
@@ -506,20 +819,195 @@ impl<'a> Simulator<'a> {
                     && node.pending == 0
             );
         }
+        Ok(nodes.into_iter().map(|n| n.stats).collect())
+    }
 
-        let mut m = recorder.finish(
-            policy.kind().label().to_string(),
-            self.arrival_label.clone(),
-            self.seed,
-            self.zeta,
-            n_dropped as u64,
-            policy.plan_stats(),
-            nodes.into_iter().map(|n| n.stats).collect(),
-        );
-        m.replan_stats = policy.replan_stats();
-        m.zeta_trajectory = policy.zeta_trajectory();
-        m.carbon = meter.map(CarbonMeter::report);
-        Ok(m)
+    /// Iteration-level continuous-batching event loop. Per node: queued
+    /// arrivals are admitted into free working-set slots at iteration
+    /// boundaries, each iteration runs either the oldest unprefilled
+    /// member's prefill chunk or one decode step for the whole working
+    /// set, and sequences retire the instant their last token is decoded.
+    /// `NodeStats::batches` counts *iterations* under this engine, and
+    /// every per-query energy recorded is the same fitted whole-query
+    /// prediction the lockstep engine uses — which is what keeps totals
+    /// identical across engines.
+    #[allow(clippy::too_many_arguments)]
+    fn run_continuous(
+        &self,
+        queries: &[Query],
+        arrivals_s: &[f64],
+        policy: &mut SimPolicy,
+        order: &[u64],
+        admitted: usize,
+        window: BatchWindow,
+        energy_of: &dyn Fn(usize, usize) -> f64,
+        phase_of: &dyn Fn(usize, usize) -> PhaseEntry,
+        recorder: &mut MetricsRecorder,
+        meter: &mut Option<CarbonMeter>,
+    ) -> anyhow::Result<Vec<NodeStats>> {
+        let mut nodes: Vec<CNode> = self
+            .sets
+            .iter()
+            .map(|s| CNode {
+                queue: VecDeque::new(),
+                active: Vec::new(),
+                iter: None,
+                iter_start: 0,
+                stats: NodeStats {
+                    model_id: s.model_id.clone(),
+                    ..NodeStats::default()
+                },
+            })
+            .collect();
+
+        let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
+        let mut seq = 0u64;
+
+        // Begin the next iteration on an idle node: admit queued arrivals
+        // into free slots (FIFO, greedy — no age trigger), then run one
+        // prefill chunk (oldest unprefilled member) or one decode step
+        // for the whole working set (slowest member's step).
+        let start_iteration =
+            |k: usize, t: u64, nodes: &mut Vec<CNode>, heap: &mut BinaryHeap<Ev>, seq: &mut u64| {
+                let node = &mut nodes[k];
+                if node.iter.is_some() {
+                    return;
+                }
+                while window.slots_free(node.active.len()) > 0 {
+                    let Some(f) = node.queue.pop_front() else {
+                        break;
+                    };
+                    node.active.push(ActiveSeq {
+                        query: f.query,
+                        arrive_ns: f.arrive_ns,
+                        start_ns: t,
+                        first_token_ns: u64::MAX,
+                        prefilled: false,
+                        steps_left: queries[f.query as usize].t_out,
+                    });
+                }
+                if node.active.is_empty() {
+                    return;
+                }
+                let dur = match node.active.iter().position(|a| !a.prefilled) {
+                    Some(mi) => {
+                        node.iter = Some(IterKind::Prefill { member: mi });
+                        phase_of(k, node.active[mi].query as usize).prefill_ns
+                    }
+                    None => {
+                        node.iter = Some(IterKind::Decode);
+                        node.active
+                            .iter()
+                            .map(|a| phase_of(k, a.query as usize).step_ns)
+                            .max()
+                            .expect("decode iteration over a non-empty working set")
+                    }
+                };
+                node.iter_start = t;
+                heap.push(Ev {
+                    t: t.saturating_add(dur),
+                    seq: *seq,
+                    kind: EvKind::Complete { node: k as u32 },
+                });
+                *seq += 1;
+            };
+
+        let mut next_arrival = 0usize;
+        loop {
+            // Arrivals win ties against iteration completions — the same
+            // total order the lockstep engine guarantees.
+            let arrival_t = (next_arrival < admitted)
+                .then(|| to_ns(arrivals_s[order[next_arrival] as usize]));
+            let take_arrival = match (arrival_t, heap.peek()) {
+                (Some(ta), Some(ev)) => ta <= ev.t,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => break,
+            };
+            if take_arrival {
+                let qi = order[next_arrival] as usize;
+                next_arrival += 1;
+                let t = arrival_t.unwrap();
+                let k = policy.route_at(t, &queries[qi])?;
+                debug_assert!(k < self.sets.len());
+                nodes[k].queue.push_back(InFlight {
+                    query: qi as u64,
+                    arrive_ns: t,
+                });
+                // Idle node: the arrival opens an iteration immediately;
+                // busy node: it joins at the next boundary.
+                start_iteration(k, t, &mut nodes, &mut heap, &mut seq);
+                continue;
+            }
+            let Ev { t, kind, .. } = heap.pop().unwrap();
+            policy.tick(t)?;
+            let k = match kind {
+                EvKind::Complete { node } => node as usize,
+                EvKind::Timeout { .. } => {
+                    unreachable!("continuous engine schedules no timeouts")
+                }
+            };
+            let node = &mut nodes[k];
+            let iter = node.iter.take().expect("Complete on an idle node");
+            node.stats.batches += 1; // iterations, under this engine
+            node.stats.busy_s += (t - node.iter_start) as f64 / 1e9;
+            match iter {
+                IterKind::Prefill { member } => {
+                    node.active[member].prefilled = true;
+                }
+                IterKind::Decode => {
+                    for a in node.active.iter_mut() {
+                        a.steps_left = a.steps_left.saturating_sub(1);
+                        if a.first_token_ns == u64::MAX {
+                            a.first_token_ns = t;
+                        }
+                    }
+                }
+            }
+            // Retire finished sequences immediately, in admission order.
+            let mut i = 0;
+            while i < node.active.len() {
+                if node.active[i].prefilled && node.active[i].steps_left == 0 {
+                    let a = node.active.remove(i);
+                    let qi = a.query as usize;
+                    let e = energy_of(k, qi);
+                    let pj = phase_of(k, qi).prefill_j;
+                    // Zero-generation sequences never decode: their first
+                    // (and only) response instant is retirement itself.
+                    let first_token = if a.first_token_ns == u64::MAX {
+                        t
+                    } else {
+                        a.first_token_ns
+                    };
+                    node.stats.queries += 1;
+                    node.stats.energy_j += e;
+                    node.stats.prefill_j += pj;
+                    recorder.record(
+                        queries[qi].id as u64,
+                        k,
+                        a.arrive_ns,
+                        a.start_ns,
+                        first_token,
+                        t,
+                        queries[qi].t_out,
+                        e,
+                        pj,
+                    );
+                    if let Some(m) = meter.as_mut() {
+                        m.record(t, e);
+                    }
+                    policy.on_complete((a.start_ns - a.arrive_ns) as f64 / 1e9);
+                } else {
+                    i += 1;
+                }
+            }
+            start_iteration(k, t, &mut nodes, &mut heap, &mut seq);
+        }
+
+        for node in &nodes {
+            debug_assert!(node.queue.is_empty() && node.active.is_empty() && node.iter.is_none());
+        }
+        Ok(nodes.into_iter().map(|n| n.stats).collect())
     }
 }
 
@@ -579,6 +1067,8 @@ mod tests {
         assert!((m.total_energy_j - s[0].energy.predict(100.0, 100.0)).abs() < 1e-9);
         assert_eq!(m.nodes[0].batches, 1);
         assert_eq!(m.nodes[1].batches, 0);
+        // First token lands after start, never after completion.
+        assert!(o.t_start <= o.t_first_token && o.t_first_token <= o.t_complete);
     }
 
     #[test]
@@ -665,9 +1155,15 @@ mod tests {
                 })
                 .collect();
             let arrivals: Vec<f64> = (0..n).map(|_| rng.range(0.0, 3.0)).collect();
+            let engine = if rng.chance(0.5) {
+                EngineKind::Continuous
+            } else {
+                EngineKind::Lockstep
+            };
             let cfg = cfg_per_query(SimConfig {
                 max_batch: rng.int_range(1, 6) as usize,
                 max_wait_s: rng.range(0.0, 0.2),
+                engine,
                 ..SimConfig::default()
             });
             let mut policy = greedy(&s, rng.range(0.0, 1.0));
@@ -680,22 +1176,33 @@ mod tests {
             let mut ids: Vec<u64> = outcomes.iter().map(|o| o.id).collect();
             ids.sort();
             assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
-            // Causality: arrive ≤ start ≤ complete for every query.
+            // Causality: arrive ≤ start ≤ first token ≤ complete.
             for o in outcomes {
                 assert!(o.t_arrive <= o.t_start + 1e-12);
-                assert!(o.t_start <= o.t_complete + 1e-12);
+                assert!(o.t_start <= o.t_first_token + 1e-12);
+                assert!(o.t_first_token <= o.t_complete + 1e-12);
             }
-            // Energy is conserved: node totals equal the streaming total.
+            // Energy is conserved: node totals equal the streaming total,
+            // and per-phase energies partition each node's total.
             let node_total: f64 = m.nodes.iter().map(|nd| nd.energy_j).sum();
             assert!((node_total - m.total_energy_j).abs() < 1e-6);
+            for nd in &m.nodes {
+                assert!(nd.prefill_j >= 0.0 && nd.prefill_j <= nd.energy_j + 1e-9);
+            }
+            assert!(
+                (m.prefill_energy_j + m.decode_energy_j - m.total_energy_j).abs() < 1e-6
+            );
             // And the streaming histograms saw every completion.
             assert_eq!(m.latency_hist.n(), n as u64);
             assert_eq!(m.queue_hist.n(), n as u64);
+            assert_eq!(m.ttft_hist.n(), n as u64);
+            assert_eq!(m.tpot_hist.n(), n as u64);
         });
     }
 
     /// Memoized prediction tables change the cost of the hot path, never
-    /// its results: byte-identical artifacts with the tables on and off.
+    /// its results: byte-identical artifacts with the tables on and off —
+    /// under both engines (the memo also carries the phase split).
     #[test]
     fn memoization_is_invisible_in_the_artifact() {
         use crate::testkit::{forall, Config};
@@ -711,11 +1218,17 @@ mod tests {
                 .collect();
             let arrivals: Vec<f64> = (0..n).map(|_| rng.range(0.0, 2.0)).collect();
             let zeta = rng.range(0.0, 1.0);
+            let engine = if rng.chance(0.5) {
+                EngineKind::Continuous
+            } else {
+                EngineKind::Lockstep
+            };
             let run = |memoize: bool| {
                 let cfg = SimConfig {
                     max_batch: 3,
                     max_wait_s: 0.05,
                     memoize,
+                    engine,
                     ..SimConfig::default()
                 };
                 Simulator::new(&s, cfg)
@@ -727,6 +1240,95 @@ mod tests {
             };
             assert_eq!(run(true), run(false));
         });
+    }
+
+    #[test]
+    fn continuous_engine_retires_members_independently() {
+        let s = sets();
+        let cfg = cfg_per_query(SimConfig {
+            max_batch: 2,
+            engine: EngineKind::Continuous,
+            ..SimConfig::default()
+        });
+        // Same prompt, very different generation lengths, arriving
+        // together: under lockstep both would complete at the slow
+        // member's finish; continuous retires the short one early.
+        let queries = vec![q(0, 100, 10), q(1, 100, 400)];
+        let m = Simulator::new(&s, cfg)
+            .run(&queries, &[0.0, 0.0], &mut greedy(&s, 1.0))
+            .unwrap();
+        let mut by_id = m.outcomes.clone().unwrap();
+        by_id.sort_by_key(|o| o.id);
+        assert!(
+            by_id[0].t_complete < by_id[1].t_complete,
+            "short sequence must retire first: {} vs {}",
+            by_id[0].t_complete,
+            by_id[1].t_complete
+        );
+        // Energy is still the fitted whole-query prediction per member.
+        let e0 = s[0].energy.predict(100.0, 10.0);
+        let e1 = s[0].energy.predict(100.0, 400.0);
+        assert!((m.total_energy_j - (e0 + e1)).abs() < 1e-9);
+        // Iterations, not batches: one prefill each + interleaved decode.
+        assert!(m.nodes[0].batches > 2, "batches={}", m.nodes[0].batches);
+    }
+
+    #[test]
+    fn continuous_engine_skips_the_batch_formation_wait() {
+        let s = sets();
+        let mk = |engine| {
+            cfg_per_query(SimConfig {
+                max_batch: 8,
+                max_wait_s: 0.5,
+                engine,
+                ..SimConfig::default()
+            })
+        };
+        let queries = vec![q(0, 100, 100)];
+        let lock = Simulator::new(&s, mk(EngineKind::Lockstep))
+            .run(&queries, &[1.0], &mut greedy(&s, 1.0))
+            .unwrap();
+        let cont = Simulator::new(&s, mk(EngineKind::Continuous))
+            .run(&queries, &[1.0], &mut greedy(&s, 1.0))
+            .unwrap();
+        // Lockstep holds the lone query for the age trigger; continuous
+        // admits it at arrival, so its TTFT is smaller by ≈ max_wait.
+        let lo = lock.outcomes.as_ref().unwrap()[0];
+        let co = cont.outcomes.as_ref().unwrap()[0];
+        assert!((lo.t_start - 1.5).abs() < 1e-9);
+        assert!((co.t_start - 1.0).abs() < 1e-9);
+        assert!(cont.mean_ttft_s < lock.mean_ttft_s);
+        // Same fitted energy either way.
+        assert!((cont.total_energy_j - lock.total_energy_j).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_split_reproduces_the_fitted_service_time() {
+        // The calibrated split must re-sum to the fitted whole-query
+        // prediction: prefill + t_out · step ≈ service (to per-phase
+        // rounding), prefill_j ∈ [0, energy].
+        let s = sets();
+        let splitter = PhaseSplitter::new(&s);
+        for (k, set) in s.iter().enumerate() {
+            for (t_in, t_out) in [(1u32, 1u32), (100, 10), (10, 1000), (512, 0)] {
+                let e = splitter.entry(set, k, t_in, t_out);
+                let service_ns =
+                    to_ns(set.runtime.predict(t_in as f64, t_out as f64).max(0.0));
+                let resum = e.prefill_ns + u64::from(t_out.max(1)) * e.step_ns;
+                let tol = u64::from(t_out) + 2; // ±0.5 ns per rounded phase
+                assert!(
+                    resum.abs_diff(service_ns) <= tol,
+                    "model {k} shape ({t_in},{t_out}): {resum} vs {service_ns}"
+                );
+                let energy = set.energy.predict(t_in as f64, t_out as f64);
+                assert!(e.prefill_j >= 0.0 && e.prefill_j <= energy + 1e-9);
+                // Zero-generation queries are all prefill.
+                if t_out == 0 {
+                    assert_eq!(e.step_ns * u64::from(t_out.max(1)), e.step_ns);
+                    assert!((e.prefill_j - energy).abs() < 1e-9);
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,11 +1,13 @@
 //! Integration properties of the discrete-event serving simulator:
 //! determinism (same seed + config ⇒ byte-identical metrics JSON, single
-//! and parallel `--seeds` replicated), plan-vs-baseline energy ordering
-//! on capacity-feasible instances, trace-replay arrival fidelity,
-//! streaming-vs-exact quantile agreement, the version-3 metrics artifact
-//! golden (byte-exact round-trip + version-1/-2 rejection), and the
-//! online control plane (replan+carbon determinism; the carbon-governed
-//! replan's energy never exceeding the static plan's on a Gamma burst).
+//! and parallel `--seeds` replicated, under both engines), plan-vs-
+//! baseline energy ordering on capacity-feasible instances, trace-replay
+//! arrival fidelity, streaming-vs-exact quantile agreement, the
+//! version-4 metrics artifact golden (byte-exact round-trip +
+//! version-1/-2/-3 rejection), conservation and energy parity across the
+//! lockstep/continuous engine switch, and the online control plane
+//! (replan+carbon determinism; the carbon-governed replan's energy never
+//! exceeding the static plan's on a Gamma burst).
 
 use ecoserve::models::{AccuracyModel, ModelSet, Normalizer, Target, WorkloadModel};
 use ecoserve::plan::{Plan, Planner, SolverKind};
@@ -13,7 +15,7 @@ use ecoserve::scheduler::capacity_bounds;
 use ecoserve::scheduler::CapacityMode;
 use ecoserve::sim::{
     compare, compare_replicated, comparison_to_json, replicated_to_json, ArrivalProcess,
-    Arrivals, CompareSpec, PolicyKind, SimConfig, SimMetrics, Simulator,
+    Arrivals, CompareSpec, EngineKind, PolicyKind, SimConfig, SimMetrics, Simulator,
 };
 use ecoserve::stats::{quantile, LOG_HIST_BINS_PER_OCTAVE};
 use ecoserve::testkit::{forall, Config};
@@ -346,21 +348,30 @@ fn sorted_max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(0.0f64, f64::max)
 }
 
-/// Golden: the committed version-3 artifact round-trips byte-exactly
-/// through `SimMetrics::from_json` → `to_json`, and the version-1 and
-/// version-2 layouts are rejected with migration messages.
+/// Golden: the committed version-4 artifact round-trips byte-exactly
+/// through `SimMetrics::from_json` → `to_json`, and the version-1,
+/// version-2, and version-3 layouts are rejected with migration messages.
 #[test]
 fn metrics_artifact_golden_roundtrip_and_version_gate() {
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("tests/fixtures/sim_metrics_v3.json");
+        .join("tests/fixtures/sim_metrics_v4.json");
     let text = std::fs::read_to_string(&path).unwrap();
     let parsed = Json::parse(&text).unwrap();
     let m = SimMetrics::from_json(&parsed).unwrap();
     assert_eq!(m.policy, "plan");
+    assert_eq!(m.engine, "continuous");
     assert_eq!(m.seed, 42);
     assert_eq!(m.n_queries, 7);
     assert_eq!(m.latency_hist.n(), 7);
+    assert_eq!(m.ttft_hist.n(), 7);
     assert_eq!(m.plan_decisions, Some((5, 2)));
+    assert_eq!(m.ttft_slo_s, Some(1.0));
+    assert_eq!(m.ttft_attainment, Some(1.0));
+    // The fixture sets no TPOT SLO: the pair stays absent.
+    assert_eq!(m.tpot_slo_s, None);
+    assert_eq!(m.tpot_attainment, None);
+    // The phase split partitions the recorded total.
+    assert_eq!(m.prefill_energy_j + m.decode_energy_j, m.total_energy_j);
     // A lean (no control plane) artifact parses with the control blocks
     // absent, and reserializes without inventing them.
     assert_eq!(m.replan_stats, None);
@@ -372,6 +383,7 @@ fn metrics_artifact_golden_roundtrip_and_version_gate() {
     for (fixture, tag) in [
         ("tests/fixtures/sim_metrics_v1.json", "version 1"),
         ("tests/fixtures/sim_metrics_v2.json", "version 2"),
+        ("tests/fixtures/sim_metrics_v3.json", "version 3"),
     ] {
         let old_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(fixture);
         let old = Json::parse(&std::fs::read_to_string(&old_path).unwrap()).unwrap();
@@ -379,6 +391,195 @@ fn metrics_artifact_golden_roundtrip_and_version_gate() {
         assert!(err.contains(tag), "{fixture}: {err}");
         assert!(err.contains("regenerate"), "{fixture}: {err}");
     }
+}
+
+/// Switching engines must neither drop, duplicate, nor invent queries;
+/// and because greedy routes time-independently while both engines charge
+/// the fitted whole-query Eq. 6 energy at retirement, per-node and total
+/// energy must agree across the switch to 1e-9.
+#[test]
+fn engine_switch_conserves_queries_and_energy() {
+    forall(Config::default().cases(6), |rng| {
+        let seed = rng.next_u64();
+        let mut rng = Rng::new(seed);
+        let n_models = 2 + rng.index(2);
+        let sets = random_sets(&mut rng, n_models);
+        let n = 60 + rng.index(120);
+        let queries = shaped_workload(&mut rng.fork(1), 6, n);
+        let arrivals = ArrivalProcess::Poisson { rate: 50.0 }
+            .times(n, &mut rng.fork(2))
+            .unwrap();
+        let norm = Normalizer::from_workload(&sets, &queries);
+        let run = |engine: EngineKind| {
+            let mut policy = ecoserve::sim::SimPolicy::new(
+                PolicyKind::Greedy,
+                &sets,
+                norm,
+                0.5,
+                None,
+                seed,
+                None,
+            )
+            .unwrap();
+            let cfg = SimConfig {
+                max_batch: 4,
+                max_wait_s: 0.02,
+                per_query: true,
+                engine,
+                ..SimConfig::default()
+            };
+            Simulator::new(&sets, cfg)
+                .run(&queries, &arrivals, &mut policy)
+                .unwrap()
+        };
+        let lock = run(EngineKind::Lockstep);
+        let cont = run(EngineKind::Continuous);
+        for m in [&lock, &cont] {
+            assert_eq!(m.n_queries as usize, n, "seed {seed} ({})", m.engine);
+            let outcomes = m.outcomes.as_ref().unwrap();
+            // Every workload id retired exactly once.
+            let mut ids: Vec<u64> = outcomes.iter().map(|o| o.id).collect();
+            ids.sort_unstable();
+            assert!(
+                ids.iter().enumerate().all(|(i, &id)| id == i as u64),
+                "seed {seed} ({}): ids are not exactly 0..n",
+                m.engine
+            );
+            // Causality per lifecycle.
+            for o in outcomes {
+                assert!(
+                    o.t_arrive <= o.t_start
+                        && o.t_start <= o.t_first_token
+                        && o.t_first_token <= o.t_complete,
+                    "seed {seed} ({}): query {} lifecycle out of order",
+                    m.engine,
+                    o.id
+                );
+            }
+            // Per-query energies sum to the node totals, which sum to the
+            // run total, which the phase split partitions.
+            let per_query: f64 = outcomes.iter().map(|o| o.energy_j).sum();
+            let per_node: f64 = m.nodes.iter().map(|nd| nd.energy_j).sum();
+            let tol = 1e-9 * per_node.abs().max(1.0);
+            assert!((per_query - per_node).abs() <= tol, "seed {seed}");
+            assert!((per_node - m.total_energy_j).abs() <= tol, "seed {seed}");
+            assert!(
+                (m.prefill_energy_j + m.decode_energy_j - m.total_energy_j).abs() <= tol,
+                "seed {seed} ({}): phase split does not partition the total",
+                m.engine
+            );
+            for nd in &m.nodes {
+                assert!(
+                    nd.prefill_j >= -1e-12 && nd.prefill_j <= nd.energy_j + tol,
+                    "seed {seed}: node {} prefill_j out of range",
+                    nd.model_id
+                );
+            }
+        }
+        // Identical routing → identical per-node loads and energy.
+        let tol = 1e-9 * lock.total_energy_j.abs().max(1.0);
+        assert!(
+            (lock.total_energy_j - cont.total_energy_j).abs() <= tol,
+            "seed {seed}: lockstep {} J vs continuous {} J",
+            lock.total_energy_j,
+            cont.total_energy_j
+        );
+        for (a, b) in lock.nodes.iter().zip(&cont.nodes) {
+            assert_eq!(a.queries, b.queries, "seed {seed}: {}", a.model_id);
+            assert!((a.energy_j - b.energy_j).abs() <= tol, "seed {seed}");
+        }
+    });
+}
+
+/// With a single slot per node the continuous engine serializes sequences
+/// exactly as lockstep does; the acceptance bar pins their total energy
+/// to 1e-9 agreement.
+#[test]
+fn batch_of_one_matches_lockstep_energy_to_1e9() {
+    let mut rng = Rng::new(515);
+    let sets = random_sets(&mut rng, 3);
+    let n = 150;
+    let queries = shaped_workload(&mut rng.fork(1), 5, n);
+    let arrivals = ArrivalProcess::Poisson { rate: 30.0 }
+        .times(n, &mut rng.fork(2))
+        .unwrap();
+    let norm = Normalizer::from_workload(&sets, &queries);
+    let run = |engine: EngineKind| {
+        let mut policy = ecoserve::sim::SimPolicy::new(
+            PolicyKind::Greedy,
+            &sets,
+            norm,
+            0.5,
+            None,
+            515,
+            None,
+        )
+        .unwrap();
+        let cfg = SimConfig {
+            max_batch: 1,
+            max_wait_s: 0.01,
+            engine,
+            ..SimConfig::default()
+        };
+        Simulator::new(&sets, cfg)
+            .run(&queries, &arrivals, &mut policy)
+            .unwrap()
+    };
+    let lock = run(EngineKind::Lockstep);
+    let cont = run(EngineKind::Continuous);
+    assert_eq!(lock.n_queries, cont.n_queries);
+    assert!(
+        (lock.total_energy_j - cont.total_energy_j).abs()
+            <= 1e-9 * lock.total_energy_j.abs().max(1.0),
+        "batch-1 energy: lockstep {} J vs continuous {} J",
+        lock.total_energy_j,
+        cont.total_energy_j
+    );
+    assert!(
+        (lock.prefill_energy_j - cont.prefill_energy_j).abs()
+            <= 1e-9 * lock.total_energy_j.abs().max(1.0)
+    );
+}
+
+/// The continuous engine honors the same determinism contract as
+/// lockstep: the full policy grid over one seeded trace, run twice,
+/// merges into byte-identical artifacts.
+#[test]
+fn continuous_engine_is_byte_deterministic() {
+    forall(Config::default().cases(4), |rng| {
+        let seed = rng.next_u64();
+        let one = || {
+            let mut rng = Rng::new(seed);
+            let sets = random_sets(&mut rng, 3);
+            let queries = shaped_workload(&mut rng.fork(1), 5, 100);
+            let arrivals = ArrivalProcess::GammaBurst { rate: 60.0, cv2: 4.0 }
+                .times(100, &mut rng.fork(2))
+                .unwrap();
+            let plan = plan_for(&sets, &queries, 1.0, seed);
+            let spec = CompareSpec {
+                sets: &sets,
+                norm: plan.normalizer(),
+                zeta: 1.0,
+                plan: Some(&plan),
+                seed,
+                cfg: SimConfig {
+                    max_batch: 4,
+                    max_wait_s: 0.02,
+                    slo_s: 5.0,
+                    engine: EngineKind::Continuous,
+                    ..SimConfig::default()
+                },
+                arrival_label: "gamma:60:4".to_string(),
+                control: Some(Default::default()),
+            };
+            let rows = compare(&spec, &queries, &arrivals, &PolicyKind::all()).unwrap();
+            for m in &rows {
+                assert_eq!(m.engine, "continuous", "seed {seed}: {}", m.policy);
+            }
+            comparison_to_json(&rows).to_string_pretty()
+        };
+        assert_eq!(one(), one(), "seed {seed}: continuous run not byte-identical");
+    });
 }
 
 /// Model sets where accuracy and energy are strongly anti-correlated:
