@@ -23,7 +23,12 @@ import json
 import sys
 
 # Keys that identify a list entry (matched, never gated).
-IDENTITY_KEYS = ("n_queries", "policy", "engine", "n_lines", "name")
+IDENTITY_KEYS = ("n_queries", "policy", "engine", "scenario", "n_lines", "name")
+# Identity keys with a default value: an entry that omits the key (on
+# either side) is treated as carrying the default, so pre-scenario
+# baseline rows keep matching exactly their non-chaos bench rows rather
+# than becoming ambiguous when failure-scenario rows appear.
+IDENTITY_DEFAULTS = {"scenario": "none"}
 # Annotation keys (never gated).
 SKIP_KEYS = ("bench", "note", "smoke") + IDENTITY_KEYS
 
@@ -45,23 +50,29 @@ def walk(baseline, actual, path, factor, failures):
             failures.append(f"{path}: expected a list in the bench output")
             return
         for bentry in baseline:
-            ident = (
+            explicit = (
                 {k: bentry[k] for k in IDENTITY_KEYS if k in bentry}
                 if isinstance(bentry, dict)
                 else {}
             )
-            if not ident:
+            if not explicit:
                 failures.append(
                     f"{path}: baseline list entries need an identity key "
                     f"(one of {', '.join(IDENTITY_KEYS)})"
                 )
                 continue
-            label = ",".join(f"{k}={v}" for k, v in ident.items())
+            ident = dict(explicit)
+            for k, default in IDENTITY_DEFAULTS.items():
+                ident.setdefault(k, default)
+            label = ",".join(f"{k}={v}" for k, v in explicit.items())
             matches = [
                 a
                 for a in actual
                 if isinstance(a, dict)
-                and all(a.get(k) == v for k, v in ident.items())
+                and all(
+                    a.get(k, IDENTITY_DEFAULTS.get(k)) == v
+                    for k, v in ident.items()
+                )
             ]
             if not matches:
                 failures.append(f"{path}[{label}]: missing from the bench output")

@@ -102,6 +102,72 @@ class WalkTests(unittest.TestCase):
     def test_engine_is_an_identity_key(self):
         self.assertIn("engine", IDENTITY_KEYS)
 
+    def test_scenario_defaults_to_none_on_both_sides(self):
+        # A pre-scenario baseline row must keep matching exactly the
+        # non-chaos bench row even when a failure-scenario row with the
+        # same (n_queries, policy, engine) sits next to it.
+        baseline = {
+            "series": [
+                {"n_queries": 100, "policy": "greedy", "engine": "lockstep", "memo_s": 1.0},
+            ]
+        }
+        actual = {
+            "series": [
+                {"n_queries": 100, "policy": "greedy", "engine": "lockstep", "memo_s": 0.5},
+                {
+                    "n_queries": 100,
+                    "policy": "greedy",
+                    "engine": "lockstep",
+                    "scenario": "chaos:4",
+                    "memo_s": 99.0,
+                },
+            ]
+        }
+        self.assertEqual(gate(baseline, actual), [])
+
+    def test_scenario_row_gates_only_its_chaos_twin(self):
+        baseline = {
+            "series": [
+                {
+                    "n_queries": 100,
+                    "policy": "greedy",
+                    "engine": "lockstep",
+                    "scenario": "chaos:4",
+                    "memo_s": 1.0,
+                },
+            ]
+        }
+        actual = {
+            "series": [
+                {"n_queries": 100, "policy": "greedy", "engine": "lockstep", "memo_s": 99.0},
+                {
+                    "n_queries": 100,
+                    "policy": "greedy",
+                    "engine": "lockstep",
+                    "scenario": "chaos:4",
+                    "memo_s": 1.5,
+                },
+            ]
+        }
+        self.assertEqual(gate(baseline, actual), [])
+        actual["series"][1]["memo_s"] = 9.0
+        failures = gate(baseline, actual)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("scenario=chaos:4", failures[0])
+
+    def test_missing_chaos_row_fails(self):
+        baseline = {
+            "series": [
+                {"policy": "greedy", "engine": "lockstep", "scenario": "chaos:4", "memo_s": 1.0}
+            ]
+        }
+        actual = {
+            "series": [{"policy": "greedy", "engine": "lockstep", "memo_s": 0.5}]
+        }
+        failures = gate(baseline, actual)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("missing from the bench output", failures[0])
+
     def test_non_numeric_actual_for_gated_key_fails(self):
         failures = gate({"load_s": 1.0}, {"load_s": "fast"})
         self.assertEqual(len(failures), 1)

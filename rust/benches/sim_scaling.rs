@@ -39,7 +39,8 @@ use ecoserve::plan::{Plan, Planner, SolverKind};
 use ecoserve::scheduler::CapacityMode;
 use ecoserve::sim::{
     compare_replicated, ARRIVAL_SEED_SALT, ArrivalProcess, Arrivals, CompareSpec, EngineKind,
-    PolicyKind, SimConfig, SimMetrics, SimPolicy, Simulator,
+    FailureEvent, FailureKind, FailureScript, PolicyKind, SimConfig, SimMetrics, SimPolicy,
+    Simulator,
 };
 use ecoserve::testkit::synthetic_set;
 use ecoserve::util::{Json, Rng, Stopwatch};
@@ -539,6 +540,96 @@ fn main() {
         }
     }
 
+    // ---- failure-scenario churn: elastic fleet under kill/rejoin -------
+    // Two replicas per model; one replica of each of the two cheapest
+    // models is killed mid-run and rejoins later with a warm-up delay.
+    // Every model keeps a live replica throughout, so no parked work is
+    // stranded; requeue + rescheduling overhead is what this row gates.
+    let n_chaos = if smoke { 100_000 } else { 1_000_000 };
+    let chaos_queries = workload(&table, n_chaos, &mut rng.fork(13));
+    let chaos_arrivals = ArrivalProcess::Poisson { rate }
+        .times(n_chaos, &mut Rng::new(42 ^ ARRIVAL_SEED_SALT))
+        .expect("arrival sampling");
+    let horizon = chaos_arrivals.last().copied().unwrap_or(1.0).max(1.0);
+    let chaos_script = FailureScript::new(vec![
+        FailureEvent {
+            t_s: 0.25 * horizon,
+            model: 0,
+            replica: 1,
+            kind: FailureKind::Kill,
+        },
+        FailureEvent {
+            t_s: 0.40 * horizon,
+            model: 1,
+            replica: 1,
+            kind: FailureKind::Kill,
+        },
+        FailureEvent {
+            t_s: 0.60 * horizon,
+            model: 0,
+            replica: 1,
+            kind: FailureKind::Join { warmup_s: 1.0 },
+        },
+        FailureEvent {
+            t_s: 0.75 * horizon,
+            model: 1,
+            replica: 1,
+            kind: FailureKind::Join { warmup_s: 1.0 },
+        },
+    ])
+    .expect("failure script");
+    let chaos_replicas = vec![2usize; sets.len()];
+    let chaos_norm = Normalizer::from_workload(&sets, &chaos_queries);
+    for engine in [EngineKind::Lockstep, EngineKind::Continuous] {
+        let sw = Stopwatch::start();
+        let m = Simulator::new(
+            &sets,
+            SimConfig {
+                max_batch,
+                max_wait_s,
+                slo_s: 60.0,
+                engine,
+                ..SimConfig::default()
+            },
+        )
+        .labeled("poisson", 42, ZETA)
+        .with_replicas(&chaos_replicas)
+        .expect("replica fleet")
+        .with_failures(&chaos_script)
+        .run(
+            &chaos_queries,
+            &chaos_arrivals,
+            &mut policy_for(PolicyKind::Greedy, &sets, chaos_norm, None, 42),
+        )
+        .expect("chaos run");
+        let chaos_s = sw.elapsed_s();
+        // Conservation under churn: every query retires exactly once, and
+        // the per-replica energy split partitions the run total.
+        assert_eq!(m.n_queries as usize, n_chaos);
+        assert_eq!(m.scenario, chaos_script.label());
+        assert_eq!(m.nodes.len(), 2 * sets.len());
+        let node_energy: f64 = m.nodes.iter().map(|s| s.energy_j).sum();
+        assert_close("chaos node energy vs total", node_energy, m.total_energy_j);
+        println!(
+            "  n={n_chaos} policy=greedy engine={} scenario={}: {:.3} s \
+             ({:.2}M q/s), {} requeued",
+            engine.label(),
+            m.scenario,
+            chaos_s,
+            n_chaos as f64 / chaos_s.max(1e-12) / 1e6,
+            m.n_requeued
+        );
+        series.push(Json::obj(vec![
+            ("n_queries", Json::num(n_chaos as f64)),
+            ("policy", Json::str("greedy")),
+            ("engine", Json::str(engine.label())),
+            ("scenario", Json::str(&m.scenario)),
+            ("memo_s", Json::num(chaos_s)),
+            ("memo_qps", Json::num(n_chaos as f64 / chaos_s.max(1e-12))),
+            ("n_requeued", Json::num(m.n_requeued as f64)),
+        ]));
+    }
+
     // ---- trace loader throughput: streaming JSONL reads ----------------
     let n_lines: usize = if smoke { 50_000 } else { 2_000_000 };
     let loader_queries = workload(&table, n_lines, &mut rng.fork(7));
@@ -593,13 +684,13 @@ fn main() {
             max_batch,
             max_wait_s,
             slo_s: 60.0,
-            duration_s: None,
-            per_query: false,
-            memoize: true,
+            ..SimConfig::default()
         },
         arrival_label: format!("poisson:{rate:.3}"),
         // PolicyKind::all() includes replan, which needs a control config.
         control: Some(Default::default()),
+        replicas: None,
+        failures: None,
     };
     let n_seeds = 3;
     let kinds = PolicyKind::all();

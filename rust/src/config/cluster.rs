@@ -1,0 +1,247 @@
+//! Replica-level cluster topology: how many interchangeable serving
+//! replicas back each hosted model.
+//!
+//! The paper's formulation (Eqs. 2–5) treats each hosted model `K` as a
+//! single capacity bucket. Real clusters replicate a model across R
+//! nodes that join and leave (autoscaling, spot reclamation, failure) —
+//! the companion work (arXiv 2407.00010) shows the energy frontier lives
+//! on exactly such elastic fleets. [`ReplicaSet`] is the bridge: it maps
+//! the model-level problem onto *columns* (one per replica) so the
+//! transportation reduction constrains each replica's share
+//! individually, and maps column-level solutions back to models for
+//! every artifact-facing consumer.
+//!
+//! Column order is model-major: model 0's replicas first (replica 0, 1,
+//! …), then model 1's, and so on. A uniform set (R_k = 1 for all k) has
+//! columns identical to models, and every consumer short-circuits to the
+//! exact per-model code path — replicated sessions are a strict
+//! superset, not a new regime.
+
+use crate::models::ModelSet;
+
+/// Replica counts per hosted model. Immutable invariant: every model has
+/// at least one replica (a model with zero replicas leaves Eq. 3's
+/// "every model serves something" unsatisfiable; capacity loss below one
+/// replica is expressed by the simulator as downtime, not by a zero
+/// count in the plan).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicaSet {
+    counts: Vec<usize>,
+}
+
+impl ReplicaSet {
+    /// One replica per model — the classic per-model problem.
+    pub fn uniform(n_models: usize) -> ReplicaSet {
+        ReplicaSet {
+            counts: vec![1; n_models],
+        }
+    }
+
+    /// Explicit per-model counts; every count must be ≥ 1.
+    pub fn new(counts: &[usize]) -> anyhow::Result<ReplicaSet> {
+        if counts.is_empty() {
+            anyhow::bail!("replica set needs at least one model");
+        }
+        for (k, &r) in counts.iter().enumerate() {
+            if r == 0 {
+                anyhow::bail!("model {k} has zero replicas (every model needs at least one)");
+            }
+        }
+        Ok(ReplicaSet {
+            counts: counts.to_vec(),
+        })
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Total number of solver columns (Σ R_k).
+    pub fn n_columns(&self) -> usize {
+        self.counts.iter().sum()
+    }
+
+    pub fn count(&self, model: usize) -> usize {
+        self.counts[model]
+    }
+
+    pub fn counts(&self) -> &[usize] {
+        &self.counts
+    }
+
+    /// True when every model has exactly one replica — columns coincide
+    /// with models and callers may keep the per-model fast path.
+    pub fn is_uniform(&self) -> bool {
+        self.counts.iter().all(|&r| r == 1)
+    }
+
+    /// Set one model's replica count (≥ 1).
+    pub fn set_count(&mut self, model: usize, count: usize) -> anyhow::Result<()> {
+        if model >= self.counts.len() {
+            anyhow::bail!("model {model} out of range ({} models)", self.counts.len());
+        }
+        if count == 0 {
+            anyhow::bail!("model {model} cannot rescale to zero replicas");
+        }
+        self.counts[model] = count;
+        Ok(())
+    }
+
+    /// Owning model of each column, model-major.
+    pub fn col_model(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.n_columns());
+        for (k, &r) in self.counts.iter().enumerate() {
+            out.extend(std::iter::repeat(k).take(r));
+        }
+        out
+    }
+
+    /// First column index of each model (prefix sums of the counts).
+    pub fn col_start(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.counts.len());
+        let mut acc = 0usize;
+        for &r in &self.counts {
+            out.push(acc);
+            acc += r;
+        }
+        out
+    }
+
+    /// Split model-level capacity bounds evenly across each model's
+    /// replicas (largest-remainder: the first `cap mod R` replicas carry
+    /// one extra seat). Errors when a model's capacity cannot give every
+    /// replica at least one seat — the replicated analogue of Eq. 3's
+    /// "every model serves something".
+    pub fn split_caps(&self, model_caps: &[usize]) -> anyhow::Result<Vec<usize>> {
+        assert_eq!(model_caps.len(), self.counts.len(), "one capacity per model");
+        let mut out = Vec::with_capacity(self.n_columns());
+        for (k, (&cap, &r)) in model_caps.iter().zip(&self.counts).enumerate() {
+            if cap < r {
+                anyhow::bail!(
+                    "model {k} capacity {cap} cannot give each of its {r} replicas \
+                     at least one query; shrink the replica set or grow the workload"
+                );
+            }
+            let base = cap / r;
+            let extra = cap % r;
+            for i in 0..r {
+                out.push(base + usize::from(i < extra));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Expand model sets to column granularity: each model's fitted set
+    /// cloned once per replica (replicas are exact clones, so cost rows
+    /// repeat — the solver sees them as interchangeable columns).
+    pub fn expand_sets(&self, sets: &[ModelSet]) -> Vec<ModelSet> {
+        assert_eq!(sets.len(), self.counts.len(), "one model set per model");
+        let mut out = Vec::with_capacity(self.n_columns());
+        for (set, &r) in sets.iter().zip(&self.counts) {
+            for _ in 0..r {
+                out.push(set.clone());
+            }
+        }
+        out
+    }
+
+    /// Aggregate column-level shape flows (`flows[s][col]`) back to
+    /// model level (`out[s][model]`).
+    pub fn aggregate_flows(&self, col_flows: &[Vec<usize>]) -> Vec<Vec<usize>> {
+        let cm = self.col_model();
+        col_flows
+            .iter()
+            .map(|row| {
+                let mut m = vec![0usize; self.counts.len()];
+                for (c, &f) in row.iter().enumerate() {
+                    m[cm[c]] += f;
+                }
+                m
+            })
+            .collect()
+    }
+
+    /// Column survival map from `self` (the old set) to `new`: for each
+    /// *new* column, `Some(old_column)` when that replica existed before
+    /// the rescale (per model, the first `min(old, new)` replicas
+    /// survive), `None` for freshly added replicas. This is the warm-
+    /// start contract `Solver::rescale` consumes: surviving columns pin
+    /// their basis arcs, fresh ones enter empty.
+    pub fn keep_against(&self, new: &ReplicaSet) -> Vec<Option<usize>> {
+        assert_eq!(self.counts.len(), new.counts.len(), "same model roster");
+        let old_start = self.col_start();
+        let mut keep = Vec::with_capacity(new.n_columns());
+        for (k, &rn) in new.counts.iter().enumerate() {
+            let ro = self.counts[k];
+            for i in 0..rn {
+                keep.push((i < ro).then(|| old_start[k] + i));
+            }
+        }
+        keep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_is_identity() {
+        let r = ReplicaSet::uniform(3);
+        assert!(r.is_uniform());
+        assert_eq!(r.n_columns(), 3);
+        assert_eq!(r.col_model(), vec![0, 1, 2]);
+        assert_eq!(r.split_caps(&[5, 7, 9]).unwrap(), vec![5, 7, 9]);
+        assert_eq!(r.col_start(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn rejects_zero_counts() {
+        assert!(ReplicaSet::new(&[]).is_err());
+        assert!(ReplicaSet::new(&[1, 0]).is_err());
+        let mut r = ReplicaSet::uniform(2);
+        assert!(r.set_count(0, 0).is_err());
+        assert!(r.set_count(5, 1).is_err());
+        r.set_count(1, 3).unwrap();
+        assert_eq!(r.count(1), 3);
+        assert!(!r.is_uniform());
+    }
+
+    #[test]
+    fn columns_are_model_major() {
+        let r = ReplicaSet::new(&[2, 1, 3]).unwrap();
+        assert_eq!(r.n_columns(), 6);
+        assert_eq!(r.col_model(), vec![0, 0, 1, 2, 2, 2]);
+        assert_eq!(r.col_start(), vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn split_caps_largest_remainder() {
+        let r = ReplicaSet::new(&[3, 2]).unwrap();
+        // 10 = 4 + 3 + 3; 7 = 4 + 3.
+        assert_eq!(r.split_caps(&[10, 7]).unwrap(), vec![4, 3, 3, 4, 3]);
+        // Capacity below the replica count is infeasible.
+        let err = r.split_caps(&[2, 7]).unwrap_err().to_string();
+        assert!(err.contains("model 0"), "{err}");
+        assert!(err.contains("replicas"), "{err}");
+    }
+
+    #[test]
+    fn aggregate_inverts_split() {
+        let r = ReplicaSet::new(&[2, 1]).unwrap();
+        let col_flows = vec![vec![3, 1, 5], vec![0, 2, 0]];
+        assert_eq!(r.aggregate_flows(&col_flows), vec![vec![4, 5], vec![2, 0]]);
+    }
+
+    #[test]
+    fn keep_map_pins_survivors() {
+        let old = ReplicaSet::new(&[2, 2]).unwrap();
+        let grow = ReplicaSet::new(&[3, 2]).unwrap();
+        assert_eq!(
+            old.keep_against(&grow),
+            vec![Some(0), Some(1), None, Some(2), Some(3)]
+        );
+        let shrink = ReplicaSet::new(&[1, 2]).unwrap();
+        assert_eq!(old.keep_against(&shrink), vec![Some(0), Some(2), Some(3)]);
+    }
+}

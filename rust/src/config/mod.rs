@@ -1,10 +1,12 @@
 //! Configuration layer: the Table-1 model zoo (real + proxy architectures),
 //! the simulated Swing-node hardware spec, and experiment/serving knobs.
 
+pub mod cluster;
 pub mod hardware;
 pub mod serve;
 pub mod zoo;
 
+pub use cluster::ReplicaSet;
 pub use hardware::{a100_40gb, epyc_7742, swing_node, CpuSpec, GpuSpec, NodeSpec};
 pub use serve::{ExperimentConfig, Partition};
 pub use zoo::{llama_family, lookup, zoo, Arch, Attention, LlmSpec, ProxyArch};

@@ -97,6 +97,10 @@ pub struct ReplanPolicy {
     zeta: f64,
 
     pending: Vec<Query>,
+    /// desired per-model replica counts from capacity events not yet
+    /// applied to the session (held until the session has queries, or
+    /// until a failed rescale can be retried after the next extend)
+    pending_counts: Option<Vec<usize>>,
     /// per-shape routing proportions from the last solve (rows align with
     /// the session's shape slots)
     targets: Vec<Vec<f64>>,
@@ -141,6 +145,7 @@ impl ReplanPolicy {
             learner: PatternLearner::new(window_s),
             zeta: zeta0,
             pending: Vec::new(),
+            pending_counts: None,
             targets: Vec::new(),
             served: Vec::new(),
             total_served: Vec::new(),
@@ -195,6 +200,59 @@ impl ReplanPolicy {
         self.queue_hist.record(queue_s);
     }
 
+    /// Capacity-change hook: the simulator reports that `up` replicas of
+    /// `model` are dispatchable (a kill/drain lost one, a join added one).
+    /// The desired count is clamped to ≥ 1 — the session still has to plan
+    /// the model's workload somewhere even while its fleet is dark — and
+    /// applied to the live session via warm
+    /// [`rescale`](PlanSession::rescale) when possible. If the session has
+    /// no queries yet (or the rescale is infeasible for the current
+    /// workload), the counts are held and retried after the next extend.
+    pub fn on_capacity(&mut self, model: usize, up: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            model < self.n_models,
+            "capacity event for model {model} but only {} are hosted",
+            self.n_models
+        );
+        let mut counts = self
+            .pending_counts
+            .clone()
+            .unwrap_or_else(|| self.session.replicas().counts().to_vec());
+        counts[model] = up.max(1);
+        self.pending_counts =
+            (counts != self.session.replicas().counts()).then_some(counts);
+        self.apply_replicas();
+        Ok(())
+    }
+
+    /// Try to fold pending capacity changes into the live session. A
+    /// failure (e.g. the shrunken fleet needs more queries than the
+    /// session holds yet) keeps the counts pending; they are retried after
+    /// every extend, so a growing workload eventually absorbs them.
+    fn apply_replicas(&mut self) {
+        let Some(desired) = self.pending_counts.clone() else {
+            return;
+        };
+        if self.session.n_queries() == 0 {
+            return;
+        }
+        let current = self.session.replicas().counts().to_vec();
+        let diffs: Vec<usize> = (0..current.len())
+            .filter(|&k| desired[k] != current[k])
+            .collect();
+        let res = match diffs.as_slice() {
+            [k] => self.session.rescale(*k, desired[*k]),
+            _ => self
+                .session
+                .set_replicas(&desired)
+                .and_then(|()| self.session.solve_shapes().map(|_| ())),
+        };
+        if res.is_ok() {
+            self.pending_counts = None;
+            self.refresh_targets();
+        }
+    }
+
     /// Route one arrival at virtual time `t_ns`.
     pub fn route_at(&mut self, t_ns: u64, q: &Query) -> anyhow::Result<usize> {
         self.tick(t_ns)?;
@@ -222,6 +280,7 @@ impl ReplanPolicy {
         self.session.set_zeta(self.zeta);
         self.session.extend(&batch)?;
         self.refresh_targets();
+        self.apply_replicas();
         self.queue_hist = LogHistogram::new();
         self.stats.replans += 1;
         if slo {
@@ -413,6 +472,32 @@ mod tests {
             (routes, p.stats(), p.zeta_trajectory())
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn capacity_events_rescale_the_live_session() {
+        let mut p = setup(&ControlConfig {
+            replan_every: 8,
+            ..ControlConfig::default()
+        });
+        // Before the session holds queries the change is held pending.
+        p.on_capacity(0, 2).unwrap();
+        assert_eq!(p.session.replicas().counts(), &[1, 1, 1]);
+        for (i, q) in queries(32).iter().enumerate() {
+            p.route_at(ns(0.01 * i as f64), q).unwrap();
+        }
+        // A replan has since folded the pending counts into the session.
+        assert_eq!(p.session.replicas().counts(), &[2, 1, 1]);
+        // With a live workload the change applies immediately (warm
+        // rescale: exactly one model differs).
+        p.on_capacity(1, 3).unwrap();
+        assert_eq!(p.session.replicas().counts(), &[2, 3, 1]);
+        // Losing every replica still plans the model somewhere: count
+        // clamps to >= 1.
+        p.on_capacity(2, 0).unwrap();
+        assert_eq!(p.session.replicas().counts(), &[2, 3, 1]);
+        // Out-of-range models are a hard error, not a silent no-op.
+        assert!(p.on_capacity(9, 1).is_err());
     }
 
     #[test]

@@ -27,7 +27,9 @@ use ecoserve::perfmodel::Cluster;
 use ecoserve::plan::{Plan, Planner, SolverKind};
 use ecoserve::report;
 use ecoserve::scheduler::{self, CapacityMode};
-use ecoserve::sim::{self, ArrivalProcess, CompareSpec, EngineKind, PolicyKind, SimConfig};
+use ecoserve::sim::{
+    self, ArrivalProcess, CompareSpec, EngineKind, FailureScript, PolicyKind, SimConfig,
+};
 use ecoserve::stats;
 use ecoserve::util::{logging, Args, Rng};
 use ecoserve::workload::{self, Query};
@@ -124,7 +126,9 @@ COMMANDS
                             [--seeds N] [--per-query]
                             [--replan-every N] [--slo-trigger-ms MS]
                             [--carbon] [--carbon-band MIN:MAX]
-                            [--carbon-day-s S] [--out metrics.json]
+                            [--carbon-day-s S]
+                            [--replicas A,B,..] [--failures FILE]
+                            [--out metrics.json]
   repro-all                 regenerate every table and figure [--out DIR]
 
 GLOBAL  --seed N   --quiet   --verbose
@@ -737,6 +741,42 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         carbon,
     };
 
+    // Elastic-cluster flags: per-model replica counts (in zoo order) and a
+    // JSONL failure script injecting kill/drain/join events on the
+    // virtual clock.
+    let replica_counts: Option<Vec<usize>> = {
+        let list = args.opt_list("replicas");
+        if list.is_empty() {
+            None
+        } else {
+            anyhow::ensure!(
+                list.len() == sets.len(),
+                "--replicas lists {} counts but {} models are hosted",
+                list.len(),
+                sets.len()
+            );
+            Some(
+                list.iter()
+                    .map(|s| {
+                        s.parse::<usize>().map_err(|_| {
+                            anyhow::anyhow!(
+                                "--replicas expects comma-separated counts, got '{s}'"
+                            )
+                        })
+                    })
+                    .collect::<anyhow::Result<Vec<usize>>>()?,
+            )
+        }
+    };
+    let failures = args
+        .opt("failures")
+        .map(|path| {
+            let text = std::fs::read_to_string(Path::new(path))
+                .map_err(|e| anyhow::anyhow!("cannot read failure script {path}: {e}"))?;
+            FailureScript::from_jsonl(&text)
+        })
+        .transpose()?;
+
     let cfg = SimConfig {
         max_batch,
         max_wait_s: max_wait_ms / 1000.0,
@@ -758,6 +798,8 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         cfg,
         arrival_label: arrival.label(),
         control: Some(control),
+        replicas: replica_counts.as_deref(),
+        failures: failures.as_ref(),
     };
     let arrivals_src = match &trace_arrivals {
         Some(times) => sim::Arrivals::Fixed(times),

@@ -16,6 +16,7 @@
 
 use super::artifact::Plan;
 use super::solver::{ProblemView, ShapeSolution, Solver, SolverKind, SolverState};
+use crate::config::ReplicaSet;
 use crate::models::{ModelSet, Normalizer};
 use crate::scheduler::{
     capacity_bounds, evaluate, Assignment, BucketedProblem, CapacityMode, CostMatrix, Evaluation,
@@ -34,6 +35,14 @@ pub struct PlanSession {
     solver: Box<dyn Solver>,
     solver_kind: SolverKind,
     seed: u64,
+
+    /// Replica counts per model. Uniform (all 1) sessions run exactly the
+    /// per-model path; otherwise the solver sees one *column* per replica
+    /// (model-major) and results are aggregated back to model level.
+    replicas: ReplicaSet,
+    /// Column-level model sets (each model cloned per replica). Empty for
+    /// uniform sessions, which solve directly over `sets`.
+    xsets: Vec<ModelSet>,
 
     queries: Vec<Query>,
     bp: BucketedProblem,
@@ -80,6 +89,8 @@ impl PlanSession {
         PlanSession {
             solver: solver_kind.instantiate(),
             solver_kind,
+            replicas: ReplicaSet::uniform(sets.len()),
+            xsets: Vec::new(),
             sets,
             gammas,
             mode,
@@ -136,6 +147,8 @@ impl PlanSession {
         Ok(PlanSession {
             solver: solver_kind.instantiate(),
             solver_kind,
+            replicas: ReplicaSet::uniform(sets.len()),
+            xsets: Vec::new(),
             sets,
             gammas,
             mode,
@@ -227,8 +240,50 @@ impl PlanSession {
 
     // -------------------------------------------------------------- solving
 
-    fn caps(&self) -> Vec<usize> {
-        capacity_bounds(self.mode, &self.gammas, self.n_total)
+    /// Per-column capacity bounds: the model-level bounds for uniform
+    /// sessions, split evenly across each model's replicas otherwise
+    /// (errors when a model's capacity cannot seat all its replicas).
+    fn caps(&self) -> anyhow::Result<Vec<usize>> {
+        let model_caps = capacity_bounds(self.mode, &self.gammas, self.n_total);
+        if self.replicas.is_uniform() {
+            Ok(model_caps)
+        } else {
+            self.replicas.split_caps(&model_caps)
+        }
+    }
+
+    /// The model sets at solver-column granularity.
+    fn col_sets(&self) -> &[ModelSet] {
+        if self.replicas.is_uniform() {
+            &self.sets
+        } else {
+            &self.xsets
+        }
+    }
+
+    /// Map a column-level solver assignment back to model level (identity
+    /// for uniform sessions — no copy, no reorder). Column costs are
+    /// exact clones of their model's row, so the objective is unchanged.
+    fn to_model_assignment(&self, mut a: Assignment) -> Assignment {
+        if !self.replicas.is_uniform() {
+            let cm = self.replicas.col_model();
+            for m in a.model_of.iter_mut() {
+                *m = cm[*m];
+            }
+        }
+        a
+    }
+
+    /// Map a column-level shape solution back to model level.
+    fn to_model_solution(&self, s: ShapeSolution) -> ShapeSolution {
+        if self.replicas.is_uniform() {
+            s
+        } else {
+            ShapeSolution {
+                flows: self.replicas.aggregate_flows(&s.flows),
+                objective: s.objective,
+            }
+        }
     }
 
     /// Re-blend the costs if ζ drifted from what the matrix holds. Returns
@@ -236,7 +291,12 @@ impl PlanSession {
     /// its previous basis via [`Solver::rezeta`] instead of solving cold.
     fn ensure_costs(&mut self) -> bool {
         if self.zeta != self.costs_zeta {
-            self.bp.set_zeta(&self.sets, &self.norm, self.zeta);
+            let sets: &[ModelSet] = if self.replicas.is_uniform() {
+                &self.sets
+            } else {
+                &self.xsets
+            };
+            self.bp.set_zeta(sets, &self.norm, self.zeta);
             self.costs_zeta = self.zeta;
             self.last = None;
             self.last_flows = None;
@@ -251,19 +311,24 @@ impl PlanSession {
     /// with a warm-startable basis resume from it, the rest invalidate and
     /// solve cold) instead of [`Solver::solve`].
     fn run_solver(&mut self, reblended: bool) -> anyhow::Result<()> {
-        let caps = self.caps();
+        let caps = self.caps()?;
         let view = ProblemView {
-            sets: &self.sets,
+            sets: if self.replicas.is_uniform() {
+                &self.sets
+            } else {
+                &self.xsets
+            },
             queries: &self.queries,
             bp: &self.bp,
             caps: &caps,
             seed: self.seed,
         };
-        self.last = Some(if reblended {
+        let a = if reblended {
             self.solver.rezeta(&view, &mut self.state)?
         } else {
             self.solver.solve(&view, &mut self.state)?
-        });
+        };
+        self.last = Some(self.to_model_assignment(a));
         Ok(())
     }
 
@@ -300,19 +365,24 @@ impl PlanSession {
     pub fn solve_shapes(&mut self) -> anyhow::Result<&ShapeSolution> {
         let reblended = self.ensure_costs();
         if self.last_flows.is_none() {
-            let caps = self.caps();
+            let caps = self.caps()?;
             let view = ProblemView {
-                sets: &self.sets,
+                sets: if self.replicas.is_uniform() {
+                    &self.sets
+                } else {
+                    &self.xsets
+                },
                 queries: &self.queries,
                 bp: &self.bp,
                 caps: &caps,
                 seed: self.seed,
             };
-            self.last_flows = Some(if reblended {
+            let s = if reblended {
                 self.solver.rezeta_shapes(&view, &mut self.state)?
             } else {
                 self.solver.solve_shapes(&view, &mut self.state)?
-            });
+            };
+            self.last_flows = Some(self.to_model_solution(s));
         }
         Ok(self.last_flows.as_ref().unwrap())
     }
@@ -432,12 +502,17 @@ impl PlanSession {
             // the allocation only when the shape count demands it, so a
             // long arrival stream reuses one buffer; a pure ζ change
             // re-blends it likewise.
+            let sets: &[ModelSet] = if self.replicas.is_uniform() {
+                &self.sets
+            } else {
+                &self.xsets
+            };
             if new_shapes || norm_changed {
                 self.bp
                     .costs
-                    .refill(&self.sets, &self.norm, &self.bp.groups.shapes, self.zeta);
+                    .refill(sets, &self.norm, &self.bp.groups.shapes, self.zeta);
             } else {
-                self.bp.set_zeta(&self.sets, &self.norm, self.zeta);
+                self.bp.set_zeta(sets, &self.norm, self.zeta);
             }
             self.costs_zeta = self.zeta;
             self.state.invalidate();
@@ -445,17 +520,183 @@ impl PlanSession {
         } else {
             // Costs valid; only multiplicities/capacities grew: the
             // backend may warm-start.
-            let caps = self.caps();
+            let caps = self.caps()?;
             let view = ProblemView {
-                sets: &self.sets,
+                sets: if self.replicas.is_uniform() {
+                    &self.sets
+                } else {
+                    &self.xsets
+                },
                 queries: &self.queries,
                 bp: &self.bp,
                 caps: &caps,
                 seed: self.seed,
             };
-            self.last = Some(self.solver.extend(&view, &mut self.state)?);
+            let a = self.solver.extend(&view, &mut self.state)?;
+            self.last = Some(self.to_model_assignment(a));
         }
         Ok(self.last.as_ref().unwrap())
+    }
+
+    // ------------------------------------------------------------- replicas
+
+    /// The session's replica topology (uniform — one replica per model —
+    /// unless [`set_replicas`](PlanSession::set_replicas) /
+    /// [`rescale`](PlanSession::rescale) changed it).
+    pub fn replicas(&self) -> &ReplicaSet {
+        &self.replicas
+    }
+
+    /// Replace the replica topology wholesale and invalidate every solve
+    /// product (cold re-solve on the next call). Use
+    /// [`rescale`](PlanSession::rescale) for incremental single-model
+    /// changes, which warm-starts where the backend supports it.
+    pub fn set_replicas(&mut self, counts: &[usize]) -> anyhow::Result<()> {
+        if counts.len() != self.sets.len() {
+            anyhow::bail!(
+                "{} replica counts for {} models",
+                counts.len(),
+                self.sets.len()
+            );
+        }
+        let new = ReplicaSet::new(counts)?;
+        if new == self.replicas {
+            return Ok(());
+        }
+        // An impossible topology must error before any state is touched.
+        // With no workload yet (control plane pre-positioning replicas)
+        // validation is deferred to the first solve — capacities grow
+        // with the workload, so a feasible split stays feasible.
+        if self.n_total > 0 {
+            if self.n_total < new.n_columns() {
+                anyhow::bail!(
+                    "workload of {} queries cannot give each of {} replica columns at \
+                     least one query (Eq. 3); shrink the replica set or grow the workload",
+                    self.n_total,
+                    new.n_columns()
+                );
+            }
+            if !new.is_uniform() {
+                new.split_caps(&capacity_bounds(self.mode, &self.gammas, self.n_total))?;
+            }
+        }
+        self.replicas = new;
+        self.rebuild_columns();
+        Ok(())
+    }
+
+    /// Rebuild the column-level cost matrix for the current replica
+    /// topology at the current ζ and drop every solve product.
+    fn rebuild_columns(&mut self) {
+        self.xsets = if self.replicas.is_uniform() {
+            Vec::new()
+        } else {
+            self.replicas.expand_sets(&self.sets)
+        };
+        let sets: &[ModelSet] = if self.replicas.is_uniform() {
+            &self.sets
+        } else {
+            &self.xsets
+        };
+        self.bp.costs = CostMatrix::build_for_shapes(sets, &self.norm, &self.bp.groups.shapes, self.zeta);
+        self.costs_zeta = self.zeta;
+        self.state.invalidate();
+        self.last = None;
+        self.last_flows = None;
+    }
+
+    /// Rescale one model's replica count and re-solve — the capacity-loss
+    /// / elasticity hook, the warm-start sibling of
+    /// [`extend`](PlanSession::extend) and
+    /// [`rezeta`](PlanSession::rezeta). Surviving replica columns keep
+    /// their identity, so a warm-startable backend (net-simplex) pins
+    /// their basis arcs, tombstones dropped columns, and resumes pivoting
+    /// from the feasible remainder; other backends — and declined warm
+    /// starts, typical for shrinks whose dropped columns carried flow —
+    /// re-solve cold. Either way the result equals a from-scratch solve
+    /// of the rescaled instance (cross-checked to 1e-9 in
+    /// `tests/plan.rs` / `tests/netsimplex.rs`), and an infeasible
+    /// topology reports the same instructive error on both paths.
+    pub fn rescale(&mut self, model: usize, new_count: usize) -> anyhow::Result<()> {
+        if model >= self.sets.len() {
+            anyhow::bail!("model {model} out of range ({} models)", self.sets.len());
+        }
+        if new_count == 0 {
+            anyhow::bail!("model {model} cannot rescale to zero replicas");
+        }
+        if new_count == self.replicas.count(model) {
+            return Ok(());
+        }
+        let old = self.replicas.clone();
+        let mut new = old.clone();
+        new.set_count(model, new_count)?;
+        // Pre-mutation validation: an infeasible topology must leave the
+        // session untouched (a post-rebuild failure would wedge it).
+        if self.n_total > 0 {
+            if self.n_total < new.n_columns() {
+                anyhow::bail!(
+                    "workload of {} queries cannot give each of {} replica columns at \
+                     least one query (Eq. 3); shrink the replica set or grow the workload",
+                    self.n_total,
+                    new.n_columns()
+                );
+            }
+            if !new.is_uniform() {
+                new.split_caps(&capacity_bounds(self.mode, &self.gammas, self.n_total))?;
+            }
+        }
+        let keep = old.keep_against(&new);
+
+        // A ζ drift means the old basis was priced at a different blend —
+        // surviving columns' arc costs would be stale, so force cold.
+        let drifted = self.zeta != self.costs_zeta;
+        self.replicas = new;
+        self.xsets = if self.replicas.is_uniform() {
+            Vec::new()
+        } else {
+            self.replicas.expand_sets(&self.sets)
+        };
+        {
+            let sets: &[ModelSet] = if self.replicas.is_uniform() {
+                &self.sets
+            } else {
+                &self.xsets
+            };
+            self.bp.costs =
+                CostMatrix::build_for_shapes(sets, &self.norm, &self.bp.groups.shapes, self.zeta);
+        }
+        self.costs_zeta = self.zeta;
+        self.last = None;
+        self.last_flows = None;
+        if drifted {
+            self.state.invalidate();
+        }
+        if self.n_total == 0 {
+            // No workload yet: the next solve picks the topology up cold.
+            self.state.invalidate();
+            return Ok(());
+        }
+
+        let caps = self.caps()?;
+        let view = ProblemView {
+            sets: if self.replicas.is_uniform() {
+                &self.sets
+            } else {
+                &self.xsets
+            },
+            queries: &self.queries,
+            bp: &self.bp,
+            caps: &caps,
+            seed: self.seed,
+        };
+        if self.sketch_fed {
+            let s = self.solver.rescale_shapes(&view, &keep, &mut self.state)?;
+            self.last_flows = Some(self.to_model_solution(s));
+        } else {
+            let a = self.solver.rescale(&view, &keep, &mut self.state)?;
+            self.last = Some(self.to_model_assignment(a));
+        }
+        Ok(())
     }
 
     // ------------------------------------------------------------ artifacts

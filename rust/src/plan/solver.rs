@@ -206,6 +206,36 @@ pub trait Solver {
         state.invalidate();
         self.solve_shapes(p, state)
     }
+
+    /// Re-solve after the session rescaled the model *column set* —
+    /// replica columns added or dropped, surviving columns possibly
+    /// re-capped. `keep[j]` is `Some(old_column)` when new column `j`
+    /// survives from the previous instance, `None` when it is fresh.
+    /// Backends with a warm-startable basis may pin the surviving
+    /// columns' arcs and resume pivoting; the default solves cold.
+    fn rescale(
+        &self,
+        p: &ProblemView<'_>,
+        keep: &[Option<usize>],
+        state: &mut SolverState,
+    ) -> anyhow::Result<Assignment> {
+        let _ = keep;
+        state.invalidate();
+        self.solve(p, state)
+    }
+
+    /// Shape-level sibling of [`Solver::rescale`] for sketch-fed
+    /// sessions.
+    fn rescale_shapes(
+        &self,
+        p: &ProblemView<'_>,
+        keep: &[Option<usize>],
+        state: &mut SolverState,
+    ) -> anyhow::Result<ShapeSolution> {
+        let _ = keep;
+        state.invalidate();
+        self.solve_shapes(p, state)
+    }
 }
 
 /// Expand the per-shape cost rows to a dense per-query matrix (model-major
@@ -352,6 +382,39 @@ impl Solver for NetSimplexSolver {
         state.flow = None;
         if let Some(flow) = state.simplex.as_mut() {
             if flow.rezeta(p.bp, p.caps)? {
+                let (flows, objective) = flow.shape_flows(p.bp);
+                return Ok(ShapeSolution { flows, objective });
+            }
+        }
+        self.solve_shapes(p, state)
+    }
+
+    fn rescale(
+        &self,
+        p: &ProblemView<'_>,
+        keep: &[Option<usize>],
+        state: &mut SolverState,
+    ) -> anyhow::Result<Assignment> {
+        state.dense = None;
+        state.flow = None;
+        if let Some(flow) = state.simplex.as_mut() {
+            if flow.rescale(p.bp, p.caps, keep)? {
+                return Ok(flow.assignment(p.bp));
+            }
+        }
+        self.solve(p, state)
+    }
+
+    fn rescale_shapes(
+        &self,
+        p: &ProblemView<'_>,
+        keep: &[Option<usize>],
+        state: &mut SolverState,
+    ) -> anyhow::Result<ShapeSolution> {
+        state.dense = None;
+        state.flow = None;
+        if let Some(flow) = state.simplex.as_mut() {
+            if flow.rescale(p.bp, p.caps, keep)? {
                 let (flows, objective) = flow.shape_flows(p.bp);
                 return Ok(ShapeSolution { flows, objective });
             }

@@ -294,6 +294,135 @@ impl NetSimplex {
         if !self.solved {
             return false;
         }
+        self.rebalance_tree()
+    }
+
+    /// Append `count` fresh zero-balance nodes; returns the index of the
+    /// first. The new ids follow the existing range (the artificial root
+    /// conceptually moves from the old `n` to the new `n`), so the basis
+    /// arrays are stale until [`NetSimplex::warm_rescale`] re-lays them
+    /// out — pair this with `warm_rescale` or a cold [`NetSimplex::solve`].
+    pub fn add_nodes(&mut self, count: usize) -> usize {
+        let first = self.n;
+        self.n += count;
+        self.supply.resize(self.n, 0);
+        first
+    }
+
+    /// Overwrite an arc's capacity in place — unlike
+    /// [`NetSimplex::add_capacity`] it may *shrink* (to zero for
+    /// tombstoned arcs). Flow is deliberately not adjusted here:
+    /// [`NetSimplex::warm_rescale`] re-pins non-tree arcs to their new
+    /// bounds and re-balances the tree, and a cold solve rebuilds
+    /// everything.
+    pub fn set_capacity(&mut self, arc: usize, cap: i64) {
+        assert!(cap >= 0);
+        self.cap[arc] = cap;
+    }
+
+    /// Warm restart after a *structural* edit: nodes appended via
+    /// [`NetSimplex::add_nodes`], arcs appended via
+    /// [`NetSimplex::add_arc`], and capacities re-set (including shrunk
+    /// to zero) via [`NetSimplex::set_capacity`] — the rescale pattern.
+    /// `n_old`/`m_old` are the node/real-arc counts of the solved basis
+    /// being restarted.
+    ///
+    /// The old spanning tree is re-indexed into the grown arc space
+    /// (artificial arc of node `u` moves from `m_old + u` to `m + u`,
+    /// the old root id `n_old` becomes the new root `n`), fresh nodes
+    /// hang off the root by zero-flow artificial arcs, every non-tree
+    /// real arc is re-pinned to its possibly-changed bound, tree flows
+    /// are recomputed leaves-first, and pivoting resumes under the warm
+    /// budget (new and repriced arcs may be profitable). Returns `false`
+    /// — with the basis marked unsolved — when the old tree cannot carry
+    /// the edited instance or the budget is exhausted; rebuild cold then.
+    pub fn warm_rescale(&mut self, n_old: usize, m_old: usize) -> bool {
+        if !self.solved {
+            return false;
+        }
+        let n = self.n;
+        let m = self.m_real();
+        let root = n;
+        debug_assert!(n >= n_old && m >= m_old, "rescale only appends");
+
+        // Re-lay-out flow/state: [real | artificial] with the artificial
+        // segment shifted from offset m_old to m.
+        let mut flow = vec![0i64; m + n];
+        let mut state = vec![STATE_LOWER; m + n];
+        flow[..m_old].copy_from_slice(&self.flow[..m_old]);
+        state[..m_old].copy_from_slice(&self.state[..m_old]);
+        for u in 0..n_old {
+            flow[m + u] = self.flow[m_old + u];
+            state[m + u] = self.state[m_old + u];
+        }
+        self.flow = flow;
+        self.state = state;
+        self.art_to_root.resize(n, true);
+
+        let mut parent = vec![NONE; n + 1];
+        let mut pred = vec![NONE; n + 1];
+        for u in 0..n_old {
+            parent[u] = if self.parent[u] == n_old {
+                root
+            } else {
+                self.parent[u]
+            };
+            pred[u] = if self.pred[u] >= m_old {
+                m + (self.pred[u] - m_old)
+            } else {
+                self.pred[u]
+            };
+        }
+        for u in n_old..n {
+            parent[u] = root;
+            pred[u] = m + u;
+            self.state[m + u] = STATE_TREE;
+        }
+        self.parent = parent;
+        self.pred = pred;
+
+        // Big-M must stay dominant over any newly added arc costs.
+        let max_abs = self.cost.iter().map(|c| c.abs()).max().unwrap_or(0);
+        let fresh = (max_abs + 1).saturating_mul(n as i64 + 1);
+        if fresh > self.art_cost {
+            self.art_cost = fresh;
+        }
+
+        // Re-pin every non-tree real arc to its (possibly shrunk or
+        // grown) bound; tree-arc flows are recomputed by the rebalance.
+        for e in 0..m {
+            if self.state[e] == STATE_UPPER {
+                self.flow[e] = self.cap[e];
+            } else if self.state[e] == STATE_LOWER {
+                self.flow[e] = 0;
+            }
+        }
+
+        self.rebuild_tree_meta();
+        if !self.rebalance_tree() {
+            return false; // rebalance marked the basis unsolved
+        }
+
+        // Feasible again, but not optimal: appended arcs enter at their
+        // lower bound and tombstoned arcs may sit at cap 0 with negative
+        // reduced cost (resolved by degenerate bound flips). Pivot under
+        // the warm budget; a cut-off means the caller rebuilds cold.
+        self.next_arc = 0;
+        self.solved = false;
+        if !self.pivot_loop(warm_pivot_budget(m)) || self.flow[m..].iter().any(|&f| f != 0) {
+            return false;
+        }
+        self.solved = true;
+        true
+    }
+
+    /// Recompute tree-arc flows leaves-first from the current balances,
+    /// holding every non-tree arc at its pinned flow — the shared core of
+    /// [`NetSimplex::warm_extend`] and [`NetSimplex::warm_rescale`].
+    /// Fails — marking the basis unsolved — when a tree arc would leave
+    /// its bounds, an artificial arc would carry flow, or balances don't
+    /// sum to zero.
+    fn rebalance_tree(&mut self) -> bool {
         let n = self.n;
         let m = self.m_real();
         let root = n;
@@ -656,8 +785,18 @@ pub struct SimplexFlow {
     source: Vec<usize>,
     /// shape → model arcs, shape-major (`i * nm + k`)
     shape_model: Vec<usize>,
+    /// the cap-1 reward (−eq3_reward) model → sink arcs
+    reward: Vec<usize>,
     /// the cap-(u_k−1) zero-cost model → sink arcs (grown on extension)
     sink_zero: Vec<usize>,
+    /// NetSimplex node id of each model column — `1 + ns + k` for columns
+    /// from `build`, appended past the old sink for columns added by
+    /// [`SimplexFlow::rescale`] (node-id topology is irrelevant to the
+    /// simplex core)
+    model_node: Vec<usize>,
+    /// NetSimplex node id of the sink (fixed at build time; rescale
+    /// appends nodes after it rather than moving it)
+    sink_node: usize,
     mult: Vec<usize>,
     caps: Vec<usize>,
     ns: usize,
@@ -697,9 +836,10 @@ impl SimplexFlow {
                 shape_model.push(g.add_arc(snode(i), mnode(k), mult, c));
             }
         }
+        let mut reward_arcs = Vec::with_capacity(nm);
         let mut sink_zero = Vec::with_capacity(nm);
         for (k, &cap) in caps.iter().enumerate() {
-            g.add_arc(mnode(k), t, 1, -reward);
+            reward_arcs.push(g.add_arc(mnode(k), t, 1, -reward));
             sink_zero.push(g.add_arc(mnode(k), t, (cap as i64 - 1).max(0), 0));
         }
         g.set_supply(0, nq as i64);
@@ -709,7 +849,10 @@ impl SimplexFlow {
             g,
             source,
             shape_model,
+            reward: reward_arcs,
             sink_zero,
+            model_node: (0..nm).map(mnode).collect(),
+            sink_node: t,
             mult: bp.groups.multiplicity.clone(),
             caps: caps.to_vec(),
             ns,
@@ -798,9 +941,8 @@ impl SimplexFlow {
                 self.g.add_capacity(self.sink_zero[k], delta);
             }
         }
-        let t = self.ns + self.nm + 1;
         self.g.set_supply(0, nq as i64);
-        self.g.set_supply(t, -(nq as i64));
+        self.g.set_supply(self.sink_node, -(nq as i64));
 
         if self.g.warm_extend() {
             self.mult = mult.to_vec();
@@ -813,6 +955,131 @@ impl SimplexFlow {
             // instead of re-applying the deltas. The caller must rebuild.
             Ok(false)
         }
+    }
+
+    /// Warm re-solve after the model *column set* changed — the replica
+    /// rescale pattern. `bp` is the new column-level instance (same shape
+    /// grouping and multiplicities, `bp.n_models()` columns), `caps` the
+    /// new per-column capacities, and `keep[j]` is `Some(old_column)`
+    /// when new column `j` is a surviving replica (its basis arcs are
+    /// reused) or `None` for a freshly added one. Old columns absent from
+    /// `keep` are tombstoned: their arcs stay in the graph with capacity
+    /// zero (bounded leak per rescale, reclaimed by the next cold build).
+    ///
+    /// Returns `Ok(false)` when the instance doesn't match or the old
+    /// basis cannot carry the edit (typical for shrinks, where dropped
+    /// columns carried flow) — rebuild cold then; the basis is left
+    /// unsolved once the graph has been mutated, exactly like
+    /// [`SimplexFlow::extend`]. Infeasible capacities error through the
+    /// same `check_feasible` as the cold build, so warm and cold report
+    /// identical diagnostics.
+    pub fn rescale(
+        &mut self,
+        bp: &BucketedProblem,
+        caps: &[usize],
+        keep: &[Option<usize>],
+    ) -> anyhow::Result<bool> {
+        let nm_new = bp.n_models();
+        if bp.groups.n_shapes() != self.ns
+            || bp.costs.n_queries != self.ns
+            || bp.groups.multiplicity != self.mult
+            || keep.len() != nm_new
+            || caps.len() != nm_new
+            || !self.g.is_solved()
+        {
+            return Ok(false);
+        }
+        if keep
+            .iter()
+            .flatten()
+            .any(|&o| o >= self.nm)
+        {
+            return Ok(false);
+        }
+        let nq: usize = self.mult.iter().sum();
+        check_feasible(nq, nm_new, caps)?;
+
+        let nm_old = self.nm;
+        let n_old = self.g.n;
+        let m_old = self.g.m_real();
+        let rew = eq3_reward(nq);
+
+        // Tombstone old columns that no new column keeps.
+        let mut kept_old = vec![false; nm_old];
+        for &o in keep.iter().flatten() {
+            kept_old[o] = true;
+        }
+        for (j, kept) in kept_old.iter().enumerate() {
+            if *kept {
+                continue;
+            }
+            for i in 0..self.ns {
+                self.g.set_capacity(self.shape_model[i * nm_old + j], 0);
+            }
+            self.g.set_capacity(self.reward[j], 0);
+            self.g.set_capacity(self.sink_zero[j], 0);
+        }
+
+        // Fresh nodes for the added columns, appended past the sink.
+        let n_fresh = keep.iter().filter(|k| k.is_none()).count();
+        let mut next_node = self.g.add_nodes(n_fresh);
+        let mut model_node = Vec::with_capacity(nm_new);
+        for k in keep {
+            match k {
+                Some(o) => model_node.push(self.model_node[*o]),
+                None => {
+                    model_node.push(next_node);
+                    next_node += 1;
+                }
+            }
+        }
+
+        // Shape→column arcs: reuse survivors' ids, append fresh ones.
+        let snode = |i: usize| 1 + i;
+        let mut shape_model = Vec::with_capacity(self.ns * nm_new);
+        for i in 0..self.ns {
+            let mult = self.mult[i] as i64;
+            let row = bp.costs.row(i);
+            for (j, k) in keep.iter().enumerate() {
+                match k {
+                    Some(o) => shape_model.push(self.shape_model[i * nm_old + o]),
+                    None => {
+                        let c = (row[j] * COST_SCALE).round() as i64;
+                        shape_model.push(self.g.add_arc(snode(i), model_node[j], mult, c));
+                    }
+                }
+            }
+        }
+
+        // Column→sink arcs: survivors re-cap, fresh columns get the
+        // reward/sink_zero pair (same adjacency as `build`).
+        let mut reward_arcs = Vec::with_capacity(nm_new);
+        let mut sink_zero = Vec::with_capacity(nm_new);
+        for (j, k) in keep.iter().enumerate() {
+            let zero_cap = (caps[j] as i64 - 1).max(0);
+            match k {
+                Some(o) => {
+                    reward_arcs.push(self.reward[*o]);
+                    sink_zero.push(self.sink_zero[*o]);
+                    self.g.set_capacity(self.sink_zero[*o], zero_cap);
+                }
+                None => {
+                    reward_arcs.push(self.g.add_arc(model_node[j], self.sink_node, 1, -rew));
+                    sink_zero.push(self.g.add_arc(model_node[j], self.sink_node, zero_cap, 0));
+                }
+            }
+        }
+
+        self.shape_model = shape_model;
+        self.reward = reward_arcs;
+        self.sink_zero = sink_zero;
+        self.model_node = model_node;
+        self.nm = nm_new;
+        self.caps = caps.to_vec();
+
+        // The graph is mutated either way; on a failed warm restart the
+        // basis is left unsolved and the caller rebuilds cold.
+        Ok(self.g.warm_rescale(n_old, m_old))
     }
 
     /// Expand the shape-level flows back to a per-query assignment — the
@@ -1177,5 +1444,143 @@ mod tests {
         assert!(!flow.extend(&[3, 3, 1], &[6, 6]).unwrap()); // shape count
         assert!(!flow.extend(&[2, 3], &[6, 6]).unwrap()); // shrunk multiplicity
         assert!(!flow.extend(&[3, 3], &[5, 6]).unwrap()); // shrunk capacity
+    }
+
+    /// Duplicate column `dup` of a column-major cost table — the replica
+    /// expansion a rescale applies (identical cost rows per clone).
+    fn with_dup_column(costs: &[Vec<f64>], dup: usize) -> Vec<Vec<f64>> {
+        let mut out = costs.to_vec();
+        out.insert(dup + 1, costs[dup].clone());
+        out
+    }
+
+    #[test]
+    fn warm_rescale_grow_matches_cold() {
+        let mut rng = Rng::new(0x5CA1E);
+        for case in 0..30 {
+            let ns = 2 + rng.index(4);
+            let nm = 2 + rng.index(3);
+            let mult: Vec<usize> = (0..ns).map(|_| 1 + rng.index(5)).collect();
+            let nq: usize = mult.iter().sum();
+            if nq < nm + 1 {
+                continue;
+            }
+            let costs: Vec<Vec<f64>> = (0..nm)
+                .map(|_| (0..ns).map(|_| rng.range(-1.0, 1.0)).collect())
+                .collect();
+            let caps: Vec<usize> = (0..nm).map(|_| 2 + rng.index(nq + 2)).collect();
+            if caps.iter().sum::<usize>() < nq {
+                continue;
+            }
+            let bp = instance(costs.clone(), mult.clone());
+            let mut flow = SimplexFlow::build(&bp, &caps).unwrap();
+            flow.solve().unwrap();
+
+            // Grow: clone one column (a replica joining), splitting its
+            // capacity across the survivor and the clone.
+            let dup = rng.index(nm);
+            let grown = with_dup_column(&costs, dup);
+            let mut caps2 = caps.clone();
+            let half = (caps[dup] / 2).max(1);
+            caps2[dup] = (caps[dup] - half).max(1);
+            caps2.insert(dup + 1, half);
+            if caps2.iter().sum::<usize>() < nq {
+                continue;
+            }
+            let mut keep: Vec<Option<usize>> = (0..nm).map(Some).collect();
+            keep.insert(dup + 1, None);
+            let bp2 = instance(grown, mult);
+            let warm = flow.rescale(&bp2, &caps2, &keep).unwrap();
+            let b = solve_exact_bucketed(&bp2, &caps2).unwrap();
+            if warm {
+                let a = flow.assignment(&bp2);
+                assert!(
+                    (a.objective - b.objective).abs() < 1e-9,
+                    "case {case}: warm rescale {} vs cold {}",
+                    a.objective,
+                    b.objective
+                );
+                a.check_constraints(nm + 1).unwrap();
+                for (c, cap) in a.counts(nm + 1).iter().zip(&caps2) {
+                    assert!(c <= cap, "case {case}: column over capacity");
+                }
+            } else {
+                // Declined: a cold rebuild must still agree.
+                let a = solve_exact_netsimplex(&bp2, &caps2).unwrap();
+                assert!((a.objective - b.objective).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn warm_rescale_shrink_matches_cold_or_declines() {
+        let mut rng = Rng::new(0x5CA1F);
+        for case in 0..30 {
+            let ns = 2 + rng.index(4);
+            let nm = 3 + rng.index(3);
+            let mult: Vec<usize> = (0..ns).map(|_| 1 + rng.index(5)).collect();
+            let nq: usize = mult.iter().sum();
+            if nq < nm + 1 {
+                continue;
+            }
+            let costs: Vec<Vec<f64>> = (0..nm)
+                .map(|_| (0..ns).map(|_| rng.range(-1.0, 1.0)).collect())
+                .collect();
+            // Roomy caps so dropping one column stays feasible.
+            let caps: Vec<usize> = (0..nm).map(|_| nq + rng.index(3)).collect();
+            let bp = instance(costs.clone(), mult.clone());
+            let mut flow = SimplexFlow::build(&bp, &caps).unwrap();
+            flow.solve().unwrap();
+
+            // Shrink: drop one column (a replica leaving).
+            let gone = rng.index(nm);
+            let mut shrunk = costs.clone();
+            shrunk.remove(gone);
+            let mut caps2 = caps.clone();
+            caps2.remove(gone);
+            let keep: Vec<Option<usize>> =
+                (0..nm).filter(|&j| j != gone).map(Some).collect();
+            let bp2 = instance(shrunk, mult);
+            let warm = flow.rescale(&bp2, &caps2, &keep).unwrap();
+            let b = solve_exact_bucketed(&bp2, &caps2).unwrap();
+            if warm {
+                let a = flow.assignment(&bp2);
+                assert!(
+                    (a.objective - b.objective).abs() < 1e-9,
+                    "case {case}: warm shrink {} vs cold {}",
+                    a.objective,
+                    b.objective
+                );
+            } else {
+                let a = solve_exact_netsimplex(&bp2, &caps2).unwrap();
+                assert!((a.objective - b.objective).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn rescale_infeasible_errors_like_cold_build() {
+        let bp = instance(vec![vec![0.1, 0.5], vec![0.9, 0.2]], vec![4, 4]);
+        let mut flow = SimplexFlow::build(&bp, &[8, 8]).unwrap();
+        flow.solve().unwrap();
+        // Shrink to one column with capacity below the workload: the warm
+        // path must raise the same check_feasible error as a cold build.
+        let bp2 = instance(vec![vec![0.1, 0.5]], vec![4, 4]);
+        let warm_err = flow
+            .rescale(&bp2, &[3], &[Some(0)])
+            .unwrap_err()
+            .to_string();
+        let cold_err = SimplexFlow::build(&bp2, &[3]).unwrap_err().to_string();
+        assert_eq!(warm_err, cold_err);
+    }
+
+    #[test]
+    fn rescale_declines_on_mismatched_instance() {
+        let bp = instance(vec![vec![0.1, 0.5], vec![0.9, 0.2]], vec![3, 3]);
+        let mut flow = SimplexFlow::build(&bp, &[6, 6]).unwrap();
+        flow.solve().unwrap();
+        // Multiplicity drift declines (rescale never changes the workload).
+        let bp_drift = instance(vec![vec![0.1, 0.5], vec![0.9, 0.2]], vec![3, 4]);
+        assert!(!flow.rescale(&bp_drift, &[6, 6], &[Some(0), Some(1)]).unwrap());
     }
 }

@@ -24,6 +24,7 @@
 //! per policy).
 
 use super::arrival::{ARRIVAL_SEED_SALT, ArrivalProcess};
+use super::failure::FailureScript;
 use super::metrics::SimMetrics;
 use super::policy::{PolicyKind, SimPolicy};
 use super::simulator::{Memo, SimConfig, Simulator};
@@ -53,6 +54,13 @@ pub struct CompareSpec<'a> {
     /// carbon metering for *every* policy in the grid, so realized gCO₂
     /// is directly comparable across rows
     pub control: Option<ControlConfig>,
+    /// per-model replica counts (`--replicas`); `None` hosts each model
+    /// on a single node
+    pub replicas: Option<&'a [usize]>,
+    /// failure/elasticity scenario (`--failures`) replayed identically
+    /// under every (policy, seed) in the grid, so degradation under the
+    /// *same* outage is attributable to the policy alone
+    pub failures: Option<&'a FailureScript>,
 }
 
 /// Where a replicate's arrival timestamps come from.
@@ -141,6 +149,12 @@ pub fn compare_replicated(
                 .and_then(|mut policy| {
                     let mut sim = Simulator::new(spec.sets, spec.cfg)
                         .labeled(&spec.arrival_label, seed, spec.zeta);
+                    if let Some(counts) = spec.replicas {
+                        sim = sim.with_replicas(counts)?;
+                    }
+                    if let Some(script) = spec.failures {
+                        sim = sim.with_failures(script);
+                    }
                     if let Some(carbon) =
                         spec.control.as_ref().and_then(|c| c.carbon.as_ref())
                     {
@@ -178,7 +192,7 @@ pub fn compare_replicated(
 pub fn comparison_to_json(rows: &[SimMetrics]) -> Json {
     Json::obj(vec![
         ("format", Json::str("ecoserve.sim-comparison")),
-        ("version", Json::num(4.0)),
+        ("version", Json::num(5.0)),
         (
             "policies",
             Json::arr(rows.iter().map(|m| m.to_json())),
@@ -196,7 +210,7 @@ pub fn replicated_to_json(grid: &[Vec<SimMetrics>]) -> Json {
         .unwrap_or_default();
     Json::obj(vec![
         ("format", Json::str("ecoserve.sim-comparison")),
-        ("version", Json::num(4.0)),
+        ("version", Json::num(5.0)),
         ("seeds", Json::Arr(seeds)),
         (
             "policies",
@@ -283,6 +297,8 @@ mod tests {
             cfg: SimConfig::default(),
             arrival_label: "poisson:20".to_string(),
             control: None,
+            replicas: None,
+            failures: None,
         };
         let kinds = [
             PolicyKind::Greedy,
@@ -323,6 +339,8 @@ mod tests {
             cfg: SimConfig::default(),
             arrival_label: "poisson:25".to_string(),
             control: None,
+            replicas: None,
+            failures: None,
         };
         let kinds = [PolicyKind::Greedy, PolicyKind::RoundRobin];
         let grid = compare_replicated(
@@ -377,6 +395,8 @@ mod tests {
                 cfg: SimConfig::default(),
                 arrival_label: "gamma:40:4".to_string(),
                 control: None,
+                replicas: None,
+                failures: None,
             };
             let grid = compare_replicated(
                 &spec,
@@ -404,10 +424,67 @@ mod tests {
             cfg: SimConfig::default(),
             arrival_label: "poisson:1".to_string(),
             control: None,
+            replicas: None,
+            failures: None,
         };
         assert!(compare(&spec, &queries, &[0.0], &[PolicyKind::Plan]).is_err());
         // Replan likewise refuses to run without a control configuration.
         assert!(compare(&spec, &queries, &[0.0], &[PolicyKind::Replan]).is_err());
+    }
+
+    #[test]
+    fn failure_scenario_replays_identically_under_every_policy() {
+        let s = sets();
+        let queries: Vec<Query> = (0..40)
+            .map(|i| Query {
+                id: i,
+                t_in: 1 + 17 * (i % 4),
+                t_out: 1 + 23 * (i % 3),
+            })
+            .collect();
+        let arrivals: Vec<f64> = (0..40).map(|i| 0.05 * i as f64).collect();
+        let script = FailureScript::from_jsonl(
+            r#"
+            {"t": 0.3, "model": 0, "replica": 1, "kind": "kill"}
+            {"t": 0.8, "model": 0, "replica": 1, "kind": "join", "warmup": 0.1}
+            "#,
+        )
+        .unwrap();
+        let replicas = [2usize, 1, 1];
+        let run = || {
+            let spec = CompareSpec {
+                sets: &s,
+                norm: Normalizer::from_workload(&s, &queries),
+                zeta: 0.5,
+                plan: None,
+                seed: 3,
+                cfg: SimConfig::default(),
+                arrival_label: "trace".to_string(),
+                control: None,
+                replicas: Some(&replicas),
+                failures: Some(&script),
+            };
+            compare(
+                &spec,
+                &queries,
+                &arrivals,
+                &[PolicyKind::Greedy, PolicyKind::RoundRobin],
+            )
+            .unwrap()
+        };
+        let rows = run();
+        for row in &rows {
+            // Same outage for every policy: same scenario label, same
+            // replica fleet, nothing lost.
+            assert_eq!(row.scenario, "chaos:2");
+            assert_eq!(row.n_queries, 40);
+            assert_eq!(row.nodes.len(), 4);
+        }
+        // And the whole comparison artifact is byte-stable under replay.
+        assert_eq!(
+            comparison_to_json(&rows).to_string_pretty(),
+            comparison_to_json(&run()).to_string_pretty()
+        );
     }
 
     #[test]
@@ -434,6 +511,8 @@ mod tests {
             cfg: SimConfig::default(),
             arrival_label: "poisson:25".to_string(),
             control: Some(control),
+            replicas: None,
+            failures: None,
         };
         let kinds = [PolicyKind::Replan, PolicyKind::Greedy];
         let grid = compare_replicated(
@@ -456,6 +535,6 @@ mod tests {
         assert!(grid[1].iter().all(|m| m.replan_stats.is_none()));
         let json = replicated_to_json(&grid).to_string_pretty();
         assert!(json.contains("\"total_carbon_g\""), "{json}");
-        assert!(json.contains("\"version\": 4"), "{json}");
+        assert!(json.contains("\"version\": 5"), "{json}");
     }
 }

@@ -1,0 +1,242 @@
+//! Failure and elasticity injection: a deterministic script of replica
+//! lifecycle events the simulator replays on its virtual clock.
+//!
+//! The offline formulation assumes the cluster it planned for is the
+//! cluster that serves. Real fleets are elastic — spot reclamation kills
+//! a replica mid-batch, autoscalers join fresh ones after a warm-up, and
+//! operators drain nodes for maintenance. A [`FailureScript`] makes those
+//! events part of the simulation's pure-function inputs: the same script
+//! plus the same seed replays byte-identically (enforced in
+//! `tests/cluster.rs` and CI's chaos-smoke step), so replanning-under-
+//! failure can be compared against a static plan under the *same* outage.
+//!
+//! Scripts are authored as JSONL (`--failures FILE`), one event per line:
+//!
+//! ```text
+//! {"t": 1.5, "model": 0, "replica": 1, "kind": "kill"}
+//! {"t": 2.0, "model": 1, "replica": 0, "kind": "drain"}
+//! {"t": 3.0, "model": 0, "replica": 1, "kind": "join", "warmup": 0.5}
+//! ```
+//!
+//! * **kill** — abrupt loss (spot reclamation, hardware fault): the
+//!   replica's in-flight and queued work is requeued to its model's
+//!   surviving replicas (original arrival times preserved; aborted work
+//!   consumes no energy), counted in `requeued`.
+//! * **drain** — graceful leave: the replica accepts no new work but
+//!   finishes everything already queued; downtime starts at the drain
+//!   instant.
+//! * **join** — elasticity: the replica (a revived one, or the next fresh
+//!   index for its model) becomes dispatchable after `warmup` seconds;
+//!   the warm-up window counts as downtime.
+
+use crate::util::Json;
+
+/// What happens to the targeted replica.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FailureKind {
+    /// abrupt loss: in-flight and queued work requeues to siblings
+    Kill,
+    /// graceful leave: no new work, queued work completes
+    Drain,
+    /// (re)join after a warm-up delay, seconds
+    Join { warmup_s: f64 },
+}
+
+impl FailureKind {
+    /// The JSONL `kind` spelling.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FailureKind::Kill => "kill",
+            FailureKind::Drain => "drain",
+            FailureKind::Join { .. } => "join",
+        }
+    }
+}
+
+/// One scripted replica lifecycle event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailureEvent {
+    /// virtual time of the event, seconds
+    pub t_s: f64,
+    /// hosted-model index the replica belongs to
+    pub model: usize,
+    /// replica index within the model (model-major, 0-based)
+    pub replica: usize,
+    pub kind: FailureKind,
+}
+
+/// A validated, time-sorted script of [`FailureEvent`]s. Part of a
+/// simulation's determinism contract: the script is replayed on the
+/// virtual clock, with failure events winning ties against arrivals
+/// (then engine events) at equal timestamps.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FailureScript {
+    events: Vec<FailureEvent>,
+}
+
+impl FailureScript {
+    /// Validate and time-sort (stable, so equal-time events keep their
+    /// authored order).
+    pub fn new(mut events: Vec<FailureEvent>) -> anyhow::Result<FailureScript> {
+        for (i, ev) in events.iter().enumerate() {
+            if !ev.t_s.is_finite() || ev.t_s < 0.0 {
+                anyhow::bail!(
+                    "failure event {i}: time must be finite and >= 0, got {}",
+                    ev.t_s
+                );
+            }
+            if let FailureKind::Join { warmup_s } = ev.kind {
+                if !warmup_s.is_finite() || warmup_s < 0.0 {
+                    anyhow::bail!(
+                        "failure event {i}: join warmup must be finite and >= 0, got {warmup_s}"
+                    );
+                }
+            }
+        }
+        events.sort_by(|a, b| a.t_s.partial_cmp(&b.t_s).unwrap());
+        Ok(FailureScript { events })
+    }
+
+    /// Parse the JSONL form (`--failures FILE`): one object per
+    /// non-empty line with keys `t`, `model`, `replica`, `kind`
+    /// (`kill|drain|join`) and, for joins, an optional `warmup`
+    /// (seconds, default 0).
+    pub fn from_jsonl(text: &str) -> anyhow::Result<FailureScript> {
+        let mut events = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let v = Json::parse(line).map_err(|e| {
+                anyhow::anyhow!("failure script line {}: {e}", lineno + 1)
+            })?;
+            let t_s = v.get("t").as_f64().ok_or_else(|| {
+                anyhow::anyhow!("failure script line {}: missing numeric 't'", lineno + 1)
+            })?;
+            let model = v.get("model").as_usize().ok_or_else(|| {
+                anyhow::anyhow!("failure script line {}: missing integer 'model'", lineno + 1)
+            })?;
+            let replica = v.get("replica").as_usize().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "failure script line {}: missing integer 'replica'",
+                    lineno + 1
+                )
+            })?;
+            let kind = match v.get("kind").as_str() {
+                Some("kill") => FailureKind::Kill,
+                Some("drain") => FailureKind::Drain,
+                Some("join") => FailureKind::Join {
+                    warmup_s: match v.get("warmup") {
+                        Json::Null => 0.0,
+                        w => w.as_f64().ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "failure script line {}: non-numeric 'warmup'",
+                                lineno + 1
+                            )
+                        })?,
+                    },
+                },
+                other => anyhow::bail!(
+                    "failure script line {}: unknown kind {:?} (expected kill|drain|join)",
+                    lineno + 1,
+                    other
+                ),
+            };
+            events.push(FailureEvent {
+                t_s,
+                model,
+                replica,
+                kind,
+            });
+        }
+        FailureScript::new(events)
+    }
+
+    pub fn events(&self) -> &[FailureEvent] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Scenario label recorded in the metrics artifact (`chaos:N` for N
+    /// scripted events; runs without a script record `none`).
+    pub fn label(&self) -> String {
+        format!("chaos:{}", self.events.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_roundtrip_and_sorting() {
+        let text = r#"
+            {"t": 3.0, "model": 0, "replica": 1, "kind": "join", "warmup": 0.5}
+            {"t": 1.5, "model": 0, "replica": 1, "kind": "kill"}
+            {"t": 2.0, "model": 1, "replica": 0, "kind": "drain"}
+        "#;
+        let s = FailureScript::from_jsonl(text).unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.label(), "chaos:3");
+        // Time-sorted regardless of authored order.
+        assert_eq!(s.events()[0].t_s, 1.5);
+        assert_eq!(s.events()[0].kind, FailureKind::Kill);
+        assert_eq!(s.events()[1].kind, FailureKind::Drain);
+        assert_eq!(s.events()[2].kind, FailureKind::Join { warmup_s: 0.5 });
+    }
+
+    #[test]
+    fn join_warmup_defaults_to_zero() {
+        let s = FailureScript::from_jsonl(
+            r#"{"t": 0.0, "model": 0, "replica": 0, "kind": "join"}"#,
+        )
+        .unwrap();
+        assert_eq!(s.events()[0].kind, FailureKind::Join { warmup_s: 0.0 });
+    }
+
+    #[test]
+    fn stable_sort_keeps_equal_time_order() {
+        let text = r#"
+            {"t": 1.0, "model": 0, "replica": 0, "kind": "kill"}
+            {"t": 1.0, "model": 1, "replica": 0, "kind": "kill"}
+        "#;
+        let s = FailureScript::from_jsonl(text).unwrap();
+        assert_eq!(s.events()[0].model, 0);
+        assert_eq!(s.events()[1].model, 1);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(FailureScript::from_jsonl("not json\n").is_err());
+        let err = FailureScript::from_jsonl(r#"{"t": 1.0, "model": 0, "replica": 0}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("kind"), "{err}");
+        let err = FailureScript::from_jsonl(
+            r#"{"t": 1.0, "model": 0, "replica": 0, "kind": "explode"}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("explode"), "{err}");
+        let err = FailureScript::from_jsonl(
+            r#"{"t": -1.0, "model": 0, "replica": 0, "kind": "kill"}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains(">= 0"), "{err}");
+        let err = FailureScript::from_jsonl(
+            r#"{"t": 1.0, "model": 0, "replica": 0, "kind": "join", "warmup": -0.5}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("warmup"), "{err}");
+    }
+}

@@ -38,6 +38,19 @@
 //! `prefill_energy_j`/`decode_energy_j` (the calibrated prefill/decode
 //! split of the fitted per-query predictions).
 //!
+//! # Replica clusters and failure injection (artifact version 5)
+//!
+//! Version 5 makes the node list a *replica* list: each hosted model may
+//! be served by several replica nodes (`--replicas`), and a scripted
+//! outage ([`crate::sim::FailureScript`], `--failures`) may kill, drain,
+//! or join replicas mid-run. Every node row gains its `replica` index
+//! within its model, its accumulated `downtime_s`, and the number of
+//! queries `requeued` off it by kills; the run gains the `scenario`
+//! label (`none`, or `chaos:N` for an N-event script) and the total
+//! `n_requeued`. Unreplicated, failure-free runs emit `replica: 0`,
+//! `downtime_s: 0`, `requeued: 0`, and `scenario: "none"` — the layout
+//! change is the only delta against version 4.
+//!
 //! # Determinism
 //!
 //! The JSON layout is stable by construction: objects serialize through
@@ -52,11 +65,12 @@ use crate::stats::{quantile, LOG_HIST_BINS_PER_OCTAVE, LOG_HIST_LO_S, LogHistogr
 use crate::util::Json;
 
 /// Version of the `ecoserve.sim-metrics` artifact this build writes.
-/// Version 4 adds the engine label, TTFT/TPOT distributions (with
-/// optional SLOs), and the per-phase energy split. Versions 1 (per-query
-/// exact quantiles, no histograms), 2 (pre-control), and 3 (pre-phase-
-/// split) are rejected on load with migration messages.
-pub const SIM_METRICS_VERSION: u32 = 4;
+/// Version 5 adds the failure scenario label, the requeued-query total,
+/// and per-replica node accounting (replica index, downtime, requeues).
+/// Versions 1 (per-query exact quantiles, no histograms), 2
+/// (pre-control), 3 (pre-phase-split), and 4 (pre-cluster) are rejected
+/// on load with migration messages.
+pub const SIM_METRICS_VERSION: u32 = 5;
 
 /// Lifecycle of one simulated query (all times in virtual seconds from
 /// simulation start). Only recorded when per-query retention is on.
@@ -100,10 +114,13 @@ impl QueryOutcome {
     }
 }
 
-/// Accumulated counters for one simulated node (one hosted model).
+/// Accumulated counters for one simulated node (one replica of a hosted
+/// model; unreplicated runs have exactly one node per model).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct NodeStats {
     pub model_id: String,
+    /// replica index within the model (0-based; joins append)
+    pub replica: u32,
     pub queries: u64,
     /// executed batches (lockstep) or iterations (continuous)
     pub batches: u64,
@@ -113,6 +130,11 @@ pub struct NodeStats {
     pub prefill_j: f64,
     /// total virtual time the node's engine was executing
     pub busy_s: f64,
+    /// total virtual time the replica was down (killed, draining, or
+    /// warming up after a join)
+    pub downtime_s: f64,
+    /// queries requeued off this replica by scripted kills
+    pub requeued: u64,
 }
 
 impl NodeStats {
@@ -262,10 +284,12 @@ impl MetricsRecorder {
         self,
         policy: String,
         engine: String,
+        scenario: String,
         arrival: String,
         seed: u64,
         zeta: f64,
         n_dropped: u64,
+        n_requeued: u64,
         plan_decisions: Option<(u64, u64)>,
         nodes: Vec<NodeStats>,
     ) -> SimMetrics {
@@ -285,11 +309,13 @@ impl MetricsRecorder {
         SimMetrics {
             policy,
             engine,
+            scenario,
             arrival,
             seed,
             zeta,
             n_queries: n,
             n_dropped,
+            n_requeued,
             makespan_s: self.makespan_ns as f64 / 1e9,
             total_energy_j: self.total_energy_j,
             prefill_energy_j: self.prefill_energy_j,
@@ -339,6 +365,10 @@ pub struct SimMetrics {
     pub policy: String,
     /// execution model that produced the run (`lockstep`/`continuous`)
     pub engine: String,
+    /// failure scenario the run was subjected to: `none`, or the
+    /// script's label (`chaos:N` for an N-event [`FailureScript`]
+    /// (crate::sim::FailureScript))
+    pub scenario: String,
     pub arrival: String,
     pub seed: u64,
     pub zeta: f64,
@@ -346,6 +376,9 @@ pub struct SimMetrics {
     pub n_queries: u64,
     /// arrivals dropped by the `--duration` cap
     pub n_dropped: u64,
+    /// queries requeued by scripted replica kills (each served exactly
+    /// once regardless — conservation is enforced by the simulator)
+    pub n_requeued: u64,
     /// last completion time (virtual seconds)
     pub makespan_s: f64,
     pub total_energy_j: f64,
@@ -479,6 +512,7 @@ impl SimMetrics {
             ("version", Json::num(SIM_METRICS_VERSION as f64)),
             ("policy", Json::str(self.policy.clone())),
             ("engine", Json::str(self.engine.clone())),
+            ("scenario", Json::str(self.scenario.clone())),
             ("arrival", Json::str(self.arrival.clone())),
             // As a decimal string: the f64-backed Json would round seeds
             // above 2^53 and the artifact could no longer reproduce the
@@ -487,6 +521,7 @@ impl SimMetrics {
             ("zeta", Json::num(self.zeta)),
             ("n_queries", Json::num(self.n_queries as f64)),
             ("n_dropped", Json::num(self.n_dropped as f64)),
+            ("n_requeued", Json::num(self.n_requeued as f64)),
             ("makespan_s", Json::num(self.makespan_s)),
             ("total_energy_j", Json::num(self.total_energy_j)),
             ("prefill_energy_j", Json::num(self.prefill_energy_j)),
@@ -519,6 +554,7 @@ impl SimMetrics {
                 Json::arr(self.nodes.iter().map(|nd| {
                     Json::obj(vec![
                         ("model_id", Json::str(nd.model_id.clone())),
+                        ("replica", Json::num(nd.replica as f64)),
                         ("queries", Json::num(nd.queries as f64)),
                         ("batches", Json::num(nd.batches as f64)),
                         ("mean_batch_size", Json::num(nd.mean_batch_size())),
@@ -528,6 +564,8 @@ impl SimMetrics {
                         // dashboards need no arithmetic.
                         ("decode_j", Json::num(nd.energy_j - nd.prefill_j)),
                         ("busy_s", Json::num(nd.busy_s)),
+                        ("downtime_s", Json::num(nd.downtime_s)),
+                        ("requeued", Json::num(nd.requeued as f64)),
                         (
                             "utilization",
                             Json::num(if self.makespan_s > 0.0 {
@@ -655,6 +693,13 @@ impl SimMetrics {
                  reads version {SIM_METRICS_VERSION} — regenerate with `ecoserve \
                  simulate` (--engine lockstep|continuous selects the engine)"
             ),
+            Some(4) => anyhow::bail!(
+                "sim-metrics artifact is version 4 (pre-cluster: no scenario \
+                 label, requeue counts, or per-replica node accounting); this \
+                 build reads version {SIM_METRICS_VERSION} — regenerate with \
+                 `ecoserve simulate` (--replicas/--failures configure the \
+                 replica fleet and outage script)"
+            ),
             other => anyhow::bail!(
                 "unsupported sim-metrics artifact version {:?} (this build reads \
                  version {SIM_METRICS_VERSION})",
@@ -687,6 +732,11 @@ impl SimMetrics {
                         .as_str()
                         .ok_or_else(|| anyhow::anyhow!("node missing 'model_id'"))?
                         .to_string(),
+                    replica: nd
+                        .get("replica")
+                        .as_u64()
+                        .ok_or_else(|| anyhow::anyhow!("node missing 'replica'"))?
+                        as u32,
                     queries: nd
                         .get("queries")
                         .as_u64()
@@ -707,6 +757,14 @@ impl SimMetrics {
                         .get("busy_s")
                         .as_f64()
                         .ok_or_else(|| anyhow::anyhow!("node missing 'busy_s'"))?,
+                    downtime_s: nd
+                        .get("downtime_s")
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("node missing 'downtime_s'"))?,
+                    requeued: nd
+                        .get("requeued")
+                        .as_u64()
+                        .ok_or_else(|| anyhow::anyhow!("node missing 'requeued'"))?,
                 })
             })
             .collect::<anyhow::Result<Vec<NodeStats>>>()?;
@@ -821,6 +879,7 @@ impl SimMetrics {
         Ok(SimMetrics {
             policy: string("policy")?,
             engine: string("engine")?,
+            scenario: string("scenario")?,
             arrival: string("arrival")?,
             seed,
             zeta: num("zeta")?,
@@ -832,6 +891,10 @@ impl SimMetrics {
                 .get("n_dropped")
                 .as_u64()
                 .ok_or_else(|| anyhow::anyhow!("sim-metrics artifact: missing 'n_dropped'"))?,
+            n_requeued: v
+                .get("n_requeued")
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("sim-metrics artifact: missing 'n_requeued'"))?,
             makespan_s: num("makespan_s")?,
             total_energy_j: num("total_energy_j")?,
             prefill_energy_j: num("prefill_energy_j")?,
@@ -910,10 +973,12 @@ mod tests {
         r.finish(
             "greedy".into(),
             "lockstep".into(),
+            "none".into(),
             "poisson:10".into(),
             42,
             0.5,
             3,
+            0,
             None,
             vec![
                 NodeStats {
@@ -923,6 +988,7 @@ mod tests {
                     energy_j: 4.0,
                     prefill_j: 1.6,
                     busy_s: 1.0,
+                    ..NodeStats::default()
                 },
                 NodeStats {
                     model_id: "big".into(),
@@ -931,6 +997,7 @@ mod tests {
                     energy_j: 2.0,
                     prefill_j: 0.8,
                     busy_s: 2.0,
+                    ..NodeStats::default()
                 },
             ],
         )
@@ -1019,8 +1086,13 @@ mod tests {
         for key in [
             "\"policy\"",
             "\"engine\": \"lockstep\"",
+            "\"scenario\": \"none\"",
             "\"arrival\"",
-            "\"version\": 4",
+            "\"version\": 5",
+            "\"n_requeued\": 0",
+            "\"replica\": 0",
+            "\"downtime_s\": 0",
+            "\"requeued\": 0",
             "\"total_energy_j\"",
             "\"prefill_energy_j\"",
             "\"decode_energy_j\"",
@@ -1141,6 +1213,16 @@ mod tests {
         assert!(err.contains("pre-phase-split"), "{err}");
         assert!(err.contains("--engine"), "{err}");
 
+        let v4 = Json::parse(
+            r#"{"format": "ecoserve.sim-metrics", "version": 4, "policy": "plan"}"#,
+        )
+        .unwrap();
+        let err = SimMetrics::from_json(&v4).unwrap_err().to_string();
+        assert!(err.contains("version 4"), "{err}");
+        assert!(err.contains("pre-cluster"), "{err}");
+        assert!(err.contains("regenerate"), "{err}");
+        assert!(err.contains("--replicas"), "{err}");
+
         let foreign = Json::parse(r#"{"format": "ecoserve.plan", "version": 2}"#).unwrap();
         let err = SimMetrics::from_json(&foreign).unwrap_err().to_string();
         assert!(err.contains("ecoserve.sim-metrics"), "{err}");
@@ -1158,9 +1240,11 @@ mod tests {
         let m = MetricsRecorder::new(1.0, None, None, false).finish(
             "greedy".into(),
             "continuous".into(),
+            "none".into(),
             "poisson:1".into(),
             1,
             0.5,
+            0,
             0,
             None,
             vec![],

@@ -19,6 +19,10 @@
 //!   ([`ReplanPolicy`](crate::control::ReplanPolicy), optionally under
 //!   carbon-aware ζ control), ζ-cost greedy (shape-memoized),
 //!   round-robin, or seeded random;
+//! * [`FailureScript`] — seeded replica-lifecycle injection (abrupt
+//!   kill with in-flight requeue, drain-then-leave, autoscale-join with
+//!   warm-up), replayed deterministically on the virtual clock across
+//!   per-model replica fleets (`--replicas`, `--failures`);
 //! * [`Simulator`] — the zero-allocation event loop (arrive → route →
 //!   batch → execute → complete) on a virtual integer-nanosecond clock,
 //!   with two selectable engines ([`EngineKind`], `--engine`): batch-
@@ -58,6 +62,7 @@
 
 pub mod arrival;
 pub mod compare;
+pub mod failure;
 pub mod metrics;
 pub mod policy;
 pub mod simulator;
@@ -66,6 +71,7 @@ pub use arrival::{trace_times, ARRIVAL_SEED_SALT, ArrivalProcess};
 pub use compare::{
     compare, compare_replicated, comparison_to_json, replicated_to_json, Arrivals, CompareSpec,
 };
+pub use failure::{FailureEvent, FailureKind, FailureScript};
 pub use metrics::{NodeStats, QueryOutcome, SIM_METRICS_VERSION, SimMetrics};
 pub use policy::{PolicyKind, SimPolicy};
 pub use simulator::{EngineKind, SimConfig, Simulator};

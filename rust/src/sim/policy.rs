@@ -191,6 +191,17 @@ impl SimPolicy {
         }
     }
 
+    /// Capacity-change hook from the simulator's failure injection: `up`
+    /// replicas of `model` are currently dispatchable. Clock-independent
+    /// policies ignore it; the replan policy rescales its live session so
+    /// subsequent routing proportions reflect the surviving fleet.
+    pub fn on_capacity(&mut self, model: usize, up: usize) -> anyhow::Result<()> {
+        match self.replan.as_mut() {
+            Some(r) => r.on_capacity(model, up),
+            None => Ok(()),
+        }
+    }
+
     /// (plan-followed, fallback) counts, when a plan is attached.
     pub fn plan_stats(&self) -> Option<(u64, u64)> {
         self.router.plan.as_ref().map(|t| t.stats())

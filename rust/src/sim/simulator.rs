@@ -74,6 +74,7 @@
 //! identical [`SimMetrics`], byte-for-byte in JSON; `tests/sim.rs` and
 //! the CI `sim-smoke` step both enforce this for each engine.
 
+use super::failure::{FailureKind, FailureScript};
 use super::metrics::{MetricsRecorder, NodeStats, SimMetrics};
 use super::policy::SimPolicy;
 use crate::config::{lookup, swing_node, LlmSpec};
@@ -170,17 +171,26 @@ pub struct Simulator<'a> {
     seed: u64,
     zeta: f64,
     carbon: Option<CarbonConfig>,
+    /// replica count per hosted model (`--replicas`); each replica is an
+    /// independently batching node, arrivals go to the least-loaded up
+    /// replica of the routed model
+    replicas: Vec<usize>,
+    /// scripted replica lifecycle events (`--failures`)
+    failures: Option<&'a FailureScript>,
 }
 
 /// Heap events are `Copy`: batch membership lives in the node FIFOs, so
 /// a completion needs only its node — the running batch (lockstep) or
-/// iteration (continuous) is unique.
+/// iteration (continuous) is unique. `gen` snapshots the node's
+/// completion generation at scheduling time: a kill bumps the node's
+/// generation, so the aborted batch/iteration's `Complete` is discarded
+/// when it surfaces (its work was requeued, not finished).
 #[derive(Debug, Clone, Copy)]
 enum EvKind {
     /// node's age-flush deadline fires (lockstep only)
     Timeout { node: u32 },
     /// node finishes its running batch (lockstep) / iteration (continuous)
-    Complete { node: u32 },
+    Complete { node: u32, gen: u32 },
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -222,6 +232,84 @@ struct InFlight {
     arrive_ns: u64,
 }
 
+/// Replica-lifecycle state shared by both engines' node types. Every
+/// node starts `up`; only a [`FailureScript`] changes that.
+#[derive(Debug, Clone, Copy)]
+struct RepState {
+    /// owning hosted-model index
+    model: usize,
+    /// replica index within the model (0-based, model-major)
+    replica: u32,
+    /// dispatchable: false while down, draining, or warming up
+    up: bool,
+    /// a join's warm-up window is pending (rejects overlapping joins)
+    joining: bool,
+    /// completion generation — bumped on kill so the aborted batch or
+    /// iteration's in-flight `Complete` event is discarded on arrival
+    gen: u32,
+    /// instant the replica last went down (kill/drain/join-create)
+    down_since: Option<u64>,
+    /// accumulated downtime, virtual ns
+    downtime_ns: u64,
+}
+
+impl RepState {
+    fn new(model: usize, replica: u32) -> RepState {
+        RepState {
+            model,
+            replica,
+            up: true,
+            joining: false,
+            gen: 0,
+            down_since: None,
+            downtime_ns: 0,
+        }
+    }
+
+    /// A freshly created join target: down and warming up from `t`.
+    fn joining(model: usize, replica: u32, t: u64) -> RepState {
+        RepState {
+            up: false,
+            joining: true,
+            down_since: Some(t),
+            ..RepState::new(model, replica)
+        }
+    }
+
+    /// Close the open downtime interval at `t` (activation or end of run).
+    fn settle_downtime(&mut self, t: u64) {
+        if let Some(s) = self.down_since.take() {
+            self.downtime_ns += t.saturating_sub(s);
+        }
+    }
+
+    /// Fold lifecycle accounting into the node's stats row.
+    fn finalize(mut self, t_last: u64, stats: &mut NodeStats) {
+        self.settle_downtime(t_last);
+        stats.replica = self.replica;
+        stats.downtime_s = self.downtime_ns as f64 / 1e9;
+    }
+}
+
+/// A [`FailureEvent`] translated onto the virtual clock. A join expands
+/// into `Create` (node exists, warming up) at its event time plus
+/// `Activate` (dispatchable, parked work flushed) after the warm-up.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum FailAction {
+    Kill,
+    Drain,
+    Create,
+    Activate,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct FailEv {
+    t: u64,
+    model: usize,
+    replica: usize,
+    action: FailAction,
+}
+
 /// Per-node state (lockstep engine). The FIFO holds, front to back: the
 /// running batch (first `running` entries), flushed ready batches
 /// (`ready` holds their sizes), then the accumulating batcher tail
@@ -234,6 +322,7 @@ struct Node {
     pending: usize,
     /// dedupes Timeout events: only the one matching this value acts
     next_timeout: Option<u64>,
+    rep: RepState,
     stats: NodeStats,
 }
 
@@ -267,6 +356,7 @@ struct CNode {
     active: Vec<ActiveSeq>,
     iter: Option<IterKind>,
     iter_start: u64,
+    rep: RepState,
     stats: NodeStats,
 }
 
@@ -415,13 +505,43 @@ impl<'a> Simulator<'a> {
             "max_wait_s must be finite and in [0, 1e9]"
         );
         Simulator {
+            replicas: vec![1; sets.len()],
             sets,
             cfg,
             arrival_label: "trace".to_string(),
             seed: 0,
             zeta: 0.5,
             carbon: None,
+            failures: None,
         }
+    }
+
+    /// Host each model on `counts[k]` replica nodes instead of one.
+    /// Replicas batch independently; arrivals routed to model `k` are
+    /// dispatched to its least-loaded up replica (lowest index on ties).
+    /// `[1, 1, …]` is byte-identical to the unreplicated simulator.
+    pub fn with_replicas(mut self, counts: &[usize]) -> anyhow::Result<Simulator<'a>> {
+        if counts.len() != self.sets.len() {
+            anyhow::bail!(
+                "replica counts for {} models but {} are hosted",
+                counts.len(),
+                self.sets.len()
+            );
+        }
+        if let Some(k) = counts.iter().position(|&r| r == 0) {
+            anyhow::bail!("model {k} needs at least one replica");
+        }
+        self.replicas = counts.to_vec();
+        Ok(self)
+    }
+
+    /// Inject a scripted failure/elasticity scenario ([`FailureScript`]):
+    /// replica kills (in-flight work requeued), drains, and warm-up joins
+    /// replayed deterministically on the virtual clock. The script label
+    /// is recorded as the artifact's `scenario`.
+    pub fn with_failures(mut self, script: &'a FailureScript) -> Simulator<'a> {
+        self.failures = Some(script);
+        self
     }
 
     /// Record run metadata (arrival process label, seed, ζ) into the
@@ -441,6 +561,59 @@ impl<'a> Simulator<'a> {
     pub fn with_carbon(mut self, cfg: CarbonConfig) -> Simulator<'a> {
         self.carbon = Some(cfg);
         self
+    }
+
+    /// Translate the failure script onto the virtual clock: joins expand
+    /// into a `Create` at the event time plus an `Activate` after the
+    /// warm-up, then everything is stably time-sorted (so equal-time
+    /// events keep script order, and an activate never precedes its
+    /// create).
+    fn fail_events(&self) -> anyhow::Result<Vec<FailEv>> {
+        let mut evs = Vec::new();
+        let Some(script) = self.failures else {
+            return Ok(evs);
+        };
+        for ev in script.events() {
+            if ev.model >= self.sets.len() {
+                anyhow::bail!(
+                    "failure script targets model {} but only {} are hosted",
+                    ev.model,
+                    self.sets.len()
+                );
+            }
+            let t = to_ns(ev.t_s);
+            let (model, replica) = (ev.model, ev.replica);
+            match ev.kind {
+                FailureKind::Kill => evs.push(FailEv {
+                    t,
+                    model,
+                    replica,
+                    action: FailAction::Kill,
+                }),
+                FailureKind::Drain => evs.push(FailEv {
+                    t,
+                    model,
+                    replica,
+                    action: FailAction::Drain,
+                }),
+                FailureKind::Join { warmup_s } => {
+                    evs.push(FailEv {
+                        t,
+                        model,
+                        replica,
+                        action: FailAction::Create,
+                    });
+                    evs.push(FailEv {
+                        t: t.saturating_add(to_ns(warmup_s)),
+                        model,
+                        replica,
+                        action: FailAction::Activate,
+                    });
+                }
+            }
+        }
+        evs.sort_by_key(|e| e.t);
+        Ok(evs)
     }
 
     /// Replay `queries` arriving at `arrivals_s` (seconds, parallel to
@@ -571,6 +744,14 @@ impl<'a> Simulator<'a> {
         );
         let mut meter = self.carbon.as_ref().map(CarbonMeter::new);
 
+        // The scripted outage, translated onto the virtual clock. The
+        // initial capacity push is a no-op for uniform single-replica
+        // fleets, preserving byte-identity with pre-cluster runs.
+        let fails = self.fail_events()?;
+        for (k, &r) in self.replicas.iter().enumerate() {
+            policy.on_capacity(k, r)?;
+        }
+
         let stats = match self.cfg.engine {
             EngineKind::Lockstep => self.run_lockstep(
                 queries,
@@ -578,6 +759,7 @@ impl<'a> Simulator<'a> {
                 policy,
                 &order,
                 admitted,
+                &fails,
                 window,
                 &service_ns_of,
                 &energy_of,
@@ -591,6 +773,7 @@ impl<'a> Simulator<'a> {
                 policy,
                 &order,
                 admitted,
+                &fails,
                 window,
                 &energy_of,
                 &phase_of,
@@ -599,22 +782,32 @@ impl<'a> Simulator<'a> {
             )?,
         };
 
-        // Conservation invariant: every admitted arrival completed.
+        // Conservation invariant: every admitted arrival completed —
+        // requeued work included; a query parked forever (every replica
+        // of its model down at end of run) trips this.
         if recorder.n() != admitted as u64 {
             anyhow::bail!(
-                "simulator lost queries: {} admitted, {} completed",
+                "simulator lost queries: {} admitted, {} completed \
+                 (a failure script must leave each model a live replica to flush parked work)",
                 admitted,
                 recorder.n()
             );
         }
 
+        let scenario = match self.failures {
+            Some(s) if !s.is_empty() => s.label(),
+            _ => "none".to_string(),
+        };
+        let n_requeued = stats.iter().map(|s| s.requeued).sum();
         let mut m = recorder.finish(
             policy.kind().label().to_string(),
             self.cfg.engine.label().to_string(),
+            scenario,
             self.arrival_label.clone(),
             self.seed,
             self.zeta,
             n_dropped as u64,
+            n_requeued,
             policy.plan_stats(),
             stats,
         );
@@ -637,6 +830,7 @@ impl<'a> Simulator<'a> {
         policy: &mut SimPolicy,
         order: &[u64],
         admitted: usize,
+        fails: &[FailEv],
         window: BatchWindow,
         service_ns_of: &dyn Fn(usize, usize) -> u64,
         energy_of: &dyn Fn(usize, usize) -> f64,
@@ -644,22 +838,32 @@ impl<'a> Simulator<'a> {
         recorder: &mut MetricsRecorder,
         meter: &mut Option<CarbonMeter>,
     ) -> anyhow::Result<Vec<NodeStats>> {
-        let mut nodes: Vec<Node> = self
-            .sets
-            .iter()
-            .map(|s| Node {
-                fifo: VecDeque::new(),
-                running: 0,
-                running_start: 0,
-                ready: VecDeque::new(),
-                pending: 0,
-                next_timeout: None,
-                stats: NodeStats {
-                    model_id: s.model_id.clone(),
-                    ..NodeStats::default()
-                },
-            })
-            .collect();
+        // Flat replica fleet, model-major; `model_nodes[k]` indexes model
+        // k's replicas (joins append), `parked[k]` holds work routed to k
+        // while none of its replicas is up.
+        let mut nodes: Vec<Node> = Vec::new();
+        let mut model_nodes: Vec<Vec<usize>> = Vec::with_capacity(self.sets.len());
+        for (k, s) in self.sets.iter().enumerate() {
+            let mut idxs = Vec::with_capacity(self.replicas[k]);
+            for r in 0..self.replicas[k] {
+                idxs.push(nodes.len());
+                nodes.push(Node {
+                    fifo: VecDeque::new(),
+                    running: 0,
+                    running_start: 0,
+                    ready: VecDeque::new(),
+                    pending: 0,
+                    next_timeout: None,
+                    rep: RepState::new(k, r as u32),
+                    stats: NodeStats {
+                        model_id: s.model_id.clone(),
+                        ..NodeStats::default()
+                    },
+                });
+            }
+            model_nodes.push(idxs);
+        }
+        let mut parked: Vec<VecDeque<InFlight>> = vec![VecDeque::new(); self.sets.len()];
 
         let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
         let mut seq = 0u64;
@@ -667,14 +871,15 @@ impl<'a> Simulator<'a> {
         // Start the next ready batch on an idle node: service time is the
         // slowest member's predicted runtime (lockstep batch execution).
         let try_start =
-            |k: usize, t: u64, nodes: &mut Vec<Node>, heap: &mut BinaryHeap<Ev>, seq: &mut u64| {
-                let node = &mut nodes[k];
+            |j: usize, t: u64, nodes: &mut Vec<Node>, heap: &mut BinaryHeap<Ev>, seq: &mut u64| {
+                let node = &mut nodes[j];
                 if node.running > 0 {
                     return;
                 }
                 let Some(size) = node.ready.pop_front() else {
                     return;
                 };
+                let k = node.rep.model;
                 let mut service = 0u64;
                 for member in node.fifo.iter().take(size) {
                     service = service.max(service_ns_of(k, member.query as usize));
@@ -684,7 +889,10 @@ impl<'a> Simulator<'a> {
                 heap.push(Ev {
                     t: t.saturating_add(service),
                     seq: *seq,
-                    kind: EvKind::Complete { node: k as u32 },
+                    kind: EvKind::Complete {
+                        node: j as u32,
+                        gen: node.rep.gen,
+                    },
                 });
                 *seq += 1;
             };
@@ -692,8 +900,8 @@ impl<'a> Simulator<'a> {
         // Arm (or refresh) the node's age-flush wakeup at the window
         // deadline of its oldest pending entry.
         let schedule_timeout =
-            |k: usize, nodes: &mut Vec<Node>, heap: &mut BinaryHeap<Ev>, seq: &mut u64| {
-                let node = &mut nodes[k];
+            |j: usize, nodes: &mut Vec<Node>, heap: &mut BinaryHeap<Ev>, seq: &mut u64| {
+                let node = &mut nodes[j];
                 if node.pending == 0 {
                     return;
                 }
@@ -704,18 +912,188 @@ impl<'a> Simulator<'a> {
                     heap.push(Ev {
                         t: dl,
                         seq: *seq,
-                        kind: EvKind::Timeout { node: k as u32 },
+                        kind: EvKind::Timeout { node: j as u32 },
                     });
                     *seq += 1;
                 }
             };
 
+        // Least-loaded up replica of model `k` (FIFO depth, lowest index
+        // on ties); `None` while the whole fleet is down.
+        let pick = |k: usize, nodes: &Vec<Node>, model_nodes: &[Vec<usize>]| -> Option<usize> {
+            let mut best: Option<usize> = None;
+            for &j in &model_nodes[k] {
+                if !nodes[j].rep.up {
+                    continue;
+                }
+                if best.map_or(true, |b| nodes[j].fifo.len() < nodes[b].fifo.len()) {
+                    best = Some(j);
+                }
+            }
+            best
+        };
+
+        // Hand one query (a fresh arrival, a kill's requeue, or a parked
+        // flush — arrival time preserved throughout) to model `k`.
+        let enqueue = |k: usize,
+                       f: InFlight,
+                       t: u64,
+                       nodes: &mut Vec<Node>,
+                       model_nodes: &[Vec<usize>],
+                       parked: &mut Vec<VecDeque<InFlight>>,
+                       heap: &mut BinaryHeap<Ev>,
+                       seq: &mut u64| {
+            let Some(j) = pick(k, nodes, model_nodes) else {
+                parked[k].push_back(f);
+                return;
+            };
+            let node = &mut nodes[j];
+            node.fifo.push_back(f);
+            node.pending += 1;
+            if window.filled(node.pending) {
+                let size = node.pending;
+                node.pending = 0;
+                node.ready.push_back(size);
+                try_start(j, t, nodes, heap, seq);
+            } else {
+                schedule_timeout(j, nodes, heap, seq);
+            }
+        };
+
         let mut next_arrival = 0usize;
+        let mut next_fail = 0usize;
+        let mut t_last = 0u64;
         loop {
-            // Arrivals win ties against heap events — the same order the
-            // PR 4 loop realized by numbering all arrivals first.
+            // Event-time ties resolve failures < arrivals < engine
+            // events, so an arrival at the kill instant already sees the
+            // shrunken fleet — part of the determinism contract.
             let arrival_t = (next_arrival < admitted)
                 .then(|| to_ns(arrivals_s[order[next_arrival] as usize]));
+            let fail_t = (next_fail < fails.len()).then(|| fails[next_fail].t);
+            let take_fail = match fail_t {
+                Some(tf) => {
+                    arrival_t.map_or(true, |ta| tf <= ta)
+                        && heap.peek().map_or(true, |ev| tf <= ev.t)
+                }
+                None => false,
+            };
+            if take_fail {
+                let fe = fails[next_fail];
+                next_fail += 1;
+                let (t, k, r) = (fe.t, fe.model, fe.replica);
+                t_last = t_last.max(t);
+                match fe.action {
+                    FailAction::Kill | FailAction::Drain => {
+                        let verb = if fe.action == FailAction::Kill {
+                            "kill"
+                        } else {
+                            "drain"
+                        };
+                        let Some(&j) = model_nodes[k].get(r) else {
+                            anyhow::bail!(
+                                "failure script: {verb} targets model {k} replica {r} but only \
+                                 {} exist",
+                                model_nodes[k].len()
+                            );
+                        };
+                        if !nodes[j].rep.up {
+                            anyhow::bail!(
+                                "failure script: {verb} of model {k} replica {r} at t={:.3}s \
+                                 but it is already down",
+                                t as f64 / 1e9
+                            );
+                        }
+                        nodes[j].rep.up = false;
+                        nodes[j].rep.down_since = Some(t);
+                        nodes[j].next_timeout = None;
+                        if fe.action == FailAction::Kill {
+                            // Abrupt loss: abort the running batch (its
+                            // Complete is now stale by generation) and
+                            // requeue everything, arrival times intact.
+                            // Aborted work consumed no energy/busy time.
+                            nodes[j].rep.gen += 1;
+                            nodes[j].running = 0;
+                            nodes[j].ready.clear();
+                            nodes[j].pending = 0;
+                            let orphans: Vec<InFlight> = nodes[j].fifo.drain(..).collect();
+                            nodes[j].stats.requeued += orphans.len() as u64;
+                            for f in orphans {
+                                enqueue(
+                                    k, f, t, &mut nodes, &model_nodes, &mut parked, &mut heap,
+                                    &mut seq,
+                                );
+                            }
+                        } else {
+                            // Graceful leave: flush the batcher tail and
+                            // let everything already queued finish.
+                            if nodes[j].pending > 0 {
+                                let size = nodes[j].pending;
+                                nodes[j].pending = 0;
+                                nodes[j].ready.push_back(size);
+                            }
+                            try_start(j, t, &mut nodes, &mut heap, &mut seq);
+                        }
+                    }
+                    FailAction::Create => {
+                        let fleet = model_nodes[k].len();
+                        if r < fleet {
+                            let j = model_nodes[k][r];
+                            if nodes[j].rep.up {
+                                anyhow::bail!(
+                                    "failure script: join targets model {k} replica {r} at \
+                                     t={:.3}s but it is up",
+                                    t as f64 / 1e9
+                                );
+                            }
+                            if nodes[j].rep.joining {
+                                anyhow::bail!(
+                                    "failure script: overlapping joins for model {k} replica {r}"
+                                );
+                            }
+                            nodes[j].rep.joining = true;
+                        } else if r == fleet {
+                            let j = nodes.len();
+                            nodes.push(Node {
+                                fifo: VecDeque::new(),
+                                running: 0,
+                                running_start: 0,
+                                ready: VecDeque::new(),
+                                pending: 0,
+                                next_timeout: None,
+                                rep: RepState::joining(k, r as u32, t),
+                                stats: NodeStats {
+                                    model_id: self.sets[k].model_id.clone(),
+                                    ..NodeStats::default()
+                                },
+                            });
+                            model_nodes[k].push(j);
+                        } else {
+                            anyhow::bail!(
+                                "failure script: join targets model {k} replica {r} but only \
+                                 {fleet} exist (replica indices are contiguous)"
+                            );
+                        }
+                    }
+                    FailAction::Activate => {
+                        let j = model_nodes[k][r];
+                        debug_assert!(nodes[j].rep.joining, "Activate without its Create");
+                        nodes[j].rep.joining = false;
+                        nodes[j].rep.up = true;
+                        nodes[j].rep.settle_downtime(t);
+                        // Flush work parked while the fleet was dark.
+                        let flushed: Vec<InFlight> = parked[k].drain(..).collect();
+                        for f in flushed {
+                            enqueue(
+                                k, f, t, &mut nodes, &model_nodes, &mut parked, &mut heap,
+                                &mut seq,
+                            );
+                        }
+                    }
+                }
+                let up = model_nodes[k].iter().filter(|&&j| nodes[j].rep.up).count();
+                policy.on_capacity(k, up)?;
+                continue;
+            }
             let take_arrival = match (arrival_t, heap.peek()) {
                 (Some(ta), Some(ev)) => ta <= ev.t,
                 (Some(_), None) => true,
@@ -726,49 +1104,54 @@ impl<'a> Simulator<'a> {
                 let qi = order[next_arrival] as usize;
                 next_arrival += 1;
                 let t = arrival_t.unwrap();
+                t_last = t_last.max(t);
                 let k = policy.route_at(t, &queries[qi])?;
                 debug_assert!(k < self.sets.len());
-                let node = &mut nodes[k];
-                node.fifo.push_back(InFlight {
-                    query: qi as u64,
-                    arrive_ns: t,
-                });
-                node.pending += 1;
-                if window.filled(node.pending) {
-                    let size = node.pending;
-                    node.pending = 0;
-                    node.ready.push_back(size);
-                    try_start(k, t, &mut nodes, &mut heap, &mut seq);
-                } else {
-                    schedule_timeout(k, &mut nodes, &mut heap, &mut seq);
-                }
+                enqueue(
+                    k,
+                    InFlight {
+                        query: qi as u64,
+                        arrive_ns: t,
+                    },
+                    t,
+                    &mut nodes,
+                    &model_nodes,
+                    &mut parked,
+                    &mut heap,
+                    &mut seq,
+                );
                 continue;
             }
             let Ev { t, kind, .. } = heap.pop().unwrap();
+            t_last = t_last.max(t);
             // Controller hook: time-aware policies (replan) step their
             // carbon governor / pattern learner on every event edge.
             policy.tick(t)?;
             match kind {
-                EvKind::Timeout { node: k } => {
-                    let k = k as usize;
-                    if nodes[k].next_timeout != Some(t) {
-                        continue; // superseded by a size flush or later deadline
+                EvKind::Timeout { node: j } => {
+                    let j = j as usize;
+                    if nodes[j].next_timeout != Some(t) {
+                        continue; // superseded by a size flush, kill, or later deadline
                     }
-                    nodes[k].next_timeout = None;
-                    let node = &mut nodes[k];
+                    nodes[j].next_timeout = None;
+                    let node = &mut nodes[j];
                     if node.pending > 0
                         && window.aged(node.fifo[node.fifo.len() - node.pending].arrive_ns, t)
                     {
                         let size = node.pending;
                         node.pending = 0;
                         node.ready.push_back(size);
-                        try_start(k, t, &mut nodes, &mut heap, &mut seq);
+                        try_start(j, t, &mut nodes, &mut heap, &mut seq);
                     }
-                    schedule_timeout(k, &mut nodes, &mut heap, &mut seq);
+                    schedule_timeout(j, &mut nodes, &mut heap, &mut seq);
                 }
-                EvKind::Complete { node: k } => {
-                    let k = k as usize;
-                    let node = &mut nodes[k];
+                EvKind::Complete { node: j, gen } => {
+                    let j = j as usize;
+                    if nodes[j].rep.gen != gen {
+                        continue; // batch aborted by a kill; its work was requeued
+                    }
+                    let k = nodes[j].rep.model;
+                    let node = &mut nodes[j];
                     let size = node.running;
                     debug_assert!(size > 0, "Complete on an idle node");
                     let start = node.running_start;
@@ -806,7 +1189,7 @@ impl<'a> Simulator<'a> {
                         }
                         policy.on_complete((start - f.arrive_ns) as f64 / 1e9);
                     }
-                    try_start(k, t, &mut nodes, &mut heap, &mut seq);
+                    try_start(j, t, &mut nodes, &mut heap, &mut seq);
                 }
             }
         }
@@ -819,7 +1202,14 @@ impl<'a> Simulator<'a> {
                     && node.pending == 0
             );
         }
-        Ok(nodes.into_iter().map(|n| n.stats).collect())
+        Ok(nodes
+            .into_iter()
+            .map(|n| {
+                let mut stats = n.stats;
+                n.rep.finalize(t_last, &mut stats);
+                stats
+            })
+            .collect())
     }
 
     /// Iteration-level continuous-batching event loop. Per node: queued
@@ -839,26 +1229,35 @@ impl<'a> Simulator<'a> {
         policy: &mut SimPolicy,
         order: &[u64],
         admitted: usize,
+        fails: &[FailEv],
         window: BatchWindow,
         energy_of: &dyn Fn(usize, usize) -> f64,
         phase_of: &dyn Fn(usize, usize) -> PhaseEntry,
         recorder: &mut MetricsRecorder,
         meter: &mut Option<CarbonMeter>,
     ) -> anyhow::Result<Vec<NodeStats>> {
-        let mut nodes: Vec<CNode> = self
-            .sets
-            .iter()
-            .map(|s| CNode {
-                queue: VecDeque::new(),
-                active: Vec::new(),
-                iter: None,
-                iter_start: 0,
-                stats: NodeStats {
-                    model_id: s.model_id.clone(),
-                    ..NodeStats::default()
-                },
-            })
-            .collect();
+        // Flat replica fleet, model-major (see `run_lockstep`).
+        let mut nodes: Vec<CNode> = Vec::new();
+        let mut model_nodes: Vec<Vec<usize>> = Vec::with_capacity(self.sets.len());
+        for (k, s) in self.sets.iter().enumerate() {
+            let mut idxs = Vec::with_capacity(self.replicas[k]);
+            for r in 0..self.replicas[k] {
+                idxs.push(nodes.len());
+                nodes.push(CNode {
+                    queue: VecDeque::new(),
+                    active: Vec::new(),
+                    iter: None,
+                    iter_start: 0,
+                    rep: RepState::new(k, r as u32),
+                    stats: NodeStats {
+                        model_id: s.model_id.clone(),
+                        ..NodeStats::default()
+                    },
+                });
+            }
+            model_nodes.push(idxs);
+        }
+        let mut parked: Vec<VecDeque<InFlight>> = vec![VecDeque::new(); self.sets.len()];
 
         let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
         let mut seq = 0u64;
@@ -868,11 +1267,12 @@ impl<'a> Simulator<'a> {
         // prefill chunk (oldest unprefilled member) or one decode step
         // for the whole working set (slowest member's step).
         let start_iteration =
-            |k: usize, t: u64, nodes: &mut Vec<CNode>, heap: &mut BinaryHeap<Ev>, seq: &mut u64| {
-                let node = &mut nodes[k];
+            |j: usize, t: u64, nodes: &mut Vec<CNode>, heap: &mut BinaryHeap<Ev>, seq: &mut u64| {
+                let node = &mut nodes[j];
                 if node.iter.is_some() {
                     return;
                 }
+                let k = node.rep.model;
                 while window.slots_free(node.active.len()) > 0 {
                     let Some(f) = node.queue.pop_front() else {
                         break;
@@ -907,17 +1307,179 @@ impl<'a> Simulator<'a> {
                 heap.push(Ev {
                     t: t.saturating_add(dur),
                     seq: *seq,
-                    kind: EvKind::Complete { node: k as u32 },
+                    kind: EvKind::Complete {
+                        node: j as u32,
+                        gen: node.rep.gen,
+                    },
                 });
                 *seq += 1;
             };
 
+        // Least-loaded up replica (queued + resident work, lowest index
+        // on ties); `None` while the whole fleet is down.
+        let pick = |k: usize, nodes: &Vec<CNode>, model_nodes: &[Vec<usize>]| -> Option<usize> {
+            let mut best: Option<usize> = None;
+            let load = |n: &CNode| n.queue.len() + n.active.len();
+            for &j in &model_nodes[k] {
+                if !nodes[j].rep.up {
+                    continue;
+                }
+                if best.map_or(true, |b| load(&nodes[j]) < load(&nodes[b])) {
+                    best = Some(j);
+                }
+            }
+            best
+        };
+
+        // Hand one query (arrival, requeue, or parked flush) to model `k`.
+        let enqueue = |k: usize,
+                       f: InFlight,
+                       t: u64,
+                       nodes: &mut Vec<CNode>,
+                       model_nodes: &[Vec<usize>],
+                       parked: &mut Vec<VecDeque<InFlight>>,
+                       heap: &mut BinaryHeap<Ev>,
+                       seq: &mut u64| {
+            let Some(j) = pick(k, nodes, model_nodes) else {
+                parked[k].push_back(f);
+                return;
+            };
+            nodes[j].queue.push_back(f);
+            // Idle node: the query opens an iteration immediately; busy
+            // node: it joins at the next boundary.
+            start_iteration(j, t, nodes, heap, seq);
+        };
+
         let mut next_arrival = 0usize;
+        let mut next_fail = 0usize;
+        let mut t_last = 0u64;
         loop {
-            // Arrivals win ties against iteration completions — the same
-            // total order the lockstep engine guarantees.
+            // Event-time ties resolve failures < arrivals < iteration
+            // completions — the same total order the lockstep engine
+            // guarantees.
             let arrival_t = (next_arrival < admitted)
                 .then(|| to_ns(arrivals_s[order[next_arrival] as usize]));
+            let fail_t = (next_fail < fails.len()).then(|| fails[next_fail].t);
+            let take_fail = match fail_t {
+                Some(tf) => {
+                    arrival_t.map_or(true, |ta| tf <= ta)
+                        && heap.peek().map_or(true, |ev| tf <= ev.t)
+                }
+                None => false,
+            };
+            if take_fail {
+                let fe = fails[next_fail];
+                next_fail += 1;
+                let (t, k, r) = (fe.t, fe.model, fe.replica);
+                t_last = t_last.max(t);
+                match fe.action {
+                    FailAction::Kill | FailAction::Drain => {
+                        let verb = if fe.action == FailAction::Kill {
+                            "kill"
+                        } else {
+                            "drain"
+                        };
+                        let Some(&j) = model_nodes[k].get(r) else {
+                            anyhow::bail!(
+                                "failure script: {verb} targets model {k} replica {r} but only \
+                                 {} exist",
+                                model_nodes[k].len()
+                            );
+                        };
+                        if !nodes[j].rep.up {
+                            anyhow::bail!(
+                                "failure script: {verb} of model {k} replica {r} at t={:.3}s \
+                                 but it is already down",
+                                t as f64 / 1e9
+                            );
+                        }
+                        nodes[j].rep.up = false;
+                        nodes[j].rep.down_since = Some(t);
+                        if fe.action == FailAction::Kill {
+                            // Abort the running iteration (stale by
+                            // generation) and requeue the working set in
+                            // admission order, then the queue — arrival
+                            // times intact, no energy spent.
+                            nodes[j].rep.gen += 1;
+                            nodes[j].iter = None;
+                            let mut orphans: Vec<InFlight> = nodes[j]
+                                .active
+                                .drain(..)
+                                .map(|a| InFlight {
+                                    query: a.query,
+                                    arrive_ns: a.arrive_ns,
+                                })
+                                .collect();
+                            orphans.extend(nodes[j].queue.drain(..));
+                            nodes[j].stats.requeued += orphans.len() as u64;
+                            for f in orphans {
+                                enqueue(
+                                    k, f, t, &mut nodes, &model_nodes, &mut parked, &mut heap,
+                                    &mut seq,
+                                );
+                            }
+                        }
+                        // Drain needs no flush: admission is greedy, so
+                        // the node simply stops receiving and its queued
+                        // work retires through the usual iterations.
+                    }
+                    FailAction::Create => {
+                        let fleet = model_nodes[k].len();
+                        if r < fleet {
+                            let j = model_nodes[k][r];
+                            if nodes[j].rep.up {
+                                anyhow::bail!(
+                                    "failure script: join targets model {k} replica {r} at \
+                                     t={:.3}s but it is up",
+                                    t as f64 / 1e9
+                                );
+                            }
+                            if nodes[j].rep.joining {
+                                anyhow::bail!(
+                                    "failure script: overlapping joins for model {k} replica {r}"
+                                );
+                            }
+                            nodes[j].rep.joining = true;
+                        } else if r == fleet {
+                            let j = nodes.len();
+                            nodes.push(CNode {
+                                queue: VecDeque::new(),
+                                active: Vec::new(),
+                                iter: None,
+                                iter_start: 0,
+                                rep: RepState::joining(k, r as u32, t),
+                                stats: NodeStats {
+                                    model_id: self.sets[k].model_id.clone(),
+                                    ..NodeStats::default()
+                                },
+                            });
+                            model_nodes[k].push(j);
+                        } else {
+                            anyhow::bail!(
+                                "failure script: join targets model {k} replica {r} but only \
+                                 {fleet} exist (replica indices are contiguous)"
+                            );
+                        }
+                    }
+                    FailAction::Activate => {
+                        let j = model_nodes[k][r];
+                        debug_assert!(nodes[j].rep.joining, "Activate without its Create");
+                        nodes[j].rep.joining = false;
+                        nodes[j].rep.up = true;
+                        nodes[j].rep.settle_downtime(t);
+                        let flushed: Vec<InFlight> = parked[k].drain(..).collect();
+                        for f in flushed {
+                            enqueue(
+                                k, f, t, &mut nodes, &model_nodes, &mut parked, &mut heap,
+                                &mut seq,
+                            );
+                        }
+                    }
+                }
+                let up = model_nodes[k].iter().filter(|&&j| nodes[j].rep.up).count();
+                policy.on_capacity(k, up)?;
+                continue;
+            }
             let take_arrival = match (arrival_t, heap.peek()) {
                 (Some(ta), Some(ev)) => ta <= ev.t,
                 (Some(_), None) => true,
@@ -928,26 +1490,38 @@ impl<'a> Simulator<'a> {
                 let qi = order[next_arrival] as usize;
                 next_arrival += 1;
                 let t = arrival_t.unwrap();
+                t_last = t_last.max(t);
                 let k = policy.route_at(t, &queries[qi])?;
                 debug_assert!(k < self.sets.len());
-                nodes[k].queue.push_back(InFlight {
-                    query: qi as u64,
-                    arrive_ns: t,
-                });
-                // Idle node: the arrival opens an iteration immediately;
-                // busy node: it joins at the next boundary.
-                start_iteration(k, t, &mut nodes, &mut heap, &mut seq);
+                enqueue(
+                    k,
+                    InFlight {
+                        query: qi as u64,
+                        arrive_ns: t,
+                    },
+                    t,
+                    &mut nodes,
+                    &model_nodes,
+                    &mut parked,
+                    &mut heap,
+                    &mut seq,
+                );
                 continue;
             }
             let Ev { t, kind, .. } = heap.pop().unwrap();
+            t_last = t_last.max(t);
             policy.tick(t)?;
-            let k = match kind {
-                EvKind::Complete { node } => node as usize,
+            let (j, gen) = match kind {
+                EvKind::Complete { node, gen } => (node as usize, gen),
                 EvKind::Timeout { .. } => {
                     unreachable!("continuous engine schedules no timeouts")
                 }
             };
-            let node = &mut nodes[k];
+            if nodes[j].rep.gen != gen {
+                continue; // iteration aborted by a kill; its work was requeued
+            }
+            let k = nodes[j].rep.model;
+            let node = &mut nodes[j];
             let iter = node.iter.take().expect("Complete on an idle node");
             node.stats.batches += 1; // iterations, under this engine
             node.stats.busy_s += (t - node.iter_start) as f64 / 1e9;
@@ -1001,13 +1575,20 @@ impl<'a> Simulator<'a> {
                     i += 1;
                 }
             }
-            start_iteration(k, t, &mut nodes, &mut heap, &mut seq);
+            start_iteration(j, t, &mut nodes, &mut heap, &mut seq);
         }
 
         for node in &nodes {
             debug_assert!(node.queue.is_empty() && node.active.is_empty() && node.iter.is_none());
         }
-        Ok(nodes.into_iter().map(|n| n.stats).collect())
+        Ok(nodes
+            .into_iter()
+            .map(|n| {
+                let mut stats = n.stats;
+                n.rep.finalize(t_last, &mut stats);
+                stats
+            })
+            .collect())
     }
 }
 
@@ -1390,6 +1971,202 @@ mod tests {
         // Metering alone adds no control plane: no ζ trajectory.
         assert!(m.zeta_trajectory.is_none());
         assert!(m.replan_stats.is_none());
+    }
+
+    #[test]
+    fn kill_requeues_in_flight_work_to_the_surviving_replica() {
+        use crate::sim::{FailureEvent, FailureKind, FailureScript};
+        let s = sets();
+        let service = s[0].runtime.predict(200.0, 400.0);
+        let script = FailureScript::new(vec![FailureEvent {
+            t_s: 0.5 * service, // mid-batch
+            model: 0,
+            replica: 0,
+            kind: FailureKind::Kill,
+        }])
+        .unwrap();
+        for engine in [EngineKind::Lockstep, EngineKind::Continuous] {
+            let cfg = cfg_per_query(SimConfig {
+                max_batch: 1,
+                max_wait_s: 10.0,
+                engine,
+                ..SimConfig::default()
+            });
+            // ζ=1 greedy sends both to model 0; least-loaded dispatch
+            // splits them across its two replicas.
+            let queries = vec![q(0, 200, 400), q(1, 200, 400)];
+            let m = Simulator::new(&s, cfg)
+                .with_replicas(&[2, 1])
+                .unwrap()
+                .with_failures(&script)
+                .run(&queries, &[0.0, 0.0], &mut greedy(&s, 1.0))
+                .unwrap();
+            // Nothing lost, nothing duplicated: the killed replica's
+            // in-flight query finishes on the survivor.
+            assert_eq!(m.n_queries, 2, "{engine:?}");
+            assert_eq!(m.n_requeued, 1, "{engine:?}");
+            assert_eq!(m.scenario, "chaos:1");
+            let mut ids: Vec<u64> =
+                m.outcomes.as_ref().unwrap().iter().map(|o| o.id).collect();
+            ids.sort();
+            assert_eq!(ids, vec![0, 1]);
+            // Node rows are model-major: [m0r0, m0r1, m1r0].
+            assert_eq!(m.nodes.len(), 3);
+            assert_eq!(
+                m.nodes.iter().map(|nd| nd.replica).collect::<Vec<_>>(),
+                vec![0, 1, 0]
+            );
+            let killed = &m.nodes[0];
+            let survivor = &m.nodes[1];
+            assert_eq!(killed.requeued, 1, "{engine:?}");
+            assert_eq!(killed.queries, 0, "aborted work must not complete");
+            // Aborted work consumes no energy: the run's total is exactly
+            // two fitted whole-query predictions, all on the survivor.
+            assert!(killed.energy_j.abs() < 1e-12, "{engine:?}");
+            let e = s[0].energy.predict(200.0, 400.0);
+            assert!((m.total_energy_j - 2.0 * e).abs() < 1e-9, "{engine:?}");
+            assert_eq!(survivor.queries, 2);
+            // Downtime runs from the kill to the end of the run.
+            assert!(
+                (killed.downtime_s - (m.makespan_s - 0.5 * service)).abs() < 1e-6,
+                "{engine:?}: downtime={} makespan={}",
+                killed.downtime_s,
+                m.makespan_s
+            );
+            assert_eq!(survivor.downtime_s, 0.0);
+            // The requeued query's wait spans the abort: it completes well
+            // after a clean two-query run would.
+            assert!(m.makespan_s > 1.5 * service, "{engine:?}");
+        }
+    }
+
+    #[test]
+    fn uniform_replicas_match_the_single_node_artifact_byte_for_byte() {
+        let s = sets();
+        let queries: Vec<Query> = (0..40).map(|i| q(i, 20 + 15 * (i % 4), 60)).collect();
+        let arrivals: Vec<f64> = (0..40).map(|i| 0.03 * i as f64).collect();
+        for engine in [EngineKind::Lockstep, EngineKind::Continuous] {
+            let cfg = SimConfig {
+                max_batch: 3,
+                max_wait_s: 0.05,
+                engine,
+                ..SimConfig::default()
+            };
+            let run = |replicated: bool| {
+                let sim = Simulator::new(&s, cfg).labeled("trace", 11, 0.6);
+                let sim = if replicated {
+                    sim.with_replicas(&[1, 1]).unwrap()
+                } else {
+                    sim
+                };
+                sim.run(&queries, &arrivals, &mut greedy(&s, 0.6))
+                    .unwrap()
+                    .to_json()
+                    .to_string_pretty()
+            };
+            assert_eq!(run(true), run(false), "{engine:?}");
+        }
+    }
+
+    #[test]
+    fn join_after_total_loss_flushes_parked_arrivals() {
+        use crate::sim::{FailureEvent, FailureKind, FailureScript};
+        let s = sets();
+        // Kill model 0's lone replica while idle, then autoscale a fresh
+        // one in: create at 0.6, warm until 0.8. The query arriving at 0.7
+        // has no live replica and parks until the activate.
+        let script = FailureScript::new(vec![
+            FailureEvent {
+                t_s: 0.5,
+                model: 0,
+                replica: 0,
+                kind: FailureKind::Kill,
+            },
+            FailureEvent {
+                t_s: 0.6,
+                model: 0,
+                replica: 1,
+                kind: FailureKind::Join { warmup_s: 0.2 },
+            },
+        ])
+        .unwrap();
+        for engine in [EngineKind::Lockstep, EngineKind::Continuous] {
+            let cfg = cfg_per_query(SimConfig {
+                max_batch: 1,
+                max_wait_s: 10.0,
+                engine,
+                ..SimConfig::default()
+            });
+            let m = Simulator::new(&s, cfg)
+                .with_failures(&script)
+                .run(&[q(0, 10, 10)], &[0.7], &mut greedy(&s, 1.0))
+                .unwrap();
+            assert_eq!(m.n_queries, 1, "{engine:?}");
+            assert_eq!(m.n_requeued, 0);
+            assert_eq!(m.scenario, "chaos:2");
+            let o = m.outcomes.as_ref().unwrap()[0];
+            // Parked through the warm-up: service starts at the activate.
+            assert!((o.t_start - 0.8).abs() < 1e-9, "{engine:?}: {}", o.t_start);
+            // The joined replica appended as model 0 replica 1.
+            assert_eq!(m.nodes.len(), 3);
+            let joined = &m.nodes[1];
+            assert_eq!((joined.replica, joined.queries), (1, 1), "{engine:?}");
+            // Warm-up counts as downtime; the dead original is down from
+            // the kill to the end of the run.
+            assert!((joined.downtime_s - 0.2).abs() < 1e-9, "{engine:?}");
+            assert!(
+                (m.nodes[0].downtime_s - (m.makespan_s - 0.5)).abs() < 1e-6,
+                "{engine:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn failure_script_misuse_is_an_instructive_error() {
+        use crate::sim::{FailureEvent, FailureKind, FailureScript};
+        let s = sets();
+        let run = |events: Vec<FailureEvent>| {
+            let script = FailureScript::new(events).unwrap();
+            Simulator::new(&s, SimConfig::default())
+                .with_failures(&script)
+                .run(&[q(0, 10, 10)], &[0.0], &mut greedy(&s, 1.0))
+                .map(|_| ())
+        };
+        let ev = |t_s, model, replica, kind| FailureEvent {
+            t_s,
+            model,
+            replica,
+            kind,
+        };
+        // Replica counts of zero are rejected up front.
+        let err = Simulator::new(&s, SimConfig::default())
+            .with_replicas(&[0, 1])
+            .unwrap_err();
+        assert!(err.to_string().contains("at least one replica"), "{err}");
+        // Unknown model.
+        let err = run(vec![ev(1.0, 7, 0, FailureKind::Kill)]).unwrap_err();
+        assert!(err.to_string().contains("only 2 are hosted"), "{err}");
+        // Unknown replica.
+        let err = run(vec![ev(1.0, 0, 3, FailureKind::Kill)]).unwrap_err();
+        assert!(err.to_string().contains("only 1 exist"), "{err}");
+        // Killing a replica that is already down.
+        let err = run(vec![
+            ev(0.1, 0, 0, FailureKind::Kill),
+            ev(0.2, 0, 0, FailureKind::Kill),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("already down"), "{err}");
+        // Joining a replica that is still up.
+        let err =
+            run(vec![ev(0.1, 0, 0, FailureKind::Join { warmup_s: 0.0 })]).unwrap_err();
+        assert!(err.to_string().contains("it is up"), "{err}");
+        // Non-contiguous fresh replica index.
+        let err = run(vec![
+            ev(0.1, 0, 0, FailureKind::Kill),
+            ev(0.2, 0, 5, FailureKind::Join { warmup_s: 0.0 }),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("contiguous"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! Cluster-chaos properties of the replicated simulator: randomized
+//! kill/drain/join schedules over a two-model, two-replica fleet must
+//! (1) conserve work — every admitted query retires exactly once, even
+//! when a kill requeues its in-flight batch mid-service; (2) stay byte-
+//! deterministic — the same seed and failure script reproduce the v5
+//! metrics artifact byte-for-byte under both engines; and (3) account
+//! energy exactly — the per-replica node split partitions the run total
+//! to 1e-9.
+//!
+//! The schedule generator only ever touches replica 1 (and joins a new
+//! replica 2), so replica 0 of every model stays up for the whole run:
+//! parked work is never stranded and the simulator's conservation bail
+//! cannot fire by construction.
+
+use ecoserve::models::Normalizer;
+use ecoserve::sim::{
+    EngineKind, FailureEvent, FailureKind, FailureScript, PolicyKind, SimConfig, SimMetrics,
+    SimPolicy, Simulator,
+};
+use ecoserve::testkit::{forall, synthetic_pair, Config};
+use ecoserve::util::Rng;
+use ecoserve::workload::Query;
+
+/// Arrival horizon for the generated workloads, seconds.
+const HORIZON_S: f64 = 2.0;
+
+fn chaos_workload(rng: &mut Rng, n: usize) -> (Vec<Query>, Vec<f64>) {
+    let queries = (0..n)
+        .map(|i| Query {
+            id: i as u32,
+            t_in: 8 + rng.index(64) as u32,
+            t_out: 8 + rng.index(128) as u32,
+        })
+        .collect();
+    let mut arrivals: Vec<f64> = (0..n).map(|_| rng.range(0.0, HORIZON_S)).collect();
+    arrivals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (queries, arrivals)
+}
+
+/// A random but always-valid schedule: per model, maybe kill or drain
+/// replica 1 (possibly rejoining it later with a warm-up), and maybe
+/// autoscale-join a fresh replica 2. Replica 0 is never targeted.
+fn chaos_script(rng: &mut Rng, n_models: usize) -> FailureScript {
+    let mut events = Vec::new();
+    for k in 0..n_models {
+        if rng.chance(0.8) {
+            let t_down = rng.range(0.0, HORIZON_S);
+            let kind = if rng.chance(0.5) {
+                FailureKind::Kill
+            } else {
+                FailureKind::Drain
+            };
+            events.push(FailureEvent {
+                t_s: t_down,
+                model: k,
+                replica: 1,
+                kind,
+            });
+            if rng.chance(0.6) {
+                events.push(FailureEvent {
+                    t_s: t_down + rng.range(0.01, HORIZON_S),
+                    model: k,
+                    replica: 1,
+                    kind: FailureKind::Join {
+                        warmup_s: rng.range(0.0, 0.3),
+                    },
+                });
+            }
+        }
+        if rng.chance(0.4) {
+            events.push(FailureEvent {
+                t_s: rng.range(0.0, HORIZON_S),
+                model: k,
+                replica: 2,
+                kind: FailureKind::Join {
+                    warmup_s: rng.range(0.0, 0.5),
+                },
+            });
+        }
+    }
+    FailureScript::new(events).unwrap()
+}
+
+/// One chaos run: round-robin routing (so both models see traffic) over
+/// a two-replica-per-model fleet under `script`.
+fn chaos_run(
+    sets: &[ecoserve::models::ModelSet],
+    queries: &[Query],
+    arrivals: &[f64],
+    script: &FailureScript,
+    engine: EngineKind,
+    seed: u64,
+    per_query: bool,
+) -> SimMetrics {
+    let cfg = SimConfig {
+        max_batch: 3,
+        max_wait_s: 0.05,
+        slo_s: 30.0,
+        per_query,
+        engine,
+        ..SimConfig::default()
+    };
+    let norm = Normalizer::from_workload(sets, queries);
+    let mut policy =
+        SimPolicy::new(PolicyKind::RoundRobin, sets, norm, 0.5, None, seed, None).unwrap();
+    Simulator::new(sets, cfg)
+        .labeled("chaos", seed, 0.5)
+        .with_replicas(&[2, 2])
+        .unwrap()
+        .with_failures(script)
+        .run(queries, arrivals, &mut policy)
+        .unwrap()
+}
+
+#[test]
+fn chaos_conserves_every_query() {
+    let sets = synthetic_pair();
+    forall(Config::default().cases(24), |rng| {
+        let n = 16 + rng.index(64);
+        let (queries, arrivals) = chaos_workload(&mut rng.fork(1), n);
+        let script = chaos_script(&mut rng.fork(2), sets.len());
+        let seed = rng.next_u64();
+        for engine in [EngineKind::Lockstep, EngineKind::Continuous] {
+            let m = chaos_run(&sets, &queries, &arrivals, &script, engine, seed, true);
+            // Every admitted query retires exactly once: the artifact
+            // totals, the per-replica split, and the per-query outcome
+            // ids all agree on exactly the submitted id set.
+            assert_eq!(m.n_queries as usize, n);
+            let node_queries: u64 = m.nodes.iter().map(|s| s.queries).sum();
+            assert_eq!(node_queries, m.n_queries);
+            let node_requeued: u64 = m.nodes.iter().map(|s| s.requeued).sum();
+            assert_eq!(node_requeued, m.n_requeued);
+            let mut ids: Vec<u64> = m
+                .outcomes
+                .as_ref()
+                .expect("per-query outcomes retained")
+                .iter()
+                .map(|o| o.id)
+                .collect();
+            ids.sort_unstable();
+            assert_eq!(ids, (0..n as u64).collect::<Vec<u64>>());
+            if script.is_empty() {
+                assert_eq!(m.scenario, "none");
+            } else {
+                assert_eq!(m.scenario, script.label());
+            }
+        }
+    });
+}
+
+#[test]
+fn chaos_runs_are_byte_deterministic() {
+    let sets = synthetic_pair();
+    forall(Config::default().cases(12), |rng| {
+        let n = 16 + rng.index(48);
+        let (queries, arrivals) = chaos_workload(&mut rng.fork(1), n);
+        let script = chaos_script(&mut rng.fork(2), sets.len());
+        let seed = rng.next_u64();
+        for engine in [EngineKind::Lockstep, EngineKind::Continuous] {
+            let a = chaos_run(&sets, &queries, &arrivals, &script, engine, seed, false);
+            let b = chaos_run(&sets, &queries, &arrivals, &script, engine, seed, false);
+            assert_eq!(
+                a.to_json().to_string_pretty(),
+                b.to_json().to_string_pretty(),
+                "engine {} replay diverged",
+                engine.label()
+            );
+        }
+    });
+}
+
+#[test]
+fn chaos_energy_partitions_across_replicas() {
+    let sets = synthetic_pair();
+    forall(Config::default().cases(24), |rng| {
+        let n = 16 + rng.index(64);
+        let (queries, arrivals) = chaos_workload(&mut rng.fork(1), n);
+        let script = chaos_script(&mut rng.fork(2), sets.len());
+        let seed = rng.next_u64();
+        for engine in [EngineKind::Lockstep, EngineKind::Continuous] {
+            let m = chaos_run(&sets, &queries, &arrivals, &script, engine, seed, false);
+            let node_energy: f64 = m.nodes.iter().map(|s| s.energy_j).sum();
+            assert!(
+                (node_energy - m.total_energy_j).abs()
+                    <= 1e-9 * m.total_energy_j.abs().max(1.0),
+                "per-replica energy {} != run total {} (engine {})",
+                node_energy,
+                m.total_energy_j,
+                engine.label()
+            );
+            for s in &m.nodes {
+                assert!(s.energy_j >= 0.0 && s.downtime_s >= 0.0);
+                // Decode is the complement: prefill can never exceed the
+                // node total.
+                assert!(s.prefill_j >= 0.0 && s.prefill_j <= s.energy_j + 1e-9);
+            }
+            assert!(
+                (m.prefill_energy_j + m.decode_energy_j - m.total_energy_j).abs()
+                    <= 1e-9 * m.total_energy_j.max(1.0)
+            );
+        }
+    });
+}

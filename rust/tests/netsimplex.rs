@@ -1,10 +1,11 @@
 //! Solver-equivalence properties for the network-simplex backend: the
 //! primal simplex and the successive-shortest-paths solver optimize the
 //! identical shape-level integer program, so their objectives must agree
-//! to 1e-9 across capacity modes, ζ values, warm starts, and degenerate
-//! instances (zero-multiplicity shapes, saturated caps, single model,
-//! infeasible-then-relaxed capacity vectors). CI's `bench-smoke` job keeps
-//! the performance side of the same story honest.
+//! to 1e-9 across capacity modes, ζ values, warm starts (ζ re-solves and
+//! replica rescales), and degenerate instances (zero-multiplicity shapes,
+//! saturated caps, single model, infeasible-then-relaxed capacity
+//! vectors). CI's `bench-smoke` job keeps the performance side of the
+//! same story honest.
 
 use ecoserve::models::{AccuracyModel, ModelSet, Normalizer, Target, WorkloadModel};
 use ecoserve::plan::{Planner, SolverKind};
@@ -348,4 +349,80 @@ fn sweep_solver_accepts_the_netsimplex_backend() {
         .points
         .iter()
         .all(|p| p.eval.mean_energy_j.is_finite()));
+}
+
+// ---------------------------------------------------------------- rescale
+
+/// Warm-started replica rescales on the net-simplex backend must agree
+/// with the *other* exact backend solved cold on the same replicated
+/// topology — a cross-solver check, so a warm-start bug cannot hide
+/// behind a matching bug in its own cold path. Grow steps exercise the
+/// pinned-basis warm start (fresh columns enter empty); shrink steps
+/// under tight caps drop flow-carrying columns and take the documented
+/// cold fallback.
+#[test]
+fn prop_netsimplex_rescale_matches_bucketed_cold_solves() {
+    forall(Config::default().cases(14), |rng| {
+        let n_models = 2 + rng.index(3);
+        let sets = random_sets(rng, n_models);
+        let table = random_table(rng, 3 + rng.index(4));
+        let nq = 6 * n_models + rng.index(50);
+        let queries = shaped_workload(rng, &table, nq, 0);
+        let gammas = random_gammas(rng, n_models);
+        let zeta = rng.range(0.0, 1.0);
+        let mode = if rng.chance(0.5) {
+            CapacityMode::Eq3Only
+        } else {
+            CapacityMode::GammaHard
+        };
+
+        let mut simplex = Planner::new(&sets)
+            .gammas(&gammas)
+            .capacity(mode)
+            .zeta(zeta)
+            .solver(SolverKind::NetworkSimplex)
+            .session(&queries)
+            .unwrap();
+        simplex.solve().unwrap();
+
+        let mut counts = vec![1usize; n_models];
+        for _ in 0..5 {
+            let k = rng.index(n_models);
+            let c = 1 + rng.index(3);
+            let mut target = counts.clone();
+            target[k] = c;
+
+            let mut bucketed = Planner::new(&sets)
+                .gammas(&gammas)
+                .capacity(mode)
+                .zeta(zeta)
+                .solver(SolverKind::Bucketed)
+                .session(&queries)
+                .unwrap();
+            match (simplex.rescale(k, c), bucketed.set_replicas(&target)) {
+                (Ok(()), Ok(())) => {
+                    counts = target;
+                    let got = simplex.assignment().unwrap().objective;
+                    let want = bucketed.solve().unwrap().objective;
+                    assert!(
+                        (got - want).abs() < 1e-9,
+                        "counts {counts:?} ({mode:?}, zeta={zeta}): \
+                         net-simplex warm {got} vs bucketed cold {want}"
+                    );
+                }
+                (Err(w), Err(c)) => {
+                    // Same instructive error on both paths; the session
+                    // keeps its old topology and stays solvable.
+                    assert_eq!(w.to_string(), c.to_string());
+                    assert_eq!(simplex.replicas().counts(), counts.as_slice());
+                    simplex.solve().unwrap();
+                }
+                (w, c) => panic!(
+                    "feasibility disagrees (warm ok={}, cold ok={})",
+                    w.is_ok(),
+                    c.is_ok()
+                ),
+            }
+        }
+    });
 }

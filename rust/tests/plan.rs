@@ -1,6 +1,8 @@
 //! Property and integration tests for the `ecoserve::plan` facade:
-//! artifact round-trips, ζ re-solve and warm-started extension
-//! equivalence (to 1e-9 against cold solves), and backend ordering
+//! artifact round-trips, ζ re-solve, warm-started extension, and replica
+//! `rescale` equivalence (to 1e-9 against cold solves, across both exact
+//! backends, grow and shrink, including saturated caps and infeasible
+//! shrinks erroring identically warm and cold), and backend ordering
 //! (greedy never beats the exact optimum).
 
 use ecoserve::models::{AccuracyModel, ModelSet, Normalizer, Target, WorkloadModel};
@@ -648,4 +650,259 @@ fn sketch_sessions_gate_the_query_level_api_and_vice_versa() {
         err.contains("shape-level"),
         "greedy must explain it cannot solve sketch-fed instances: {err}"
     );
+}
+
+// ---------------------------------------------------------------- rescale
+
+/// Cold reference for a replicated topology: a fresh session with the
+/// target counts installed wholesale, solved from scratch.
+fn cold_replicated_objective(
+    sets: &[ModelSet],
+    queries: &[Query],
+    gammas: &[f64],
+    mode: CapacityMode,
+    zeta: f64,
+    kind: SolverKind,
+    counts: &[usize],
+) -> anyhow::Result<f64> {
+    let mut s = Planner::new(sets)
+        .gammas(gammas)
+        .capacity(mode)
+        .zeta(zeta)
+        .solver(kind)
+        .session(queries)?;
+    s.set_replicas(counts)?;
+    Ok(s.solve()?.objective)
+}
+
+#[test]
+fn prop_warm_rescale_matches_cold_replicated_solves() {
+    // A random walk of single-model rescales (grow and shrink, both
+    // capacity modes) must land on the cold optimum of each visited
+    // topology, and an infeasible step must error with the exact message
+    // the cold path gives — leaving the session on its old topology.
+    forall(Config::default().cases(14), |rng| {
+        let n_models = 2 + rng.index(3);
+        let sets = random_sets(rng, n_models);
+        let table = random_table(rng, 3 + rng.index(4));
+        let nq = 6 * n_models + rng.index(60);
+        let queries = shaped_workload(rng, &table, nq, 0);
+        let gammas = random_gammas(rng, n_models);
+        let zeta = rng.range(0.0, 1.0);
+        let mode = if rng.chance(0.5) {
+            CapacityMode::Eq3Only
+        } else {
+            CapacityMode::GammaHard
+        };
+        let steps: Vec<(usize, usize)> = (0..4)
+            .map(|_| (rng.index(n_models), 1 + rng.index(3)))
+            .collect();
+
+        for kind in [SolverKind::Bucketed, SolverKind::NetworkSimplex] {
+            let mut session = Planner::new(&sets)
+                .gammas(&gammas)
+                .capacity(mode)
+                .zeta(zeta)
+                .solver(kind)
+                .session(&queries)
+                .unwrap();
+            session.solve().unwrap();
+            let mut counts = vec![1usize; n_models];
+            for &(k, c) in &steps {
+                let mut target = counts.clone();
+                target[k] = c;
+                let warm = session.rescale(k, c);
+                let want = cold_replicated_objective(
+                    &sets, &queries, &gammas, mode, zeta, kind, &target,
+                );
+                match (warm, want) {
+                    (Ok(()), Ok(want)) => {
+                        counts = target;
+                        let got = session.assignment().unwrap().objective;
+                        assert!(
+                            (got - want).abs() < 1e-9,
+                            "{kind:?} ({mode:?}, counts {counts:?}): warm {got} vs cold {want}"
+                        );
+                        assert_eq!(session.replicas().counts(), counts.as_slice());
+                    }
+                    (Err(w), Err(c)) => {
+                        assert_eq!(
+                            w.to_string(),
+                            c.to_string(),
+                            "warm and cold must report the same instructive error"
+                        );
+                        // The failed step leaves the session untouched…
+                        assert_eq!(session.replicas().counts(), counts.as_slice());
+                        // …and still solvable at its old topology.
+                        session.solve().unwrap();
+                    }
+                    (w, c) => panic!(
+                        "{kind:?}: warm/cold feasibility disagrees \
+                         (warm ok={}, cold ok={})",
+                        w.is_ok(),
+                        c.is_ok()
+                    ),
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn rescale_grow_and_shrink_under_saturated_caps() {
+    // GammaHard caps sum exactly to |Q|, so every capacity is tight and a
+    // shrink drops columns that carried flow — the documented cold-
+    // fallback trigger for the warm-start backend. Both exact backends
+    // must match the from-scratch optimum at every step.
+    let mut rng = Rng::new(0x5CA1E);
+    let sets = random_sets(&mut rng, 3);
+    let table = random_table(&mut rng, 5);
+    let queries = shaped_workload(&mut rng, &table, 60, 0);
+    let gammas = [0.25, 0.35, 0.4];
+
+    for kind in [SolverKind::Bucketed, SolverKind::NetworkSimplex] {
+        let mut session = Planner::new(&sets)
+            .gammas(&gammas)
+            .capacity(CapacityMode::GammaHard)
+            .zeta(0.5)
+            .solver(kind)
+            .session(&queries)
+            .unwrap();
+        session.solve().unwrap();
+        let mut counts = vec![1usize; 3];
+        for (k, c) in [(0, 3), (2, 2), (0, 1), (2, 1), (1, 3), (1, 1)] {
+            counts[k] = c;
+            session.rescale(k, c).unwrap();
+            let got = session.assignment().unwrap().objective;
+            let want = cold_replicated_objective(
+                &sets,
+                &queries,
+                &gammas,
+                CapacityMode::GammaHard,
+                0.5,
+                kind,
+                &counts,
+            )
+            .unwrap();
+            assert!(
+                (got - want).abs() < 1e-9,
+                "{kind:?} (counts {counts:?}): warm {got} vs cold {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn single_replica_topologies_package_byte_identical_artifacts() {
+    // R=1 is the degenerate replica topology: installing it explicitly,
+    // or a same-count rescale, must be a no-op — the packaged artifact is
+    // byte-for-byte the plain session's. And for the cold-re-solving
+    // bucketed backend, a grow→shrink cycle back to uniform restores the
+    // baseline bytes exactly.
+    let mut rng = Rng::new(0x1E91);
+    let sets = random_sets(&mut rng, 3);
+    let table = random_table(&mut rng, 5);
+    let queries = shaped_workload(&mut rng, &table, 45, 0);
+    let gammas = [0.3, 0.3, 0.4];
+
+    for kind in [SolverKind::Bucketed, SolverKind::NetworkSimplex] {
+        let planner = Planner::new(&sets)
+            .gammas(&gammas)
+            .capacity(CapacityMode::Eq3Only)
+            .zeta(0.4)
+            .solver(kind);
+        let baseline = planner
+            .clone()
+            .session(&queries)
+            .unwrap()
+            .plan()
+            .unwrap()
+            .to_json()
+            .to_string_pretty();
+
+        let mut explicit = planner.clone().session(&queries).unwrap();
+        explicit.set_replicas(&[1, 1, 1]).unwrap();
+        assert!(explicit.replicas().is_uniform());
+        assert_eq!(
+            explicit.plan().unwrap().to_json().to_string_pretty(),
+            baseline,
+            "{kind:?}: explicit all-ones topology drifted from the plain session"
+        );
+
+        let mut noop = planner.clone().session(&queries).unwrap();
+        noop.solve().unwrap();
+        noop.rescale(1, 1).unwrap();
+        assert_eq!(
+            noop.plan().unwrap().to_json().to_string_pretty(),
+            baseline,
+            "{kind:?}: same-count rescale must not disturb the artifact"
+        );
+    }
+
+    // Bucketed re-solves cold after every rescale, so returning to the
+    // uniform topology reproduces the baseline solve deterministically.
+    let planner = Planner::new(&sets)
+        .gammas(&gammas)
+        .capacity(CapacityMode::Eq3Only)
+        .zeta(0.4)
+        .solver(SolverKind::Bucketed);
+    let baseline = planner
+        .clone()
+        .session(&queries)
+        .unwrap()
+        .plan()
+        .unwrap()
+        .to_json()
+        .to_string_pretty();
+    let mut cycled = planner.session(&queries).unwrap();
+    cycled.solve().unwrap();
+    cycled.rescale(0, 3).unwrap();
+    cycled.rescale(0, 1).unwrap();
+    assert!(cycled.replicas().is_uniform());
+    assert_eq!(
+        cycled.plan().unwrap().to_json().to_string_pretty(),
+        baseline,
+        "grow→shrink cycle back to R=1 must restore the uniform artifact"
+    );
+}
+
+#[test]
+fn shrink_to_infeasible_reports_the_instructive_error() {
+    // A workload of |Q| queries cannot feed more than |Q| replica columns
+    // one query each (Eq. 3): the rescale must refuse with the same
+    // message as a cold set_replicas, and leave the session solvable.
+    let mut rng = Rng::new(0xFEA5);
+    let sets = random_sets(&mut rng, 2);
+    let table = random_table(&mut rng, 3);
+    let queries = shaped_workload(&mut rng, &table, 4, 0);
+
+    for kind in [SolverKind::Bucketed, SolverKind::NetworkSimplex] {
+        let mut session = Planner::new(&sets)
+            .gammas(&[0.5, 0.5])
+            .capacity(CapacityMode::Eq3Only)
+            .zeta(0.5)
+            .solver(kind)
+            .session(&queries)
+            .unwrap();
+        session.solve().unwrap();
+        // 4 queries, target topology [4, 1] → 5 columns: infeasible.
+        let warm = session.rescale(0, 4).unwrap_err().to_string();
+        assert!(warm.contains("Eq. 3"), "{kind:?}: {warm}");
+        assert!(
+            warm.contains("shrink the replica set or grow the workload"),
+            "{kind:?}: {warm}"
+        );
+        let mut cold = Planner::new(&sets)
+            .gammas(&[0.5, 0.5])
+            .capacity(CapacityMode::Eq3Only)
+            .zeta(0.5)
+            .solver(kind)
+            .session(&queries)
+            .unwrap();
+        let cold_err = cold.set_replicas(&[4, 1]).unwrap_err().to_string();
+        assert_eq!(warm, cold_err, "{kind:?}: warm and cold errors diverged");
+        // The refused rescale left the session untouched and solvable.
+        assert!(session.replicas().is_uniform());
+        session.solve().unwrap();
+    }
 }

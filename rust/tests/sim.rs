@@ -3,8 +3,8 @@
 //! and parallel `--seeds` replicated, under both engines), plan-vs-
 //! baseline energy ordering on capacity-feasible instances, trace-replay
 //! arrival fidelity, streaming-vs-exact quantile agreement, the
-//! version-4 metrics artifact golden (byte-exact round-trip +
-//! version-1/-2/-3 rejection), conservation and energy parity across the
+//! version-5 metrics artifact golden (byte-exact round-trip +
+//! version-1 through -4 rejection), conservation and energy parity across the
 //! lockstep/continuous engine switch, and the online control plane
 //! (replan+carbon determinism; the carbon-governed replan's energy never
 //! exceeding the static plan's on a Gamma burst).
@@ -116,6 +116,8 @@ fn run_compare(seed: u64) -> (Vec<SimMetrics>, Vec<Query>, Vec<ModelSet>) {
         // PolicyKind::all() includes replan, which needs a control config
         // (static ζ here: no carbon signal attached).
         control: Some(Default::default()),
+        replicas: None,
+        failures: None,
     };
     let rows = compare(&spec, &queries, &arrivals, &PolicyKind::all()).unwrap();
     (rows, queries, sets)
@@ -166,6 +168,8 @@ fn parallel_seeds_compare_is_byte_identical() {
                 },
                 arrival_label: "poisson:30".to_string(),
                 control: Some(Default::default()),
+                replicas: None,
+                failures: None,
             };
             let grid = compare_replicated(
                 &spec,
@@ -348,13 +352,13 @@ fn sorted_max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(0.0f64, f64::max)
 }
 
-/// Golden: the committed version-4 artifact round-trips byte-exactly
-/// through `SimMetrics::from_json` → `to_json`, and the version-1,
-/// version-2, and version-3 layouts are rejected with migration messages.
+/// Golden: the committed version-5 artifact round-trips byte-exactly
+/// through `SimMetrics::from_json` → `to_json`, and the version-1
+/// through version-4 layouts are rejected with migration messages.
 #[test]
 fn metrics_artifact_golden_roundtrip_and_version_gate() {
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("tests/fixtures/sim_metrics_v4.json");
+        .join("tests/fixtures/sim_metrics_v5.json");
     let text = std::fs::read_to_string(&path).unwrap();
     let parsed = Json::parse(&text).unwrap();
     let m = SimMetrics::from_json(&parsed).unwrap();
@@ -372,6 +376,15 @@ fn metrics_artifact_golden_roundtrip_and_version_gate() {
     assert_eq!(m.tpot_attainment, None);
     // The phase split partitions the recorded total.
     assert_eq!(m.prefill_energy_j + m.decode_energy_j, m.total_energy_j);
+    // The cluster fields: a two-replica fleet under a three-event outage
+    // script, with per-replica downtime and requeue accounting.
+    assert_eq!(m.scenario, "chaos:3");
+    assert_eq!(m.n_requeued, 2);
+    assert_eq!(m.nodes.len(), 2);
+    assert_eq!((m.nodes[0].replica, m.nodes[1].replica), (0, 1));
+    assert_eq!(m.nodes[0].downtime_s, 1.5);
+    assert_eq!(m.nodes[0].requeued, 2);
+    assert_eq!(m.nodes[1].requeued, 0);
     // A lean (no control plane) artifact parses with the control blocks
     // absent, and reserializes without inventing them.
     assert_eq!(m.replan_stats, None);
@@ -384,6 +397,7 @@ fn metrics_artifact_golden_roundtrip_and_version_gate() {
         ("tests/fixtures/sim_metrics_v1.json", "version 1"),
         ("tests/fixtures/sim_metrics_v2.json", "version 2"),
         ("tests/fixtures/sim_metrics_v3.json", "version 3"),
+        ("tests/fixtures/sim_metrics_v4.json", "version 4"),
     ] {
         let old_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(fixture);
         let old = Json::parse(&std::fs::read_to_string(&old_path).unwrap()).unwrap();
@@ -571,6 +585,8 @@ fn continuous_engine_is_byte_deterministic() {
                 },
                 arrival_label: "gamma:60:4".to_string(),
                 control: Some(Default::default()),
+                replicas: None,
+                failures: None,
             };
             let rows = compare(&spec, &queries, &arrivals, &PolicyKind::all()).unwrap();
             for m in &rows {
@@ -635,6 +651,8 @@ fn replan_with_carbon_is_byte_identical_across_runs() {
             },
             arrival_label: "gamma:60:4".to_string(),
             control: Some(control_cfg()),
+            replicas: None,
+            failures: None,
         };
         let kinds = [PolicyKind::Plan, PolicyKind::Replan, PolicyKind::Greedy];
         let grid = compare_replicated(
@@ -690,6 +708,8 @@ fn carbon_governed_replan_never_spends_more_energy_than_the_static_plan() {
         arrival_label: "gamma:60:4".to_string(),
         // Band floor = static ζ: replan's operational ζ ≥ the plan's.
         control: Some(control_cfg()),
+        replicas: None,
+        failures: None,
     };
     let arrivals = ArrivalProcess::GammaBurst { rate: 60.0, cv2: 4.0 }
         .times(queries.len(), &mut Rng::new(7))
