@@ -39,8 +39,8 @@ use ecoserve::plan::{Plan, Planner, SolverKind};
 use ecoserve::scheduler::CapacityMode;
 use ecoserve::sim::{
     compare_replicated, ARRIVAL_SEED_SALT, ArrivalProcess, Arrivals, CompareSpec, EngineKind,
-    FailureEvent, FailureKind, FailureScript, PolicyKind, SimConfig, SimMetrics, SimPolicy,
-    Simulator,
+    FailureEvent, FailureKind, FailureScript, Hazard, PolicyKind, ResilienceConfig, SimConfig,
+    SimMetrics, SimPolicy, Simulator,
 };
 use ecoserve::testkit::synthetic_set;
 use ecoserve::util::{Json, Rng, Stopwatch};
@@ -630,6 +630,63 @@ fn main() {
         ]));
     }
 
+    // ---- stochastic hazard churn: Poisson MTBF/MTTR with survival ------
+    // Same fleet as the scripted chaos row, but the outages come from the
+    // seeded hazard generator and every query rides the retry/backoff
+    // survival layer. Conservation widens to routed + failed: a query
+    // that exhausts its retry budget retires as failed, never silently.
+    let hazard = Hazard::parse("mtbf:2:0.2").expect("hazard spec");
+    let hazard_script = hazard
+        .generate(&chaos_replicas, horizon + 1.0, 42)
+        .expect("hazard script");
+    for engine in [EngineKind::Lockstep, EngineKind::Continuous] {
+        let sw = Stopwatch::start();
+        let m = Simulator::new(
+            &sets,
+            SimConfig {
+                max_batch,
+                max_wait_s,
+                slo_s: 60.0,
+                engine,
+                ..SimConfig::default()
+            },
+        )
+        .labeled("poisson", 42, ZETA)
+        .with_replicas(&chaos_replicas)
+        .expect("replica fleet")
+        .with_failures(&hazard_script)
+        .with_resilience(ResilienceConfig::default())
+        .expect("resilience config")
+        .run(
+            &chaos_queries,
+            &chaos_arrivals,
+            &mut policy_for(PolicyKind::Greedy, &sets, chaos_norm, None, 42),
+        )
+        .expect("hazard run");
+        let hazard_s = sw.elapsed_s();
+        assert_eq!(m.n_queries + m.n_failed, n_chaos as u64);
+        assert_eq!(m.scenario, hazard.label());
+        println!(
+            "  n={n_chaos} policy=greedy engine={} scenario={}: {:.3} s \
+             ({:.2}M q/s), {} failed, {} retries",
+            engine.label(),
+            m.scenario,
+            hazard_s,
+            n_chaos as f64 / hazard_s.max(1e-12) / 1e6,
+            m.n_failed,
+            m.n_retries
+        );
+        series.push(Json::obj(vec![
+            ("n_queries", Json::num(n_chaos as f64)),
+            ("policy", Json::str("greedy")),
+            ("engine", Json::str(engine.label())),
+            ("scenario", Json::str(&m.scenario)),
+            ("memo_s", Json::num(hazard_s)),
+            ("memo_qps", Json::num(n_chaos as f64 / hazard_s.max(1e-12))),
+            ("n_requeued", Json::num(m.n_requeued as f64)),
+        ]));
+    }
+
     // ---- trace loader throughput: streaming JSONL reads ----------------
     let n_lines: usize = if smoke { 50_000 } else { 2_000_000 };
     let loader_queries = workload(&table, n_lines, &mut rng.fork(7));
@@ -687,10 +744,17 @@ fn main() {
             ..SimConfig::default()
         },
         arrival_label: format!("poisson:{rate:.3}"),
-        // PolicyKind::all() includes replan, which needs a control config.
+        // PolicyKind::all() includes replan, which needs a control config,
+        // and resilient, which needs its own plan (the static plan doubles
+        // as a degenerate N+0 here — the grid gates throughput, not
+        // availability).
         control: Some(Default::default()),
         replicas: None,
         failures: None,
+        hazard: None,
+        hazard_seed: 0,
+        resilient_plan: Some(&cmp_plan),
+        resilience: None,
     };
     let n_seeds = 3;
     let kinds = PolicyKind::all();

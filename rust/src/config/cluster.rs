@@ -161,6 +161,19 @@ impl ReplicaSet {
             .collect()
     }
 
+    /// Models that can lose `k` replicas and still keep at least one up
+    /// — the single-fleet loss scenarios an N+k resilient plan must
+    /// survive ([`PlanSession::plan_resilient`] probes exactly these;
+    /// models with `count ≤ k` express a deeper loss as downtime, never
+    /// as a zero-replica plan).
+    ///
+    /// [`PlanSession::plan_resilient`]: crate::plan::PlanSession::plan_resilient
+    pub fn loss_candidates(&self, k: usize) -> Vec<usize> {
+        (0..self.counts.len())
+            .filter(|&m| self.counts[m] > k)
+            .collect()
+    }
+
     /// Column survival map from `self` (the old set) to `new`: for each
     /// *new* column, `Some(old_column)` when that replica existed before
     /// the rescale (per model, the first `min(old, new)` replicas
@@ -231,6 +244,15 @@ mod tests {
         let r = ReplicaSet::new(&[2, 1]).unwrap();
         let col_flows = vec![vec![3, 1, 5], vec![0, 2, 0]];
         assert_eq!(r.aggregate_flows(&col_flows), vec![vec![4, 5], vec![2, 0]]);
+    }
+
+    #[test]
+    fn loss_candidates_need_spare_replicas() {
+        let r = ReplicaSet::new(&[3, 1, 2]).unwrap();
+        assert_eq!(r.loss_candidates(0), vec![0, 1, 2]);
+        assert_eq!(r.loss_candidates(1), vec![0, 2]);
+        assert_eq!(r.loss_candidates(2), vec![0]);
+        assert!(r.loss_candidates(3).is_empty());
     }
 
     #[test]

@@ -17,6 +17,16 @@
 //! [`rezeta_shapes`](PlanSession::rezeta_shapes) — and the
 //! [`PatternLearner`](super::PatternLearner) pre-positions ζ ahead of the
 //! load it forecasts.
+//!
+//! Under failure injection ([`FailureScript`](crate::sim::FailureScript),
+//! and the [`Hazard`](crate::sim::Hazard) ensembles that generate such
+//! scripts per seed), the capacity hook
+//! ([`on_capacity`](ReplanPolicy::on_capacity)) is the resilience seam:
+//! every kill/drain/join is folded into the live session as a warm
+//! [`rescale`](PlanSession::rescale), so the routing proportions track
+//! the *surviving* fleet. This is what `compare_replicated`'s
+//! hazard-ensemble mode scores the replan policy on against static and
+//! N+k resilient plans.
 
 use super::governor::{CarbonConfig, CarbonGovernor};
 use super::pattern::PatternLearner;
@@ -498,6 +508,39 @@ mod tests {
         assert_eq!(p.session.replicas().counts(), &[2, 3, 1]);
         // Out-of-range models are a hard error, not a silent no-op.
         assert!(p.on_capacity(9, 1).is_err());
+    }
+
+    #[test]
+    fn capacity_churn_stays_deterministic_and_feasible() {
+        // The hazard-ensemble access pattern: replicas of one model flap
+        // repeatedly (kill → join → kill …) while arrivals keep flowing.
+        // Every flap must fold into the session (or be held pending)
+        // without wedging routing, and the whole run must replay exactly.
+        let run = || {
+            let mut p = setup(&ControlConfig {
+                replan_every: 8,
+                ..ControlConfig::default()
+            });
+            let qs = queries(96);
+            let mut routes = Vec::new();
+            for (i, q) in qs.iter().enumerate() {
+                match i {
+                    10 => p.on_capacity(0, 2).unwrap(), // join
+                    20 => p.on_capacity(0, 1).unwrap(), // kill
+                    30 => p.on_capacity(0, 2).unwrap(), // join again
+                    40 => p.on_capacity(1, 0).unwrap(), // total loss: clamps
+                    50 => p.on_capacity(1, 1).unwrap(), // recovery
+                    _ => {}
+                }
+                routes.push(p.route_at(ns(0.01 * i as f64), q).unwrap());
+            }
+            (routes, p.session.replicas().counts().to_vec(), p.stats())
+        };
+        let (routes, counts, _) = run();
+        assert_eq!(counts, vec![2, 1, 1]);
+        // Every model index stays in range throughout the churn.
+        assert!(routes.iter().all(|&k| k < 3));
+        assert_eq!(run().0, routes);
     }
 
     #[test]

@@ -26,9 +26,10 @@ use ecoserve::models::Normalizer;
 use ecoserve::perfmodel::Cluster;
 use ecoserve::plan::{Plan, Planner, SolverKind};
 use ecoserve::report;
-use ecoserve::scheduler::{self, CapacityMode};
+use ecoserve::scheduler::{self, CapacityMode, GridSignal};
 use ecoserve::sim::{
-    self, ArrivalProcess, CompareSpec, EngineKind, FailureScript, PolicyKind, SimConfig,
+    self, load_price_trace, ArrivalProcess, CompareSpec, EngineKind, FailureScript, Hazard,
+    PolicyKind, ResilienceConfig, SimConfig,
 };
 use ecoserve::stats;
 use ecoserve::util::{logging, Args, Rng};
@@ -116,8 +117,8 @@ COMMANDS
                             [--artifacts DIR] [--requests N] [--zeta X]
                             [--plan FILE]
   simulate                  deterministic discrete-event serving simulation
-                            [--policy plan|replan|greedy|round-robin|random|
-                             compare]
+                            [--policy plan|replan|resilient|greedy|
+                             round-robin|random|compare]
                             [--engine lockstep|continuous]
                             [--plan FILE] [--arrival poisson:R|gamma:R:CV2|
                              trace] [--trace FILE] [--queries N] [--zeta X]
@@ -126,8 +127,17 @@ COMMANDS
                             [--seeds N] [--per-query]
                             [--replan-every N] [--slo-trigger-ms MS]
                             [--carbon] [--carbon-band MIN:MAX]
-                            [--carbon-day-s S]
+                            [--carbon-day-s S] [--carbon-trace FILE]
                             [--replicas A,B,..] [--failures FILE]
+                            [--hazard mtbf:MTBF:MTTR|
+                             weibull:SHAPE:SCALE:MTTR|
+                             group:MTBF:MTTR:SIZE|spot:LO:HI]
+                            [--hazard-seed N] [--hazard-warmup S]
+                            [--spot-trace FILE]
+                            [--retry-budget N] [--retry-base-ms MS]
+                            [--retry-cap-ms MS] [--breaker-threshold N]
+                            [--breaker-cooldown-ms MS] [--hedge-ms MS]
+                            [--resilient K] [--solver bucketed|net-simplex]
                             [--out metrics.json]
   repro-all                 regenerate every table and figure [--out DIR]
 
@@ -700,7 +710,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                 })
         })
         .transpose()?;
-    let carbon = if args.flag("carbon") {
+    let carbon = if args.flag("carbon") || args.opt("carbon-trace").is_some() {
         let (zeta_min, zeta_max) = match args.opt("carbon-band") {
             Some(band) => {
                 let parse = |s: &str| {
@@ -730,6 +740,18 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             anyhow::bail!("--carbon-day-s must be finite and > 0, got {day_s}");
         }
         let mut carbon = CarbonConfig::typical(zeta_min, zeta_max);
+        // A real grid-intensity trace replaces the stylized diurnal
+        // curve; implies --carbon. CSV (`hour,gco2_per_kwh`) or JSONL by
+        // file extension.
+        if let Some(path) = args.opt("carbon-trace") {
+            let text = std::fs::read_to_string(Path::new(path))
+                .map_err(|e| anyhow::anyhow!("cannot read grid trace {path}: {e}"))?;
+            carbon.signal = if path.ends_with(".jsonl") {
+                GridSignal::from_jsonl(&text)?
+            } else {
+                GridSignal::from_csv(&text)?
+            };
+        }
         carbon.day_s = day_s;
         Some(carbon)
     } else {
@@ -773,9 +795,112 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         .map(|path| {
             let text = std::fs::read_to_string(Path::new(path))
                 .map_err(|e| anyhow::anyhow!("cannot read failure script {path}: {e}"))?;
-            FailureScript::from_jsonl(&text)
+            FailureScript::from_jsonl_with_fleet(&text, replica_counts.as_deref())
         })
         .transpose()?;
+
+    // Stochastic outage ensembles: a hazard process (instead of a fixed
+    // script) draws one failure schedule per replicate seed, shared by
+    // every compared policy at that seed.
+    let hazard = args
+        .opt("hazard")
+        .map(|spec| -> anyhow::Result<Hazard> {
+            let mut h = Hazard::parse(spec)?;
+            if let Some(s) = args.opt("hazard-warmup") {
+                let warmup_s: f64 = s.parse().map_err(|_| {
+                    anyhow::anyhow!("--hazard-warmup expects seconds, got '{s}'")
+                })?;
+                h = h.with_warmup(warmup_s)?;
+            }
+            if let Some(path) = args.opt("spot-trace") {
+                let text = std::fs::read_to_string(Path::new(path))
+                    .map_err(|e| anyhow::anyhow!("cannot read price trace {path}: {e}"))?;
+                h = h.with_price_trace(load_price_trace(&text)?);
+            }
+            Ok(h)
+        })
+        .transpose()?;
+    let hazard_seed = args.opt_u64("hazard-seed", seed);
+
+    // Request-level survival: retry/backoff, circuit breaker, tail
+    // hedging. Armed (at defaults) whenever a hazard runs, or explicitly
+    // by any of its flags; absent, kills fall back to plain requeueing.
+    let any_resilience_flag = [
+        "retry-budget",
+        "retry-base-ms",
+        "retry-cap-ms",
+        "breaker-threshold",
+        "breaker-cooldown-ms",
+        "hedge-ms",
+    ]
+    .iter()
+    .any(|f| args.opt(f).is_some());
+    let resilience = if any_resilience_flag || hazard.is_some() {
+        let ms = |flag: &str, default_s: f64| -> anyhow::Result<f64> {
+            match args.opt(flag) {
+                None => Ok(default_s),
+                Some(s) => s
+                    .parse::<f64>()
+                    .ok()
+                    .filter(|ms| ms.is_finite() && *ms > 0.0)
+                    .map(|ms| ms / 1000.0)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("--{flag} expects positive milliseconds, got '{s}'")
+                    }),
+            }
+        };
+        let count = |flag: &str, default: u32| -> anyhow::Result<u32> {
+            match args.opt(flag) {
+                None => Ok(default),
+                Some(s) => s
+                    .parse::<u32>()
+                    .map_err(|_| anyhow::anyhow!("--{flag} expects a count, got '{s}'")),
+            }
+        };
+        let d = ResilienceConfig::default();
+        Some(ResilienceConfig {
+            retry_budget: count("retry-budget", d.retry_budget)?,
+            retry_base_s: ms("retry-base-ms", d.retry_base_s)?,
+            retry_cap_s: ms("retry-cap-ms", d.retry_cap_s)?,
+            breaker_threshold: count("breaker-threshold", d.breaker_threshold)?,
+            breaker_cooldown_s: ms("breaker-cooldown-ms", d.breaker_cooldown_s)?,
+            hedge_after_s: if args.opt("hedge-ms").is_some() {
+                Some(ms("hedge-ms", 0.0)?)
+            } else {
+                None
+            },
+        })
+    } else {
+        None
+    };
+
+    // N+k resilient plan: re-solve the simulated workload with failover
+    // headroom ([`PlanSession::plan_resilient`]) and hand the result to
+    // the `resilient` policy.
+    let resilient_k = args.opt_usize("resilient", 0);
+    let resilient_plan = if resilient_k > 0 {
+        let partition = Partition::paper_case_study();
+        partition.validate()?;
+        let solver = SolverKind::parse(&args.opt_or("solver", "bucketed"))?;
+        let mut session = Planner::new(sets)
+            .partition(&partition)
+            .capacity(capacity_mode_arg(args))
+            .zeta(zeta)
+            .solver(solver)
+            .seed(seed)
+            .session(&queries)?;
+        if let Some(counts) = &replica_counts {
+            session.set_replicas(counts)?;
+        }
+        let p = session.plan_resilient(resilient_k)?;
+        ecoserve::info!(
+            "N+{resilient_k} resilient plan solved (objective {:.6})",
+            p.objective
+        );
+        Some(p)
+    } else {
+        None
+    };
 
     let cfg = SimConfig {
         max_batch,
@@ -800,6 +925,10 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         control: Some(control),
         replicas: replica_counts.as_deref(),
         failures: failures.as_ref(),
+        hazard: hazard.as_ref(),
+        hazard_seed,
+        resilient_plan: resilient_plan.as_ref(),
+        resilience,
     };
     let arrivals_src = match &trace_arrivals {
         Some(times) => sim::Arrivals::Fixed(times),
@@ -812,9 +941,13 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         if plan.is_none() {
             ecoserve::info!("no --plan given: skipping the plan-following policy");
         }
+        if resilient_plan.is_none() {
+            ecoserve::info!("no --resilient K given: skipping the resilient policy");
+        }
         PolicyKind::all()
             .into_iter()
             .filter(|&k| k != PolicyKind::Plan || plan.is_some())
+            .filter(|&k| k != PolicyKind::Resilient || resilient_plan.is_some())
             .collect()
     } else {
         vec![PolicyKind::parse(&policy_arg)?]
@@ -878,6 +1011,18 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             println!(
                 "  replans {} ({} SLO-triggered) | planned routed {} | fallback {}",
                 rs.replans, rs.slo_replans, rs.planned_routed, rs.fallback_routed
+            );
+        }
+        if m.n_failed > 0 || m.n_retries > 0 || m.n_hedges > 0 || m.n_breaker_trips > 0 {
+            println!(
+                "  availability {:.1}% | goodput {:.1} q/s | failed {} | retries {} | \
+                 hedges {} | breaker trips {}",
+                100.0 * m.availability,
+                m.goodput_qps,
+                m.n_failed,
+                m.n_retries,
+                m.n_hedges,
+                m.n_breaker_trips
             );
         }
         if let Some(c) = &m.carbon {

@@ -61,6 +61,11 @@ pub struct PlanSession {
     zeta: f64,
     /// ζ the cost matrix is currently blended at
     costs_zeta: f64,
+    /// N+k failover headroom: when non-zero, [`caps`](PlanSession::caps)
+    /// derates every model's capacity so the survivors of any `headroom`
+    /// replica losses can absorb the model's whole assigned load. Only
+    /// non-zero inside [`plan_resilient`](PlanSession::plan_resilient).
+    headroom: usize,
     state: SolverState,
     last: Option<Assignment>,
     /// Last shape-level solution (sketch-fed sessions).
@@ -103,6 +108,7 @@ impl PlanSession {
             norm,
             zeta,
             costs_zeta: zeta,
+            headroom: 0,
             state: SolverState::default(),
             last: None,
             last_flows: None,
@@ -168,6 +174,7 @@ impl PlanSession {
             norm,
             zeta,
             costs_zeta: zeta,
+            headroom: 0,
             state: SolverState::default(),
             last: None,
             last_flows: None,
@@ -243,8 +250,31 @@ impl PlanSession {
     /// Per-column capacity bounds: the model-level bounds for uniform
     /// sessions, split evenly across each model's replicas otherwise
     /// (errors when a model's capacity cannot seat all its replicas).
+    ///
+    /// With N+k `headroom` set, each model's bound is derated to the share
+    /// its surviving replicas could still carry after `k` losses
+    /// (`cap · (c−k)/c`, floored at one query per replica column), so the
+    /// produced plan never loads a model beyond what a worst-case loss of
+    /// `k` of its replicas leaves serviceable.
     fn caps(&self) -> anyhow::Result<Vec<usize>> {
-        let model_caps = capacity_bounds(self.mode, &self.gammas, self.n_total);
+        let mut model_caps = capacity_bounds(self.mode, &self.gammas, self.n_total);
+        if self.headroom > 0 {
+            let k = self.headroom;
+            for (m, cap) in model_caps.iter_mut().enumerate() {
+                let c = self.replicas.count(m);
+                let derated = if c > k { (*cap * (c - k) / c).max(c) } else { c };
+                *cap = derated.min(*cap);
+            }
+            let total: usize = model_caps.iter().sum();
+            if total < self.n_total {
+                anyhow::bail!(
+                    "N+{k} headroom infeasible: derated capacities seat {total} of \
+                     {} queries; add replicas (every model needs more than {k}) or \
+                     lower the resilience level",
+                    self.n_total
+                );
+            }
+        }
         if self.replicas.is_uniform() {
             Ok(model_caps)
         } else {
@@ -598,7 +628,8 @@ impl PlanSession {
         } else {
             &self.xsets
         };
-        self.bp.costs = CostMatrix::build_for_shapes(sets, &self.norm, &self.bp.groups.shapes, self.zeta);
+        self.bp.costs =
+            CostMatrix::build_for_shapes(sets, &self.norm, &self.bp.groups.shapes, self.zeta);
         self.costs_zeta = self.zeta;
         self.state.invalidate();
         self.last = None;
@@ -735,5 +766,52 @@ impl PlanSession {
             &self.bp.groups,
             a,
         ))
+    }
+
+    /// Package an **N+k resilient** plan: like [`plan`](PlanSession::plan),
+    /// but the optimum is computed under derated capacities so no model
+    /// carries more load than the survivors of any `k` simultaneous
+    /// replica losses could absorb (see [`caps`](PlanSession::caps)).
+    ///
+    /// Before solving, every model with more than `k` replicas is *probed*
+    /// with the worst-case [`rescale`](PlanSession::rescale) delta — drop
+    /// `k` of its replicas, re-solve (warm where the backend supports
+    /// basis surgery), restore — so an un-survivable loss surfaces as a
+    /// planning-time error instead of a mid-outage replan failure. Models
+    /// with `k` or fewer replicas cannot survive the loss at all; the
+    /// derated capacities pin them to their one-query-per-replica floor so
+    /// the plan leans on fleets that can.
+    ///
+    /// `k = 0` is exactly [`plan`](PlanSession::plan). The session's
+    /// topology, ζ, and workload are left untouched; the temporary
+    /// headroom never leaks into later solves.
+    pub fn plan_resilient(&mut self, k: usize) -> anyhow::Result<Plan> {
+        if k == 0 {
+            return self.plan();
+        }
+        // Worst-case probes: each single-model loss of k replicas must
+        // remain solvable on its own.
+        for m in self.replicas.loss_candidates(k) {
+            let c = self.replicas.count(m);
+            let probe = self.rescale(m, c - k);
+            let restored = self.rescale(m, c);
+            if let Err(e) = probe {
+                anyhow::bail!(
+                    "N+{k} probe: losing {k} replica(s) of model {m} is not survivable: {e}"
+                );
+            }
+            restored?;
+        }
+        self.headroom = k;
+        self.state.invalidate();
+        self.last = None;
+        self.last_flows = None;
+        let plan = self.plan();
+        // Drop the derated optimum so later solves start clean.
+        self.headroom = 0;
+        self.state.invalidate();
+        self.last = None;
+        self.last_flows = None;
+        plan
     }
 }

@@ -212,7 +212,10 @@ pub trait Solver {
     /// re-capped. `keep[j]` is `Some(old_column)` when new column `j`
     /// survives from the previous instance, `None` when it is fresh.
     /// Backends with a warm-startable basis may pin the surviving
-    /// columns' arcs and resume pivoting; the default solves cold.
+    /// columns' arcs and resume pivoting; the default solves cold. This
+    /// is also the path the N+k worst-case probes of
+    /// [`PlanSession::plan_resilient`](crate::plan::PlanSession::plan_resilient)
+    /// exercise: drop `k` replicas, re-solve, restore.
     fn rescale(
         &self,
         p: &ProblemView<'_>,
@@ -311,6 +314,32 @@ impl Solver for BucketedSolver {
         let (flows, objective) = flow.shape_flows(p.bp);
         state.flow = Some(flow);
         Ok(ShapeSolution { flows, objective })
+    }
+
+    fn rescale(
+        &self,
+        p: &ProblemView<'_>,
+        keep: &[Option<usize>],
+        state: &mut SolverState,
+    ) -> anyhow::Result<Assignment> {
+        // The warm flow's arcs are indexed by the *old* column set, so
+        // column surgery always rebuilds here (N+k probes pay one cold
+        // build per model); the net-simplex backend instead pins the
+        // surviving columns' basis arcs and resumes pivoting.
+        let _ = keep;
+        state.invalidate();
+        self.solve(p, state)
+    }
+
+    fn rescale_shapes(
+        &self,
+        p: &ProblemView<'_>,
+        keep: &[Option<usize>],
+        state: &mut SolverState,
+    ) -> anyhow::Result<ShapeSolution> {
+        let _ = keep;
+        state.invalidate();
+        self.solve_shapes(p, state)
     }
 }
 

@@ -109,24 +109,35 @@ pub fn coefficients(sets: &[ModelSet]) -> Table {
 
 /// Per-node summary of one simulated serving run (`ecoserve simulate`).
 pub fn sim_summary(m: &SimMetrics) -> Table {
+    // Survival columns only appear on runs that exercised the failure
+    // machinery, so failure-free summaries stay byte-identical to v5's.
+    let with_survival = m.n_failed > 0
+        || m.n_retries > 0
+        || m.n_hedges > 0
+        || m.n_breaker_trips > 0
+        || m.nodes.iter().any(|nd| nd.downtime_s > 0.0);
+    let mut headers = vec![
+        "node",
+        "queries",
+        "iters",
+        "mean batch",
+        "energy (J)",
+        "prefill (J)",
+        "decode (J)",
+        "busy (s)",
+        "q/s",
+        "util",
+    ];
+    if with_survival {
+        headers.extend(["retries", "hedges", "trips", "down (s)"]);
+    }
     let mut t = Table::new(
         &format!(
             "Simulated serving: policy={} engine={} arrival={} seed={} \
              ({} queries, {} dropped)",
             m.policy, m.engine, m.arrival, m.seed, m.n_queries, m.n_dropped
         ),
-        &[
-            "node",
-            "queries",
-            "iters",
-            "mean batch",
-            "energy (J)",
-            "prefill (J)",
-            "decode (J)",
-            "busy (s)",
-            "q/s",
-            "util",
-        ],
+        &headers,
     );
     for nd in &m.nodes {
         let util = if m.makespan_s > 0.0 {
@@ -139,7 +150,7 @@ pub fn sim_summary(m: &SimMetrics) -> Table {
         } else {
             0.0
         };
-        t.row(vec![
+        let mut row = vec![
             nd.model_id.clone(),
             nd.queries.to_string(),
             nd.batches.to_string(),
@@ -150,7 +161,16 @@ pub fn sim_summary(m: &SimMetrics) -> Table {
             format!("{:.3}", nd.busy_s),
             si(qps, 1),
             format!("{:.1}%", 100.0 * util),
-        ]);
+        ];
+        if with_survival {
+            row.extend([
+                nd.retries.to_string(),
+                nd.hedges.to_string(),
+                nd.breaker_trips.to_string(),
+                format!("{:.3}", nd.downtime_s),
+            ]);
+        }
+        t.row(row);
     }
     t
 }
@@ -170,6 +190,12 @@ pub fn sim_comparison_replicated(grid: &[Vec<SimMetrics>]) -> Table {
     let with_carbon = grid
         .iter()
         .any(|runs| runs.iter().any(|m| m.carbon.is_some()));
+    // Availability/goodput columns appear once any replicate saw a
+    // failure or a retry — i.e. on hazard-ensemble comparisons — and stay
+    // hidden on failure-free runs where they would duplicate SLO att.
+    let with_survival = grid
+        .iter()
+        .any(|runs| runs.iter().any(|m| m.n_failed > 0 || m.n_retries > 0));
     let mut headers = vec!["policy", "energy (J)"];
     if with_carbon {
         headers.push("carbon (g)");
@@ -181,6 +207,9 @@ pub fn sim_comparison_replicated(grid: &[Vec<SimMetrics>]) -> Table {
         "SLO att.",
         "makespan (s)",
     ]);
+    if with_survival {
+        headers.extend(["avail.", "goodput (q/s)", "failed"]);
+    }
     let mut t = Table::new(
         &format!(
             "Policy comparison over {n_seeds} replicate arrival draws \
@@ -223,6 +252,13 @@ pub fn sim_comparison_replicated(grid: &[Vec<SimMetrics>]) -> Table {
             format!("{}%", pm(&series(|m| m.slo_attainment), 1, 100.0)),
             pm(&series(|m| m.makespan_s), 2, 1.0),
         ]);
+        if with_survival {
+            row.extend([
+                format!("{}%", pm(&series(|m| m.availability), 1, 100.0)),
+                pm(&series(|m| m.goodput_qps), 1, 1.0),
+                pm(&series(|m| m.n_failed as f64), 1, 1.0),
+            ]);
+        }
         t.row(row);
     }
     t
@@ -236,6 +272,7 @@ pub fn sim_comparison(rows: &[SimMetrics]) -> Table {
         .map(|m| m.arrival.clone())
         .unwrap_or_default();
     let with_carbon = rows.iter().any(|m| m.carbon.is_some());
+    let with_survival = rows.iter().any(|m| m.n_failed > 0 || m.n_retries > 0);
     let mut headers = vec!["policy", "energy (J)"];
     if with_carbon {
         headers.push("carbon (g)");
@@ -251,6 +288,9 @@ pub fn sim_comparison(rows: &[SimMetrics]) -> Table {
         "q/s",
         "util",
     ]);
+    if with_survival {
+        headers.extend(["avail.", "goodput (q/s)", "failed"]);
+    }
     let mut t = Table::new(
         &format!("Policy comparison on one seeded trace (arrival={arrival})"),
         &headers,
@@ -279,6 +319,13 @@ pub fn sim_comparison(rows: &[SimMetrics]) -> Table {
             si(qps, 1),
             format!("{:.1}%", 100.0 * m.mean_utilization()),
         ]);
+        if with_survival {
+            row.extend([
+                format!("{:.1}%", 100.0 * m.availability),
+                format!("{:.1}", m.goodput_qps),
+                m.n_failed.to_string(),
+            ]);
+        }
         t.row(row);
     }
     t
@@ -329,9 +376,12 @@ mod tests {
         let m = r.finish(
             "greedy".into(),
             "continuous".into(),
+            "none".into(),
             "poisson:10".into(),
             42,
             0.5,
+            0,
+            0,
             0,
             None,
             vec![NodeStats {
@@ -341,6 +391,7 @@ mod tests {
                 energy_j: 12.5,
                 prefill_j: 5.0,
                 busy_s: 0.5,
+                ..NodeStats::default()
             }],
         );
         let summary = sim_summary(&m).to_ascii();
@@ -371,10 +422,27 @@ mod tests {
         assert!(cmp.contains("carbon (g)"), "{cmp}");
         assert!(cmp.contains("1.25"), "{cmp}");
         let rep =
-            sim_comparison_replicated(&[vec![mc.clone(), mc.clone()], vec![m.clone(), m]])
+            sim_comparison_replicated(&[vec![mc.clone(), mc.clone()], vec![m.clone(), m.clone()]])
                 .to_ascii();
         assert!(rep.contains("carbon (g)"), "{rep}");
         // Unmetered rows render a dash under the carbon column.
         assert!(rep.contains('-'), "{rep}");
+        // Failure-free runs hide the survival columns entirely…
+        assert!(!summary.contains("down (s)"), "{summary}");
+        assert!(!cmp.contains("avail."), "{cmp}");
+        // …and runs that saw failures or retries grow them everywhere.
+        let mut mf = m;
+        mf.n_failed = 1;
+        mf.n_retries = 2;
+        mf.nodes[0].retries = 2;
+        let sf = sim_summary(&mf).to_ascii();
+        assert!(sf.contains("down (s)"), "{sf}");
+        assert!(sf.contains("retries"), "{sf}");
+        let cf = sim_comparison(std::slice::from_ref(&mf)).to_ascii();
+        assert!(cf.contains("avail."), "{cf}");
+        assert!(cf.contains("goodput (q/s)"), "{cf}");
+        let rf = sim_comparison_replicated(&[vec![mf.clone(), mf]]).to_ascii();
+        assert!(rf.contains("avail."), "{rf}");
+        assert!(rf.contains("failed"), "{rf}");
     }
 }

@@ -10,6 +10,14 @@
 //! grid; a [`ZetaController`] maps the instantaneous signal onto the
 //! operational ζ, so the offline-fitted models drive a carbon-aware
 //! schedule with no re-fitting.
+//!
+//! The stylized [`GridSignal::typical_day`] curve is the default; real
+//! measured traces load through [`GridSignal::from_csv`] /
+//! [`GridSignal::from_jsonl`] (`--carbon-trace FILE`) — one value per
+//! hour since trace start, wrapping over the trace length, so a 24-row
+//! file is a diurnal profile and a 168-row file a weekly one.
+
+use crate::util::Json;
 
 /// Time-varying grid signal (carbon intensity in gCO₂/kWh, or price).
 #[derive(Debug, Clone)]
@@ -32,6 +40,110 @@ impl GridSignal {
                 420.0, 460.0, 440.0, 380.0, 300.0, 240.0, // 18–23 evening peak
             ],
         }
+    }
+
+    /// Parse a measured grid-intensity trace in CSV form: an optional
+    /// `hour,gco2_per_kwh` header, then one `H,V` row per hour — `H` the
+    /// hour index since trace start (consecutive from 0), `V` the carbon
+    /// intensity in gCO₂/kWh. Errors name the line and the offending
+    /// field. Round-trips through [`GridSignal::to_csv`].
+    pub fn from_csv(text: &str) -> anyhow::Result<GridSignal> {
+        let mut hourly = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if hourly.is_empty() && line.starts_with("hour") {
+                continue; // header row
+            }
+            let (h, v) = line.split_once(',').ok_or_else(|| {
+                anyhow::anyhow!(
+                    "grid trace line {}: expected 'hour,gco2_per_kwh', got '{line}'",
+                    lineno + 1
+                )
+            })?;
+            let h: usize = h.trim().parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "grid trace line {}: 'hour' must be an integer, got '{}'",
+                    lineno + 1,
+                    h.trim()
+                )
+            })?;
+            if h != hourly.len() {
+                anyhow::bail!(
+                    "grid trace line {}: 'hour' must be consecutive from 0 \
+                     (expected {}, got {h})",
+                    lineno + 1,
+                    hourly.len()
+                );
+            }
+            let v: f64 = v.trim().parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "grid trace line {}: 'gco2_per_kwh' must be a number, got '{}'",
+                    lineno + 1,
+                    v.trim()
+                )
+            })?;
+            Self::check_intensity(lineno + 1, v)?;
+            hourly.push(v);
+        }
+        anyhow::ensure!(!hourly.is_empty(), "grid trace is empty");
+        Ok(GridSignal { hourly })
+    }
+
+    /// JSONL sibling of [`GridSignal::from_csv`]: one object per
+    /// non-empty line with numeric `hour` (consecutive from 0) and
+    /// `gco2_per_kwh`.
+    pub fn from_jsonl(text: &str) -> anyhow::Result<GridSignal> {
+        let mut hourly = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let v = Json::parse(line)
+                .map_err(|e| anyhow::anyhow!("grid trace line {}: {e}", lineno + 1))?;
+            let h = v.get("hour").as_f64().ok_or_else(|| {
+                anyhow::anyhow!("grid trace line {}: missing numeric 'hour'", lineno + 1)
+            })?;
+            if h.fract() != 0.0 || h < 0.0 || h as usize != hourly.len() {
+                anyhow::bail!(
+                    "grid trace line {}: 'hour' must be consecutive from 0 \
+                     (expected {}, got {h})",
+                    lineno + 1,
+                    hourly.len()
+                );
+            }
+            let g = v.get("gco2_per_kwh").as_f64().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "grid trace line {}: missing numeric 'gco2_per_kwh'",
+                    lineno + 1
+                )
+            })?;
+            Self::check_intensity(lineno + 1, g)?;
+            hourly.push(g);
+        }
+        anyhow::ensure!(!hourly.is_empty(), "grid trace is empty");
+        Ok(GridSignal { hourly })
+    }
+
+    fn check_intensity(lineno: usize, v: f64) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            v.is_finite() && v >= 0.0,
+            "grid trace line {lineno}: 'gco2_per_kwh' must be finite and >= 0, got {v}"
+        );
+        Ok(())
+    }
+
+    /// Serialize back to the CSV form [`GridSignal::from_csv`] reads
+    /// (round-trip property-tested).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("hour,gco2_per_kwh\n");
+        for (i, v) in self.hourly.iter().enumerate() {
+            out.push_str(&format!("{i},{v}\n"));
+        }
+        out
     }
 
     /// Signal at a given time (hours, fractional, wraps over days);
@@ -191,6 +303,52 @@ mod tests {
         for h in 0..24 {
             assert!((pinned.zeta_at(h as f64) - 0.6).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn csv_round_trips_the_stylized_curve() {
+        let day = GridSignal::typical_day();
+        let back = GridSignal::from_csv(&day.to_csv()).unwrap();
+        assert_eq!(back.hourly, day.hourly);
+        // And again: serialization is a fixed point.
+        assert_eq!(back.to_csv(), day.to_csv());
+    }
+
+    #[test]
+    fn csv_and_jsonl_agree_and_headers_are_optional() {
+        let csv = "hour,gco2_per_kwh\n0,210\n1,180.5\n2,90\n";
+        let bare = "0,210\n1,180.5\n2,90\n";
+        let jsonl = "{\"hour\": 0, \"gco2_per_kwh\": 210}\n\
+                     {\"hour\": 1, \"gco2_per_kwh\": 180.5}\n\
+                     {\"hour\": 2, \"gco2_per_kwh\": 90}\n";
+        let a = GridSignal::from_csv(csv).unwrap();
+        let b = GridSignal::from_csv(bare).unwrap();
+        let c = GridSignal::from_jsonl(jsonl).unwrap();
+        assert_eq!(a.hourly, vec![210.0, 180.5, 90.0]);
+        assert_eq!(a.hourly, b.hourly);
+        assert_eq!(a.hourly, c.hourly);
+        // A 3-hour trace wraps over its own length, not over 24.
+        assert_eq!(a.at(4.0), a.at(1.0));
+    }
+
+    #[test]
+    fn trace_loader_names_line_and_field() {
+        let err = GridSignal::from_csv("0,210\n2,200\n").unwrap_err().to_string();
+        assert_eq!(
+            err,
+            "grid trace line 2: 'hour' must be consecutive from 0 (expected 1, got 2)"
+        );
+        let err = GridSignal::from_csv("0,hot\n").unwrap_err().to_string();
+        assert_eq!(
+            err,
+            "grid trace line 1: 'gco2_per_kwh' must be a number, got 'hot'"
+        );
+        let err = GridSignal::from_csv("0,-5\n").unwrap_err().to_string();
+        assert!(err.contains("must be finite and >= 0"), "{err}");
+        let err = GridSignal::from_jsonl("{\"hour\": 0}\n").unwrap_err().to_string();
+        assert_eq!(err, "grid trace line 1: missing numeric 'gco2_per_kwh'");
+        assert!(GridSignal::from_csv("\n\n").is_err());
+        assert!(GridSignal::from_jsonl("").is_err());
     }
 
     #[test]

@@ -25,9 +25,10 @@
 
 use super::arrival::{ARRIVAL_SEED_SALT, ArrivalProcess};
 use super::failure::FailureScript;
+use super::hazard::Hazard;
 use super::metrics::SimMetrics;
 use super::policy::{PolicyKind, SimPolicy};
-use super::simulator::{Memo, SimConfig, Simulator};
+use super::simulator::{Memo, ResilienceConfig, SimConfig, Simulator};
 use crate::control::ControlConfig;
 use crate::models::{ModelSet, Normalizer};
 use crate::plan::Plan;
@@ -61,6 +62,26 @@ pub struct CompareSpec<'a> {
     /// under every (policy, seed) in the grid, so degradation under the
     /// *same* outage is attributable to the policy alone
     pub failures: Option<&'a FailureScript>,
+    /// failure-*process* ensemble mode (`--hazard`): replicate `i` draws
+    /// one outage script from the process under `hazard_seed + i` and
+    /// replays it under every policy at that seed — so across the
+    /// `--seeds N` grid each policy faces the same N outage draws, and
+    /// cross-seed CIs average over the process, not one lucky script.
+    /// Mutually exclusive with `failures`.
+    pub hazard: Option<&'a Hazard>,
+    /// base seed for hazard generation (`--hazard-seed`); deliberately
+    /// separate from `seed` so outage draws can be held fixed while
+    /// arrival draws vary, and vice versa
+    pub hazard_seed: u64,
+    /// required when the kinds include [`PolicyKind::Resilient`]: the
+    /// N+k plan ([`PlanSession::plan_resilient`]) that policy follows
+    ///
+    /// [`PlanSession::plan_resilient`]: crate::plan::PlanSession::plan_resilient
+    pub resilient_plan: Option<&'a Plan>,
+    /// request-level survival (`--retry-budget`/`--hedge-ms`/…): applied
+    /// to every policy in the grid, so availability deltas are
+    /// attributable to routing, not to one row retrying harder
+    pub resilience: Option<ResilienceConfig>,
 }
 
 /// Where a replicate's arrival timestamps come from.
@@ -97,6 +118,11 @@ pub fn compare_replicated(
 ) -> anyhow::Result<Vec<Vec<SimMetrics>>> {
     anyhow::ensure!(n_seeds >= 1, "need at least one replicate seed");
     anyhow::ensure!(!kinds.is_empty(), "need at least one policy to compare");
+    anyhow::ensure!(
+        spec.failures.is_none() || spec.hazard.is_none(),
+        "give either a fixed failure script (--failures) or a hazard process \
+         (--hazard), not both"
+    );
     let seeds: Vec<u64> = (0..n_seeds as u64)
         .map(|i| spec.seed.wrapping_add(i))
         .collect();
@@ -112,6 +138,28 @@ pub fn compare_replicated(
     let per_seed_times: Vec<&[f64]> = match &arrivals {
         Arrivals::Fixed(times) => vec![*times; n_seeds],
         Arrivals::Sampled(_) => sampled.iter().map(Vec::as_slice).collect(),
+    };
+
+    // Hazard-ensemble mode: one outage script per replicate seed, drawn
+    // before the fan-out and shared by every policy at that seed (the
+    // horizon covers the seed's whole arrival window, so the process can
+    // strike any arriving query).
+    let hazard_scripts: Vec<FailureScript> = match spec.hazard {
+        None => Vec::new(),
+        Some(h) => {
+            let counts: Vec<usize> = match spec.replicas {
+                Some(c) => c.to_vec(),
+                None => vec![1; spec.sets.len()],
+            };
+            per_seed_times
+                .iter()
+                .enumerate()
+                .map(|(si, times)| {
+                    let horizon_s = times.last().copied().unwrap_or(0.0) + 1.0;
+                    h.generate(&counts, horizon_s, spec.hazard_seed.wrapping_add(si as u64))
+                })
+                .collect::<anyhow::Result<_>>()?
+        }
     };
     // One shape memo for the whole grid: it depends only on (sets,
     // queries), so per-task rebuilding would repeat the O(|Q|) bucketing
@@ -137,12 +185,19 @@ pub fn compare_replicated(
                 }
                 let (ki, si) = (i / n_seeds, i % n_seeds);
                 let seed = seeds[si];
+                // The resilient policy follows its own N+k plan; every
+                // other plan-follower uses the static one.
+                let plan = if kinds[ki] == PolicyKind::Resilient {
+                    spec.resilient_plan
+                } else {
+                    spec.plan
+                };
                 let run = SimPolicy::new(
                     kinds[ki],
                     spec.sets,
                     spec.norm,
                     spec.zeta,
-                    spec.plan,
+                    plan,
                     seed,
                     spec.control.as_ref(),
                 )
@@ -152,8 +207,16 @@ pub fn compare_replicated(
                     if let Some(counts) = spec.replicas {
                         sim = sim.with_replicas(counts)?;
                     }
-                    if let Some(script) = spec.failures {
+                    let script = if spec.hazard.is_some() {
+                        Some(&hazard_scripts[si])
+                    } else {
+                        spec.failures
+                    };
+                    if let Some(script) = script {
                         sim = sim.with_failures(script);
+                    }
+                    if let Some(rc) = spec.resilience {
+                        sim = sim.with_resilience(rc)?;
                     }
                     if let Some(carbon) =
                         spec.control.as_ref().and_then(|c| c.carbon.as_ref())
@@ -192,7 +255,7 @@ pub fn compare_replicated(
 pub fn comparison_to_json(rows: &[SimMetrics]) -> Json {
     Json::obj(vec![
         ("format", Json::str("ecoserve.sim-comparison")),
-        ("version", Json::num(5.0)),
+        ("version", Json::num(6.0)),
         (
             "policies",
             Json::arr(rows.iter().map(|m| m.to_json())),
@@ -210,7 +273,7 @@ pub fn replicated_to_json(grid: &[Vec<SimMetrics>]) -> Json {
         .unwrap_or_default();
     Json::obj(vec![
         ("format", Json::str("ecoserve.sim-comparison")),
-        ("version", Json::num(5.0)),
+        ("version", Json::num(6.0)),
         ("seeds", Json::Arr(seeds)),
         (
             "policies",
@@ -243,6 +306,8 @@ pub fn replicated_to_json(grid: &[Vec<SimMetrics>]) -> Json {
                         ("p95_ttft_s", stat(&series(|m| m.p95_ttft_s))),
                         ("p95_tpot_s", stat(&series(|m| m.p95_tpot_s))),
                         ("slo_attainment", stat(&series(|m| m.slo_attainment))),
+                        ("availability", stat(&series(|m| m.availability))),
+                        ("goodput_qps", stat(&series(|m| m.goodput_qps))),
                         ("makespan_s", stat(&series(|m| m.makespan_s))),
                     ];
                     // Realized carbon, when every replicate was metered
@@ -299,6 +364,10 @@ mod tests {
             control: None,
             replicas: None,
             failures: None,
+            hazard: None,
+            hazard_seed: 0,
+            resilient_plan: None,
+            resilience: None,
         };
         let kinds = [
             PolicyKind::Greedy,
@@ -341,6 +410,10 @@ mod tests {
             control: None,
             replicas: None,
             failures: None,
+            hazard: None,
+            hazard_seed: 0,
+            resilient_plan: None,
+            resilience: None,
         };
         let kinds = [PolicyKind::Greedy, PolicyKind::RoundRobin];
         let grid = compare_replicated(
@@ -397,6 +470,10 @@ mod tests {
                 control: None,
                 replicas: None,
                 failures: None,
+                hazard: None,
+                hazard_seed: 0,
+                resilient_plan: None,
+                resilience: None,
             };
             let grid = compare_replicated(
                 &spec,
@@ -426,10 +503,16 @@ mod tests {
             control: None,
             replicas: None,
             failures: None,
+            hazard: None,
+            hazard_seed: 0,
+            resilient_plan: None,
+            resilience: None,
         };
         assert!(compare(&spec, &queries, &[0.0], &[PolicyKind::Plan]).is_err());
-        // Replan likewise refuses to run without a control configuration.
+        // Replan likewise refuses to run without a control configuration,
+        // and resilient without its N+k plan.
         assert!(compare(&spec, &queries, &[0.0], &[PolicyKind::Replan]).is_err());
+        assert!(compare(&spec, &queries, &[0.0], &[PolicyKind::Resilient]).is_err());
     }
 
     #[test]
@@ -463,6 +546,10 @@ mod tests {
                 control: None,
                 replicas: Some(&replicas),
                 failures: Some(&script),
+                hazard: None,
+                hazard_seed: 0,
+                resilient_plan: None,
+                resilience: None,
             };
             compare(
                 &spec,
@@ -513,6 +600,10 @@ mod tests {
             control: Some(control),
             replicas: None,
             failures: None,
+            hazard: None,
+            hazard_seed: 0,
+            resilient_plan: None,
+            resilience: None,
         };
         let kinds = [PolicyKind::Replan, PolicyKind::Greedy];
         let grid = compare_replicated(
@@ -535,6 +626,105 @@ mod tests {
         assert!(grid[1].iter().all(|m| m.replan_stats.is_none()));
         let json = replicated_to_json(&grid).to_string_pretty();
         assert!(json.contains("\"total_carbon_g\""), "{json}");
-        assert!(json.contains("\"version\": 5"), "{json}");
+        assert!(json.contains("\"version\": 6"), "{json}");
+    }
+
+    #[test]
+    fn hazard_ensemble_is_byte_stable_and_shared_across_policies() {
+        let s = sets();
+        let queries: Vec<Query> = (0..50)
+            .map(|i| Query {
+                id: i,
+                t_in: 1 + 13 * (i % 5),
+                t_out: 1 + 11 * (i % 4),
+            })
+            .collect();
+        let hazard = Hazard::parse("mtbf:0.4:0.1").unwrap();
+        let replicas = [2usize, 2, 1];
+        let run = || {
+            let spec = CompareSpec {
+                sets: &s,
+                norm: Normalizer::from_workload(&s, &queries),
+                zeta: 0.5,
+                plan: None,
+                seed: 21,
+                cfg: SimConfig::default(),
+                arrival_label: "poisson:30".to_string(),
+                control: None,
+                replicas: Some(&replicas),
+                failures: None,
+                hazard: Some(&hazard),
+                hazard_seed: 77,
+                resilient_plan: None,
+                resilience: Some(ResilienceConfig::default()),
+            };
+            compare_replicated(
+                &spec,
+                &queries,
+                Arrivals::Sampled(ArrivalProcess::Poisson { rate: 30.0 }),
+                &[PolicyKind::Greedy, PolicyKind::RoundRobin],
+                3,
+            )
+            .unwrap()
+        };
+        let grid = run();
+        // Byte-identical under replay — the ensemble is a pure function
+        // of (hazard, fleet, seeds).
+        assert_eq!(
+            replicated_to_json(&grid).to_string_pretty(),
+            replicated_to_json(&run()).to_string_pretty()
+        );
+        for runs in &grid {
+            for m in runs {
+                // Every run carries the hazard spelling as its scenario
+                // and conserves the workload across retries/failures.
+                assert_eq!(m.scenario, "mtbf:0.4:0.1");
+                assert_eq!(m.n_queries + m.n_failed, 50);
+                assert!(m.availability > 0.0 && m.availability <= 1.0);
+            }
+        }
+        // The two policies at one seed face the same outage draw, and
+        // different seeds draw different scripts: downtime is a property
+        // of the script alone, so it matches across policies per seed.
+        for si in 0..3 {
+            let downtime = |m: &SimMetrics| -> f64 {
+                m.nodes.iter().map(|n| n.downtime_s).sum()
+            };
+            assert!((downtime(&grid[0][si]) - downtime(&grid[1][si])).abs() < 1e-9);
+        }
+        let json = replicated_to_json(&grid).to_string_pretty();
+        assert!(json.contains("\"availability\""), "{json}");
+        assert!(json.contains("\"goodput_qps\""), "{json}");
+    }
+
+    #[test]
+    fn hazard_and_fixed_failures_are_mutually_exclusive() {
+        let s = sets();
+        let queries = vec![Query { id: 0, t_in: 5, t_out: 5 }];
+        let hazard = Hazard::parse("mtbf:10:1").unwrap();
+        let script = FailureScript::from_jsonl(
+            r#"{"t": 0.5, "model": 0, "replica": 0, "kind": "drain"}"#,
+        )
+        .unwrap();
+        let spec = CompareSpec {
+            sets: &s,
+            norm: Normalizer::from_workload(&s, &queries),
+            zeta: 0.5,
+            plan: None,
+            seed: 1,
+            cfg: SimConfig::default(),
+            arrival_label: "trace".to_string(),
+            control: None,
+            replicas: None,
+            failures: Some(&script),
+            hazard: Some(&hazard),
+            hazard_seed: 0,
+            resilient_plan: None,
+            resilience: None,
+        };
+        let err = compare(&spec, &queries, &[0.0], &[PolicyKind::Greedy])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("not both"), "{err}");
     }
 }

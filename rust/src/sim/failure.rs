@@ -72,6 +72,9 @@ pub struct FailureEvent {
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct FailureScript {
     events: Vec<FailureEvent>,
+    /// scenario-label override (hazard generators stamp their spec here
+    /// so the artifact records `mtbf:600:60` instead of `chaos:N`)
+    label: Option<String>,
 }
 
 impl FailureScript {
@@ -94,15 +97,42 @@ impl FailureScript {
             }
         }
         events.sort_by(|a, b| a.t_s.partial_cmp(&b.t_s).unwrap());
-        Ok(FailureScript { events })
+        Ok(FailureScript {
+            events,
+            label: None,
+        })
+    }
+
+    /// Override the scenario label recorded in the metrics artifact.
+    /// Hazard generators ([`crate::sim::Hazard`]) stamp their spec here.
+    pub fn with_label(mut self, label: impl Into<String>) -> FailureScript {
+        self.label = Some(label.into());
+        self
     }
 
     /// Parse the JSONL form (`--failures FILE`): one object per
     /// non-empty line with keys `t`, `model`, `replica`, `kind`
     /// (`kill|drain|join`) and, for joins, an optional `warmup`
-    /// (seconds, default 0).
+    /// (seconds, default 0). Authored timestamps must be non-decreasing
+    /// — a script is a log of what happens, and an out-of-order line is
+    /// almost always a typo'd time.
     pub fn from_jsonl(text: &str) -> anyhow::Result<FailureScript> {
+        FailureScript::from_jsonl_with_fleet(text, None)
+    }
+
+    /// [`from_jsonl`](FailureScript::from_jsonl) with replica-range
+    /// checking against the initial per-model fleet `counts`: kills and
+    /// drains must target an existing replica index, and a join may
+    /// revive a known index or append exactly the next fresh one (the
+    /// fleet it grows is tracked line by line). Every rejection names
+    /// the offending line and field.
+    pub fn from_jsonl_with_fleet(
+        text: &str,
+        counts: Option<&[usize]>,
+    ) -> anyhow::Result<FailureScript> {
         let mut events = Vec::new();
+        let mut fleet: Option<Vec<usize>> = counts.map(|c| c.to_vec());
+        let mut last: Option<(usize, f64)> = None;
         for (lineno, line) in text.lines().enumerate() {
             let line = line.trim();
             if line.is_empty() {
@@ -114,6 +144,17 @@ impl FailureScript {
             let t_s = v.get("t").as_f64().ok_or_else(|| {
                 anyhow::anyhow!("failure script line {}: missing numeric 't'", lineno + 1)
             })?;
+            if let Some((prev_line, prev_t)) = last {
+                if t_s < prev_t {
+                    anyhow::bail!(
+                        "failure script line {}: non-monotone 't' {t_s} \
+                         (line {prev_line} was {prev_t}; events must be authored \
+                         in time order)",
+                        lineno + 1
+                    );
+                }
+            }
+            last = Some((lineno + 1, t_s));
             let model = v.get("model").as_usize().ok_or_else(|| {
                 anyhow::anyhow!("failure script line {}: missing integer 'model'", lineno + 1)
             })?;
@@ -143,6 +184,41 @@ impl FailureScript {
                     other
                 ),
             };
+            if let Some(fleet) = fleet.as_mut() {
+                if model >= fleet.len() {
+                    anyhow::bail!(
+                        "failure script line {}: 'model' {model} out of range \
+                         ({} hosted models)",
+                        lineno + 1,
+                        fleet.len()
+                    );
+                }
+                match kind {
+                    FailureKind::Kill | FailureKind::Drain => {
+                        if replica >= fleet[model] {
+                            anyhow::bail!(
+                                "failure script line {}: 'replica' {replica} out of range \
+                                 (model {model} has {} replicas at t={t_s})",
+                                lineno + 1,
+                                fleet[model]
+                            );
+                        }
+                    }
+                    FailureKind::Join { .. } => {
+                        if replica > fleet[model] {
+                            anyhow::bail!(
+                                "failure script line {}: 'replica' {replica} skips ahead \
+                                 (model {model}'s next fresh index at t={t_s} is {})",
+                                lineno + 1,
+                                fleet[model]
+                            );
+                        }
+                        if replica == fleet[model] {
+                            fleet[model] += 1;
+                        }
+                    }
+                }
+            }
             events.push(FailureEvent {
                 t_s,
                 model,
@@ -165,10 +241,14 @@ impl FailureScript {
         self.events.len()
     }
 
-    /// Scenario label recorded in the metrics artifact (`chaos:N` for N
-    /// scripted events; runs without a script record `none`).
+    /// Scenario label recorded in the metrics artifact: the override
+    /// stamped by [`with_label`](FailureScript::with_label) (hazard
+    /// generators record their spec), else `chaos:N` for N scripted
+    /// events; runs without a script record `none`.
     pub fn label(&self) -> String {
-        format!("chaos:{}", self.events.len())
+        self.label
+            .clone()
+            .unwrap_or_else(|| format!("chaos:{}", self.events.len()))
     }
 }
 
@@ -177,20 +257,117 @@ mod tests {
     use super::*;
 
     #[test]
-    fn jsonl_roundtrip_and_sorting() {
+    fn jsonl_roundtrip() {
         let text = r#"
-            {"t": 3.0, "model": 0, "replica": 1, "kind": "join", "warmup": 0.5}
             {"t": 1.5, "model": 0, "replica": 1, "kind": "kill"}
             {"t": 2.0, "model": 1, "replica": 0, "kind": "drain"}
+            {"t": 3.0, "model": 0, "replica": 1, "kind": "join", "warmup": 0.5}
         "#;
         let s = FailureScript::from_jsonl(text).unwrap();
         assert_eq!(s.len(), 3);
         assert_eq!(s.label(), "chaos:3");
-        // Time-sorted regardless of authored order.
         assert_eq!(s.events()[0].t_s, 1.5);
         assert_eq!(s.events()[0].kind, FailureKind::Kill);
         assert_eq!(s.events()[1].kind, FailureKind::Drain);
         assert_eq!(s.events()[2].kind, FailureKind::Join { warmup_s: 0.5 });
+    }
+
+    #[test]
+    fn programmatic_events_are_time_sorted() {
+        // `new` (the hazard generators' entry point) still sorts; only
+        // the authored JSONL form demands time order up front.
+        let s = FailureScript::new(vec![
+            FailureEvent {
+                t_s: 3.0,
+                model: 0,
+                replica: 1,
+                kind: FailureKind::Join { warmup_s: 0.5 },
+            },
+            FailureEvent {
+                t_s: 1.5,
+                model: 0,
+                replica: 1,
+                kind: FailureKind::Kill,
+            },
+        ])
+        .unwrap();
+        assert_eq!(s.events()[0].t_s, 1.5);
+        assert_eq!(s.events()[1].t_s, 3.0);
+    }
+
+    #[test]
+    fn jsonl_rejects_non_monotone_timestamps() {
+        let text = r#"
+            {"t": 3.0, "model": 0, "replica": 1, "kind": "join", "warmup": 0.5}
+            {"t": 1.5, "model": 0, "replica": 1, "kind": "kill"}
+        "#;
+        let err = FailureScript::from_jsonl(text).unwrap_err().to_string();
+        assert_eq!(
+            err,
+            "failure script line 3: non-monotone 't' 1.5 (line 2 was 3; \
+             events must be authored in time order)"
+        );
+    }
+
+    #[test]
+    fn jsonl_fleet_checking_names_line_and_field() {
+        let counts = [2usize, 1];
+        // Kill of a replica the model never had.
+        let err = FailureScript::from_jsonl_with_fleet(
+            r#"{"t": 1.0, "model": 1, "replica": 1, "kind": "kill"}"#,
+            Some(&counts),
+        )
+        .unwrap_err()
+        .to_string();
+        assert_eq!(
+            err,
+            "failure script line 1: 'replica' 1 out of range \
+             (model 1 has 1 replicas at t=1)"
+        );
+        // Model index past the hosted set.
+        let err = FailureScript::from_jsonl_with_fleet(
+            r#"{"t": 1.0, "model": 2, "replica": 0, "kind": "drain"}"#,
+            Some(&counts),
+        )
+        .unwrap_err()
+        .to_string();
+        assert_eq!(
+            err,
+            "failure script line 1: 'model' 2 out of range (2 hosted models)"
+        );
+        // Join skipping past the next fresh index.
+        let err = FailureScript::from_jsonl_with_fleet(
+            r#"{"t": 1.0, "model": 0, "replica": 3, "kind": "join"}"#,
+            Some(&counts),
+        )
+        .unwrap_err()
+        .to_string();
+        assert_eq!(
+            err,
+            "failure script line 1: 'replica' 3 skips ahead \
+             (model 0's next fresh index at t=1 is 2)"
+        );
+        // A join grows the tracked fleet, so later events may target it.
+        let ok = FailureScript::from_jsonl_with_fleet(
+            "{\"t\": 1.0, \"model\": 1, \"replica\": 1, \"kind\": \"join\"}\n\
+             {\"t\": 2.0, \"model\": 1, \"replica\": 1, \"kind\": \"kill\"}\n",
+            Some(&counts),
+        )
+        .unwrap();
+        assert_eq!(ok.len(), 2);
+    }
+
+    #[test]
+    fn label_override_survives_for_hazard_scenarios() {
+        let s = FailureScript::new(vec![FailureEvent {
+            t_s: 0.5,
+            model: 0,
+            replica: 0,
+            kind: FailureKind::Kill,
+        }])
+        .unwrap()
+        .with_label("mtbf:600:60");
+        assert_eq!(s.label(), "mtbf:600:60");
     }
 
     #[test]

@@ -1,0 +1,593 @@
+//! Stochastic failure-process generators: seeded hazards lowered into
+//! the deterministic [`FailureScript`] event stream.
+//!
+//! PR 9's scripts are hand-authored; real outage studies need *ensembles*
+//! — many independent draws of the same failure process over the same
+//! workload. A [`Hazard`] is a parametric process (`--hazard SPEC`) that,
+//! given the initial replica fleet, a horizon, and a seed, generates one
+//! concrete kill/join script. Because the output is an ordinary
+//! `FailureScript`, everything downstream — both engines, the requeue and
+//! parked-work machinery, byte-stable artifacts — is reused unchanged,
+//! and the same `(hazard, fleet, horizon, seed)` tuple always generates
+//! the same script.
+//!
+//! Four processes:
+//!
+//! * **`mtbf:MTBF:MTTR`** — per-replica alternating renewal with
+//!   exponential uptimes (mean MTBF seconds) and exponential repair
+//!   times (mean MTTR): the classic constant-hazard Poisson breakage
+//!   model.
+//! * **`weibull:SHAPE:SCALE:MTTR`** — Weibull(k, λ) uptimes. `SHAPE > 1`
+//!   models wear-out (a replica that has been up longer is more likely
+//!   to fail), `SHAPE < 1` infant mortality; repairs stay exponential.
+//! * **`group:MTBF:MTTR:SIZE`** — correlated failures: the flat
+//!   model-major replica list is partitioned into consecutive groups of
+//!   `SIZE` (racks sharing a PSU/ToR), and one exponential process per
+//!   group kills and revives every member at the same instant.
+//! * **`spot:LO:HI`** — spot preemption: each replica draws a bid
+//!   uniformly in `[LO, HI)` and replays a JSONL price trace
+//!   ([`Hazard::with_price_trace`], `--spot-trace`); the replica is
+//!   reclaimed when the price first exceeds its bid and re-joins when it
+//!   falls back below.
+//!
+//! Every kill is paired with the join that repairs it (repairs may land
+//! past the horizon — the simulator keeps draining scripted events after
+//! the last arrival), so generated scripts can never strand parked work:
+//! even a draw that downs a model's whole fleet eventually revives it.
+
+use crate::sim::failure::{FailureEvent, FailureKind, FailureScript};
+use crate::util::{Json, Rng};
+
+/// Seed salt for hazard generation: ensemble member `i` draws its outage
+/// script from `Rng::new(hazard_seed.wrapping_add(i) ^ HAZARD_SEED_SALT)`,
+/// so outage randomness never collides with arrival randomness
+/// ([`ARRIVAL_SEED_SALT`](crate::sim::ARRIVAL_SEED_SALT)) or policy
+/// randomness derived from the same seed.
+pub const HAZARD_SEED_SALT: u64 = 0xFA11_0E7E;
+
+/// One point of a spot-market price trace (`--spot-trace FILE`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PricePoint {
+    /// virtual time of the quote, seconds
+    pub t_s: f64,
+    /// market price in arbitrary units (compared against replica bids)
+    pub price: f64,
+}
+
+/// The parametric failure process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum HazardKind {
+    /// exponential uptimes (mean `mtbf_s`) and repairs (mean `mttr_s`)
+    /// per replica. CLI: `mtbf:MTBF:MTTR`.
+    Mtbf { mtbf_s: f64, mttr_s: f64 },
+    /// Weibull(shape, scale) uptimes, exponential repairs.
+    /// CLI: `weibull:SHAPE:SCALE:MTTR`.
+    Weibull {
+        shape: f64,
+        scale_s: f64,
+        mttr_s: f64,
+    },
+    /// one exponential process per consecutive group of `group` replicas
+    /// (model-major); a draw downs the whole group at once.
+    /// CLI: `group:MTBF:MTTR:SIZE`.
+    Group {
+        mtbf_s: f64,
+        mttr_s: f64,
+        group: usize,
+    },
+    /// spot preemption against a price trace; per-replica bids drawn
+    /// uniformly in `[bid_lo, bid_hi)`. CLI: `spot:LO:HI`.
+    Spot { bid_lo: f64, bid_hi: f64 },
+}
+
+/// A seeded failure-process generator (`--hazard SPEC`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hazard {
+    pub kind: HazardKind,
+    /// warm-up attached to every generated join, seconds
+    /// (`--hazard-warmup`)
+    pub warmup_s: f64,
+    /// price trace for [`HazardKind::Spot`] (`--spot-trace`)
+    pub price_trace: Vec<PricePoint>,
+}
+
+impl Hazard {
+    /// Parse the CLI spelling
+    /// (`mtbf:MTBF:MTTR | weibull:SHAPE:SCALE:MTTR | group:MTBF:MTTR:SIZE
+    /// | spot:LO:HI`).
+    pub fn parse(s: &str) -> anyhow::Result<Hazard> {
+        let mut parts = s.split(':');
+        let head = parts.next().unwrap_or_default();
+        let nums: Vec<&str> = parts.collect();
+        let num = |i: usize, what: &str| -> anyhow::Result<f64> {
+            let raw = nums
+                .get(i)
+                .ok_or_else(|| anyhow::anyhow!("hazard '{s}': missing {what}"))?;
+            let x: f64 = raw
+                .parse()
+                .map_err(|_| anyhow::anyhow!("hazard '{s}': {what} must be a number"))?;
+            if !x.is_finite() || x <= 0.0 {
+                anyhow::bail!("hazard '{s}': {what} must be positive, got {raw}");
+            }
+            Ok(x)
+        };
+        let kind = match head {
+            "mtbf" => {
+                if nums.len() != 2 {
+                    anyhow::bail!("hazard '{s}': expected mtbf:MTBF:MTTR (seconds)");
+                }
+                HazardKind::Mtbf {
+                    mtbf_s: num(0, "MTBF")?,
+                    mttr_s: num(1, "MTTR")?,
+                }
+            }
+            "weibull" => {
+                if nums.len() != 3 {
+                    anyhow::bail!("hazard '{s}': expected weibull:SHAPE:SCALE:MTTR");
+                }
+                HazardKind::Weibull {
+                    shape: num(0, "SHAPE")?,
+                    scale_s: num(1, "SCALE")?,
+                    mttr_s: num(2, "MTTR")?,
+                }
+            }
+            "group" => {
+                if nums.len() != 3 {
+                    anyhow::bail!("hazard '{s}': expected group:MTBF:MTTR:SIZE");
+                }
+                let size = num(2, "SIZE")?;
+                if size.fract() != 0.0 {
+                    anyhow::bail!("hazard '{s}': SIZE must be an integer, got {size}");
+                }
+                HazardKind::Group {
+                    mtbf_s: num(0, "MTBF")?,
+                    mttr_s: num(1, "MTTR")?,
+                    group: size as usize,
+                }
+            }
+            "spot" => {
+                if nums.len() != 2 {
+                    anyhow::bail!("hazard '{s}': expected spot:LO:HI (bid range)");
+                }
+                let lo = num(0, "LO")?;
+                let hi = num(1, "HI")?;
+                if lo >= hi {
+                    anyhow::bail!("hazard '{s}': bid range needs LO < HI, got [{lo}, {hi})");
+                }
+                HazardKind::Spot {
+                    bid_lo: lo,
+                    bid_hi: hi,
+                }
+            }
+            other => anyhow::bail!(
+                "unknown hazard '{other}' (expected mtbf:MTBF:MTTR|\
+                 weibull:SHAPE:SCALE:MTTR|group:MTBF:MTTR:SIZE|spot:LO:HI)"
+            ),
+        };
+        Ok(Hazard {
+            kind,
+            warmup_s: 0.0,
+            price_trace: Vec::new(),
+        })
+    }
+
+    /// Stable textual name — the CLI spelling back, recorded as the
+    /// scenario label of every generated script.
+    pub fn label(&self) -> String {
+        match self.kind {
+            HazardKind::Mtbf { mtbf_s, mttr_s } => format!("mtbf:{mtbf_s}:{mttr_s}"),
+            HazardKind::Weibull {
+                shape,
+                scale_s,
+                mttr_s,
+            } => format!("weibull:{shape}:{scale_s}:{mttr_s}"),
+            HazardKind::Group {
+                mtbf_s,
+                mttr_s,
+                group,
+            } => format!("group:{mtbf_s}:{mttr_s}:{group}"),
+            HazardKind::Spot { bid_lo, bid_hi } => format!("spot:{bid_lo}:{bid_hi}"),
+        }
+    }
+
+    /// Attach a warm-up (seconds) to every generated join.
+    pub fn with_warmup(mut self, warmup_s: f64) -> anyhow::Result<Hazard> {
+        if !warmup_s.is_finite() || warmup_s < 0.0 {
+            anyhow::bail!("hazard warmup must be finite and >= 0, got {warmup_s}");
+        }
+        self.warmup_s = warmup_s;
+        Ok(self)
+    }
+
+    /// Attach the price trace a [`HazardKind::Spot`] hazard replays.
+    pub fn with_price_trace(mut self, trace: Vec<PricePoint>) -> Hazard {
+        self.price_trace = trace;
+        self
+    }
+
+    /// Generate one concrete outage script for the initial per-model
+    /// fleet `counts` over `[0, horizon_s)`. Kills are capped at the
+    /// horizon; the join repairing a kill may land past it (the
+    /// simulator drains scripted events to the end, which is what
+    /// guarantees parked work always flushes). Deterministic in every
+    /// argument.
+    pub fn generate(
+        &self,
+        counts: &[usize],
+        horizon_s: f64,
+        seed: u64,
+    ) -> anyhow::Result<FailureScript> {
+        if !horizon_s.is_finite() || horizon_s <= 0.0 {
+            anyhow::bail!("hazard horizon must be positive and finite, got {horizon_s}");
+        }
+        let mut rng = Rng::new(seed ^ HAZARD_SEED_SALT);
+        let mut events = Vec::new();
+        // Flat model-major replica list: (model, replica) per seat.
+        let seats: Vec<(usize, usize)> = counts
+            .iter()
+            .enumerate()
+            .flat_map(|(k, &c)| (0..c).map(move |r| (k, r)))
+            .collect();
+        match self.kind {
+            HazardKind::Mtbf { mtbf_s, mttr_s } => {
+                for (i, &(k, r)) in seats.iter().enumerate() {
+                    let mut sr = rng.fork(i as u64 + 1);
+                    self.renewal(
+                        &mut events,
+                        &mut sr,
+                        horizon_s,
+                        &[(k, r)],
+                        |g| g.exponential(1.0 / mtbf_s),
+                        mttr_s,
+                    );
+                }
+            }
+            HazardKind::Weibull {
+                shape,
+                scale_s,
+                mttr_s,
+            } => {
+                for (i, &(k, r)) in seats.iter().enumerate() {
+                    let mut sr = rng.fork(i as u64 + 1);
+                    self.renewal(
+                        &mut events,
+                        &mut sr,
+                        horizon_s,
+                        &[(k, r)],
+                        |g| g.weibull(shape, scale_s),
+                        mttr_s,
+                    );
+                }
+            }
+            HazardKind::Group {
+                mtbf_s,
+                mttr_s,
+                group,
+            } => {
+                if group == 0 {
+                    anyhow::bail!("hazard 'group': SIZE must be >= 1");
+                }
+                for (i, members) in seats.chunks(group).enumerate() {
+                    let mut sr = rng.fork(i as u64 + 1);
+                    self.renewal(
+                        &mut events,
+                        &mut sr,
+                        horizon_s,
+                        members,
+                        |g| g.exponential(1.0 / mtbf_s),
+                        mttr_s,
+                    );
+                }
+            }
+            HazardKind::Spot { bid_lo, bid_hi } => {
+                if self.price_trace.is_empty() {
+                    anyhow::bail!(
+                        "hazard '{}' needs a price trace (--spot-trace FILE)",
+                        self.label()
+                    );
+                }
+                for (i, &(k, r)) in seats.iter().enumerate() {
+                    let mut sr = rng.fork(i as u64 + 1);
+                    let bid = sr.range(bid_lo, bid_hi);
+                    let mut out = false;
+                    let mut last_t = 0.0f64;
+                    for p in &self.price_trace {
+                        last_t = last_t.max(p.t_s);
+                        if !out && p.price > bid && p.t_s < horizon_s {
+                            events.push(FailureEvent {
+                                t_s: p.t_s,
+                                model: k,
+                                replica: r,
+                                kind: FailureKind::Kill,
+                            });
+                            out = true;
+                        } else if out && p.price <= bid {
+                            events.push(FailureEvent {
+                                t_s: p.t_s,
+                                model: k,
+                                replica: r,
+                                kind: FailureKind::Join {
+                                    warmup_s: self.warmup_s,
+                                },
+                            });
+                            out = false;
+                        }
+                    }
+                    if out {
+                        // The trace never came back under the bid: revive
+                        // past the horizon so parked work still flushes.
+                        events.push(FailureEvent {
+                            t_s: last_t.max(horizon_s),
+                            model: k,
+                            replica: r,
+                            kind: FailureKind::Join {
+                                warmup_s: self.warmup_s,
+                            },
+                        });
+                    }
+                }
+            }
+        }
+        Ok(FailureScript::new(events)?.with_label(self.label()))
+    }
+
+    /// One alternating up/down renewal process over `members` (all
+    /// killed and revived at the same instants): uptimes from `up`,
+    /// exponential repairs with mean `mttr_s`.
+    fn renewal(
+        &self,
+        events: &mut Vec<FailureEvent>,
+        rng: &mut Rng,
+        horizon_s: f64,
+        members: &[(usize, usize)],
+        mut up: impl FnMut(&mut Rng) -> f64,
+        mttr_s: f64,
+    ) {
+        let mut t = 0.0;
+        loop {
+            t += up(rng);
+            if t >= horizon_s {
+                return;
+            }
+            for &(k, r) in members {
+                events.push(FailureEvent {
+                    t_s: t,
+                    model: k,
+                    replica: r,
+                    kind: FailureKind::Kill,
+                });
+            }
+            t += rng.exponential(1.0 / mttr_s);
+            for &(k, r) in members {
+                events.push(FailureEvent {
+                    t_s: t,
+                    model: k,
+                    replica: r,
+                    kind: FailureKind::Join {
+                        warmup_s: self.warmup_s,
+                    },
+                });
+            }
+        }
+    }
+}
+
+/// Parse a JSONL spot-price trace (`--spot-trace FILE`): one object per
+/// non-empty line with numeric `t` (seconds, non-decreasing) and `price`.
+pub fn load_price_trace(text: &str) -> anyhow::Result<Vec<PricePoint>> {
+    let mut points = Vec::new();
+    let mut last: Option<(usize, f64)> = None;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("spot price trace line {}: {e}", lineno + 1))?;
+        let t_s = v.get("t").as_f64().ok_or_else(|| {
+            anyhow::anyhow!("spot price trace line {}: missing numeric 't'", lineno + 1)
+        })?;
+        if !t_s.is_finite() || t_s < 0.0 {
+            anyhow::bail!(
+                "spot price trace line {}: 't' must be finite and >= 0, got {t_s}",
+                lineno + 1
+            );
+        }
+        if let Some((prev_line, prev_t)) = last {
+            if t_s < prev_t {
+                anyhow::bail!(
+                    "spot price trace line {}: non-monotone 't' {t_s} (line {prev_line} \
+                     was {prev_t})",
+                    lineno + 1
+                );
+            }
+        }
+        last = Some((lineno + 1, t_s));
+        let price = v.get("price").as_f64().ok_or_else(|| {
+            anyhow::anyhow!(
+                "spot price trace line {}: missing numeric 'price'",
+                lineno + 1
+            )
+        })?;
+        if !price.is_finite() || price < 0.0 {
+            anyhow::bail!(
+                "spot price trace line {}: 'price' must be finite and >= 0, got {price}",
+                lineno + 1
+            );
+        }
+        points.push(PricePoint { t_s, price });
+    }
+    if points.is_empty() {
+        anyhow::bail!("spot price trace is empty");
+    }
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_labels() {
+        for spec in [
+            "mtbf:600:60",
+            "weibull:1.5:800:120",
+            "group:900:90:4",
+            "spot:0.2:0.8",
+        ] {
+            let h = Hazard::parse(spec).unwrap();
+            assert_eq!(h.label(), spec);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in [
+            "mtbf",
+            "mtbf:600",
+            "mtbf:600:0",
+            "mtbf:x:60",
+            "mtbf:600:60:1",
+            "weibull:1.5:800",
+            "group:900:90:0.5",
+            "spot:0.8:0.2",
+            "spot:0.5:0.5",
+            "quake:1",
+            "",
+        ] {
+            assert!(Hazard::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_paired() {
+        let h = Hazard::parse("mtbf:1.0:0.3").unwrap().with_warmup(0.1).unwrap();
+        let a = h.generate(&[2, 1], 5.0, 42).unwrap();
+        let b = h.generate(&[2, 1], 5.0, 42).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.label(), "mtbf:1:0.3");
+        assert!(!a.is_empty(), "5 MTBFs of horizon should produce events");
+        assert_ne!(a, h.generate(&[2, 1], 5.0, 43).unwrap());
+        // Every kill is repaired: per (model, replica), kills and joins
+        // alternate starting with a kill and end balanced.
+        let mut open: std::collections::HashMap<(usize, usize), bool> = Default::default();
+        for ev in a.events() {
+            let down = open.entry((ev.model, ev.replica)).or_default();
+            match ev.kind {
+                FailureKind::Kill => {
+                    assert!(!*down, "kill of an already-down replica");
+                    assert!(ev.t_s < 5.0, "kill past horizon");
+                    *down = true;
+                }
+                FailureKind::Join { warmup_s } => {
+                    assert!(*down, "join of an up replica");
+                    assert_eq!(warmup_s, 0.1);
+                    *down = false;
+                }
+                FailureKind::Drain => unreachable!("hazards never drain"),
+            }
+        }
+        assert!(open.values().all(|&d| !d), "unrepaired kill");
+    }
+
+    #[test]
+    fn weibull_wearout_fails_more_than_young_shape() {
+        // Same scale: shape 0.5 front-loads failures vs shape 3 within a
+        // horizon shorter than the scale.
+        let infant = Hazard::parse("weibull:0.5:10:0.5").unwrap();
+        let wearout = Hazard::parse("weibull:3:10:0.5").unwrap();
+        let counts = [8usize];
+        let n_kills = |h: &Hazard| {
+            (0..16)
+                .map(|s| {
+                    h.generate(&counts, 4.0, s)
+                        .unwrap()
+                        .events()
+                        .iter()
+                        .filter(|e| e.kind == FailureKind::Kill)
+                        .count()
+                })
+                .sum::<usize>()
+        };
+        assert!(
+            n_kills(&infant) > n_kills(&wearout),
+            "infant-mortality shape should out-fail wear-out over a short horizon"
+        );
+    }
+
+    #[test]
+    fn group_hazard_downs_whole_groups_at_once() {
+        let h = Hazard::parse("group:1.0:0.5:2").unwrap();
+        // Fleet [2, 2] flattens to 4 seats → groups {(0,0),(0,1)} and
+        // {(1,0),(1,1)}.
+        let s = h.generate(&[2, 2], 6.0, 7).unwrap();
+        assert!(!s.is_empty());
+        let kills: Vec<&FailureEvent> = s
+            .events()
+            .iter()
+            .filter(|e| e.kind == FailureKind::Kill)
+            .collect();
+        assert_eq!(kills.len() % 2, 0, "kills come in group pairs");
+        for pair in kills.chunks(2) {
+            assert_eq!(pair[0].t_s, pair[1].t_s, "group members die together");
+            assert_eq!(pair[0].model, pair[1].model, "groups of 2 align to models here");
+        }
+    }
+
+    #[test]
+    fn spot_hazard_replays_price_crossings() {
+        let trace = load_price_trace(
+            "{\"t\": 0.0, \"price\": 0.1}\n\
+             {\"t\": 1.0, \"price\": 0.9}\n\
+             {\"t\": 2.0, \"price\": 0.1}\n\
+             {\"t\": 3.0, \"price\": 0.9}\n",
+        )
+        .unwrap();
+        // Bids drawn in [0.3, 0.5): every replica is outbid at t=1 and
+        // t=3 and back under at t=2.
+        let h = Hazard::parse("spot:0.3:0.5").unwrap().with_price_trace(trace);
+        let s = h.generate(&[2], 10.0, 9).unwrap();
+        let times: Vec<(f64, &'static str)> = s
+            .events()
+            .iter()
+            .filter(|e| e.replica == 0)
+            .map(|e| (e.t_s, e.kind.label()))
+            .collect();
+        // Kill at 1, join at 2, kill at 3, and the trace ends outbid →
+        // synthetic join at max(last point, horizon) = 10.
+        assert_eq!(
+            times,
+            vec![(1.0, "kill"), (2.0, "join"), (3.0, "kill"), (10.0, "join")]
+        );
+    }
+
+    #[test]
+    fn spot_without_trace_errors() {
+        let err = Hazard::parse("spot:0.2:0.8")
+            .unwrap()
+            .generate(&[1], 1.0, 0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--spot-trace"), "{err}");
+    }
+
+    #[test]
+    fn price_trace_loader_names_line_and_field() {
+        let err = load_price_trace("{\"t\": 0.0}\n").unwrap_err().to_string();
+        assert_eq!(err, "spot price trace line 1: missing numeric 'price'");
+        let err = load_price_trace(
+            "{\"t\": 2.0, \"price\": 0.5}\n{\"t\": 1.0, \"price\": 0.5}\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert_eq!(
+            err,
+            "spot price trace line 2: non-monotone 't' 1 (line 1 was 2)"
+        );
+        let err = load_price_trace("{\"t\": 1.0, \"price\": -2}\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("'price' must be finite and >= 0"), "{err}");
+        assert!(load_price_trace("\n\n").is_err());
+    }
+}

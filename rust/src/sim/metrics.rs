@@ -51,6 +51,22 @@
 //! `downtime_s: 0`, `requeued: 0`, and `scenario: "none"` — the layout
 //! change is the only delta against version 4.
 //!
+//! # Resilience accounting (artifact version 6)
+//!
+//! Version 6 adds request-level survival under stochastic outages
+//! ([`crate::sim::ResilienceConfig`]): per-node `retries` (orphaned
+//! copies re-dispatched after a kill), `hedges` (tail-hedge twins placed
+//! on the node), and `breaker_trips` (circuit-breaker openings), with
+//! run-level totals `n_retries`/`n_hedges`/`n_breaker_trips` that are
+//! exact sums of the node rows. The run also gains `n_failed` (queries
+//! whose retry budget was exhausted — never recorded as completions),
+//! **`availability`** = `slo_attained / (n_queries + n_failed)` (an
+//! SLO-availability: a query that misses its latency SLO or fails
+//! outright counts unavailable; `1.0` on an empty run), and
+//! **`goodput_qps`** = `slo_attained / makespan_s`. Runs without
+//! resilience emit zeros for the new counters and the layout change is
+//! the only delta against version 5.
+//!
 //! # Determinism
 //!
 //! The JSON layout is stable by construction: objects serialize through
@@ -65,12 +81,12 @@ use crate::stats::{quantile, LOG_HIST_BINS_PER_OCTAVE, LOG_HIST_LO_S, LogHistogr
 use crate::util::Json;
 
 /// Version of the `ecoserve.sim-metrics` artifact this build writes.
-/// Version 5 adds the failure scenario label, the requeued-query total,
-/// and per-replica node accounting (replica index, downtime, requeues).
-/// Versions 1 (per-query exact quantiles, no histograms), 2
-/// (pre-control), 3 (pre-phase-split), and 4 (pre-cluster) are rejected
-/// on load with migration messages.
-pub const SIM_METRICS_VERSION: u32 = 5;
+/// Version 6 adds resilience accounting: retry/hedge/breaker counters
+/// (per node and as run totals), failed-query counts, availability, and
+/// goodput. Versions 1 (per-query exact quantiles, no histograms), 2
+/// (pre-control), 3 (pre-phase-split), 4 (pre-cluster), and 5
+/// (pre-resilience) are rejected on load with migration messages.
+pub const SIM_METRICS_VERSION: u32 = 6;
 
 /// Lifecycle of one simulated query (all times in virtual seconds from
 /// simulation start). Only recorded when per-query retention is on.
@@ -135,6 +151,13 @@ pub struct NodeStats {
     pub downtime_s: f64,
     /// queries requeued off this replica by scripted kills
     pub requeued: u64,
+    /// orphaned copies this replica's kills sent into backoff-then-retry
+    /// (resilience runs only; zero otherwise)
+    pub retries: u64,
+    /// tail-hedge twin copies placed on this replica
+    pub hedges: u64,
+    /// circuit-breaker openings on this replica
+    pub breaker_trips: u64,
 }
 
 impl NodeStats {
@@ -290,6 +313,7 @@ impl MetricsRecorder {
         zeta: f64,
         n_dropped: u64,
         n_requeued: u64,
+        n_failed: u64,
         plan_decisions: Option<(u64, u64)>,
         nodes: Vec<NodeStats>,
     ) -> SimMetrics {
@@ -302,6 +326,22 @@ impl MetricsRecorder {
                 attained as f64 / n as f64
             }
         };
+        // SLO-availability: served within the SLO, over everything that
+        // asked (failures included). An empty run is vacuously available.
+        let availability = if n + n_failed == 0 {
+            1.0
+        } else {
+            self.slo_attained as f64 / (n + n_failed) as f64
+        };
+        let makespan_s = self.makespan_ns as f64 / 1e9;
+        let goodput_qps = if makespan_s > 0.0 {
+            self.slo_attained as f64 / makespan_s
+        } else {
+            0.0
+        };
+        let n_retries = nodes.iter().map(|nd| nd.retries).sum();
+        let n_hedges = nodes.iter().map(|nd| nd.hedges).sum();
+        let n_breaker_trips = nodes.iter().map(|nd| nd.breaker_trips).sum();
         // Quantile estimates are bin upper edges, which sit strictly above
         // every sample in the bin — clamp to the exact streaming maximum
         // so the artifact never reports p95 > max (the estimate stays
@@ -316,7 +356,13 @@ impl MetricsRecorder {
             n_queries: n,
             n_dropped,
             n_requeued,
-            makespan_s: self.makespan_ns as f64 / 1e9,
+            n_failed,
+            n_retries,
+            n_hedges,
+            n_breaker_trips,
+            availability,
+            goodput_qps,
+            makespan_s,
             total_energy_j: self.total_energy_j,
             prefill_energy_j: self.prefill_energy_j,
             decode_energy_j: self.total_energy_j - self.prefill_energy_j,
@@ -379,6 +425,22 @@ pub struct SimMetrics {
     /// queries requeued by scripted replica kills (each served exactly
     /// once regardless — conservation is enforced by the simulator)
     pub n_requeued: u64,
+    /// queries that exhausted their retry budget and were never served
+    /// (resilience runs only; zero otherwise)
+    pub n_failed: u64,
+    /// retries scheduled across all replicas (= Σ node `retries`)
+    pub n_retries: u64,
+    /// hedge twins placed across all replicas (= Σ node `hedges`)
+    pub n_hedges: u64,
+    /// circuit-breaker openings across all replicas (= Σ node
+    /// `breaker_trips`)
+    pub n_breaker_trips: u64,
+    /// SLO-availability: `slo_attained / (n_queries + n_failed)` — the
+    /// fraction of asked-for queries served within the latency SLO
+    /// (failed queries count against it; `1.0` on an empty run)
+    pub availability: f64,
+    /// within-SLO completions per virtual second of makespan
+    pub goodput_qps: f64,
     /// last completion time (virtual seconds)
     pub makespan_s: f64,
     pub total_energy_j: f64,
@@ -522,6 +584,12 @@ impl SimMetrics {
             ("n_queries", Json::num(self.n_queries as f64)),
             ("n_dropped", Json::num(self.n_dropped as f64)),
             ("n_requeued", Json::num(self.n_requeued as f64)),
+            ("n_failed", Json::num(self.n_failed as f64)),
+            ("n_retries", Json::num(self.n_retries as f64)),
+            ("n_hedges", Json::num(self.n_hedges as f64)),
+            ("n_breaker_trips", Json::num(self.n_breaker_trips as f64)),
+            ("availability", Json::num(self.availability)),
+            ("goodput_qps", Json::num(self.goodput_qps)),
             ("makespan_s", Json::num(self.makespan_s)),
             ("total_energy_j", Json::num(self.total_energy_j)),
             ("prefill_energy_j", Json::num(self.prefill_energy_j)),
@@ -566,6 +634,9 @@ impl SimMetrics {
                         ("busy_s", Json::num(nd.busy_s)),
                         ("downtime_s", Json::num(nd.downtime_s)),
                         ("requeued", Json::num(nd.requeued as f64)),
+                        ("retries", Json::num(nd.retries as f64)),
+                        ("hedges", Json::num(nd.hedges as f64)),
+                        ("breaker_trips", Json::num(nd.breaker_trips as f64)),
                         (
                             "utilization",
                             Json::num(if self.makespan_s > 0.0 {
@@ -700,6 +771,14 @@ impl SimMetrics {
                  `ecoserve simulate` (--replicas/--failures configure the \
                  replica fleet and outage script)"
             ),
+            Some(5) => anyhow::bail!(
+                "sim-metrics artifact is version 5 (pre-resilience: no \
+                 retry/hedge/breaker accounting, failed-query counts, \
+                 availability, or goodput); this build reads version \
+                 {SIM_METRICS_VERSION} — regenerate with `ecoserve simulate` \
+                 (--hazard/--retry-budget/--hedge-ms configure outage \
+                 processes and request survival)"
+            ),
             other => anyhow::bail!(
                 "unsupported sim-metrics artifact version {:?} (this build reads \
                  version {SIM_METRICS_VERSION})",
@@ -765,6 +844,18 @@ impl SimMetrics {
                         .get("requeued")
                         .as_u64()
                         .ok_or_else(|| anyhow::anyhow!("node missing 'requeued'"))?,
+                    retries: nd
+                        .get("retries")
+                        .as_u64()
+                        .ok_or_else(|| anyhow::anyhow!("node missing 'retries'"))?,
+                    hedges: nd
+                        .get("hedges")
+                        .as_u64()
+                        .ok_or_else(|| anyhow::anyhow!("node missing 'hedges'"))?,
+                    breaker_trips: nd
+                        .get("breaker_trips")
+                        .as_u64()
+                        .ok_or_else(|| anyhow::anyhow!("node missing 'breaker_trips'"))?,
                 })
             })
             .collect::<anyhow::Result<Vec<NodeStats>>>()?;
@@ -895,6 +986,23 @@ impl SimMetrics {
                 .get("n_requeued")
                 .as_u64()
                 .ok_or_else(|| anyhow::anyhow!("sim-metrics artifact: missing 'n_requeued'"))?,
+            n_failed: v
+                .get("n_failed")
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("sim-metrics artifact: missing 'n_failed'"))?,
+            n_retries: v
+                .get("n_retries")
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("sim-metrics artifact: missing 'n_retries'"))?,
+            n_hedges: v
+                .get("n_hedges")
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("sim-metrics artifact: missing 'n_hedges'"))?,
+            n_breaker_trips: v.get("n_breaker_trips").as_u64().ok_or_else(|| {
+                anyhow::anyhow!("sim-metrics artifact: missing 'n_breaker_trips'")
+            })?,
+            availability: num("availability")?,
+            goodput_qps: num("goodput_qps")?,
             makespan_s: num("makespan_s")?,
             total_energy_j: num("total_energy_j")?,
             prefill_energy_j: num("prefill_energy_j")?,
@@ -979,6 +1087,7 @@ mod tests {
             0.5,
             3,
             0,
+            0,
             None,
             vec![
                 NodeStats {
@@ -1037,6 +1146,11 @@ mod tests {
         assert!(m.tpot_slo_s.is_none() && m.tpot_attainment.is_none());
         // SLO 1.0 s: only the 1.0-latency query attains it.
         assert!((m.slo_attainment - 1.0 / 3.0).abs() < 1e-12);
+        // No failures: availability coincides with attainment, and
+        // goodput is the one within-SLO completion over the makespan.
+        assert_eq!(m.n_failed, 0);
+        assert!((m.availability - 1.0 / 3.0).abs() < 1e-12);
+        assert!((m.goodput_qps - 1.0 / 3.0).abs() < 1e-12);
         // utilization: (1/3 + 2/3)/2
         assert!((m.mean_utilization() - 0.5).abs() < 1e-12);
         // Streaming mode retains nothing per query.
@@ -1088,11 +1202,20 @@ mod tests {
             "\"engine\": \"lockstep\"",
             "\"scenario\": \"none\"",
             "\"arrival\"",
-            "\"version\": 5",
+            "\"version\": 6",
             "\"n_requeued\": 0",
+            "\"n_failed\": 0",
+            "\"n_retries\": 0",
+            "\"n_hedges\": 0",
+            "\"n_breaker_trips\": 0",
+            "\"availability\"",
+            "\"goodput_qps\"",
             "\"replica\": 0",
             "\"downtime_s\": 0",
             "\"requeued\": 0",
+            "\"retries\": 0",
+            "\"hedges\": 0",
+            "\"breaker_trips\": 0",
             "\"total_energy_j\"",
             "\"prefill_energy_j\"",
             "\"decode_energy_j\"",
@@ -1223,6 +1346,16 @@ mod tests {
         assert!(err.contains("regenerate"), "{err}");
         assert!(err.contains("--replicas"), "{err}");
 
+        let v5 = Json::parse(
+            r#"{"format": "ecoserve.sim-metrics", "version": 5, "policy": "plan"}"#,
+        )
+        .unwrap();
+        let err = SimMetrics::from_json(&v5).unwrap_err().to_string();
+        assert!(err.contains("version 5"), "{err}");
+        assert!(err.contains("pre-resilience"), "{err}");
+        assert!(err.contains("regenerate"), "{err}");
+        assert!(err.contains("--hazard"), "{err}");
+
         let foreign = Json::parse(r#"{"format": "ecoserve.plan", "version": 2}"#).unwrap();
         let err = SimMetrics::from_json(&foreign).unwrap_err().to_string();
         assert!(err.contains("ecoserve.sim-metrics"), "{err}");
@@ -1246,6 +1379,7 @@ mod tests {
             0.5,
             0,
             0,
+            0,
             None,
             vec![],
         );
@@ -1256,6 +1390,9 @@ mod tests {
         assert_eq!(m.mean_ttft_s, 0.0);
         assert_eq!(m.p95_tpot_s, 0.0);
         assert_eq!(m.slo_attainment, 0.0);
+        // Vacuous availability: nothing asked, nothing denied.
+        assert_eq!(m.availability, 1.0);
+        assert_eq!(m.goodput_qps, 0.0);
         assert!(m.ttft_attainment.is_none());
     }
 }

@@ -23,6 +23,10 @@
 //!   kill with in-flight requeue, drain-then-leave, autoscale-join with
 //!   warm-up), replayed deterministically on the virtual clock across
 //!   per-model replica fleets (`--replicas`, `--failures`);
+//! * [`Hazard`] — stochastic failure-*process* generators (`--hazard`):
+//!   Poisson MTBF/MTTR, Weibull wear-out, correlated group failures,
+//!   and spot-price preemption, all lowered into seeded
+//!   [`FailureScript`]s so outage *ensembles* reuse the same machinery;
 //! * [`Simulator`] — the zero-allocation event loop (arrive → route →
 //!   batch → execute → complete) on a virtual integer-nanosecond clock,
 //!   with two selectable engines ([`EngineKind`], `--engine`): batch-
@@ -63,6 +67,7 @@
 pub mod arrival;
 pub mod compare;
 pub mod failure;
+pub mod hazard;
 pub mod metrics;
 pub mod policy;
 pub mod simulator;
@@ -72,6 +77,7 @@ pub use compare::{
     compare, compare_replicated, comparison_to_json, replicated_to_json, Arrivals, CompareSpec,
 };
 pub use failure::{FailureEvent, FailureKind, FailureScript};
+pub use hazard::{load_price_trace, Hazard, HazardKind, PricePoint, HAZARD_SEED_SALT};
 pub use metrics::{NodeStats, QueryOutcome, SIM_METRICS_VERSION, SimMetrics};
 pub use policy::{PolicyKind, SimPolicy};
-pub use simulator::{EngineKind, SimConfig, Simulator};
+pub use simulator::{EngineKind, ResilienceConfig, SimConfig, Simulator};

@@ -28,6 +28,12 @@ pub enum PolicyKind {
     /// Closed-loop replanning from a live session
     /// ([`ReplanPolicy`](crate::control::ReplanPolicy)).
     Replan,
+    /// Follow an **N+k resilient** plan
+    /// ([`PlanSession::plan_resilient`](crate::plan::PlanSession::plan_resilient)):
+    /// same plan-following mechanics as [`PolicyKind::Plan`], but the
+    /// budgets were computed under failover headroom, so load is
+    /// pre-positioned away from fleets a `k`-replica loss would overwhelm.
+    Resilient,
     /// Per-query ζ-cost argmin (the online greedy the paper's §7 sketches).
     Greedy,
     /// Cyclic query-independent baseline.
@@ -42,23 +48,26 @@ impl PolicyKind {
         match self {
             PolicyKind::Plan => "plan",
             PolicyKind::Replan => "replan",
+            PolicyKind::Resilient => "resilient",
             PolicyKind::Greedy => "greedy",
             PolicyKind::RoundRobin => "round-robin",
             PolicyKind::Random => "random",
         }
     }
 
-    /// Parse the CLI spelling (`plan|replan|greedy|round-robin|random`).
+    /// Parse the CLI spelling
+    /// (`plan|replan|resilient|greedy|round-robin|random`).
     pub fn parse(s: &str) -> anyhow::Result<PolicyKind> {
         Ok(match s {
             "plan" => PolicyKind::Plan,
             "replan" => PolicyKind::Replan,
+            "resilient" => PolicyKind::Resilient,
             "greedy" => PolicyKind::Greedy,
             "round-robin" => PolicyKind::RoundRobin,
             "random" => PolicyKind::Random,
             other => anyhow::bail!(
                 "unknown policy '{other}' \
-                 (expected plan|replan|greedy|round-robin|random|compare)"
+                 (expected plan|replan|resilient|greedy|round-robin|random|compare)"
             ),
         })
     }
@@ -71,6 +80,7 @@ impl PolicyKind {
         vec![
             PolicyKind::Plan,
             PolicyKind::Replan,
+            PolicyKind::Resilient,
             PolicyKind::Greedy,
             PolicyKind::RoundRobin,
             PolicyKind::Random,
@@ -109,9 +119,13 @@ impl SimPolicy {
     ) -> anyhow::Result<SimPolicy> {
         let mut replan = None;
         let router = match kind {
-            PolicyKind::Plan => {
+            PolicyKind::Plan | PolicyKind::Resilient => {
                 let plan = plan.ok_or_else(|| {
-                    anyhow::anyhow!("policy 'plan' needs a plan artifact (--plan FILE)")
+                    anyhow::anyhow!(
+                        "policy '{}' needs a plan artifact (--plan FILE; the resilient \
+                         policy follows an N+k plan, --resilient K)",
+                        kind.label()
+                    )
                 })?;
                 Router::new(sets.to_vec(), norm, plan.zeta, Policy::ZetaCost).with_plan(plan)
             }

@@ -162,6 +162,52 @@ impl Default for SimConfig {
     }
 }
 
+/// Request-survival knobs (`--retry-budget`, `--breaker-threshold`,
+/// `--hedge-ms`): what the serving tier does *about* failures, as
+/// opposed to the [`FailureScript`] that causes them.
+///
+/// All three mechanisms run on the virtual clock and stay fully
+/// deterministic. A simulator built without
+/// [`with_resilience`](Simulator::with_resilience) is byte-identical to
+/// the pre-v6 behavior (killed work requeues immediately and never
+/// fails).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResilienceConfig {
+    /// max re-dispatches per query after its copy dies in a kill; once
+    /// exhausted the query **fails** (counted in `n_failed`, never
+    /// recorded as a completion)
+    pub retry_budget: u32,
+    /// first retry delay, seconds; attempt `i` waits `base · 2^(i−1)`
+    pub retry_base_s: f64,
+    /// backoff ceiling, seconds
+    pub retry_cap_s: f64,
+    /// consecutive kills (without an intervening completion) that open a
+    /// replica's circuit breaker; `0` disables the breaker
+    pub breaker_threshold: u32,
+    /// open-state duration, seconds: while open the replica is skipped
+    /// whenever a sibling can take the work (it is never a black hole —
+    /// if every live replica is open, routing falls through); after the
+    /// cooldown the replica is half-open and one completion re-closes it
+    pub breaker_cooldown_s: f64,
+    /// tail hedging: duplicate a query to a second replica of its routed
+    /// model once it has been in flight this long (first completion
+    /// wins; the loser's energy is never charged); `None` disables
+    pub hedge_after_s: Option<f64>,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> ResilienceConfig {
+        ResilienceConfig {
+            retry_budget: 3,
+            retry_base_s: 0.05,
+            retry_cap_s: 1.0,
+            breaker_threshold: 0,
+            breaker_cooldown_s: 1.0,
+            hedge_after_s: None,
+        }
+    }
+}
+
 /// A configured simulator: the hosted models plus run metadata recorded
 /// into the metrics artifact.
 pub struct Simulator<'a> {
@@ -177,6 +223,9 @@ pub struct Simulator<'a> {
     replicas: Vec<usize>,
     /// scripted replica lifecycle events (`--failures`)
     failures: Option<&'a FailureScript>,
+    /// request-survival policy (`with_resilience`); `None` = legacy
+    /// immediate-requeue semantics, byte-identical to pre-v6 runs
+    resilience: Option<ResilienceConfig>,
 }
 
 /// Heap events are `Copy`: batch membership lives in the node FIFOs, so
@@ -191,6 +240,12 @@ enum EvKind {
     Timeout { node: u32 },
     /// node finishes its running batch (lockstep) / iteration (continuous)
     Complete { node: u32, gen: u32 },
+    /// a killed copy's backoff elapsed: re-route the query (resilience
+    /// only; the original arrival time is recovered from `arrivals_s`)
+    Retry { query: u64 },
+    /// the hedge deadline for a still-unanswered query: duplicate it to
+    /// a second replica of its routed `model` (resilience only)
+    Hedge { query: u64, model: u32 },
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -251,6 +306,13 @@ struct RepState {
     down_since: Option<u64>,
     /// accumulated downtime, virtual ns
     downtime_ns: u64,
+    /// circuit breaker: routing avoids this replica before this instant
+    /// whenever a sibling can take the work (`0` = closed); at the
+    /// instant itself the breaker is half-open — the replica is
+    /// routable again and one completion re-closes it
+    breaker_until: u64,
+    /// kills since the last completion (the breaker's trip counter)
+    consec_fails: u32,
 }
 
 impl RepState {
@@ -263,6 +325,8 @@ impl RepState {
             gen: 0,
             down_since: None,
             downtime_ns: 0,
+            breaker_until: 0,
+            consec_fails: 0,
         }
     }
 
@@ -274,6 +338,31 @@ impl RepState {
             down_since: Some(t),
             ..RepState::new(model, replica)
         }
+    }
+
+    /// Routable under the breaker at `t` (closed, or half-open probe).
+    fn breaker_ok(&self, t: u64) -> bool {
+        t >= self.breaker_until
+    }
+
+    /// Account one kill against the breaker; `true` when it trips open.
+    fn breaker_note_kill(&mut self, t: u64, rc: &ResilienceConfig) -> bool {
+        if rc.breaker_threshold == 0 {
+            return false;
+        }
+        self.consec_fails += 1;
+        if self.consec_fails >= rc.breaker_threshold {
+            self.breaker_until = t.saturating_add(to_ns(rc.breaker_cooldown_s));
+            self.consec_fails = 0;
+            return true;
+        }
+        false
+    }
+
+    /// A completion closes the breaker and clears the trip counter.
+    fn breaker_note_success(&mut self) {
+        self.consec_fails = 0;
+        self.breaker_until = 0;
     }
 
     /// Close the open downtime interval at `t` (activation or end of run).
@@ -308,6 +397,96 @@ struct FailEv {
     model: usize,
     replica: usize,
     action: FailAction,
+}
+
+/// What becomes of a copy orphaned by a kill under resilience.
+enum OrphanFate {
+    /// schedule an [`EvKind::Retry`] this far in the future
+    Retry { delay_ns: u64 },
+    /// the copy dies: budget exhausted, or a hedge twin already answered
+    Dropped,
+}
+
+/// Per-run request-survival bookkeeping, shared by both engines. A
+/// query has one *copy* in flight normally, two once hedged; copies die
+/// in kills (budget exhausted) or at completion, and the query fails
+/// only when its last copy dies unanswered.
+struct Survival {
+    cfg: ResilienceConfig,
+    /// kills absorbed so far, per query (the retry budget's counter)
+    attempts: Vec<u32>,
+    /// live copies per query (queued, running, parked, or pending retry)
+    copies: Vec<u8>,
+    /// first completion already recorded (later copies are losers)
+    recorded: Vec<bool>,
+    /// every copy died with the budget exhausted — counted in `n_failed`
+    failed: Vec<bool>,
+    /// node currently holding the query's primary copy (`u32::MAX` =
+    /// parked); the hedge duplicates to a *different* replica
+    holder: Vec<u32>,
+    n_failed: u64,
+}
+
+impl Survival {
+    fn new(cfg: ResilienceConfig, n_queries: usize) -> Survival {
+        Survival {
+            cfg,
+            attempts: vec![0; n_queries],
+            copies: vec![0; n_queries],
+            recorded: vec![false; n_queries],
+            failed: vec![false; n_queries],
+            holder: vec![u32::MAX; n_queries],
+            n_failed: 0,
+        }
+    }
+
+    /// A copy of `qi` was placed on node `j`.
+    fn placed(&mut self, qi: usize, j: usize) {
+        self.holder[qi] = j as u32;
+    }
+
+    /// A copy of `qi` parked (no live replica to take it).
+    fn parked(&mut self, qi: usize) {
+        self.holder[qi] = u32::MAX;
+    }
+
+    /// A kill orphaned one copy of `qi`: retry it (capped exponential
+    /// backoff) or drop it, failing the query when it was the last copy.
+    fn orphaned(&mut self, qi: usize) -> OrphanFate {
+        if self.recorded[qi] {
+            // A hedge twin already answered; the loser just vanishes.
+            self.copies[qi] = self.copies[qi].saturating_sub(1);
+            return OrphanFate::Dropped;
+        }
+        self.attempts[qi] += 1;
+        if self.attempts[qi] <= self.cfg.retry_budget {
+            let backoff = (self.cfg.retry_base_s
+                * 2f64.powi(self.attempts[qi] as i32 - 1))
+            .min(self.cfg.retry_cap_s);
+            OrphanFate::Retry {
+                delay_ns: to_ns(backoff),
+            }
+        } else {
+            self.copies[qi] = self.copies[qi].saturating_sub(1);
+            if self.copies[qi] == 0 {
+                self.failed[qi] = true;
+                self.n_failed += 1;
+            }
+            OrphanFate::Dropped
+        }
+    }
+
+    /// A copy of `qi` reached completion; `true` iff it is the first
+    /// (record it — later finishers are hedge losers and stay unpaid).
+    fn completed(&mut self, qi: usize) -> bool {
+        self.copies[qi] = self.copies[qi].saturating_sub(1);
+        if self.recorded[qi] {
+            false
+        } else {
+            self.recorded[qi] = true;
+            true
+        }
+    }
 }
 
 /// Per-node state (lockstep engine). The FIFO holds, front to back: the
@@ -513,6 +692,7 @@ impl<'a> Simulator<'a> {
             zeta: 0.5,
             carbon: None,
             failures: None,
+            resilience: None,
         }
     }
 
@@ -542,6 +722,38 @@ impl<'a> Simulator<'a> {
     pub fn with_failures(mut self, script: &'a FailureScript) -> Simulator<'a> {
         self.failures = Some(script);
         self
+    }
+
+    /// Turn on request-level survival ([`ResilienceConfig`]): retry with
+    /// capped exponential backoff and a budget, a per-replica circuit
+    /// breaker, and optional tail hedging — all on the virtual clock.
+    /// Changes kill semantics: orphaned work waits out a backoff instead
+    /// of requeueing instantly, and queries whose budget runs out *fail*
+    /// (`n_failed`) instead of blocking the run.
+    pub fn with_resilience(mut self, rc: ResilienceConfig) -> anyhow::Result<Simulator<'a>> {
+        if !(rc.retry_base_s.is_finite() && rc.retry_base_s > 0.0) {
+            anyhow::bail!("retry_base_s must be finite and positive, got {}", rc.retry_base_s);
+        }
+        if !(rc.retry_cap_s.is_finite() && rc.retry_cap_s >= rc.retry_base_s) {
+            anyhow::bail!(
+                "retry_cap_s must be finite and >= retry_base_s ({}), got {}",
+                rc.retry_base_s,
+                rc.retry_cap_s
+            );
+        }
+        if !(rc.breaker_cooldown_s.is_finite() && rc.breaker_cooldown_s > 0.0) {
+            anyhow::bail!(
+                "breaker_cooldown_s must be finite and positive, got {}",
+                rc.breaker_cooldown_s
+            );
+        }
+        if let Some(h) = rc.hedge_after_s {
+            if !(h.is_finite() && h > 0.0) {
+                anyhow::bail!("hedge_after_s must be finite and positive, got {h}");
+            }
+        }
+        self.resilience = Some(rc);
+        Ok(self)
     }
 
     /// Record run metadata (arrival process label, seed, ζ) into the
@@ -752,7 +964,7 @@ impl<'a> Simulator<'a> {
             policy.on_capacity(k, r)?;
         }
 
-        let stats = match self.cfg.engine {
+        let (stats, n_failed) = match self.cfg.engine {
             EngineKind::Lockstep => self.run_lockstep(
                 queries,
                 arrivals_s,
@@ -782,15 +994,17 @@ impl<'a> Simulator<'a> {
             )?,
         };
 
-        // Conservation invariant: every admitted arrival completed —
-        // requeued work included; a query parked forever (every replica
-        // of its model down at end of run) trips this.
-        if recorder.n() != admitted as u64 {
+        // Conservation invariant: every admitted arrival either
+        // completed (requeued work included) or exhausted its retry
+        // budget; a query parked forever (every replica of its model
+        // down at end of run) trips this.
+        if recorder.n() + n_failed != admitted as u64 {
             anyhow::bail!(
-                "simulator lost queries: {} admitted, {} completed \
+                "simulator lost queries: {} admitted, {} completed, {} failed \
                  (a failure script must leave each model a live replica to flush parked work)",
                 admitted,
-                recorder.n()
+                recorder.n(),
+                n_failed
             );
         }
 
@@ -808,6 +1022,7 @@ impl<'a> Simulator<'a> {
             self.zeta,
             n_dropped as u64,
             n_requeued,
+            n_failed,
             policy.plan_stats(),
             stats,
         );
@@ -837,10 +1052,11 @@ impl<'a> Simulator<'a> {
         phase_of: &dyn Fn(usize, usize) -> PhaseEntry,
         recorder: &mut MetricsRecorder,
         meter: &mut Option<CarbonMeter>,
-    ) -> anyhow::Result<Vec<NodeStats>> {
+    ) -> anyhow::Result<(Vec<NodeStats>, u64)> {
         // Flat replica fleet, model-major; `model_nodes[k]` indexes model
         // k's replicas (joins append), `parked[k]` holds work routed to k
         // while none of its replicas is up.
+        let mut surv = self.resilience.map(|rc| Survival::new(rc, queries.len()));
         let mut nodes: Vec<Node> = Vec::new();
         let mut model_nodes: Vec<Vec<usize>> = Vec::with_capacity(self.sets.len());
         for (k, s) in self.sets.iter().enumerate() {
@@ -919,34 +1135,40 @@ impl<'a> Simulator<'a> {
             };
 
         // Least-loaded up replica of model `k` (FIFO depth, lowest index
-        // on ties); `None` while the whole fleet is down.
-        let pick = |k: usize, nodes: &Vec<Node>, model_nodes: &[Vec<usize>]| -> Option<usize> {
+        // on ties); `None` while the whole fleet is down. An open circuit
+        // breaker diverts traffic only while a breaker-closed sibling
+        // exists — it never blackholes the model (parked work can only be
+        // flushed by an Activate, so a hard block would strand queries).
+        let pick = |k: usize,
+                    t: u64,
+                    nodes: &Vec<Node>,
+                    model_nodes: &[Vec<usize>]|
+         -> Option<usize> {
             let mut best: Option<usize> = None;
+            let mut best_any: Option<usize> = None;
             for &j in &model_nodes[k] {
                 if !nodes[j].rep.up {
                     continue;
                 }
-                if best.map_or(true, |b| nodes[j].fifo.len() < nodes[b].fifo.len()) {
+                if best_any.map_or(true, |b| nodes[j].fifo.len() < nodes[b].fifo.len()) {
+                    best_any = Some(j);
+                }
+                if nodes[j].rep.breaker_ok(t)
+                    && best.map_or(true, |b| nodes[j].fifo.len() < nodes[b].fifo.len())
+                {
                     best = Some(j);
                 }
             }
-            best
+            best.or(best_any)
         };
 
-        // Hand one query (a fresh arrival, a kill's requeue, or a parked
-        // flush — arrival time preserved throughout) to model `k`.
-        let enqueue = |k: usize,
-                       f: InFlight,
-                       t: u64,
-                       nodes: &mut Vec<Node>,
-                       model_nodes: &[Vec<usize>],
-                       parked: &mut Vec<VecDeque<InFlight>>,
-                       heap: &mut BinaryHeap<Ev>,
-                       seq: &mut u64| {
-            let Some(j) = pick(k, nodes, model_nodes) else {
-                parked[k].push_back(f);
-                return;
-            };
+        // Put one query on node `j` and run the batcher triggers.
+        let place = |j: usize,
+                     f: InFlight,
+                     t: u64,
+                     nodes: &mut Vec<Node>,
+                     heap: &mut BinaryHeap<Ev>,
+                     seq: &mut u64| {
             let node = &mut nodes[j];
             node.fifo.push_back(f);
             node.pending += 1;
@@ -957,6 +1179,34 @@ impl<'a> Simulator<'a> {
                 try_start(j, t, nodes, heap, seq);
             } else {
                 schedule_timeout(j, nodes, heap, seq);
+            }
+        };
+
+        // Hand one query (a fresh arrival, a kill's requeue, a retry, or
+        // a parked flush — arrival time preserved throughout) to model
+        // `k`.
+        let enqueue = |k: usize,
+                       f: InFlight,
+                       t: u64,
+                       nodes: &mut Vec<Node>,
+                       model_nodes: &[Vec<usize>],
+                       parked: &mut Vec<VecDeque<InFlight>>,
+                       heap: &mut BinaryHeap<Ev>,
+                       seq: &mut u64,
+                       surv: &mut Option<Survival>| {
+            match pick(k, t, nodes, model_nodes) {
+                Some(j) => {
+                    if let Some(s) = surv.as_mut() {
+                        s.placed(f.query as usize, j);
+                    }
+                    place(j, f, t, nodes, heap, seq);
+                }
+                None => {
+                    if let Some(s) = surv.as_mut() {
+                        s.parked(f.query as usize);
+                    }
+                    parked[k].push_back(f);
+                }
             }
         };
 
@@ -1017,11 +1267,37 @@ impl<'a> Simulator<'a> {
                             nodes[j].pending = 0;
                             let orphans: Vec<InFlight> = nodes[j].fifo.drain(..).collect();
                             nodes[j].stats.requeued += orphans.len() as u64;
-                            for f in orphans {
-                                enqueue(
-                                    k, f, t, &mut nodes, &model_nodes, &mut parked, &mut heap,
-                                    &mut seq,
-                                );
+                            if let Some(rc) = self.resilience.as_ref() {
+                                if nodes[j].rep.breaker_note_kill(t, rc) {
+                                    nodes[j].stats.breaker_trips += 1;
+                                }
+                            }
+                            if surv.is_some() {
+                                // Resilience: orphans wait out a backoff
+                                // (or die once the budget is spent)
+                                // instead of requeueing instantly.
+                                let s = surv.as_mut().expect("checked above");
+                                for f in orphans {
+                                    match s.orphaned(f.query as usize) {
+                                        OrphanFate::Retry { delay_ns } => {
+                                            nodes[j].stats.retries += 1;
+                                            heap.push(Ev {
+                                                t: t.saturating_add(delay_ns),
+                                                seq,
+                                                kind: EvKind::Retry { query: f.query },
+                                            });
+                                            seq += 1;
+                                        }
+                                        OrphanFate::Dropped => {}
+                                    }
+                                }
+                            } else {
+                                for f in orphans {
+                                    enqueue(
+                                        k, f, t, &mut nodes, &model_nodes, &mut parked,
+                                        &mut heap, &mut seq, &mut surv,
+                                    );
+                                }
                             }
                         } else {
                             // Graceful leave: flush the batcher tail and
@@ -1085,7 +1361,7 @@ impl<'a> Simulator<'a> {
                         for f in flushed {
                             enqueue(
                                 k, f, t, &mut nodes, &model_nodes, &mut parked, &mut heap,
-                                &mut seq,
+                                &mut seq, &mut surv,
                             );
                         }
                     }
@@ -1107,6 +1383,20 @@ impl<'a> Simulator<'a> {
                 t_last = t_last.max(t);
                 let k = policy.route_at(t, &queries[qi])?;
                 debug_assert!(k < self.sets.len());
+                if let Some(s) = surv.as_mut() {
+                    s.copies[qi] = 1;
+                    if let Some(h) = s.cfg.hedge_after_s {
+                        heap.push(Ev {
+                            t: t.saturating_add(to_ns(h)),
+                            seq,
+                            kind: EvKind::Hedge {
+                                query: qi as u64,
+                                model: k as u32,
+                            },
+                        });
+                        seq += 1;
+                    }
+                }
                 enqueue(
                     k,
                     InFlight {
@@ -1119,6 +1409,7 @@ impl<'a> Simulator<'a> {
                     &mut parked,
                     &mut heap,
                     &mut seq,
+                    &mut surv,
                 );
                 continue;
             }
@@ -1156,12 +1447,19 @@ impl<'a> Simulator<'a> {
                     debug_assert!(size > 0, "Complete on an idle node");
                     let start = node.running_start;
                     node.running = 0;
+                    node.rep.breaker_note_success();
                     node.stats.batches += 1;
-                    node.stats.queries += size as u64;
                     node.stats.busy_s += (t - start) as f64 / 1e9;
                     for _ in 0..size {
                         let f = node.fifo.pop_front().expect("running batch members in fifo");
                         let qi = f.query as usize;
+                        // Hedge losers finish (they held the engine) but
+                        // are never recorded and their energy is unpaid.
+                        if let Some(s) = surv.as_mut() {
+                            if !s.completed(qi) {
+                                continue;
+                            }
+                        }
                         let e = energy_of(k, qi);
                         let p = phase_of(k, qi);
                         // As-if-streamed first token: own prefill + first
@@ -1171,6 +1469,7 @@ impl<'a> Simulator<'a> {
                             .saturating_add(p.prefill_ns)
                             .saturating_add(p.step_ns)
                             .min(t);
+                        node.stats.queries += 1;
                         node.stats.energy_j += e;
                         node.stats.prefill_j += p.prefill_j;
                         recorder.record(
@@ -1191,6 +1490,67 @@ impl<'a> Simulator<'a> {
                     }
                     try_start(j, t, &mut nodes, &mut heap, &mut seq);
                 }
+                EvKind::Retry { query } => {
+                    let s = surv.as_mut().expect("Retry event without resilience");
+                    let qi = query as usize;
+                    if s.recorded[qi] {
+                        // A hedge twin answered during the backoff.
+                        s.copies[qi] = s.copies[qi].saturating_sub(1);
+                        continue;
+                    }
+                    let k = policy.route_at(t, &queries[qi])?;
+                    debug_assert!(k < self.sets.len());
+                    enqueue(
+                        k,
+                        InFlight {
+                            query,
+                            arrive_ns: to_ns(arrivals_s[qi]),
+                        },
+                        t,
+                        &mut nodes,
+                        &model_nodes,
+                        &mut parked,
+                        &mut heap,
+                        &mut seq,
+                        &mut surv,
+                    );
+                }
+                EvKind::Hedge { query, model } => {
+                    let s = surv.as_mut().expect("Hedge event without resilience");
+                    let qi = query as usize;
+                    if s.recorded[qi] || s.failed[qi] {
+                        continue;
+                    }
+                    // Least-loaded up, breaker-closed replica other than
+                    // the one holding the primary copy; no eligible twin
+                    // target means the hedge simply does not fire.
+                    let k = model as usize;
+                    let excl = s.holder[qi];
+                    let mut best: Option<usize> = None;
+                    for &j in &model_nodes[k] {
+                        if j as u32 == excl || !nodes[j].rep.up || !nodes[j].rep.breaker_ok(t) {
+                            continue;
+                        }
+                        if best.map_or(true, |b| nodes[j].fifo.len() < nodes[b].fifo.len()) {
+                            best = Some(j);
+                        }
+                    }
+                    if let Some(j) = best {
+                        s.copies[qi] += 1;
+                        nodes[j].stats.hedges += 1;
+                        place(
+                            j,
+                            InFlight {
+                                query,
+                                arrive_ns: to_ns(arrivals_s[qi]),
+                            },
+                            t,
+                            &mut nodes,
+                            &mut heap,
+                            &mut seq,
+                        );
+                    }
+                }
             }
         }
 
@@ -1202,14 +1562,17 @@ impl<'a> Simulator<'a> {
                     && node.pending == 0
             );
         }
-        Ok(nodes
-            .into_iter()
-            .map(|n| {
-                let mut stats = n.stats;
-                n.rep.finalize(t_last, &mut stats);
-                stats
-            })
-            .collect())
+        Ok((
+            nodes
+                .into_iter()
+                .map(|n| {
+                    let mut stats = n.stats;
+                    n.rep.finalize(t_last, &mut stats);
+                    stats
+                })
+                .collect(),
+            surv.map_or(0, |s| s.n_failed),
+        ))
     }
 
     /// Iteration-level continuous-batching event loop. Per node: queued
@@ -1235,8 +1598,9 @@ impl<'a> Simulator<'a> {
         phase_of: &dyn Fn(usize, usize) -> PhaseEntry,
         recorder: &mut MetricsRecorder,
         meter: &mut Option<CarbonMeter>,
-    ) -> anyhow::Result<Vec<NodeStats>> {
+    ) -> anyhow::Result<(Vec<NodeStats>, u64)> {
         // Flat replica fleet, model-major (see `run_lockstep`).
+        let mut surv = self.resilience.map(|rc| Survival::new(rc, queries.len()));
         let mut nodes: Vec<CNode> = Vec::new();
         let mut model_nodes: Vec<Vec<usize>> = Vec::with_capacity(self.sets.len());
         for (k, s) in self.sets.iter().enumerate() {
@@ -1316,22 +1680,47 @@ impl<'a> Simulator<'a> {
             };
 
         // Least-loaded up replica (queued + resident work, lowest index
-        // on ties); `None` while the whole fleet is down.
-        let pick = |k: usize, nodes: &Vec<CNode>, model_nodes: &[Vec<usize>]| -> Option<usize> {
+        // on ties); `None` while the whole fleet is down. As in lockstep,
+        // an open breaker only diverts — it never blackholes the model.
+        let pick = |k: usize,
+                    t: u64,
+                    nodes: &Vec<CNode>,
+                    model_nodes: &[Vec<usize>]|
+         -> Option<usize> {
             let mut best: Option<usize> = None;
+            let mut best_any: Option<usize> = None;
             let load = |n: &CNode| n.queue.len() + n.active.len();
             for &j in &model_nodes[k] {
                 if !nodes[j].rep.up {
                     continue;
                 }
-                if best.map_or(true, |b| load(&nodes[j]) < load(&nodes[b])) {
+                if best_any.map_or(true, |b| load(&nodes[j]) < load(&nodes[b])) {
+                    best_any = Some(j);
+                }
+                if nodes[j].rep.breaker_ok(t)
+                    && best.map_or(true, |b| load(&nodes[j]) < load(&nodes[b]))
+                {
                     best = Some(j);
                 }
             }
-            best
+            best.or(best_any)
         };
 
-        // Hand one query (arrival, requeue, or parked flush) to model `k`.
+        // Put one query on node `j`: idle node — the query opens an
+        // iteration immediately; busy node — it joins at the next
+        // boundary.
+        let place = |j: usize,
+                     f: InFlight,
+                     t: u64,
+                     nodes: &mut Vec<CNode>,
+                     heap: &mut BinaryHeap<Ev>,
+                     seq: &mut u64| {
+            nodes[j].queue.push_back(f);
+            start_iteration(j, t, nodes, heap, seq);
+        };
+
+        // Hand one query (arrival, requeue, retry, or parked flush) to
+        // model `k`.
         let enqueue = |k: usize,
                        f: InFlight,
                        t: u64,
@@ -1339,15 +1728,22 @@ impl<'a> Simulator<'a> {
                        model_nodes: &[Vec<usize>],
                        parked: &mut Vec<VecDeque<InFlight>>,
                        heap: &mut BinaryHeap<Ev>,
-                       seq: &mut u64| {
-            let Some(j) = pick(k, nodes, model_nodes) else {
-                parked[k].push_back(f);
-                return;
-            };
-            nodes[j].queue.push_back(f);
-            // Idle node: the query opens an iteration immediately; busy
-            // node: it joins at the next boundary.
-            start_iteration(j, t, nodes, heap, seq);
+                       seq: &mut u64,
+                       surv: &mut Option<Survival>| {
+            match pick(k, t, nodes, model_nodes) {
+                Some(j) => {
+                    if let Some(s) = surv.as_mut() {
+                        s.placed(f.query as usize, j);
+                    }
+                    place(j, f, t, nodes, heap, seq);
+                }
+                None => {
+                    if let Some(s) = surv.as_mut() {
+                        s.parked(f.query as usize);
+                    }
+                    parked[k].push_back(f);
+                }
+            }
         };
 
         let mut next_arrival = 0usize;
@@ -1412,11 +1808,36 @@ impl<'a> Simulator<'a> {
                                 .collect();
                             orphans.extend(nodes[j].queue.drain(..));
                             nodes[j].stats.requeued += orphans.len() as u64;
-                            for f in orphans {
-                                enqueue(
-                                    k, f, t, &mut nodes, &model_nodes, &mut parked, &mut heap,
-                                    &mut seq,
-                                );
+                            if let Some(rc) = self.resilience.as_ref() {
+                                if nodes[j].rep.breaker_note_kill(t, rc) {
+                                    nodes[j].stats.breaker_trips += 1;
+                                }
+                            }
+                            if surv.is_some() {
+                                // Resilience: backoff-then-retry, or die
+                                // once the budget is spent (see lockstep).
+                                let s = surv.as_mut().expect("checked above");
+                                for f in orphans {
+                                    match s.orphaned(f.query as usize) {
+                                        OrphanFate::Retry { delay_ns } => {
+                                            nodes[j].stats.retries += 1;
+                                            heap.push(Ev {
+                                                t: t.saturating_add(delay_ns),
+                                                seq,
+                                                kind: EvKind::Retry { query: f.query },
+                                            });
+                                            seq += 1;
+                                        }
+                                        OrphanFate::Dropped => {}
+                                    }
+                                }
+                            } else {
+                                for f in orphans {
+                                    enqueue(
+                                        k, f, t, &mut nodes, &model_nodes, &mut parked,
+                                        &mut heap, &mut seq, &mut surv,
+                                    );
+                                }
                             }
                         }
                         // Drain needs no flush: admission is greedy, so
@@ -1471,7 +1892,7 @@ impl<'a> Simulator<'a> {
                         for f in flushed {
                             enqueue(
                                 k, f, t, &mut nodes, &model_nodes, &mut parked, &mut heap,
-                                &mut seq,
+                                &mut seq, &mut surv,
                             );
                         }
                     }
@@ -1493,6 +1914,20 @@ impl<'a> Simulator<'a> {
                 t_last = t_last.max(t);
                 let k = policy.route_at(t, &queries[qi])?;
                 debug_assert!(k < self.sets.len());
+                if let Some(s) = surv.as_mut() {
+                    s.copies[qi] = 1;
+                    if let Some(h) = s.cfg.hedge_after_s {
+                        heap.push(Ev {
+                            t: t.saturating_add(to_ns(h)),
+                            seq,
+                            kind: EvKind::Hedge {
+                                query: qi as u64,
+                                model: k as u32,
+                            },
+                        });
+                        seq += 1;
+                    }
+                }
                 enqueue(
                     k,
                     InFlight {
@@ -1505,6 +1940,7 @@ impl<'a> Simulator<'a> {
                     &mut parked,
                     &mut heap,
                     &mut seq,
+                    &mut surv,
                 );
                 continue;
             }
@@ -1513,6 +1949,69 @@ impl<'a> Simulator<'a> {
             policy.tick(t)?;
             let (j, gen) = match kind {
                 EvKind::Complete { node, gen } => (node as usize, gen),
+                EvKind::Retry { query } => {
+                    let s = surv.as_mut().expect("Retry event without resilience");
+                    let qi = query as usize;
+                    if s.recorded[qi] {
+                        // A hedge twin answered during the backoff.
+                        s.copies[qi] = s.copies[qi].saturating_sub(1);
+                        continue;
+                    }
+                    let k = policy.route_at(t, &queries[qi])?;
+                    debug_assert!(k < self.sets.len());
+                    enqueue(
+                        k,
+                        InFlight {
+                            query,
+                            arrive_ns: to_ns(arrivals_s[qi]),
+                        },
+                        t,
+                        &mut nodes,
+                        &model_nodes,
+                        &mut parked,
+                        &mut heap,
+                        &mut seq,
+                        &mut surv,
+                    );
+                    continue;
+                }
+                EvKind::Hedge { query, model } => {
+                    let s = surv.as_mut().expect("Hedge event without resilience");
+                    let qi = query as usize;
+                    if s.recorded[qi] || s.failed[qi] {
+                        continue;
+                    }
+                    // Least-loaded up, breaker-closed replica other than
+                    // the primary copy's holder (see lockstep).
+                    let k = model as usize;
+                    let excl = s.holder[qi];
+                    let load = |n: &CNode| n.queue.len() + n.active.len();
+                    let mut best: Option<usize> = None;
+                    for &j in &model_nodes[k] {
+                        if j as u32 == excl || !nodes[j].rep.up || !nodes[j].rep.breaker_ok(t) {
+                            continue;
+                        }
+                        if best.map_or(true, |b| load(&nodes[j]) < load(&nodes[b])) {
+                            best = Some(j);
+                        }
+                    }
+                    if let Some(j) = best {
+                        s.copies[qi] += 1;
+                        nodes[j].stats.hedges += 1;
+                        place(
+                            j,
+                            InFlight {
+                                query,
+                                arrive_ns: to_ns(arrivals_s[qi]),
+                            },
+                            t,
+                            &mut nodes,
+                            &mut heap,
+                            &mut seq,
+                        );
+                    }
+                    continue;
+                }
                 EvKind::Timeout { .. } => {
                     unreachable!("continuous engine schedules no timeouts")
                 }
@@ -1523,6 +2022,7 @@ impl<'a> Simulator<'a> {
             let k = nodes[j].rep.model;
             let node = &mut nodes[j];
             let iter = node.iter.take().expect("Complete on an idle node");
+            node.rep.breaker_note_success();
             node.stats.batches += 1; // iterations, under this engine
             node.stats.busy_s += (t - node.iter_start) as f64 / 1e9;
             match iter {
@@ -1544,6 +2044,13 @@ impl<'a> Simulator<'a> {
                 if node.active[i].prefilled && node.active[i].steps_left == 0 {
                     let a = node.active.remove(i);
                     let qi = a.query as usize;
+                    // Hedge losers retire unrecorded and unpaid (see
+                    // the lockstep completion path).
+                    if let Some(s) = surv.as_mut() {
+                        if !s.completed(qi) {
+                            continue;
+                        }
+                    }
                     let e = energy_of(k, qi);
                     let pj = phase_of(k, qi).prefill_j;
                     // Zero-generation sequences never decode: their first
@@ -1581,14 +2088,17 @@ impl<'a> Simulator<'a> {
         for node in &nodes {
             debug_assert!(node.queue.is_empty() && node.active.is_empty() && node.iter.is_none());
         }
-        Ok(nodes
-            .into_iter()
-            .map(|n| {
-                let mut stats = n.stats;
-                n.rep.finalize(t_last, &mut stats);
-                stats
-            })
-            .collect())
+        Ok((
+            nodes
+                .into_iter()
+                .map(|n| {
+                    let mut stats = n.stats;
+                    n.rep.finalize(t_last, &mut stats);
+                    stats
+                })
+                .collect(),
+            surv.map_or(0, |s| s.n_failed),
+        ))
     }
 }
 

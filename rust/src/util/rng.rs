@@ -138,6 +138,18 @@ impl Rng {
         -(1.0 - self.f64()).ln() / lambda
     }
 
+    /// Weibull deviate with the given `shape` (k) and `scale` (λ) via
+    /// inverse-CDF: `λ·(−ln U)^{1/k}`. Shape 1 degenerates to
+    /// `exponential(1/scale)` (constant hazard); shape > 1 models
+    /// wear-out (hazard rising with uptime), shape < 1 infant
+    /// mortality. Mean `λ·Γ(1 + 1/k)`, variance
+    /// `λ²·(Γ(1 + 2/k) − Γ(1 + 1/k)²)`.
+    pub fn weibull(&mut self, shape: f64, scale: f64) -> f64 {
+        debug_assert!(shape > 0.0 && scale > 0.0);
+        let u = 1.0 - self.f64(); // (0, 1]: keeps ln finite
+        scale * (-u.ln()).powf(1.0 / shape)
+    }
+
     /// Gamma deviate with the given `shape` and `scale` (mean
     /// `shape·scale`, variance `shape·scale²`) via Marsaglia–Tsang
     /// squeeze–rejection, with the `U^{1/shape}` boost for `shape < 1`.
@@ -384,5 +396,46 @@ mod tests {
         let n = 100_000;
         let mean: f64 = (0..n).map(|_| r.exponential(2.0)).sum::<f64>() / n as f64;
         assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn exponential_variance() {
+        // Var = 1/λ²: rate 2 → variance 0.25.
+        let mut r = Rng::new(43);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.exponential(2.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+        assert!((var - 0.25).abs() < 0.01, "var={var}");
+    }
+
+    #[test]
+    fn weibull_shape_one_is_exponential() {
+        // Weibull(1, λ) = Exp(rate 1/λ): mean λ, variance λ².
+        let mut r = Rng::new(47);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.weibull(1.0, 2.0)).collect();
+        assert!(xs.iter().all(|&x| x >= 0.0));
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.03, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.15, "var={var}");
+    }
+
+    #[test]
+    fn weibull_shape_two_is_rayleigh() {
+        // Weibull(2, λ) = Rayleigh(λ/√2): mean λ·√π/2, variance
+        // λ²·(1 − π/4) — Γ closed forms at half-integer arguments.
+        let mut r = Rng::new(53);
+        let n = 200_000;
+        let scale = 3.0;
+        let xs: Vec<f64> = (0..n).map(|_| r.weibull(2.0, scale)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let want_mean = scale * std::f64::consts::PI.sqrt() / 2.0;
+        let want_var = scale * scale * (1.0 - std::f64::consts::PI / 4.0);
+        assert!((mean - want_mean).abs() < 0.02, "mean={mean} want={want_mean}");
+        assert!((var - want_var).abs() < 0.05, "var={var} want={want_var}");
     }
 }

@@ -14,11 +14,11 @@
 
 use ecoserve::models::Normalizer;
 use ecoserve::sim::{
-    EngineKind, FailureEvent, FailureKind, FailureScript, PolicyKind, SimConfig, SimMetrics,
-    SimPolicy, Simulator,
+    EngineKind, FailureEvent, FailureKind, FailureScript, Hazard, PolicyKind, ResilienceConfig,
+    SimConfig, SimMetrics, SimPolicy, Simulator,
 };
 use ecoserve::testkit::{forall, synthetic_pair, Config};
-use ecoserve::util::Rng;
+use ecoserve::util::{Json, Rng};
 use ecoserve::workload::Query;
 
 /// Arrival horizon for the generated workloads, seconds.
@@ -112,6 +112,73 @@ fn chaos_run(
         .unwrap()
 }
 
+/// Like [`chaos_run`], but with request-level survival armed: kills send
+/// orphans into backoff-then-retry instead of instant requeueing.
+fn resilient_run(
+    sets: &[ecoserve::models::ModelSet],
+    queries: &[Query],
+    arrivals: &[f64],
+    script: &FailureScript,
+    engine: EngineKind,
+    seed: u64,
+    rc: ResilienceConfig,
+) -> SimMetrics {
+    let cfg = SimConfig {
+        max_batch: 3,
+        max_wait_s: 0.05,
+        slo_s: 30.0,
+        engine,
+        ..SimConfig::default()
+    };
+    let norm = Normalizer::from_workload(sets, queries);
+    let mut policy =
+        SimPolicy::new(PolicyKind::RoundRobin, sets, norm, 0.5, None, seed, None).unwrap();
+    Simulator::new(sets, cfg)
+        .labeled("chaos", seed, 0.5)
+        .with_replicas(&[2, 2])
+        .unwrap()
+        .with_failures(script)
+        .with_resilience(rc)
+        .unwrap()
+        .run(queries, arrivals, &mut policy)
+        .unwrap()
+}
+
+/// A small deterministic run for the drain-vs-kill race-edge tests:
+/// eight fixed-shape queries on a paced arrival comb, two replicas per
+/// model, round-robin routing.
+fn edge_run(
+    sets: &[ecoserve::models::ModelSet],
+    script: &FailureScript,
+    engine: EngineKind,
+) -> anyhow::Result<SimMetrics> {
+    let queries: Vec<Query> = (0..8)
+        .map(|i| Query {
+            id: i,
+            t_in: 32,
+            t_out: 64,
+        })
+        .collect();
+    let arrivals: Vec<f64> = (0..8).map(|i| 0.05 * i as f64).collect();
+    let cfg = SimConfig {
+        max_batch: 2,
+        max_wait_s: 0.02,
+        slo_s: 30.0,
+        per_query: true,
+        engine,
+        ..SimConfig::default()
+    };
+    let norm = Normalizer::from_workload(sets, &queries);
+    let mut policy =
+        SimPolicy::new(PolicyKind::RoundRobin, sets, norm, 0.5, None, 9, None).unwrap();
+    Simulator::new(sets, cfg)
+        .labeled("edge", 9, 0.5)
+        .with_replicas(&[2, 2])
+        .unwrap()
+        .with_failures(script)
+        .run(&queries, &arrivals, &mut policy)
+}
+
 #[test]
 fn chaos_conserves_every_query() {
     let sets = synthetic_pair();
@@ -167,6 +234,184 @@ fn chaos_runs_are_byte_deterministic() {
             );
         }
     });
+}
+
+#[test]
+fn drain_landing_mid_iteration_still_retires_everything() {
+    let sets = synthetic_pair();
+    // Replica 0 of model 0 is mid-service when the drain lands (first
+    // batch starts by t=0.02 via the wait timeout and runs well past
+    // t=0.06): queued work must finish on the drained engine, nothing
+    // requeues, and later arrivals fall to the sibling replica.
+    let script = FailureScript::new(vec![FailureEvent {
+        t_s: 0.06,
+        model: 0,
+        replica: 0,
+        kind: FailureKind::Drain,
+    }])
+    .unwrap();
+    for engine in [EngineKind::Lockstep, EngineKind::Continuous] {
+        let m = edge_run(&sets, &script, engine).unwrap();
+        assert_eq!(m.n_queries, 8, "engine {}", engine.label());
+        assert_eq!(m.n_requeued, 0, "drain must never abort work");
+        let mut ids: Vec<u64> = m
+            .outcomes
+            .as_ref()
+            .expect("per-query outcomes retained")
+            .iter()
+            .map(|o| o.id)
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..8).collect::<Vec<u64>>());
+    }
+}
+
+#[test]
+fn kill_of_an_already_drained_replica_is_rejected() {
+    let sets = synthetic_pair();
+    // A drain marks the replica down immediately (it only finishes what
+    // it already holds), so a later kill of the same replica is a script
+    // contradiction — both engines refuse it by name instead of
+    // double-counting the downtime interval.
+    let script = FailureScript::new(vec![
+        FailureEvent {
+            t_s: 0.06,
+            model: 0,
+            replica: 1,
+            kind: FailureKind::Drain,
+        },
+        FailureEvent {
+            t_s: 0.5,
+            model: 0,
+            replica: 1,
+            kind: FailureKind::Kill,
+        },
+    ])
+    .unwrap();
+    for engine in [EngineKind::Lockstep, EngineKind::Continuous] {
+        let err = edge_run(&sets, &script, engine).unwrap_err().to_string();
+        assert!(err.contains("already down"), "engine {}: {err}", engine.label());
+        assert!(err.contains("kill"), "{err}");
+    }
+}
+
+#[test]
+fn join_warmup_outliving_the_run_still_settles_downtime() {
+    let sets = synthetic_pair();
+    // The rejoining replica activates 600 s after a 2 s workload: the
+    // warm-up outlives every completion, yet the downtime interval still
+    // closes exactly at the activation instant — never left dangling at
+    // whatever the last completion happened to be.
+    let script = FailureScript::new(vec![
+        FailureEvent {
+            t_s: 0.1,
+            model: 1,
+            replica: 1,
+            kind: FailureKind::Kill,
+        },
+        FailureEvent {
+            t_s: 0.2,
+            model: 1,
+            replica: 1,
+            kind: FailureKind::Join { warmup_s: 600.0 },
+        },
+    ])
+    .unwrap();
+    let mut downtimes = Vec::new();
+    for engine in [EngineKind::Lockstep, EngineKind::Continuous] {
+        let m = edge_run(&sets, &script, engine).unwrap();
+        assert_eq!(m.n_queries, 8, "engine {}", engine.label());
+        assert!(m.makespan_s < 600.0, "makespan {}", m.makespan_s);
+        let nd = m
+            .nodes
+            .iter()
+            .find(|nd| nd.model_id == sets[1].model_id && nd.replica == 1)
+            .expect("rejoined replica keeps its node row");
+        // Down from the kill at 0.1 s to activation at 0.2 + 600 s.
+        assert!(
+            (nd.downtime_s - 600.1).abs() < 1e-6,
+            "engine {}: downtime {}",
+            engine.label(),
+            nd.downtime_s
+        );
+        downtimes.push(nd.downtime_s);
+    }
+    // Downtime is a pure function of the script — engine-independent.
+    assert_eq!(downtimes[0], downtimes[1]);
+}
+
+#[test]
+fn resilient_chaos_conserves_and_partitions_v6_counters() {
+    let sets = synthetic_pair();
+    forall(Config::default().cases(12), |rng| {
+        let n = 16 + rng.index(48);
+        let (queries, arrivals) = chaos_workload(&mut rng.fork(1), n);
+        let script = chaos_script(&mut rng.fork(2), sets.len());
+        let seed = rng.next_u64();
+        let rc = ResilienceConfig {
+            retry_budget: 2,
+            breaker_threshold: 1,
+            hedge_after_s: Some(0.25),
+            ..ResilienceConfig::default()
+        };
+        for engine in [EngineKind::Lockstep, EngineKind::Continuous] {
+            let m = resilient_run(&sets, &queries, &arrivals, &script, engine, seed, rc);
+            // Conservation under survival semantics: every admitted
+            // query either completes exactly once or exhausts its retry
+            // budget — never both, never neither.
+            assert_eq!(
+                m.n_queries + m.n_failed,
+                n as u64,
+                "engine {}",
+                engine.label()
+            );
+            // The v6 artifact's run totals partition exactly over the
+            // per-replica node rows (integer counters, so byte-exact
+            // through the JSON round-trip).
+            let v = Json::parse(&m.to_json().to_string_pretty()).unwrap();
+            let nodes = v.get("nodes").as_array().unwrap();
+            let sum = |key: &str| -> f64 {
+                nodes.iter().map(|nd| nd.get(key).as_f64().unwrap()).sum()
+            };
+            assert_eq!(sum("retries"), v.get("n_retries").as_f64().unwrap());
+            assert_eq!(sum("hedges"), v.get("n_hedges").as_f64().unwrap());
+            assert_eq!(
+                sum("breaker_trips"),
+                v.get("n_breaker_trips").as_f64().unwrap()
+            );
+            assert_eq!(sum("queries") as u64, m.n_queries);
+            // Availability folds failures into the denominator, so it
+            // can never exceed raw SLO attainment.
+            assert!(m.availability <= m.slo_attainment + 1e-12);
+        }
+    });
+}
+
+#[test]
+fn hazard_scripts_replay_byte_identically_under_both_engines() {
+    let sets = synthetic_pair();
+    let h = Hazard::parse("mtbf:0.5:0.1").unwrap();
+    let (queries, arrivals) = chaos_workload(&mut Rng::new(11), 40);
+    for hazard_seed in [1u64, 2, 3] {
+        let script = h.generate(&[2, 2], HORIZON_S + 1.0, hazard_seed).unwrap();
+        // Generation is a pure function of (counts, horizon, seed)…
+        let again = h.generate(&[2, 2], HORIZON_S + 1.0, hazard_seed).unwrap();
+        assert_eq!(script, again);
+        // …and replaying the drawn script is byte-stable per engine.
+        for engine in [EngineKind::Lockstep, EngineKind::Continuous] {
+            let rc = ResilienceConfig::default();
+            let a = resilient_run(&sets, &queries, &arrivals, &script, engine, 7, rc);
+            let b = resilient_run(&sets, &queries, &arrivals, &script, engine, 7, rc);
+            assert_eq!(
+                a.to_json().to_string_pretty(),
+                b.to_json().to_string_pretty(),
+                "engine {} hazard replay diverged",
+                engine.label()
+            );
+            assert_eq!(a.scenario, "mtbf:0.5:0.1");
+            assert_eq!(a.n_queries + a.n_failed, 40);
+        }
+    }
 }
 
 #[test]

@@ -114,10 +114,15 @@ fn run_compare(seed: u64) -> (Vec<SimMetrics>, Vec<Query>, Vec<ModelSet>) {
         },
         arrival_label: "poisson:40".to_string(),
         // PolicyKind::all() includes replan, which needs a control config
-        // (static ζ here: no carbon signal attached).
+        // (static ζ here: no carbon signal attached), and resilient, which
+        // needs its own plan (the static one doubles as a degenerate N+0).
         control: Some(Default::default()),
         replicas: None,
         failures: None,
+        hazard: None,
+        hazard_seed: 0,
+        resilient_plan: Some(&plan),
+        resilience: None,
     };
     let rows = compare(&spec, &queries, &arrivals, &PolicyKind::all()).unwrap();
     (rows, queries, sets)
@@ -170,6 +175,10 @@ fn parallel_seeds_compare_is_byte_identical() {
                 control: Some(Default::default()),
                 replicas: None,
                 failures: None,
+                hazard: None,
+                hazard_seed: 0,
+                resilient_plan: Some(&plan),
+                resilience: None,
             };
             let grid = compare_replicated(
                 &spec,
@@ -352,13 +361,13 @@ fn sorted_max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(0.0f64, f64::max)
 }
 
-/// Golden: the committed version-5 artifact round-trips byte-exactly
+/// Golden: the committed version-6 artifact round-trips byte-exactly
 /// through `SimMetrics::from_json` → `to_json`, and the version-1
-/// through version-4 layouts are rejected with migration messages.
+/// through version-5 layouts are rejected with migration messages.
 #[test]
 fn metrics_artifact_golden_roundtrip_and_version_gate() {
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("tests/fixtures/sim_metrics_v5.json");
+        .join("tests/fixtures/sim_metrics_v6.json");
     let text = std::fs::read_to_string(&path).unwrap();
     let parsed = Json::parse(&text).unwrap();
     let m = SimMetrics::from_json(&parsed).unwrap();
@@ -385,6 +394,18 @@ fn metrics_artifact_golden_roundtrip_and_version_gate() {
     assert_eq!(m.nodes[0].downtime_s, 1.5);
     assert_eq!(m.nodes[0].requeued, 2);
     assert_eq!(m.nodes[1].requeued, 0);
+    // The resilience fields: per-replica survival counters partition the
+    // run totals, and availability folds the failed query in.
+    assert_eq!(m.n_failed, 1);
+    assert_eq!((m.n_retries, m.n_hedges, m.n_breaker_trips), (3, 1, 1));
+    assert_eq!(m.nodes[0].retries + m.nodes[1].retries, m.n_retries);
+    assert_eq!(m.nodes[0].hedges + m.nodes[1].hedges, m.n_hedges);
+    assert_eq!(
+        m.nodes[0].breaker_trips + m.nodes[1].breaker_trips,
+        m.n_breaker_trips
+    );
+    assert_eq!(m.availability, 0.875);
+    assert_eq!(m.goodput_qps, 1.75);
     // A lean (no control plane) artifact parses with the control blocks
     // absent, and reserializes without inventing them.
     assert_eq!(m.replan_stats, None);
@@ -398,6 +419,7 @@ fn metrics_artifact_golden_roundtrip_and_version_gate() {
         ("tests/fixtures/sim_metrics_v2.json", "version 2"),
         ("tests/fixtures/sim_metrics_v3.json", "version 3"),
         ("tests/fixtures/sim_metrics_v4.json", "version 4"),
+        ("tests/fixtures/sim_metrics_v5.json", "version 5"),
     ] {
         let old_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(fixture);
         let old = Json::parse(&std::fs::read_to_string(&old_path).unwrap()).unwrap();
@@ -587,6 +609,10 @@ fn continuous_engine_is_byte_deterministic() {
                 control: Some(Default::default()),
                 replicas: None,
                 failures: None,
+                hazard: None,
+                hazard_seed: 0,
+                resilient_plan: Some(&plan),
+                resilience: None,
             };
             let rows = compare(&spec, &queries, &arrivals, &PolicyKind::all()).unwrap();
             for m in &rows {
@@ -653,6 +679,10 @@ fn replan_with_carbon_is_byte_identical_across_runs() {
             control: Some(control_cfg()),
             replicas: None,
             failures: None,
+            hazard: None,
+            hazard_seed: 0,
+            resilient_plan: None,
+            resilience: None,
         };
         let kinds = [PolicyKind::Plan, PolicyKind::Replan, PolicyKind::Greedy];
         let grid = compare_replicated(
@@ -710,6 +740,10 @@ fn carbon_governed_replan_never_spends_more_energy_than_the_static_plan() {
         control: Some(control_cfg()),
         replicas: None,
         failures: None,
+        hazard: None,
+        hazard_seed: 0,
+        resilient_plan: None,
+        resilience: None,
     };
     let arrivals = ArrivalProcess::GammaBurst { rate: 60.0, cv2: 4.0 }
         .times(queries.len(), &mut Rng::new(7))
